@@ -1,0 +1,61 @@
+//! Memory-expansion case study (paper SV-B2, Fig. 9 + Ex.1/Ex.2): what
+//! capacity and bandwidth must a CXL-style expanded memory deliver to beat
+//! the best local-memory-only configuration?
+//!
+//! ```sh
+//! cargo run --release --example memory_expansion
+//! ```
+
+use comet::config::presets;
+use comet::coordinator::{sweep, Coordinator};
+use comet::parallel::{footprint_per_node, Strategy, ZeroStage};
+use comet::util::units::{fmt_bytes, gb};
+use comet::workload::transformer::Transformer;
+
+fn main() -> comet::Result<()> {
+    let coord = Coordinator::auto();
+    let f = sweep::fig9(&coord)?;
+    println!("{}", f.to_table());
+
+    // --- Ex.1: what does MP8_DP128 need to beat the baseline? -----------
+    let s = Strategy::new(8, 128);
+    let w = Transformer::t1().build(&s)?;
+    let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
+    let local = presets::dgx_a100_1024().node.local.capacity;
+    println!("Ex.1: MP8_DP128 needs {} per node ({:.2}x the 80 GB local HBM).",
+        fmt_bytes(fp), fp / local);
+
+    // Find the minimum EM bandwidth column where MP8_DP128 speedup > 1.
+    let mut min_bw = None;
+    for col in &f.columns {
+        if let Some(v) = f.cell("MP8_DP128", col) {
+            if v > 1.0 {
+                min_bw = Some(col.clone());
+                break;
+            }
+        }
+    }
+    match min_bw {
+        Some(bw) => println!(
+            "      It outperforms MP64_DP16 once expanded memory delivers >= {bw}."
+        ),
+        None => println!("      No sweep point beats the baseline."),
+    }
+
+    // --- Ex.2: CXL sizing ------------------------------------------------
+    let need = fp - local;
+    println!(
+        "Ex.2: a CXL device must provide ~{} of capacity at that bandwidth",
+        fmt_bytes(need)
+    );
+    println!(
+        "      ({} aggregate hybrid capacity, {:.2}x the baseline).",
+        fmt_bytes(fp),
+        fp / local
+    );
+    println!(
+        "      Paper reference points: >= ~500 GB/s to ~{} (32 lanes of CXL 3.0).",
+        fmt_bytes(gb(340.0) - gb(80.0))
+    );
+    Ok(())
+}

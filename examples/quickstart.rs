@@ -1,0 +1,88 @@
+//! Quickstart: evaluate one training configuration and find the best
+//! parallelization strategy for the baseline cluster.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use comet::config::presets;
+use comet::coordinator::Coordinator;
+use comet::model::inputs::{derive_inputs, EvalOptions};
+use comet::parallel::{footprint_per_node, Strategy, ZeroStage};
+use comet::util::units::{fmt_bytes, fmt_secs};
+use comet::workload::transformer::Transformer;
+
+fn main() -> comet::Result<()> {
+    // The Table I baseline: 1024 A100 GPUs, 128 8-GPU pods.
+    let cluster = presets::dgx_a100_1024();
+    // Transformer-1T, the paper's flagship workload.
+    let model = Transformer::t1();
+
+    // `auto` uses the AOT-compiled artifact (L1 Pallas kernels + L2 JAX
+    // graph via PJRT) when `make artifacts` has run, else the native f64
+    // closed form.
+    let coord = Coordinator::auto();
+    println!("backend: {:?}\n", coord.backend());
+
+    // --- single configuration ------------------------------------------
+    let strategy = Strategy::new(8, 128);
+    let workload = model.build(&strategy)?;
+    let b = coord.evaluate(&workload, &cluster)?;
+    println!("{} on {}:", workload.name, cluster.name);
+    println!(
+        "  FP: compute {} + exposed comm {}",
+        fmt_secs(b.fp_compute),
+        fmt_secs(b.fp_exposed_comm)
+    );
+    println!(
+        "  IG: compute {} + exposed comm {}",
+        fmt_secs(b.ig_compute),
+        fmt_secs(b.ig_exposed_comm)
+    );
+    println!(
+        "  WG: compute {} + exposed comm {}",
+        fmt_secs(b.wg_compute),
+        fmt_secs(b.wg_exposed_comm)
+    );
+    println!("  iteration: {}\n", fmt_secs(b.total()));
+
+    // --- strategy sweep (the core COMET loop) ---------------------------
+    let opts = EvalOptions {
+        ignore_capacity: true, // paper Fig. 8a assumption
+        ..Default::default()
+    };
+    let mut best: Option<(Strategy, f64)> = None;
+    println!(
+        "{:>14} {:>12} {:>14} {:>14}",
+        "strategy", "total", "footprint", "feasible@80GB"
+    );
+    for s in Strategy::sweep_bounded(cluster.n_nodes, 1, 128) {
+        let w = model.build(&s)?;
+        let inputs = derive_inputs(&w, &cluster, &opts)?;
+        let t =
+            coord.evaluate_inputs(std::slice::from_ref(&inputs))?[0].total();
+        let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
+        println!(
+            "{:>14} {:>12} {:>14} {:>14}",
+            s.label(),
+            fmt_secs(t),
+            fmt_bytes(fp),
+            if fp <= cluster.node.local.capacity {
+                "yes"
+            } else {
+                "needs EM"
+            },
+        );
+        if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+            best = Some((s, t));
+        }
+    }
+    let (s, t) = best.unwrap();
+    println!(
+        "\nbest strategy: {} at {} per iteration",
+        s.label(),
+        fmt_secs(t)
+    );
+    println!("(paper Fig. 8a: MP8_DP128 is optimal, needing ~3.3x the A100's 80 GB)");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Transformer-1T parallelization-strategy study (paper SV-B1, Fig. 8):
+//! full breakdown across the (MP, DP) sweep on all three backends, showing
+//! that the closed form, the discrete-event simulator, and the AOT
+//! artifact agree.
+//!
+//! ```sh
+//! cargo run --release --example transformer_sweep
+//! ```
+
+use comet::config::presets;
+use comet::coordinator::{sweep, Coordinator};
+use comet::model::inputs::{derive_inputs, EvalOptions};
+use comet::parallel::Strategy;
+use comet::util::stats::rel_diff;
+use comet::workload::transformer::Transformer;
+
+fn main() -> comet::Result<()> {
+    // Fig. 8a through the coordinator (native backend).
+    let native = Coordinator::native();
+    let f = sweep::fig8a(&native)?;
+    println!("{}", f.to_table());
+    println!(
+        "optimal configuration: {}\n",
+        f.argmin("Total_s").unwrap_or("?")
+    );
+
+    // Backend agreement on the full sweep.
+    let des = Coordinator::des();
+    let artifact = Coordinator::artifact().ok();
+    let cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions {
+        ignore_capacity: true,
+        ..Default::default()
+    };
+    println!(
+        "{:>14} {:>12} {:>12} {:>12} {:>10}",
+        "strategy", "native_s", "des_s", "artifact_s", "max_delta"
+    );
+    for s in sweep::fig8_strategies() {
+        let w = Transformer::t1().build(&s)?;
+        let inputs = derive_inputs(&w, &cluster, &opts)?;
+        let n = native.evaluate_inputs(std::slice::from_ref(&inputs))?[0]
+            .total();
+        let d = des.evaluate_inputs(std::slice::from_ref(&inputs))?[0].total();
+        let a = match &artifact {
+            Some(c) => {
+                c.evaluate_inputs(std::slice::from_ref(&inputs))?[0].total()
+            }
+            None => f64::NAN,
+        };
+        let delta = rel_diff(n, d).max(if a.is_nan() { 0.0 } else { rel_diff(n, a) });
+        println!(
+            "{:>14} {:>12.3} {:>12.3} {:>12.3} {:>9.3}%",
+            s.label(),
+            n,
+            d,
+            a,
+            delta * 100.0
+        );
+    }
+    let _ = Strategy::new(8, 128); // keep the import obviously used
+    Ok(())
+}

@@ -1,0 +1,65 @@
+"""AOT export: lower the L2 COMET cost-model graph to HLO text artifacts.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per batch size in layout.BATCH_SIZES:
+    artifacts/comet_eval_b{B}.hlo.txt
+plus artifacts/manifest.json describing the tensor ABI (field order, shapes)
+that rust/src/model/batch.rs cross-checks at load time.
+
+HLO **text** is the interchange format, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. Lowered with return_tuple=True
+so the Rust side unwraps with `to_tuple1()`.
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import layout as ly
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = ly.manifest()
+    manifest["artifacts"] = {}
+    for b in ly.BATCH_SIZES:
+        lowered = model.lower_batch_eval(b)
+        text = to_hlo_text(lowered)
+        name = f"comet_eval_b{b}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][str(b)] = name
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    export(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

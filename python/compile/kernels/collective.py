@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: hierarchical collective cost on a two-level topology.
+
+Computes, per (config, layer, phase), the cost of the layer's communication
+collective (all-reduce / all-to-all / all-gather / reduce-scatter) on the
+two-level intra-pod / inter-pod network of the modeled cluster
+(paper SIII-C3, "Hierarchical Collective" a la BlueConnect / Themis).
+
+Same blocking scheme as roofline.py: grid over config blocks, one
+[BLK_B, L, MF] tile in VMEM per step, all math element-wise (VPU).
+interpret=True - see roofline.py.
+
+The formulation composes the cost from per-level ring *step* terms
+(steps x (chunk/bw + latency)) rather than ref.py's closed (n-1)/n forms;
+both are algebraically identical, keeping the pytest comparison meaningful.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import layout as ly
+
+BLK_B = 8
+
+
+def _ring_pass(bytes_, n, bw, lat):
+    """One ring pass (reduce-scatter or all-gather): n-1 steps of size/n."""
+    steps = jnp.maximum(n - 1.0, 0.0)
+    chunk = bytes_ / jnp.maximum(n, 1.0)
+    return steps * (chunk / bw + lat)
+
+
+def _cost(bytes_, ctype, n_intra, n_inter, bw_intra, bw_inter, lat, impl):
+    n = jnp.maximum(n_intra * n_inter, 1.0)
+
+    # Logical ring (impl 0): one flat ring, serialized by the slowest link
+    # class it crosses.
+    bw_flat = jnp.where(n_inter > 1.0, bw_inter, bw_intra)
+    ar_flat = 2.0 * _ring_pass(bytes_, n, bw_flat, lat)
+    half_flat = _ring_pass(bytes_, n, bw_flat, lat)
+
+    # Hierarchical (impl 1): RS(intra) + AR(inter, bytes/n_intra) + AG(intra).
+    shard = bytes_ / jnp.maximum(n_intra, 1.0)
+    ar_hier = (
+        _ring_pass(bytes_, n_intra, bw_intra, lat)
+        + 2.0 * _ring_pass(shard, n_inter, bw_inter, lat)
+        + _ring_pass(bytes_, n_intra, bw_intra, lat)
+    )
+    half_hier = _ring_pass(bytes_, n_intra, bw_intra, lat) + _ring_pass(
+        shard, n_inter, bw_inter, lat
+    )
+
+    hier = impl > 0.5
+    ar = jnp.where(hier, ar_hier, ar_flat)
+    half = jnp.where(hier, half_hier, half_flat)
+
+    # All-to-all: intra/inter portions concurrent on their own link classes.
+    peers = jnp.maximum(n - 1.0, 1.0)
+    f_intra = jnp.maximum(n_intra - 1.0, 0.0) / peers
+    a2a = (
+        jnp.maximum(
+            bytes_ * f_intra / bw_intra,
+            bytes_ * (1.0 - f_intra) / bw_inter,
+        )
+        + (n - 1.0) * lat
+    )
+
+    is_half = (ctype == ly.CT_ALLGATHER) | (ctype == ly.CT_REDUCESCATTER)
+    cost = jnp.where(
+        ctype == ly.CT_ALLREDUCE,
+        ar,
+        jnp.where(ctype == ly.CT_ALLTOALL, a2a, jnp.where(is_half, half, 0.0)),
+    )
+    return jnp.where((ctype <= 0.0) | (bytes_ <= 0.0) | (n <= 1.0), 0.0, cost)
+
+
+def _collective_kernel(comm_ref, params_ref, out_ref):
+    """Pallas body: comm_ref [BLK_B, L, MF], params_ref [BLK_B, P],
+    out_ref [BLK_B, L, 3]."""
+    cm = comm_ref[...]
+    prm = params_ref[...]
+    bw_intra = jnp.maximum(prm[:, ly.P_BW_INTRA], 1.0)[:, None]
+    bw_inter = jnp.maximum(prm[:, ly.P_BW_INTER], 1.0)[:, None]
+    lat = prm[:, ly.P_LINK_LAT][:, None]
+    impl = prm[:, ly.P_COLL_IMPL][:, None]
+
+    repeat = cm[:, :, ly.M_REPEAT]
+    for phase, (by, ct, ni, nx) in enumerate(
+        (
+            (ly.M_BYTES_FP, ly.M_CTYPE_FP, ly.M_NINTRA_FP, ly.M_NINTER_FP),
+            (ly.M_BYTES_IG, ly.M_CTYPE_IG, ly.M_NINTRA_IG, ly.M_NINTER_IG),
+            (ly.M_BYTES_WG, ly.M_CTYPE_WG, ly.M_NINTRA_WG, ly.M_NINTER_WG),
+        )
+    ):
+        out_ref[:, :, phase] = repeat * _cost(
+            cm[:, :, by],
+            cm[:, :, ct],
+            cm[:, :, ni],
+            cm[:, :, nx],
+            bw_intra,
+            bw_inter,
+            lat,
+            impl,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def collective_costs(comm, params):
+    """Per-layer phase comm costs. comm [B, L, MF], params [B, P] -> [B, L, 3]."""
+    b, l, _ = comm.shape
+    assert b % BLK_B == 0, f"batch {b} must be a multiple of {BLK_B}"
+    return pl.pallas_call(
+        _collective_kernel,
+        grid=(b // BLK_B,),
+        in_specs=[
+            pl.BlockSpec((BLK_B, l, ly.MF), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLK_B, ly.P), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLK_B, l, 3), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, 3), jnp.float32),
+        interpret=True,
+    )(comm, params)

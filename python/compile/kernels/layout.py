@@ -1,0 +1,102 @@
+"""Shared ABI layout between the L2 JAX graph, the L1 Pallas kernels, the
+pure-jnp reference oracle, and the Rust runtime.
+
+The batched COMET cost-model evaluator operates on three dense f32 tensors:
+
+  compute : [B, L, CF]  per-(config, layer) compute-side quantities
+  comm    : [B, L, MF]  per-(config, layer) communication-side quantities
+  params  : [B, P]      per-config cluster parameters
+
+with B configs per batch and L layer slots (zero-padded past the real layer
+count).  The same field order is mirrored in ``rust/src/model/batch.rs`` and
+cross-checked at runtime through ``artifacts/manifest.json``.
+
+All quantities are SI: FLOPs, bytes, bytes/s, seconds.
+"""
+
+# Batch geometry. One artifact is exported per batch size in BATCH_SIZES;
+# L is shared. Layer slots beyond the real workload are zero-padded (zero
+# flops/bytes contribute exactly zero delay by construction).
+BATCH_SIZES = (8, 64)
+B = 64
+L = 192
+
+# --- compute tensor fields ------------------------------------------------
+# Per training phase (FP = forward pass, IG = input gradient,
+# WG = weight gradient): FLOPs and the three GEMM operand sizes in bytes
+# (U, V inputs; W output) used by the tiling traffic model (paper Eqn. 1/2,
+# SIII-C2).  Non-GEMM layers encode U = V = 0 and W = bytes-touched so the
+# traffic model degrades to streaming.
+# C_REPEAT is the layer-slot multiplicity: Transformer models encode one
+# stack's layers once with repeat = #stacks (operand sizes must stay
+# per-instance for the ceil(U/S) tiling term to be correct).  Zero-padded
+# slots have repeat = 0 and contribute nothing.
+CF = 13
+C_FLOPS_FP, C_U_FP, C_V_FP, C_W_FP = 0, 1, 2, 3
+C_FLOPS_IG, C_U_IG, C_V_IG, C_W_IG = 4, 5, 6, 7
+C_FLOPS_WG, C_U_WG, C_V_WG, C_W_WG = 8, 9, 10, 11
+C_REPEAT = 12
+
+# --- comm tensor fields -----------------------------------------------------
+# Per phase: collective payload bytes, collective type, and the two-level
+# group decomposition (participants sharing a pod x participant groups
+# across pods).  n_intra * n_inter == total participants.
+# M_REPEAT mirrors C_REPEAT (the collective kernel only sees this tensor).
+MF = 13
+M_BYTES_FP, M_CTYPE_FP, M_NINTRA_FP, M_NINTER_FP = 0, 1, 2, 3
+M_BYTES_IG, M_CTYPE_IG, M_NINTRA_IG, M_NINTER_IG = 4, 5, 6, 7
+M_BYTES_WG, M_CTYPE_WG, M_NINTRA_WG, M_NINTER_WG = 8, 9, 10, 11
+M_REPEAT = 12
+
+# Collective type codes.
+CT_NONE = 0.0
+CT_ALLREDUCE = 1.0
+CT_ALLTOALL = 2.0
+CT_ALLGATHER = 3.0
+CT_REDUCESCATTER = 4.0
+
+# --- params tensor fields ---------------------------------------------------
+P = 12
+P_PERF_PEAK = 0   # FLOP/s
+P_BW_LM = 1       # local-memory bandwidth, B/s
+P_BW_EM = 2       # expanded-memory bandwidth, B/s (0 => no expansion)
+P_CAP_LM = 3      # local-memory capacity, bytes
+P_SRAM = 4        # on-chip buffer size S, bytes (tiling model)
+P_FOOTPRINT = 5   # per-node working footprint, bytes (spill model input)
+P_BW_INTRA = 6    # intra-pod link bandwidth per node, B/s per direction
+P_BW_INTER = 7    # inter-pod link bandwidth per node, B/s per direction
+P_LINK_LAT = 8    # per-hop link latency, seconds
+P_OVERLAP_WG = 9  # 1.0 => WG comm overlaps WG compute (paper default)
+P_EM_FRAC = 10    # >=0 overrides derived EM traffic fraction; <0 => derive
+P_COLL_IMPL = 11  # 0 = logical ring (Table I baseline), 1 = hierarchical
+                  #     (BlueConnect/Themis, used by the SV-B4 network study)
+
+# --- output -----------------------------------------------------------------
+# out : [B, OUTF] per-config iteration breakdown, seconds.
+OUTF = 6
+O_FP_COMPUTE = 0
+O_FP_EXPOSED = 1
+O_IG_COMPUTE = 2
+O_IG_EXPOSED = 3
+O_WG_COMPUTE = 4
+O_WG_EXPOSED = 5
+
+
+def manifest() -> dict:
+    """Layout description embedded in artifacts/manifest.json."""
+    return {
+        "batch_sizes": list(BATCH_SIZES),
+        "b": B,
+        "l": L,
+        "cf": CF,
+        "mf": MF,
+        "p": P,
+        "outf": OUTF,
+        "ctype": {
+            "none": CT_NONE,
+            "allreduce": CT_ALLREDUCE,
+            "alltoall": CT_ALLTOALL,
+            "allgather": CT_ALLGATHER,
+            "reducescatter": CT_REDUCESCATTER,
+        },
+    }

@@ -1,0 +1,237 @@
+"""Pure-jnp reference oracle for the COMET cost-model kernels.
+
+This is the ground truth the Pallas kernels (roofline.py, collective.py) are
+validated against in python/tests, and the contract the native Rust evaluator
+(rust/src/model/eval.rs) mirrors in f64.
+
+Model summary (paper section references in parentheses):
+
+* Memory traffic of a GEMM with operands U, V bytes and output W bytes on a
+  node with on-chip buffer S bytes (SIII-C2):
+      psi1 = ceil(U/S) * V + U        # tile U, stream V
+      psi2 = ceil(V/S) * U + V        # tile V, stream U
+      traffic = max(min(psi1, psi2), U + V) + W
+  The max() clamp covers degenerate non-GEMM layers encoded with U = V = 0,
+  where each operand is touched exactly once.
+
+* Hybrid local+expanded memory bandwidth (Eqn. 3): the fraction of the
+  footprint beyond local capacity spills to expanded memory and all traffic
+  is split capacity-proportionally:
+      frac_em   = clip((footprint - cap_lm) / footprint, 0, 1)
+      bw_hybrid = 1 / ((1 - frac_em)/bw_lm + frac_em/bw_em)
+
+* Roofline compute delay (SIII-C1, Eqn. 2), in time form:
+      delay = max(flops / perf_peak, traffic / bw_hybrid)
+
+* Collective costs on a two-level (intra-pod / inter-pod) topology with ring
+  schedules at each level (SIII-C3; hierarchical collectives a la
+  BlueConnect/Themis).  See collective_cost() below for the exact forms.
+
+* Exposure (SIII-C4): FP/IG collectives are blocking (fully exposed); the WG
+  data-parallel collective overlaps with WG compute, exposing only the excess.
+"""
+
+import jax.numpy as jnp
+
+from . import layout as ly
+
+
+def gemm_traffic(u, v, w, s):
+    """Bytes moved between memory and the compute unit for one GEMM."""
+    s = jnp.maximum(s, 1.0)
+    psi1 = jnp.ceil(u / s) * v + u
+    psi2 = jnp.ceil(v / s) * u + v
+    return jnp.maximum(jnp.minimum(psi1, psi2), u + v) + w
+
+
+def em_fraction(footprint, cap_lm, em_frac_override):
+    """Fraction of memory traffic served by expanded memory."""
+    derived = jnp.clip(
+        (footprint - cap_lm) / jnp.maximum(footprint, 1.0), 0.0, 1.0
+    )
+    return jnp.where(em_frac_override >= 0.0, em_frac_override, derived)
+
+
+def hybrid_bandwidth(bw_lm, bw_em, frac_em):
+    """Eqn. 3 effective bandwidth; collapses to bw_lm when nothing spills."""
+    bw_em_safe = jnp.maximum(bw_em, 1.0)
+    inv = (1.0 - frac_em) / jnp.maximum(bw_lm, 1.0) + frac_em / bw_em_safe
+    bw = 1.0 / inv
+    # No expanded memory (bw_em == 0) but spilling demanded => starved:
+    # modelled as a 1 B/s expanded-memory floor via bw_em_safe.
+    return jnp.where(frac_em <= 0.0, bw_lm, bw)
+
+
+def roofline_delay(flops, traffic, perf_peak, bw_eff):
+    """Time-form roofline: max of compute-bound and memory-bound times."""
+    return jnp.maximum(
+        flops / jnp.maximum(perf_peak, 1.0),
+        traffic / jnp.maximum(bw_eff, 1.0),
+    )
+
+
+def _ring_ar(bytes_, n, bw, lat):
+    """Flat ring all-reduce over n peers at per-node link bandwidth bw."""
+    n = jnp.maximum(n, 1.0)
+    return 2.0 * (n - 1.0) / n * bytes_ / jnp.maximum(bw, 1.0) + 2.0 * (
+        n - 1.0
+    ) * lat
+
+
+def _ring_half(bytes_, n, bw, lat):
+    """Reduce-scatter or all-gather (one ring pass)."""
+    n = jnp.maximum(n, 1.0)
+    return (n - 1.0) / n * bytes_ / jnp.maximum(bw, 1.0) + (n - 1.0) * lat
+
+
+def collective_cost(
+    bytes_, ctype, n_intra, n_inter, bw_intra, bw_inter, lat, impl
+):
+    """Cost of one collective on the two-level topology.
+
+    Two implementations (P_COLL_IMPL):
+
+    ``impl == 0`` — logical ring (Table I baseline): one flat ring over all
+    n participants; a ring crossing pods is serialized by the slower
+    inter-pod links, so the effective bandwidth is bw_inter when
+    n_inter > 1 and bw_intra otherwise.
+
+    ``impl == 1`` — hierarchical (BlueConnect/Themis, SV-B4):
+      1. intra-pod reduce-scatter of `bytes` at bw_intra
+      2. inter-pod all-reduce of `bytes / n_intra` at bw_inter
+      3. intra-pod all-gather of `bytes` at bw_intra
+    Degenerate levels (n == 1) contribute zero, covering flat groups.
+
+    All-to-all (either impl): every participant holds `bytes` split evenly
+    across the n - 1 peers; intra- and inter-pod portions proceed
+    concurrently on their own links, so cost is the max serialization time.
+
+    All-gather / reduce-scatter: one ring pass (half of all-reduce).
+    """
+    n = jnp.maximum(n_intra * n_inter, 1.0)
+
+    # Flat logical-ring bandwidth: bottlenecked by the slowest link crossed.
+    bw_flat = jnp.where(n_inter > 1.0, bw_inter, bw_intra)
+    ar_flat = _ring_ar(bytes_, n, bw_flat, lat)
+    half_flat = _ring_half(bytes_, n, bw_flat, lat)
+
+    # Hierarchical all-reduce.
+    ar_hier = (
+        _ring_half(bytes_, n_intra, bw_intra, lat)
+        + _ring_ar(bytes_ / jnp.maximum(n_intra, 1.0), n_inter, bw_inter, lat)
+        + _ring_half(bytes_, n_intra, bw_intra, lat)
+    )
+    half_hier = _ring_half(bytes_, n_intra, bw_intra, lat) + _ring_half(
+        bytes_ / jnp.maximum(n_intra, 1.0), n_inter, bw_inter, lat
+    )
+
+    hier = impl > 0.5
+    ar = jnp.where(hier, ar_hier, ar_flat)
+    half = jnp.where(hier, half_hier, half_flat)
+
+    # All-to-all: fraction of peers inside the pod vs outside.
+    peers = jnp.maximum(n - 1.0, 1.0)
+    f_intra = jnp.maximum(n_intra - 1.0, 0.0) / peers
+    f_inter = 1.0 - f_intra
+    a2a = (
+        jnp.maximum(
+            bytes_ * f_intra / jnp.maximum(bw_intra, 1.0),
+            bytes_ * f_inter / jnp.maximum(bw_inter, 1.0),
+        )
+        + (n - 1.0) * lat
+    )
+
+    cost = jnp.where(
+        ctype == ly.CT_ALLREDUCE,
+        ar,
+        jnp.where(
+            ctype == ly.CT_ALLTOALL,
+            a2a,
+            jnp.where(
+                (ctype == ly.CT_ALLGATHER) | (ctype == ly.CT_REDUCESCATTER),
+                half,
+                0.0,
+            ),
+        ),
+    )
+    # No collective, no payload, or singleton group => free.
+    return jnp.where((ctype <= 0.0) | (bytes_ <= 0.0) | (n <= 1.0), 0.0, cost)
+
+
+def eval_phase_delays(compute, params):
+    """Per-layer roofline delays for the three phases.
+
+    compute : [B, L, CF]; params : [B, P]  ->  [B, L, 3] seconds.
+    """
+    pp = params[:, ly.P_PERF_PEAK][:, None]
+    sram = params[:, ly.P_SRAM][:, None]
+    frac = em_fraction(
+        params[:, ly.P_FOOTPRINT], params[:, ly.P_CAP_LM], params[:, ly.P_EM_FRAC]
+    )
+    bw = hybrid_bandwidth(params[:, ly.P_BW_LM], params[:, ly.P_BW_EM], frac)[
+        :, None
+    ]
+
+    repeat = compute[:, :, ly.C_REPEAT]
+    outs = []
+    for fl, u, v, w in (
+        (ly.C_FLOPS_FP, ly.C_U_FP, ly.C_V_FP, ly.C_W_FP),
+        (ly.C_FLOPS_IG, ly.C_U_IG, ly.C_V_IG, ly.C_W_IG),
+        (ly.C_FLOPS_WG, ly.C_U_WG, ly.C_V_WG, ly.C_W_WG),
+    ):
+        traffic = gemm_traffic(
+            compute[:, :, u], compute[:, :, v], compute[:, :, w], sram
+        )
+        outs.append(
+            repeat * roofline_delay(compute[:, :, fl], traffic, pp, bw)
+        )
+    return jnp.stack(outs, axis=-1)
+
+
+def eval_phase_comms(comm, params):
+    """Per-layer collective costs for the three phases.
+
+    comm : [B, L, MF]; params : [B, P]  ->  [B, L, 3] seconds.
+    """
+    bwi = params[:, ly.P_BW_INTRA][:, None]
+    bwx = params[:, ly.P_BW_INTER][:, None]
+    lat = params[:, ly.P_LINK_LAT][:, None]
+    impl = params[:, ly.P_COLL_IMPL][:, None]
+    repeat = comm[:, :, ly.M_REPEAT]
+    outs = []
+    for by, ct, ni, nx in (
+        (ly.M_BYTES_FP, ly.M_CTYPE_FP, ly.M_NINTRA_FP, ly.M_NINTER_FP),
+        (ly.M_BYTES_IG, ly.M_CTYPE_IG, ly.M_NINTRA_IG, ly.M_NINTER_IG),
+        (ly.M_BYTES_WG, ly.M_CTYPE_WG, ly.M_NINTRA_WG, ly.M_NINTER_WG),
+    ):
+        outs.append(
+            repeat
+            * collective_cost(
+                comm[:, :, by],
+                comm[:, :, ct],
+                comm[:, :, ni],
+                comm[:, :, nx],
+                bwi,
+                bwx,
+                lat,
+                impl,
+            )
+        )
+    return jnp.stack(outs, axis=-1)
+
+
+def eval_breakdown(compute, comm, params):
+    """Full reference evaluator: [B, OUTF] iteration-time breakdown."""
+    delays = eval_phase_delays(compute, params)  # [B, L, 3]
+    comms = eval_phase_comms(comm, params)  # [B, L, 3]
+
+    fp_c = jnp.sum(delays[:, :, 0], axis=1)
+    ig_c = jnp.sum(delays[:, :, 1], axis=1)
+    wg_c = jnp.sum(delays[:, :, 2], axis=1)
+    fp_m = jnp.sum(comms[:, :, 0], axis=1)
+    ig_m = jnp.sum(comms[:, :, 1], axis=1)
+    wg_m = jnp.sum(comms[:, :, 2], axis=1)
+
+    overlap = params[:, ly.P_OVERLAP_WG] > 0.5
+    wg_exposed = jnp.where(overlap, jnp.maximum(wg_m - wg_c, 0.0), wg_m)
+    return jnp.stack([fp_c, fp_m, ig_c, ig_m, wg_c, wg_exposed], axis=-1)

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: fused tiling-traffic + hybrid-bandwidth + roofline delay.
+
+Computes, for a block of cluster configurations at a time, the per-layer
+compute delay of all three training phases (FP / IG / WG) of the COMET cost
+model (paper SIII-C1/C2 + Eqn. 3).
+
+TPU-shaped design (see DESIGN.md SHardware-Adaptation):
+  * the (config, layer) grid is blocked along the config dimension; each grid
+    step streams one [BLK_B, L, CF] tile HBM->VMEM via BlockSpec;
+  * all math is element-wise over the tile (VPU work; the cost model has no
+    matmul, so the MXU is idle by construction);
+  * per-config scalars ([BLK_B, P]) ride alongside the tile, playing the role
+    scalar-prefetch operands would on real hardware;
+  * VMEM footprint per step: BLK_B*L*(CF+3)*4B + BLK_B*P*4B ~ 0.5 MiB at
+    BLK_B=8, L=192 - far below the ~16 MiB VMEM budget, leaving room for
+    double buffering.
+
+Must be lowered with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+
+The math here deliberately uses the OI/perf_max formulation of the paper
+(Eqn. 1/2) rather than ref.py's time-form max() identity, so the pytest
+kernel-vs-ref comparison exercises two independent derivations.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import layout as ly
+
+# Configs per grid step. 8 divides every exported batch size.
+BLK_B = 8
+
+
+def _phase_delay(flops, u, v, w, sram, perf_peak, bw_eff):
+    """One phase's delay via the paper's OI formulation.
+
+    perf_max = min(perf_peak, OI * bw_eff);  delay = flops / perf_max.
+    Zero-flop slots (padding, pure-comm layers) produce exactly 0.0 but may
+    still move bytes (traffic/bw term) - matching ref.py's time-form max().
+    """
+    psi1 = jnp.ceil(u / sram) * v + u
+    psi2 = jnp.ceil(v / sram) * u + v
+    traffic = jnp.maximum(jnp.minimum(psi1, psi2), u + v) + w
+
+    safe_traffic = jnp.maximum(traffic, 1.0)
+    oi = flops / safe_traffic
+    perf_max = jnp.minimum(perf_peak, oi * bw_eff)
+    compute_t = jnp.where(perf_max > 0.0, flops / jnp.maximum(perf_max, 1e-30), 0.0)
+    # Pure data movement (flops == 0) still costs traffic / bw.
+    move_t = traffic / bw_eff
+    return jnp.maximum(compute_t, move_t)
+
+
+def _roofline_kernel(compute_ref, params_ref, out_ref):
+    """Pallas body: compute_ref [BLK_B, L, CF], params_ref [BLK_B, P],
+    out_ref [BLK_B, L, 3]."""
+    comp = compute_ref[...]
+    prm = params_ref[...]
+
+    perf_peak = jnp.maximum(prm[:, ly.P_PERF_PEAK], 1.0)[:, None]
+    sram = jnp.maximum(prm[:, ly.P_SRAM], 1.0)[:, None]
+
+    # Hybrid bandwidth (Eqn. 3) from the spill fraction.
+    footprint = prm[:, ly.P_FOOTPRINT]
+    cap_lm = prm[:, ly.P_CAP_LM]
+    override = prm[:, ly.P_EM_FRAC]
+    derived = jnp.clip(
+        (footprint - cap_lm) / jnp.maximum(footprint, 1.0), 0.0, 1.0
+    )
+    frac_em = jnp.where(override >= 0.0, override, derived)
+    bw_lm = jnp.maximum(prm[:, ly.P_BW_LM], 1.0)
+    bw_em = jnp.maximum(prm[:, ly.P_BW_EM], 1.0)
+    bw_hybrid = 1.0 / ((1.0 - frac_em) / bw_lm + frac_em / bw_em)
+    bw_eff = jnp.where(frac_em <= 0.0, bw_lm, bw_hybrid)[:, None]
+
+    repeat = comp[:, :, ly.C_REPEAT]
+    for phase, (fl, u, v, w) in enumerate(
+        (
+            (ly.C_FLOPS_FP, ly.C_U_FP, ly.C_V_FP, ly.C_W_FP),
+            (ly.C_FLOPS_IG, ly.C_U_IG, ly.C_V_IG, ly.C_W_IG),
+            (ly.C_FLOPS_WG, ly.C_U_WG, ly.C_V_WG, ly.C_W_WG),
+        )
+    ):
+        out_ref[:, :, phase] = repeat * _phase_delay(
+            comp[:, :, fl],
+            comp[:, :, u],
+            comp[:, :, v],
+            comp[:, :, w],
+            sram,
+            perf_peak,
+            bw_eff,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def roofline_delays(compute, params):
+    """Per-layer phase delays. compute [B, L, CF], params [B, P] -> [B, L, 3]."""
+    b, l, _ = compute.shape
+    assert b % BLK_B == 0, f"batch {b} must be a multiple of {BLK_B}"
+    return pl.pallas_call(
+        _roofline_kernel,
+        grid=(b // BLK_B,),
+        in_specs=[
+            pl.BlockSpec((BLK_B, l, ly.CF), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLK_B, ly.P), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLK_B, l, 3), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, 3), jnp.float32),
+        interpret=True,
+    )(compute, params)

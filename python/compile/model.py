@@ -1,0 +1,63 @@
+"""L2: the COMET batched cost-model graph.
+
+`comet_batch_eval` is the compute hot-spot of COMET's design-space
+exploration: it evaluates the full analytical cost model (roofline compute
+delays + hierarchical collective costs + overlap/exposure) for a batch of B
+cluster configurations x L layer slots in one fused XLA computation.
+
+It composes the two L1 Pallas kernels:
+  * kernels.roofline.roofline_delays    - per-layer compute delays
+  * kernels.collective.collective_costs - per-layer collective costs
+and reduces them to the per-config [B, OUTF] iteration-time breakdown
+(FP/IG/WG compute + exposed communication, seconds).
+
+This module is build-time only: python/compile/aot.py lowers it once to HLO
+text under artifacts/, and the Rust coordinator executes the artifact via
+PJRT on the request path. Python never runs at exploration time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import collective as kcoll
+from .kernels import layout as ly
+from .kernels import roofline as kroof
+
+
+def comet_batch_eval(compute, comm, params):
+    """Evaluate the COMET cost model for a batch of configurations.
+
+    Args:
+      compute: f32[B, L, CF] per-(config, layer) compute quantities.
+      comm:    f32[B, L, MF] per-(config, layer) collective quantities.
+      params:  f32[B, P]     per-config cluster parameters.
+
+    Returns:
+      1-tuple of f32[B, OUTF]: per-config (fp_compute, fp_exposed,
+      ig_compute, ig_exposed, wg_compute, wg_exposed) in seconds.
+      Exposure rule (paper SIII-C4): FP/IG collectives block the critical
+      path; the WG data-parallel collective overlaps with WG compute and
+      only the excess is exposed (toggled per-config by P_OVERLAP_WG).
+    """
+    delays = kroof.roofline_delays(compute, params)  # [B, L, 3]
+    comms = kcoll.collective_costs(comm, params)  # [B, L, 3]
+
+    fp_c = jnp.sum(delays[:, :, 0], axis=1)
+    ig_c = jnp.sum(delays[:, :, 1], axis=1)
+    wg_c = jnp.sum(delays[:, :, 2], axis=1)
+    fp_m = jnp.sum(comms[:, :, 0], axis=1)
+    ig_m = jnp.sum(comms[:, :, 1], axis=1)
+    wg_m = jnp.sum(comms[:, :, 2], axis=1)
+
+    overlap = params[:, ly.P_OVERLAP_WG] > 0.5
+    wg_exposed = jnp.where(overlap, jnp.maximum(wg_m - wg_c, 0.0), wg_m)
+    out = jnp.stack([fp_c, fp_m, ig_c, ig_m, wg_c, wg_exposed], axis=-1)
+    return (out,)
+
+
+def lower_batch_eval(b: int, l: int = ly.L):
+    """jax.jit-lower comet_batch_eval for a fixed (b, l) geometry."""
+    spec_c = jax.ShapeDtypeStruct((b, l, ly.CF), jnp.float32)
+    spec_m = jax.ShapeDtypeStruct((b, l, ly.MF), jnp.float32)
+    spec_p = jax.ShapeDtypeStruct((b, ly.P), jnp.float32)
+    return jax.jit(comet_batch_eval).lower(spec_c, spec_m, spec_p)

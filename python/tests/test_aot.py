@@ -1,0 +1,92 @@
+"""AOT export tests: the HLO text artifacts must exist-or-regenerate, parse,
+stay Mosaic-free (interpret=True contract), and execute to the same numbers
+as the live jax graph when run through xla_client from the text."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import layout as ly
+
+from tests.test_kernel import mk_params, rand_comm, rand_compute
+
+
+class TestExport:
+    def test_export_writes_all_artifacts(self):
+        with tempfile.TemporaryDirectory() as d:
+            aot.export(d)
+            for b in ly.BATCH_SIZES:
+                path = os.path.join(d, f"comet_eval_b{b}.hlo.txt")
+                assert os.path.exists(path)
+                text = open(path).read()
+                assert text.startswith("HloModule")
+                # interpret=True contract: no TPU Mosaic custom-calls.
+                assert "mosaic" not in text.lower()
+            man = json.load(open(os.path.join(d, "manifest.json")))
+            assert man["b"] == ly.B and man["l"] == ly.L
+            assert man["cf"] == ly.CF and man["mf"] == ly.MF
+            assert man["p"] == ly.P and man["outf"] == ly.OUTF
+
+    def test_lowered_has_three_params(self):
+        lowered = model.lower_batch_eval(8)
+        text = aot.to_hlo_text(lowered)
+        # ENTRY computation must take exactly the 3 ABI tensors, with the
+        # exact shapes the Rust runtime will feed.
+        entry = text[text.index("ENTRY ") :]
+        assert entry.count("parameter(") == 3
+        assert f"f32[8,{ly.L},{ly.CF}]" in text
+        assert f"f32[8,{ly.L},{ly.MF}]" in text
+        assert f"f32[8,{ly.P}]" in text
+        # Output is a 1-tuple (return_tuple=True -> rust to_tuple1()).
+        assert f"(f32[8,{ly.OUTF}]" in text
+
+    def test_export_deterministic(self):
+        """Exporting twice must produce byte-identical HLO text (the
+        artifact cache in the Makefile depends on this)."""
+        lowered_a = model.lower_batch_eval(8)
+        lowered_b = model.lower_batch_eval(8)
+        assert aot.to_hlo_text(lowered_a) == aot.to_hlo_text(lowered_b)
+
+    def test_live_jax_matches_ref_on_export_geometry(self):
+        """The exact (B, L) geometry that gets exported must agree with the
+        oracle; the rust integration test then checks artifact == native."""
+        from compile.kernels import ref
+
+        b, l = 8, ly.L
+        c, m, p = rand_compute(b, l), rand_comm(b, l), mk_params(b)
+        got = np.asarray(
+            model.comet_batch_eval(jnp.array(c), jnp.array(m), jnp.array(p))[0]
+        )
+        want = np.asarray(
+            ref.eval_breakdown(jnp.array(c), jnp.array(m), jnp.array(p))
+        )
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-12)
+
+
+class TestCheckedInArtifacts:
+    """If artifacts/ is already built (make artifacts), sanity-check it."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    def test_manifest_matches_layout(self):
+        mpath = os.path.join(self.ART, "manifest.json")
+        if not os.path.exists(mpath):
+            import pytest
+
+            pytest.skip("artifacts not built")
+        man = json.load(open(mpath))
+        assert man["b"] == ly.B
+        assert man["l"] == ly.L
+        assert man["cf"] == ly.CF
+        assert man["mf"] == ly.MF
+        assert man["p"] == ly.P
+        assert man["outf"] == ly.OUTF
+        for b in ly.BATCH_SIZES:
+            assert str(b) in man["artifacts"]
+            assert os.path.exists(
+                os.path.join(self.ART, man["artifacts"][str(b)])
+            )

@@ -1,0 +1,245 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas kernels (OI/per-step ring formulations) must agree with the
+pure-jnp oracle (time-form / closed-form formulations) everywhere. Hypothesis
+sweeps shapes, magnitudes, and degenerate corners.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import collective as kcoll
+from compile.kernels import layout as ly
+from compile.kernels import ref
+from compile.kernels import roofline as kroof
+
+RNG = np.random.default_rng(1234)
+
+
+def mk_params(
+    b,
+    perf_peak=624e12,
+    bw_lm=2039e9,
+    bw_em=500e9,
+    cap_lm=80e9,
+    sram=40e6,
+    footprint=60e9,
+    bw_intra=300e9,
+    bw_inter=31.25e9,
+    lat=1e-6,
+    overlap=1.0,
+    em_frac=-1.0,
+    coll_impl=0.0,
+):
+    p = np.zeros((b, ly.P), np.float32)
+    p[:, ly.P_PERF_PEAK] = perf_peak
+    p[:, ly.P_BW_LM] = bw_lm
+    p[:, ly.P_BW_EM] = bw_em
+    p[:, ly.P_CAP_LM] = cap_lm
+    p[:, ly.P_SRAM] = sram
+    p[:, ly.P_FOOTPRINT] = footprint
+    p[:, ly.P_BW_INTRA] = bw_intra
+    p[:, ly.P_BW_INTER] = bw_inter
+    p[:, ly.P_LINK_LAT] = lat
+    p[:, ly.P_OVERLAP_WG] = overlap
+    p[:, ly.P_EM_FRAC] = em_frac
+    p[:, ly.P_COLL_IMPL] = coll_impl
+    return p
+
+
+def rand_compute(b, l, rng=RNG, scale=1e12):
+    c = rng.uniform(0.0, scale, (b, l, ly.CF)).astype(np.float32)
+    # Realistic slot multiplicity (0 = padded slot .. 128 = stack count).
+    c[:, :, ly.C_REPEAT] = rng.integers(0, 129, (b, l))
+    return c
+
+
+def rand_comm(b, l, rng=RNG, scale=1e9):
+    m = rng.uniform(0.0, scale, (b, l, ly.MF)).astype(np.float32)
+    m[:, :, ly.M_REPEAT] = rng.integers(0, 129, (b, l))
+    for ct, ni, nx in (
+        (ly.M_CTYPE_FP, ly.M_NINTRA_FP, ly.M_NINTER_FP),
+        (ly.M_CTYPE_IG, ly.M_NINTRA_IG, ly.M_NINTER_IG),
+        (ly.M_CTYPE_WG, ly.M_NINTRA_WG, ly.M_NINTER_WG),
+    ):
+        m[:, :, ct] = rng.integers(0, 5, (b, l))
+        m[:, :, ni] = 2.0 ** rng.integers(0, 5, (b, l))
+        m[:, :, nx] = 2.0 ** rng.integers(0, 6, (b, l))
+    return m
+
+
+class TestRooflineKernel:
+    def test_matches_ref_basic(self):
+        b, l = 8, 32
+        c = rand_compute(b, l)
+        p = mk_params(b)
+        got = kroof.roofline_delays(jnp.array(c), jnp.array(p))
+        want = ref.eval_phase_delays(jnp.array(c), jnp.array(p))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-12)
+
+    def test_zero_padding_rows_give_zero(self):
+        b, l = 8, 16
+        c = np.zeros((b, l, ly.CF), np.float32)
+        p = mk_params(b)
+        got = np.asarray(kroof.roofline_delays(jnp.array(c), jnp.array(p)))
+        assert np.all(got == 0.0)
+
+    def test_compute_bound_layer(self):
+        # Huge flops, tiny traffic => delay == flops / perf_peak.
+        b, l = 8, 1
+        c = np.zeros((b, l, ly.CF), np.float32)
+        c[:, :, ly.C_REPEAT] = 1.0
+        c[:, :, ly.C_FLOPS_FP] = 1e15
+        c[:, :, ly.C_U_FP] = 1e6
+        c[:, :, ly.C_V_FP] = 1e6
+        c[:, :, ly.C_W_FP] = 1e6
+        p = mk_params(b, perf_peak=624e12)
+        got = np.asarray(kroof.roofline_delays(jnp.array(c), jnp.array(p)))
+        np.testing.assert_allclose(got[:, 0, 0], 1e15 / 624e12, rtol=1e-5)
+
+    def test_memory_bound_layer(self):
+        # Tiny flops, huge traffic => delay == traffic / bw_lm.
+        b, l = 8, 1
+        c = np.zeros((b, l, ly.CF), np.float32)
+        c[:, :, ly.C_REPEAT] = 1.0
+        c[:, :, ly.C_FLOPS_FP] = 1.0
+        c[:, :, ly.C_U_FP] = 0.0
+        c[:, :, ly.C_V_FP] = 0.0
+        c[:, :, ly.C_W_FP] = 1e12
+        p = mk_params(b, bw_lm=2039e9, footprint=1e9)  # fits in LM
+        got = np.asarray(kroof.roofline_delays(jnp.array(c), jnp.array(p)))
+        np.testing.assert_allclose(got[:, 0, 0], 1e12 / 2039e9, rtol=1e-5)
+
+    def test_spill_slows_down(self):
+        b, l = 8, 4
+        c = rand_compute(b, l)
+        p_fit = mk_params(b, footprint=50e9)
+        p_spill = mk_params(b, footprint=400e9)
+        d_fit = np.asarray(kroof.roofline_delays(jnp.array(c), jnp.array(p_fit)))
+        d_spill = np.asarray(
+            kroof.roofline_delays(jnp.array(c), jnp.array(p_spill))
+        )
+        assert np.all(d_spill >= d_fit - 1e-9)
+
+    def test_em_frac_override(self):
+        b, l = 8, 4
+        c = rand_compute(b, l)
+        # Full spill with bw_em == bw_lm behaves like no spill.
+        p_a = mk_params(b, footprint=400e9, bw_em=2039e9, em_frac=1.0)
+        p_b = mk_params(b, footprint=50e9, em_frac=0.0)
+        d_a = np.asarray(kroof.roofline_delays(jnp.array(c), jnp.array(p_a)))
+        d_b = np.asarray(kroof.roofline_delays(jnp.array(c), jnp.array(p_b)))
+        np.testing.assert_allclose(d_a, d_b, rtol=1e-5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        l=st.integers(1, 48),
+        scale=st.sampled_from([1e3, 1e9, 1e12, 1e15]),
+        footprint=st.floats(1e9, 1e12),
+        sram=st.sampled_from([1e6, 40e6, 66e9]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_sweep(self, l, scale, footprint, sram, seed):
+        rng = np.random.default_rng(seed)
+        b = 8
+        c = rand_compute(b, l, rng, scale)
+        p = mk_params(b, footprint=footprint, sram=sram)
+        got = kroof.roofline_delays(jnp.array(c), jnp.array(p))
+        want = ref.eval_phase_delays(jnp.array(c), jnp.array(p))
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-12)
+
+
+class TestCollectiveKernel:
+    def test_matches_ref_basic(self):
+        b, l = 8, 32
+        m = rand_comm(b, l)
+        p = mk_params(b)
+        got = kcoll.collective_costs(jnp.array(m), jnp.array(p))
+        want = ref.eval_phase_comms(jnp.array(m), jnp.array(p))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-12)
+
+    def test_singleton_group_free(self):
+        b, l = 8, 4
+        m = rand_comm(b, l)
+        for ni, nx in (
+            (ly.M_NINTRA_FP, ly.M_NINTER_FP),
+            (ly.M_NINTRA_IG, ly.M_NINTER_IG),
+            (ly.M_NINTRA_WG, ly.M_NINTER_WG),
+        ):
+            m[:, :, ni] = 1.0
+            m[:, :, nx] = 1.0
+        p = mk_params(b)
+        got = np.asarray(kcoll.collective_costs(jnp.array(m), jnp.array(p)))
+        assert np.all(got == 0.0)
+
+    def test_flat_ring_allreduce_closed_form(self):
+        # n_intra = 8, n_inter = 1: classic 2(n-1)/n * bytes / bw.
+        b, l = 8, 1
+        m = np.zeros((b, l, ly.MF), np.float32)
+        m[:, :, ly.M_REPEAT] = 1.0
+        m[:, :, ly.M_BYTES_FP] = 1e9
+        m[:, :, ly.M_CTYPE_FP] = ly.CT_ALLREDUCE
+        m[:, :, ly.M_NINTRA_FP] = 8.0
+        m[:, :, ly.M_NINTER_FP] = 1.0
+        p = mk_params(b, bw_intra=300e9, lat=0.0)
+        got = np.asarray(kcoll.collective_costs(jnp.array(m), jnp.array(p)))
+        want = 2.0 * 7.0 / 8.0 * 1e9 / 300e9
+        np.testing.assert_allclose(got[:, 0, 0], want, rtol=1e-5)
+
+    def test_hierarchical_beats_flat_on_slow_inter(self):
+        """Hierarchical AR cost must be below a flat ring over the slow
+        inter-pod links for a multi-pod group (the reason the paper uses
+        hierarchical collectives)."""
+        bytes_, n_intra, n_inter = 1e9, 8.0, 16.0
+        bw_i, bw_x = 300e9, 31.25e9
+        m = np.zeros((8, 1, ly.MF), np.float32)
+        m[:, :, ly.M_REPEAT] = 1.0
+        m[:, :, ly.M_BYTES_FP] = bytes_
+        m[:, :, ly.M_CTYPE_FP] = ly.CT_ALLREDUCE
+        m[:, :, ly.M_NINTRA_FP] = n_intra
+        m[:, :, ly.M_NINTER_FP] = n_inter
+        p_h = mk_params(8, bw_intra=bw_i, bw_inter=bw_x, lat=0.0, coll_impl=1.0)
+        p_f = mk_params(8, bw_intra=bw_i, bw_inter=bw_x, lat=0.0, coll_impl=0.0)
+        hier = np.asarray(kcoll.collective_costs(jnp.array(m), jnp.array(p_h)))
+        flat = np.asarray(kcoll.collective_costs(jnp.array(m), jnp.array(p_f)))
+        n = n_intra * n_inter
+        want_flat = 2.0 * (n - 1.0) / n * bytes_ / bw_x
+        np.testing.assert_allclose(flat[:, 0, 0], want_flat, rtol=1e-5)
+        assert np.all(hier[:, 0, 0] < flat[:, 0, 0])
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        l=st.integers(1, 48),
+        scale=st.sampled_from([1e3, 1e6, 1e9, 1e11]),
+        lat=st.sampled_from([0.0, 1e-7, 1e-6, 1e-5]),
+        coll_impl=st.sampled_from([0.0, 1.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_sweep(self, l, scale, lat, coll_impl, seed):
+        rng = np.random.default_rng(seed)
+        b = 8
+        m = rand_comm(b, l, rng, scale)
+        p = mk_params(b, lat=lat, coll_impl=coll_impl)
+        got = kcoll.collective_costs(jnp.array(m), jnp.array(p))
+        want = ref.eval_phase_comms(jnp.array(m), jnp.array(p))
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-12)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        bytes_=st.floats(1e3, 1e12),
+        n_intra=st.sampled_from([1.0, 2.0, 4.0, 8.0, 16.0]),
+        n_inter=st.sampled_from([1.0, 2.0, 8.0, 64.0, 128.0]),
+    )
+    def test_allreduce_monotone_in_bytes(self, bytes_, n_intra, n_inter):
+        m = np.zeros((8, 2, ly.MF), np.float32)
+        for j, by in enumerate((bytes_, bytes_ * 2.0)):
+            m[:, j, ly.M_REPEAT] = 1.0
+            m[:, j, ly.M_BYTES_FP] = by
+            m[:, j, ly.M_CTYPE_FP] = ly.CT_ALLREDUCE
+            m[:, j, ly.M_NINTRA_FP] = n_intra
+            m[:, j, ly.M_NINTER_FP] = n_inter
+        p = mk_params(8)
+        got = np.asarray(kcoll.collective_costs(jnp.array(m), jnp.array(p)))
+        assert np.all(got[:, 1, 0] >= got[:, 0, 0])

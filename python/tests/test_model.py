@@ -1,0 +1,125 @@
+"""L2 graph tests: comet_batch_eval vs the oracle, shapes, exposure rule,
+and qualitative cost-model behaviours the paper's case studies rely on."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import layout as ly
+from compile.kernels import ref
+
+from tests.test_kernel import mk_params, rand_comm, rand_compute
+
+
+def run_model(c, m, p):
+    return np.asarray(
+        model.comet_batch_eval(jnp.array(c), jnp.array(m), jnp.array(p))[0]
+    )
+
+
+class TestBatchEval:
+    def test_matches_ref(self):
+        b, l = 8, 40
+        c, m, p = rand_compute(b, l), rand_comm(b, l), mk_params(b)
+        got = run_model(c, m, p)
+        want = np.asarray(
+            ref.eval_breakdown(jnp.array(c), jnp.array(m), jnp.array(p))
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-12)
+
+    def test_output_shape(self):
+        b, l = 8, 16
+        out = run_model(rand_compute(b, l), rand_comm(b, l), mk_params(b))
+        assert out.shape == (b, ly.OUTF)
+
+    def test_all_finite_nonnegative(self):
+        b, l = 8, 64
+        out = run_model(rand_compute(b, l), rand_comm(b, l), mk_params(b))
+        assert np.all(np.isfinite(out))
+        assert np.all(out >= 0.0)
+
+    def test_padding_invariance(self):
+        """Extending L with zero rows must not change the breakdown."""
+        b, l = 8, 24
+        c, m, p = rand_compute(b, l), rand_comm(b, l), mk_params(b)
+        c2 = np.concatenate([c, np.zeros((b, 40, ly.CF), np.float32)], axis=1)
+        m2 = np.concatenate([m, np.zeros((b, 40, ly.MF), np.float32)], axis=1)
+        np.testing.assert_allclose(
+            run_model(c, m, p), run_model(c2, m2, p), rtol=1e-6
+        )
+
+    def test_wg_overlap_rule(self):
+        """With overlap on, exposed WG comm == max(0, comm - compute)."""
+        b, l = 8, 8
+        c, m = rand_compute(b, l), rand_comm(b, l)
+        p_on = mk_params(b, overlap=1.0)
+        p_off = mk_params(b, overlap=0.0)
+        out_on = run_model(c, m, p_on)
+        out_off = run_model(c, m, p_off)
+        wg_c, wg_m = out_off[:, ly.O_WG_COMPUTE], out_off[:, ly.O_WG_EXPOSED]
+        np.testing.assert_allclose(
+            out_on[:, ly.O_WG_EXPOSED],
+            np.maximum(wg_m - wg_c, 0.0),
+            rtol=1e-5,
+            atol=1e-12,
+        )
+
+    def test_faster_network_never_hurts(self):
+        b, l = 8, 32
+        c, m = rand_compute(b, l), rand_comm(b, l)
+        slow = run_model(c, m, mk_params(b, bw_intra=150e9, bw_inter=15e9))
+        fast = run_model(c, m, mk_params(b, bw_intra=600e9, bw_inter=125e9))
+        for col in (ly.O_FP_EXPOSED, ly.O_IG_EXPOSED, ly.O_WG_EXPOSED):
+            assert np.all(fast[:, col] <= slow[:, col] + 1e-9)
+
+    def test_more_compute_never_hurts(self):
+        b, l = 8, 32
+        c, m = rand_compute(b, l), rand_comm(b, l)
+        lo = run_model(c, m, mk_params(b, perf_peak=312e12))
+        hi = run_model(c, m, mk_params(b, perf_peak=1248e12))
+        for col in (ly.O_FP_COMPUTE, ly.O_IG_COMPUTE, ly.O_WG_COMPUTE):
+            assert np.all(hi[:, col] <= lo[:, col] + 1e-9)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        l=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+        overlap=st.sampled_from([0.0, 1.0]),
+        footprint=st.floats(1e9, 1e12),
+    )
+    def test_matches_ref_sweep(self, l, seed, overlap, footprint):
+        rng = np.random.default_rng(seed)
+        b = 8
+        c = rand_compute(b, l, rng)
+        m = rand_comm(b, l, rng)
+        p = mk_params(b, overlap=overlap, footprint=footprint)
+        got = run_model(c, m, p)
+        want = np.asarray(
+            ref.eval_breakdown(jnp.array(c), jnp.array(m), jnp.array(p))
+        )
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-12)
+
+
+class TestCostModelBehaviours:
+    """Qualitative behaviours fig. 8-11 depend on."""
+
+    def test_expanded_bandwidth_helps_spilled_config(self):
+        b, l = 8, 16
+        c = rand_compute(b, l)
+        m = np.zeros((b, l, ly.MF), np.float32)
+        out = {}
+        for bw_em in (250e9, 500e9, 1000e9, 2039e9):
+            p = mk_params(b, footprint=340e9, bw_em=bw_em)
+            out[bw_em] = run_model(c, m, p)[:, ly.O_FP_COMPUTE]
+        assert np.all(out[250e9] >= out[500e9])
+        assert np.all(out[500e9] >= out[1000e9])
+        assert np.all(out[1000e9] >= out[2039e9])
+
+    def test_fit_in_lm_insensitive_to_em(self):
+        b, l = 8, 16
+        c = rand_compute(b, l)
+        m = np.zeros((b, l, ly.MF), np.float32)
+        a = run_model(c, m, mk_params(b, footprint=50e9, bw_em=250e9))
+        bb = run_model(c, m, mk_params(b, footprint=50e9, bw_em=2000e9))
+        np.testing.assert_allclose(a, bb, rtol=1e-6)

@@ -1,0 +1,34 @@
+//! The paper's SV-E speed claim: generating the Fig. 9 + Fig. 13b heatmaps
+//! takes ~5 h + ~45 min on a 24-core Xeon. This bench times COMET-rs
+//! regenerating EVERY figure, per backend.
+use std::time::Instant;
+
+use comet::coordinator::{sweep, Coordinator};
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let t0 = Instant::now();
+    let coord = Coordinator::native();
+    let figs = sweep::all_figures(&coord).unwrap();
+    println!(
+        "all {} figures on the native backend: {:.3} s (paper: hours)",
+        figs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let mut b = Bencher::new();
+    b.bench("dse/all_figures_native_cold", || {
+        let c = Coordinator::native();
+        black_box(sweep::all_figures(&c).unwrap());
+    });
+    b.bench("dse/all_figures_des_cold", || {
+        let c = Coordinator::des();
+        black_box(sweep::all_figures(&c).unwrap());
+    });
+    if let Ok(ac) = Coordinator::artifact() {
+        b.bench("dse/all_figures_artifact_warmcache", || {
+            black_box(sweep::all_figures(&ac).unwrap());
+        });
+    }
+    b.report("bench_dse_speed");
+}

@@ -1,0 +1,49 @@
+//! Microbenchmarks of the evaluation backends: closed-form, DES, and the
+//! PJRT artifact, per single configuration and per 64-config batch.
+use comet::analytical::evaluate;
+use comet::config::presets;
+use comet::model::batch::{pack, stack};
+use comet::model::inputs::{derive_inputs, EvalOptions};
+use comet::parallel::Strategy;
+use comet::runtime::{BatchEvaluator, Runtime};
+use comet::sim::simulate;
+use comet::util::bench::{black_box, Bencher};
+use comet::workload::transformer::Transformer;
+
+fn main() {
+    let cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions { ignore_capacity: true, ..Default::default() };
+    let inp = derive_inputs(
+        &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+        &cluster,
+        &opts,
+    )
+    .unwrap();
+    let batch: Vec<_> = (0..64).map(|_| inp.clone()).collect();
+
+    let mut b = Bencher::new();
+    b.bench("analytical/eval_1_config", || {
+        black_box(evaluate(black_box(&inp)));
+    });
+    b.bench("des/simulate_1_config", || {
+        black_box(simulate(black_box(&inp)));
+    });
+    b.bench("abi/pack_1_config", || {
+        black_box(pack(black_box(&inp)).unwrap());
+    });
+    let packed = pack(&inp).unwrap();
+    let packed64: Vec<_> = (0..64).map(|_| packed.clone()).collect();
+    b.bench("abi/stack_64_configs", || {
+        black_box(stack(black_box(&packed64), 64).unwrap());
+    });
+    if let Ok(rt) = Runtime::load_default() {
+        let ev = BatchEvaluator::new(&rt);
+        b.bench("artifact/eval_64_configs(pjrt)", || {
+            black_box(ev.evaluate(black_box(&batch)).unwrap());
+        });
+        b.bench("artifact/eval_1_config(pjrt)", || {
+            black_box(ev.evaluate_one(black_box(&inp)).unwrap());
+        });
+    }
+    b.report("bench_engine");
+}

@@ -1,0 +1,23 @@
+//! Regenerates paper Fig. 10 (compute-capability scaling).
+use comet::coordinator::{sweep, Coordinator};
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let coord = Coordinator::native();
+    let f = sweep::fig10(&coord).unwrap();
+    // Halving compute slows down; doubling speeds up with diminishing
+    // returns (paper: +50% / -25% at full bandwidth).
+    let half = f.cell("compute x0.5", "EM@2039GB/s").unwrap();
+    let base = f.cell("compute x1", "EM@2039GB/s").unwrap();
+    let dbl = f.cell("compute x2", "EM@2039GB/s").unwrap();
+    assert!(half > base && dbl < base);
+    println!("{}", f.to_table());
+    println!("x0.5: {:+.1}%  x2: {:+.1}%", (half / base - 1.0) * 100.0, (dbl / base - 1.0) * 100.0);
+
+    let mut b = Bencher::new();
+    b.bench("fig10/native_cold", || {
+        let c = Coordinator::native();
+        black_box(sweep::fig10(&c).unwrap());
+    });
+    b.report("bench_fig10");
+}

@@ -1,0 +1,21 @@
+//! Regenerates paper Fig. 11 (intra/inter-pod bandwidth scaling grid).
+use comet::coordinator::{sweep, Coordinator};
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let coord = Coordinator::native();
+    let f = sweep::fig11(&coord).unwrap();
+    // MP64 is network-sensitive; MP8 is not.
+    let mp64_half = f.cell("MP64_DP16 intra x0.5", "inter x0.5").unwrap();
+    let mp8_half = f.cell("MP8_DP128 intra x0.5", "inter x0.5").unwrap();
+    assert!(mp64_half < 0.85, "{mp64_half}");
+    assert!(mp8_half > 0.80, "{mp8_half}");
+    println!("{}", f.to_table());
+
+    let mut b = Bencher::new();
+    b.bench("fig11/native_cold", || {
+        let c = Coordinator::native();
+        black_box(sweep::fig11(&c).unwrap());
+    });
+    b.report("bench_fig11");
+}

@@ -1,0 +1,23 @@
+//! Regenerates paper Fig. 12 (fixed-aggregate bandwidth rebalancing).
+use comet::coordinator::{sweep, Coordinator};
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let coord = Coordinator::native();
+    let f = sweep::fig12(&coord).unwrap();
+    println!("{}", f.to_table());
+    // The MP64 column's best ratio should sit in the paper's 1:4-1:8 band.
+    let best = f
+        .rows
+        .iter()
+        .max_by(|a, b| a.1[0].partial_cmp(&b.1[0]).unwrap())
+        .unwrap();
+    println!("best ratio for MP64_DP16: {} ({:.3}x)", best.0, best.1[0]);
+
+    let mut b = Bencher::new();
+    b.bench("fig12/native_cold", || {
+        let c = Coordinator::native();
+        black_box(sweep::fig12(&c).unwrap());
+    });
+    b.report("bench_fig12");
+}

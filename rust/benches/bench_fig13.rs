@@ -1,0 +1,25 @@
+//! Regenerates paper Fig. 13a/13b (DLRM studies). The paper reports ~45 min
+//! for the Fig. 13b heatmap (SV-E).
+use comet::coordinator::{sweep, Coordinator};
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let coord = Coordinator::native();
+    let fa = sweep::fig13a(&coord).unwrap();
+    let fb = sweep::fig13b(&coord).unwrap();
+    // Sublinear growth with shrinking clusters.
+    assert!(fa.cell("32 nodes", "Norm_to_64").unwrap() < 2.0);
+    println!("{}", fa.to_table());
+    println!("{}", fb.to_table());
+
+    let mut b = Bencher::new();
+    b.bench("fig13a/native_cold", || {
+        let c = Coordinator::native();
+        black_box(sweep::fig13a(&c).unwrap());
+    });
+    b.bench("fig13b/native_cold", || {
+        let c = Coordinator::native();
+        black_box(sweep::fig13b(&c).unwrap());
+    });
+    b.report("bench_fig13");
+}

@@ -1,0 +1,22 @@
+//! Regenerates paper Fig. 15 (11-cluster comparison).
+use comet::coordinator::{sweep, Coordinator};
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let coord = Coordinator::native();
+    let f = sweep::fig15(&coord).unwrap();
+    assert!(f.cell("C0", "Transformer-1T").unwrap() > f.cell("A0", "Transformer-1T").unwrap());
+    println!("{}", f.to_table());
+
+    let mut b = Bencher::new();
+    b.bench("fig15/native_cold", || {
+        let c = Coordinator::native();
+        black_box(sweep::fig15(&c).unwrap());
+    });
+    if let Ok(ac) = Coordinator::artifact() {
+        b.bench("fig15/artifact(pjrt)_cold_cache", || {
+            black_box(sweep::fig15(&ac).unwrap());
+        });
+    }
+    b.report("bench_fig15");
+}

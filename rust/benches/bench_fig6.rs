@@ -1,0 +1,19 @@
+//! Regenerates paper Fig. 6 (ZeRO footprint table) and times it.
+use comet::coordinator::sweep;
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let f = sweep::fig6();
+    assert_eq!(f.rows.len(), 11);
+    // Shape: ZeRO-3 flat, baseline doubling per MP halving.
+    let z3a = f.cell("MP1024_DP1", "zero-3").unwrap();
+    let z3b = f.cell("MP1_DP1024", "zero-3").unwrap();
+    assert!((z3a - z3b).abs() < 1e-6);
+    println!("{}", f.to_table());
+
+    let mut b = Bencher::new();
+    b.bench("fig6/footprint_table", || {
+        black_box(sweep::fig6());
+    });
+    b.report("bench_fig6");
+}

@@ -1,0 +1,26 @@
+//! Regenerates paper Fig. 8a/8b (parallelization-strategy breakdown).
+use comet::coordinator::{sweep, Coordinator};
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let coord = Coordinator::native();
+    let f = sweep::fig8a(&coord).unwrap();
+    assert_eq!(f.argmin("Total_s"), Some("MP8_DP128"));
+    println!("{}", f.to_table());
+    println!("{}", sweep::fig8b(&coord).unwrap().to_table());
+
+    let mut b = Bencher::new();
+    b.bench("fig8a/native", || {
+        let c = Coordinator::native(); // cold cache each iteration
+        black_box(sweep::fig8a(&c).unwrap());
+    });
+    if let Ok(ac) = Coordinator::artifact() {
+        b.bench("fig8a/artifact(pjrt)", || {
+            black_box(sweep::fig8a(&ac).unwrap());
+        });
+    }
+    b.bench("fig8a/native_warm_cache", || {
+        black_box(sweep::fig8a(&coord).unwrap());
+    });
+    b.report("bench_fig8");
+}

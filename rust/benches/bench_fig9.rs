@@ -1,0 +1,26 @@
+//! Regenerates paper Fig. 9 (memory-expansion heatmap). The paper reports
+//! ~5 h for this figure on a 24-core Xeon (SV-E); COMET-rs regenerates it
+//! in milliseconds.
+use comet::coordinator::{sweep, Coordinator};
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let coord = Coordinator::native();
+    let f = sweep::fig9(&coord).unwrap();
+    // Crossover shape: MP8_DP128 loses at 250 GB/s, wins at 2039 GB/s.
+    assert!(f.cell("MP8_DP128", "250GB/s").unwrap() < 1.0);
+    assert!(f.cell("MP8_DP128", "2039GB/s").unwrap() > 1.0);
+    println!("{}", f.to_table());
+
+    let mut b = Bencher::new();
+    b.bench("fig9/native_cold", || {
+        let c = Coordinator::native();
+        black_box(sweep::fig9(&c).unwrap());
+    });
+    if let Ok(ac) = Coordinator::artifact() {
+        b.bench("fig9/artifact(pjrt)_cold_cache", || {
+            black_box(sweep::fig9(&ac).unwrap());
+        });
+    }
+    b.report("bench_fig9");
+}

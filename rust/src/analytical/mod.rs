@@ -1,0 +1,246 @@
+//! Closed-form analytical backend — the Rust-native equivalent of
+//! ASTRA-SIM's analytical network mode, and the f64 mirror of the AOT
+//! artifact's math (python/compile/kernels/ref.py).
+//!
+//! Per layer and phase: roofline compute delay over the hybrid-memory
+//! bandwidth (SIII-C1/C2) plus hierarchical collective cost (SIII-C3);
+//! exposure per SIII-C4 — FP/IG collectives block, the WG data-parallel
+//! collective overlaps with WG compute.
+
+use crate::compute::{em_fraction, gemm_traffic, hybrid_bandwidth};
+use crate::model::inputs::ModelInputs;
+use crate::network::collective_cost;
+
+/// Per-iteration training-time breakdown, seconds (the paper's Fig. 8a
+/// stacked bars).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TrainingBreakdown {
+    pub fp_compute: f64,
+    pub fp_exposed_comm: f64,
+    pub ig_compute: f64,
+    pub ig_exposed_comm: f64,
+    pub wg_compute: f64,
+    pub wg_exposed_comm: f64,
+}
+
+impl TrainingBreakdown {
+    /// Total iteration time.
+    pub fn total(&self) -> f64 {
+        self.fp_compute
+            + self.fp_exposed_comm
+            + self.ig_compute
+            + self.ig_exposed_comm
+            + self.wg_compute
+            + self.wg_exposed_comm
+    }
+
+    /// Total compute time.
+    pub fn compute(&self) -> f64 {
+        self.fp_compute + self.ig_compute + self.wg_compute
+    }
+
+    /// Total exposed communication time.
+    pub fn exposed_comm(&self) -> f64 {
+        self.fp_exposed_comm + self.ig_exposed_comm + self.wg_exposed_comm
+    }
+
+    /// Fraction of the iteration spent on exposed communication (Fig. 8b).
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.total();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.exposed_comm() / t
+        }
+    }
+
+    /// The six components as an array (artifact ABI order).
+    pub fn as_array(&self) -> [f64; 6] {
+        [
+            self.fp_compute,
+            self.fp_exposed_comm,
+            self.ig_compute,
+            self.ig_exposed_comm,
+            self.wg_compute,
+            self.wg_exposed_comm,
+        ]
+    }
+
+    /// From the artifact ABI order.
+    pub fn from_array(a: [f64; 6]) -> TrainingBreakdown {
+        TrainingBreakdown {
+            fp_compute: a[0],
+            fp_exposed_comm: a[1],
+            ig_compute: a[2],
+            ig_exposed_comm: a[3],
+            wg_compute: a[4],
+            wg_exposed_comm: a[5],
+        }
+    }
+}
+
+/// Evaluate the analytical cost model over derived inputs.
+pub fn evaluate(inputs: &ModelInputs) -> TrainingBreakdown {
+    let p = &inputs.params;
+    let frac_em = p
+        .em_frac_override
+        .unwrap_or_else(|| em_fraction(p.footprint, p.cap_lm));
+    let bw_eff = hybrid_bandwidth(p.bw_lm, p.bw_em, frac_em);
+
+    let mut compute = [0.0f64; 3];
+    let mut comm = [0.0f64; 3];
+    for layer in &inputs.layers {
+        for phase in 0..3 {
+            let q = &layer.q[phase];
+            let traffic = gemm_traffic(q.u, q.v, q.w, p.sram);
+            let delay = crate::compute::compute_delay(
+                q.flops,
+                traffic,
+                p.perf_peak,
+                bw_eff,
+            );
+            compute[phase] += layer.repeat * delay;
+            // Fast path: most layer-phases carry no collective.
+            if !matches!(
+                layer.comm[phase].collective,
+                crate::workload::Collective::None
+            ) {
+                comm[phase] += layer.repeat
+                    * collective_cost(
+                        &layer.comm[phase],
+                        p.bw_intra,
+                        p.bw_inter,
+                        p.link_latency,
+                        p.collective_impl,
+                    );
+            }
+        }
+    }
+
+    let wg_exposed = if p.overlap_wg {
+        (comm[2] - compute[2]).max(0.0)
+    } else {
+        comm[2]
+    };
+    TrainingBreakdown {
+        fp_compute: compute[0],
+        fp_exposed_comm: comm[0],
+        ig_compute: compute[1],
+        ig_exposed_comm: comm[1],
+        wg_compute: compute[2],
+        wg_exposed_comm: wg_exposed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::inputs::{derive_inputs, EvalOptions};
+    use crate::parallel::Strategy;
+    use crate::workload::transformer::Transformer;
+
+    fn eval(mp: usize, dp: usize, opts: &EvalOptions) -> TrainingBreakdown {
+        let cluster = presets::dgx_a100_1024();
+        let w = Transformer::t1().build(&Strategy::new(mp, dp)).unwrap();
+        evaluate(&derive_inputs(&w, &cluster, opts).unwrap())
+    }
+
+    fn fig8a_opts() -> EvalOptions {
+        EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn breakdown_is_positive_and_finite() {
+        let b = eval(8, 128, &fig8a_opts());
+        for v in b.as_array() {
+            assert!(v.is_finite() && v >= 0.0, "{b:?}");
+        }
+        assert!(b.total() > 0.0);
+    }
+
+    #[test]
+    fn fig8a_mp8_dp128_is_optimal() {
+        // The paper's headline Fig. 8 result: MP8_DP128 minimizes iteration
+        // time under infinite-capacity assumptions on the baseline cluster.
+        let opts = fig8a_opts();
+        let sweep = Strategy::sweep_bounded(1024, 1, 128);
+        let best = sweep
+            .iter()
+            .min_by(|a, b| {
+                let ta = eval(a.mp, a.dp, &opts).total();
+                let tb = eval(b.mp, b.dp, &opts).total();
+                ta.partial_cmp(&tb).unwrap()
+            })
+            .unwrap();
+        assert_eq!((best.mp, best.dp), (8, 128), "best {}", best.label());
+    }
+
+    #[test]
+    fn fig8_high_mp_is_comm_bound() {
+        let b = eval(64, 16, &fig8a_opts());
+        assert!(
+            b.exposed_comm() > b.compute(),
+            "MP64 must be communication-bound: {b:?}"
+        );
+    }
+
+    #[test]
+    fn fig8_low_mp_is_compute_bound() {
+        let b = eval(2, 512, &fig8a_opts());
+        assert!(
+            b.compute() > 5.0 * b.exposed_comm(),
+            "MP2 must be compute/memory-bound: {b:?}"
+        );
+    }
+
+    #[test]
+    fn fig8_wg_comm_fully_overlapped() {
+        // Paper: "WG communication is fully overlapped by the WG compute in
+        // every configuration".
+        for s in Strategy::sweep_bounded(1024, 2, 128) {
+            let b = eval(s.mp, s.dp, &fig8a_opts());
+            assert_eq!(b.wg_exposed_comm, 0.0, "{}: {b:?}", s.label());
+        }
+    }
+
+    #[test]
+    fn overlap_off_exposes_wg() {
+        let opts = EvalOptions {
+            overlap_wg: false,
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        let b = eval(8, 128, &opts);
+        assert!(b.wg_exposed_comm > 0.0);
+    }
+
+    #[test]
+    fn comm_fraction_decreases_with_mp() {
+        // Fig. 8b: communication share shrinks monotonically as MP falls.
+        let opts = fig8a_opts();
+        let f64_ = eval(64, 16, &opts).comm_fraction();
+        let f8 = eval(8, 128, &opts).comm_fraction();
+        let f2 = eval(2, 512, &opts).comm_fraction();
+        assert!(f64_ > f8, "{f64_} {f8}");
+        assert!(f8 > f2, "{f8} {f2}");
+    }
+
+    #[test]
+    fn spill_hurts_when_capacity_enforced() {
+        // With capacity enforced and no EM, MP8's 264 GB footprint starves.
+        let enforced = eval(8, 128, &EvalOptions::default());
+        let infinite = eval(8, 128, &fig8a_opts());
+        assert!(enforced.total() > infinite.total());
+    }
+
+    #[test]
+    fn array_roundtrip() {
+        let b = eval(8, 128, &fig8a_opts());
+        let b2 = TrainingBreakdown::from_array(b.as_array());
+        assert_eq!(b, b2);
+    }
+}

@@ -1,0 +1,95 @@
+//! Hybrid local + expanded memory bandwidth (paper SIII-C2, Eqn. 3).
+//!
+//! When the per-node footprint exceeds local-memory capacity, the excess
+//! spills to expanded memory (host DRAM / CXL). Traffic splits
+//! capacity-proportionally, and the effective bandwidth follows Eqn. 3:
+//!
+//!   bw_hybrid = total / (data_LM / bw_LM + data_EM / bw_EM)
+
+/// Fraction of traffic served from expanded memory for a given footprint.
+pub fn em_fraction(footprint: f64, cap_lm: f64) -> f64 {
+    if footprint <= 0.0 {
+        0.0
+    } else {
+        ((footprint - cap_lm) / footprint).clamp(0.0, 1.0)
+    }
+}
+
+/// Effective bandwidth of the hybrid memory system (Eqn. 3).
+///
+/// `frac_em` in [0, 1]; when `frac_em == 0` this is exactly `bw_lm`.
+/// With spill demanded but no expanded memory (`bw_em == 0`), the node is
+/// starved: modelled as a 1 B/s floor, surfacing as a catastrophic delay
+/// rather than a silent wrong answer.
+pub fn hybrid_bandwidth(bw_lm: f64, bw_em: f64, frac_em: f64) -> f64 {
+    if frac_em <= 0.0 {
+        return bw_lm;
+    }
+    let bw_em = bw_em.max(1.0);
+    let bw_lm = bw_lm.max(1.0);
+    1.0 / ((1.0 - frac_em) / bw_lm + frac_em / bw_em)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_worked_example() {
+        // SIII-C2: 240 GB accessed, 80 GB LM at 2 TB/s, EM at 1 TB/s
+        // => 1.2 TB/s effective.
+        let frac = em_fraction(240e9, 80e9);
+        assert!((frac - 2.0 / 3.0).abs() < 1e-12);
+        let bw = hybrid_bandwidth(2e12, 1e12, frac);
+        assert!((bw - 1.2e12).abs() < 1e6, "{bw:.4e}");
+    }
+
+    #[test]
+    fn no_spill_is_local_bandwidth() {
+        assert_eq!(em_fraction(50e9, 80e9), 0.0);
+        assert_eq!(hybrid_bandwidth(2039e9, 500e9, 0.0), 2039e9);
+    }
+
+    #[test]
+    fn full_spill_is_em_bandwidth() {
+        assert_eq!(hybrid_bandwidth(2039e9, 500e9, 1.0), 500e9);
+    }
+
+    #[test]
+    fn bounded_by_the_two_levels() {
+        for frac in [0.1, 0.3, 0.5, 0.9] {
+            let bw = hybrid_bandwidth(2039e9, 500e9, frac);
+            assert!(bw < 2039e9);
+            assert!(bw > 500e9);
+        }
+    }
+
+    #[test]
+    fn monotone_in_em_bandwidth() {
+        let f = 0.6;
+        let mut prev = 0.0;
+        for bw_em in [100e9, 250e9, 500e9, 1000e9, 2039e9] {
+            let bw = hybrid_bandwidth(2039e9, bw_em, f);
+            assert!(bw > prev);
+            prev = bw;
+        }
+    }
+
+    #[test]
+    fn starved_without_expansion() {
+        // Spill with no EM: effectively unusable (floor at ~1 B/s).
+        let bw = hybrid_bandwidth(2039e9, 0.0, 0.5);
+        assert!(bw < 3.0);
+    }
+
+    #[test]
+    fn em_fraction_monotone_in_footprint() {
+        let mut prev = -1.0;
+        for fp in [10e9, 80e9, 160e9, 320e9, 640e9] {
+            let f = em_fraction(fp, 80e9);
+            assert!(f >= prev);
+            prev = f;
+        }
+        assert_eq!(em_fraction(80e9, 80e9), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Per-node performance models (paper SIII-C1/C2): roofline compute delay,
+//! the tiling memory-traffic model, and hybrid local+expanded memory
+//! bandwidth (Eqn. 3).
+
+pub mod hybrid;
+pub mod roofline;
+pub mod traffic;
+
+pub use hybrid::{em_fraction, hybrid_bandwidth};
+pub use roofline::{compute_delay, operational_intensity, perf_max};
+pub use traffic::gemm_traffic;

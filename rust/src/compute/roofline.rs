@@ -1,0 +1,97 @@
+//! Roofline compute-delay model (paper SIII-C1, Eqns. 1-2; Williams et al.).
+
+/// Operational intensity, FLOPs / byte (Eqn. 1).
+pub fn operational_intensity(flops: f64, traffic_bytes: f64) -> f64 {
+    if traffic_bytes <= 0.0 {
+        f64::INFINITY
+    } else {
+        flops / traffic_bytes
+    }
+}
+
+/// Attainable performance: `min(perf_peak, OI x bw_mem)` (Fig. 4).
+pub fn perf_max(perf_peak: f64, oi: f64, bw_mem: f64) -> f64 {
+    perf_peak.min(oi * bw_mem)
+}
+
+/// Compute delay of one layer phase (Eqn. 2), expressed in the numerically
+/// robust time form: `max(flops / perf_peak, traffic / bw_mem)` — identical
+/// to `flops / perf_max` wherever the latter is defined, and well-behaved
+/// for pure data movement (flops == 0).
+pub fn compute_delay(
+    flops: f64,
+    traffic_bytes: f64,
+    perf_peak: f64,
+    bw_mem: f64,
+) -> f64 {
+    let compute_t = flops / perf_peak.max(1.0);
+    let memory_t = traffic_bytes / bw_mem.max(1.0);
+    compute_t.max(memory_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_layer_hits_peak() {
+        // OI far above the ridge point: delay = flops / perf_peak.
+        let d = compute_delay(1e15, 1e9, 624e12, 2039e9);
+        assert!((d - 1e15 / 624e12).abs() / d < 1e-12);
+    }
+
+    #[test]
+    fn memory_bound_layer_hits_bandwidth() {
+        let d = compute_delay(1e9, 1e12, 624e12, 2039e9);
+        assert!((d - 1e12 / 2039e9).abs() / d < 1e-12);
+    }
+
+    #[test]
+    fn ridge_point_continuous() {
+        // At OI == perf_peak / bw both forms agree.
+        let (pp, bw) = (624e12_f64, 2039e9_f64);
+        let ridge_oi = pp / bw;
+        let traffic = 1e9;
+        let flops = ridge_oi * traffic;
+        let d = compute_delay(flops, traffic, pp, bw);
+        assert!((d - flops / pp).abs() / d < 1e-12);
+        assert!((d - traffic / bw).abs() / d < 1e-12);
+    }
+
+    #[test]
+    fn time_form_equals_perf_max_form() {
+        for (flops, traffic) in
+            [(1e12, 1e9), (1e9, 1e12), (5e11, 5e11), (1e15, 3.3e12)]
+        {
+            let (pp, bw) = (624e12, 2039e9);
+            let oi = operational_intensity(flops, traffic);
+            let via_perf = flops / perf_max(pp, oi, bw);
+            let via_time = compute_delay(flops, traffic, pp, bw);
+            assert!(
+                (via_perf - via_time).abs() / via_time < 1e-12,
+                "{flops} {traffic}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_flops_is_pure_streaming() {
+        let d = compute_delay(0.0, 1e9, 624e12, 2039e9);
+        assert_eq!(d, 1e9 / 2039e9);
+    }
+
+    #[test]
+    fn infinite_oi_for_zero_traffic() {
+        assert!(operational_intensity(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn bandwidth_scaling_shifts_slope() {
+        // Fig. 4: same OI, more bandwidth => lower delay in the
+        // memory-bound region, no change when compute-bound.
+        let mem_bound = |bw| compute_delay(1e9, 1e12, 624e12, bw);
+        assert!(mem_bound(2039e9) < mem_bound(1000e9));
+        let comp_bound = |bw| compute_delay(1e15, 1e6, 624e12, bw);
+        assert_eq!(comp_bound(2039e9), comp_bound(1000e9));
+    }
+}

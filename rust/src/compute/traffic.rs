@@ -1,0 +1,80 @@
+//! Memory-traffic model for GEMMs on a node with a finite on-chip buffer
+//! (paper SIII-C2): one operand is tiled into the buffer, the other is
+//! streamed once per tile pass.
+//!
+//! For operands of U and V bytes, output W bytes, buffer S bytes:
+//!   psi1 = ceil(U/S) * V + U     (tile U, stream V)
+//!   psi2 = ceil(V/S) * U + V     (tile V, stream U)
+//!   traffic = max(min(psi1, psi2), U + V) + W
+//!
+//! The `max(.., U+V)` clamp covers non-GEMM layers encoded with U = V = 0,
+//! where every byte moves exactly once. Identical math to the L1 Pallas
+//! kernel and the jnp oracle (python/compile/kernels/ref.py).
+
+/// Memory traffic in bytes for one GEMM-shaped operation.
+pub fn gemm_traffic(u: f64, v: f64, w: f64, sram: f64) -> f64 {
+    let s = sram.max(1.0);
+    let psi1 = (u / s).ceil() * v + u;
+    let psi2 = (v / s).ceil() * u + v;
+    psi1.min(psi2).max(u + v) + w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_in_buffer_moves_once() {
+        // Both operands under S: each fetched once.
+        let t = gemm_traffic(10e6, 20e6, 5e6, 40e6);
+        assert_eq!(t, 10e6 + 20e6 + 5e6);
+    }
+
+    #[test]
+    fn tiles_smaller_operand() {
+        // Paper: for U < V, tiling U (psi1) moves ~V - U less data.
+        let (u, v, w, s): (f64, f64, f64, f64) = (100e6, 1000e6, 1e6, 40e6);
+        let psi1 = (u / s).ceil() * v + u;
+        let psi2 = (v / s).ceil() * u + v;
+        assert!(psi1 < psi2);
+        assert_eq!(gemm_traffic(u, v, w, s), psi1 + w);
+    }
+
+    #[test]
+    fn degenerate_streaming_layer() {
+        // U = V = 0 (elementwise / lookup): traffic = W.
+        assert_eq!(gemm_traffic(0.0, 0.0, 7e9, 40e6), 7e9);
+    }
+
+    #[test]
+    fn one_sided_operand() {
+        // U = 0, V > 0: V + W exactly once.
+        assert_eq!(gemm_traffic(0.0, 5e9, 1e9, 40e6), 6e9);
+    }
+
+    #[test]
+    fn bigger_buffer_never_more_traffic() {
+        let mut prev = f64::INFINITY;
+        for s in [1e6, 10e6, 40e6, 100e6, 1e9, 1e12] {
+            let t = gemm_traffic(300e6, 700e6, 50e6, s);
+            assert!(t <= prev + 1e-6, "S={s}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn lower_bound_is_touch_everything_once() {
+        for (u, v, w) in [(1e9, 2e9, 3e9), (5e3, 1e8, 0.0), (0.0, 0.0, 1.0)] {
+            assert!(gemm_traffic(u, v, w, 40e6) >= u + v + w);
+        }
+    }
+
+    #[test]
+    fn matches_paper_example_scale() {
+        // A100-ish: MLP GEMM at MP8, rows=2048: U = 105 MB, V = 655 MB.
+        let (u, v, w, s) = (104.9e6, 655.4e6, 419.4e6, 40e6);
+        let t = gemm_traffic(u, v, w, s);
+        // ceil(104.9/40) = 3 passes of V.
+        assert!((t - (3.0 * v + u + w)).abs() < 1.0);
+    }
+}

@@ -1,0 +1,344 @@
+//! Cluster-level configuration: node count, network topology, link latency.
+
+use super::node::NodeConfig;
+use crate::error::{Error, Result};
+
+/// Network topology of the cluster (paper Fig. 14's three shapes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Topology {
+    /// Two-level switch hierarchy: pods of `pod_size` nodes with high
+    /// intra-pod bandwidth, lower inter-pod bandwidth (DGX-style, Fig. 7).
+    /// Bandwidths are per node, per direction, bytes/s.
+    HierarchicalSwitch {
+        pod_size: usize,
+        bw_intra: f64,
+        bw_inter: f64,
+    },
+    /// One flat switch delivering `bw` bytes/s per node per direction
+    /// (the paper's Dojo model).
+    SingleSwitch { bw: f64 },
+    /// 3D torus with `links` bidirectional links per node of `link_bw`
+    /// bytes/s per direction each (the paper's TPU v4 model: 6 x 48 GB/s).
+    /// Collectives use multi-ring schedules across all links, so the
+    /// effective per-node collective bandwidth is `links x link_bw`.
+    Torus3D {
+        dims: [usize; 3],
+        links: usize,
+        link_bw: f64,
+    },
+}
+
+/// The analytical cost model reduces every topology to a two-level view:
+/// groups of `pod_size` peers communicating at `bw_intra`, pods talking to
+/// each other at `bw_inter`. Flat topologies set `pod_size = n_nodes`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TwoLevelView {
+    pub pod_size: usize,
+    pub bw_intra: f64,
+    pub bw_inter: f64,
+}
+
+impl Topology {
+    /// Reduce to the two-level view used by the collective cost model.
+    pub fn two_level(&self, n_nodes: usize) -> TwoLevelView {
+        match *self {
+            Topology::HierarchicalSwitch {
+                pod_size,
+                bw_intra,
+                bw_inter,
+            } => TwoLevelView {
+                pod_size,
+                bw_intra,
+                bw_inter,
+            },
+            Topology::SingleSwitch { bw } => TwoLevelView {
+                pod_size: n_nodes,
+                bw_intra: bw,
+                bw_inter: bw,
+            },
+            Topology::Torus3D { links, link_bw, .. } => {
+                let agg = links as f64 * link_bw;
+                TwoLevelView {
+                    pod_size: n_nodes,
+                    bw_intra: agg,
+                    bw_inter: agg,
+                }
+            }
+        }
+    }
+
+    /// Number of pods for a given cluster size.
+    pub fn n_pods(&self, n_nodes: usize) -> usize {
+        let view = self.two_level(n_nodes);
+        n_nodes.div_ceil(view.pod_size)
+    }
+}
+
+/// A complete cluster description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Name (e.g. "B1", "dgx-a100-1024").
+    pub name: String,
+    /// Per-node resources (homogeneous cluster, as in the paper).
+    pub node: NodeConfig,
+    /// Total node count.
+    pub n_nodes: usize,
+    /// Network topology.
+    pub topology: Topology,
+    /// Per-hop link latency, seconds (the alpha term of collectives).
+    pub link_latency: f64,
+}
+
+impl ClusterConfig {
+    /// Validate the whole configuration.
+    pub fn validate(&self) -> Result<()> {
+        self.node.validate()?;
+        if self.n_nodes == 0 {
+            return Err(Error::Config(format!("{}: n_nodes == 0", self.name)));
+        }
+        if !self.n_nodes.is_power_of_two() {
+            return Err(Error::Config(format!(
+                "{}: n_nodes {} must be a power of two for the (MP, DP) sweep",
+                self.name, self.n_nodes
+            )));
+        }
+        match self.topology {
+            Topology::HierarchicalSwitch {
+                pod_size,
+                bw_intra,
+                bw_inter,
+            } => {
+                if pod_size == 0 || self.n_nodes % pod_size != 0 {
+                    return Err(Error::Config(format!(
+                        "{}: pod_size {} must divide n_nodes {}",
+                        self.name, pod_size, self.n_nodes
+                    )));
+                }
+                if bw_intra <= 0.0 || bw_inter <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "{}: network bandwidths must be > 0",
+                        self.name
+                    )));
+                }
+            }
+            Topology::SingleSwitch { bw } => {
+                if bw <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "{}: switch bandwidth must be > 0",
+                        self.name
+                    )));
+                }
+            }
+            Topology::Torus3D {
+                dims,
+                links,
+                link_bw,
+            } => {
+                if dims.iter().product::<usize>() != self.n_nodes {
+                    return Err(Error::Config(format!(
+                        "{}: torus dims {:?} != n_nodes {}",
+                        self.name, dims, self.n_nodes
+                    )));
+                }
+                if links == 0 || link_bw <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "{}: torus links/bandwidth must be > 0",
+                        self.name
+                    )));
+                }
+            }
+        }
+        if self.link_latency < 0.0 {
+            return Err(Error::Config(format!(
+                "{}: negative link latency",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Two-level network view for the cost model.
+    pub fn two_level(&self) -> TwoLevelView {
+        self.topology.two_level(self.n_nodes)
+    }
+
+    /// Derived cluster with network bandwidths scaled (fig. 11's knob).
+    /// Only meaningful for hierarchical topologies.
+    pub fn scale_network(&self, intra_factor: f64, inter_factor: f64) -> Self {
+        let mut c = self.clone();
+        if let Topology::HierarchicalSwitch {
+            ref mut bw_intra,
+            ref mut bw_inter,
+            ..
+        } = c.topology
+        {
+            *bw_intra *= intra_factor;
+            *bw_inter *= inter_factor;
+        }
+        c.name = format!("{}~net{:.2}x{:.2}", c.name, intra_factor, inter_factor);
+        c
+    }
+
+    /// Derived cluster with a re-balanced intra/inter bandwidth split that
+    /// preserves the aggregate per-node bandwidth (fig. 12's knob).
+    /// `ratio` is bw_intra : bw_inter, e.g. 6.0 for the paper's 1:6
+    /// inter:intra optimum.
+    pub fn rebalance_network(&self, ratio: f64) -> Result<Self> {
+        let mut c = self.clone();
+        match c.topology {
+            Topology::HierarchicalSwitch {
+                ref mut bw_intra,
+                ref mut bw_inter,
+                ..
+            } => {
+                let total = *bw_intra + *bw_inter;
+                let inter = total / (1.0 + ratio);
+                *bw_inter = inter;
+                *bw_intra = total - inter;
+                c.name = format!("{}~ratio1:{:.1}", c.name, ratio);
+                Ok(c)
+            }
+            _ => Err(Error::Config(
+                "rebalance_network requires a hierarchical topology".into(),
+            )),
+        }
+    }
+
+    /// Derived cluster with a different node definition.
+    pub fn with_node(&self, node: NodeConfig) -> Self {
+        let mut c = self.clone();
+        c.node = node;
+        c
+    }
+
+    /// Derived cluster truncated to `n` nodes (fig. 13a's cluster-size
+    /// knob). Keeps topology parameters; `n` must be a power of two.
+    pub fn with_n_nodes(&self, n: usize) -> Self {
+        let mut c = self.clone();
+        c.n_nodes = n;
+        if let Topology::HierarchicalSwitch {
+            ref mut pod_size, ..
+        } = c.topology
+        {
+            // A truncated cluster cannot have pods larger than itself.
+            *pod_size = (*pod_size).min(n);
+        }
+        if let Topology::Torus3D { ref mut dims, .. } = c.topology {
+            // Keep a valid torus factorization for truncated clusters.
+            let side = (n as f64).cbrt().round() as usize;
+            if side * side * side == n {
+                *dims = [side, side, side];
+            } else {
+                let half = (n as f64 / 2.0).sqrt().round() as usize;
+                *dims = [2, half, n / (2 * half.max(1))];
+            }
+        }
+        c.name = format!("{}~n{}", c.name, n);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::units::*;
+
+    #[test]
+    fn baseline_is_valid() {
+        presets::dgx_a100_1024().validate().unwrap();
+    }
+
+    #[test]
+    fn two_level_of_hierarchical() {
+        let c = presets::dgx_a100_1024();
+        let v = c.two_level();
+        assert_eq!(v.pod_size, 8);
+        assert_eq!(v.bw_intra, gbps(300.0));
+        assert_eq!(v.bw_inter, gbps(31.25));
+        assert_eq!(c.topology.n_pods(c.n_nodes), 128);
+    }
+
+    #[test]
+    fn two_level_of_flat() {
+        let t = Topology::SingleSwitch { bw: tbps(1.0) };
+        let v = t.two_level(64);
+        assert_eq!(v.pod_size, 64);
+        assert_eq!(v.bw_intra, v.bw_inter);
+    }
+
+    #[test]
+    fn two_level_of_torus_aggregates_links() {
+        let t = Topology::Torus3D {
+            dims: [16, 16, 16],
+            links: 6,
+            link_bw: gbps(48.0),
+        };
+        let v = t.two_level(4096);
+        assert_eq!(v.bw_intra, gbps(288.0));
+        assert_eq!(v.pod_size, 4096);
+    }
+
+    #[test]
+    fn pod_size_must_divide() {
+        let mut c = presets::dgx_a100_1024();
+        if let Topology::HierarchicalSwitch {
+            ref mut pod_size, ..
+        } = c.topology
+        {
+            *pod_size = 7;
+        }
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn non_pow2_rejected() {
+        let mut c = presets::dgx_a100_1024();
+        c.n_nodes = 1000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn torus_dims_must_match() {
+        let mut c = presets::tpu_v4_4096();
+        c.n_nodes = 2048;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scale_network_scales_both() {
+        let c = presets::dgx_a100_1024().scale_network(2.0, 0.5);
+        let v = c.two_level();
+        assert_eq!(v.bw_intra, gbps(600.0));
+        assert_eq!(v.bw_inter, gbps(15.625));
+    }
+
+    #[test]
+    fn rebalance_preserves_aggregate() {
+        let base = presets::dgx_a100_1024();
+        let b0 = base.two_level();
+        let total = b0.bw_intra + b0.bw_inter;
+        for ratio in [1.0, 3.0, 6.0, 9.6, 24.0] {
+            let c = base.rebalance_network(ratio).unwrap();
+            let v = c.two_level();
+            assert!((v.bw_intra + v.bw_inter - total).abs() < 1.0);
+            assert!((v.bw_intra / v.bw_inter - ratio).abs() / ratio < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rebalance_fig12_values() {
+        // Paper: 1:6 ratio on 331.25 GB/s aggregate => ~284 intra, ~47.3 inter.
+        let c = presets::dgx_a100_1024().rebalance_network(6.0).unwrap();
+        let v = c.two_level();
+        assert!((v.bw_intra - gbps(283.93)).abs() < gbps(0.1));
+        assert!((v.bw_inter - gbps(47.32)).abs() < gbps(0.1));
+    }
+
+    #[test]
+    fn with_n_nodes_keeps_torus_valid() {
+        let c = presets::tpu_v4_4096().with_n_nodes(512);
+        c.validate().unwrap();
+        assert_eq!(c.n_nodes, 512);
+    }
+}

@@ -1,0 +1,13 @@
+//! Cluster configuration system: per-node resources, network topology,
+//! preset clusters from the paper's Tables I and III, and JSON I/O.
+//!
+//! Every quantity is SI (FLOP/s, bytes, bytes/s, seconds); use
+//! [`crate::util::units`] constructors when building configs by hand.
+
+mod cluster;
+mod node;
+pub mod presets;
+mod serde_io;
+
+pub use cluster::{ClusterConfig, Topology, TwoLevelView};
+pub use node::{MemoryConfig, NodeConfig};

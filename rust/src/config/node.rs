@@ -1,0 +1,158 @@
+//! Per-node (compute unit) configuration: peak compute, on-chip buffer,
+//! local memory, and optional expanded memory (paper Fig. 1 knobs).
+
+use crate::error::{Error, Result};
+
+/// A memory level: capacity + bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryConfig {
+    /// Capacity in bytes.
+    pub capacity: f64,
+    /// Bandwidth in bytes/s.
+    pub bandwidth: f64,
+}
+
+impl MemoryConfig {
+    /// A memory level.
+    pub fn new(capacity: f64, bandwidth: f64) -> Self {
+        MemoryConfig {
+            capacity,
+            bandwidth,
+        }
+    }
+
+    /// The "absent" expanded memory.
+    pub fn none() -> Self {
+        MemoryConfig {
+            capacity: 0.0,
+            bandwidth: 0.0,
+        }
+    }
+
+    /// Whether this level exists.
+    pub fn present(&self) -> bool {
+        self.capacity > 0.0 && self.bandwidth > 0.0
+    }
+}
+
+/// One compute node ("node" = one GPU / TPU / tray, per the paper's
+/// terminology footnote).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeConfig {
+    /// Human-readable name (e.g. "A100").
+    pub name: String,
+    /// Peak compute performance, FLOP/s (fp16/bf16 tensor peak).
+    pub perf_peak: f64,
+    /// On-chip buffer (SRAM) size in bytes — the `S` of the tiling
+    /// traffic model (paper SIII-C2).
+    pub sram: f64,
+    /// Local memory (HBM).
+    pub local: MemoryConfig,
+    /// Expanded memory (host/CXL-attached); `MemoryConfig::none()` if absent.
+    pub expanded: MemoryConfig,
+}
+
+impl NodeConfig {
+    /// Validate physical sanity.
+    pub fn validate(&self) -> Result<()> {
+        if self.perf_peak <= 0.0 {
+            return Err(Error::Config(format!(
+                "{}: perf_peak must be > 0",
+                self.name
+            )));
+        }
+        if self.sram <= 0.0 {
+            return Err(Error::Config(format!("{}: sram must be > 0", self.name)));
+        }
+        if !self.local.present() {
+            return Err(Error::Config(format!(
+                "{}: local memory must have capacity and bandwidth",
+                self.name
+            )));
+        }
+        if self.expanded.capacity > 0.0 && self.expanded.bandwidth <= 0.0 {
+            return Err(Error::Config(format!(
+                "{}: expanded memory has capacity but no bandwidth",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Total memory capacity across local + expanded, bytes.
+    pub fn total_capacity(&self) -> f64 {
+        self.local.capacity + self.expanded.capacity
+    }
+
+    /// Scale peak compute by `factor` (fig. 10's compute-capability knob).
+    pub fn scale_compute(&self, factor: f64) -> NodeConfig {
+        let mut n = self.clone();
+        n.perf_peak *= factor;
+        n.name = format!("{}x{:.2}", n.name, factor);
+        n
+    }
+
+    /// Replace the expanded memory (fig. 9/13b's memory-expansion knob).
+    pub fn with_expanded(&self, capacity: f64, bandwidth: f64) -> NodeConfig {
+        let mut n = self.clone();
+        n.expanded = MemoryConfig::new(capacity, bandwidth);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::*;
+
+    fn a100() -> NodeConfig {
+        NodeConfig {
+            name: "A100".into(),
+            perf_peak: tflops(624.0),
+            sram: mb(40.0),
+            local: MemoryConfig::new(gb(80.0), gbps(2039.0)),
+            expanded: MemoryConfig::none(),
+        }
+    }
+
+    #[test]
+    fn valid_node_passes() {
+        assert!(a100().validate().is_ok());
+    }
+
+    #[test]
+    fn zero_compute_fails() {
+        let mut n = a100();
+        n.perf_peak = 0.0;
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn expanded_without_bandwidth_fails() {
+        let mut n = a100();
+        n.expanded = MemoryConfig {
+            capacity: gb(480.0),
+            bandwidth: 0.0,
+        };
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn total_capacity_sums_levels() {
+        let n = a100().with_expanded(gb(480.0), gbps(500.0));
+        assert_eq!(n.total_capacity(), gb(560.0));
+    }
+
+    #[test]
+    fn scale_compute_scales_only_perf() {
+        let n = a100().scale_compute(2.0);
+        assert_eq!(n.perf_peak, tflops(1248.0));
+        assert_eq!(n.local, a100().local);
+    }
+
+    #[test]
+    fn memory_none_is_absent() {
+        assert!(!MemoryConfig::none().present());
+        assert!(MemoryConfig::new(gb(1.0), gbps(1.0)).present());
+    }
+}

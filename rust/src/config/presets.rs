@@ -1,0 +1,282 @@
+//! Preset clusters: the paper's Table I baseline and Table III variants.
+
+use super::cluster::{ClusterConfig, Topology};
+use super::node::{MemoryConfig, NodeConfig};
+use crate::util::units::*;
+
+/// Default per-hop link latency (the paper leaves alpha unspecified; 1 us is
+/// a typical switched-fabric value and is a CLI-overridable knob).
+pub const DEFAULT_LINK_LATENCY: f64 = 1e-6;
+
+/// Table I baseline: 1024 NVIDIA A100 GPUs in 128 8-GPU DGX pods,
+/// NVLink Gen-3 intra-pod (300 GB/s/dir), InfiniBand inter-pod
+/// (31.25 GB/s/dir), logical-ring collectives.
+pub fn dgx_a100_1024() -> ClusterConfig {
+    ClusterConfig {
+        name: "dgx-a100-1024".into(),
+        node: NodeConfig {
+            name: "A100".into(),
+            perf_peak: tflops(624.0),
+            sram: mb(40.0),
+            local: MemoryConfig::new(gb(80.0), gbps(2039.0)),
+            expanded: MemoryConfig::none(),
+        },
+        n_nodes: 1024,
+        topology: Topology::HierarchicalSwitch {
+            pod_size: 8,
+            bw_intra: gbps(300.0),
+            bw_inter: gbps(31.25),
+        },
+        link_latency: DEFAULT_LINK_LATENCY,
+    }
+}
+
+/// DLRM study baseline (SV-C): 64 GPUs = 8 pods of the Table I cluster.
+pub fn dgx_a100_64() -> ClusterConfig {
+    let mut c = dgx_a100_1024();
+    c.name = "dgx-a100-64".into();
+    c.n_nodes = 64;
+    c
+}
+
+// ---- Table III: eleven cluster variants -----------------------------------
+
+fn v100_node() -> NodeConfig {
+    NodeConfig {
+        name: "V100".into(),
+        perf_peak: tflops(125.0),
+        sram: mb(40.0),
+        // The paper models 80 GB (not the real 32 GB) to align memory
+        // options across clusters A/B/C — see Table III footnote.
+        local: MemoryConfig::new(gb(80.0), gbps(900.0)),
+        expanded: MemoryConfig::none(),
+    }
+}
+
+fn a100_node() -> NodeConfig {
+    NodeConfig {
+        name: "A100".into(),
+        perf_peak: tflops(625.0),
+        sram: mb(40.0),
+        local: MemoryConfig::new(gb(80.0), gbps(2039.0)),
+        expanded: MemoryConfig::none(),
+    }
+}
+
+fn h100_node() -> NodeConfig {
+    NodeConfig {
+        name: "H100".into(),
+        perf_peak: tflops(1979.0),
+        sram: mb(40.0),
+        local: MemoryConfig::new(gb(80.0), gbps(3350.0)),
+        expanded: MemoryConfig::none(),
+    }
+}
+
+/// Memory system variants 0/1/2 of Table III.
+fn with_memory_system(node: NodeConfig, system: usize) -> NodeConfig {
+    match system {
+        0 => node,
+        1 => node.with_expanded(gb(480.0), gbps(500.0)),
+        2 => node.with_expanded(gb(201.0), gbps(1000.0)),
+        _ => panic!("memory system {system} not in Table III"),
+    }
+}
+
+fn gpu_cluster(
+    name: &str,
+    node: NodeConfig,
+    bw_intra: f64,
+    bw_inter: f64,
+) -> ClusterConfig {
+    ClusterConfig {
+        name: name.into(),
+        node,
+        n_nodes: 1024,
+        // Table III: "All GPU cluster variants are organized in 16-GPU pods".
+        topology: Topology::HierarchicalSwitch {
+            pod_size: 16,
+            bw_intra,
+            bw_inter,
+        },
+        link_latency: DEFAULT_LINK_LATENCY,
+    }
+}
+
+/// Table III cluster `A{mem}` / `B{mem}` / `C{mem}`; `mem` in 0..=2.
+pub fn table3_gpu(base: char, mem: usize) -> ClusterConfig {
+    let (node, bw_intra, bw_inter) = match base {
+        'A' => (v100_node(), gbps(150.0), gbps(6.25)),
+        'B' => (a100_node(), gbps(300.0), gbps(31.25)),
+        'C' => (h100_node(), gbps(450.0), gbps(62.5)),
+        _ => panic!("cluster base {base} not in Table III"),
+    };
+    gpu_cluster(
+        &format!("{base}{mem}"),
+        with_memory_system(node, mem),
+        bw_intra,
+        bw_inter,
+    )
+}
+
+/// Table III TPU v4 cluster: 4096 chips, 3D torus, 6 x 48 GB/s links.
+pub fn tpu_v4_4096() -> ClusterConfig {
+    ClusterConfig {
+        name: "TPUv4".into(),
+        node: NodeConfig {
+            name: "TPUv4".into(),
+            perf_peak: tflops(275.0),
+            sram: mb(32.0),
+            local: MemoryConfig::new(gb(32.0), gbps(1200.0)),
+            expanded: MemoryConfig::new(gb(39.0), gbps(1200.0)),
+        },
+        n_nodes: 4096,
+        topology: Topology::Torus3D {
+            dims: [16, 16, 16],
+            links: 6,
+            link_bw: gbps(48.0),
+        },
+        link_latency: DEFAULT_LINK_LATENCY,
+    }
+}
+
+/// Table III Dojo cluster: 64 trays behind one logical switch,
+/// 20 x 50 GB/s = 1 TB/s per node per direction.
+pub fn dojo_64() -> ClusterConfig {
+    ClusterConfig {
+        name: "Dojo".into(),
+        node: NodeConfig {
+            name: "DojoTray".into(),
+            perf_peak: tflops(54_300.0),
+            sram: gb(66.0),
+            local: MemoryConfig::new(gb(640.0), tbps(16.0)),
+            expanded: MemoryConfig::none(),
+        },
+        n_nodes: 64,
+        topology: Topology::SingleSwitch { bw: tbps(1.0) },
+        link_latency: DEFAULT_LINK_LATENCY,
+    }
+}
+
+/// All eleven Table III clusters in the paper's Fig. 15 order.
+pub fn table3_all() -> Vec<ClusterConfig> {
+    let mut v = Vec::new();
+    for base in ['A', 'B', 'C'] {
+        for mem in 0..=2 {
+            v.push(table3_gpu(base, mem));
+        }
+    }
+    v.push(tpu_v4_4096());
+    v.push(dojo_64());
+    v
+}
+
+/// Look up any preset by name (CLI surface).
+pub fn by_name(name: &str) -> Option<ClusterConfig> {
+    match name {
+        "baseline" | "dgx-a100-1024" => Some(dgx_a100_1024()),
+        "dgx-a100-64" => Some(dgx_a100_64()),
+        "TPUv4" | "tpuv4" => Some(tpu_v4_4096()),
+        "Dojo" | "dojo" => Some(dojo_64()),
+        _ => {
+            let mut ch = name.chars();
+            let base = ch.next()?;
+            let mem = ch.next()?.to_digit(10)? as usize;
+            if ch.next().is_none()
+                && matches!(base, 'A' | 'B' | 'C')
+                && mem <= 2
+            {
+                Some(table3_gpu(base, mem))
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Names accepted by [`by_name`].
+pub fn preset_names() -> Vec<&'static str> {
+    vec![
+        "baseline",
+        "dgx-a100-64",
+        "A0",
+        "A1",
+        "A2",
+        "B0",
+        "B1",
+        "B2",
+        "C0",
+        "C1",
+        "C2",
+        "TPUv4",
+        "Dojo",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        for c in table3_all() {
+            c.validate().unwrap_or_else(|e| panic!("{}: {e}", c.name));
+        }
+        dgx_a100_1024().validate().unwrap();
+        dgx_a100_64().validate().unwrap();
+    }
+
+    #[test]
+    fn table3_has_eleven() {
+        assert_eq!(table3_all().len(), 11);
+    }
+
+    #[test]
+    fn table1_baseline_values() {
+        let c = dgx_a100_1024();
+        assert_eq!(c.node.perf_peak, 624e12);
+        assert_eq!(c.node.local.capacity, 80e9);
+        assert_eq!(c.node.local.bandwidth, 2039e9);
+        assert_eq!(c.node.sram, 40e6);
+        assert_eq!(c.n_nodes, 1024);
+    }
+
+    #[test]
+    fn table3_memory_systems() {
+        assert!(!table3_gpu('B', 0).node.expanded.present());
+        let b1 = table3_gpu('B', 1);
+        assert_eq!(b1.node.expanded.capacity, 480e9);
+        assert_eq!(b1.node.expanded.bandwidth, 500e9);
+        let b2 = table3_gpu('B', 2);
+        assert_eq!(b2.node.expanded.capacity, 201e9);
+        assert_eq!(b2.node.expanded.bandwidth, 1000e9);
+    }
+
+    #[test]
+    fn table3_network_tiers() {
+        let a = table3_gpu('A', 0).two_level();
+        let c = table3_gpu('C', 0).two_level();
+        assert_eq!(a.bw_intra, 150e9);
+        assert_eq!(a.bw_inter, 6.25e9);
+        assert_eq!(c.bw_intra, 450e9);
+        assert_eq!(c.bw_inter, 62.5e9);
+        assert_eq!(a.pod_size, 16);
+    }
+
+    #[test]
+    fn dojo_and_tpu_scale() {
+        assert_eq!(dojo_64().node.perf_peak, 54.3e15);
+        assert_eq!(tpu_v4_4096().n_nodes, 4096);
+        assert_eq!(tpu_v4_4096().two_level().bw_intra, 288e9);
+    }
+
+    #[test]
+    fn by_name_resolves_everything() {
+        for n in preset_names() {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("Z9").is_none());
+        assert!(by_name("A3").is_none());
+        assert!(by_name("A12").is_none());
+    }
+}

@@ -1,0 +1,231 @@
+//! JSON (de)serialization of cluster configs — lets users describe their own
+//! clusters in files and load them via `comet --cluster-file my.json`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::cluster::{ClusterConfig, Topology};
+use super::node::{MemoryConfig, NodeConfig};
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+impl ClusterConfig {
+    /// Serialize to a JSON value.
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Value::Str(self.name.clone()));
+        o.insert("n_nodes".into(), Value::Num(self.n_nodes as f64));
+        o.insert("link_latency".into(), Value::Num(self.link_latency));
+        o.insert("node".into(), node_to_json(&self.node));
+        o.insert("topology".into(), topo_to_json(&self.topology));
+        Value::Obj(o)
+    }
+
+    /// Parse from a JSON value.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let name = req_str(v, "name")?;
+        let n_nodes = req_num(v, "n_nodes")? as usize;
+        let link_latency = req_num(v, "link_latency")?;
+        let node = node_from_json(
+            v.get("node")
+                .ok_or_else(|| Error::Json("missing 'node'".into()))?,
+        )?;
+        let topology = topo_from_json(
+            v.get("topology")
+                .ok_or_else(|| Error::Json("missing 'topology'".into()))?,
+        )?;
+        let c = ClusterConfig {
+            name,
+            node,
+            n_nodes,
+            topology,
+            link_latency,
+        };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    /// Save to a file (pretty-printed).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+        Ok(())
+    }
+}
+
+fn node_to_json(n: &NodeConfig) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Value::Str(n.name.clone()));
+    o.insert("perf_peak".into(), Value::Num(n.perf_peak));
+    o.insert("sram".into(), Value::Num(n.sram));
+    o.insert("local_capacity".into(), Value::Num(n.local.capacity));
+    o.insert("local_bandwidth".into(), Value::Num(n.local.bandwidth));
+    o.insert("expanded_capacity".into(), Value::Num(n.expanded.capacity));
+    o.insert(
+        "expanded_bandwidth".into(),
+        Value::Num(n.expanded.bandwidth),
+    );
+    Value::Obj(o)
+}
+
+fn node_from_json(v: &Value) -> Result<NodeConfig> {
+    Ok(NodeConfig {
+        name: req_str(v, "name")?,
+        perf_peak: req_num(v, "perf_peak")?,
+        sram: req_num(v, "sram")?,
+        local: MemoryConfig::new(
+            req_num(v, "local_capacity")?,
+            req_num(v, "local_bandwidth")?,
+        ),
+        expanded: MemoryConfig::new(
+            opt_num(v, "expanded_capacity"),
+            opt_num(v, "expanded_bandwidth"),
+        ),
+    })
+}
+
+fn topo_to_json(t: &Topology) -> Value {
+    let mut o = BTreeMap::new();
+    match *t {
+        Topology::HierarchicalSwitch {
+            pod_size,
+            bw_intra,
+            bw_inter,
+        } => {
+            o.insert("kind".into(), Value::Str("hierarchical".into()));
+            o.insert("pod_size".into(), Value::Num(pod_size as f64));
+            o.insert("bw_intra".into(), Value::Num(bw_intra));
+            o.insert("bw_inter".into(), Value::Num(bw_inter));
+        }
+        Topology::SingleSwitch { bw } => {
+            o.insert("kind".into(), Value::Str("single_switch".into()));
+            o.insert("bw".into(), Value::Num(bw));
+        }
+        Topology::Torus3D {
+            dims,
+            links,
+            link_bw,
+        } => {
+            o.insert("kind".into(), Value::Str("torus3d".into()));
+            o.insert(
+                "dims".into(),
+                Value::Arr(dims.iter().map(|d| Value::Num(*d as f64)).collect()),
+            );
+            o.insert("links".into(), Value::Num(links as f64));
+            o.insert("link_bw".into(), Value::Num(link_bw));
+        }
+    }
+    Value::Obj(o)
+}
+
+fn topo_from_json(v: &Value) -> Result<Topology> {
+    match req_str(v, "kind")?.as_str() {
+        "hierarchical" => Ok(Topology::HierarchicalSwitch {
+            pod_size: req_num(v, "pod_size")? as usize,
+            bw_intra: req_num(v, "bw_intra")?,
+            bw_inter: req_num(v, "bw_inter")?,
+        }),
+        "single_switch" => Ok(Topology::SingleSwitch {
+            bw: req_num(v, "bw")?,
+        }),
+        "torus3d" => {
+            let dims_v = v
+                .get("dims")
+                .and_then(|d| d.as_arr())
+                .ok_or_else(|| Error::Json("missing 'dims'".into()))?;
+            if dims_v.len() != 3 {
+                return Err(Error::Json("'dims' must have 3 entries".into()));
+            }
+            let mut dims = [0usize; 3];
+            for (i, d) in dims_v.iter().enumerate() {
+                dims[i] = d
+                    .as_usize()
+                    .ok_or_else(|| Error::Json("bad dim".into()))?;
+            }
+            Ok(Topology::Torus3D {
+                dims,
+                links: req_num(v, "links")? as usize,
+                link_bw: req_num(v, "link_bw")?,
+            })
+        }
+        k => Err(Error::Json(format!("unknown topology kind '{k}'"))),
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| Error::Json(format!("missing string '{key}'")))
+}
+
+fn req_num(v: &Value, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| Error::Json(format!("missing number '{key}'")))
+}
+
+fn opt_num(v: &Value, key: &str) -> f64 {
+    v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn roundtrip_all_presets() {
+        for c in presets::table3_all() {
+            let j = c.to_json();
+            let back = ClusterConfig::from_json(&j).unwrap();
+            assert_eq!(c, back, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let dir = std::env::temp_dir().join("comet_serde_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cluster.json");
+        let c = presets::dgx_a100_1024();
+        c.save(&path).unwrap();
+        let back = ClusterConfig::load(&path).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn invalid_config_rejected_on_parse() {
+        let c = presets::dgx_a100_1024();
+        let mut j = c.to_json();
+        if let Value::Obj(ref mut o) = j {
+            o.insert("n_nodes".into(), Value::Num(1000.0)); // not pow2
+        }
+        assert!(ClusterConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn missing_field_is_json_error() {
+        let v = json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(matches!(
+            ClusterConfig::from_json(&v),
+            Err(Error::Json(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_topology_kind_rejected() {
+        let v = json::parse(
+            r#"{"kind": "hypercube"}"#,
+        )
+        .unwrap();
+        assert!(topo_from_json(&v).is_err());
+    }
+}

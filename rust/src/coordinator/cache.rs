@@ -1,0 +1,179 @@
+//! Evaluation cache: memoizes cost-model results by input fingerprint.
+//! DSE sweeps revisit identical configurations constantly (normalization
+//! baselines, shared sweep corners), so this is a real throughput lever.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::analytical::TrainingBreakdown;
+use crate::model::inputs::ModelInputs;
+
+/// Thread-safe memoization table.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    map: Mutex<HashMap<u64, TrainingBreakdown>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvalCache {
+    /// Empty cache.
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// Look up a previously evaluated configuration.
+    pub fn get(&self, inputs: &ModelInputs) -> Option<TrainingBreakdown> {
+        let key = fingerprint(inputs);
+        let hit = self.map.lock().unwrap().get(&key).copied();
+        match hit {
+            Some(b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(b)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a result.
+    pub fn put(&self, inputs: &ModelInputs, b: TrainingBreakdown) {
+        self.map.lock().unwrap().insert(fingerprint(inputs), b);
+    }
+
+    /// (hits, misses) counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Entries stored.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// FNV-1a over the full numeric content of the inputs. Collisions across
+/// *different* configurations are astronomically unlikely (64-bit) and
+/// would only perturb a figure, not corrupt state.
+fn fingerprint(inputs: &ModelInputs) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |x: f64| {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    let p = &inputs.params;
+    for v in [
+        p.perf_peak,
+        p.bw_lm,
+        p.bw_em,
+        p.cap_lm,
+        p.sram,
+        p.footprint,
+        p.bw_intra,
+        p.bw_inter,
+        p.link_latency,
+        if p.overlap_wg { 1.0 } else { 0.0 },
+        p.em_frac_override.unwrap_or(-1.0),
+        p.collective_impl.code(),
+    ] {
+        eat(v);
+    }
+    for l in &inputs.layers {
+        eat(l.repeat);
+        for q in &l.q {
+            eat(q.flops);
+            eat(q.u);
+            eat(q.v);
+            eat(q.w);
+        }
+        for c in &l.comm {
+            eat(c.collective.code());
+            eat(c.bytes);
+            eat(c.n_intra as f64);
+            eat(c.n_inter as f64);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::inputs::{derive_inputs, EvalOptions};
+    use crate::parallel::Strategy;
+    use crate::workload::transformer::Transformer;
+
+    fn inputs(mp: usize, dp: usize) -> ModelInputs {
+        derive_inputs(
+            &Transformer::t1().build(&Strategy::new(mp, dp)).unwrap(),
+            &presets::dgx_a100_1024(),
+            &EvalOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let cache = EvalCache::new();
+        let inp = inputs(8, 128);
+        assert!(cache.get(&inp).is_none());
+        let b = TrainingBreakdown {
+            fp_compute: 1.0,
+            ..Default::default()
+        };
+        cache.put(&inp, b);
+        assert_eq!(cache.get(&inp), Some(b));
+        assert_eq!(cache.stats(), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn different_configs_different_keys() {
+        assert_ne!(
+            super::fingerprint(&inputs(8, 128)),
+            super::fingerprint(&inputs(16, 64))
+        );
+    }
+
+    #[test]
+    fn identical_configs_same_key() {
+        assert_eq!(
+            super::fingerprint(&inputs(8, 128)),
+            super::fingerprint(&inputs(8, 128))
+        );
+    }
+
+    #[test]
+    fn option_fields_affect_key() {
+        let a = derive_inputs(
+            &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+            &presets::dgx_a100_1024(),
+            &EvalOptions::default(),
+        )
+        .unwrap();
+        let b = derive_inputs(
+            &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+            &presets::dgx_a100_1024(),
+            &EvalOptions {
+                ignore_capacity: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_ne!(super::fingerprint(&a), super::fingerprint(&b));
+    }
+}

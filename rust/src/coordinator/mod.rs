@@ -1,0 +1,246 @@
+//! The L3 design-space-exploration coordinator: backend selection (native
+//! f64 / DES / AOT artifact via PJRT), a multi-threaded job scheduler, and
+//! a result cache. This is COMET's "leader" — the CLI, the examples, and
+//! the benches all drive sweeps through it.
+
+mod cache;
+mod scheduler;
+pub mod sweep;
+
+pub use cache::EvalCache;
+pub use scheduler::Scheduler;
+
+use crate::analytical::{evaluate as native_evaluate, TrainingBreakdown};
+use crate::config::ClusterConfig;
+use crate::error::Result;
+use crate::model::inputs::{derive_inputs, EvalOptions, ModelInputs};
+use crate::runtime::{BatchEvaluator, Runtime};
+use crate::sim::simulate;
+use crate::workload::Workload;
+
+/// Which cost-model backend evaluates configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Closed-form f64 evaluation in-process (fast reference).
+    Native,
+    /// Discrete-event simulation (captures link contention).
+    Des,
+    /// The AOT-compiled artifact through PJRT (the L1/L2 layers on the
+    /// request path — COMET's production configuration).
+    Artifact,
+}
+
+/// The evaluation coordinator.
+pub struct Coordinator {
+    backend: Backend,
+    runtime: Option<Runtime>,
+    cache: EvalCache,
+    /// Worker threads for native/DES fan-out.
+    pub threads: usize,
+}
+
+impl std::fmt::Debug for Coordinator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Coordinator")
+            .field("backend", &self.backend)
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+impl Coordinator {
+    /// Native closed-form backend.
+    pub fn native() -> Coordinator {
+        Coordinator {
+            backend: Backend::Native,
+            runtime: None,
+            cache: EvalCache::new(),
+            threads: default_threads(),
+        }
+    }
+
+    /// Discrete-event backend.
+    pub fn des() -> Coordinator {
+        Coordinator {
+            backend: Backend::Des,
+            runtime: None,
+            cache: EvalCache::new(),
+            threads: default_threads(),
+        }
+    }
+
+    /// AOT-artifact backend (loads + compiles `artifacts/`).
+    pub fn artifact() -> Result<Coordinator> {
+        Ok(Coordinator {
+            backend: Backend::Artifact,
+            runtime: Some(Runtime::load_default()?),
+            cache: EvalCache::new(),
+            threads: default_threads(),
+        })
+    }
+
+    /// Artifact if available, else native (with a stderr note).
+    pub fn auto() -> Coordinator {
+        match Self::artifact() {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("comet: artifact backend unavailable ({e}); using native");
+                Self::native()
+            }
+        }
+    }
+
+    /// Active backend.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Evaluate one (workload, cluster) configuration.
+    pub fn evaluate(
+        &self,
+        workload: &Workload,
+        cluster: &ClusterConfig,
+    ) -> Result<TrainingBreakdown> {
+        self.evaluate_opts(workload, cluster, &EvalOptions::default())
+    }
+
+    /// Evaluate with explicit options.
+    pub fn evaluate_opts(
+        &self,
+        workload: &Workload,
+        cluster: &ClusterConfig,
+        opts: &EvalOptions,
+    ) -> Result<TrainingBreakdown> {
+        let inputs = derive_inputs(workload, cluster, opts)?;
+        Ok(self.evaluate_inputs(std::slice::from_ref(&inputs))?.remove(0))
+    }
+
+    /// Evaluate a batch of derived inputs (the sweep hot path).
+    ///
+    /// Results are cached by input fingerprint; cache hits skip the
+    /// backend entirely.
+    pub fn evaluate_inputs(
+        &self,
+        inputs: &[ModelInputs],
+    ) -> Result<Vec<TrainingBreakdown>> {
+        // Partition into hits and misses.
+        let mut results: Vec<Option<TrainingBreakdown>> =
+            inputs.iter().map(|i| self.cache.get(i)).collect();
+        let miss_idx: Vec<usize> = results
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.is_none().then_some(i))
+            .collect();
+        if !miss_idx.is_empty() {
+            let miss_inputs: Vec<&ModelInputs> =
+                miss_idx.iter().map(|&i| &inputs[i]).collect();
+            let computed = match self.backend {
+                Backend::Artifact => {
+                    let rt = self.runtime.as_ref().expect("artifact runtime");
+                    let owned: Vec<ModelInputs> =
+                        miss_inputs.iter().map(|i| (*i).clone()).collect();
+                    BatchEvaluator::new(rt).evaluate(&owned)?
+                }
+                Backend::Native => Scheduler::new(self.threads)
+                    .map(&miss_inputs, |inp| native_evaluate(inp)),
+                Backend::Des => Scheduler::new(self.threads)
+                    .map(&miss_inputs, |inp| simulate(inp).breakdown),
+            };
+            for (&i, b) in miss_idx.iter().zip(computed) {
+                self.cache.put(&inputs[i], b);
+                results[i] = Some(b);
+            }
+        }
+        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+    }
+
+    /// Cache statistics (hits, misses).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::parallel::Strategy;
+    use crate::util::stats::rel_diff;
+    use crate::workload::transformer::Transformer;
+
+    fn job() -> (Workload, ClusterConfig) {
+        (
+            Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+            presets::dgx_a100_1024(),
+        )
+    }
+
+    #[test]
+    fn native_coordinator_evaluates() {
+        let (w, c) = job();
+        let b = Coordinator::native().evaluate(&w, &c).unwrap();
+        assert!(b.total() > 0.0);
+    }
+
+    #[test]
+    fn des_and_native_agree() {
+        let (w, c) = job();
+        let n = Coordinator::native().evaluate(&w, &c).unwrap();
+        let d = Coordinator::des().evaluate(&w, &c).unwrap();
+        assert!(rel_diff(n.total(), d.total()) < 0.05);
+    }
+
+    #[test]
+    fn cache_hits_on_second_eval() {
+        let (w, c) = job();
+        let coord = Coordinator::native();
+        coord.evaluate(&w, &c).unwrap();
+        coord.evaluate(&w, &c).unwrap();
+        let (hits, misses) = coord.cache_stats();
+        assert_eq!(hits, 1);
+        assert_eq!(misses, 1);
+    }
+
+    #[test]
+    fn batch_order_preserved() {
+        let c = presets::dgx_a100_1024();
+        let coord = Coordinator::native();
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        let inputs: Vec<_> = Strategy::sweep_bounded(1024, 1, 128)
+            .iter()
+            .map(|s| {
+                derive_inputs(
+                    &Transformer::t1().build(s).unwrap(),
+                    &c,
+                    &opts,
+                )
+                .unwrap()
+            })
+            .collect();
+        let batch = coord.evaluate_inputs(&inputs).unwrap();
+        for (inp, got) in inputs.iter().zip(&batch) {
+            let want = native_evaluate(inp);
+            assert!(rel_diff(want.total(), got.total()) < 1e-12, "{}", inp.name);
+        }
+    }
+
+    #[test]
+    fn artifact_backend_matches_native_when_available() {
+        let Ok(coord) = Coordinator::artifact() else {
+            return;
+        };
+        let (w, c) = job();
+        let a = coord.evaluate(&w, &c).unwrap();
+        let n = Coordinator::native().evaluate(&w, &c).unwrap();
+        assert!(rel_diff(a.total(), n.total()) < 1e-4);
+    }
+}

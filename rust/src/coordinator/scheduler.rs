@@ -1,0 +1,116 @@
+//! Work-stealing-free but effective fan-out scheduler over std threads
+//! (the offline crate set has no rayon/tokio): static round-robin
+//! partitioning of independent evaluation jobs. DSE jobs are uniform
+//! enough that static partitioning is within noise of work stealing.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Thread-pool-style mapper for CPU-bound evaluation jobs.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduler {
+    threads: usize,
+}
+
+impl Scheduler {
+    /// A scheduler with `threads` workers (>= 1).
+    pub fn new(threads: usize) -> Scheduler {
+        Scheduler {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Map `f` over `jobs`, preserving order. `f` runs concurrently on up
+    /// to `threads` workers via an atomic work index (dynamic load
+    /// balancing at item granularity).
+    pub fn map<T: Sync, R: Send>(
+        &self,
+        jobs: &[T],
+        f: impl Fn(&T) -> R + Sync,
+    ) -> Vec<R> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers == 1 {
+            return jobs.iter().map(f).collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let results: std::sync::Mutex<Vec<Option<R>>> =
+            std::sync::Mutex::new((0..n).map(|_| None).collect());
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let next = &next;
+                let f = &f;
+                let results = &results;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&jobs[i]);
+                    results.lock().unwrap()[i] = Some(r);
+                });
+            }
+        });
+        results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("slot filled"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let jobs: Vec<u64> = (0..1000).collect();
+        let out = Scheduler::new(8).map(&jobs, |x| x * 2);
+        assert_eq!(out, jobs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let jobs = vec![1, 2, 3];
+        assert_eq!(Scheduler::new(1).map(&jobs, |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let jobs: Vec<u32> = vec![];
+        assert!(Scheduler::new(4).map(&jobs, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_jobs() {
+        let jobs = vec![7];
+        assert_eq!(Scheduler::new(64).map(&jobs, |x| x * x), vec![49]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // All workers must participate for a slow job set.
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let ids = Mutex::new(HashSet::new());
+        let jobs: Vec<u32> = (0..64).collect();
+        Scheduler::new(4).map(&jobs, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        assert!(ids.lock().unwrap().len() > 1);
+    }
+
+    #[test]
+    fn non_copy_results() {
+        let jobs = vec!["a", "bb", "ccc"];
+        let out = Scheduler::new(2).map(&jobs, |s| s.to_string());
+        assert_eq!(out, vec!["a", "bb", "ccc"]);
+    }
+}

@@ -1,0 +1,745 @@
+//! Figure/table drivers: one function per artifact of the paper's
+//! evaluation section (SIV-B Fig. 6, SV-B Figs. 8-12, SV-C Fig. 13,
+//! SV-D Fig. 15). Each returns a [`FigureData`] that the CLI renders and
+//! `rust/benches/` regenerate; EXPERIMENTS.md records paper-vs-measured.
+
+use crate::config::{presets, ClusterConfig};
+use crate::error::Result;
+use crate::model::inputs::{derive_inputs, EvalOptions, ModelInputs};
+use crate::network::CollectiveImpl;
+use crate::parallel::{footprint_per_node, model_state_bytes, Strategy, ZeroStage};
+use crate::report::FigureData;
+use crate::util::units::gb;
+use crate::workload::dlrm::Dlrm;
+use crate::workload::transformer::Transformer;
+
+use super::Coordinator;
+
+/// The (MP, DP) sweep used throughout SV-B: power-of-two splits of the
+/// 1024-node baseline, bounded by the Transformer's 160 attention heads
+/// (MP <= 128).
+pub fn fig8_strategies() -> Vec<Strategy> {
+    Strategy::sweep_bounded(1024, 1, 128)
+}
+
+fn t1_inputs(
+    s: &Strategy,
+    cluster: &ClusterConfig,
+    opts: &EvalOptions,
+) -> Result<ModelInputs> {
+    derive_inputs(&Transformer::t1().build(s)?, cluster, opts)
+}
+
+/// Fig. 6: per-node memory footprint of Transformer-1T on 1024 nodes as a
+/// function of MP degree, for each ZeRO-DP stage. Pure footprint model (no
+/// simulation).
+pub fn fig6() -> FigureData {
+    let t = Transformer::t1();
+    let psi = t.total_params();
+    let mut rows = Vec::new();
+    for s in Strategy::sweep(1024) {
+        let vals: Vec<f64> = ZeroStage::ALL
+            .iter()
+            .map(|&st| model_state_bytes(psi, s.mp, s.dp, st) / gb(1.0))
+            .collect();
+        rows.push((s.label(), vals));
+    }
+    FigureData {
+        id: "fig6".into(),
+        title: "Per-node model-state footprint, Transformer-1T, 1024 nodes"
+            .into(),
+        row_label: "(MP, DP)".into(),
+        columns: ZeroStage::ALL.iter().map(|s| s.label().to_string()).collect(),
+        rows,
+        notes: vec![
+            "GB per node; mixed-precision Adam (16 B/param baseline)".into(),
+        ],
+    }
+}
+
+/// Fig. 8a: training-time breakdown + per-node footprint across the
+/// (MP, DP) sweep, assuming infinite capacity at baseline local bandwidth.
+pub fn fig8a(coord: &Coordinator) -> Result<FigureData> {
+    let cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions {
+        ignore_capacity: true,
+        ..Default::default()
+    };
+    let strategies = fig8_strategies();
+    let inputs: Vec<ModelInputs> = strategies
+        .iter()
+        .map(|s| t1_inputs(s, &cluster, &opts))
+        .collect::<Result<_>>()?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let best = evals
+        .iter()
+        .map(|b| b.total())
+        .fold(f64::INFINITY, f64::min);
+    let mut rows = Vec::new();
+    for (s, b) in strategies.iter().zip(&evals) {
+        let w = Transformer::t1().build(s)?;
+        let fp =
+            footprint_per_node(&w, s, ZeroStage::OsG).total() / gb(1.0);
+        rows.push((
+            s.label(),
+            vec![
+                b.fp_compute,
+                b.fp_exposed_comm,
+                b.ig_compute,
+                b.ig_exposed_comm,
+                b.wg_compute,
+                b.wg_exposed_comm,
+                b.total(),
+                b.total() / best,
+                fp,
+            ],
+        ));
+    }
+    Ok(FigureData {
+        id: "fig8a".into(),
+        title: "Transformer-1T runtime breakdown vs (MP, DP)".into(),
+        row_label: "(MP, DP)".into(),
+        columns: [
+            "FP_Compute",
+            "FP_Exp_Comm",
+            "IG_Compute",
+            "IG_Exp_Comm",
+            "WG_Compute",
+            "WG_Exp_Comm",
+            "Total_s",
+            "Norm_to_best",
+            "Footprint_GB",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        rows,
+        notes: vec![
+            "infinite per-node capacity at 2039 GB/s (paper SV-B1)".into(),
+            "logical-ring collectives (Table I)".into(),
+        ],
+    })
+}
+
+/// Fig. 8b: compute vs exposed-communication share per strategy.
+pub fn fig8b(coord: &Coordinator) -> Result<FigureData> {
+    let f = fig8a(coord)?;
+    let rows = f
+        .rows
+        .iter()
+        .map(|(label, v)| {
+            let compute = v[0] + v[2] + v[4];
+            let comm = v[1] + v[3] + v[5];
+            let total = compute + comm;
+            (label.clone(), vec![compute / total, comm / total])
+        })
+        .collect();
+    Ok(FigureData {
+        id: "fig8b".into(),
+        title: "Compute vs exposed communication share".into(),
+        row_label: "(MP, DP)".into(),
+        columns: vec!["Compute_frac".into(), "Exp_Comm_frac".into()],
+        rows,
+        notes: vec!["fractions of total iteration time".into()],
+    })
+}
+
+/// Expanded-memory bandwidth sweep columns shared by figs. 9/10/13b, GB/s.
+pub const EM_BW_SWEEP: [f64; 7] =
+    [250.0, 500.0, 750.0, 1000.0, 1250.0, 1500.0, 2039.0];
+
+/// Fig. 9: speedup heatmap over (strategy x expanded-memory bandwidth),
+/// normalized to MP64_DP16 — the best configuration feasible without
+/// memory expansion.
+pub fn fig9(coord: &Coordinator) -> Result<FigureData> {
+    let base_cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions::default();
+
+    // Baseline: MP64_DP16 on local memory only.
+    let baseline = coord
+        .evaluate_inputs(&[t1_inputs(
+            &Strategy::new(64, 16),
+            &base_cluster,
+            &opts,
+        )?])?[0]
+        .total();
+
+    // Rows: MP128 .. MP2 (paper omits configs that perform strictly worse
+    // than the baseline's flank; MP > 128 is unbuildable at 160 heads).
+    let strategies: Vec<Strategy> = Strategy::sweep_bounded(1024, 2, 128);
+    let mut jobs = Vec::new();
+    for s in &strategies {
+        let w = Transformer::t1().build(s)?;
+        let fp = footprint_per_node(&w, s, ZeroStage::OsG).total();
+        for &bw in &EM_BW_SWEEP {
+            // Expansion sized to the spill (paper: capacity is the row's
+            // requirement; bandwidth is the column).
+            let need = (fp - base_cluster.node.local.capacity).max(0.0);
+            let cluster = if need > 0.0 {
+                base_cluster
+                    .with_node(base_cluster.node.with_expanded(need, gb(bw)))
+            } else {
+                base_cluster.clone()
+            };
+            jobs.push(derive_inputs(&w, &cluster, &opts)?);
+        }
+    }
+    let evals = coord.evaluate_inputs(&jobs)?;
+    let mut rows = Vec::new();
+    for (i, s) in strategies.iter().enumerate() {
+        let vals: Vec<f64> = (0..EM_BW_SWEEP.len())
+            .map(|j| baseline / evals[i * EM_BW_SWEEP.len() + j].total())
+            .collect();
+        rows.push((s.label(), vals));
+    }
+    Ok(FigureData {
+        id: "fig9".into(),
+        title: "Speedup vs expanded-memory bandwidth (Transformer-1T)".into(),
+        row_label: "(MP, DP)".into(),
+        columns: EM_BW_SWEEP.iter().map(|b| format!("{b:.0}GB/s")).collect(),
+        rows,
+        notes: vec![
+            "speedup over MP64_DP16 on local memory (>1 = memory expansion wins)"
+                .into(),
+            "EM capacity per row = footprint - 80 GB".into(),
+        ],
+    })
+}
+
+/// Fig. 10: per-node compute-capability scaling at MP8_DP128, for several
+/// expanded-memory bandwidths.
+pub fn fig10(coord: &Coordinator) -> Result<FigureData> {
+    let base_cluster = presets::dgx_a100_1024();
+    let s = Strategy::new(8, 128);
+    let w = Transformer::t1().build(&s)?;
+    let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
+    let need = (fp - base_cluster.node.local.capacity).max(0.0);
+    let opts = EvalOptions::default();
+    let scales = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0];
+    let bws = [500.0, 1000.0, 1500.0, 2039.0];
+
+    let mut jobs = Vec::new();
+    for &sc in &scales {
+        for &bw in &bws {
+            let node = base_cluster
+                .node
+                .scale_compute(sc)
+                .with_expanded(need, gb(bw));
+            jobs.push(derive_inputs(&w, &base_cluster.with_node(node), &opts)?);
+        }
+    }
+    let evals = coord.evaluate_inputs(&jobs)?;
+    // Normalize to scale=1 at the highest EM bandwidth.
+    let base_idx = scales.iter().position(|&x| x == 1.0).unwrap() * bws.len()
+        + (bws.len() - 1);
+    let baseline = evals[base_idx].total();
+    let rows = scales
+        .iter()
+        .enumerate()
+        .map(|(i, sc)| {
+            (
+                format!("compute x{sc}"),
+                (0..bws.len())
+                    .map(|j| evals[i * bws.len() + j].total() / baseline)
+                    .collect(),
+            )
+        })
+        .collect();
+    Ok(FigureData {
+        id: "fig10".into(),
+        title: "Compute-capability scaling at MP8_DP128".into(),
+        row_label: "node compute".into(),
+        columns: bws.iter().map(|b| format!("EM@{b:.0}GB/s")).collect(),
+        rows,
+        notes: vec![
+            "runtime normalized to baseline A100 (x1) at EM 2039 GB/s".into(),
+        ],
+    })
+}
+
+/// Fig. 11: intra-/inter-pod bandwidth scaling grid for the
+/// communication-bound (MP64_DP16) and compute-bound (MP8_DP128) configs.
+/// Hierarchical collectives, as in the paper's network study.
+pub fn fig11(coord: &Coordinator) -> Result<FigureData> {
+    let base_cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions {
+        ignore_capacity: true,
+        collective_impl: CollectiveImpl::Hierarchical,
+        ..Default::default()
+    };
+    let factors = [0.5, 1.0, 2.0, 4.0];
+    let configs = [Strategy::new(64, 16), Strategy::new(8, 128)];
+
+    let mut rows = Vec::new();
+    for s in &configs {
+        let w = Transformer::t1().build(s)?;
+        let base = coord
+            .evaluate_inputs(&[derive_inputs(&w, &base_cluster, &opts)?])?[0]
+            .total();
+        for &fi in &factors {
+            let mut jobs = Vec::new();
+            for &fx in &factors {
+                let cluster = base_cluster.scale_network(fi, fx);
+                jobs.push(derive_inputs(&w, &cluster, &opts)?);
+            }
+            let evals = coord.evaluate_inputs(&jobs)?;
+            rows.push((
+                format!("{} intra x{fi}", s.label()),
+                evals.iter().map(|b| base / b.total()).collect(),
+            ));
+        }
+    }
+    Ok(FigureData {
+        id: "fig11".into(),
+        title: "Network bandwidth scaling (speedup over baseline)".into(),
+        row_label: "config / intra factor".into(),
+        columns: factors.iter().map(|f| format!("inter x{f}")).collect(),
+        rows,
+        notes: vec![
+            "hierarchical collectives; baseline 300/31.25 GB/s".into(),
+            "infinite-capacity memory (network isolated)".into(),
+        ],
+    })
+}
+
+/// Fig. 12: rebalancing a fixed aggregate per-node bandwidth between
+/// intra- and inter-pod links.
+pub fn fig12(coord: &Coordinator) -> Result<FigureData> {
+    let base_cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions {
+        ignore_capacity: true,
+        collective_impl: CollectiveImpl::Hierarchical,
+        ..Default::default()
+    };
+    let ratios = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 9.6, 12.0, 16.0, 24.0];
+    let configs = [Strategy::new(64, 16), Strategy::new(8, 128)];
+
+    // Baseline: the stock 1:9.6 split.
+    let mut baselines = Vec::new();
+    for s in &configs {
+        let w = Transformer::t1().build(s)?;
+        baselines.push(
+            coord
+                .evaluate_inputs(&[derive_inputs(&w, &base_cluster, &opts)?])?
+                [0]
+                .total(),
+        );
+    }
+
+    let mut rows = Vec::new();
+    for &r in &ratios {
+        let cluster = base_cluster.rebalance_network(r)?;
+        let mut vals = Vec::new();
+        for (s, base) in configs.iter().zip(&baselines) {
+            let w = Transformer::t1().build(s)?;
+            let t = coord
+                .evaluate_inputs(&[derive_inputs(&w, &cluster, &opts)?])?[0]
+                .total();
+            vals.push(base / t);
+        }
+        rows.push((format!("1:{r}"), vals));
+    }
+    Ok(FigureData {
+        id: "fig12".into(),
+        title: "Fixed-aggregate inter:intra bandwidth rebalancing".into(),
+        row_label: "inter:intra ratio".into(),
+        columns: configs.iter().map(|s| s.label()).collect(),
+        rows,
+        notes: vec![
+            "aggregate 331.25 GB/s per node; speedup vs stock 1:9.6".into(),
+        ],
+    })
+}
+
+/// Fig. 13a: DLRM-1.2T breakdown + footprint vs cluster size.
+pub fn fig13a(coord: &Coordinator) -> Result<FigureData> {
+    let d = Dlrm::dlrm_1_2t();
+    let mut rows = Vec::new();
+    let mut base_total = f64::NAN;
+    for &n in &[64usize, 32, 16, 8] {
+        let w = d.build(n)?;
+        // Paper normalizes to a 2 TB/s memory system: expanded memory
+        // sized to the spill at 2 TB/s. DLRM's footprint is its embedding
+        // shard (not the generic transformer ZeRO formula).
+        let fp = d.footprint_per_node(n);
+        let opts = EvalOptions {
+            footprint_override: Some(fp),
+            ..Default::default()
+        };
+        let mut cluster = presets::dgx_a100_64().with_n_nodes(n);
+        let need = (fp - cluster.node.local.capacity).max(0.0);
+        if need > 0.0 {
+            cluster.node = cluster.node.with_expanded(need, 2e12);
+        }
+        let b = coord.evaluate_inputs(&[derive_inputs(&w, &cluster, &opts)?])?[0];
+        if n == 64 {
+            base_total = b.total();
+        }
+        rows.push((
+            format!("{n} nodes"),
+            vec![
+                b.fp_compute,
+                b.fp_exposed_comm,
+                b.ig_compute,
+                b.ig_exposed_comm,
+                b.wg_compute,
+                b.wg_exposed_comm,
+                b.total(),
+                b.total() / base_total,
+                fp / gb(1.0),
+            ],
+        ));
+    }
+    Ok(FigureData {
+        id: "fig13a".into(),
+        title: "DLRM-1.2T breakdown vs cluster size".into(),
+        row_label: "cluster".into(),
+        columns: [
+            "FP_Compute",
+            "FP_Exp_Comm",
+            "IG_Compute",
+            "IG_Exp_Comm",
+            "WG_Compute",
+            "WG_Exp_Comm",
+            "Total_s",
+            "Norm_to_64",
+            "Footprint_GB",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        rows,
+        notes: vec!["expanded memory at 2 TB/s where the shard spills".into()],
+    })
+}
+
+/// Fig. 13b: turnaround of training 8 DLRMs on 64 GPUs vs expanded-memory
+/// bandwidth, for different nodes-per-instance packings.
+pub fn fig13b(coord: &Coordinator) -> Result<FigureData> {
+    let d = Dlrm::dlrm_1_2t();
+    let total_nodes = 64usize;
+    let instances = 8.0;
+
+    // Baseline: 8 sequential waves of 64-node instances on local memory.
+    let w64 = d.build(64)?;
+    let base = coord
+        .evaluate_inputs(&[derive_inputs(
+            &w64,
+            &presets::dgx_a100_64(),
+            &EvalOptions {
+                footprint_override: Some(d.footprint_per_node(64)),
+                ..Default::default()
+            },
+        )?])?[0]
+        .total()
+        * instances;
+
+    let mut rows = Vec::new();
+    for &n in &[32usize, 16, 8] {
+        let w = d.build(n)?;
+        let fp = d.footprint_per_node(n);
+        let opts = EvalOptions {
+            footprint_override: Some(fp),
+            ..Default::default()
+        };
+        let waves =
+            (instances * n as f64 / total_nodes as f64).max(1.0).ceil();
+        let vals: Vec<f64> = EM_BW_SWEEP
+            .iter()
+            .map(|&bw| {
+                let mut cluster = presets::dgx_a100_64().with_n_nodes(n);
+                let need = (fp - cluster.node.local.capacity).max(0.0);
+                cluster.node = cluster.node.with_expanded(need, gb(bw));
+                let t = coord
+                    .evaluate_inputs(&[derive_inputs(&w, &cluster, &opts)
+                        .unwrap()])
+                    .unwrap()[0]
+                    .total();
+                base / (t * waves)
+            })
+            .collect();
+        rows.push((format!("{n} nodes/instance"), vals));
+    }
+    Ok(FigureData {
+        id: "fig13b".into(),
+        title: "8-DLRM turnaround vs expanded-memory bandwidth".into(),
+        row_label: "packing".into(),
+        columns: EM_BW_SWEEP.iter().map(|b| format!("{b:.0}GB/s")).collect(),
+        rows,
+        notes: vec![
+            "speedup over 8 sequential waves of 64-node instances on local memory"
+                .into(),
+        ],
+    })
+}
+
+/// Best feasible Transformer-1T strategy on a cluster (capacity-aware) and
+/// its iteration time.
+fn best_transformer_time(
+    coord: &Coordinator,
+    cluster: &ClusterConfig,
+) -> Result<f64> {
+    let t = Transformer::t1();
+    let opts = EvalOptions::default();
+    let max_mp = 128.min(cluster.n_nodes);
+    let mut jobs = Vec::new();
+    for s in Strategy::sweep_bounded(cluster.n_nodes, 1, max_mp) {
+        let w = t.build(&s)?;
+        let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
+        // Infeasible if the footprint exceeds total (local + expanded)
+        // capacity per node.
+        if fp > cluster.node.total_capacity() {
+            continue;
+        }
+        jobs.push(derive_inputs(&w, cluster, &opts)?);
+    }
+    if jobs.is_empty() {
+        return Ok(f64::NAN);
+    }
+    let evals = coord.evaluate_inputs(&jobs)?;
+    Ok(evals
+        .iter()
+        .map(|b| b.total())
+        .fold(f64::INFINITY, f64::min))
+}
+
+/// DLRM nodes-per-instance for fig. 15, per the paper: GPU clusters use
+/// 64 / 16 / 8 nodes for memory systems 0 / 1 / 2; TPU/Dojo use the
+/// smallest power-of-two whose shard fits per-node capacity.
+fn dlrm_nodes_per_instance(cluster: &ClusterConfig, d: &Dlrm) -> usize {
+    match cluster.name.as_str() {
+        "A0" | "B0" | "C0" => 64,
+        "A1" | "B1" | "C1" => 16,
+        "A2" | "B2" | "C2" => 8,
+        _ => {
+            let mut n = 1usize;
+            while n < cluster.n_nodes
+                && d.footprint_per_node(n) > cluster.node.total_capacity()
+            {
+                n *= 2;
+            }
+            n
+        }
+    }
+}
+
+/// Fig. 15: eleven-cluster comparison (Table III) on DLRM and
+/// Transformer-1T, speedups normalized to cluster A0.
+pub fn fig15(coord: &Coordinator) -> Result<FigureData> {
+    let d = Dlrm::dlrm_1_2t();
+    let clusters = presets::table3_all();
+    let instances = 8.0;
+
+    let mut dlrm_times = Vec::new();
+    let mut tf_times = Vec::new();
+    for cluster in &clusters {
+        // DLRM: 8 instances, waves over a 64-node partition for GPU
+        // clusters (SV-C setup) or the full fabric for TPU/Dojo.
+        let pool = cluster.n_nodes.min(64);
+        let n_i = dlrm_nodes_per_instance(cluster, &d).min(pool);
+        let waves = (instances * n_i as f64 / pool as f64).max(1.0).ceil();
+        let sub = cluster.with_n_nodes(n_i);
+        let w = d.build(n_i)?;
+        let opts = EvalOptions {
+            footprint_override: Some(d.footprint_per_node(n_i)),
+            ..Default::default()
+        };
+        let t = coord
+            .evaluate_inputs(&[derive_inputs(&w, &sub, &opts)?])?[0]
+            .total();
+        dlrm_times.push(t * waves);
+
+        tf_times.push(best_transformer_time(coord, cluster)?);
+    }
+
+    let rows = clusters
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            (
+                c.name.clone(),
+                vec![
+                    dlrm_times[0] / dlrm_times[i],
+                    tf_times[0] / tf_times[i],
+                ],
+            )
+        })
+        .collect();
+    Ok(FigureData {
+        id: "fig15".into(),
+        title: "Cluster comparison (speedup vs A0)".into(),
+        row_label: "cluster".into(),
+        columns: vec!["DLRM_x8".into(), "Transformer-1T".into()],
+        rows,
+        notes: vec![
+            "DLRM: 8 instances on a 64-node partition (TPU/Dojo: native packing)"
+                .into(),
+            "Transformer: best feasible (MP, DP) per cluster".into(),
+        ],
+    })
+}
+
+/// Ablation (DESIGN.md S6): how much of Fig. 8's shape is due to the
+/// collective implementation? Reruns the strategy sweep under Table I's
+/// logical ring vs the hierarchical (BlueConnect/Themis) collectives.
+/// Shows the paper's left flank collapsing when pods are bridged
+/// hierarchically — i.e. MP8's dominance is a *topology-awareness*
+/// artifact, one of the design insights the methodology surfaces.
+pub fn ablation_collectives(coord: &Coordinator) -> Result<FigureData> {
+    let cluster = presets::dgx_a100_1024();
+    let strategies = fig8_strategies();
+    let mut rows = Vec::new();
+    for s in &strategies {
+        let w = Transformer::t1().build(s)?;
+        let mut vals = Vec::new();
+        for impl_ in [CollectiveImpl::LogicalRing, CollectiveImpl::Hierarchical]
+        {
+            let opts = EvalOptions {
+                ignore_capacity: true,
+                collective_impl: impl_,
+                ..Default::default()
+            };
+            let inp = derive_inputs(&w, &cluster, &opts)?;
+            vals.push(
+                coord.evaluate_inputs(std::slice::from_ref(&inp))?[0].total(),
+            );
+        }
+        vals.push(vals[0] / vals[1]); // ring / hierarchical
+        rows.push((s.label(), vals));
+    }
+    Ok(FigureData {
+        id: "ablation-collectives".into(),
+        title: "Ablation: logical-ring vs hierarchical collectives".into(),
+        row_label: "(MP, DP)".into(),
+        columns: vec![
+            "ring_total_s".into(),
+            "hier_total_s".into(),
+            "ring/hier".into(),
+        ],
+        rows,
+        notes: vec![
+            "Transformer-1T, infinite-capacity memory; Fig. 8 sweep".into(),
+        ],
+    })
+}
+
+/// Ablation: ZeRO stage choice. Per-node footprint AND iteration time for
+/// the Fig. 8 sweep under each ZeRO stage (stage 3 pays its 1.5x DP
+/// communication-volume penalty on the WG reduce-scatter).
+pub fn ablation_zero(coord: &Coordinator) -> Result<FigureData> {
+    let cluster = presets::dgx_a100_1024();
+    let mut rows = Vec::new();
+    for s in [Strategy::new(64, 16), Strategy::new(8, 128)] {
+        let base = Transformer::t1().build(&s)?;
+        for stage in ZeroStage::ALL {
+            let mut w = base.clone();
+            // Stage 3's extra parameter all-gather: scale the DP-scope
+            // collective payloads by the stage's volume multiplier.
+            for l in &mut w.layers {
+                if l.comm_wg.scope == crate::workload::CommScope::Dp {
+                    l.comm_wg.bytes *= stage.comm_multiplier();
+                }
+            }
+            let opts = EvalOptions {
+                zero_stage: stage,
+                ignore_capacity: true,
+                ..Default::default()
+            };
+            let fp = footprint_per_node(&w, &s, stage).total() / gb(1.0);
+            let inp = derive_inputs(&w, &cluster, &opts)?;
+            let b = coord.evaluate_inputs(std::slice::from_ref(&inp))?[0];
+            rows.push((
+                format!("{} {}", s.label(), stage.label()),
+                vec![fp, b.total(), b.wg_exposed_comm],
+            ));
+        }
+    }
+    Ok(FigureData {
+        id: "ablation-zero".into(),
+        title: "Ablation: ZeRO stage (footprint vs comm overhead)".into(),
+        row_label: "config".into(),
+        columns: vec![
+            "Footprint_GB".into(),
+            "Total_s".into(),
+            "WG_Exp_Comm_s".into(),
+        ],
+        rows,
+        notes: vec!["stage-3 DP payloads scaled by 1.5x (ZeRO paper)".into()],
+    })
+}
+
+/// All figures in paper order.
+pub fn all_figures(coord: &Coordinator) -> Result<Vec<FigureData>> {
+    Ok(vec![
+        fig6(),
+        fig8a(coord)?,
+        fig8b(coord)?,
+        fig9(coord)?,
+        fig10(coord)?,
+        fig11(coord)?,
+        fig12(coord)?,
+        fig13a(coord)?,
+        fig13b(coord)?,
+        fig15(coord)?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coord() -> Coordinator {
+        Coordinator::native()
+    }
+
+    #[test]
+    fn fig6_zero3_flat_and_baseline_steep() {
+        let f = fig6();
+        let z3_hi = f.cell("MP1024_DP1", "zero-3").unwrap();
+        let z3_lo = f.cell("MP1_DP1024", "zero-3").unwrap();
+        assert!((z3_hi - z3_lo).abs() < 1e-6);
+        let b_hi = f.cell("MP1024_DP1", "baseline").unwrap();
+        let b_lo = f.cell("MP1_DP1024", "baseline").unwrap();
+        assert!((b_lo / b_hi - 1024.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn fig8a_best_is_mp8() {
+        let f = fig8a(&coord()).unwrap();
+        assert_eq!(f.argmin("Total_s"), Some("MP8_DP128"));
+        // Footprint at MP8 is ~3.3x the 80 GB local capacity.
+        let fp = f.cell("MP8_DP128", "Footprint_GB").unwrap();
+        assert!((250.0..330.0).contains(&fp), "{fp}");
+    }
+
+    #[test]
+    fn fig9_crossover_exists() {
+        let f = fig9(&coord()).unwrap();
+        // MP8_DP128 must lose at 250 GB/s and win at some higher bandwidth
+        // (the paper's Ex.1: >= ~500 GB/s makes expansion worthwhile).
+        let lo = f.cell("MP8_DP128", "250GB/s").unwrap();
+        let hi = f.cell("MP8_DP128", "2039GB/s").unwrap();
+        assert!(lo < 1.0, "{lo}");
+        assert!(hi > 1.0, "{hi}");
+    }
+
+    #[test]
+    fn fig13a_sublinear() {
+        let f = fig13a(&coord()).unwrap();
+        let n32 = f.cell("32 nodes", "Norm_to_64").unwrap();
+        let n16 = f.cell("16 nodes", "Norm_to_64").unwrap();
+        assert!(n32 < 2.0, "{n32}");
+        assert!(n16 < 4.0, "{n16}");
+        assert!(n32 > 1.0 && n16 > n32);
+    }
+
+    #[test]
+    fn fig15_c0_beats_a0() {
+        let f = fig15(&coord()).unwrap();
+        let c0 = f.cell("C0", "Transformer-1T").unwrap();
+        assert!(c0 > 2.0, "C0 speedup {c0}");
+        let a0 = f.cell("A0", "Transformer-1T").unwrap();
+        assert!((a0 - 1.0).abs() < 1e-9);
+    }
+}

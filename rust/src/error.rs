@@ -1,0 +1,64 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors surfaced by the COMET toolchain.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid cluster / strategy / workload configuration.
+    Config(String),
+    /// Artifact ABI mismatch between `artifacts/manifest.json` and this
+    /// crate's compiled-in layout (see [`crate::model::batch`]).
+    AbiMismatch(String),
+    /// Artifact file missing or unreadable.
+    Artifact(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// JSON parse error (configs, manifest).
+    Json(String),
+    /// I/O error with path context.
+    Io(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::AbiMismatch(m) => write!(f, "artifact ABI mismatch: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Config("MP must divide N".into());
+        assert!(e.to_string().contains("MP must divide N"));
+        assert!(e.to_string().contains("config"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,59 @@
+//! # COMET — cluster design methodology for distributed DL training
+//!
+//! Reproduction of *COMET: A Comprehensive Cluster Design Methodology for
+//! Distributed Deep Learning Training* (Kadiyala et al., Georgia Tech, 2022).
+//!
+//! COMET jointly explores model **parallelization strategies** (MP × DP) and
+//! **cluster resource provisioning** (per-node compute, local + expanded
+//! memory, intra-/inter-pod network) and estimates distributed-training time
+//! per iteration with an analytical roofline + hierarchical-collective cost
+//! model, optionally cross-checked by a discrete-event simulator.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the COMET toolchain: workload frontend
+//!   ([`workload`]), parallelization strategies and ZeRO footprint models
+//!   ([`parallel`]), cluster configuration ([`config`]), the analytical cost
+//!   model ([`compute`], [`network`], [`analytical`]), an ASTRA-SIM-like
+//!   discrete-event simulator ([`sim`]), the design-space-exploration
+//!   coordinator ([`coordinator`]), figure/report drivers ([`report`]), and
+//!   the PJRT runtime ([`runtime`]).
+//! * **L2/L1 (build-time Python)** — the same cost model expressed as a JAX
+//!   graph calling Pallas kernels, AOT-lowered once to `artifacts/*.hlo.txt`
+//!   and executed from Rust through the PJRT C API on the sweep hot path.
+//!   Python never runs at exploration time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use comet::config::presets;
+//! use comet::coordinator::Coordinator;
+//! use comet::parallel::Strategy;
+//! use comet::workload::transformer::Transformer;
+//!
+//! let cluster = presets::dgx_a100_1024();
+//! let model = Transformer::t1()                    // Transformer-1T
+//!     .build(&Strategy::new(8, 128)).unwrap();     // MP8_DP128
+//! let coord = Coordinator::native();
+//! let breakdown = coord.evaluate(&model, &cluster).unwrap();
+//! println!("iteration time: {:.3} s", breakdown.total());
+//! ```
+
+pub mod analytical;
+pub mod compute;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod model;
+pub mod network;
+pub mod parallel;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use analytical::TrainingBreakdown;
+pub use config::{ClusterConfig, NodeConfig};
+pub use error::{Error, Result};
+pub use parallel::Strategy;

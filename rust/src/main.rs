@@ -1,0 +1,376 @@
+//! COMET command-line leader: design-space sweeps, figure regeneration,
+//! workload/config inspection, and cross-backend validation.
+//!
+//! ```text
+//! comet figure <fig6|fig8a|fig8b|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|all>
+//!       [--backend native|des|artifact] [--out-dir DIR] [--csv]
+//! comet sweep   [--cluster PRESET] [--backend B] [--infinite-memory]
+//! comet eval    --strategy MP8_DP128 [--cluster PRESET] [--backend B]
+//! comet footprint [--zero 0|1|2|3]
+//! comet config  <list|show NAME>
+//! comet workload --model MODEL [--mp N] [--dp N] [--nodes N]
+//! comet compare [--backend B]
+//! comet validate
+//! ```
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use comet::config::presets;
+use comet::coordinator::{sweep, Coordinator};
+use comet::error::{Error, Result};
+use comet::model::inputs::{derive_inputs, EvalOptions};
+use comet::parallel::{footprint_per_node, Strategy, ZeroStage};
+use comet::report::FigureData;
+use comet::util::units::{fmt_bytes, fmt_secs};
+use comet::workload::dlrm::Dlrm;
+use comet::workload::transformer::Transformer;
+use comet::workload::{trace, Workload};
+
+/// Minimal argument cursor: positionals + --flag [value] pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(raw: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            if let Some(name) = raw[i].strip_prefix("--") {
+                let value = raw
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                flags.push((name.to_string(), value));
+            } else {
+                positional.push(raw[i].clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+}
+
+fn coordinator_for(args: &Args) -> Result<Coordinator> {
+    match args.flag("backend").unwrap_or("native") {
+        "native" => Ok(Coordinator::native()),
+        "des" => Ok(Coordinator::des()),
+        "artifact" => Coordinator::artifact(),
+        "auto" => Ok(Coordinator::auto()),
+        other => Err(Error::Config(format!(
+            "unknown backend '{other}' (native|des|artifact|auto)"
+        ))),
+    }
+}
+
+fn cluster_for(args: &Args) -> Result<comet::ClusterConfig> {
+    let name = args.flag("cluster").unwrap_or("baseline");
+    if let Some(c) = presets::by_name(name) {
+        return Ok(c);
+    }
+    // Fall back to a config file path.
+    let p = Path::new(name);
+    if p.exists() {
+        return comet::ClusterConfig::load(p);
+    }
+    Err(Error::Config(format!(
+        "unknown cluster '{name}'; presets: {:?}",
+        presets::preset_names()
+    )))
+}
+
+fn workload_for(args: &Args) -> Result<Workload> {
+    let model = args.flag("model").unwrap_or("transformer-1t");
+    let nodes: usize = args
+        .flag("nodes")
+        .map(|v| v.parse().unwrap_or(64))
+        .unwrap_or(64);
+    match model {
+        "transformer-1t" | "transformer-100m" => {
+            let t = if model == "transformer-1t" {
+                Transformer::t1()
+            } else {
+                Transformer::t100m()
+            };
+            let strategy = match args.flag("strategy") {
+                Some(s) => Strategy::parse(s)?,
+                None => Strategy::new(
+                    args.flag("mp").map(|v| v.parse().unwrap_or(8)).unwrap_or(8),
+                    args.flag("dp")
+                        .map(|v| v.parse().unwrap_or(128))
+                        .unwrap_or(128),
+                ),
+            };
+            t.build(&strategy)
+        }
+        "dlrm-1.2t" => Dlrm::dlrm_1_2t().build(nodes),
+        "dlrm-small" => Dlrm::small().build(nodes),
+        other => Err(Error::Config(format!("unknown model '{other}'"))),
+    }
+}
+
+fn emit_figure(f: &FigureData, args: &Args) -> Result<()> {
+    println!("{}", f.to_table());
+    if let Some(dir) = args.flag("out-dir") {
+        std::fs::create_dir_all(dir)?;
+        let path = Path::new(dir).join(format!("{}.csv", f.id));
+        std::fs::write(&path, f.to_csv())?;
+        println!("  wrote {}", path.display());
+    } else if args.has("csv") {
+        println!("{}", f.to_csv());
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let coord = coordinator_for(args)?;
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let figs: Vec<FigureData> = match which {
+        "all" => sweep::all_figures(&coord)?,
+        "fig6" => vec![sweep::fig6()],
+        "fig8a" => vec![sweep::fig8a(&coord)?],
+        "fig8b" => vec![sweep::fig8b(&coord)?],
+        "fig9" => vec![sweep::fig9(&coord)?],
+        "fig10" => vec![sweep::fig10(&coord)?],
+        "fig11" => vec![sweep::fig11(&coord)?],
+        "fig12" => vec![sweep::fig12(&coord)?],
+        "fig13a" => vec![sweep::fig13a(&coord)?],
+        "fig13b" => vec![sweep::fig13b(&coord)?],
+        "fig15" => vec![sweep::fig15(&coord)?],
+        "ablation-collectives" => vec![sweep::ablation_collectives(&coord)?],
+        "ablation-zero" => vec![sweep::ablation_zero(&coord)?],
+        "ablations" => vec![
+            sweep::ablation_collectives(&coord)?,
+            sweep::ablation_zero(&coord)?,
+        ],
+        other => {
+            return Err(Error::Config(format!("unknown figure '{other}'")))
+        }
+    };
+    for f in &figs {
+        emit_figure(f, args)?;
+    }
+    let (hits, misses) = coord.cache_stats();
+    eprintln!(
+        "[comet] backend={:?} cache {hits} hits / {misses} misses",
+        coord.backend()
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let coord = coordinator_for(args)?;
+    let cluster = cluster_for(args)?;
+    let opts = EvalOptions {
+        ignore_capacity: args.has("infinite-memory"),
+        ..Default::default()
+    };
+    println!(
+        "{:>14} {:>12} {:>12} {:>12} {:>12}",
+        "config", "compute", "exposed", "total", "footprint"
+    );
+    for s in
+        Strategy::sweep_bounded(cluster.n_nodes, 1, 128.min(cluster.n_nodes))
+    {
+        let w = match Transformer::t1().build(&s) {
+            Ok(w) => w,
+            Err(_) => continue,
+        };
+        let fp = footprint_per_node(&w, &s, opts.zero_stage).total();
+        let inputs = derive_inputs(&w, &cluster, &opts)?;
+        let b = coord.evaluate_inputs(std::slice::from_ref(&inputs))?[0];
+        println!(
+            "{:>14} {:>12} {:>12} {:>12} {:>12}",
+            s.label(),
+            fmt_secs(b.compute()),
+            fmt_secs(b.exposed_comm()),
+            fmt_secs(b.total()),
+            fmt_bytes(fp),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let coord = coordinator_for(args)?;
+    let cluster = cluster_for(args)?;
+    let w = workload_for(args)?;
+    let b = coord.evaluate(&w, &cluster)?;
+    println!("workload : {}", w.name);
+    println!("cluster  : {}", cluster.name);
+    println!("backend  : {:?}", coord.backend());
+    println!(
+        "FP  compute {:>12}  exposed {:>12}",
+        fmt_secs(b.fp_compute),
+        fmt_secs(b.fp_exposed_comm)
+    );
+    println!(
+        "IG  compute {:>12}  exposed {:>12}",
+        fmt_secs(b.ig_compute),
+        fmt_secs(b.ig_exposed_comm)
+    );
+    println!(
+        "WG  compute {:>12}  exposed {:>12}",
+        fmt_secs(b.wg_compute),
+        fmt_secs(b.wg_exposed_comm)
+    );
+    println!("total iteration time: {}", fmt_secs(b.total()));
+    Ok(())
+}
+
+fn cmd_footprint(args: &Args) -> Result<()> {
+    let stage = match args.flag("zero").unwrap_or("2") {
+        "0" => ZeroStage::Baseline,
+        "1" => ZeroStage::Os,
+        "2" => ZeroStage::OsG,
+        "3" => ZeroStage::OsGP,
+        other => {
+            return Err(Error::Config(format!("unknown ZeRO stage '{other}'")))
+        }
+    };
+    let f = sweep::fig6();
+    println!("{}", f.to_table());
+    println!("selected stage: {}", stage.label());
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("list") | None => {
+            for n in presets::preset_names() {
+                let c = presets::by_name(n).unwrap();
+                println!(
+                    "{:<12} {:>5} nodes  {:>10} peak  {:>9} local  {:>9} expanded",
+                    n,
+                    c.n_nodes,
+                    format!("{:.0}T", c.node.perf_peak / 1e12),
+                    fmt_bytes(c.node.local.capacity),
+                    fmt_bytes(c.node.expanded.capacity),
+                );
+            }
+            Ok(())
+        }
+        Some("show") => {
+            let name = args
+                .positional
+                .get(2)
+                .ok_or_else(|| Error::Config("config show NAME".into()))?;
+            let c = presets::by_name(name).ok_or_else(|| {
+                Error::Config(format!("unknown preset '{name}'"))
+            })?;
+            println!("{}", c.to_json().to_string_pretty());
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!("unknown config cmd '{other}'"))),
+    }
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    let w = workload_for(args)?;
+    print!("{}", trace::emit(&w));
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let coord = coordinator_for(args)?;
+    emit_figure(&sweep::fig15(&coord)?, args)
+}
+
+fn cmd_validate(_args: &Args) -> Result<()> {
+    // Cross-backend validation: native vs DES vs artifact on a spread of
+    // configurations; prints max relative difference per pair.
+    let native = Coordinator::native();
+    let des = Coordinator::des();
+    let artifact = Coordinator::artifact().ok();
+    let cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions {
+        ignore_capacity: true,
+        ..Default::default()
+    };
+    let mut max_nd: f64 = 0.0;
+    let mut max_na: f64 = 0.0;
+    for s in Strategy::sweep_bounded(1024, 1, 128) {
+        let w = Transformer::t1().build(&s)?;
+        let inputs = derive_inputs(&w, &cluster, &opts)?;
+        let n = native.evaluate_inputs(std::slice::from_ref(&inputs))?[0];
+        let d = des.evaluate_inputs(std::slice::from_ref(&inputs))?[0];
+        let nd = (n.total() - d.total()).abs() / n.total();
+        max_nd = max_nd.max(nd);
+        if let Some(a) = &artifact {
+            let ab = a.evaluate_inputs(std::slice::from_ref(&inputs))?[0];
+            let na = (n.total() - ab.total()).abs() / n.total();
+            max_na = max_na.max(na);
+        }
+        println!(
+            "{:>14}: native {:>10}  des {:>10}  delta {:.3}%",
+            s.label(),
+            fmt_secs(n.total()),
+            fmt_secs(d.total()),
+            nd * 100.0
+        );
+    }
+    println!("max native-vs-DES delta      : {:.3}%", max_nd * 100.0);
+    if artifact.is_some() {
+        println!("max native-vs-artifact delta : {:.4}%", max_na * 100.0);
+    } else {
+        println!("artifact backend unavailable (run `make artifacts`)");
+    }
+    if max_nd > 0.05 || max_na > 0.001 {
+        return Err(Error::Runtime("cross-backend validation failed".into()));
+    }
+    println!("validation OK");
+    Ok(())
+}
+
+const USAGE: &str = "usage: comet <figure|sweep|eval|footprint|config|workload|compare|validate> [options]
+see README.md for per-command options";
+
+fn run() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw);
+    match args.positional.first().map(String::as_str) {
+        Some("figure") => cmd_figure(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("footprint") => cmd_footprint(&args),
+        Some("config") => cmd_config(&args),
+        Some("workload") => cmd_workload(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("validate") => cmd_validate(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            Err(Error::Config("no command given".into()))
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("comet: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

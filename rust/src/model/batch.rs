@@ -1,0 +1,279 @@
+//! Artifact ABI: f32 tensor packing for the AOT-compiled batched evaluator.
+//!
+//! Mirrors `python/compile/kernels/layout.py` exactly; the manifest check
+//! ([`verify_manifest`]) refuses to run against artifacts exported with a
+//! different layout.
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+use super::inputs::ModelInputs;
+
+/// Layer slots per config (padded).
+pub const L: usize = 192;
+/// Compute-tensor fields.
+pub const CF: usize = 13;
+/// Comm-tensor fields.
+pub const MF: usize = 13;
+/// Params-tensor fields.
+pub const P: usize = 12;
+/// Output fields.
+pub const OUTF: usize = 6;
+/// Batch sizes with exported artifacts.
+pub const BATCH_SIZES: [usize; 2] = [8, 64];
+
+// compute fields
+const C_REPEAT: usize = 12;
+// comm fields
+const M_REPEAT: usize = 12;
+// params fields
+const P_PERF_PEAK: usize = 0;
+const P_BW_LM: usize = 1;
+const P_BW_EM: usize = 2;
+const P_CAP_LM: usize = 3;
+const P_SRAM: usize = 4;
+const P_FOOTPRINT: usize = 5;
+const P_BW_INTRA: usize = 6;
+const P_BW_INTER: usize = 7;
+const P_LINK_LAT: usize = 8;
+const P_OVERLAP_WG: usize = 9;
+const P_EM_FRAC: usize = 10;
+const P_COLL_IMPL: usize = 11;
+
+/// One packed configuration, ready to be stacked into a batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedConfig {
+    /// `L x CF` row-major.
+    pub compute: Vec<f32>,
+    /// `L x MF` row-major.
+    pub comm: Vec<f32>,
+    /// `P` values.
+    pub params: Vec<f32>,
+}
+
+/// Pack derived model inputs into the artifact ABI.
+pub fn pack(inputs: &ModelInputs) -> Result<PackedConfig> {
+    if inputs.layers.len() > L {
+        return Err(Error::AbiMismatch(format!(
+            "{} layers exceed the artifact's {} slots",
+            inputs.layers.len(),
+            L
+        )));
+    }
+    let mut compute = vec![0.0f32; L * CF];
+    let mut comm = vec![0.0f32; L * MF];
+    for (i, layer) in inputs.layers.iter().enumerate() {
+        let c = &mut compute[i * CF..(i + 1) * CF];
+        let m = &mut comm[i * MF..(i + 1) * MF];
+        for phase in 0..3 {
+            let q = &layer.q[phase];
+            c[phase * 4] = q.flops as f32;
+            c[phase * 4 + 1] = q.u as f32;
+            c[phase * 4 + 2] = q.v as f32;
+            c[phase * 4 + 3] = q.w as f32;
+            let s = &layer.comm[phase];
+            m[phase * 4] = s.bytes as f32;
+            m[phase * 4 + 1] = s.collective.code() as f32;
+            m[phase * 4 + 2] = s.n_intra as f32;
+            m[phase * 4 + 3] = s.n_inter as f32;
+        }
+        c[C_REPEAT] = layer.repeat as f32;
+        m[M_REPEAT] = layer.repeat as f32;
+    }
+
+    let p = &inputs.params;
+    let mut params = vec![0.0f32; P];
+    params[P_PERF_PEAK] = p.perf_peak as f32;
+    params[P_BW_LM] = p.bw_lm as f32;
+    params[P_BW_EM] = p.bw_em as f32;
+    params[P_CAP_LM] = p.cap_lm as f32;
+    params[P_SRAM] = p.sram as f32;
+    params[P_FOOTPRINT] = p.footprint as f32;
+    params[P_BW_INTRA] = p.bw_intra as f32;
+    params[P_BW_INTER] = p.bw_inter as f32;
+    params[P_LINK_LAT] = p.link_latency as f32;
+    params[P_OVERLAP_WG] = if p.overlap_wg { 1.0 } else { 0.0 };
+    params[P_EM_FRAC] = p.em_frac_override.map(|f| f as f32).unwrap_or(-1.0);
+    params[P_COLL_IMPL] = p.collective_impl.code() as f32;
+
+    Ok(PackedConfig {
+        compute,
+        comm,
+        params,
+    })
+}
+
+/// Stack packed configs into batch tensors, padding the tail by replicating
+/// an all-zero config (zero layers produce zero output, harmlessly).
+pub fn stack(batch: &[PackedConfig], b: usize) -> Result<BatchTensors> {
+    let mut out = BatchTensors {
+        b,
+        compute: Vec::new(),
+        comm: Vec::new(),
+        params: Vec::new(),
+        n_real: 0,
+    };
+    stack_into(batch, b, &mut out)?;
+    Ok(out)
+}
+
+/// Like [`stack`], but reuses the allocations of an existing
+/// [`BatchTensors`] (SPerf: avoids re-faulting ~1.3 MB of fresh pages per
+/// batch on the artifact hot path).
+pub fn stack_into(
+    batch: &[PackedConfig],
+    b: usize,
+    out: &mut BatchTensors,
+) -> Result<()> {
+    if batch.len() > b {
+        return Err(Error::AbiMismatch(format!(
+            "{} configs exceed batch size {b}",
+            batch.len()
+        )));
+    }
+    out.b = b;
+    out.n_real = batch.len();
+    out.compute.clear();
+    out.comm.clear();
+    out.params.clear();
+    // No-ops when the scratch buffers are already warm.
+    out.compute.reserve(b * L * CF);
+    out.comm.reserve(b * L * MF);
+    out.params.reserve(b * P);
+    for cfg in batch {
+        out.compute.extend_from_slice(&cfg.compute);
+        out.comm.extend_from_slice(&cfg.comm);
+        out.params.extend_from_slice(&cfg.params);
+    }
+    // Padded configs keep all-zero params; guard divisions exist in the
+    // kernels, so outputs for those rows are zero and discarded.
+    out.compute.resize(b * L * CF, 0.0);
+    out.comm.resize(b * L * MF, 0.0);
+    out.params.resize(b * P, 0.0);
+    Ok(())
+}
+
+/// Stacked batch tensors matching one artifact's input shapes.
+#[derive(Debug, Clone)]
+pub struct BatchTensors {
+    pub b: usize,
+    pub compute: Vec<f32>,
+    pub comm: Vec<f32>,
+    pub params: Vec<f32>,
+    pub n_real: usize,
+}
+
+/// Verify `artifacts/manifest.json` matches this crate's compiled-in layout.
+pub fn verify_manifest(manifest: &Value) -> Result<()> {
+    let check = |key: &str, want: usize| -> Result<()> {
+        let got = manifest
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| Error::AbiMismatch(format!("manifest missing '{key}'")))?;
+        if got != want {
+            return Err(Error::AbiMismatch(format!(
+                "manifest {key} = {got}, crate expects {want}"
+            )));
+        }
+        Ok(())
+    };
+    check("l", L)?;
+    check("cf", CF)?;
+    check("mf", MF)?;
+    check("p", P)?;
+    check("outf", OUTF)?;
+    let arts = manifest
+        .get("artifacts")
+        .ok_or_else(|| Error::AbiMismatch("manifest missing 'artifacts'".into()))?;
+    for b in BATCH_SIZES {
+        if arts.get(&b.to_string()).and_then(|v| v.as_str()).is_none() {
+            return Err(Error::AbiMismatch(format!(
+                "manifest missing artifact for batch size {b}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::inputs::{derive_inputs, EvalOptions};
+    use crate::parallel::Strategy;
+    use crate::util::json;
+    use crate::workload::transformer::Transformer;
+
+    fn sample_inputs() -> ModelInputs {
+        derive_inputs(
+            &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+            &presets::dgx_a100_1024(),
+            &EvalOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pack_shapes() {
+        let p = pack(&sample_inputs()).unwrap();
+        assert_eq!(p.compute.len(), L * CF);
+        assert_eq!(p.comm.len(), L * MF);
+        assert_eq!(p.params.len(), P);
+    }
+
+    #[test]
+    fn pack_places_repeat() {
+        let inputs = sample_inputs();
+        let p = pack(&inputs).unwrap();
+        for (i, l) in inputs.layers.iter().enumerate() {
+            assert_eq!(p.compute[i * CF + C_REPEAT], l.repeat as f32);
+            assert_eq!(p.comm[i * MF + M_REPEAT], l.repeat as f32);
+        }
+        // Padding slots: zero repeat.
+        let n = inputs.layers.len();
+        assert_eq!(p.compute[n * CF + C_REPEAT], 0.0);
+    }
+
+    #[test]
+    fn stack_pads_with_zeros() {
+        let p = pack(&sample_inputs()).unwrap();
+        let t = stack(&[p.clone(), p], 8).unwrap();
+        assert_eq!(t.n_real, 2);
+        assert_eq!(t.compute.len(), 8 * L * CF);
+        // Third config slot all zero.
+        assert!(t.compute[2 * L * CF..3 * L * CF].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn stack_rejects_overflow() {
+        let p = pack(&sample_inputs()).unwrap();
+        let many: Vec<_> = (0..9).map(|_| p.clone()).collect();
+        assert!(stack(&many, 8).is_err());
+    }
+
+    #[test]
+    fn manifest_verification() {
+        let good = json::parse(
+            r#"{"b":64,"l":192,"cf":13,"mf":13,"p":12,"outf":6,
+                "artifacts":{"8":"a.hlo.txt","64":"b.hlo.txt"}}"#,
+        )
+        .unwrap();
+        verify_manifest(&good).unwrap();
+
+        let bad = json::parse(
+            r#"{"b":64,"l":100,"cf":13,"mf":13,"p":12,"outf":6,
+                "artifacts":{"8":"a","64":"b"}}"#,
+        )
+        .unwrap();
+        assert!(verify_manifest(&bad).is_err());
+    }
+
+    #[test]
+    fn checked_in_manifest_matches_crate() {
+        // If `make artifacts` has run, the real manifest must match.
+        let path = std::path::Path::new("artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            verify_manifest(&json::parse(&text).unwrap()).unwrap();
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Native single-config evaluation entry point.
+
+use crate::analytical::{evaluate, TrainingBreakdown};
+use crate::config::ClusterConfig;
+use crate::error::Result;
+use crate::workload::Workload;
+
+use super::inputs::{derive_inputs, EvalOptions};
+
+/// Evaluate one (workload, cluster) pair with the native f64 backend.
+pub fn evaluate_native(
+    workload: &Workload,
+    cluster: &ClusterConfig,
+    opts: &EvalOptions,
+) -> Result<TrainingBreakdown> {
+    Ok(evaluate(&derive_inputs(workload, cluster, opts)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::parallel::Strategy;
+    use crate::workload::dlrm::Dlrm;
+    use crate::workload::transformer::Transformer;
+
+    #[test]
+    fn transformer_on_baseline() {
+        let b = evaluate_native(
+            &Transformer::t1().build(&Strategy::new(64, 16)).unwrap(),
+            &presets::dgx_a100_1024(),
+            &EvalOptions::default(),
+        )
+        .unwrap();
+        assert!(b.total() > 0.0 && b.total().is_finite());
+    }
+
+    #[test]
+    fn dlrm_on_64_nodes() {
+        let b = evaluate_native(
+            &Dlrm::dlrm_1_2t().build(64).unwrap(),
+            &presets::dgx_a100_64(),
+            &EvalOptions::default(),
+        )
+        .unwrap();
+        assert!(b.total() > 0.0 && b.total().is_finite());
+        // DLRM FP is dominated by the blocking all-to-all.
+        assert!(b.fp_exposed_comm > 0.0);
+    }
+
+    #[test]
+    fn fig13a_dlrm_time_sublinear_in_node_reduction() {
+        // Paper SV-C: halving nodes raises per-instance time sublinearly
+        // (in the 64..16 range) thanks to shrinking all-to-all cost.
+        let d = Dlrm::dlrm_1_2t();
+        let t = |n: usize| {
+            // Expanded memory present so spill doesn't explode (fig. 13a
+            // normalizes to a 2 TB/s memory system).
+            let mut cluster = presets::dgx_a100_64().with_n_nodes(n);
+            cluster.node = cluster.node.with_expanded(2e12, 2e12);
+            evaluate_native(
+                &d.build(n).unwrap(),
+                &cluster,
+                &EvalOptions::default(),
+            )
+            .unwrap()
+            .total()
+        };
+        let (t64, t32, t16) = (t(64), t(32), t(16));
+        assert!(t32 > t64, "{t64} {t32}");
+        assert!(t32 / t64 < 2.0, "sublinear 64->32: {}", t32 / t64);
+        assert!(t16 / t32 < 2.0, "sublinear 32->16: {}", t16 / t32);
+    }
+}

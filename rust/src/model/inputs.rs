@@ -1,0 +1,259 @@
+//! Derivation of cost-model inputs from (workload, cluster, options).
+//!
+//! This is the single place where workload structure meets cluster
+//! structure; every backend (native analytical, AOT artifact, DES) consumes
+//! the same [`ModelInputs`], which is what makes their cross-validation
+//! meaningful.
+
+use crate::config::ClusterConfig;
+use crate::error::{Error, Result};
+use crate::network::{CollectiveImpl, CollectiveSpec};
+use crate::parallel::{footprint_per_node, Strategy, ZeroStage};
+use crate::workload::{CommScope, Phase, PhaseQuantities, Workload};
+
+/// Evaluation options (the paper's per-figure modeling switches).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalOptions {
+    /// ZeRO stage for the footprint estimate (paper default: ZeRO-2).
+    pub zero_stage: ZeroStage,
+    /// Fig. 8a mode: assume infinite capacity at full local bandwidth
+    /// (no spill to expanded memory).
+    pub ignore_capacity: bool,
+    /// Override the derived EM traffic fraction (sensitivity studies).
+    pub em_frac_override: Option<f64>,
+    /// Override the derived per-node footprint, bytes.
+    pub footprint_override: Option<f64>,
+    /// Overlap WG communication with WG compute (paper SIII-C4 default).
+    pub overlap_wg: bool,
+    /// Collective implementation (Table I baseline: logical ring; the
+    /// SV-B4 network studies use hierarchical).
+    pub collective_impl: CollectiveImpl,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions {
+            zero_stage: ZeroStage::OsG,
+            ignore_capacity: false,
+            em_frac_override: None,
+            footprint_override: None,
+            overlap_wg: true,
+            collective_impl: CollectiveImpl::LogicalRing,
+        }
+    }
+}
+
+/// Resolved per-node / per-network parameters (f64, SI units).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeParams {
+    pub perf_peak: f64,
+    pub bw_lm: f64,
+    pub bw_em: f64,
+    pub cap_lm: f64,
+    pub sram: f64,
+    /// Per-node working footprint driving the spill model.
+    pub footprint: f64,
+    pub bw_intra: f64,
+    pub bw_inter: f64,
+    pub link_latency: f64,
+    pub overlap_wg: bool,
+    /// `Some(f)` forces the EM traffic fraction.
+    pub em_frac_override: Option<f64>,
+    /// Collective implementation.
+    pub collective_impl: CollectiveImpl,
+}
+
+/// One layer's resolved cost-model record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerRecord {
+    pub name: String,
+    pub repeat: f64,
+    /// Compute quantities for FP / IG / WG.
+    pub q: [PhaseQuantities; 3],
+    /// Collectives for FP / IG / WG (group shapes already resolved against
+    /// the topology).
+    pub comm: [CollectiveSpec; 3],
+}
+
+/// Everything the cost-model backends need.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInputs {
+    pub name: String,
+    pub layers: Vec<LayerRecord>,
+    pub params: NodeParams,
+}
+
+/// Resolve a [`CommScope`] into a two-level group shape.
+fn resolve_scope(
+    scope: CommScope,
+    workload: &Workload,
+    pod_size: usize,
+) -> (usize, usize) {
+    let strategy = Strategy::new(workload.mp, workload.dp);
+    match scope {
+        CommScope::Mp => strategy.mp_two_level(pod_size),
+        CommScope::Dp => strategy.dp_two_level(pod_size),
+        CommScope::All => {
+            let n = workload.nodes;
+            let intra = pod_size.min(n).max(1);
+            (intra, n / intra)
+        }
+    }
+}
+
+/// Derive the complete model inputs for one (workload, cluster) pair.
+pub fn derive_inputs(
+    workload: &Workload,
+    cluster: &ClusterConfig,
+    opts: &EvalOptions,
+) -> Result<ModelInputs> {
+    cluster.validate()?;
+    if workload.nodes > cluster.n_nodes {
+        return Err(Error::Config(format!(
+            "workload spans {} nodes but cluster {} has {}",
+            workload.nodes, cluster.name, cluster.n_nodes
+        )));
+    }
+    let view = cluster.two_level();
+
+    let footprint = opts.footprint_override.unwrap_or_else(|| {
+        footprint_per_node(
+            workload,
+            &Strategy::new(workload.mp, workload.dp),
+            opts.zero_stage,
+        )
+        .total()
+    });
+
+    let node = &cluster.node;
+    let params = NodeParams {
+        perf_peak: node.perf_peak,
+        bw_lm: node.local.bandwidth,
+        bw_em: node.expanded.bandwidth,
+        cap_lm: node.local.capacity,
+        sram: node.sram,
+        footprint,
+        bw_intra: view.bw_intra,
+        bw_inter: view.bw_inter,
+        link_latency: cluster.link_latency,
+        overlap_wg: opts.overlap_wg,
+        em_frac_override: if opts.ignore_capacity {
+            Some(0.0)
+        } else {
+            opts.em_frac_override
+        },
+        collective_impl: opts.collective_impl,
+    };
+
+    let layers = workload
+        .layers
+        .iter()
+        .map(|l| {
+            let mut q = [PhaseQuantities::default(); 3];
+            let mut comm = [CollectiveSpec {
+                collective: crate::workload::Collective::None,
+                bytes: 0.0,
+                n_intra: 1,
+                n_inter: 1,
+            }; 3];
+            for (i, phase) in Phase::ALL.iter().enumerate() {
+                q[i] = l.op.quantities(*phase);
+                let c = l.comm(*phase);
+                let (ni, nx) = resolve_scope(c.scope, workload, view.pod_size);
+                comm[i] = CollectiveSpec {
+                    collective: c.collective,
+                    bytes: c.bytes,
+                    n_intra: ni,
+                    n_inter: nx,
+                };
+            }
+            LayerRecord {
+                name: l.name.clone(),
+                repeat: l.repeat,
+                q,
+                comm,
+            }
+        })
+        .collect();
+
+    Ok(ModelInputs {
+        name: format!("{}%{}", workload.name, cluster.name),
+        layers,
+        params,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::workload::dlrm::Dlrm;
+    use crate::workload::transformer::Transformer;
+
+    #[test]
+    fn mp8_collectives_stay_intra_pod() {
+        let cluster = presets::dgx_a100_1024();
+        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let inp = derive_inputs(&w, &cluster, &EvalOptions::default()).unwrap();
+        let mlp2 = inp.layers.iter().find(|l| l.name == "mlp-2").unwrap();
+        // FP all-reduce: MP8 inside an 8-GPU pod.
+        assert_eq!(mlp2.comm[0].n_intra, 8);
+        assert_eq!(mlp2.comm[0].n_inter, 1);
+        // WG all-reduce: DP128, one peer per pod.
+        assert_eq!(mlp2.comm[2].n_intra, 1);
+        assert_eq!(mlp2.comm[2].n_inter, 128);
+    }
+
+    #[test]
+    fn mp64_straddles_pods() {
+        let cluster = presets::dgx_a100_1024();
+        let w = Transformer::t1().build(&Strategy::new(64, 16)).unwrap();
+        let inp = derive_inputs(&w, &cluster, &EvalOptions::default()).unwrap();
+        let mlp2 = inp.layers.iter().find(|l| l.name == "mlp-2").unwrap();
+        assert_eq!(mlp2.comm[0].n_intra, 8);
+        assert_eq!(mlp2.comm[0].n_inter, 8);
+    }
+
+    #[test]
+    fn dlrm_alltoall_spans_everything() {
+        let cluster = presets::dgx_a100_64();
+        let w = Dlrm::dlrm_1_2t().build(64).unwrap();
+        let inp = derive_inputs(&w, &cluster, &EvalOptions::default()).unwrap();
+        let emb = &inp.layers[0];
+        assert_eq!(emb.comm[0].n(), 64);
+        assert_eq!(emb.comm[0].n_intra, 8);
+    }
+
+    #[test]
+    fn ignore_capacity_forces_no_spill() {
+        let cluster = presets::dgx_a100_1024();
+        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+        assert_eq!(inp.params.em_frac_override, Some(0.0));
+        // Footprint still reported (for the figure's secondary axis).
+        assert!(inp.params.footprint > 80e9);
+    }
+
+    #[test]
+    fn oversubscribed_workload_rejected() {
+        let cluster = presets::dgx_a100_64();
+        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        assert!(derive_inputs(&w, &cluster, &EvalOptions::default()).is_err());
+    }
+
+    #[test]
+    fn footprint_override_wins() {
+        let cluster = presets::dgx_a100_1024();
+        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let opts = EvalOptions {
+            footprint_override: Some(123e9),
+            ..Default::default()
+        };
+        let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+        assert_eq!(inp.params.footprint, 123e9);
+    }
+}

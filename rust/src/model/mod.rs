@@ -1,0 +1,11 @@
+//! Glue between workloads, clusters, and the cost-model backends: derives
+//! the per-layer model inputs once, then hands them to the native f64
+//! evaluator ([`crate::analytical`]), the f32 AOT artifact
+//! ([`crate::runtime`]), or the discrete-event simulator ([`crate::sim`]).
+
+pub mod batch;
+pub mod eval;
+pub mod inputs;
+
+pub use eval::evaluate_native;
+pub use inputs::{derive_inputs, EvalOptions, LayerRecord, ModelInputs, NodeParams};

@@ -1,0 +1,249 @@
+//! Chunked collective schedules for the discrete-event backend.
+//!
+//! The DES does not integrate closed-form costs; it *executes* collectives
+//! as sequences of link-level transfer phases (as ASTRA-SIM's system layer
+//! schedules chunks onto the network layer). Each [`TransferPhase`] is a
+//! synchronous ring step: every participant simultaneously sends `bytes`
+//! over one link class, taking `bytes / bw + lat`.
+
+use super::collectives::{CollectiveImpl, CollectiveSpec};
+use crate::workload::Collective;
+
+/// Which link class a phase occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    IntraPod,
+    InterPod,
+}
+
+/// One synchronous transfer step of a collective schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferPhase {
+    pub link: LinkClass,
+    /// Bytes each participant moves in this step.
+    pub bytes: f64,
+    /// Ring steps folded into this phase (latency hops).
+    pub hops: usize,
+}
+
+/// Expand a collective into its transfer phases.
+///
+/// Logical ring: one flat ring pass (two for all-reduce) over all n
+/// participants, on the slowest link class the ring crosses. Hierarchical:
+/// intra reduce-scatter, inter reduce-scatter + all-gather on the
+/// `bytes/n_intra` shard, intra all-gather. All-to-all: one concurrent
+/// phase per link class (the DES serializes them on their own links,
+/// reproducing the analytical max()).
+pub fn schedule(spec: &CollectiveSpec, impl_: CollectiveImpl) -> Vec<TransferPhase> {
+    let n = spec.n();
+    if spec.bytes <= 0.0 || n <= 1 {
+        return Vec::new();
+    }
+    let ni = spec.n_intra;
+    let nx = spec.n_inter;
+    let shard = spec.bytes / ni.max(1) as f64;
+    let mut phases = Vec::new();
+
+    let flat_link = if nx > 1 {
+        LinkClass::InterPod
+    } else {
+        LinkClass::IntraPod
+    };
+    let flat_pass = |phases: &mut Vec<TransferPhase>| {
+        phases.push(TransferPhase {
+            link: flat_link,
+            bytes: spec.bytes * (n as f64 - 1.0) / n as f64,
+            hops: n - 1,
+        });
+    };
+    let intra_pass = |phases: &mut Vec<TransferPhase>, bytes: f64| {
+        if ni > 1 {
+            phases.push(TransferPhase {
+                link: LinkClass::IntraPod,
+                bytes: bytes * (ni as f64 - 1.0) / ni as f64,
+                hops: ni - 1,
+            });
+        }
+    };
+    let inter_pass = |phases: &mut Vec<TransferPhase>, bytes: f64| {
+        if nx > 1 {
+            phases.push(TransferPhase {
+                link: LinkClass::InterPod,
+                bytes: bytes * (nx as f64 - 1.0) / nx as f64,
+                hops: nx - 1,
+            });
+        }
+    };
+
+    match (spec.collective, impl_) {
+        (Collective::None, _) => {}
+        (Collective::AllReduce, CollectiveImpl::LogicalRing) => {
+            flat_pass(&mut phases);
+            flat_pass(&mut phases);
+        }
+        (Collective::AllReduce, CollectiveImpl::Hierarchical) => {
+            intra_pass(&mut phases, spec.bytes); // reduce-scatter
+            inter_pass(&mut phases, shard); // inter RS
+            inter_pass(&mut phases, shard); // inter AG
+            intra_pass(&mut phases, spec.bytes); // all-gather
+        }
+        (
+            Collective::AllGather | Collective::ReduceScatter,
+            CollectiveImpl::LogicalRing,
+        ) => {
+            flat_pass(&mut phases);
+        }
+        (
+            Collective::AllGather | Collective::ReduceScatter,
+            CollectiveImpl::Hierarchical,
+        ) => {
+            intra_pass(&mut phases, spec.bytes);
+            inter_pass(&mut phases, shard);
+        }
+        (Collective::AllToAll, _) => {
+            let peers = (n as f64 - 1.0).max(1.0);
+            let f_intra = (ni as f64 - 1.0).max(0.0) / peers;
+            if f_intra > 0.0 {
+                phases.push(TransferPhase {
+                    link: LinkClass::IntraPod,
+                    bytes: spec.bytes * f_intra,
+                    hops: ni - 1,
+                });
+            }
+            if f_intra < 1.0 {
+                phases.push(TransferPhase {
+                    link: LinkClass::InterPod,
+                    bytes: spec.bytes * (1.0 - f_intra),
+                    hops: n - ni.max(1),
+                });
+            }
+        }
+    }
+    phases
+}
+
+/// Whether the phases of this collective may proceed concurrently on their
+/// link classes (true only for all-to-all).
+pub fn concurrent_phases(c: Collective) -> bool {
+    matches!(c, Collective::AllToAll)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::collectives::collective_cost;
+    use CollectiveImpl::{Hierarchical, LogicalRing};
+
+    fn spec(c: Collective, bytes: f64, ni: usize, nx: usize) -> CollectiveSpec {
+        CollectiveSpec {
+            collective: c,
+            bytes,
+            n_intra: ni,
+            n_inter: nx,
+        }
+    }
+
+    /// Integrating the schedule serially (or max() for all-to-all) must
+    /// reproduce the closed-form analytical cost exactly.
+    fn integrate(
+        s: &CollectiveSpec,
+        bwi: f64,
+        bwx: f64,
+        lat: f64,
+        impl_: CollectiveImpl,
+    ) -> f64 {
+        let phases = schedule(s, impl_);
+        let t = |p: &TransferPhase| {
+            let bw = match p.link {
+                LinkClass::IntraPod => bwi,
+                LinkClass::InterPod => bwx,
+            };
+            p.bytes / bw + p.hops as f64 * lat
+        };
+        if concurrent_phases(s.collective) {
+            phases.iter().map(|p| t(p)).fold(0.0, f64::max)
+                + if phases.is_empty() { 0.0 } else { 0.0 }
+        } else {
+            phases.iter().map(|p| t(p)).sum()
+        }
+    }
+
+    #[test]
+    fn allreduce_schedule_matches_closed_form() {
+        for impl_ in [LogicalRing, Hierarchical] {
+            for (ni, nx) in [(8, 1), (1, 16), (8, 16), (16, 64), (2, 2)] {
+                let s = spec(Collective::AllReduce, 1e9, ni, nx);
+                let a = collective_cost(&s, 300e9, 31.25e9, 0.0, impl_);
+                let b = integrate(&s, 300e9, 31.25e9, 0.0, impl_);
+                assert!((a - b).abs() / a.max(1e-30) < 1e-12, "{ni}x{nx}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_schedule_matches_with_latency() {
+        for impl_ in [LogicalRing, Hierarchical] {
+            for (ni, nx) in [(8, 1), (8, 16), (4, 4)] {
+                let s = spec(Collective::AllReduce, 1e9, ni, nx);
+                let a = collective_cost(&s, 300e9, 31.25e9, 1e-6, impl_);
+                let b = integrate(&s, 300e9, 31.25e9, 1e-6, impl_);
+                assert!((a - b).abs() < 1e-12, "{ni}x{nx}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_collectives_match() {
+        for impl_ in [LogicalRing, Hierarchical] {
+            for c in [Collective::AllGather, Collective::ReduceScatter] {
+                let s = spec(c, 2e9, 8, 16);
+                let a = collective_cost(&s, 300e9, 31.25e9, 1e-6, impl_);
+                let b = integrate(&s, 300e9, 31.25e9, 1e-6, impl_);
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_concurrency_matches_max() {
+        let s = spec(Collective::AllToAll, 64e9, 8, 8);
+        let a = collective_cost(&s, 300e9, 31.25e9, 0.0, LogicalRing);
+        let b = integrate(&s, 300e9, 31.25e9, 0.0, LogicalRing);
+        assert!((a - b).abs() / a < 1e-12);
+    }
+
+    #[test]
+    fn empty_for_degenerate() {
+        for impl_ in [LogicalRing, Hierarchical] {
+            assert!(
+                schedule(&spec(Collective::AllReduce, 1e9, 1, 1), impl_)
+                    .is_empty()
+            );
+            assert!(
+                schedule(&spec(Collective::AllReduce, 0.0, 8, 8), impl_)
+                    .is_empty()
+            );
+            assert!(
+                schedule(&spec(Collective::None, 1e9, 8, 8), impl_).is_empty()
+            );
+        }
+    }
+
+    #[test]
+    fn allreduce_phase_counts() {
+        let s = |ni, nx| spec(Collective::AllReduce, 1e9, ni, nx);
+        assert_eq!(schedule(&s(8, 16), Hierarchical).len(), 4);
+        assert_eq!(schedule(&s(8, 1), Hierarchical).len(), 2);
+        assert_eq!(schedule(&s(1, 16), Hierarchical).len(), 2);
+        assert_eq!(schedule(&s(8, 16), LogicalRing).len(), 2);
+        // Flat ring crossing pods rides the inter-pod links.
+        assert_eq!(
+            schedule(&s(8, 16), LogicalRing)[0].link,
+            LinkClass::InterPod
+        );
+        assert_eq!(
+            schedule(&s(8, 1), LogicalRing)[0].link,
+            LinkClass::IntraPod
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! Analytical collective cost model on a two-level (intra-pod / inter-pod)
+//! topology with ring schedules per level — the paper's "Logical Ring"
+//! collectives with BlueConnect/Themis-style hierarchical decomposition.
+//!
+//! Must stay numerically identical to the L1 Pallas kernel and the jnp
+//! oracle (python/compile/kernels/{collective,ref}.py); the cross-layer
+//! integration test enforces this.
+
+use crate::workload::Collective;
+
+/// Collective implementation (paper Table I vs SV-B4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CollectiveImpl {
+    /// "Logical Ring" (Table I baseline): one flat ring over all
+    /// participants, serialized by the slowest link class it crosses.
+    #[default]
+    LogicalRing,
+    /// Hierarchical (BlueConnect/Themis): per-level ring passes with the
+    /// inter-pod stage operating on the intra-reduced shard. Used by the
+    /// paper's network studies (Figs. 11-12).
+    Hierarchical,
+}
+
+impl CollectiveImpl {
+    /// ABI code (layout.py P_COLL_IMPL).
+    pub fn code(self) -> f64 {
+        match self {
+            CollectiveImpl::LogicalRing => 0.0,
+            CollectiveImpl::Hierarchical => 1.0,
+        }
+    }
+}
+
+/// A fully resolved collective: payload, type, and two-level group shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveSpec {
+    pub collective: Collective,
+    /// Payload bytes per participant.
+    pub bytes: f64,
+    /// Participants sharing a pod.
+    pub n_intra: usize,
+    /// Participant groups across pods.
+    pub n_inter: usize,
+}
+
+impl CollectiveSpec {
+    /// Total participants.
+    pub fn n(&self) -> usize {
+        self.n_intra * self.n_inter
+    }
+}
+
+/// One ring pass (reduce-scatter or all-gather) over `n` peers at
+/// per-node link bandwidth `bw`: `(n-1)/n x bytes / bw + (n-1) x lat`.
+fn ring_pass(bytes: f64, n: f64, bw: f64, lat: f64) -> f64 {
+    if n <= 1.0 {
+        return 0.0;
+    }
+    (n - 1.0) / n * bytes / bw.max(1.0) + (n - 1.0) * lat
+}
+
+/// Cost (seconds) of a collective on the two-level topology.
+///
+/// * All-reduce, logical ring: `2 (n-1)/n x bytes / bw_flat` where
+///   `bw_flat` is the inter-pod bandwidth when the ring crosses pods.
+/// * All-reduce, hierarchical: intra-pod reduce-scatter, inter-pod
+///   all-reduce of the `bytes / n_intra` shard, intra-pod all-gather.
+///   Degenerate levels contribute zero, covering flat groups.
+/// * All-to-all (either impl): intra- and inter-pod portions proceed
+///   concurrently on their own link classes; cost is the max of the
+///   serialization times.
+/// * All-gather / reduce-scatter: a single ring pass (per level).
+pub fn collective_cost(
+    spec: &CollectiveSpec,
+    bw_intra: f64,
+    bw_inter: f64,
+    lat: f64,
+    impl_: CollectiveImpl,
+) -> f64 {
+    let n = spec.n() as f64;
+    if spec.bytes <= 0.0 || n <= 1.0 {
+        return 0.0;
+    }
+    let ni = spec.n_intra as f64;
+    let nx = spec.n_inter as f64;
+    let shard = spec.bytes / ni.max(1.0);
+    let bw_flat = if spec.n_inter > 1 { bw_inter } else { bw_intra };
+    match spec.collective {
+        Collective::None => 0.0,
+        Collective::AllReduce => match impl_ {
+            CollectiveImpl::LogicalRing => {
+                2.0 * ring_pass(spec.bytes, n, bw_flat, lat)
+            }
+            CollectiveImpl::Hierarchical => {
+                ring_pass(spec.bytes, ni, bw_intra, lat)
+                    + 2.0 * ring_pass(shard, nx, bw_inter, lat)
+                    + ring_pass(spec.bytes, ni, bw_intra, lat)
+            }
+        },
+        Collective::AllToAll => {
+            let peers = (n - 1.0).max(1.0);
+            let f_intra = (ni - 1.0).max(0.0) / peers;
+            let f_inter = 1.0 - f_intra;
+            (spec.bytes * f_intra / bw_intra.max(1.0))
+                .max(spec.bytes * f_inter / bw_inter.max(1.0))
+                + (n - 1.0) * lat
+        }
+        Collective::AllGather | Collective::ReduceScatter => match impl_ {
+            CollectiveImpl::LogicalRing => ring_pass(spec.bytes, n, bw_flat, lat),
+            CollectiveImpl::Hierarchical => {
+                ring_pass(spec.bytes, ni, bw_intra, lat)
+                    + ring_pass(shard, nx, bw_inter, lat)
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use CollectiveImpl::{Hierarchical, LogicalRing};
+
+    fn ar(bytes: f64, ni: usize, nx: usize) -> CollectiveSpec {
+        CollectiveSpec {
+            collective: Collective::AllReduce,
+            bytes,
+            n_intra: ni,
+            n_inter: nx,
+        }
+    }
+
+    #[test]
+    fn flat_ring_allreduce_closed_form() {
+        let c = collective_cost(&ar(1e9, 8, 1), 300e9, 31.25e9, 0.0, Hierarchical);
+        let want = 2.0 * 7.0 / 8.0 * 1e9 / 300e9;
+        assert!((c - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn inter_only_ring() {
+        let c = collective_cost(&ar(1e9, 1, 16), 300e9, 31.25e9, 0.0, Hierarchical);
+        let want = 2.0 * 15.0 / 16.0 * 1e9 / 31.25e9;
+        assert!((c - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_over_slow_links() {
+        let hier =
+            collective_cost(&ar(1e9, 8, 16), 300e9, 31.25e9, 0.0, Hierarchical);
+        let flat =
+            collective_cost(&ar(1e9, 8, 16), 300e9, 31.25e9, 0.0, LogicalRing);
+        let want_flat = 2.0 * 127.0 / 128.0 * 1e9 / 31.25e9;
+        assert!((flat - want_flat).abs() / want_flat < 1e-12);
+        assert!(hier < flat, "hier {hier} flat {flat}");
+    }
+
+    #[test]
+    fn singleton_group_free() {
+        for impl_ in [LogicalRing, Hierarchical] {
+            assert_eq!(
+                collective_cost(&ar(1e9, 1, 1), 300e9, 31.25e9, 1e-6, impl_),
+                0.0
+            );
+            assert_eq!(
+                collective_cost(&ar(0.0, 8, 8), 300e9, 31.25e9, 1e-6, impl_),
+                0.0
+            );
+        }
+    }
+
+    #[test]
+    fn alltoall_balances_link_classes() {
+        let spec = CollectiveSpec {
+            collective: Collective::AllToAll,
+            bytes: 64e9,
+            n_intra: 8,
+            n_inter: 8,
+        };
+        // 7/63 of peers intra, 56/63 inter.
+        let c = collective_cost(&spec, 300e9, 31.25e9, 0.0, Hierarchical);
+        let want = (64e9 * (56.0 / 63.0) / 31.25e9_f64)
+            .max(64e9 * (7.0 / 63.0) / 300e9);
+        assert!((c - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn allgather_is_half_of_allreduce_flat() {
+        let ag = CollectiveSpec {
+            collective: Collective::AllGather,
+            bytes: 1e9,
+            n_intra: 8,
+            n_inter: 1,
+        };
+        let arr = ar(1e9, 8, 1);
+        let cag = collective_cost(&ag, 300e9, 31.25e9, 0.0, Hierarchical);
+        let car = collective_cost(&arr, 300e9, 31.25e9, 0.0, Hierarchical);
+        assert!((car / cag - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_term_scales_with_steps() {
+        let no_lat = collective_cost(&ar(1e6, 8, 1), 300e9, 31.25e9, 0.0, Hierarchical);
+        let with_lat = collective_cost(&ar(1e6, 8, 1), 300e9, 31.25e9, 1e-6, Hierarchical);
+        assert!((with_lat - no_lat - 14.0 * 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_bytes_and_bandwidth() {
+        let base = collective_cost(&ar(1e9, 8, 16), 300e9, 31.25e9, 1e-6, Hierarchical);
+        assert!(collective_cost(&ar(2e9, 8, 16), 300e9, 31.25e9, 1e-6, Hierarchical) > base);
+        assert!(collective_cost(&ar(1e9, 8, 16), 600e9, 62.5e9, 1e-6, Hierarchical) < base);
+    }
+
+    #[test]
+    fn more_pods_cost_more() {
+        let mut prev = 0.0;
+        for nx in [1, 2, 4, 8, 16, 32] {
+            let c = collective_cost(&ar(1e9, 8, nx), 300e9, 31.25e9, 1e-6, Hierarchical);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Inter-node communication models (paper SIII-C3): collective cost on the
+//! two-level topology view, and chunked collective schedules consumed by
+//! the discrete-event backend.
+
+pub mod chunking;
+pub mod collectives;
+
+pub use collectives::{collective_cost, CollectiveImpl, CollectiveSpec};

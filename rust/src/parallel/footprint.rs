@@ -1,0 +1,137 @@
+//! Total per-node memory footprint (paper SIII-B + SIV-B): model states
+//! under ZeRO, residual states (fp16 activation parameters), and the
+//! activation working memory between two checkpoints (ZeRO-Infinity's AWM;
+//! checkpoint activations themselves are host-offloaded and excluded).
+
+use super::strategy::Strategy;
+use super::zero::{model_state_bytes, ZeroStage};
+use crate::workload::{LayerOp, Workload, FP16};
+
+/// Per-node footprint decomposition, bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FootprintBreakdown {
+    /// Parameters + gradients + optimizer state under the ZeRO stage.
+    pub model_states: f64,
+    /// Residual states: fp16 activation parameters of the MP shard.
+    pub residual: f64,
+    /// Activation working memory (largest inter-checkpoint activation).
+    pub awm: f64,
+}
+
+impl FootprintBreakdown {
+    /// Total bytes.
+    pub fn total(&self) -> f64 {
+        self.model_states + self.residual + self.awm
+    }
+}
+
+/// Footprint for a decomposed workload on its (MP, DP) strategy.
+///
+/// `workload` must have been built for `strategy` (its layer shards are
+/// already per-node); `stage` selects the ZeRO optimization.
+pub fn footprint_per_node(
+    workload: &Workload,
+    strategy: &Strategy,
+    stage: ZeroStage,
+) -> FootprintBreakdown {
+    let model_states = model_state_bytes(
+        workload.total_params,
+        strategy.mp,
+        strategy.dp,
+        stage,
+    );
+
+    // Residual states: activations produced per layer instance held for
+    // backward (fp16). Scaled by repeats; attention scores and embeddings
+    // included via activation_elems.
+    let residual: f64 = workload
+        .layers
+        .iter()
+        .map(|l| {
+            // Weight-update is bookkeeping, not an activation producer.
+            if matches!(l.op, LayerOp::WeightUpdate { .. }) {
+                0.0
+            } else {
+                l.activation_elems() * FP16
+            }
+        })
+        .sum::<f64>()
+        * checkpoint_fraction(workload);
+
+    let awm = workload.activation_working_elems() * FP16;
+
+    FootprintBreakdown {
+        model_states,
+        residual,
+        awm,
+    }
+}
+
+/// Fraction of activations held after checkpointing: one stack boundary per
+/// repeat group (sqrt-style selective recomputation; checkpoints offloaded
+/// to host per SIV-B, so only a thin margin of residual state stays).
+fn checkpoint_fraction(w: &Workload) -> f64 {
+    let max_repeat = w.layers.iter().map(|l| l.repeat).fold(1.0, f64::max);
+    (1.0 / max_repeat).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::transformer::Transformer;
+
+    #[test]
+    fn fig3_footprint_doubles_when_dp_doubles() {
+        // Paper SIII-B: moving (DP=2, MP=m) -> (DP=4, MP=m/2) doubles the
+        // per-node requirement.
+        let t = Transformer::t1();
+        let f = |mp: usize, dp: usize| {
+            let s = Strategy::new(mp, dp);
+            let w = t.build(&s).unwrap();
+            footprint_per_node(&w, &s, ZeroStage::Baseline).model_states
+        };
+        let r = f(64, 16) / f(128, 8);
+        assert!((r - 2.0).abs() < 1e-9, "{r}");
+    }
+
+    #[test]
+    fn mp8_dp128_needs_memory_expansion() {
+        // Fig. 8a: MP8_DP128 needs ~250+ GB, over 3x the A100's 80 GB.
+        let t = Transformer::t1();
+        let s = Strategy::new(8, 128);
+        let w = t.build(&s).unwrap();
+        let fp = footprint_per_node(&w, &s, ZeroStage::OsG);
+        assert!(fp.total() > 3.0 * 80e9, "{:.3e}", fp.total());
+        assert!(fp.total() < 6.0 * 80e9, "{:.3e}", fp.total());
+    }
+
+    #[test]
+    fn mp64_dp16_fits_in_80gb() {
+        // Fig. 8a: MP64 is the first in-memory-feasible configuration.
+        let t = Transformer::t1();
+        let s = Strategy::new(64, 16);
+        let w = t.build(&s).unwrap();
+        let fp = footprint_per_node(&w, &s, ZeroStage::OsG);
+        assert!(fp.total() <= 80e9, "{:.4e}", fp.total());
+    }
+
+    #[test]
+    fn awm_positive_and_below_model_states_at_scale() {
+        let t = Transformer::t1();
+        let s = Strategy::new(8, 128);
+        let w = t.build(&s).unwrap();
+        let fp = footprint_per_node(&w, &s, ZeroStage::OsG);
+        assert!(fp.awm > 0.0);
+        assert!(fp.awm < fp.model_states);
+    }
+
+    #[test]
+    fn total_sums_components() {
+        let fp = FootprintBreakdown {
+            model_states: 1.0,
+            residual: 2.0,
+            awm: 3.0,
+        };
+        assert_eq!(fp.total(), 6.0);
+    }
+}

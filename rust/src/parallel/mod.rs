@@ -1,0 +1,10 @@
+//! Parallelization strategies (paper SIII-B / SIV-B): the (MP, DP) sweep,
+//! ZeRO-DP memory optimizations, and per-node footprint estimation.
+
+mod footprint;
+mod strategy;
+mod zero;
+
+pub use footprint::{footprint_per_node, FootprintBreakdown};
+pub use strategy::Strategy;
+pub use zero::{model_state_bytes, ZeroStage};

@@ -1,0 +1,155 @@
+//! The (MP, DP) parallelization strategy and its power-of-two sweep.
+
+use crate::error::{Error, Result};
+
+/// A model/data parallelism split. Invariant: `mp * dp == cluster size`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Strategy {
+    /// Model-parallel degree (consecutive nodes share one model copy).
+    pub mp: usize,
+    /// Data-parallel degree (replicas of the MP group).
+    pub dp: usize,
+}
+
+impl Strategy {
+    /// New strategy; degrees must be >= 1.
+    pub fn new(mp: usize, dp: usize) -> Strategy {
+        assert!(mp >= 1 && dp >= 1, "degrees must be >= 1");
+        Strategy { mp, dp }
+    }
+
+    /// Total nodes used.
+    pub fn nodes(&self) -> usize {
+        self.mp * self.dp
+    }
+
+    /// The paper's label convention, e.g. "MP8_DP128".
+    pub fn label(&self) -> String {
+        format!("MP{}_DP{}", self.mp, self.dp)
+    }
+
+    /// Parse "MP8_DP128".
+    pub fn parse(s: &str) -> Result<Strategy> {
+        let err = || Error::Config(format!("bad strategy '{s}', want MP<m>_DP<d>"));
+        let rest = s.strip_prefix("MP").ok_or_else(err)?;
+        let (m, d) = rest.split_once("_DP").ok_or_else(err)?;
+        let mp = m.parse().map_err(|_| err())?;
+        let dp = d.parse().map_err(|_| err())?;
+        if mp == 0 || dp == 0 {
+            return Err(err());
+        }
+        Ok(Strategy { mp, dp })
+    }
+
+    /// All power-of-two splits of a cluster of `n` nodes, from
+    /// (MP=n, DP=1) down to (MP=1, DP=n) — the paper's SIII-B sweep order.
+    pub fn sweep(n: usize) -> Vec<Strategy> {
+        assert!(n.is_power_of_two(), "cluster size must be a power of two");
+        let mut out = Vec::new();
+        let mut mp = n;
+        loop {
+            out.push(Strategy { mp, dp: n / mp });
+            if mp == 1 {
+                break;
+            }
+            mp /= 2;
+        }
+        out
+    }
+
+    /// The sweep restricted to `mp <= max_mp` (fig. 9 omits MP > 256) and
+    /// `mp >= min_mp`.
+    pub fn sweep_bounded(n: usize, min_mp: usize, max_mp: usize) -> Vec<Strategy> {
+        Self::sweep(n)
+            .into_iter()
+            .filter(|s| s.mp >= min_mp && s.mp <= max_mp)
+            .collect()
+    }
+
+    /// Two-level decomposition of the MP group on a podded topology:
+    /// `(intra, inter)` — how many MP peers share a pod, and how many pods
+    /// the group spans. MP groups occupy consecutive nodes (SIII-B).
+    pub fn mp_two_level(&self, pod_size: usize) -> (usize, usize) {
+        let intra = self.mp.min(pod_size);
+        (intra, self.mp / intra)
+    }
+
+    /// Two-level decomposition of the DP group. DP peers are strided by
+    /// `mp`: if an MP group fills (or exceeds) a pod, every DP peer lives
+    /// in a different pod; otherwise `pod_size / mp` DP peers share a pod.
+    pub fn dp_two_level(&self, pod_size: usize) -> (usize, usize) {
+        let intra = (pod_size / self.mp).max(1).min(self.dp);
+        (intra, self.dp / intra)
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_all_pow2_splits() {
+        let s = Strategy::sweep(1024);
+        assert_eq!(s.len(), 11);
+        assert_eq!(s[0], Strategy::new(1024, 1));
+        assert_eq!(s[10], Strategy::new(1, 1024));
+        for st in &s {
+            assert_eq!(st.nodes(), 1024);
+        }
+    }
+
+    #[test]
+    fn sweep_bounded_filters() {
+        let s = Strategy::sweep_bounded(1024, 2, 256);
+        assert!(s.iter().all(|st| st.mp >= 2 && st.mp <= 256));
+        assert_eq!(s.len(), 8);
+    }
+
+    #[test]
+    fn label_roundtrip() {
+        for st in Strategy::sweep(64) {
+            assert_eq!(Strategy::parse(&st.label()).unwrap(), st);
+        }
+        assert!(Strategy::parse("MP0_DP4").is_err());
+        assert!(Strategy::parse("DP4_MP2").is_err());
+        assert!(Strategy::parse("MP8DP2").is_err());
+    }
+
+    #[test]
+    fn mp_two_level_respects_pods() {
+        // MP8 in 8-GPU pods: fully intra-pod.
+        assert_eq!(Strategy::new(8, 128).mp_two_level(8), (8, 1));
+        // MP64 in 8-GPU pods: 8 peers/pod x 8 pods.
+        assert_eq!(Strategy::new(64, 16).mp_two_level(8), (8, 8));
+        // MP2: inside one pod.
+        assert_eq!(Strategy::new(2, 512).mp_two_level(8), (2, 1));
+    }
+
+    #[test]
+    fn dp_two_level_strides() {
+        // MP8 fills the pod: every DP peer in a different pod.
+        assert_eq!(Strategy::new(8, 128).dp_two_level(8), (1, 128));
+        // MP2 in 8-GPU pods: 4 DP peers per pod, 128 pods.
+        assert_eq!(Strategy::new(2, 512).dp_two_level(8), (4, 128));
+        // MP1024_DP1: degenerate DP.
+        assert_eq!(Strategy::new(1024, 1).dp_two_level(8), (1, 1));
+    }
+
+    #[test]
+    fn two_level_products_match_degrees() {
+        for pod in [4usize, 8, 16] {
+            for st in Strategy::sweep(256) {
+                let (mi, mx) = st.mp_two_level(pod);
+                assert_eq!(mi * mx, st.mp);
+                let (di, dx) = st.dp_two_level(pod);
+                assert_eq!(di * dx, st.dp);
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! ZeRO-DP model-state memory model (paper SIV-B, Fig. 6; Rajbhandari et
+//! al.'s ZeRO paper).
+//!
+//! Mixed-precision Adam training keeps, per parameter:
+//!   * 2 B fp16 parameters
+//!   * 2 B fp16 gradients
+//!   * 12 B fp32 optimizer state (master params + momentum + variance)
+//!
+//! MP shards all three by `1/MP`. ZeRO additionally partitions across DP:
+//!   * stage 0 (baseline): nothing partitioned
+//!   * stage 1 (os):       optimizer state / DP
+//!   * stage 2 (os+g):     + gradients / DP      (the paper's default)
+//!   * stage 3 (os+g+p):   + parameters / DP
+
+/// Bytes per parameter of each model-state component.
+pub const PARAM_BYTES: f64 = 2.0;
+pub const GRAD_BYTES: f64 = 2.0;
+pub const OPTIM_BYTES: f64 = 12.0;
+
+/// ZeRO-DP optimization stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ZeroStage {
+    /// No ZeRO: every node replicates all model states of its MP shard.
+    Baseline,
+    /// ZeRO-1: optimizer states partitioned across DP.
+    Os,
+    /// ZeRO-2: optimizer states + gradients partitioned (paper default).
+    OsG,
+    /// ZeRO-3: optimizer states + gradients + parameters partitioned.
+    OsGP,
+}
+
+impl ZeroStage {
+    /// All stages in Fig. 6 order.
+    pub const ALL: [ZeroStage; 4] =
+        [ZeroStage::Baseline, ZeroStage::Os, ZeroStage::OsG, ZeroStage::OsGP];
+
+    /// Figure label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ZeroStage::Baseline => "baseline",
+            ZeroStage::Os => "zero-1",
+            ZeroStage::OsG => "zero-2",
+            ZeroStage::OsGP => "zero-3",
+        }
+    }
+
+    /// Relative collective-communication volume vs baseline DP training
+    /// (ZeRO paper: stages 1-2 match baseline; stage 3 is 1.5x).
+    pub fn comm_multiplier(&self) -> f64 {
+        match self {
+            ZeroStage::OsGP => 1.5,
+            _ => 1.0,
+        }
+    }
+}
+
+/// Per-node model-state bytes for a model of `total_params` parameters
+/// trained at (mp, dp) under a ZeRO stage.
+pub fn model_state_bytes(
+    total_params: f64,
+    mp: usize,
+    dp: usize,
+    stage: ZeroStage,
+) -> f64 {
+    let shard = total_params / mp as f64;
+    let dp = dp as f64;
+    let (p, g, o) = match stage {
+        ZeroStage::Baseline => (1.0, 1.0, 1.0),
+        ZeroStage::Os => (1.0, 1.0, 1.0 / dp),
+        ZeroStage::OsG => (1.0, 1.0 / dp, 1.0 / dp),
+        ZeroStage::OsGP => (1.0 / dp, 1.0 / dp, 1.0 / dp),
+    };
+    shard * (PARAM_BYTES * p + GRAD_BYTES * g + OPTIM_BYTES * o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PSI: f64 = 1e12; // Transformer-1T
+
+    #[test]
+    fn baseline_is_16_bytes_per_param() {
+        assert_eq!(model_state_bytes(PSI, 1, 1, ZeroStage::Baseline), 16e12);
+    }
+
+    #[test]
+    fn stages_monotonically_shrink() {
+        let b = |s| model_state_bytes(PSI, 8, 128, s);
+        assert!(b(ZeroStage::Baseline) > b(ZeroStage::Os));
+        assert!(b(ZeroStage::Os) > b(ZeroStage::OsG));
+        assert!(b(ZeroStage::OsG) > b(ZeroStage::OsGP));
+    }
+
+    #[test]
+    fn zero2_matches_paper_formula() {
+        // ZeRO-2: 2 psi/mp + 14 psi/(mp dp).
+        let got = model_state_bytes(PSI, 8, 128, ZeroStage::OsG);
+        let want = 2.0 * PSI / 8.0 + 14.0 * PSI / (8.0 * 128.0);
+        assert!((got - want).abs() < 1.0);
+        // ~263.7 GB at MP8_DP128 — the paper's "~250 GB" Fig. 8a bar.
+        assert!((got - 263.67e9).abs() < 0.5e9, "{got:.4e}");
+    }
+
+    #[test]
+    fn zero3_invariant_to_mp_dp_split() {
+        // Fig. 6: ZeRO-3 footprint is flat as MP falls (16 psi / N).
+        let n = 1024usize;
+        let mut vals = Vec::new();
+        let mut mp = n;
+        while mp >= 1 {
+            vals.push(model_state_bytes(PSI, mp, n / mp, ZeroStage::OsGP));
+            mp /= 2;
+        }
+        for v in &vals {
+            assert!((v - vals[0]).abs() < 1.0);
+        }
+        assert!((vals[0] - 16.0 * PSI / 1024.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn baseline_grows_exponentially_as_mp_falls() {
+        // Fig. 6's baseline curve: halving MP doubles the footprint.
+        let n = 1024usize;
+        let b = |mp: usize| {
+            model_state_bytes(PSI, mp, n / mp, ZeroStage::Baseline)
+        };
+        assert!((b(64) / b(128) - 2.0).abs() < 1e-12);
+        assert!((b(1) / b(1024) - 1024.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero3_comm_overhead() {
+        assert_eq!(ZeroStage::OsGP.comm_multiplier(), 1.5);
+        assert_eq!(ZeroStage::OsG.comm_multiplier(), 1.0);
+    }
+}

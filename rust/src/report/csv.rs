@@ -1,0 +1,58 @@
+//! CSV renderer for figure data (plot-ready output under results/).
+
+use super::FigureData;
+
+/// Quote a CSV field if needed.
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Render the figure as CSV (header row + one row per series).
+pub fn render(f: &FigureData) -> String {
+    let mut out = String::new();
+    out.push_str(&quote(&f.row_label));
+    for c in &f.columns {
+        out.push(',');
+        out.push_str(&quote(c));
+    }
+    out.push('\n');
+    for (label, vals) in &f.rows {
+        out.push_str(&quote(label));
+        for v in vals {
+            out.push(',');
+            if v.is_nan() {
+                // empty cell for N/A
+            } else {
+                out.push_str(&format!("{v}"));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::sample;
+    use super::*;
+
+    #[test]
+    fn renders_csv_grid() {
+        let c = render(&sample());
+        let lines: Vec<&str> = c.lines().collect();
+        assert_eq!(lines[0], "cfg,a,b");
+        assert_eq!(lines[1], "r1,1,2");
+        assert_eq!(lines[2], "r2,0.5,"); // NaN -> empty
+    }
+
+    #[test]
+    fn quoting() {
+        assert_eq!(quote("plain"), "plain");
+        assert_eq!(quote("a,b"), "\"a,b\"");
+        assert_eq!(quote("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+}

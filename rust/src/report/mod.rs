@@ -1,0 +1,86 @@
+//! Reporting: structured figure data plus ASCII-table and CSV renderers.
+//! Every paper figure/table driver (coordinator::sweep) returns a
+//! [`FigureData`]; the CLI and benches render or persist it.
+
+pub mod csv;
+pub mod table;
+
+/// One regenerated figure/table: a named grid of series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FigureData {
+    /// Identifier ("fig8a", "fig9", ...).
+    pub id: String,
+    /// Human title.
+    pub title: String,
+    /// Name of the row dimension (e.g. "(MP, DP)").
+    pub row_label: String,
+    /// Column headers (e.g. bandwidth points or breakdown components).
+    pub columns: Vec<String>,
+    /// Rows: (label, one value per column). NaN = not applicable.
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Free-form notes (normalization baseline, units).
+    pub notes: Vec<String>,
+}
+
+impl FigureData {
+    /// Look up a cell by row and column label.
+    pub fn cell(&self, row: &str, col: &str) -> Option<f64> {
+        let ci = self.columns.iter().position(|c| c == col)?;
+        let r = self.rows.iter().find(|(l, _)| l == row)?;
+        r.1.get(ci).copied()
+    }
+
+    /// The row with the minimum value in `col`.
+    pub fn argmin(&self, col: &str) -> Option<&str> {
+        let ci = self.columns.iter().position(|c| c == col)?;
+        self.rows
+            .iter()
+            .filter(|(_, v)| v[ci].is_finite())
+            .min_by(|a, b| a.1[ci].partial_cmp(&b.1[ci]).unwrap())
+            .map(|(l, _)| l.as_str())
+    }
+
+    /// Render as an ASCII table.
+    pub fn to_table(&self) -> String {
+        table::render(self)
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        csv::render(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample() -> FigureData {
+        FigureData {
+            id: "figX".into(),
+            title: "Sample".into(),
+            row_label: "cfg".into(),
+            columns: vec!["a".into(), "b".into()],
+            rows: vec![
+                ("r1".into(), vec![1.0, 2.0]),
+                ("r2".into(), vec![0.5, f64::NAN]),
+            ],
+            notes: vec!["normalized to r1/a".into()],
+        }
+    }
+
+    #[test]
+    fn cell_lookup() {
+        let f = sample();
+        assert_eq!(f.cell("r1", "b"), Some(2.0));
+        assert_eq!(f.cell("r9", "b"), None);
+        assert_eq!(f.cell("r1", "z"), None);
+    }
+
+    #[test]
+    fn argmin_skips_nan() {
+        let f = sample();
+        assert_eq!(f.argmin("a"), Some("r2"));
+        assert_eq!(f.argmin("b"), Some("r1"));
+    }
+}

@@ -1,0 +1,97 @@
+//! ASCII-table renderer for figure data.
+
+use super::FigureData;
+
+/// Format one value: engineering-friendly fixed/precision switching.
+fn fmt(v: f64) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1e5 || v.abs() < 1e-3 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Render the figure as a boxed ASCII table.
+pub fn render(f: &FigureData) -> String {
+    let mut header: Vec<String> = vec![f.row_label.clone()];
+    header.extend(f.columns.iter().cloned());
+    let mut grid: Vec<Vec<String>> = vec![header];
+    for (label, vals) in &f.rows {
+        let mut row = vec![label.clone()];
+        row.extend(vals.iter().map(|v| fmt(*v)));
+        grid.push(row);
+    }
+    let ncols = grid.iter().map(|r| r.len()).max().unwrap_or(0);
+    let mut widths = vec![0usize; ncols];
+    for row in &grid {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("== {} ({}) ==\n", f.title, f.id));
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    out.push_str(&format!("+{sep}+\n"));
+    for (ri, row) in grid.iter().enumerate() {
+        out.push('|');
+        for (i, w) in widths.iter().enumerate() {
+            let cell = row.get(i).map(String::as_str).unwrap_or("");
+            if i == 0 {
+                out.push_str(&format!(" {cell:<w$} |"));
+            } else {
+                out.push_str(&format!(" {cell:>w$} |"));
+            }
+        }
+        out.push('\n');
+        if ri == 0 {
+            out.push_str(&format!("+{sep}+\n"));
+        }
+    }
+    out.push_str(&format!("+{sep}+\n"));
+    for n in &f.notes {
+        out.push_str(&format!("  note: {n}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::sample;
+    use super::*;
+
+    #[test]
+    fn renders_all_cells() {
+        let t = render(&sample());
+        assert!(t.contains("r1"));
+        assert!(t.contains("r2"));
+        assert!(t.contains("2.000"));
+        assert!(t.contains('-')); // NaN cell
+        assert!(t.contains("note: normalized to r1/a"));
+    }
+
+    #[test]
+    fn fmt_switches_notation() {
+        assert_eq!(fmt(1.5), "1.500");
+        assert_eq!(fmt(1.5e7), "1.500e7");
+        assert_eq!(fmt(0.0001), "1.000e-4");
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(f64::NAN), "-");
+    }
+
+    #[test]
+    fn columns_aligned() {
+        let t = render(&sample());
+        let lines: Vec<&str> = t.lines().filter(|l| l.starts_with('|')).collect();
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{t}");
+    }
+}

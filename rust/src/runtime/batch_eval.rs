@@ -1,0 +1,122 @@
+//! Batched design-space evaluation through the AOT artifact: pack many
+//! (workload, cluster) configurations, execute them per batch, and unpack
+//! per-config [`TrainingBreakdown`]s.
+
+use std::cell::RefCell;
+
+use crate::analytical::TrainingBreakdown;
+use crate::error::Result;
+use crate::model::batch::{self, BatchTensors, PackedConfig};
+use crate::model::inputs::ModelInputs;
+
+use super::client::Runtime;
+
+/// Batched evaluator over a loaded runtime.
+pub struct BatchEvaluator<'a> {
+    runtime: &'a Runtime,
+    /// Scratch batch tensors reused across chunks and calls (SPerf).
+    scratch: RefCell<BatchTensors>,
+}
+
+impl<'a> BatchEvaluator<'a> {
+    /// Wrap a runtime.
+    pub fn new(runtime: &'a Runtime) -> Self {
+        BatchEvaluator {
+            runtime,
+            scratch: RefCell::new(BatchTensors {
+                b: 0,
+                compute: Vec::new(),
+                comm: Vec::new(),
+                params: Vec::new(),
+                n_real: 0,
+            }),
+        }
+    }
+
+    /// Evaluate many derived inputs; returns one breakdown per input, in
+    /// order. Inputs are packed and chunked to the artifact batch sizes.
+    pub fn evaluate(
+        &self,
+        inputs: &[ModelInputs],
+    ) -> Result<Vec<TrainingBreakdown>> {
+        let packed: Vec<PackedConfig> = inputs
+            .iter()
+            .map(batch::pack)
+            .collect::<Result<Vec<_>>>()?;
+        let mut out = Vec::with_capacity(packed.len());
+        let mut i = 0;
+        let mut scratch = self.scratch.borrow_mut();
+        while i < packed.len() {
+            let remaining = packed.len() - i;
+            let b = self.runtime.pick_batch_size(remaining);
+            let take = remaining.min(b);
+            batch::stack_into(&packed[i..i + take], b, &mut scratch)?;
+            let raw = self.runtime.execute(&scratch)?;
+            debug_assert_eq!(raw.len(), b * batch::OUTF);
+            for k in 0..take {
+                let mut a = [0.0f64; 6];
+                for (j, v) in a.iter_mut().enumerate() {
+                    *v = raw[k * batch::OUTF + j] as f64;
+                }
+                out.push(TrainingBreakdown::from_array(a));
+            }
+            i += take;
+        }
+        Ok(out)
+    }
+
+    /// Evaluate a single configuration (uses the smallest artifact).
+    pub fn evaluate_one(&self, inputs: &ModelInputs) -> Result<TrainingBreakdown> {
+        Ok(self.evaluate(std::slice::from_ref(inputs))?.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::evaluate as native_eval;
+    use crate::config::presets;
+    use crate::model::inputs::{derive_inputs, EvalOptions};
+    use crate::parallel::Strategy;
+    use crate::util::stats::rel_diff;
+    use crate::workload::transformer::Transformer;
+
+    /// Artifact (f32, Pallas kernels) vs native (f64) cross-validation —
+    /// the heart of the three-layer contract. Skips when artifacts are
+    /// absent (rust/tests/ has the hard-required variant).
+    #[test]
+    fn artifact_matches_native_when_available() {
+        let Ok(rt) = Runtime::load_default() else {
+            return;
+        };
+        let ev = BatchEvaluator::new(&rt);
+        let cluster = presets::dgx_a100_1024();
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        let inputs: Vec<_> = Strategy::sweep_bounded(1024, 1, 128)
+            .iter()
+            .map(|s| {
+                derive_inputs(
+                    &Transformer::t1().build(s).unwrap(),
+                    &cluster,
+                    &opts,
+                )
+                .unwrap()
+            })
+            .collect();
+        let got = ev.evaluate(&inputs).unwrap();
+        assert_eq!(got.len(), inputs.len());
+        for (inp, g) in inputs.iter().zip(&got) {
+            let want = native_eval(inp);
+            assert!(
+                rel_diff(want.total(), g.total()) < 1e-4,
+                "{}: native {} artifact {}",
+                inp.name,
+                want.total(),
+                g.total()
+            );
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! PJRT client wrapper: artifact discovery, ABI verification, compilation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::model::batch;
+use crate::util::json;
+
+/// A loaded PJRT runtime holding one compiled executable per exported
+/// batch size.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("batch_sizes", &self.batch_sizes())
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `<dir>/manifest.json`.
+    ///
+    /// Fails fast on ABI drift between the manifest and this crate's
+    /// compiled-in layout.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "{} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = json::parse(&text)?;
+        batch::verify_manifest(&manifest)?;
+
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+
+        let arts = manifest.get("artifacts").unwrap();
+        let mut exes = BTreeMap::new();
+        for b in batch::BATCH_SIZES {
+            let name = arts
+                .get(&b.to_string())
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| {
+                    Error::AbiMismatch(format!("no artifact for batch {b}"))
+                })?;
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| {
+                    Error::Artifact(format!("non-utf8 path {}", path.display()))
+                })?,
+            )
+            .map_err(|e| {
+                Error::Artifact(format!("parse {}: {e}", path.display()))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| {
+                Error::Runtime(format!("compile {}: {e}", path.display()))
+            })?;
+            exes.insert(b, exe);
+        }
+        Ok(Runtime {
+            client,
+            exes,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load from the default `artifacts/` directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(Path::new(super::DEFAULT_ARTIFACTS_DIR))
+    }
+
+    /// Available batch sizes (ascending).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest exported batch size that fits `n` configs, or the largest
+    /// available (callers then chunk).
+    pub fn pick_batch_size(&self, n: usize) -> usize {
+        for &b in self.exes.keys() {
+            if n <= b {
+                return b;
+            }
+        }
+        *self.exes.keys().last().unwrap()
+    }
+
+    /// Execute the `b`-batch executable on packed tensors; returns the raw
+    /// `[b, OUTF]` output.
+    pub fn execute(&self, tensors: &batch::BatchTensors) -> Result<Vec<f32>> {
+        let exe = self.exes.get(&tensors.b).ok_or_else(|| {
+            Error::Runtime(format!("no executable for batch size {}", tensors.b))
+        })?;
+        let b = tensors.b as i64;
+        let mk = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| Error::Runtime(format!("reshape: {e}")))
+        };
+        let compute = mk(
+            &tensors.compute,
+            &[b, batch::L as i64, batch::CF as i64],
+        )?;
+        let comm = mk(&tensors.comm, &[b, batch::L as i64, batch::MF as i64])?;
+        let params = mk(&tensors.params, &[b, batch::P as i64])?;
+
+        let result = exe
+            .execute::<xla::Literal>(&[compute, comm, params])
+            .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("to_tuple1: {e}")))?;
+        out.to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        // Integration-grade tests live in rust/tests/; here we only
+        // exercise load when artifacts exist.
+        Runtime::load_default().ok()
+    }
+
+    #[test]
+    fn load_reports_missing_dir() {
+        let err = Runtime::load(Path::new("/nonexistent/prefix")).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn loaded_runtime_has_all_batch_sizes() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.batch_sizes(), batch::BATCH_SIZES.to_vec());
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn pick_batch_size_rounds_up() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.pick_batch_size(1), 8);
+        assert_eq!(rt.pick_batch_size(8), 8);
+        assert_eq!(rt.pick_batch_size(9), 64);
+        assert_eq!(rt.pick_batch_size(64), 64);
+        assert_eq!(rt.pick_batch_size(1000), 64);
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT-compiled COMET cost-model artifacts
+//! (`artifacts/comet_eval_b{B}.hlo.txt`, exported once at build time by
+//! `python/compile/aot.py`) and executes them on the request path via the
+//! `xla` crate's PJRT CPU client. Python never runs here.
+//!
+//! HLO **text** is the interchange format: jax >= 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md and python/compile/aot.py).
+
+mod batch_eval;
+mod client;
+
+pub use batch_eval::BatchEvaluator;
+pub use client::Runtime;
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

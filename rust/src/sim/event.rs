@@ -1,0 +1,153 @@
+//! Event queue for the discrete-event backend: a time-ordered min-heap
+//! with stable FIFO tie-breaking (deterministic replay).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulation time, seconds.
+pub type SimTime = f64;
+
+/// A scheduled event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event<T> {
+    pub time: SimTime,
+    /// Monotonic sequence number — FIFO among equal-time events.
+    pub seq: u64,
+    pub payload: T,
+}
+
+impl<T: PartialEq> Eq for Event<T> {}
+
+impl<T: PartialEq> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T: PartialEq> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event queue.
+#[derive(Debug)]
+pub struct EventQueue<T: PartialEq> {
+    heap: BinaryHeap<Event<T>>,
+    next_seq: u64,
+    now: SimTime,
+}
+
+impl<T: PartialEq> EventQueue<T> {
+    /// Empty queue at t = 0.
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            now: 0.0,
+        }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `time` (>= now).
+    pub fn schedule(&mut self, time: SimTime, payload: T) {
+        debug_assert!(time >= self.now, "event scheduled in the past");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { time, seq, payload });
+    }
+
+    /// Pop the earliest event, advancing simulation time.
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        Some(e)
+    }
+
+    /// Whether any events remain.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Pending event count.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<T: PartialEq> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_among_equal_times() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(1.0, i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop().unwrap().payload, i);
+        }
+    }
+
+    #[test]
+    fn now_tracks_pops() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, ());
+        q.schedule(7.5, ());
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.now(), 5.0);
+        q.pop();
+        assert_eq!(q.now(), 7.5);
+    }
+
+    #[test]
+    fn interleaved_scheduling() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        let e = q.pop().unwrap();
+        assert_eq!(e.payload, 1);
+        q.schedule(q.now() + 0.5, 2);
+        q.schedule(q.now() + 0.25, 3);
+        assert_eq!(q.pop().unwrap().payload, 3);
+        assert_eq!(q.pop().unwrap().payload, 2);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule(1.0, ());
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

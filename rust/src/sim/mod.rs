@@ -1,0 +1,8 @@
+//! Discrete-event simulation backend — the from-scratch ASTRA-SIM-like
+//! substrate (workload scheduling + collective execution on link FIFOs).
+
+pub mod engine;
+pub mod event;
+pub mod link;
+
+pub use engine::{simulate, SimResult, SimStats};

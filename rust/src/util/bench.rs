@@ -1,0 +1,192 @@
+//! Micro-benchmark harness for `cargo bench` (harness = false).
+//!
+//! The offline crate set vendors no `criterion`, so COMET ships its own
+//! small harness with the same ergonomics: warmup, timed iterations,
+//! median/p95 reporting, and a `black_box` to defeat dead-code elimination.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Measurement wall-clock budget.
+    pub measure: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+    /// Minimum measured iterations (even if over budget).
+    pub min_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+/// One benchmark's results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Render one line, criterion-style.
+    pub fn line(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  p95 {:>12}  ({} iters)",
+            self.name,
+            fmt_dur(s.median),
+            fmt_dur(s.mean),
+            fmt_dur(s.p95),
+            s.n
+        )
+    }
+}
+
+fn fmt_dur(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark group: runs closures, collects results, prints a report.
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    /// New bencher with default config. Honors `COMET_BENCH_FAST=1` to
+    /// shrink budgets (used by `cargo test`-driven smoke runs).
+    pub fn new() -> Self {
+        let mut cfg = BenchConfig::default();
+        if std::env::var("COMET_BENCH_FAST").as_deref() == Ok("1") {
+            cfg.warmup = Duration::from_millis(20);
+            cfg.measure = Duration::from_millis(100);
+        }
+        Bencher {
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    /// With an explicit config.
+    pub fn with_config(cfg: BenchConfig) -> Self {
+        Bencher {
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which must consume its work via `black_box`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.cfg.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.cfg.measure
+            && samples.len() < self.cfg.max_iters)
+            || samples.len() < self.cfg.min_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print the report for all benches run so far.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        for r in &self.results {
+            println!("{}", r.line());
+        }
+    }
+
+    /// Access collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Bencher {
+        Bencher::with_config(BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            max_iters: 1000,
+            min_iters: 3,
+        })
+    }
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = fast();
+        let r = b.bench("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(r.summary.n >= 3);
+        assert!(r.summary.median >= 0.0);
+    }
+
+    #[test]
+    fn results_accumulate() {
+        let mut b = fast();
+        b.bench("a", || {
+            black_box(0);
+        });
+        b.bench("b", || {
+            black_box(0);
+        });
+        assert_eq!(b.results().len(), 2);
+        assert_eq!(b.results()[0].name, "a");
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert_eq!(fmt_dur(2.0), "2.000 s");
+        assert_eq!(fmt_dur(2e-3), "2.000 ms");
+        assert_eq!(fmt_dur(2e-6), "2.000 us");
+        assert_eq!(fmt_dur(2e-9), "2.0 ns");
+    }
+}

@@ -1,0 +1,10 @@
+//! Support substrates built from scratch for the offline environment:
+//! SI-unit helpers, a minimal JSON parser/serializer (config + manifest I/O),
+//! a deterministic PRNG (property tests, workload jitter), descriptive
+//! statistics, and the micro-benchmark harness used by `cargo bench`.
+
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod units;

@@ -1,0 +1,119 @@
+//! SI unit helpers. COMET is unit-disciplined: FLOP/s, bytes, bytes/s,
+//! seconds everywhere; these constructors keep config code legible and
+//! mistakes greppable.
+
+/// 1 kilo (10^3).
+pub const K: f64 = 1e3;
+/// 1 mega (10^6).
+pub const M: f64 = 1e6;
+/// 1 giga (10^9).
+pub const G: f64 = 1e9;
+/// 1 tera (10^12).
+pub const T: f64 = 1e12;
+/// 1 peta (10^15).
+pub const P: f64 = 1e15;
+
+/// Tera-FLOP/s → FLOP/s.
+#[inline]
+pub fn tflops(x: f64) -> f64 {
+    x * T
+}
+
+/// Peta-FLOP/s → FLOP/s.
+#[inline]
+pub fn pflops(x: f64) -> f64 {
+    x * P
+}
+
+/// Gigabytes → bytes (decimal GB, as in the paper's tables).
+#[inline]
+pub fn gb(x: f64) -> f64 {
+    x * G
+}
+
+/// Megabytes → bytes.
+#[inline]
+pub fn mb(x: f64) -> f64 {
+    x * M
+}
+
+/// Terabytes → bytes.
+#[inline]
+pub fn tb(x: f64) -> f64 {
+    x * T
+}
+
+/// GB/s → bytes/s.
+#[inline]
+pub fn gbps(x: f64) -> f64 {
+    x * G
+}
+
+/// TB/s → bytes/s.
+#[inline]
+pub fn tbps(x: f64) -> f64 {
+    x * T
+}
+
+/// Microseconds → seconds.
+#[inline]
+pub fn us(x: f64) -> f64 {
+    x * 1e-6
+}
+
+/// Render a byte count human-readably (decimal units, 1 decimal place).
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= T {
+        format!("{:.1} TB", b / T)
+    } else if b >= G {
+        format!("{:.1} GB", b / G)
+    } else if b >= M {
+        format!("{:.1} MB", b / M)
+    } else if b >= K {
+        format!("{:.1} KB", b / K)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Render seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_scale() {
+        assert_eq!(tflops(624.0), 624e12);
+        assert_eq!(gb(80.0), 80e9);
+        assert_eq!(gbps(2039.0), 2039e9);
+        assert_eq!(tbps(2.0), 2e12);
+        assert_eq!(mb(40.0), 40e6);
+        assert_eq!(pflops(54.3), 54.3e15);
+        assert_eq!(us(1.0), 1e-6);
+    }
+
+    #[test]
+    fn fmt_bytes_picks_unit() {
+        assert_eq!(fmt_bytes(80e9), "80.0 GB");
+        assert_eq!(fmt_bytes(1.5e12), "1.5 TB");
+        assert_eq!(fmt_bytes(40e6), "40.0 MB");
+        assert_eq!(fmt_bytes(512.0), "512 B");
+    }
+
+    #[test]
+    fn fmt_secs_picks_unit() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 us");
+    }
+}

@@ -1,0 +1,290 @@
+//! DLRM workload builder (paper SV-C, modeled after Rashidi et al.'s
+//! ASTRA-SIM + ns3 DLRM case study).
+//!
+//! DLRM's parallelization is rigid (unlike the Transformer's MP/DP knob):
+//! the huge embedding tables are sharded across all nodes (model-parallel,
+//! exchanged via all-to-all in FP and IG), while the bottom/top MLPs are
+//! replicated data-parallel (all-reduce of gradients in WG). The builder
+//! therefore takes only a node count; `Strategy` is implied (MP = N for
+//! embeddings, DP = N for MLPs).
+
+use super::gemm::gemm;
+use super::layer::{
+    Comm, CommScope, Layer, LayerOp, PhaseQuantities, Workload, FP16,
+};
+use crate::error::{Error, Result};
+
+/// DLRM hyper-parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dlrm {
+    pub name: String,
+    /// Total embedding parameters (dominates model size).
+    pub emb_params: f64,
+    /// Embedding vector width.
+    pub emb_dim: f64,
+    /// Number of sparse-feature tables.
+    pub tables: f64,
+    /// Pooled lookups per sample per table.
+    pub pooling: f64,
+    /// Bottom-MLP layer widths (dense features -> emb_dim).
+    pub bottom_mlp: Vec<f64>,
+    /// Top-MLP layer widths (interaction output -> 1).
+    pub top_mlp: Vec<f64>,
+    /// Global batch (samples per iteration).
+    pub global_batch: f64,
+}
+
+impl Dlrm {
+    /// The 1.2-trillion-parameter DLRM of the paper's SV-C (Rashidi et al.
+    /// Table V shape: wide embedding tables + small MLP stacks).
+    pub fn dlrm_1_2t() -> Dlrm {
+        Dlrm {
+            name: "dlrm-1.2t".into(),
+            emb_params: 1.2e12,
+            emb_dim: 128.0,
+            tables: 512.0,
+            // Production DLRMs pool tens of rows per (sample, table)
+            // (multi-hot categorical features); pooled-sum reduction
+            // happens at the owning shard, so lookup *memory* traffic
+            // scales with pooling while all-to-all traffic does not —
+            // the balance that makes DLRM memory-bandwidth-sensitive
+            // (paper SV-C) yet communication-dominated at large node
+            // counts (Fig. 13a).
+            pooling: 8.0,
+            bottom_mlp: vec![13.0, 512.0, 256.0, 128.0],
+            top_mlp: vec![479.0, 1024.0, 1024.0, 512.0, 256.0, 1.0],
+            global_batch: 65_536.0,
+        }
+    }
+
+    /// A small DLRM for examples/tests.
+    pub fn small() -> Dlrm {
+        Dlrm {
+            name: "dlrm-small".into(),
+            emb_params: 1.0e9,
+            emb_dim: 64.0,
+            tables: 26.0,
+            pooling: 1.0,
+            bottom_mlp: vec![13.0, 512.0, 64.0],
+            top_mlp: vec![415.0, 512.0, 256.0, 1.0],
+            global_batch: 2048.0,
+        }
+    }
+
+    /// Total parameters (embeddings + MLPs).
+    pub fn total_params(&self) -> f64 {
+        self.emb_params + mlp_params(&self.bottom_mlp) + mlp_params(&self.top_mlp)
+    }
+
+    /// Decompose for a cluster of `nodes` nodes.
+    pub fn build(&self, nodes: usize) -> Result<Workload> {
+        if nodes == 0 || !nodes.is_power_of_two() {
+            return Err(Error::Config(format!(
+                "DLRM node count {nodes} must be a power of two"
+            )));
+        }
+        let n = nodes as f64;
+        let gb = self.global_batch;
+        let local_batch = gb / n; // MLP data parallelism
+        let mut layers = Vec::new();
+
+        // --- sharded embedding lookup + all-to-all --------------------------
+        // Each node owns tables/n tables and serves lookups for the WHOLE
+        // global batch on its shard (gathering `pooling` rows per sample
+        // per table and sum-pooling them locally), then exchanges the
+        // POOLED vectors all-to-all so every node receives its local
+        // batch's vectors for all tables.
+        let rows_per_node = gb * self.pooling * self.tables / n;
+        let pooled_per_node = gb * self.tables / n;
+        let mut emb = Layer::new(
+            "embedding-lookup",
+            LayerOp::Lookup {
+                rows: rows_per_node,
+                width: self.emb_dim,
+            },
+            1.0,
+        );
+        emb.extra_params = self.emb_params / n;
+        let a2a_bytes = pooled_per_node * self.emb_dim * FP16;
+        emb.comm_fp = Comm::alltoall(a2a_bytes, CommScope::All);
+        emb.comm_ig = Comm::alltoall(a2a_bytes, CommScope::All);
+        layers.push(emb);
+
+        // --- bottom MLP (data parallel) -------------------------------------
+        push_mlp(
+            &mut layers,
+            "bottom-mlp",
+            &self.bottom_mlp,
+            local_batch,
+            n,
+        );
+
+        // --- feature interaction (pairwise dot products) --------------------
+        // A batched per-sample GEMM: each sample's (f x d) feature matrix
+        // times its transpose. Every per-sample operand fits in SRAM, so
+        // traffic is pure streaming (encoded as Raw quantities: the
+        // input-stationary tiling model would otherwise charge phantom
+        // re-reads of the batch-sized operands).
+        let f = self.tables + 1.0; // embedding vectors + bottom-MLP output
+        let int_flops = 2.0 * local_batch * f * self.emb_dim * f;
+        let int_bytes =
+            local_batch * (2.0 * f * self.emb_dim + f * f) * FP16;
+        let int_q = PhaseQuantities {
+            flops: int_flops,
+            u: 0.0,
+            v: 0.0,
+            w: int_bytes,
+        };
+        layers.push(Layer::new(
+            "interaction",
+            LayerOp::Raw([int_q, int_q, int_q]),
+            1.0,
+        ));
+
+        // --- top MLP (data parallel) ----------------------------------------
+        push_mlp(&mut layers, "top-mlp", &self.top_mlp, local_batch, n);
+
+        // --- optimizer update ------------------------------------------------
+        // Embedding shard (sparse rows touched) + dense MLP params.
+        let touched = (rows_per_node * self.emb_dim).min(self.emb_params / n);
+        let dense = mlp_params(&self.bottom_mlp) + mlp_params(&self.top_mlp);
+        let update_bytes = touched * 6.0 + dense * 22.0;
+        layers.push(Layer::new(
+            "weight-update",
+            LayerOp::WeightUpdate {
+                params: touched + dense,
+                bytes: update_bytes,
+            },
+            1.0,
+        ));
+
+        Ok(Workload {
+            name: format!("{}@n{}", self.name, nodes),
+            layers,
+            mp: nodes, // embedding sharding spans all nodes
+            dp: nodes, // MLP replication spans all nodes
+            nodes,
+            total_params: self.total_params(),
+        })
+    }
+
+    /// Per-node memory footprint in bytes for a cluster of `nodes`:
+    /// fp16 embedding shard + optimizer state for the shard's rows +
+    /// replicated dense MLPs (fp16 + full optimizer state).
+    pub fn footprint_per_node(&self, nodes: usize) -> f64 {
+        let shard = self.emb_params / nodes as f64;
+        let dense = mlp_params(&self.bottom_mlp) + mlp_params(&self.top_mlp);
+        shard * FP16 + dense * 16.0
+    }
+}
+
+fn mlp_params(widths: &[f64]) -> f64 {
+    widths.windows(2).map(|w| w[0] * w[1]).sum()
+}
+
+fn push_mlp(
+    layers: &mut Vec<Layer>,
+    prefix: &str,
+    widths: &[f64],
+    batch: f64,
+    n_nodes: f64,
+) {
+    for (i, w) in widths.windows(2).enumerate() {
+        let (k, n) = (w[0], w[1]);
+        let mut l = Layer::new(&format!("{prefix}-{i}"), gemm(batch, k, n), 1.0);
+        // Replicated MLP: DP all-reduce of the full weight gradient.
+        l.comm_wg = Comm {
+            collective: super::layer::Collective::AllReduce,
+            bytes: k * n * FP16,
+            scope: CommScope::All,
+        };
+        let _ = n_nodes;
+        layers.push(l);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Phase;
+
+    #[test]
+    fn dlrm_is_1_2t() {
+        let d = Dlrm::dlrm_1_2t();
+        let p = d.total_params();
+        assert!((1.15e12..1.25e12).contains(&p), "params {p:.3e}");
+    }
+
+    #[test]
+    fn build_rejects_bad_node_count() {
+        assert!(Dlrm::dlrm_1_2t().build(0).is_err());
+        assert!(Dlrm::dlrm_1_2t().build(48).is_err());
+        assert!(Dlrm::dlrm_1_2t().build(64).is_ok());
+    }
+
+    #[test]
+    fn footprint_halves_with_node_doubling() {
+        let d = Dlrm::dlrm_1_2t();
+        let f64n = d.footprint_per_node(64);
+        let f32n = d.footprint_per_node(32);
+        assert!((f32n / f64n - 2.0).abs() < 0.01);
+        // 64 nodes: 1.2T fp16 / 64 = 37.5 GB/node (fits 80 GB local).
+        assert!((f64n - 37.5e9).abs() < 1e9, "{f64n:.3e}");
+    }
+
+    #[test]
+    fn alltoall_bytes_shrink_with_more_nodes(){
+        let d = Dlrm::dlrm_1_2t();
+        let bytes = |n: usize| {
+            d.build(n).unwrap().layers[0].comm_fp.bytes
+        };
+        assert!((bytes(32) / bytes(64) - 2.0).abs() < 1e-9);
+        // Pooled exchange: pooling factor must NOT appear in a2a bytes.
+        assert_eq!(
+            bytes(64),
+            d.global_batch * d.tables / 64.0 * d.emb_dim * 2.0
+        );
+    }
+
+    #[test]
+    fn lookup_rows_scale_inverse_nodes() {
+        let d = Dlrm::dlrm_1_2t();
+        let w = d.build(64).unwrap();
+        match w.layers[0].op {
+            LayerOp::Lookup { rows, .. } => {
+                assert_eq!(
+                    rows,
+                    d.global_batch * d.pooling * d.tables / 64.0
+                );
+            }
+            _ => panic!("first layer must be the lookup"),
+        }
+    }
+
+    #[test]
+    fn mlp_layers_have_wg_allreduce() {
+        let w = Dlrm::dlrm_1_2t().build(64).unwrap();
+        let mlp = w
+            .layers
+            .iter()
+            .find(|l| l.name.starts_with("top-mlp"))
+            .unwrap();
+        assert!(mlp.comm_wg.bytes > 0.0);
+        assert_eq!(mlp.comm_wg.scope, CommScope::All);
+    }
+
+    #[test]
+    fn weight_update_present_and_bandwidth_bound() {
+        let w = Dlrm::dlrm_1_2t().build(64).unwrap();
+        let wu = w.layers.last().unwrap();
+        let q = wu.op.quantities(Phase::Wg);
+        assert!(q.w > 0.0);
+        assert_eq!(wu.op.quantities(Phase::Fp).w, 0.0);
+    }
+
+    #[test]
+    fn slots_fit_abi() {
+        let w = Dlrm::dlrm_1_2t().build(64).unwrap();
+        assert!(w.n_slots() <= 192);
+    }
+}

@@ -1,0 +1,60 @@
+//! GEMM helpers shared by the workload builders.
+
+use super::layer::{LayerOp, Phase};
+
+/// FLOPs of one `(m x k) . (k x n)` GEMM (multiply-accumulate = 2 ops).
+pub fn gemm_flops(m: f64, k: f64, n: f64) -> f64 {
+    2.0 * m * k * n
+}
+
+/// Total FLOPs for one training iteration of a GEMM layer (FP + IG + WG,
+/// the standard 3x forward cost).
+pub fn training_flops(m: f64, k: f64, n: f64) -> f64 {
+    3.0 * gemm_flops(m, k, n)
+}
+
+/// Build a GEMM op, asserting positive dimensions in debug builds.
+pub fn gemm(m: f64, k: f64, n: f64) -> LayerOp {
+    debug_assert!(m > 0.0 && k > 0.0 && n > 0.0, "bad GEMM dims {m}x{k}x{n}");
+    LayerOp::Gemm { m, k, n }
+}
+
+/// Weight bytes of a GEMM layer in fp16.
+pub fn weight_bytes(k: f64, n: f64) -> f64 {
+    k * n * super::layer::FP16
+}
+
+/// Sanity relation used by property tests: per-phase quantities of a GEMM
+/// conserve total element counts across phases.
+pub fn phase_operand_elems(op: &LayerOp, phase: Phase) -> f64 {
+    let q = op.quantities(phase);
+    (q.u + q.v + q.w) / super::layer::FP16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(gemm_flops(2.0, 3.0, 4.0), 48.0);
+        assert_eq!(training_flops(2.0, 3.0, 4.0), 144.0);
+    }
+
+    #[test]
+    fn operand_elems_identical_across_phases() {
+        // Each phase touches the same three matrices (m.k + k.n + m.n).
+        let op = gemm(6.0, 7.0, 8.0);
+        let fp = phase_operand_elems(&op, Phase::Fp);
+        let ig = phase_operand_elems(&op, Phase::Ig);
+        let wg = phase_operand_elems(&op, Phase::Wg);
+        assert_eq!(fp, ig);
+        assert_eq!(fp, wg);
+        assert_eq!(fp, 6.0 * 7.0 + 7.0 * 8.0 + 6.0 * 8.0);
+    }
+
+    #[test]
+    fn weight_bytes_fp16() {
+        assert_eq!(weight_bytes(10.0, 20.0), 400.0);
+    }
+}

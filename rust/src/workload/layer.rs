@@ -1,0 +1,470 @@
+//! Layer and workload representation.
+//!
+//! Every layer carries, for each training phase (forward pass FP, input
+//! gradient IG, weight gradient WG):
+//!   * compute quantities — FLOPs plus the GEMM operand byte sizes (U, V, W)
+//!     consumed by the tiling traffic model (paper SIII-C2), and
+//!   * an optional communication collective with payload size and scope.
+//!
+//! A layer also has a `repeat` multiplicity so the N identical encoder
+//! stacks of a Transformer are encoded once (operand sizes must stay
+//! per-instance for the `ceil(U/S)` tiling term to stay meaningful).
+
+/// Training phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Forward pass.
+    Fp,
+    /// Backward: input gradients (dL/dX).
+    Ig,
+    /// Backward: weight gradients (dL/dW).
+    Wg,
+}
+
+impl Phase {
+    /// All three phases, FP first.
+    pub const ALL: [Phase; 3] = [Phase::Fp, Phase::Ig, Phase::Wg];
+}
+
+/// Collective type (matches the artifact ABI codes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    None,
+    AllReduce,
+    AllToAll,
+    AllGather,
+    ReduceScatter,
+}
+
+impl Collective {
+    /// ABI code (see python/compile/kernels/layout.py).
+    pub fn code(self) -> f64 {
+        match self {
+            Collective::None => 0.0,
+            Collective::AllReduce => 1.0,
+            Collective::AllToAll => 2.0,
+            Collective::AllGather => 3.0,
+            Collective::ReduceScatter => 4.0,
+        }
+    }
+}
+
+/// Which node group a collective spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommScope {
+    /// The model-parallel group (consecutive nodes).
+    Mp,
+    /// The data-parallel group (strided across MP groups).
+    Dp,
+    /// Every node in the job.
+    All,
+}
+
+/// One communication collective attached to a layer phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Comm {
+    pub collective: Collective,
+    /// Payload bytes per participant.
+    pub bytes: f64,
+    pub scope: CommScope,
+}
+
+impl Comm {
+    /// No communication.
+    pub fn none() -> Comm {
+        Comm {
+            collective: Collective::None,
+            bytes: 0.0,
+            scope: CommScope::Mp,
+        }
+    }
+
+    /// All-reduce over a scope.
+    pub fn allreduce(bytes: f64, scope: CommScope) -> Comm {
+        Comm {
+            collective: Collective::AllReduce,
+            bytes,
+            scope,
+        }
+    }
+
+    /// All-to-all over a scope.
+    pub fn alltoall(bytes: f64, scope: CommScope) -> Comm {
+        Comm {
+            collective: Collective::AllToAll,
+            bytes,
+            scope,
+        }
+    }
+}
+
+/// The computational body of a layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerOp {
+    /// GEMM of an (m x k) activation by a (k x n) weight, fp16.
+    Gemm { m: f64, k: f64, n: f64 },
+    /// Embedding-table lookup: `rows` gathers of `width`-wide vectors
+    /// (paper: layers not expressible as GEMMs carry explicit op/byte
+    /// counts).
+    Lookup { rows: f64, width: f64 },
+    /// Element-wise op over `elems` elements, `ops` FLOPs each.
+    Elementwise { elems: f64, ops: f64 },
+    /// Optimizer weight update over `params` parameters streaming `bytes`
+    /// of parameter/gradient/optimizer state through memory in the WG
+    /// phase. Purely bandwidth-bound — the term that makes low-MP
+    /// configurations memory-bound in Fig. 8.
+    WeightUpdate { params: f64, bytes: f64 },
+    /// Opaque per-phase quantities `[FP, IG, WG]` — produced when parsing
+    /// workload trace files, which flatten ops to raw records.
+    Raw([PhaseQuantities; 3]),
+}
+
+/// Per-phase compute quantities consumed by the cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PhaseQuantities {
+    /// Floating-point operations.
+    pub flops: f64,
+    /// First GEMM operand bytes (0 for non-GEMM layers).
+    pub u: f64,
+    /// Second GEMM operand bytes (0 for non-GEMM layers).
+    pub v: f64,
+    /// Output / streamed bytes.
+    pub w: f64,
+}
+
+impl PhaseQuantities {
+    /// Minimum memory traffic if every byte moved exactly once.
+    pub fn min_traffic(&self) -> f64 {
+        self.u + self.v + self.w
+    }
+}
+
+/// Bytes per fp16 element.
+pub const FP16: f64 = 2.0;
+
+impl LayerOp {
+    /// Compute quantities for a phase.
+    ///
+    /// GEMM: FP is `Y = X(mxk) . W(kxn)`; IG is `dX = dY(mxn) . W^T(nxk)`;
+    /// WG is `dW = X^T(kxm) . dY(mxn)`. Each moves the two inputs and one
+    /// output; all are `2mkn` FLOPs.
+    ///
+    /// Lookup: FP gathers rows (read + write, one op/element); IG is free;
+    /// WG scatters gradient rows back (table update).
+    ///
+    /// Elementwise: FP and IG touch the data once each (read + write); no
+    /// weights, so WG is free.
+    pub fn quantities(&self, phase: Phase) -> PhaseQuantities {
+        match *self {
+            LayerOp::Gemm { m, k, n } => {
+                let flops = 2.0 * m * k * n;
+                let (u, v, w) = match phase {
+                    Phase::Fp => (m * k, k * n, m * n),
+                    Phase::Ig => (m * n, n * k, m * k),
+                    Phase::Wg => (k * m, m * n, k * n),
+                };
+                PhaseQuantities {
+                    flops,
+                    u: u * FP16,
+                    v: v * FP16,
+                    w: w * FP16,
+                }
+            }
+            LayerOp::Lookup { rows, width } => match phase {
+                Phase::Fp => PhaseQuantities {
+                    flops: rows * width,
+                    u: 0.0,
+                    v: 0.0,
+                    w: 2.0 * rows * width * FP16,
+                },
+                Phase::Ig => PhaseQuantities::default(),
+                Phase::Wg => PhaseQuantities {
+                    flops: rows * width,
+                    u: 0.0,
+                    v: 0.0,
+                    w: 2.0 * rows * width * FP16,
+                },
+            },
+            LayerOp::Elementwise { elems, ops } => match phase {
+                Phase::Fp | Phase::Ig => PhaseQuantities {
+                    flops: elems * ops,
+                    u: 0.0,
+                    v: 0.0,
+                    w: 2.0 * elems * FP16,
+                },
+                Phase::Wg => PhaseQuantities::default(),
+            },
+            LayerOp::WeightUpdate { params, bytes } => match phase {
+                Phase::Fp | Phase::Ig => PhaseQuantities::default(),
+                // ~4 FLOPs/param for an Adam step; traffic dominates.
+                Phase::Wg => PhaseQuantities {
+                    flops: 4.0 * params,
+                    u: 0.0,
+                    v: 0.0,
+                    w: bytes,
+                },
+            },
+            LayerOp::Raw(q) => match phase {
+                Phase::Fp => q[0],
+                Phase::Ig => q[1],
+                Phase::Wg => q[2],
+            },
+        }
+    }
+
+    /// Number of (weight) parameters this op contributes to the model.
+    pub fn params(&self) -> f64 {
+        match *self {
+            LayerOp::Gemm { k, n, .. } => k * n,
+            LayerOp::Lookup { rows: _, width: _ } => 0.0,
+            LayerOp::Elementwise { .. } => 0.0,
+            LayerOp::WeightUpdate { .. } => 0.0,
+            LayerOp::Raw(_) => 0.0,
+        }
+    }
+}
+
+/// One layer of a decomposed model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    /// Human-readable name ("Q proj", "MLP-1", ...).
+    pub name: String,
+    /// The compute body (per instance).
+    pub op: LayerOp,
+    /// Slot multiplicity: how many identical instances of this layer the
+    /// model contains (e.g. 128 Transformer stacks).
+    pub repeat: f64,
+    /// Extra parameters not captured by `op` (embedding tables).
+    pub extra_params: f64,
+    /// Communication in each phase.
+    pub comm_fp: Comm,
+    pub comm_ig: Comm,
+    pub comm_wg: Comm,
+}
+
+impl Layer {
+    /// A compute-only layer.
+    pub fn new(name: &str, op: LayerOp, repeat: f64) -> Layer {
+        Layer {
+            name: name.to_string(),
+            op,
+            repeat,
+            extra_params: 0.0,
+            comm_fp: Comm::none(),
+            comm_ig: Comm::none(),
+            comm_wg: Comm::none(),
+        }
+    }
+
+    /// Communication for a phase.
+    pub fn comm(&self, phase: Phase) -> Comm {
+        match phase {
+            Phase::Fp => self.comm_fp,
+            Phase::Ig => self.comm_ig,
+            Phase::Wg => self.comm_wg,
+        }
+    }
+
+    /// Parameters contributed (per node), including all repeats.
+    pub fn params(&self) -> f64 {
+        (self.op.params() + self.extra_params) * self.repeat
+    }
+
+    /// Activation elements produced per instance (for residual-state
+    /// footprint estimation).
+    pub fn activation_elems(&self) -> f64 {
+        match self.op {
+            LayerOp::Gemm { m, n, .. } => m * n,
+            LayerOp::Lookup { rows, width } => rows * width,
+            LayerOp::Elementwise { elems, .. } => elems,
+            LayerOp::WeightUpdate { .. } => 0.0,
+            LayerOp::Raw(q) => q[0].w / FP16 / 2.0,
+        }
+    }
+}
+
+/// A decomposed model: named layer list plus bookkeeping, the unit of work
+/// the cost model and simulator consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    /// Model name ("transformer-1t@mp8_dp128").
+    pub name: String,
+    /// Decomposed layers in forward order.
+    pub layers: Vec<Layer>,
+    /// MP degree the decomposition was built for.
+    pub mp: usize,
+    /// DP degree the decomposition was built for.
+    pub dp: usize,
+    /// Total nodes the decomposition occupies. For MP x DP workloads this
+    /// is `mp * dp`; for DLRM-style hybrid parallelism (embeddings sharded
+    /// over all nodes AND MLPs replicated over all nodes) it is the node
+    /// count itself.
+    pub nodes: usize,
+    /// Total model parameters (across all MP shards, one DP replica).
+    pub total_params: f64,
+}
+
+impl Workload {
+    /// Per-node parameter count (the MP shard).
+    pub fn params_per_node(&self) -> f64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Total FLOPs per node per iteration (all phases, all layers).
+    pub fn total_flops(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.repeat
+                    * Phase::ALL
+                        .iter()
+                        .map(|&p| l.op.quantities(p).flops)
+                        .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// Activation working-memory elements (largest single layer's output;
+    /// intermediate activations between checkpoints — ZeRO-Infinity's AWM).
+    pub fn activation_working_elems(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.activation_elems())
+            .fold(0.0, f64::max)
+    }
+
+    /// Number of distinct layer slots (ABI rows needed).
+    pub fn n_slots(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_quantities_fp() {
+        let op = LayerOp::Gemm {
+            m: 4.0,
+            k: 8.0,
+            n: 16.0,
+        };
+        let q = op.quantities(Phase::Fp);
+        assert_eq!(q.flops, 2.0 * 4.0 * 8.0 * 16.0);
+        assert_eq!(q.u, 4.0 * 8.0 * FP16);
+        assert_eq!(q.v, 8.0 * 16.0 * FP16);
+        assert_eq!(q.w, 4.0 * 16.0 * FP16);
+    }
+
+    #[test]
+    fn gemm_phases_same_flops_different_operands() {
+        let op = LayerOp::Gemm {
+            m: 3.0,
+            k: 5.0,
+            n: 7.0,
+        };
+        let fp = op.quantities(Phase::Fp);
+        let ig = op.quantities(Phase::Ig);
+        let wg = op.quantities(Phase::Wg);
+        assert_eq!(fp.flops, ig.flops);
+        assert_eq!(fp.flops, wg.flops);
+        // IG output is the input-activation gradient (m x k).
+        assert_eq!(ig.w, 3.0 * 5.0 * FP16);
+        // WG output is the weight gradient (k x n).
+        assert_eq!(wg.w, 5.0 * 7.0 * FP16);
+    }
+
+    #[test]
+    fn lookup_has_no_ig() {
+        let op = LayerOp::Lookup {
+            rows: 100.0,
+            width: 64.0,
+        };
+        assert_eq!(op.quantities(Phase::Ig), PhaseQuantities::default());
+        assert!(op.quantities(Phase::Fp).w > 0.0);
+        assert!(op.quantities(Phase::Wg).w > 0.0);
+    }
+
+    #[test]
+    fn elementwise_has_no_wg() {
+        let op = LayerOp::Elementwise {
+            elems: 1000.0,
+            ops: 2.0,
+        };
+        assert_eq!(op.quantities(Phase::Wg), PhaseQuantities::default());
+        assert_eq!(op.quantities(Phase::Fp).flops, 2000.0);
+    }
+
+    #[test]
+    fn gemm_params_are_weight_matrix() {
+        let op = LayerOp::Gemm {
+            m: 10.0,
+            k: 8.0,
+            n: 16.0,
+        };
+        assert_eq!(op.params(), 128.0);
+    }
+
+    #[test]
+    fn layer_params_scale_with_repeat() {
+        let mut l = Layer::new(
+            "mlp",
+            LayerOp::Gemm {
+                m: 2.0,
+                k: 4.0,
+                n: 8.0,
+            },
+            3.0,
+        );
+        assert_eq!(l.params(), 96.0);
+        l.extra_params = 10.0;
+        assert_eq!(l.params(), (32.0 + 10.0) * 3.0);
+    }
+
+    #[test]
+    fn workload_aggregates() {
+        let w = Workload {
+            name: "test".into(),
+            layers: vec![
+                Layer::new(
+                    "a",
+                    LayerOp::Gemm {
+                        m: 2.0,
+                        k: 2.0,
+                        n: 2.0,
+                    },
+                    2.0,
+                ),
+                Layer::new(
+                    "b",
+                    LayerOp::Elementwise {
+                        elems: 100.0,
+                        ops: 1.0,
+                    },
+                    1.0,
+                ),
+            ],
+            mp: 1,
+            dp: 1,
+            nodes: 1,
+            total_params: 8.0,
+        };
+        assert_eq!(w.params_per_node(), 8.0);
+        // GEMM: 16 flops x 3 phases x repeat 2 = 96; EW: 100 x 2 phases.
+        assert_eq!(w.total_flops(), 96.0 + 200.0);
+        assert_eq!(w.n_slots(), 2);
+        assert_eq!(w.activation_working_elems(), 100.0);
+    }
+
+    #[test]
+    fn min_traffic_sums_operands() {
+        let q = PhaseQuantities {
+            flops: 0.0,
+            u: 1.0,
+            v: 2.0,
+            w: 3.0,
+        };
+        assert_eq!(q.min_traffic(), 6.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload frontend (paper SIII-A / SIV-A): decompose a DL model into
+//! layers, each a GEMM (or lookup / element-wise op) with explicit FLOP,
+//! byte, and collective-communication counts for the three training phases.
+
+pub mod dlrm;
+pub mod gemm;
+pub mod layer;
+pub mod trace;
+pub mod transformer;
+
+pub use layer::{
+    Collective, Comm, CommScope, Layer, LayerOp, Phase, PhaseQuantities,
+    Workload, FP16,
+};

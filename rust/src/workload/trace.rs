@@ -1,0 +1,231 @@
+//! ASTRA-SIM-style workload input files (paper SIV-B: "the workload input
+//! file must describe ... number of floating-point operations, data volume,
+//! communication collective, and communication volume" per layer).
+//!
+//! Text format, one layer per line:
+//!
+//! ```text
+//! # comet-workload v1 <name> mp=<mp> dp=<dp> params=<total>
+//! <layer-name> <repeat> \
+//!   fp <flops> <u> <v> <w> <collective> <bytes> <scope> \
+//!   ig <flops> <u> <v> <w> <collective> <bytes> <scope> \
+//!   wg <flops> <u> <v> <w> <collective> <bytes> <scope>
+//! ```
+//!
+//! Layer names use `_` in place of spaces. The layer op is flattened into
+//! raw per-phase quantities — this is the exact information the cost model
+//! consumes, and matches ASTRA-SIM's layer-record philosophy.
+
+use super::layer::{
+    Collective, Comm, CommScope, Layer, LayerOp, Phase, Workload,
+};
+use crate::error::{Error, Result};
+
+/// Serialize a workload to the trace format.
+pub fn emit(w: &Workload) -> String {
+    let mut out = format!(
+        "# comet-workload v1 {} mp={} dp={} nodes={} params={}\n",
+        w.name.replace(' ', "_"),
+        w.mp,
+        w.dp,
+        w.nodes,
+        w.total_params
+    );
+    for l in &w.layers {
+        out.push_str(&l.name.replace(' ', "_"));
+        out.push(' ');
+        out.push_str(&format!("{}", l.repeat));
+        for phase in Phase::ALL {
+            let q = l.op.quantities(phase);
+            let c = l.comm(phase);
+            out.push_str(&format!(
+                " {} {} {} {} {} {} {} {}",
+                phase_tag(phase),
+                q.flops,
+                q.u,
+                q.v,
+                q.w,
+                collective_tag(c.collective),
+                c.bytes,
+                scope_tag(c.scope),
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a trace back into a workload. Layer ops come back as opaque
+/// [`LayerOp::Raw`] quantity records (the trace does not preserve GEMM
+/// shapes, by design — the cost model never needs them).
+pub fn parse(text: &str) -> Result<Workload> {
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Config("empty trace".into()))?;
+    let mut name = String::new();
+    let (mut mp, mut dp, mut params) = (1usize, 1usize, 0.0f64);
+    let mut nodes = 0usize;
+    for (i, tok) in header.split_whitespace().enumerate() {
+        match i {
+            0 | 1 | 2 if tok == "#" || tok == "comet-workload" || tok == "v1" => {}
+            3 => name = tok.to_string(),
+            _ => {
+                if let Some(v) = tok.strip_prefix("mp=") {
+                    mp = v.parse().map_err(|_| bad(header))?;
+                } else if let Some(v) = tok.strip_prefix("dp=") {
+                    dp = v.parse().map_err(|_| bad(header))?;
+                } else if let Some(v) = tok.strip_prefix("nodes=") {
+                    nodes = v.parse().map_err(|_| bad(header))?;
+                } else if let Some(v) = tok.strip_prefix("params=") {
+                    params = v.parse().map_err(|_| bad(header))?;
+                }
+            }
+        }
+    }
+    if !header.starts_with("# comet-workload v1") {
+        return Err(Error::Config(format!("bad trace header: {header}")));
+    }
+
+    let mut layers = Vec::new();
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() != 2 + 3 * 8 {
+            return Err(bad(line));
+        }
+        let mut layer = Layer::new(toks[0], LayerOp::Raw(Default::default()), 1.0);
+        layer.repeat = toks[1].parse().map_err(|_| bad(line))?;
+        let mut raw = [Default::default(); 3];
+        for (pi, phase) in Phase::ALL.iter().enumerate() {
+            let base = 2 + pi * 8;
+            if toks[base] != phase_tag(*phase) {
+                return Err(bad(line));
+            }
+            let f: f64 = toks[base + 1].parse().map_err(|_| bad(line))?;
+            let u: f64 = toks[base + 2].parse().map_err(|_| bad(line))?;
+            let v: f64 = toks[base + 3].parse().map_err(|_| bad(line))?;
+            let w: f64 = toks[base + 4].parse().map_err(|_| bad(line))?;
+            raw[pi] = super::layer::PhaseQuantities { flops: f, u, v, w };
+            let comm = Comm {
+                collective: parse_collective(toks[base + 5]).ok_or_else(|| bad(line))?,
+                bytes: toks[base + 6].parse().map_err(|_| bad(line))?,
+                scope: parse_scope(toks[base + 7]).ok_or_else(|| bad(line))?,
+            };
+            match phase {
+                Phase::Fp => layer.comm_fp = comm,
+                Phase::Ig => layer.comm_ig = comm,
+                Phase::Wg => layer.comm_wg = comm,
+            }
+        }
+        layer.op = LayerOp::Raw(raw);
+        layers.push(layer);
+    }
+    if nodes == 0 {
+        nodes = mp * dp;
+    }
+    Ok(Workload {
+        name,
+        layers,
+        mp,
+        dp,
+        nodes,
+        total_params: params,
+    })
+}
+
+fn bad(line: &str) -> Error {
+    Error::Config(format!("bad trace line: {line}"))
+}
+
+fn phase_tag(p: Phase) -> &'static str {
+    match p {
+        Phase::Fp => "fp",
+        Phase::Ig => "ig",
+        Phase::Wg => "wg",
+    }
+}
+
+fn collective_tag(c: Collective) -> &'static str {
+    match c {
+        Collective::None => "none",
+        Collective::AllReduce => "allreduce",
+        Collective::AllToAll => "alltoall",
+        Collective::AllGather => "allgather",
+        Collective::ReduceScatter => "reducescatter",
+    }
+}
+
+fn parse_collective(s: &str) -> Option<Collective> {
+    Some(match s {
+        "none" => Collective::None,
+        "allreduce" => Collective::AllReduce,
+        "alltoall" => Collective::AllToAll,
+        "allgather" => Collective::AllGather,
+        "reducescatter" => Collective::ReduceScatter,
+        _ => return None,
+    })
+}
+
+fn scope_tag(s: CommScope) -> &'static str {
+    match s {
+        CommScope::Mp => "mp",
+        CommScope::Dp => "dp",
+        CommScope::All => "all",
+    }
+}
+
+fn parse_scope(s: &str) -> Option<CommScope> {
+    Some(match s {
+        "mp" => CommScope::Mp,
+        "dp" => CommScope::Dp,
+        "all" => CommScope::All,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::Strategy;
+    use crate::workload::transformer::Transformer;
+
+    #[test]
+    fn roundtrip_preserves_quantities() {
+        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let text = emit(&w);
+        let back = parse(&text).unwrap();
+        assert_eq!(back.layers.len(), w.layers.len());
+        assert_eq!(back.mp, 8);
+        assert_eq!(back.dp, 128);
+        for (a, b) in w.layers.iter().zip(back.layers.iter()) {
+            assert_eq!(a.repeat, b.repeat);
+            for phase in Phase::ALL {
+                let qa = a.op.quantities(phase);
+                let qb = b.op.quantities(phase);
+                assert!((qa.flops - qb.flops).abs() <= qa.flops * 1e-12);
+                assert_eq!(a.comm(phase).bytes, b.comm(phase).bytes);
+                assert_eq!(a.comm(phase).collective, b.comm(phase).collective);
+                assert_eq!(a.comm(phase).scope, b.comm(phase).scope);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(parse("garbage\n").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_line() {
+        let w = Transformer::t100m().build(&Strategy::new(2, 2)).unwrap();
+        let text = emit(&w);
+        let mut lines: Vec<&str> = text.lines().collect();
+        let truncated = &lines[1][..lines[1].len() / 2];
+        lines[1] = truncated;
+        assert!(parse(&lines.join("\n")).is_err());
+    }
+}

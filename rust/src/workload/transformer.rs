@@ -1,0 +1,347 @@
+//! Transformer workload builder (paper Table II, modeled after Megatron-LM's
+//! hybrid model & data parallelism).
+//!
+//! MP shards attention heads, the MLP hidden dimension (`sub_ff`), and the
+//! vocabulary (`sub_vocab`) across the MP group; DP replicates the sharded
+//! model. Table II's `b` (mini-batch size) is a fixed per-replica
+//! hyper-parameter: each DP replica processes `b` sequences per iteration
+//! regardless of the (MP, DP) split. This is the reading consistent with
+//! the paper's Fig. 8 trends — both the compute delay AND the exposed
+//! FP/IG communication reach their minimum at MP8_DP128:
+//!
+//! * high MP → an MP group straddles pods, so the blocking per-stack
+//!   all-reduces ride the slow inter-pod links (Table I's logical-ring
+//!   collectives) → communication-bound left flank;
+//! * low MP → each node holds a `1/MP` model shard and computes `b`
+//!   sequences over it, so per-node FLOPs AND weight/optimizer memory
+//!   traffic double with every MP halving → memory-bound right flank.
+//!
+//! WG gradient synchronization follows ZeRO-2: gradients are partitioned
+//! across DP, so the per-iteration DP collective is a reduce-scatter of
+//! the gradient shard (the fp16 parameter all-gather overlaps with the
+//! next iteration's forward pass and is excluded, as in the paper where
+//! "WG communication is fully overlapped" everywhere).
+//!
+//! Layer table mirrors the paper's Table II; per-stack layers are emitted
+//! once with `repeat = #stacks`.
+
+use super::gemm::gemm;
+use super::layer::{
+    Collective, Comm, CommScope, Layer, LayerOp, Workload, FP16,
+};
+use crate::error::{Error, Result};
+use crate::parallel::Strategy;
+
+/// Transformer hyper-parameters (the model "signature" of SIV-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transformer {
+    pub name: String,
+    /// Encoder/decoder stack count (Table II's `#Stacks` = N).
+    pub stacks: usize,
+    /// Hidden dimension `d_model`.
+    pub d_model: f64,
+    /// Attention heads `h`.
+    pub heads: f64,
+    /// Sequence length `seq`.
+    pub seq: f64,
+    /// Vocabulary size.
+    pub vocab: f64,
+    /// MLP expansion factor (ff = ff_mult x d_model).
+    pub ff_mult: f64,
+    /// Mini-batch size `b` per model replica, in sequences (Table II).
+    pub batch: f64,
+}
+
+impl Transformer {
+    /// Transformer-1T (Megatron-LM 1T row: 128 stacks, d_model 25600,
+    /// 160 heads, seq 2048, vocab 51200). ~1.01e12 parameters.
+    pub fn t1() -> Transformer {
+        Transformer {
+            name: "transformer-1t".into(),
+            stacks: 128,
+            d_model: 25_600.0,
+            heads: 160.0,
+            seq: 2048.0,
+            vocab: 51_200.0,
+            ff_mult: 4.0,
+            batch: 16.0,
+        }
+    }
+
+    /// A ~100M-parameter configuration (GPT-2-small-ish) used by the
+    /// end-to-end examples and tests where full 1T scale is unnecessary.
+    pub fn t100m() -> Transformer {
+        Transformer {
+            name: "transformer-100m".into(),
+            stacks: 12,
+            d_model: 768.0,
+            heads: 12.0,
+            seq: 1024.0,
+            vocab: 50_304.0,
+            ff_mult: 4.0,
+            batch: 8.0,
+        }
+    }
+
+    /// Total parameter count (the `12 L d^2` transformer rule plus
+    /// embeddings).
+    pub fn total_params(&self) -> f64 {
+        let d = self.d_model;
+        let per_stack = (4.0 + 2.0 * self.ff_mult) * d * d; // QKV+proj + MLP
+        self.stacks as f64 * per_stack + 2.0 * self.vocab * d
+    }
+
+    /// Key/value width per head.
+    pub fn d_head(&self) -> f64 {
+        self.d_model / self.heads
+    }
+
+    /// Decompose into per-node layers for a parallelization strategy.
+    ///
+    /// Errors if MP exceeds the head count (cannot shard further).
+    pub fn build(&self, strategy: &Strategy) -> Result<Workload> {
+        let mp = strategy.mp as f64;
+        let dp = strategy.dp as f64;
+        if mp > self.heads {
+            return Err(Error::Config(format!(
+                "MP {} > heads {}: cannot shard attention",
+                strategy.mp, self.heads
+            )));
+        }
+        let d = self.d_model;
+        let seq = self.seq;
+        let b = self.batch; // per-replica mini-batch (Table II's `b`)
+        let rows = b * seq; // GEMM M dimension
+        let ff = self.ff_mult * d;
+        let sub_d = d / mp; // sharded head block (h/mp x d_k)
+        let sub_ff = ff / mp;
+        let sub_vocab = self.vocab / mp;
+        let n_stacks = self.stacks as f64;
+
+        // The two Megatron blocking all-reduces per stack (attention output
+        // and MLP output), in both FP and IG, across the MP group.
+        let ar_mp = Comm::allreduce(rows * d * FP16, CommScope::Mp);
+
+        // WG data-parallel gradient reduce-scatter, per GEMM layer, of that
+        // layer's weight-shard bytes (ZeRO-2: gradients partitioned across
+        // DP — SIV-B; the parameter all-gather overlaps the next forward).
+        let wg_ar = |k: f64, n: f64| Comm {
+            collective: Collective::ReduceScatter,
+            bytes: k * n * FP16,
+            scope: CommScope::Dp,
+        };
+
+        let mut layers = Vec::new();
+
+        // --- embeddings (once) --------------------------------------------
+        let mut input_emb = Layer::new(
+            "input-embedding",
+            LayerOp::Lookup {
+                rows,
+                width: d,
+            },
+            1.0,
+        );
+        input_emb.extra_params = sub_vocab * d;
+        // Vocab-parallel embedding: all-reduce the gathered activations.
+        input_emb.comm_fp = ar_mp;
+        input_emb.comm_wg = Comm {
+            collective: Collective::ReduceScatter,
+            bytes: sub_vocab * d * FP16,
+            scope: CommScope::Dp,
+        };
+        layers.push(input_emb);
+
+        // --- per-stack layers (repeat = stacks) ----------------------------
+        let ew = |name: &str, ops: f64| {
+            Layer::new(
+                name,
+                LayerOp::Elementwise {
+                    elems: rows * d,
+                    ops,
+                },
+                n_stacks,
+            )
+        };
+        layers.push(ew("layernorm-1", 5.0));
+
+        for nm in ["q-proj", "k-proj", "v-proj"] {
+            let mut l = Layer::new(nm, gemm(rows, d, sub_d), n_stacks);
+            l.comm_wg = wg_ar(d, sub_d);
+            layers.push(l);
+        }
+
+        // Attention scores U = softmax(QK^T/sqrt(d_k)) and Y = UV. Table II
+        // writes these as (b.seq x h.d_k) x (h.d_k x b.seq) GEMMs; we keep
+        // the N dimension per-sample (seq, not b.seq) so FLOPs scale
+        // linearly with the microbatch, matching real block-diagonal
+        // attention rather than cross-batch mixing.
+        layers.push(Layer::new(
+            "attn-scores",
+            gemm(rows, sub_d, seq),
+            n_stacks,
+        ));
+        layers.push(Layer::new("attn-values", gemm(rows, seq, sub_d), n_stacks));
+
+        // Output projection (row-parallel): blocking MP all-reduce in FP
+        // and IG.
+        let mut zproj = Layer::new("attn-out-proj", gemm(rows, sub_d, d), n_stacks);
+        zproj.comm_fp = ar_mp;
+        zproj.comm_ig = ar_mp;
+        zproj.comm_wg = wg_ar(sub_d, d);
+        layers.push(zproj);
+
+        layers.push(ew("residual-1", 1.0));
+        layers.push(ew("layernorm-2", 5.0));
+
+        let mut mlp1 = Layer::new("mlp-1", gemm(rows, d, sub_ff), n_stacks);
+        mlp1.comm_wg = wg_ar(d, sub_ff);
+        layers.push(mlp1);
+
+        let mut mlp2 = Layer::new("mlp-2", gemm(rows, sub_ff, d), n_stacks);
+        mlp2.comm_fp = ar_mp;
+        mlp2.comm_ig = ar_mp;
+        mlp2.comm_wg = wg_ar(sub_ff, d);
+        layers.push(mlp2);
+
+        layers.push(ew("residual-2", 1.0));
+
+        // --- output embedding / LM head (once) -----------------------------
+        let mut out_emb = Layer::new(
+            "output-embedding",
+            gemm(rows, d, sub_vocab),
+            1.0,
+        );
+        // Vocab-parallel softmax reduction (small) in FP; activation-grad
+        // all-reduce in IG.
+        out_emb.comm_fp = Comm::allreduce(rows * FP16, CommScope::Mp);
+        out_emb.comm_ig = ar_mp;
+        out_emb.comm_wg = wg_ar(d, sub_vocab);
+        layers.push(out_emb);
+
+        // --- optimizer weight update (once, covers every shard) ------------
+        // Mixed-precision Adam streams every model state of the node's MP
+        // shard through memory once in and once out: fp16 params (2 B) +
+        // fp16 grads (2 B) + fp32 master/momentum/variance (12 B), read +
+        // write = 32 B/param. This 1/MP traffic term is what makes low-MP
+        // configurations memory-(bandwidth-)bound — Fig. 8's right flank.
+        let shard_params = self.total_params() / mp;
+        let update_bytes = shard_params * 2.0 * (2.0 + 2.0 + 12.0);
+        let _ = dp;
+        layers.push(Layer::new(
+            "weight-update",
+            LayerOp::WeightUpdate {
+                params: shard_params,
+                bytes: update_bytes,
+            },
+            1.0,
+        ));
+
+        Ok(Workload {
+            name: format!("{}@{}", self.name, strategy.label()),
+            layers,
+            mp: strategy.mp,
+            dp: strategy.dp,
+            nodes: strategy.nodes(),
+            total_params: self.total_params(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t1_is_one_trillion() {
+        let t = Transformer::t1();
+        let p = t.total_params();
+        assert!(
+            (0.95e12..1.1e12).contains(&p),
+            "Transformer-1T params {p:.3e}"
+        );
+    }
+
+    #[test]
+    fn t100m_is_about_100m() {
+        let p = Transformer::t100m().total_params();
+        assert!((0.8e8..2.0e8).contains(&p), "params {p:.3e}");
+    }
+
+    #[test]
+    fn build_rejects_mp_beyond_heads() {
+        let t = Transformer::t1();
+        assert!(t.build(&Strategy::new(256, 4)).is_err());
+        assert!(t.build(&Strategy::new(128, 8)).is_ok());
+    }
+
+    #[test]
+    fn params_per_node_scale_with_mp() {
+        let t = Transformer::t1();
+        let w8 = t.build(&Strategy::new(8, 128)).unwrap();
+        let w16 = t.build(&Strategy::new(16, 64)).unwrap();
+        let r = w8.params_per_node() / w16.params_per_node();
+        assert!((r - 2.0).abs() < 0.05, "ratio {r}");
+    }
+
+    #[test]
+    fn per_node_flops_double_when_mp_halves() {
+        // Fixed per-replica batch: each node computes b sequences over a
+        // 1/MP model shard, so halving MP doubles per-node FLOPs.
+        let t = Transformer::t1();
+        let f8 = t.build(&Strategy::new(8, 128)).unwrap().total_flops();
+        let f16 = t.build(&Strategy::new(16, 64)).unwrap().total_flops();
+        let r = f16 / f8;
+        assert!((r - 0.5).abs() < 0.05, "ratio {r}");
+    }
+
+    #[test]
+    fn mp_allreduce_bytes_constant_across_strategies() {
+        // Table II's b is per-replica, so the blocking MP all-reduce
+        // payload (b x seq x d_model) is strategy-independent.
+        let t = Transformer::t1();
+        let ar = |mp: usize, dp: usize| {
+            t.build(&Strategy::new(mp, dp))
+                .unwrap()
+                .layers
+                .iter()
+                .find(|l| l.name == "mlp-2")
+                .unwrap()
+                .comm_fp
+                .bytes
+        };
+        assert_eq!(ar(8, 128), ar(64, 16));
+        assert_eq!(ar(8, 128), 16.0 * 2048.0 * 25_600.0 * 2.0);
+    }
+
+    #[test]
+    fn wg_sync_is_reduce_scatter() {
+        let t = Transformer::t1();
+        let w = t.build(&Strategy::new(8, 128)).unwrap();
+        let mlp = w.layers.iter().find(|l| l.name == "mlp-1").unwrap();
+        assert_eq!(mlp.comm_wg.collective, Collective::ReduceScatter);
+        assert_eq!(mlp.comm_wg.scope, CommScope::Dp);
+    }
+
+    #[test]
+    fn layer_count_fits_abi() {
+        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        assert!(w.n_slots() <= 192, "slots {}", w.n_slots());
+        assert!(w.n_slots() >= 10);
+    }
+
+    #[test]
+    fn weight_update_traffic_grows_as_mp_shrinks() {
+        let t = Transformer::t1();
+        let wu_bytes = |mp: usize, dp: usize| {
+            let w = t.build(&Strategy::new(mp, dp)).unwrap();
+            let l = w
+                .layers
+                .iter()
+                .find(|l| l.name == "weight-update")
+                .unwrap();
+            l.op.quantities(crate::workload::Phase::Wg).w
+        };
+        assert!(wu_bytes(8, 128) > 3.0 * wu_bytes(64, 16));
+    }
+}

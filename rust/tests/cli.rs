@@ -1,0 +1,101 @@
+//! CLI smoke tests: drive the `comet` binary end-to-end the way a user
+//! would (figures, sweeps, config inspection, trace emission, validation).
+
+use std::process::Command;
+
+fn comet(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_comet"))
+        .args(args)
+        .output()
+        .expect("spawn comet");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn figure_fig8a_prints_table() {
+    let (ok, stdout, _) = comet(&["figure", "fig8a"]);
+    assert!(ok);
+    assert!(stdout.contains("MP8_DP128"));
+    assert!(stdout.contains("FP_Exp_Comm"));
+}
+
+#[test]
+fn figure_out_dir_writes_csv() {
+    let dir = std::env::temp_dir().join("comet_cli_test_csv");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (ok, _, _) =
+        comet(&["figure", "fig6", "--out-dir", dir.to_str().unwrap()]);
+    assert!(ok);
+    let csv = std::fs::read_to_string(dir.join("fig6.csv")).unwrap();
+    // The row label contains a comma, so the CSV writer quotes it.
+    assert!(csv.starts_with("\"(MP, DP)\",baseline,zero-1,zero-2,zero-3"));
+    assert_eq!(csv.lines().count(), 12);
+}
+
+#[test]
+fn sweep_runs_on_preset() {
+    let (ok, stdout, _) =
+        comet(&["sweep", "--cluster", "B1", "--infinite-memory"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("MP8_DP128"));
+    assert!(stdout.contains("footprint"));
+}
+
+#[test]
+fn eval_single_config() {
+    let (ok, stdout, _) = comet(&["eval", "--strategy", "MP64_DP16"]);
+    assert!(ok);
+    assert!(stdout.contains("total iteration time"));
+}
+
+#[test]
+fn config_list_and_show() {
+    let (ok, stdout, _) = comet(&["config", "list"]);
+    assert!(ok);
+    for name in ["A0", "B1", "C2", "TPUv4", "Dojo"] {
+        assert!(stdout.contains(name), "{name} missing:\n{stdout}");
+    }
+    let (ok, stdout, _) = comet(&["config", "show", "B1"]);
+    assert!(ok);
+    assert!(stdout.contains("\"expanded_capacity\": 480000000000"));
+}
+
+#[test]
+fn workload_emits_trace() {
+    let (ok, stdout, _) = comet(&[
+        "workload",
+        "--model",
+        "transformer-1t",
+        "--strategy",
+        "MP8_DP128",
+    ]);
+    assert!(ok);
+    assert!(stdout.starts_with("# comet-workload v1"));
+    assert!(stdout.contains("mlp-2"));
+    // The emitted trace must parse back.
+    comet::workload::trace::parse(&stdout).unwrap();
+}
+
+#[test]
+fn unknown_args_fail_cleanly() {
+    let (ok, _, stderr) = comet(&["figure", "fig99"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown figure"));
+    let (ok, _, stderr) = comet(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("usage"));
+    let (ok, _, stderr) = comet(&["sweep", "--cluster", "Z9"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown cluster"));
+}
+
+#[test]
+fn validate_passes() {
+    let (ok, stdout, stderr) = comet(&["validate"]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("validation OK"));
+}

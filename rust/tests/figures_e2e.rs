@@ -1,0 +1,249 @@
+//! End-to-end figure regeneration with the paper's qualitative shapes
+//! asserted — the executable form of EXPERIMENTS.md. Each test regenerates
+//! one evaluation artifact of the paper and checks the claims its caption
+//! and prose make.
+
+use comet::coordinator::{sweep, Coordinator};
+
+fn coord() -> Coordinator {
+    Coordinator::native()
+}
+
+#[test]
+fn fig6_footprint_claims() {
+    let f = sweep::fig6();
+    // Baseline grows exponentially as MP shrinks (16 psi / MP per node).
+    let b_mp8 = f.cell("MP8_DP128", "baseline").unwrap();
+    let b_mp1 = f.cell("MP1_DP1024", "baseline").unwrap();
+    assert!((b_mp1 / b_mp8 - 8.0).abs() < 0.01);
+    let b_mp64 = f.cell("MP64_DP16", "baseline").unwrap();
+    assert!((b_mp8 / b_mp64 - 8.0).abs() < 0.01);
+    // ZeRO-2 at MP8 still exceeds a single 80 GB device (paper: "the model
+    // footprint per node eventually exceeds the typical memory capacity").
+    assert!(f.cell("MP8_DP128", "zero-2").unwrap() > 80.0);
+    // ZeRO-3 is the lowest at every MP degree.
+    for (label, vals) in &f.rows {
+        let z3 = f.cell(label, "zero-3").unwrap();
+        assert!(vals.iter().all(|&v| v >= z3 - 1e-9), "{label}");
+    }
+}
+
+#[test]
+fn fig8a_claims() {
+    let f = sweep::fig8a(&coord()).unwrap();
+    // Headline: MP8_DP128 optimal.
+    assert_eq!(f.argmin("Total_s"), Some("MP8_DP128"));
+    // WG comm fully overlapped in every configuration.
+    for (label, _) in &f.rows {
+        assert_eq!(f.cell(label, "WG_Exp_Comm").unwrap(), 0.0, "{label}");
+    }
+    // Left of MP8: exposed FP comm grows with MP; right of MP8: compute
+    // grows as MP shrinks.
+    let fpx = |l: &str| f.cell(l, "FP_Exp_Comm").unwrap();
+    assert!(fpx("MP64_DP16") > fpx("MP16_DP64"));
+    assert!(fpx("MP16_DP64") > fpx("MP8_DP128"));
+    let fpc = |l: &str| f.cell(l, "FP_Compute").unwrap();
+    assert!(fpc("MP4_DP256") > fpc("MP8_DP128"));
+    assert!(fpc("MP1_DP1024") > fpc("MP4_DP256"));
+    // MP8 needs ~3.3x the 80 GB local memory; MP64 fits.
+    let fp8 = f.cell("MP8_DP128", "Footprint_GB").unwrap();
+    assert!((240.0..340.0).contains(&fp8), "{fp8}");
+    assert!(f.cell("MP64_DP16", "Footprint_GB").unwrap() <= 80.0);
+}
+
+#[test]
+fn fig8b_claims() {
+    let f = sweep::fig8b(&coord()).unwrap();
+    // Comm share dominates at high MP, becomes negligible from MP8 down.
+    assert!(f.cell("MP64_DP16", "Exp_Comm_frac").unwrap() > 0.5);
+    assert!(f.cell("MP8_DP128", "Exp_Comm_frac").unwrap() < 0.25);
+    assert!(f.cell("MP2_DP512", "Exp_Comm_frac").unwrap() < 0.10);
+}
+
+#[test]
+fn fig9_claims() {
+    let f = sweep::fig9(&coord()).unwrap();
+    // Configurations fitting in local memory are bandwidth-insensitive.
+    let first = f.cell("MP64_DP16", "250GB/s").unwrap();
+    let last = f.cell("MP64_DP16", "2039GB/s").unwrap();
+    assert!((first - last).abs() < 1e-9);
+    // Ex.1: MP8_DP128 beats the baseline once EM bandwidth is high enough,
+    // with the crossover in the 250..1000 GB/s band (paper: ~500).
+    assert!(f.cell("MP8_DP128", "250GB/s").unwrap() < 1.0);
+    assert!(f.cell("MP8_DP128", "1000GB/s").unwrap() > 1.0);
+    // Memory expansion never helps MP2 (strictly worse row).
+    for col in &f.columns {
+        assert!(f.cell("MP2_DP512", col).unwrap() < 1.0);
+    }
+    // Optimization opportunity magnitude ~1.2-1.4x (paper: up to 1.4x).
+    let peak = f.cell("MP8_DP128", "2039GB/s").unwrap();
+    assert!((1.1..1.5).contains(&peak), "{peak}");
+}
+
+#[test]
+fn fig10_claims() {
+    let f = sweep::fig10(&coord()).unwrap();
+    let base = f.cell("compute x1", "EM@2039GB/s").unwrap();
+    let half = f.cell("compute x0.5", "EM@2039GB/s").unwrap();
+    let dbl = f.cell("compute x2", "EM@2039GB/s").unwrap();
+    let quad = f.cell("compute x4", "EM@2039GB/s").unwrap();
+    // Paper: halving compute => +50%; doubling => -25%; diminishing after.
+    // Our calibration lands at +82% / -31% — same direction, steeper
+    // because the MP8 workload is more compute-bound here (EXPERIMENTS.md).
+    assert!((1.3..2.0).contains(&(half / base)), "half {}", half / base);
+    assert!((0.55..0.9).contains(&(dbl / base)), "dbl {}", dbl / base);
+    assert!(dbl - quad < base - dbl, "diminishing returns");
+    // Lower EM bandwidth damps the impact of compute scaling.
+    let gain_hi = f.cell("compute x0.5", "EM@2039GB/s").unwrap()
+        - f.cell("compute x2", "EM@2039GB/s").unwrap();
+    let gain_lo = f.cell("compute x0.5", "EM@500GB/s").unwrap()
+        - f.cell("compute x2", "EM@500GB/s").unwrap();
+    assert!(gain_lo < gain_hi);
+}
+
+#[test]
+fn fig11_claims() {
+    let f = sweep::fig11(&coord()).unwrap();
+    // MP64: halving both bandwidths costs tens of percent; boosting both
+    // amplifies beyond boosting one.
+    let base = f.cell("MP64_DP16 intra x1", "inter x1").unwrap();
+    assert!((base - 1.0).abs() < 1e-9);
+    let both_half = f.cell("MP64_DP16 intra x0.5", "inter x0.5").unwrap();
+    assert!(both_half < 0.80, "{both_half}");
+    let only_intra = f.cell("MP64_DP16 intra x2", "inter x1").unwrap();
+    let only_inter = f.cell("MP64_DP16 intra x1", "inter x2").unwrap();
+    let both = f.cell("MP64_DP16 intra x2", "inter x2").unwrap();
+    assert!(both > only_intra && both > only_inter, "amplificatory effect");
+    // MP8: network-insensitive (halving both costs ~<15%).
+    let mp8_half = f.cell("MP8_DP128 intra x0.5", "inter x0.5").unwrap();
+    assert!(mp8_half > 0.85, "{mp8_half}");
+    let mp8_4x = f.cell("MP8_DP128 intra x4", "inter x4").unwrap();
+    assert!(mp8_4x < 1.15, "{mp8_4x}");
+}
+
+#[test]
+fn fig12_claims() {
+    let f = sweep::fig12(&coord()).unwrap();
+    // MP64's optimum ratio lies in the paper's band (~1:6; we accept
+    // 1:3..1:9.6) and beats the extremes.
+    let best = f
+        .rows
+        .iter()
+        .max_by(|a, b| a.1[0].partial_cmp(&b.1[0]).unwrap())
+        .map(|(l, _)| l.clone())
+        .unwrap();
+    assert!(
+        ["1:3", "1:4", "1:5", "1:6", "1:8"].contains(&best.as_str()),
+        "best ratio {best}"
+    );
+    let best_v = f.cell(&best, "MP64_DP16").unwrap();
+    assert!(best_v >= f.cell("1:1", "MP64_DP16").unwrap());
+    assert!(best_v >= f.cell("1:24", "MP64_DP16").unwrap());
+    // MP8 is largely insensitive until intra-pod bandwidth starves.
+    let mp8_mid = f.cell("1:6", "MP8_DP128").unwrap();
+    assert!((0.9..1.2).contains(&mp8_mid), "{mp8_mid}");
+    let mp8_low = f.cell("1:1", "MP8_DP128").unwrap();
+    assert!(mp8_low < mp8_mid, "intra starvation at 1:1");
+}
+
+#[test]
+fn fig13_claims() {
+    let fa = sweep::fig13a(&coord()).unwrap();
+    // Sublinear growth in per-instance time as the cluster shrinks.
+    let n32 = fa.cell("32 nodes", "Norm_to_64").unwrap();
+    let n16 = fa.cell("16 nodes", "Norm_to_64").unwrap();
+    let n8 = fa.cell("8 nodes", "Norm_to_64").unwrap();
+    assert!(n32 > 1.0 && n32 < 2.0);
+    assert!(n16 > n32 && n16 < 4.0);
+    assert!(n8 < 8.0);
+    // Exposed comm shrinks from 16 -> 8 nodes (single-pod all-to-all).
+    let comm16 = fa.cell("16 nodes", "FP_Exp_Comm").unwrap();
+    let comm8 = fa.cell("8 nodes", "FP_Exp_Comm").unwrap();
+    assert!(comm8 < comm16);
+
+    let fb = sweep::fig13b(&coord()).unwrap();
+    // Paper: improvement needs ~>=75% extra capacity at >=800 GB/s; a
+    // 200-ish GB expansion at 1.5 TB/s gives ~1.5x.
+    assert!(fb.cell("16 nodes/instance", "500GB/s").unwrap() < 1.0);
+    assert!(fb.cell("16 nodes/instance", "1250GB/s").unwrap() > 1.0);
+    let v8 = fb.cell("8 nodes/instance", "1500GB/s").unwrap();
+    assert!((1.3..2.3).contains(&v8), "{v8}");
+    // DLRM is more memory-bandwidth-sensitive than the Transformer: the
+    // 8-node packing's speedup must grow steeply with bandwidth.
+    let lo = fb.cell("8 nodes/instance", "250GB/s").unwrap();
+    let hi = fb.cell("8 nodes/instance", "2039GB/s").unwrap();
+    assert!(hi / lo > 3.0);
+}
+
+#[test]
+fn fig15_claims() {
+    let f = sweep::fig15(&coord()).unwrap();
+    let t = |c: &str| f.cell(c, "Transformer-1T").unwrap();
+    let d = |c: &str| f.cell(c, "DLRM_x8").unwrap();
+    // Transformer: memory expansion helps every cluster family.
+    assert!(t("A1") > t("A0"));
+    assert!(t("B1") > t("B0"));
+    assert!(t("C1") > t("C0"));
+    assert!(t("C2") > t("C1"));
+    // DLRM: expansion helps only the lowest-end (A) family on balance.
+    assert!(d("A1") > d("A0"));
+    assert!(d("A2") > d("A1"));
+    assert!(d("B1") < d("B0"));
+    assert!(d("C1") < d("C0"));
+    // C-family is the best GPU cluster; headline magnitude band around the
+    // paper's 7.7x.
+    let c0_avg = (t("C0") * d("C0")).sqrt();
+    assert!((4.0..13.0).contains(&c0_avg), "C0 avg {c0_avg}");
+    // Dojo leads both workloads (huge SRAM + memory + network).
+    for name in ["A0", "A1", "A2", "B0", "B1", "B2", "C0", "C1", "C2", "TPUv4"]
+    {
+        assert!(t("Dojo") > t(name));
+        assert!(d("Dojo") > d(name));
+    }
+    // TPU: strong for Transformer, DLRM capped by memory capacity.
+    assert!(t("TPUv4") > t("B2"));
+    assert!(d("TPUv4") < d("B2") * 2.0);
+}
+
+#[test]
+fn all_figures_regenerate_quickly() {
+    let t0 = std::time::Instant::now();
+    let figs = sweep::all_figures(&coord()).unwrap();
+    assert_eq!(figs.len(), 10);
+    // The paper's SV-E: hours per heatmap. Ours: the whole set in < 60 s
+    // even on a cold cache and debug-adjacent settings.
+    assert!(
+        t0.elapsed().as_secs() < 60,
+        "{:?} is too slow",
+        t0.elapsed()
+    );
+    for f in &figs {
+        assert!(!f.rows.is_empty(), "{} empty", f.id);
+        let csv = f.to_csv();
+        assert!(csv.lines().count() == f.rows.len() + 1, "{} csv", f.id);
+        assert!(!f.to_table().is_empty());
+    }
+}
+
+#[test]
+fn ablation_claims() {
+    let c = coord();
+    // Collectives ablation: hierarchical collectives collapse the
+    // pod-straddling penalty (>2x cheaper at MP>=16), and leave intra-pod
+    // configurations untouched — i.e. Fig. 8's MP8 optimum is a
+    // topology-awareness effect of Table I's logical-ring collectives.
+    let f = sweep::ablation_collectives(&c).unwrap();
+    assert!(f.cell("MP64_DP16", "ring/hier").unwrap() > 2.0);
+    assert!((f.cell("MP8_DP128", "ring/hier").unwrap() - 1.0).abs() < 1e-9);
+    for (label, _) in &f.rows {
+        assert!(f.cell(label, "ring/hier").unwrap() >= 1.0 - 1e-9, "{label}");
+    }
+
+    // ZeRO ablation: stage 3 cuts MP8's footprint ~15x below stage 2 and
+    // its 1.5x DP volume still hides under WG compute on this balance.
+    let f = sweep::ablation_zero(&c).unwrap();
+    let z2 = f.cell("MP8_DP128 zero-2", "Footprint_GB").unwrap();
+    let z3 = f.cell("MP8_DP128 zero-3", "Footprint_GB").unwrap();
+    assert!(z2 / z3 > 10.0);
+    assert_eq!(f.cell("MP8_DP128 zero-3", "WG_Exp_Comm_s").unwrap(), 0.0);
+}

@@ -1,0 +1,248 @@
+//! Property-based tests over randomized inputs (deterministic PRNG — the
+//! offline crate set has no proptest, so comet::util::prng drives the
+//! generation; every case count is fixed and seeds are printed on failure).
+
+use comet::analytical::evaluate;
+use comet::compute::{gemm_traffic, hybrid_bandwidth};
+use comet::config::presets;
+use comet::model::inputs::{derive_inputs, EvalOptions};
+use comet::network::{collective_cost, CollectiveImpl, CollectiveSpec};
+use comet::parallel::{model_state_bytes, Strategy, ZeroStage};
+use comet::sim::simulate;
+use comet::util::prng::Rng;
+use comet::util::stats::rel_diff;
+use comet::workload::dlrm::Dlrm;
+use comet::workload::trace;
+use comet::workload::transformer::Transformer;
+use comet::workload::Collective;
+
+const CASES: usize = 200;
+
+#[test]
+fn traffic_monotone_in_buffer_and_bounded_below() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let u = rng.log_range(1.0, 1e12);
+        let v = rng.log_range(1.0, 1e12);
+        let w = rng.log_range(1.0, 1e12);
+        let s1 = rng.log_range(1e6, 1e11);
+        let s2 = s1 * rng.range(1.0, 100.0);
+        let t1 = gemm_traffic(u, v, w, s1);
+        let t2 = gemm_traffic(u, v, w, s2);
+        assert!(t2 <= t1 + 1e-6, "case {case}: bigger buffer more traffic");
+        assert!(t1 >= u + v + w - 1e-6, "case {case}: below lower bound");
+    }
+}
+
+#[test]
+fn hybrid_bandwidth_between_levels() {
+    let mut rng = Rng::new(202);
+    for case in 0..CASES {
+        let bw_lm = rng.log_range(1e11, 1e13);
+        let bw_em = rng.log_range(1e10, bw_lm);
+        let frac = rng.f64();
+        let bw = hybrid_bandwidth(bw_lm, bw_em, frac);
+        assert!(
+            bw <= bw_lm + 1e-3 && bw >= bw_em - 1e-3,
+            "case {case}: {bw} outside [{bw_em}, {bw_lm}]"
+        );
+    }
+}
+
+#[test]
+fn collective_cost_invariants() {
+    let mut rng = Rng::new(303);
+    let types = [
+        Collective::AllReduce,
+        Collective::AllToAll,
+        Collective::AllGather,
+        Collective::ReduceScatter,
+    ];
+    for case in 0..CASES {
+        let spec = CollectiveSpec {
+            collective: *rng.choose(&types),
+            bytes: rng.log_range(1e3, 1e12),
+            n_intra: rng.pow2(0, 5) as usize,
+            n_inter: rng.pow2(0, 7) as usize,
+        };
+        let bwi = rng.log_range(1e10, 1e12);
+        let bwx = rng.log_range(1e9, bwi);
+        let lat = rng.range(0.0, 1e-5);
+        for impl_ in [CollectiveImpl::LogicalRing, CollectiveImpl::Hierarchical]
+        {
+            let c = collective_cost(&spec, bwi, bwx, lat, impl_);
+            assert!(c.is_finite() && c >= 0.0, "case {case}");
+            // More bytes never cheaper.
+            let spec2 = CollectiveSpec {
+                bytes: spec.bytes * 2.0,
+                ..spec
+            };
+            assert!(
+                collective_cost(&spec2, bwi, bwx, lat, impl_) >= c - 1e-12,
+                "case {case}: bytes monotonicity ({impl_:?})"
+            );
+            // More bandwidth never slower.
+            assert!(
+                collective_cost(&spec, bwi * 2.0, bwx * 2.0, lat, impl_)
+                    <= c + 1e-12,
+                "case {case}: bandwidth monotonicity ({impl_:?})"
+            );
+        }
+        // Hierarchical never loses to a flat ring for multi-pod all-reduce
+        // when the inter-pod links are the slower class.
+        if spec.collective == Collective::AllReduce
+            && spec.n_inter > 1
+            && spec.n_intra > 1
+        {
+            let h = collective_cost(
+                &spec,
+                bwi,
+                bwx,
+                0.0,
+                CollectiveImpl::Hierarchical,
+            );
+            let r = collective_cost(
+                &spec,
+                bwi,
+                bwx,
+                0.0,
+                CollectiveImpl::LogicalRing,
+            );
+            assert!(h <= r * 1.001, "case {case}: hier {h} vs ring {r}");
+        }
+    }
+}
+
+#[test]
+fn zero_footprint_ordering_random_splits() {
+    let mut rng = Rng::new(404);
+    for case in 0..CASES {
+        let psi = rng.log_range(1e9, 1e13);
+        let mp = rng.pow2(0, 10) as usize;
+        let dp = rng.pow2(0, 10) as usize;
+        let b = model_state_bytes(psi, mp, dp, ZeroStage::Baseline);
+        let z1 = model_state_bytes(psi, mp, dp, ZeroStage::Os);
+        let z2 = model_state_bytes(psi, mp, dp, ZeroStage::OsG);
+        let z3 = model_state_bytes(psi, mp, dp, ZeroStage::OsGP);
+        assert!(b >= z1 && z1 >= z2 && z2 >= z3, "case {case}");
+        // DP=1 collapses all stages to baseline.
+        if dp == 1 {
+            assert!(rel_diff(b, z3) < 1e-12, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn des_tracks_analytical_across_random_configs() {
+    let mut rng = Rng::new(505);
+    let clusters = [
+        presets::dgx_a100_1024(),
+        presets::table3_gpu('A', 1),
+        presets::table3_gpu('C', 2),
+    ];
+    for case in 0..60 {
+        let cluster = rng.choose(&clusters).clone();
+        let sweep = Strategy::sweep_bounded(cluster.n_nodes, 1, 128);
+        let s = *rng.choose(&sweep);
+        let w = Transformer::t1().build(&s).unwrap();
+        let opts = EvalOptions {
+            ignore_capacity: rng.f64() < 0.5,
+            ..Default::default()
+        };
+        let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+        let a = evaluate(&inp).total();
+        let d = simulate(&inp).breakdown.total();
+        assert!(
+            rel_diff(a, d) < 0.05,
+            "case {case} {} on {}: analytical {a} DES {d}",
+            s.label(),
+            cluster.name
+        );
+    }
+}
+
+#[test]
+fn trace_roundtrip_random_workloads() {
+    let mut rng = Rng::new(606);
+    for case in 0..40 {
+        let w = if rng.f64() < 0.5 {
+            let n = 1024;
+            let sweep = Strategy::sweep_bounded(n, 1, 128);
+            Transformer::t1().build(rng.choose(&sweep)).unwrap()
+        } else {
+            Dlrm::dlrm_1_2t()
+                .build(*rng.choose(&[8usize, 16, 32, 64]))
+                .unwrap()
+        };
+        let text = trace::emit(&w);
+        let back = trace::parse(&text).unwrap();
+        assert_eq!(back.layers.len(), w.layers.len(), "case {case}");
+        // Re-emitting the parsed trace must be a fixed point.
+        assert_eq!(trace::emit(&back), text, "case {case}");
+        // And the cost model must agree on both representations.
+        let cluster = presets::dgx_a100_1024();
+        let opts = EvalOptions {
+            footprint_override: Some(100e9),
+            ..Default::default()
+        };
+        let a = evaluate(&derive_inputs(&w, &cluster, &opts).unwrap());
+        let b = evaluate(&derive_inputs(&back, &cluster, &opts).unwrap());
+        assert!(
+            rel_diff(a.total(), b.total()) < 1e-9,
+            "case {case}: {} vs {}",
+            a.total(),
+            b.total()
+        );
+    }
+}
+
+#[test]
+fn cluster_json_roundtrip_random_mutations() {
+    let mut rng = Rng::new(707);
+    for case in 0..CASES {
+        let mut c = presets::dgx_a100_1024();
+        c.node.perf_peak = rng.log_range(1e12, 1e17);
+        c.node.sram = rng.log_range(1e6, 1e11);
+        c.node.local.capacity = rng.log_range(1e9, 1e12);
+        c.node.local.bandwidth = rng.log_range(1e11, 2e13);
+        if rng.f64() < 0.5 {
+            c.node.expanded.capacity = rng.log_range(1e9, 1e12);
+            c.node.expanded.bandwidth = rng.log_range(1e10, 2e12);
+        }
+        let back =
+            comet::ClusterConfig::from_json(&c.to_json()).expect("roundtrip");
+        assert_eq!(c, back, "case {case}");
+    }
+}
+
+#[test]
+fn faster_clusters_never_slower() {
+    // Dominance: scaling any single resource up must not increase the
+    // iteration time (checked on random strategies).
+    let mut rng = Rng::new(808);
+    for case in 0..60 {
+        let sweep = Strategy::sweep_bounded(1024, 1, 128);
+        let s = *rng.choose(&sweep);
+        let w = Transformer::t1().build(&s).unwrap();
+        let base = presets::dgx_a100_1024();
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        let t0 = evaluate(&derive_inputs(&w, &base, &opts).unwrap()).total();
+
+        let factor = rng.range(1.1, 8.0);
+        let mut faster = base.clone();
+        match rng.below(3) {
+            0 => faster.node.perf_peak *= factor,
+            1 => faster.node.local.bandwidth *= factor,
+            _ => faster = faster.scale_network(factor, factor),
+        }
+        let t1 = evaluate(&derive_inputs(&w, &faster, &opts).unwrap()).total();
+        assert!(
+            t1 <= t0 * (1.0 + 1e-9),
+            "case {case} {}: {t0} -> {t1}",
+            s.label()
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! Three-layer integration: the AOT artifact (L1 Pallas kernels + L2 JAX
+//! graph, executed via PJRT) must agree with the native Rust closed form
+//! and the discrete-event simulator on every workload family.
+//!
+//! Unlike the unit-level variants, these tests REQUIRE `make artifacts`
+//! to have run — a missing artifact is a build failure, not a skip.
+
+use comet::config::presets;
+use comet::coordinator::Coordinator;
+use comet::model::inputs::{derive_inputs, EvalOptions};
+use comet::parallel::Strategy;
+use comet::runtime::{BatchEvaluator, Runtime};
+use comet::util::stats::rel_diff;
+use comet::workload::dlrm::Dlrm;
+use comet::workload::transformer::Transformer;
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect(
+        "artifacts/ missing or stale - run `make artifacts` before cargo test",
+    )
+}
+
+#[test]
+fn artifact_matches_native_full_transformer_sweep() {
+    let rt = runtime();
+    let ev = BatchEvaluator::new(&rt);
+    let cluster = presets::dgx_a100_1024();
+    for ignore_capacity in [false, true] {
+        let opts = EvalOptions {
+            ignore_capacity,
+            ..Default::default()
+        };
+        let inputs: Vec<_> = Strategy::sweep_bounded(1024, 1, 128)
+            .iter()
+            .map(|s| {
+                derive_inputs(
+                    &Transformer::t1().build(s).unwrap(),
+                    &cluster,
+                    &opts,
+                )
+                .unwrap()
+            })
+            .collect();
+        let artifact = ev.evaluate(&inputs).unwrap();
+        for (inp, a) in inputs.iter().zip(&artifact) {
+            let n = comet::analytical::evaluate(inp);
+            for (x, y) in a.as_array().iter().zip(n.as_array()) {
+                // f32 vs f64; absolute slack for near-zero components.
+                assert!(
+                    (x - y).abs() <= 1e-4 * y.abs().max(1e-3),
+                    "{} ({ignore_capacity}): artifact {x} native {y}",
+                    inp.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn artifact_matches_native_dlrm_and_variants() {
+    let rt = runtime();
+    let ev = BatchEvaluator::new(&rt);
+    let d = Dlrm::dlrm_1_2t();
+    let mut inputs = Vec::new();
+    for n in [64usize, 32, 16, 8] {
+        let w = d.build(n).unwrap();
+        let mut cluster = presets::dgx_a100_64().with_n_nodes(n);
+        cluster.node = cluster.node.with_expanded(300e9, 1e12);
+        let opts = EvalOptions {
+            footprint_override: Some(d.footprint_per_node(n)),
+            ..Default::default()
+        };
+        inputs.push(derive_inputs(&w, &cluster, &opts).unwrap());
+    }
+    // Also every Table III cluster node definition on the 64-node DLRM.
+    for cluster in presets::table3_all() {
+        let n = 64.min(cluster.n_nodes);
+        let sub = cluster.with_n_nodes(n);
+        let w = d.build(n).unwrap();
+        let opts = EvalOptions {
+            footprint_override: Some(d.footprint_per_node(n)),
+            ..Default::default()
+        };
+        inputs.push(derive_inputs(&w, &sub, &opts).unwrap());
+    }
+    let artifact = ev.evaluate(&inputs).unwrap();
+    for (inp, a) in inputs.iter().zip(&artifact) {
+        let n = comet::analytical::evaluate(inp);
+        assert!(
+            rel_diff(a.total(), n.total()) < 1e-4,
+            "{}: artifact {} native {}",
+            inp.name,
+            a.total(),
+            n.total()
+        );
+    }
+}
+
+#[test]
+fn all_three_backends_rank_strategies_identically() {
+    let native = Coordinator::native();
+    let des = Coordinator::des();
+    let artifact = Coordinator::artifact().expect("make artifacts");
+    let cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions {
+        ignore_capacity: true,
+        ..Default::default()
+    };
+    let rank = |coord: &Coordinator| -> Vec<String> {
+        let mut labeled: Vec<(String, f64)> =
+            Strategy::sweep_bounded(1024, 1, 128)
+                .iter()
+                .map(|s| {
+                    let w = Transformer::t1().build(s).unwrap();
+                    let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+                    let t = coord
+                        .evaluate_inputs(std::slice::from_ref(&inp))
+                        .unwrap()[0]
+                        .total();
+                    (s.label(), t)
+                })
+                .collect();
+        labeled.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        labeled.into_iter().map(|(l, _)| l).collect()
+    };
+    let rn = rank(&native);
+    assert_eq!(rn, rank(&artifact), "artifact ranking diverged");
+    assert_eq!(rn, rank(&des), "DES ranking diverged");
+    assert_eq!(rn[0], "MP8_DP128");
+}
+
+#[test]
+fn batched_and_single_artifact_paths_agree() {
+    let rt = runtime();
+    let ev = BatchEvaluator::new(&rt);
+    let cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions::default();
+    let inputs: Vec<_> = Strategy::sweep_bounded(1024, 8, 128)
+        .iter()
+        .map(|s| {
+            derive_inputs(
+                &Transformer::t1().build(s).unwrap(),
+                &cluster,
+                &opts,
+            )
+            .unwrap()
+        })
+        .collect();
+    let batched = ev.evaluate(&inputs).unwrap();
+    for (inp, b) in inputs.iter().zip(&batched) {
+        let single = ev.evaluate_one(inp).unwrap();
+        assert!(
+            rel_diff(single.total(), b.total()) < 1e-6,
+            "{}",
+            inp.name
+        );
+    }
+}
+
+#[test]
+fn oversized_batches_chunk_correctly() {
+    let rt = runtime();
+    let ev = BatchEvaluator::new(&rt);
+    let cluster = presets::dgx_a100_1024();
+    let opts = EvalOptions::default();
+    // 100 configs > the largest exported batch (64): forces chunking.
+    let base = derive_inputs(
+        &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+        &cluster,
+        &opts,
+    )
+    .unwrap();
+    let inputs: Vec<_> = (0..100).map(|_| base.clone()).collect();
+    let out = ev.evaluate(&inputs).unwrap();
+    assert_eq!(out.len(), 100);
+    let want = out[0].total();
+    for b in &out {
+        assert!(rel_diff(b.total(), want) < 1e-9);
+    }
+}
