@@ -1,6 +1,10 @@
 //! The paper's SV-E speed claim: generating the Fig. 9 + Fig. 13b heatmaps
 //! takes ~5 h + ~45 min on a 24-core Xeon. This bench times COMET-rs
-//! regenerating EVERY figure, per backend.
+//! regenerating EVERY figure, per backend, and appends one trajectory
+//! point to `BENCH_dse.json` (see BENCHMARKS.md). Cold-cache runs build a
+//! fresh `Coordinator` per iteration, so they measure the full pipeline:
+//! pool spin-up, parallel `derive_inputs`, sharded-cache misses, backend
+//! evaluation.
 use std::time::Instant;
 
 use comet::coordinator::{sweep, Coordinator};
@@ -21,6 +25,9 @@ fn main() {
         let c = Coordinator::native();
         black_box(sweep::all_figures(&c).unwrap());
     });
+    b.bench("dse/all_figures_native_warmcache", || {
+        black_box(sweep::all_figures(&coord).unwrap());
+    });
     b.bench("dse/all_figures_des_cold", || {
         let c = Coordinator::des();
         black_box(sweep::all_figures(&c).unwrap());
@@ -31,4 +38,15 @@ fn main() {
         });
     }
     b.report("bench_dse_speed");
+
+    // Trajectory point: `cargo bench` runs with the package root (rust/)
+    // as CWD, so the default lands next to the repo-root BENCHMARKS.md.
+    let path = std::env::var("COMET_BENCH_JSON")
+        .unwrap_or_else(|_| "../BENCH_dse.json".to_string());
+    let label = std::env::var("COMET_BENCH_LABEL")
+        .unwrap_or_else(|_| "bench_dse_speed".to_string());
+    match b.append_json(&path, &label) {
+        Ok(()) => println!("recorded trajectory point in {path}"),
+        Err(e) => eprintln!("could not record {path}: {e}"),
+    }
 }

@@ -1,6 +1,12 @@
 //! Evaluation cache: memoizes cost-model results by input fingerprint.
 //! DSE sweeps revisit identical configurations constantly (normalization
 //! baselines, shared sweep corners), so this is a real throughput lever.
+//!
+//! The map is sharded N ways by fingerprint so concurrent sweep threads
+//! stop serializing on a single lock, and the fingerprint is computed
+//! **once** per input by the coordinator ([`ModelInputs::fingerprint`])
+//! and passed through [`EvalCache::get_by_key`] / [`EvalCache::put_by_key`]
+//! — the old `get` + `put` pair hashed every miss twice.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -9,24 +15,46 @@ use std::sync::Mutex;
 use crate::analytical::TrainingBreakdown;
 use crate::model::inputs::ModelInputs;
 
-/// Thread-safe memoization table.
-#[derive(Debug, Default)]
+/// Shard count: enough to make lock collisions rare at typical host core
+/// counts, small enough that `len()`/`clear()` stay cheap. Power of two so
+/// shard selection is a mask.
+const N_SHARDS: usize = 16;
+
+/// Thread-safe sharded memoization table.
+#[derive(Debug)]
 pub struct EvalCache {
-    map: Mutex<HashMap<u64, TrainingBreakdown>>,
+    shards: Vec<Mutex<HashMap<u64, TrainingBreakdown>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        EvalCache::new()
+    }
 }
 
 impl EvalCache {
     /// Empty cache.
     pub fn new() -> EvalCache {
-        EvalCache::default()
+        EvalCache {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
     }
 
-    /// Look up a previously evaluated configuration.
-    pub fn get(&self, inputs: &ModelInputs) -> Option<TrainingBreakdown> {
-        let key = fingerprint(inputs);
-        let hit = self.map.lock().unwrap().get(&key).copied();
+    fn shard(&self, key: u64) -> &Mutex<HashMap<u64, TrainingBreakdown>> {
+        // FNV-1a's multiply only propagates entropy upward, so the low
+        // bits are its worst-mixed; fold the high halves down before
+        // masking to keep the shards balanced.
+        let folded = key ^ (key >> 32) ^ (key >> 16);
+        &self.shards[(folded as usize) & (N_SHARDS - 1)]
+    }
+
+    /// Look up by a precomputed fingerprint, counting a hit or miss.
+    pub fn get_by_key(&self, key: u64) -> Option<TrainingBreakdown> {
+        let hit = self.shard(key).lock().unwrap().get(&key).copied();
         match hit {
             Some(b) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -39,9 +67,23 @@ impl EvalCache {
         }
     }
 
-    /// Store a result.
+    /// Store by a precomputed fingerprint.
+    pub fn put_by_key(&self, key: u64, b: TrainingBreakdown) {
+        self.shard(key).lock().unwrap().insert(key, b);
+    }
+
+    /// Look up a previously evaluated configuration (hashes `inputs`).
+    ///
+    /// Convenience for one-off callers; the sweep hot path fingerprints
+    /// once and uses [`EvalCache::get_by_key`] / [`EvalCache::put_by_key`]
+    /// so a miss never hashes twice.
+    pub fn get(&self, inputs: &ModelInputs) -> Option<TrainingBreakdown> {
+        self.get_by_key(inputs.fingerprint())
+    }
+
+    /// Store a result (hashes `inputs`); see [`EvalCache::get`].
     pub fn put(&self, inputs: &ModelInputs, b: TrainingBreakdown) {
-        self.map.lock().unwrap().insert(fingerprint(inputs), b);
+        self.put_by_key(inputs.fingerprint(), b);
     }
 
     /// (hits, misses) counters.
@@ -52,61 +94,15 @@ impl EvalCache {
         )
     }
 
-    /// Entries stored.
+    /// Entries stored across all shards.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     /// Whether the cache is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
-}
-
-/// FNV-1a over the full numeric content of the inputs. Collisions across
-/// *different* configurations are astronomically unlikely (64-bit) and
-/// would only perturb a figure, not corrupt state.
-fn fingerprint(inputs: &ModelInputs) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut eat = |x: f64| {
-        for b in x.to_bits().to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    };
-    let p = &inputs.params;
-    for v in [
-        p.perf_peak,
-        p.bw_lm,
-        p.bw_em,
-        p.cap_lm,
-        p.sram,
-        p.footprint,
-        p.bw_intra,
-        p.bw_inter,
-        p.link_latency,
-        if p.overlap_wg { 1.0 } else { 0.0 },
-        p.em_frac_override.unwrap_or(-1.0),
-        p.collective_impl.code(),
-    ] {
-        eat(v);
-    }
-    for l in &inputs.layers {
-        eat(l.repeat);
-        for q in &l.q {
-            eat(q.flops);
-            eat(q.u);
-            eat(q.v);
-            eat(q.w);
-        }
-        for c in &l.comm {
-            eat(c.collective.code());
-            eat(c.bytes);
-            eat(c.n_intra as f64);
-            eat(c.n_inter as f64);
-        }
-    }
-    h
 }
 
 #[cfg(test)]
@@ -142,19 +138,29 @@ mod tests {
     }
 
     #[test]
+    fn keyed_roundtrip_matches_input_roundtrip() {
+        let cache = EvalCache::new();
+        let inp = inputs(8, 128);
+        let key = inp.fingerprint();
+        assert!(cache.get_by_key(key).is_none());
+        let b = TrainingBreakdown {
+            ig_compute: 2.0,
+            ..Default::default()
+        };
+        cache.put_by_key(key, b);
+        // The inputs-based accessor sees what the keyed one stored.
+        assert_eq!(cache.get(&inp), Some(b));
+        assert_eq!(cache.stats(), (1, 1));
+    }
+
+    #[test]
     fn different_configs_different_keys() {
-        assert_ne!(
-            super::fingerprint(&inputs(8, 128)),
-            super::fingerprint(&inputs(16, 64))
-        );
+        assert_ne!(inputs(8, 128).fingerprint(), inputs(16, 64).fingerprint());
     }
 
     #[test]
     fn identical_configs_same_key() {
-        assert_eq!(
-            super::fingerprint(&inputs(8, 128)),
-            super::fingerprint(&inputs(8, 128))
-        );
+        assert_eq!(inputs(8, 128).fingerprint(), inputs(8, 128).fingerprint());
     }
 
     #[test]
@@ -174,6 +180,54 @@ mod tests {
             },
         )
         .unwrap();
-        assert_ne!(super::fingerprint(&a), super::fingerprint(&b));
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn shards_cover_key_space() {
+        // Synthetic keys spread across every shard and survive roundtrips.
+        let cache = EvalCache::new();
+        let b = TrainingBreakdown::default();
+        for k in 0..(N_SHARDS as u64 * 8) {
+            cache.put_by_key(k.wrapping_mul(0x9e3779b97f4a7c15), b);
+        }
+        assert_eq!(cache.len(), N_SHARDS * 8);
+        for k in 0..(N_SHARDS as u64 * 8) {
+            assert!(cache
+                .get_by_key(k.wrapping_mul(0x9e3779b97f4a7c15))
+                .is_some());
+        }
+        let (hits, misses) = cache.stats();
+        assert_eq!(hits, N_SHARDS as u64 * 8);
+        assert_eq!(misses, 0);
+    }
+
+    #[test]
+    fn concurrent_access_preserves_accounting() {
+        use std::sync::Arc;
+        let cache = Arc::new(EvalCache::new());
+        let threads = 8u64;
+        let per = 200u64;
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let c = cache.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    // Every thread misses its own keys once, stores them,
+                    // then hits them once.
+                    let key = (t << 32) | i;
+                    assert!(c.get_by_key(key).is_none());
+                    c.put_by_key(key, TrainingBreakdown::default());
+                    assert!(c.get_by_key(key).is_some());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let (hits, misses) = cache.stats();
+        assert_eq!(hits, threads * per);
+        assert_eq!(misses, threads * per);
+        assert_eq!(cache.len(), (threads * per) as usize);
     }
 }

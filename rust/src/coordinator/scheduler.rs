@@ -1,66 +1,216 @@
-//! Work-stealing-free but effective fan-out scheduler over std threads
-//! (the offline crate set has no rayon/tokio): static round-robin
-//! partitioning of independent evaluation jobs. DSE jobs are uniform
-//! enough that static partitioning is within noise of work stealing.
+//! Persistent channel-fed worker pool for CPU-bound evaluation jobs.
+//!
+//! The offline crate set has no rayon/tokio, so COMET ships its own pool.
+//! Workers are spawned **once** (when the [`Coordinator`](super::Coordinator)
+//! is built) and reused across every batch: each `map` call publishes one
+//! shared batch descriptor to every worker, workers claim jobs through an
+//! atomic cursor (dynamic load balancing at item granularity) and write
+//! results into disjoint slots of a preallocated buffer — there is no
+//! shared results mutex to contend on. The submitting thread participates
+//! as a worker, so a pool of width `t` spawns `t - 1` background threads
+//! and runs exactly `t` lanes — width 1 is strictly inline (deterministic
+//! single-threaded execution) and small batches never pay a cross-thread
+//! round-trip.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-/// Thread-pool-style mapper for CPU-bound evaluation jobs.
-#[derive(Debug, Clone, Copy)]
-pub struct Scheduler {
-    threads: usize,
+/// Type-erased batch handle the worker threads execute.
+trait Task: Send + Sync {
+    fn run_worker(&self);
 }
 
-impl Scheduler {
-    /// A scheduler with `threads` workers (>= 1).
-    pub fn new(threads: usize) -> Scheduler {
-        Scheduler {
-            threads: threads.max(1),
+/// One in-flight `map` call: jobs, the mapper, and per-job result slots.
+struct Batch<T, R> {
+    jobs: Vec<T>,
+    f: Box<dyn Fn(&T) -> R + Send + Sync>,
+    /// Next unclaimed job index.
+    next: AtomicUsize,
+    /// Disjoint per-job result slots. Each slot's lock is touched exactly
+    /// twice (one write, one take) — never contended across jobs.
+    slots: Vec<Mutex<Option<R>>>,
+    /// Jobs not yet finished; the worker that drops this to zero signals
+    /// `done`.
+    remaining: AtomicUsize,
+    /// First observed panic: (job index, payload message).
+    panic: Mutex<Option<(usize, String)>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+impl<T: Send + Sync, R: Send> Batch<T, R> {
+    fn new(jobs: Vec<T>, f: Box<dyn Fn(&T) -> R + Send + Sync>) -> Batch<T, R> {
+        let n = jobs.len();
+        Batch {
+            jobs,
+            f,
+            next: AtomicUsize::new(0),
+            slots: (0..n).map(|_| Mutex::new(None)).collect(),
+            remaining: AtomicUsize::new(n),
+            panic: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
         }
     }
 
-    /// Map `f` over `jobs`, preserving order. `f` runs concurrently on up
-    /// to `threads` workers via an atomic work index (dynamic load
-    /// balancing at item granularity).
-    pub fn map<T: Sync, R: Send>(
+    fn execute(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.jobs.len() {
+                break;
+            }
+            match catch_unwind(AssertUnwindSafe(|| (self.f)(&self.jobs[i]))) {
+                Ok(r) => *self.slots[i].lock().unwrap() = Some(r),
+                Err(payload) => {
+                    let mut p = self.panic.lock().unwrap();
+                    if p.is_none() {
+                        *p = Some((i, panic_message(payload.as_ref())));
+                    }
+                }
+            }
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut d = self.done.lock().unwrap();
+                *d = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl<T: Send + Sync, R: Send> Task for Batch<T, R> {
+    fn run_worker(&self) {
+        self.execute()
+    }
+}
+
+/// Persistent worker pool. Threads are spawned once and fed batches over
+/// per-worker channels; dropping the pool shuts them down.
+pub struct WorkerPool {
+    senders: Vec<Sender<Arc<dyn Task>>>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Rotates which workers small batches notify, so concurrent
+    /// submitters don't all pin their jobs behind the low-index workers.
+    next_worker: AtomicUsize,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// A pool of total width `threads` (>= 1): `threads - 1` background
+    /// workers plus the submitting thread.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let (tx, rx) = channel::<Arc<dyn Task>>();
+            senders.push(tx);
+            let handle = std::thread::Builder::new()
+                .name(format!("comet-pool-{i}"))
+                .spawn(move || {
+                    while let Ok(task) = rx.recv() {
+                        task.run_worker();
+                    }
+                })
+                .expect("spawn pool worker");
+            handles.push(handle);
+        }
+        WorkerPool {
+            senders,
+            handles,
+            threads,
+            next_worker: AtomicUsize::new(0),
+        }
+    }
+
+    /// Total pool width (background workers + the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over `jobs`, preserving order. Jobs run concurrently on
+    /// the pool's background workers plus the calling thread; a width-1
+    /// pool executes everything inline on the caller.
+    ///
+    /// # Panics
+    ///
+    /// If a job panics, the panic is re-raised on the calling thread with
+    /// the failing job's index prepended to the payload message. The
+    /// remaining jobs still run to completion first (no worker is lost —
+    /// the pool stays usable afterwards).
+    pub fn map<T, R>(
         &self,
-        jobs: &[T],
-        f: impl Fn(&T) -> R + Sync,
-    ) -> Vec<R> {
+        jobs: Vec<T>,
+        f: impl Fn(&T) -> R + Send + Sync + 'static,
+    ) -> Vec<R>
+    where
+        T: Send + Sync + 'static,
+        R: Send + 'static,
+    {
         let n = jobs.len();
         if n == 0 {
             return Vec::new();
         }
-        let workers = self.threads.min(n);
-        if workers == 1 {
-            return jobs.iter().map(f).collect();
-        }
-
-        let next = AtomicUsize::new(0);
-        let results: std::sync::Mutex<Vec<Option<R>>> =
-            std::sync::Mutex::new((0..n).map(|_| None).collect());
-
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let next = &next;
-                let f = &f;
-                let results = &results;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let r = f(&jobs[i]);
-                    results.lock().unwrap()[i] = Some(r);
-                });
+        let batch = Arc::new(Batch::new(jobs, Box::new(f)));
+        // Fan out to at most n-1 workers (the submitter claims jobs too,
+        // and a single-job batch never leaves the calling thread),
+        // starting at a rotating offset so concurrent small batches
+        // spread over different workers.
+        let fanout = (n - 1).min(self.senders.len());
+        if fanout > 0 {
+            let start = self.next_worker.fetch_add(fanout, Ordering::Relaxed);
+            for j in 0..fanout {
+                let tx = &self.senders[(start + j) % self.senders.len()];
+                let task: Arc<dyn Task> = batch.clone();
+                let _ = tx.send(task);
             }
-        });
-        results
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|r| r.expect("slot filled"))
+        }
+        batch.execute();
+        // All jobs claimed by now (the submitter's cursor ran past n), but
+        // workers may still be finishing theirs.
+        let mut done = batch.done.lock().unwrap();
+        while !*done {
+            done = batch.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        if let Some((i, msg)) = batch.panic.lock().unwrap().take() {
+            panic!("worker pool job {i} panicked: {msg}");
+        }
+        batch
+            .slots
+            .iter()
+            .map(|s| s.lock().unwrap().take().expect("pool slot filled"))
             .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channels ends each worker's recv loop.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -70,47 +220,107 @@ mod tests {
 
     #[test]
     fn maps_in_order() {
+        let pool = WorkerPool::new(8);
         let jobs: Vec<u64> = (0..1000).collect();
-        let out = Scheduler::new(8).map(&jobs, |x| x * 2);
+        let out = pool.map(jobs.clone(), |x| x * 2);
         assert_eq!(out, jobs.iter().map(|x| x * 2).collect::<Vec<_>>());
     }
 
     #[test]
-    fn single_thread_path() {
-        let jobs = vec![1, 2, 3];
-        assert_eq!(Scheduler::new(1).map(&jobs, |x| x + 1), vec![2, 3, 4]);
+    fn single_thread_pool() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.map(vec![1, 2, 3], |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn width_one_is_strictly_inline() {
+        let pool = WorkerPool::new(1);
+        let main_id = std::thread::current().id();
+        let jobs: Vec<u32> = (0..16).collect();
+        let ids = pool.map(jobs, move |_| std::thread::current().id());
+        assert!(ids.iter().all(|&id| id == main_id));
     }
 
     #[test]
     fn empty_jobs() {
-        let jobs: Vec<u32> = vec![];
-        assert!(Scheduler::new(4).map(&jobs, |x| *x).is_empty());
+        let pool = WorkerPool::new(4);
+        let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| *x);
+        assert!(out.is_empty());
     }
 
     #[test]
     fn more_threads_than_jobs() {
-        let jobs = vec![7];
-        assert_eq!(Scheduler::new(64).map(&jobs, |x| x * x), vec![49]);
+        let pool = WorkerPool::new(64);
+        assert_eq!(pool.map(vec![7u64], |x| x * x), vec![49]);
+    }
+
+    #[test]
+    fn reused_across_batches() {
+        let pool = WorkerPool::new(4);
+        for round in 0..20u64 {
+            let jobs: Vec<u64> = (0..37).collect();
+            let out = pool.map(jobs, move |x| x + round);
+            assert_eq!(out[36], 36 + round);
+        }
     }
 
     #[test]
     fn actually_parallel() {
-        // All workers must participate for a slow job set.
+        // Multiple threads must participate for a slow job set.
         use std::collections::HashSet;
         use std::sync::Mutex;
-        let ids = Mutex::new(HashSet::new());
+        let pool = WorkerPool::new(4);
+        let ids = Arc::new(Mutex::new(HashSet::new()));
+        let ids2 = ids.clone();
         let jobs: Vec<u32> = (0..64).collect();
-        Scheduler::new(4).map(&jobs, |_| {
+        pool.map(jobs, move |_| {
             std::thread::sleep(std::time::Duration::from_millis(2));
-            ids.lock().unwrap().insert(std::thread::current().id());
+            ids2.lock().unwrap().insert(std::thread::current().id());
         });
         assert!(ids.lock().unwrap().len() > 1);
     }
 
     #[test]
     fn non_copy_results() {
-        let jobs = vec!["a", "bb", "ccc"];
-        let out = Scheduler::new(2).map(&jobs, |s| s.to_string());
+        let pool = WorkerPool::new(2);
+        let out = pool.map(vec!["a", "bb", "ccc"], |s| s.to_string());
         assert_eq!(out, vec!["a", "bb", "ccc"]);
+    }
+
+    #[test]
+    fn panic_reports_job_index_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<u32> = (0..8).collect();
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map(jobs, |&x| {
+                if x == 5 {
+                    panic!("boom on five");
+                }
+                x
+            })
+        }))
+        .unwrap_err();
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("job 5"), "{msg}");
+        assert!(msg.contains("boom on five"), "{msg}");
+        // The pool remains fully usable after a panicking batch.
+        assert_eq!(pool.map(vec![1u32, 2, 3], |x| x * 10), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn concurrent_submitters() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let p = pool.clone();
+            joins.push(std::thread::spawn(move || {
+                let jobs: Vec<u64> = (0..100).collect();
+                p.map(jobs, move |x| x + t)
+            }));
+        }
+        for (t, j) in joins.into_iter().enumerate() {
+            let out = j.join().unwrap();
+            assert_eq!(out[99], 99 + t as u64);
+        }
     }
 }

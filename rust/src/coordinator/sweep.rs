@@ -2,32 +2,191 @@
 //! evaluation section (SIV-B Fig. 6, SV-B Figs. 8-12, SV-C Fig. 13,
 //! SV-D Fig. 15). Each returns a [`FigureData`] that the CLI renders and
 //! `rust/benches/` regenerate; EXPERIMENTS.md records paper-vs-measured.
+//!
+//! Every driver follows the same batched shape: build the figure's full
+//! (workload, cluster, options) grid up front, resolve the grid to model
+//! inputs concurrently through the coordinator's worker pool
+//! ([`Coordinator::derive_batch`]), and make **exactly one**
+//! [`Coordinator::evaluate_inputs`] call — normalization baselines ride in
+//! the same batch as the sweep points. [`GridSweep`] packages the common
+//! strategy x bandwidth x capacity x collective-impl cross-product so new
+//! case studies get the batched path for free.
+
+use std::ops::Range;
 
 use crate::config::{presets, ClusterConfig};
 use crate::error::Result;
-use crate::model::inputs::{derive_inputs, EvalOptions, ModelInputs};
+use crate::model::inputs::EvalOptions;
 use crate::network::CollectiveImpl;
 use crate::parallel::{footprint_per_node, model_state_bytes, Strategy, ZeroStage};
 use crate::report::FigureData;
 use crate::util::units::gb;
 use crate::workload::dlrm::Dlrm;
 use crate::workload::transformer::Transformer;
+use crate::workload::Workload;
 
 use super::Coordinator;
+
+/// One evaluation job of a figure grid, as consumed by
+/// [`Coordinator::derive_batch`].
+pub type SweepSpec = (Workload, ClusterConfig, EvalOptions);
+
+/// A cross-product sweep over the paper's four cluster-design axes:
+/// parallelization strategy, expanded-memory bandwidth, expanded-memory
+/// capacity, and collective implementation. Axes default to a single
+/// "baseline" point, so a driver only names the dimensions it sweeps.
+#[derive(Debug, Clone)]
+pub struct GridSweep {
+    strategies: Vec<Strategy>,
+    /// Expanded-memory bandwidths, bytes/s. `None` = local memory only.
+    em_bandwidths: Vec<Option<f64>>,
+    /// Expanded-memory capacities, bytes. `None` = sized to the spill.
+    em_capacities: Vec<Option<f64>>,
+    collective_impls: Vec<CollectiveImpl>,
+}
+
+/// One resolved point of a [`GridSweep`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GridPoint {
+    pub strategy: Strategy,
+    /// Expanded-memory bandwidth, bytes/s (`None` = local memory only).
+    pub em_bandwidth: Option<f64>,
+    /// Expanded-memory capacity, bytes (`None` = sized to the spill).
+    pub em_capacity: Option<f64>,
+    pub collective_impl: CollectiveImpl,
+}
+
+impl GridSweep {
+    /// A sweep over `strategies` with every other axis at its baseline:
+    /// local memory only, spill-sized capacity, logical-ring collectives.
+    pub fn new(strategies: Vec<Strategy>) -> GridSweep {
+        GridSweep {
+            strategies,
+            em_bandwidths: vec![None],
+            em_capacities: vec![None],
+            collective_impls: vec![CollectiveImpl::LogicalRing],
+        }
+    }
+
+    /// Sweep expanded-memory bandwidth (bytes/s).
+    pub fn em_bandwidths(mut self, bws: &[f64]) -> GridSweep {
+        self.em_bandwidths = bws.iter().map(|&b| Some(b)).collect();
+        self
+    }
+
+    /// Sweep expanded-memory capacity (bytes) instead of sizing it to the
+    /// spill.
+    pub fn em_capacities(mut self, caps: &[f64]) -> GridSweep {
+        self.em_capacities = caps.iter().map(|&c| Some(c)).collect();
+        self
+    }
+
+    /// Sweep collective implementations.
+    pub fn collective_impls(mut self, impls: &[CollectiveImpl]) -> GridSweep {
+        self.collective_impls = impls.to_vec();
+        self
+    }
+
+    /// Number of grid points (full cross-product).
+    pub fn len(&self) -> usize {
+        self.strategies.len()
+            * self.em_bandwidths.len()
+            * self.em_capacities.len()
+            * self.collective_impls.len()
+    }
+
+    /// Whether the grid is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enumerate the cross-product, row-major: strategy outermost, then
+    /// bandwidth, then capacity, then collective implementation. The same
+    /// order [`GridSweep::specs`] emits jobs in.
+    pub fn points(&self) -> Vec<GridPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        for &strategy in &self.strategies {
+            for &em_bandwidth in &self.em_bandwidths {
+                for &em_capacity in &self.em_capacities {
+                    for &collective_impl in &self.collective_impls {
+                        out.push(GridPoint {
+                            strategy,
+                            em_bandwidth,
+                            em_capacity,
+                            collective_impl,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Resolve the grid into evaluation jobs against a base cluster:
+    /// `build` constructs the workload per strategy, expanded memory is
+    /// attached when the point names a bandwidth (capacity from the point,
+    /// or sized to the strategy's spill over local capacity), and the
+    /// point's collective implementation overrides `opts`.
+    pub fn specs<F>(
+        &self,
+        base: &ClusterConfig,
+        opts: &EvalOptions,
+        build: F,
+    ) -> Result<Vec<SweepSpec>>
+    where
+        F: Fn(&Strategy) -> Result<Workload>,
+    {
+        // Capacity is an attribute of the expanded memory: sweeping it
+        // without any bandwidth point would silently collapse every
+        // capacity point onto the base cluster.
+        if self.em_capacities.iter().any(|c| c.is_some())
+            && self.em_bandwidths.iter().all(|b| b.is_none())
+        {
+            return Err(crate::error::Error::Config(
+                "GridSweep sweeps em_capacities without em_bandwidths; \
+                 expanded-memory capacity needs a bandwidth axis"
+                    .into(),
+            ));
+        }
+        let mut out = Vec::with_capacity(self.len());
+        for s in &self.strategies {
+            let w = build(s)?;
+            let fp = footprint_per_node(&w, s, opts.zero_stage).total();
+            let spill = (fp - base.node.local.capacity).max(0.0);
+            for &bw in &self.em_bandwidths {
+                for &cap in &self.em_capacities {
+                    for &ci in &self.collective_impls {
+                        let o = EvalOptions {
+                            collective_impl: ci,
+                            ..*opts
+                        };
+                        let cluster = match bw {
+                            Some(b) => {
+                                let need = cap.unwrap_or(spill);
+                                if need > 0.0 {
+                                    base.with_node(
+                                        base.node.with_expanded(need, b),
+                                    )
+                                } else {
+                                    base.clone()
+                                }
+                            }
+                            None => base.clone(),
+                        };
+                        out.push((w.clone(), cluster, o));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
 
 /// The (MP, DP) sweep used throughout SV-B: power-of-two splits of the
 /// 1024-node baseline, bounded by the Transformer's 160 attention heads
 /// (MP <= 128).
 pub fn fig8_strategies() -> Vec<Strategy> {
     Strategy::sweep_bounded(1024, 1, 128)
-}
-
-fn t1_inputs(
-    s: &Strategy,
-    cluster: &ClusterConfig,
-    opts: &EvalOptions,
-) -> Result<ModelInputs> {
-    derive_inputs(&Transformer::t1().build(s)?, cluster, opts)
 }
 
 /// Fig. 6: per-node memory footprint of Transformer-1T on 1024 nodes as a
@@ -66,10 +225,15 @@ pub fn fig8a(coord: &Coordinator) -> Result<FigureData> {
         ..Default::default()
     };
     let strategies = fig8_strategies();
-    let inputs: Vec<ModelInputs> = strategies
-        .iter()
-        .map(|s| t1_inputs(s, &cluster, &opts))
-        .collect::<Result<_>>()?;
+    let mut footprints = Vec::with_capacity(strategies.len());
+    let mut specs: Vec<SweepSpec> = Vec::with_capacity(strategies.len());
+    for s in &strategies {
+        let w = Transformer::t1().build(s)?;
+        footprints
+            .push(footprint_per_node(&w, s, ZeroStage::OsG).total() / gb(1.0));
+        specs.push((w, cluster.clone(), opts));
+    }
+    let inputs = coord.derive_batch(specs)?;
     let evals = coord.evaluate_inputs(&inputs)?;
 
     let best = evals
@@ -77,10 +241,7 @@ pub fn fig8a(coord: &Coordinator) -> Result<FigureData> {
         .map(|b| b.total())
         .fold(f64::INFINITY, f64::min);
     let mut rows = Vec::new();
-    for (s, b) in strategies.iter().zip(&evals) {
-        let w = Transformer::t1().build(s)?;
-        let fp =
-            footprint_per_node(&w, s, ZeroStage::OsG).total() / gb(1.0);
+    for ((s, b), fp) in strategies.iter().zip(&evals).zip(&footprints) {
         rows.push((
             s.label(),
             vec![
@@ -92,7 +253,7 @@ pub fn fig8a(coord: &Coordinator) -> Result<FigureData> {
                 b.wg_exposed_comm,
                 b.total(),
                 b.total() / best,
-                fp,
+                *fp,
             ],
         ));
     }
@@ -151,45 +312,37 @@ pub const EM_BW_SWEEP: [f64; 7] =
 
 /// Fig. 9: speedup heatmap over (strategy x expanded-memory bandwidth),
 /// normalized to MP64_DP16 — the best configuration feasible without
-/// memory expansion.
+/// memory expansion. The baseline rides in the same batch as the grid.
 pub fn fig9(coord: &Coordinator) -> Result<FigureData> {
     let base_cluster = presets::dgx_a100_1024();
     let opts = EvalOptions::default();
 
-    // Baseline: MP64_DP16 on local memory only.
-    let baseline = coord
-        .evaluate_inputs(&[t1_inputs(
-            &Strategy::new(64, 16),
-            &base_cluster,
-            &opts,
-        )?])?[0]
-        .total();
-
     // Rows: MP128 .. MP2 (paper omits configs that perform strictly worse
     // than the baseline's flank; MP > 128 is unbuildable at 160 heads).
-    let strategies: Vec<Strategy> = Strategy::sweep_bounded(1024, 2, 128);
-    let mut jobs = Vec::new();
-    for s in &strategies {
-        let w = Transformer::t1().build(s)?;
-        let fp = footprint_per_node(&w, s, ZeroStage::OsG).total();
-        for &bw in &EM_BW_SWEEP {
-            // Expansion sized to the spill (paper: capacity is the row's
-            // requirement; bandwidth is the column).
-            let need = (fp - base_cluster.node.local.capacity).max(0.0);
-            let cluster = if need > 0.0 {
-                base_cluster
-                    .with_node(base_cluster.node.with_expanded(need, gb(bw)))
-            } else {
-                base_cluster.clone()
-            };
-            jobs.push(derive_inputs(&w, &cluster, &opts)?);
-        }
-    }
-    let evals = coord.evaluate_inputs(&jobs)?;
+    // Columns: the shared EM bandwidth sweep, expansion sized to each
+    // row's spill.
+    let strategies = Strategy::sweep_bounded(1024, 2, 128);
+    let grid = GridSweep::new(strategies.clone())
+        .em_bandwidths(&EM_BW_SWEEP.map(gb));
+
+    // Job 0: MP64_DP16 on local memory only (the normalization baseline).
+    let mut specs: Vec<SweepSpec> = vec![(
+        Transformer::t1().build(&Strategy::new(64, 16))?,
+        base_cluster.clone(),
+        opts,
+    )];
+    specs.extend(grid.specs(&base_cluster, &opts, |s| {
+        Transformer::t1().build(s)
+    })?);
+
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+    let baseline = evals[0].total();
+    let width = EM_BW_SWEEP.len();
     let mut rows = Vec::new();
     for (i, s) in strategies.iter().enumerate() {
-        let vals: Vec<f64> = (0..EM_BW_SWEEP.len())
-            .map(|j| baseline / evals[i * EM_BW_SWEEP.len() + j].total())
+        let vals: Vec<f64> = (0..width)
+            .map(|j| baseline / evals[1 + i * width + j].total())
             .collect();
         rows.push((s.label(), vals));
     }
@@ -219,17 +372,19 @@ pub fn fig10(coord: &Coordinator) -> Result<FigureData> {
     let scales = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0];
     let bws = [500.0, 1000.0, 1500.0, 2039.0];
 
-    let mut jobs = Vec::new();
+    let mut specs: Vec<SweepSpec> =
+        Vec::with_capacity(scales.len() * bws.len());
     for &sc in &scales {
         for &bw in &bws {
             let node = base_cluster
                 .node
                 .scale_compute(sc)
                 .with_expanded(need, gb(bw));
-            jobs.push(derive_inputs(&w, &base_cluster.with_node(node), &opts)?);
+            specs.push((w.clone(), base_cluster.with_node(node), opts));
         }
     }
-    let evals = coord.evaluate_inputs(&jobs)?;
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
     // Normalize to scale=1 at the highest EM bandwidth.
     let base_idx = scales.iter().position(|&x| x == 1.0).unwrap() * bws.len()
         + (bws.len() - 1);
@@ -271,22 +426,38 @@ pub fn fig11(coord: &Coordinator) -> Result<FigureData> {
     let factors = [0.5, 1.0, 2.0, 4.0];
     let configs = [Strategy::new(64, 16), Strategy::new(8, 128)];
 
-    let mut rows = Vec::new();
+    // Per config: one baseline job + the full factor x factor grid.
+    let block = 1 + factors.len() * factors.len();
+    let mut specs: Vec<SweepSpec> =
+        Vec::with_capacity(configs.len() * block);
     for s in &configs {
         let w = Transformer::t1().build(s)?;
-        let base = coord
-            .evaluate_inputs(&[derive_inputs(&w, &base_cluster, &opts)?])?[0]
-            .total();
+        specs.push((w.clone(), base_cluster.clone(), opts));
         for &fi in &factors {
-            let mut jobs = Vec::new();
             for &fx in &factors {
-                let cluster = base_cluster.scale_network(fi, fx);
-                jobs.push(derive_inputs(&w, &cluster, &opts)?);
+                specs.push((
+                    w.clone(),
+                    base_cluster.scale_network(fi, fx),
+                    opts,
+                ));
             }
-            let evals = coord.evaluate_inputs(&jobs)?;
+        }
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let mut rows = Vec::new();
+    for (ci, s) in configs.iter().enumerate() {
+        let base = evals[ci * block].total();
+        for (i, fi) in factors.iter().enumerate() {
             rows.push((
                 format!("{} intra x{fi}", s.label()),
-                evals.iter().map(|b| base / b.total()).collect(),
+                (0..factors.len())
+                    .map(|j| {
+                        base / evals[ci * block + 1 + i * factors.len() + j]
+                            .total()
+                    })
+                    .collect(),
             ));
         }
     }
@@ -314,30 +485,28 @@ pub fn fig12(coord: &Coordinator) -> Result<FigureData> {
     };
     let ratios = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 9.6, 12.0, 16.0, 24.0];
     let configs = [Strategy::new(64, 16), Strategy::new(8, 128)];
+    let nc = configs.len();
 
-    // Baseline: the stock 1:9.6 split.
-    let mut baselines = Vec::new();
+    // Jobs 0..nc: the stock 1:9.6 baselines; then ratio-major grid.
+    let mut specs: Vec<SweepSpec> =
+        Vec::with_capacity(nc * (1 + ratios.len()));
     for s in &configs {
-        let w = Transformer::t1().build(s)?;
-        baselines.push(
-            coord
-                .evaluate_inputs(&[derive_inputs(&w, &base_cluster, &opts)?])?
-                [0]
-                .total(),
-        );
+        specs.push((Transformer::t1().build(s)?, base_cluster.clone(), opts));
     }
-
-    let mut rows = Vec::new();
     for &r in &ratios {
         let cluster = base_cluster.rebalance_network(r)?;
-        let mut vals = Vec::new();
-        for (s, base) in configs.iter().zip(&baselines) {
-            let w = Transformer::t1().build(s)?;
-            let t = coord
-                .evaluate_inputs(&[derive_inputs(&w, &cluster, &opts)?])?[0]
-                .total();
-            vals.push(base / t);
+        for s in &configs {
+            specs.push((Transformer::t1().build(s)?, cluster.clone(), opts));
         }
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let mut rows = Vec::new();
+    for (ri, r) in ratios.iter().enumerate() {
+        let vals: Vec<f64> = (0..nc)
+            .map(|ci| evals[ci].total() / evals[nc + ri * nc + ci].total())
+            .collect();
         rows.push((format!("1:{r}"), vals));
     }
     Ok(FigureData {
@@ -355,9 +524,10 @@ pub fn fig12(coord: &Coordinator) -> Result<FigureData> {
 /// Fig. 13a: DLRM-1.2T breakdown + footprint vs cluster size.
 pub fn fig13a(coord: &Coordinator) -> Result<FigureData> {
     let d = Dlrm::dlrm_1_2t();
-    let mut rows = Vec::new();
-    let mut base_total = f64::NAN;
-    for &n in &[64usize, 32, 16, 8] {
+    let sizes = [64usize, 32, 16, 8];
+    let mut footprints = Vec::with_capacity(sizes.len());
+    let mut specs: Vec<SweepSpec> = Vec::with_capacity(sizes.len());
+    for &n in &sizes {
         let w = d.build(n)?;
         // Paper normalizes to a 2 TB/s memory system: expanded memory
         // sized to the spill at 2 TB/s. DLRM's footprint is its embedding
@@ -372,10 +542,15 @@ pub fn fig13a(coord: &Coordinator) -> Result<FigureData> {
         if need > 0.0 {
             cluster.node = cluster.node.with_expanded(need, 2e12);
         }
-        let b = coord.evaluate_inputs(&[derive_inputs(&w, &cluster, &opts)?])?[0];
-        if n == 64 {
-            base_total = b.total();
-        }
+        footprints.push(fp);
+        specs.push((w, cluster, opts));
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let base_total = evals[0].total();
+    let mut rows = Vec::new();
+    for ((&n, b), fp) in sizes.iter().zip(&evals).zip(&footprints) {
         rows.push((
             format!("{n} nodes"),
             vec![
@@ -420,44 +595,44 @@ pub fn fig13b(coord: &Coordinator) -> Result<FigureData> {
     let d = Dlrm::dlrm_1_2t();
     let total_nodes = 64usize;
     let instances = 8.0;
+    let packings = [32usize, 16, 8];
+    let width = EM_BW_SWEEP.len();
 
-    // Baseline: 8 sequential waves of 64-node instances on local memory.
-    let w64 = d.build(64)?;
-    let base = coord
-        .evaluate_inputs(&[derive_inputs(
-            &w64,
-            &presets::dgx_a100_64(),
-            &EvalOptions {
-                footprint_override: Some(d.footprint_per_node(64)),
-                ..Default::default()
-            },
-        )?])?[0]
-        .total()
-        * instances;
-
-    let mut rows = Vec::new();
-    for &n in &[32usize, 16, 8] {
+    // Job 0: 8 sequential waves of 64-node instances on local memory.
+    let mut specs: Vec<SweepSpec> =
+        Vec::with_capacity(1 + packings.len() * width);
+    specs.push((
+        d.build(64)?,
+        presets::dgx_a100_64(),
+        EvalOptions {
+            footprint_override: Some(d.footprint_per_node(64)),
+            ..Default::default()
+        },
+    ));
+    for &n in &packings {
         let w = d.build(n)?;
         let fp = d.footprint_per_node(n);
         let opts = EvalOptions {
             footprint_override: Some(fp),
             ..Default::default()
         };
+        for &bw in &EM_BW_SWEEP {
+            let mut cluster = presets::dgx_a100_64().with_n_nodes(n);
+            let need = (fp - cluster.node.local.capacity).max(0.0);
+            cluster.node = cluster.node.with_expanded(need, gb(bw));
+            specs.push((w.clone(), cluster, opts));
+        }
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let base = evals[0].total() * instances;
+    let mut rows = Vec::new();
+    for (pi, &n) in packings.iter().enumerate() {
         let waves =
             (instances * n as f64 / total_nodes as f64).max(1.0).ceil();
-        let vals: Vec<f64> = EM_BW_SWEEP
-            .iter()
-            .map(|&bw| {
-                let mut cluster = presets::dgx_a100_64().with_n_nodes(n);
-                let need = (fp - cluster.node.local.capacity).max(0.0);
-                cluster.node = cluster.node.with_expanded(need, gb(bw));
-                let t = coord
-                    .evaluate_inputs(&[derive_inputs(&w, &cluster, &opts)
-                        .unwrap()])
-                    .unwrap()[0]
-                    .total();
-                base / (t * waves)
-            })
+        let vals: Vec<f64> = (0..width)
+            .map(|j| base / (evals[1 + pi * width + j].total() * waves))
             .collect();
         rows.push((format!("{n} nodes/instance"), vals));
     }
@@ -472,36 +647,6 @@ pub fn fig13b(coord: &Coordinator) -> Result<FigureData> {
                 .into(),
         ],
     })
-}
-
-/// Best feasible Transformer-1T strategy on a cluster (capacity-aware) and
-/// its iteration time.
-fn best_transformer_time(
-    coord: &Coordinator,
-    cluster: &ClusterConfig,
-) -> Result<f64> {
-    let t = Transformer::t1();
-    let opts = EvalOptions::default();
-    let max_mp = 128.min(cluster.n_nodes);
-    let mut jobs = Vec::new();
-    for s in Strategy::sweep_bounded(cluster.n_nodes, 1, max_mp) {
-        let w = t.build(&s)?;
-        let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
-        // Infeasible if the footprint exceeds total (local + expanded)
-        // capacity per node.
-        if fp > cluster.node.total_capacity() {
-            continue;
-        }
-        jobs.push(derive_inputs(&w, cluster, &opts)?);
-    }
-    if jobs.is_empty() {
-        return Ok(f64::NAN);
-    }
-    let evals = coord.evaluate_inputs(&jobs)?;
-    Ok(evals
-        .iter()
-        .map(|b| b.total())
-        .fold(f64::INFINITY, f64::min))
 }
 
 /// DLRM nodes-per-instance for fig. 15, per the paper: GPU clusters use
@@ -524,15 +669,25 @@ fn dlrm_nodes_per_instance(cluster: &ClusterConfig, d: &Dlrm) -> usize {
     }
 }
 
+/// Per-cluster job layout inside fig. 15's single batch.
+struct Fig15Plan {
+    dlrm_idx: usize,
+    waves: f64,
+    /// Transformer candidate jobs (feasible strategies; may be empty).
+    tf: Range<usize>,
+}
+
 /// Fig. 15: eleven-cluster comparison (Table III) on DLRM and
-/// Transformer-1T, speedups normalized to cluster A0.
+/// Transformer-1T, speedups normalized to cluster A0. All clusters' DLRM
+/// packings AND every cluster's feasible Transformer strategies are
+/// evaluated in one batch.
 pub fn fig15(coord: &Coordinator) -> Result<FigureData> {
     let d = Dlrm::dlrm_1_2t();
     let clusters = presets::table3_all();
     let instances = 8.0;
 
-    let mut dlrm_times = Vec::new();
-    let mut tf_times = Vec::new();
+    let mut specs: Vec<SweepSpec> = Vec::new();
+    let mut plans = Vec::with_capacity(clusters.len());
     for cluster in &clusters {
         // DLRM: 8 instances, waves over a 64-node partition for GPU
         // clusters (SV-C setup) or the full fabric for TPU/Dojo.
@@ -545,13 +700,50 @@ pub fn fig15(coord: &Coordinator) -> Result<FigureData> {
             footprint_override: Some(d.footprint_per_node(n_i)),
             ..Default::default()
         };
-        let t = coord
-            .evaluate_inputs(&[derive_inputs(&w, &sub, &opts)?])?[0]
-            .total();
-        dlrm_times.push(t * waves);
+        let dlrm_idx = specs.len();
+        specs.push((w, sub, opts));
 
-        tf_times.push(best_transformer_time(coord, cluster)?);
+        // Transformer: every capacity-feasible (MP, DP) split.
+        let topts = EvalOptions::default();
+        let tf_start = specs.len();
+        let max_mp = 128.min(cluster.n_nodes);
+        for s in Strategy::sweep_bounded(cluster.n_nodes, 1, max_mp) {
+            let w = Transformer::t1().build(&s)?;
+            let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
+            // Infeasible if the footprint exceeds total (local + expanded)
+            // capacity per node.
+            if fp > cluster.node.total_capacity() {
+                continue;
+            }
+            specs.push((w, cluster.clone(), topts));
+        }
+        plans.push(Fig15Plan {
+            dlrm_idx,
+            waves,
+            tf: tf_start..specs.len(),
+        });
     }
+
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let dlrm_times: Vec<f64> = plans
+        .iter()
+        .map(|p| evals[p.dlrm_idx].total() * p.waves)
+        .collect();
+    let tf_times: Vec<f64> = plans
+        .iter()
+        .map(|p| {
+            if p.tf.is_empty() {
+                f64::NAN
+            } else {
+                evals[p.tf.clone()]
+                    .iter()
+                    .map(|b| b.total())
+                    .fold(f64::INFINITY, f64::min)
+            }
+        })
+        .collect();
 
     let rows = clusters
         .iter()
@@ -589,24 +781,22 @@ pub fn fig15(coord: &Coordinator) -> Result<FigureData> {
 pub fn ablation_collectives(coord: &Coordinator) -> Result<FigureData> {
     let cluster = presets::dgx_a100_1024();
     let strategies = fig8_strategies();
+    let impls = [CollectiveImpl::LogicalRing, CollectiveImpl::Hierarchical];
+    let grid = GridSweep::new(strategies.clone()).collective_impls(&impls);
+    let opts = EvalOptions {
+        ignore_capacity: true,
+        ..Default::default()
+    };
+    let specs =
+        grid.specs(&cluster, &opts, |s| Transformer::t1().build(s))?;
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
     let mut rows = Vec::new();
-    for s in &strategies {
-        let w = Transformer::t1().build(s)?;
-        let mut vals = Vec::new();
-        for impl_ in [CollectiveImpl::LogicalRing, CollectiveImpl::Hierarchical]
-        {
-            let opts = EvalOptions {
-                ignore_capacity: true,
-                collective_impl: impl_,
-                ..Default::default()
-            };
-            let inp = derive_inputs(&w, &cluster, &opts)?;
-            vals.push(
-                coord.evaluate_inputs(std::slice::from_ref(&inp))?[0].total(),
-            );
-        }
-        vals.push(vals[0] / vals[1]); // ring / hierarchical
-        rows.push((s.label(), vals));
+    for (i, s) in strategies.iter().enumerate() {
+        let ring = evals[i * impls.len()].total();
+        let hier = evals[i * impls.len() + 1].total();
+        rows.push((s.label(), vec![ring, hier, ring / hier]));
     }
     Ok(FigureData {
         id: "ablation-collectives".into(),
@@ -629,7 +819,9 @@ pub fn ablation_collectives(coord: &Coordinator) -> Result<FigureData> {
 /// communication-volume penalty on the WG reduce-scatter).
 pub fn ablation_zero(coord: &Coordinator) -> Result<FigureData> {
     let cluster = presets::dgx_a100_1024();
-    let mut rows = Vec::new();
+    let mut labels = Vec::new();
+    let mut footprints = Vec::new();
+    let mut specs: Vec<SweepSpec> = Vec::new();
     for s in [Strategy::new(64, 16), Strategy::new(8, 128)] {
         let base = Transformer::t1().build(&s)?;
         for stage in ZeroStage::ALL {
@@ -646,15 +838,23 @@ pub fn ablation_zero(coord: &Coordinator) -> Result<FigureData> {
                 ignore_capacity: true,
                 ..Default::default()
             };
-            let fp = footprint_per_node(&w, &s, stage).total() / gb(1.0);
-            let inp = derive_inputs(&w, &cluster, &opts)?;
-            let b = coord.evaluate_inputs(std::slice::from_ref(&inp))?[0];
-            rows.push((
-                format!("{} {}", s.label(), stage.label()),
-                vec![fp, b.total(), b.wg_exposed_comm],
-            ));
+            labels.push(format!("{} {}", s.label(), stage.label()));
+            footprints
+                .push(footprint_per_node(&w, &s, stage).total() / gb(1.0));
+            specs.push((w, cluster.clone(), opts));
         }
     }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let rows = labels
+        .into_iter()
+        .zip(footprints)
+        .zip(&evals)
+        .map(|((label, fp), b)| {
+            (label, vec![fp, b.total(), b.wg_exposed_comm])
+        })
+        .collect();
     Ok(FigureData {
         id: "ablation-zero".into(),
         title: "Ablation: ZeRO stage (footprint vs comm overhead)".into(),
@@ -741,5 +941,90 @@ mod tests {
         assert!(c0 > 2.0, "C0 speedup {c0}");
         let a0 = f.cell("A0", "Transformer-1T").unwrap();
         assert!((a0 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grid_sweep_cross_product_size() {
+        let grid = GridSweep::new(Strategy::sweep_bounded(1024, 2, 128))
+            .em_bandwidths(&EM_BW_SWEEP.map(gb));
+        // 7 strategies (MP128..MP2) x 7 bandwidths x 1 capacity x 1 impl.
+        assert_eq!(grid.len(), 7 * EM_BW_SWEEP.len());
+        assert_eq!(grid.points().len(), grid.len());
+        assert!(!grid.is_empty());
+
+        let grid = GridSweep::new(Strategy::sweep(64))
+            .em_bandwidths(&[gb(500.0), gb(1000.0)])
+            .em_capacities(&[gb(100.0), gb(200.0), gb(400.0)])
+            .collective_impls(&[
+                CollectiveImpl::LogicalRing,
+                CollectiveImpl::Hierarchical,
+            ]);
+        assert_eq!(grid.len(), 7 * 2 * 3 * 2);
+        assert_eq!(grid.points().len(), grid.len());
+        assert!(GridSweep::new(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn grid_sweep_rejects_capacity_without_bandwidth() {
+        let err = GridSweep::new(vec![Strategy::new(8, 8)])
+            .em_capacities(&[gb(100.0)])
+            .specs(
+                &presets::dgx_a100_1024(),
+                &EvalOptions::default(),
+                |s| Transformer::t1().build(s),
+            );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn grid_sweep_points_row_major() {
+        let grid = GridSweep::new(vec![
+            Strategy::new(8, 8),
+            Strategy::new(4, 16),
+        ])
+        .em_bandwidths(&[1e9, 2e9])
+        .collective_impls(&[
+            CollectiveImpl::LogicalRing,
+            CollectiveImpl::Hierarchical,
+        ]);
+        let pts = grid.points();
+        assert_eq!(pts.len(), 2 * 2 * 2);
+        // Strategy outermost, then bandwidth, then impl innermost.
+        assert_eq!(pts[0].strategy, Strategy::new(8, 8));
+        assert_eq!(pts[0].em_bandwidth, Some(1e9));
+        assert_eq!(pts[0].collective_impl, CollectiveImpl::LogicalRing);
+        assert_eq!(pts[1].collective_impl, CollectiveImpl::Hierarchical);
+        assert_eq!(pts[2].em_bandwidth, Some(2e9));
+        assert_eq!(pts[4].strategy, Strategy::new(4, 16));
+    }
+
+    #[test]
+    fn grid_sweep_specs_match_points() {
+        let cluster = presets::dgx_a100_1024();
+        let grid = GridSweep::new(Strategy::sweep_bounded(1024, 8, 64))
+            .em_bandwidths(&EM_BW_SWEEP.map(gb));
+        let specs = grid
+            .specs(&cluster, &EvalOptions::default(), |s| {
+                Transformer::t1().build(s)
+            })
+            .unwrap();
+        assert_eq!(specs.len(), grid.len());
+        // Spilling strategies get expanded memory at the point's bandwidth;
+        // fitting ones keep the base node.
+        for (spec, pt) in specs.iter().zip(grid.points()) {
+            let w = &spec.0;
+            assert_eq!(w.mp, pt.strategy.mp);
+            let fp = footprint_per_node(w, &pt.strategy, ZeroStage::OsG)
+                .total();
+            let spills = fp > cluster.node.local.capacity;
+            if spills {
+                assert_eq!(
+                    spec.1.node.expanded.bandwidth,
+                    pt.em_bandwidth.unwrap()
+                );
+            } else {
+                assert_eq!(spec.1.node, cluster.node);
+            }
+        }
     }
 }

@@ -38,6 +38,15 @@
 //! let breakdown = coord.evaluate(&model, &cluster).unwrap();
 //! println!("iteration time: {:.3} s", breakdown.total());
 //! ```
+//!
+//! ## Throughput
+//!
+//! The DSE hot path is built for sweep throughput (the paper's SV-E
+//! claim): the coordinator owns a persistent worker pool, results are
+//! memoized in a sharded fingerprint cache, and every figure driver
+//! batches its whole grid into one `evaluate_inputs` call. See
+//! `BENCHMARKS.md` at the repo root for how to run `bench_dse_speed`
+//! and how `BENCH_dse.json` records the wall-clock trajectory.
 
 pub mod analytical;
 pub mod compute;

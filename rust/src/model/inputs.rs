@@ -83,6 +83,56 @@ pub struct ModelInputs {
     pub params: NodeParams,
 }
 
+impl ModelInputs {
+    /// Cache fingerprint: FNV-1a over the full numeric content of the
+    /// inputs. Collisions across *different* configurations are
+    /// astronomically unlikely (64-bit) and would only perturb a figure,
+    /// not corrupt state. Computed once per input on the sweep hot path
+    /// and reused for both the cache lookup and the insert.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |x: f64| {
+            for b in x.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        let p = &self.params;
+        for v in [
+            p.perf_peak,
+            p.bw_lm,
+            p.bw_em,
+            p.cap_lm,
+            p.sram,
+            p.footprint,
+            p.bw_intra,
+            p.bw_inter,
+            p.link_latency,
+            if p.overlap_wg { 1.0 } else { 0.0 },
+            p.em_frac_override.unwrap_or(-1.0),
+            p.collective_impl.code(),
+        ] {
+            eat(v);
+        }
+        for l in &self.layers {
+            eat(l.repeat);
+            for q in &l.q {
+                eat(q.flops);
+                eat(q.u);
+                eat(q.v);
+                eat(q.w);
+            }
+            for c in &l.comm {
+                eat(c.collective.code());
+                eat(c.bytes);
+                eat(c.n_intra as f64);
+                eat(c.n_inter as f64);
+            }
+        }
+        h
+    }
+}
+
 /// Resolve a [`CommScope`] into a two-level group shape.
 fn resolve_scope(
     scope: CommScope,

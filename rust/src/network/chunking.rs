@@ -28,21 +28,36 @@ pub struct TransferPhase {
 
 /// Expand a collective into its transfer phases.
 ///
+/// Allocating wrapper around [`schedule_into`]; the DES hot loop reuses a
+/// scratch buffer instead.
+pub fn schedule(spec: &CollectiveSpec, impl_: CollectiveImpl) -> Vec<TransferPhase> {
+    let mut phases = Vec::new();
+    schedule_into(spec, impl_, &mut phases);
+    phases
+}
+
+/// Expand a collective into its transfer phases, writing into `phases`
+/// (cleared first) so per-evaluation allocations can be reused.
+///
 /// Logical ring: one flat ring pass (two for all-reduce) over all n
 /// participants, on the slowest link class the ring crosses. Hierarchical:
 /// intra reduce-scatter, inter reduce-scatter + all-gather on the
 /// `bytes/n_intra` shard, intra all-gather. All-to-all: one concurrent
 /// phase per link class (the DES serializes them on their own links,
 /// reproducing the analytical max()).
-pub fn schedule(spec: &CollectiveSpec, impl_: CollectiveImpl) -> Vec<TransferPhase> {
+pub fn schedule_into(
+    spec: &CollectiveSpec,
+    impl_: CollectiveImpl,
+    phases: &mut Vec<TransferPhase>,
+) {
+    phases.clear();
     let n = spec.n();
     if spec.bytes <= 0.0 || n <= 1 {
-        return Vec::new();
+        return;
     }
     let ni = spec.n_intra;
     let nx = spec.n_inter;
     let shard = spec.bytes / ni.max(1) as f64;
-    let mut phases = Vec::new();
 
     let flat_link = if nx > 1 {
         LinkClass::InterPod
@@ -119,7 +134,6 @@ pub fn schedule(spec: &CollectiveSpec, impl_: CollectiveImpl) -> Vec<TransferPha
             }
         }
     }
-    phases
 }
 
 /// Whether the phases of this collective may proceed concurrently on their
@@ -227,6 +241,20 @@ mod tests {
                 schedule(&spec(Collective::None, 1e9, 8, 8), impl_).is_empty()
             );
         }
+    }
+
+    #[test]
+    fn schedule_into_clears_and_matches() {
+        let s1 = spec(Collective::AllReduce, 1e9, 8, 16);
+        let s2 = spec(Collective::AllGather, 2e9, 8, 1);
+        let mut buf = Vec::new();
+        schedule_into(&s1, Hierarchical, &mut buf);
+        assert_eq!(buf, schedule(&s1, Hierarchical));
+        // Reusing the buffer drops the previous schedule entirely.
+        schedule_into(&s2, LogicalRing, &mut buf);
+        assert_eq!(buf, schedule(&s2, LogicalRing));
+        schedule_into(&spec(Collective::None, 1e9, 8, 8), LogicalRing, &mut buf);
+        assert!(buf.is_empty());
     }
 
     #[test]

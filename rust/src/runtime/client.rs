@@ -7,6 +7,11 @@ use crate::error::{Error, Result};
 use crate::model::batch;
 use crate::util::json;
 
+// The offline build vendors no external crates; the stub mirrors the PJRT
+// API surface and fails at `PjRtClient::cpu()`. Swap this import for the
+// real `xla` crate to re-enable the artifact backend.
+use super::xla_stub as xla;
+
 /// A loaded PJRT runtime holding one compiled executable per exported
 /// batch size.
 pub struct Runtime {

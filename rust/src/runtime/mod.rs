@@ -9,6 +9,7 @@
 
 mod batch_eval;
 mod client;
+mod xla_stub;
 
 pub use batch_eval::BatchEvaluator;
 pub use client::Runtime;

@@ -26,7 +26,7 @@
 use crate::analytical::TrainingBreakdown;
 use crate::compute::{em_fraction, gemm_traffic, hybrid_bandwidth};
 use crate::model::inputs::ModelInputs;
-use crate::network::chunking::{concurrent_phases, schedule, LinkClass, TransferPhase};
+use crate::network::chunking::{concurrent_phases, schedule_into, LinkClass, TransferPhase};
 use crate::network::CollectiveImpl;
 use crate::workload::Collective;
 
@@ -148,6 +148,11 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
     let mut fp_compute = 0.0;
     let mut fp_exposed = 0.0;
 
+    // Scratch schedule buffers reused across all layers of the evaluation
+    // (collective schedules are at most a handful of phases; reallocating
+    // them per layer-instance dominated small-sweep profiles).
+    let mut phases: Vec<TransferPhase> = Vec::new();
+
     // ---- FP: forward order, blocking collectives -------------------------
     for layer in &inputs.layers {
         let reps = layer.repeat.max(0.0);
@@ -156,7 +161,7 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
         }
         let d = eng.delay(&layer.q[0]);
         let spec = &layer.comm[0];
-        let phases = schedule(spec, eng.impl_);
+        schedule_into(spec, eng.impl_, &mut phases);
         if phases.is_empty() {
             t += d * reps;
             fp_compute += d * reps;
@@ -232,6 +237,9 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
     let mut wg_comm_total = 0.0;
     let mut queue: EventQueue<Ev> = EventQueue::new();
     let mut last_wg_end = t;
+    let mut ig_phases: Vec<TransferPhase> = Vec::new();
+    let mut wg_phases: Vec<TransferPhase> = Vec::new();
+    let mut scaled: Vec<TransferPhase> = Vec::new();
 
     for layer in inputs.layers.iter().rev() {
         let reps = layer.repeat.max(0.0);
@@ -242,8 +250,8 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
         let d_wg = eng.delay(&layer.q[2]);
         let ig_spec = &layer.comm[1];
         let wg_spec = &layer.comm[2];
-        let ig_phases = schedule(ig_spec, eng.impl_);
-        let wg_phases = schedule(wg_spec, eng.impl_);
+        schedule_into(ig_spec, eng.impl_, &mut ig_phases);
+        schedule_into(wg_spec, eng.impl_, &mut wg_phases);
         for ph in &wg_phases {
             wg_comm_total +=
                 reps * eng.links.duration(ph.link, ph.bytes, ph.hops);
@@ -328,13 +336,11 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
             wg_compute += d_wg * frac;
             eng.events += 1;
             if !wg_phases.is_empty() {
-                let scaled: Vec<TransferPhase> = wg_phases
-                    .iter()
-                    .map(|ph| TransferPhase {
-                        bytes: ph.bytes * frac,
-                        ..*ph
-                    })
-                    .collect();
+                scaled.clear();
+                scaled.extend(wg_phases.iter().map(|ph| TransferPhase {
+                    bytes: ph.bytes * frac,
+                    ..*ph
+                }));
                 let e =
                     eng.nonblocking(wg_spec.collective, &scaled, t, &mut queue);
                 last_wg_end = last_wg_end.max(e);

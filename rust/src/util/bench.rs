@@ -7,7 +7,9 @@
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
 
+use super::json::{obj, parse, Value};
 use super::stats::Summary;
+use crate::error::{Error, Result};
 
 /// Re-export of `std::hint::black_box` under the criterion-familiar name.
 pub fn black_box<T>(x: T) -> T {
@@ -46,6 +48,20 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Serialize to a JSON object (seconds, like the summary).
+    pub fn to_json(&self) -> Value {
+        let s = &self.summary;
+        obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("median_s", Value::Num(s.median)),
+            ("mean_s", Value::Num(s.mean)),
+            ("p95_s", Value::Num(s.p95)),
+            ("min_s", Value::Num(s.min)),
+            ("max_s", Value::Num(s.max)),
+            ("iters", Value::Num(s.n as f64)),
+        ])
+    }
+
     /// Render one line, criterion-style.
     pub fn line(&self) -> String {
         let s = &self.summary;
@@ -138,6 +154,54 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Append one trajectory point to a `BENCH_*.json` file: the file is
+    /// an object `{"points": [...]}` and each run pushes
+    /// `{"label", "unix_time_s", "results": [...]}` so successive runs on
+    /// the same machine build a wall-clock trajectory (see BENCHMARKS.md).
+    pub fn append_json(&self, path: &str, label: &str) -> Result<()> {
+        let mut root = match std::fs::read_to_string(path) {
+            Ok(text) => parse(&text)?,
+            // Only a genuinely absent file starts a fresh trajectory; any
+            // other read failure must not clobber an existing history
+            // (BENCH_*.json carries schema/baseline metadata alongside
+            // "points").
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                obj(vec![("points", Value::Arr(Vec::new()))])
+            }
+            Err(e) => return Err(Error::Io(format!("{path}: {e}"))),
+        };
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        let point = obj(vec![
+            ("label", Value::Str(label.to_string())),
+            ("unix_time_s", Value::Num(unix)),
+            (
+                "results",
+                Value::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        let Value::Obj(m) = &mut root else {
+            return Err(Error::Json(format!("{path}: root is not an object")));
+        };
+        let points = m
+            .entry("points".to_string())
+            .or_insert_with(|| Value::Arr(Vec::new()));
+        let Value::Arr(a) = points else {
+            return Err(Error::Json(format!(
+                "{path}: \"points\" is not an array"
+            )));
+        };
+        a.push(point);
+        // Write-then-rename so a crash mid-write can't leave a truncated
+        // trajectory behind.
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, root.to_string_pretty() + "\n")?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
 }
 
 impl Default for Bencher {
@@ -180,6 +244,31 @@ mod tests {
         });
         assert_eq!(b.results().len(), 2);
         assert_eq!(b.results()[0].name, "a");
+    }
+
+    #[test]
+    fn append_json_builds_trajectory() {
+        let path = std::env::temp_dir()
+            .join(format!("comet_bench_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let mut b = fast();
+        b.bench("noop", || {
+            black_box(1);
+        });
+        b.append_json(&path, "first").unwrap();
+        b.append_json(&path, "second").unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        let points = v.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].get("label").unwrap().as_str(), Some("first"));
+        let results = points[1].get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("noop"));
+        assert!(results[0].get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
