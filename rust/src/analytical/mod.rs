@@ -15,11 +15,17 @@ use crate::network::collective_cost;
 /// stacked bars).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct TrainingBreakdown {
+    /// Forward-pass compute time.
     pub fp_compute: f64,
+    /// Forward-pass exposed (blocking) communication.
     pub fp_exposed_comm: f64,
+    /// Input-gradient compute time.
     pub ig_compute: f64,
+    /// Input-gradient exposed communication.
     pub ig_exposed_comm: f64,
+    /// Weight-gradient compute time.
     pub wg_compute: f64,
+    /// Weight-gradient communication left exposed after overlap.
     pub wg_exposed_comm: f64,
 }
 

@@ -33,8 +33,11 @@ pub enum Topology {
 /// each other at `bw_inter`. Flat topologies set `pod_size = n_nodes`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TwoLevelView {
+    /// Peers per pod (flat topologies: the whole cluster).
     pub pod_size: usize,
+    /// Intra-pod bandwidth per node per direction, bytes/s.
     pub bw_intra: f64,
+    /// Inter-pod bandwidth per node per direction, bytes/s.
     pub bw_inter: f64,
 }
 

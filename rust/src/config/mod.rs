@@ -7,7 +7,8 @@
 mod cluster;
 mod node;
 pub mod presets;
-mod serde_io;
+pub mod serde_io;
 
 pub use cluster::{ClusterConfig, Topology, TwoLevelView};
 pub use node::{MemoryConfig, NodeConfig};
+pub use serde_io::apply_cluster_overrides;

@@ -159,6 +159,115 @@ fn topo_from_json(v: &Value) -> Result<Topology> {
     }
 }
 
+/// Apply scenario-style overrides (human units: GB, GB/s, TFLOP/s, us) to
+/// a preset cluster. `v` is an object that may carry a `preset` key (the
+/// caller resolved it) plus any of the override keys below; unknown keys
+/// are an error so typos fail loudly. The result is re-validated.
+pub fn apply_cluster_overrides(c: &mut ClusterConfig, v: &Value) -> Result<()> {
+    const ALLOWED: [&str; 13] = [
+        "preset",
+        "name",
+        "n_nodes",
+        "link_latency_us",
+        "perf_peak_tflops",
+        "sram_mb",
+        "local_capacity_gb",
+        "local_bandwidth_gbps",
+        "expanded_capacity_gb",
+        "expanded_bandwidth_gbps",
+        "pod_size",
+        "bw_intra_gbps",
+        "bw_inter_gbps",
+    ];
+    let Value::Obj(m) = v else {
+        return Err(Error::Json("cluster overrides must be an object".into()));
+    };
+    for k in m.keys() {
+        if !ALLOWED.contains(&k.as_str()) {
+            return Err(Error::Json(format!(
+                "unknown cluster override '{k}' (allowed: {})",
+                ALLOWED.join(", ")
+            )));
+        }
+    }
+    let num = |key: &str| -> Result<Option<f64>> {
+        match m.get(key) {
+            None => Ok(None),
+            Some(Value::Num(n)) => Ok(Some(*n)),
+            Some(_) => Err(Error::Json(format!(
+                "cluster override '{key}' must be a number"
+            ))),
+        }
+    };
+    let int = |key: &str| -> Result<Option<usize>> {
+        match num(key)? {
+            None => Ok(None),
+            Some(n) if n >= 0.0 && n.fract() == 0.0 => Ok(Some(n as usize)),
+            Some(n) => Err(Error::Json(format!(
+                "cluster override '{key}' must be a non-negative integer, \
+                 got {n}"
+            ))),
+        }
+    };
+    if let Some(Value::Str(s)) = m.get("name") {
+        c.name = s.clone();
+    } else if m.contains_key("name") {
+        return Err(Error::Json("cluster override 'name' must be a string".into()));
+    }
+    if let Some(n) = int("n_nodes")? {
+        c.n_nodes = n;
+    }
+    if let Some(x) = num("link_latency_us")? {
+        c.link_latency = x * 1e-6;
+    }
+    if let Some(x) = num("perf_peak_tflops")? {
+        c.node.perf_peak = x * 1e12;
+    }
+    if let Some(x) = num("sram_mb")? {
+        c.node.sram = x * 1e6;
+    }
+    if let Some(x) = num("local_capacity_gb")? {
+        c.node.local.capacity = x * 1e9;
+    }
+    if let Some(x) = num("local_bandwidth_gbps")? {
+        c.node.local.bandwidth = x * 1e9;
+    }
+    if let Some(x) = num("expanded_capacity_gb")? {
+        c.node.expanded.capacity = x * 1e9;
+    }
+    if let Some(x) = num("expanded_bandwidth_gbps")? {
+        c.node.expanded.bandwidth = x * 1e9;
+    }
+    let pod = int("pod_size")?;
+    let net = [num("bw_intra_gbps")?, num("bw_inter_gbps")?];
+    if pod.is_some() || net.iter().any(Option::is_some) {
+        match c.topology {
+            Topology::HierarchicalSwitch {
+                ref mut pod_size,
+                ref mut bw_intra,
+                ref mut bw_inter,
+            } => {
+                if let Some(p) = pod {
+                    *pod_size = p;
+                }
+                if let Some(x) = net[0] {
+                    *bw_intra = x * 1e9;
+                }
+                if let Some(x) = net[1] {
+                    *bw_inter = x * 1e9;
+                }
+            }
+            _ => {
+                return Err(Error::Json(
+                    "pod/bandwidth overrides require a hierarchical topology"
+                        .into(),
+                ))
+            }
+        }
+    }
+    c.validate()
+}
+
 fn req_str(v: &Value, key: &str) -> Result<String> {
     v.get(key)
         .and_then(|x| x.as_str())
@@ -218,6 +327,40 @@ mod tests {
             ClusterConfig::from_json(&v),
             Err(Error::Json(_))
         ));
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let mut c = presets::dgx_a100_1024();
+        let v = json::parse(
+            r#"{"preset": "baseline", "n_nodes": 256,
+                "expanded_capacity_gb": 480, "expanded_bandwidth_gbps": 500,
+                "bw_inter_gbps": 62.5, "link_latency_us": 2}"#,
+        )
+        .unwrap();
+        apply_cluster_overrides(&mut c, &v).unwrap();
+        assert_eq!(c.n_nodes, 256);
+        assert_eq!(c.node.expanded.capacity, 480e9);
+        assert_eq!(c.node.expanded.bandwidth, 500e9);
+        assert_eq!(c.two_level().bw_inter, 62.5e9);
+        assert_eq!(c.link_latency, 2e-6);
+    }
+
+    #[test]
+    fn overrides_reject_unknown_and_invalid() {
+        let mut c = presets::dgx_a100_1024();
+        let bad = json::parse(r#"{"local_cap_gb": 80}"#).unwrap();
+        assert!(apply_cluster_overrides(&mut c, &bad).is_err());
+        let mut c = presets::dgx_a100_1024();
+        let non_pow2 = json::parse(r#"{"n_nodes": 1000}"#).unwrap();
+        assert!(apply_cluster_overrides(&mut c, &non_pow2).is_err());
+        // Fractional node counts must not silently truncate.
+        let mut c = presets::dgx_a100_1024();
+        let frac = json::parse(r#"{"n_nodes": 512.5}"#).unwrap();
+        assert!(apply_cluster_overrides(&mut c, &frac).is_err());
+        let mut c = presets::dojo_64();
+        let net = json::parse(r#"{"bw_intra_gbps": 600}"#).unwrap();
+        assert!(apply_cluster_overrides(&mut c, &net).is_err());
     }
 
     #[test]

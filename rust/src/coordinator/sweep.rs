@@ -11,6 +11,13 @@
 //! the same batch as the sweep points. [`GridSweep`] packages the common
 //! strategy x bandwidth x capacity x collective-impl cross-product so new
 //! case studies get the batched path for free.
+//!
+//! Every figure here is also expressible as a declarative spec — see
+//! [`crate::scenario`] and the checked-in `scenarios/*.toml`. These
+//! hand-written drivers are retained as the **equivalence oracle**: the
+//! scenario engine's built-in specs are pinned to them cell-for-cell by
+//! `tests/scenario_roundtrip.rs`, so either path is authoritative and new
+//! studies should be written as scenario files, not new drivers.
 
 use std::ops::Range;
 
@@ -48,11 +55,13 @@ pub struct GridSweep {
 /// One resolved point of a [`GridSweep`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GridPoint {
+    /// Parallelization strategy of this point.
     pub strategy: Strategy,
     /// Expanded-memory bandwidth, bytes/s (`None` = local memory only).
     pub em_bandwidth: Option<f64>,
     /// Expanded-memory capacity, bytes (`None` = sized to the spill).
     pub em_capacity: Option<f64>,
+    /// Collective implementation of this point.
     pub collective_impl: CollectiveImpl,
 }
 
@@ -651,8 +660,12 @@ pub fn fig13b(coord: &Coordinator) -> Result<FigureData> {
 
 /// DLRM nodes-per-instance for fig. 15, per the paper: GPU clusters use
 /// 64 / 16 / 8 nodes for memory systems 0 / 1 / 2; TPU/Dojo use the
-/// smallest power-of-two whose shard fits per-node capacity.
-fn dlrm_nodes_per_instance(cluster: &ClusterConfig, d: &Dlrm) -> usize {
+/// smallest power-of-two whose shard fits per-node capacity. Shared with
+/// the scenario engine's cluster-compare study.
+pub(crate) fn dlrm_nodes_per_instance(
+    cluster: &ClusterConfig,
+    d: &Dlrm,
+) -> usize {
     match cluster.name.as_str() {
         "A0" | "B0" | "C0" => 64,
         "A1" | "B1" | "C1" => 16,

@@ -16,8 +16,9 @@
 //!   ([`parallel`]), cluster configuration ([`config`]), the analytical cost
 //!   model ([`compute`], [`network`], [`analytical`]), an ASTRA-SIM-like
 //!   discrete-event simulator ([`sim`]), the design-space-exploration
-//!   coordinator ([`coordinator`]), figure/report drivers ([`report`]), and
-//!   the PJRT runtime ([`runtime`]).
+//!   coordinator ([`coordinator`]), the declarative scenario engine
+//!   ([`scenario`]), figure/report drivers ([`report`]), and the PJRT
+//!   runtime ([`runtime`]).
 //! * **L2/L1 (build-time Python)** — the same cost model expressed as a JAX
 //!   graph calling Pallas kernels, AOT-lowered once to `artifacts/*.hlo.txt`
 //!   and executed from Rust through the PJRT C API on the sweep hot path.
@@ -39,6 +40,14 @@
 //! println!("iteration time: {:.3} s", breakdown.total());
 //! ```
 //!
+//! ## Scenarios
+//!
+//! Studies are data: a TOML file names a workload, a cluster, the swept
+//! axes, and the output shape, and the [`scenario`] engine lowers it onto
+//! the batched hot path. Every paper figure ships as a spec under
+//! `scenarios/` (`comet scenario list`); see `docs/SCENARIOS.md` for the
+//! schema and a cookbook.
+//!
 //! ## Throughput
 //!
 //! The DSE hot path is built for sweep throughput (the paper's SV-E
@@ -47,6 +56,8 @@
 //! batches its whole grid into one `evaluate_inputs` call. See
 //! `BENCHMARKS.md` at the repo root for how to run `bench_dse_speed`
 //! and how `BENCH_dse.json` records the wall-clock trajectory.
+
+#![warn(missing_docs)]
 
 pub mod analytical;
 pub mod compute;
@@ -58,6 +69,7 @@ pub mod network;
 pub mod parallel;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;
 pub mod workload;

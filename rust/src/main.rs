@@ -2,6 +2,8 @@
 //! workload/config inspection, and cross-backend validation.
 //!
 //! ```text
+//! comet scenario <run FILE-or-NAME | list | show NAME | export NAME>
+//!       [--backend native|des|artifact|auto] [--out-dir DIR] [--out FILE]
 //! comet figure <fig6|fig8a|fig8b|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|all>
 //!       [--backend native|des|artifact] [--out-dir DIR] [--csv]
 //! comet sweep   [--cluster PRESET] [--backend B] [--infinite-memory]
@@ -22,6 +24,7 @@ use comet::error::{Error, Result};
 use comet::model::inputs::{derive_inputs, EvalOptions};
 use comet::parallel::{footprint_per_node, Strategy, ZeroStage};
 use comet::report::FigureData;
+use comet::scenario::{self, registry, OutputFormat, ScenarioSpec};
 use comet::util::units::{fmt_bytes, fmt_secs};
 use comet::workload::dlrm::Dlrm;
 use comet::workload::transformer::Transformer;
@@ -343,13 +346,114 @@ fn cmd_validate(_args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: comet <figure|sweep|eval|footprint|config|workload|compare|validate> [options]
+/// Resolve a `scenario run|show|export` target: a file if one exists at
+/// that path, otherwise a built-in registry name (so a stray directory
+/// named like a built-in cannot shadow it).
+fn scenario_spec_for(target: &str) -> Result<ScenarioSpec> {
+    let p = Path::new(target);
+    if p.is_file() {
+        ScenarioSpec::load(p)
+    } else {
+        registry::get(target)
+    }
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("run") => {
+            let target = args.positional.get(2).ok_or_else(|| {
+                Error::Config("scenario run <FILE|NAME>".into())
+            })?;
+            let spec = scenario_spec_for(target)?;
+            // --backend overrides the spec's choice.
+            let coord = if args.flag("backend").is_some() {
+                coordinator_for(args)?
+            } else {
+                spec.options.backend.coordinator()?
+            };
+            let fig = scenario::run(&spec, &coord)?;
+            match spec.output.format {
+                OutputFormat::Table => println!("{}", fig.to_table()),
+                OutputFormat::Csv => println!("{}", fig.to_csv()),
+                OutputFormat::Json => {
+                    println!("{}", fig.to_json().to_string_pretty())
+                }
+            }
+            if let Some(dir) = args.flag("out-dir") {
+                std::fs::create_dir_all(dir)?;
+                // Persist in the spec's declared format (table output is
+                // persisted as plot-ready CSV, like `comet figure`).
+                let (ext, payload) = match spec.output.format {
+                    OutputFormat::Table | OutputFormat::Csv => {
+                        ("csv", fig.to_csv())
+                    }
+                    OutputFormat::Json => {
+                        ("json", fig.to_json().to_string_pretty())
+                    }
+                };
+                let path = Path::new(dir).join(format!("{}.{ext}", fig.id));
+                std::fs::write(&path, payload)?;
+                println!("  wrote {}", path.display());
+            }
+            let (hits, misses) = coord.cache_stats();
+            eprintln!(
+                "[comet] scenario '{}' backend={:?} cache {hits} hits / \
+                 {misses} misses",
+                spec.name,
+                coord.backend()
+            );
+            Ok(())
+        }
+        Some("list") | None => {
+            for name in registry::names() {
+                let spec = registry::get(name)?;
+                println!(
+                    "{name:<22} [{:<17}] {}",
+                    spec.study.kind(),
+                    spec.title
+                );
+            }
+            println!("\nrun one with: comet scenario run <NAME>");
+            println!("or from a file: comet scenario run scenarios/<NAME>.toml");
+            Ok(())
+        }
+        Some("show") => {
+            let target = args.positional.get(2).ok_or_else(|| {
+                Error::Config("scenario show <FILE|NAME>".into())
+            })?;
+            let spec = scenario_spec_for(target)?;
+            println!("{}", spec.to_json().to_string_pretty());
+            Ok(())
+        }
+        Some("export") => {
+            let target = args.positional.get(2).ok_or_else(|| {
+                Error::Config("scenario export <FILE|NAME> [--out FILE]".into())
+            })?;
+            let spec = scenario_spec_for(target)?;
+            let toml = spec.to_toml()?;
+            match args.flag("out") {
+                Some(path) => {
+                    std::fs::write(path, &toml)?;
+                    println!("wrote {path}");
+                }
+                None => print!("{toml}"),
+            }
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!(
+            "unknown scenario cmd '{other}' (run|list|show|export)"
+        ))),
+    }
+}
+
+const USAGE: &str = "usage: comet <scenario|figure|sweep|eval|footprint|config|workload|compare|validate> [options]
 see README.md for per-command options";
 
 fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw);
     match args.positional.first().map(String::as_str) {
+        Some("scenario") => cmd_scenario(&args),
         Some("figure") => cmd_figure(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("eval") => cmd_eval(&args),

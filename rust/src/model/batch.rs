@@ -156,10 +156,15 @@ pub fn stack_into(
 /// Stacked batch tensors matching one artifact's input shapes.
 #[derive(Debug, Clone)]
 pub struct BatchTensors {
+    /// Batch size the tensors are padded to.
     pub b: usize,
+    /// `b x L x CF` compute tensor, row-major.
     pub compute: Vec<f32>,
+    /// `b x L x MF` comm tensor, row-major.
     pub comm: Vec<f32>,
+    /// `b x P` params tensor, row-major.
     pub params: Vec<f32>,
+    /// Real (unpadded) configurations in the batch.
     pub n_real: usize,
 }
 

@@ -46,16 +46,25 @@ impl Default for EvalOptions {
 /// Resolved per-node / per-network parameters (f64, SI units).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NodeParams {
+    /// Peak compute, FLOP/s.
     pub perf_peak: f64,
+    /// Local-memory bandwidth, bytes/s.
     pub bw_lm: f64,
+    /// Expanded-memory bandwidth, bytes/s (0 = absent).
     pub bw_em: f64,
+    /// Local-memory capacity, bytes.
     pub cap_lm: f64,
+    /// On-chip buffer size, bytes.
     pub sram: f64,
     /// Per-node working footprint driving the spill model.
     pub footprint: f64,
+    /// Intra-pod bandwidth per node per direction, bytes/s.
     pub bw_intra: f64,
+    /// Inter-pod bandwidth per node per direction, bytes/s.
     pub bw_inter: f64,
+    /// Per-hop link latency, seconds.
     pub link_latency: f64,
+    /// Overlap WG communication with WG compute.
     pub overlap_wg: bool,
     /// `Some(f)` forces the EM traffic fraction.
     pub em_frac_override: Option<f64>,
@@ -66,7 +75,9 @@ pub struct NodeParams {
 /// One layer's resolved cost-model record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerRecord {
+    /// Layer name (diagnostics).
     pub name: String,
+    /// Instance multiplicity.
     pub repeat: f64,
     /// Compute quantities for FP / IG / WG.
     pub q: [PhaseQuantities; 3],
@@ -78,8 +89,11 @@ pub struct LayerRecord {
 /// Everything the cost-model backends need.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelInputs {
+    /// `workload%cluster` identifier (diagnostics).
     pub name: String,
+    /// Resolved per-layer records.
     pub layers: Vec<LayerRecord>,
+    /// Resolved node/network parameters.
     pub params: NodeParams,
 }
 

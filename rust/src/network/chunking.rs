@@ -12,13 +12,16 @@ use crate::workload::Collective;
 /// Which link class a phase occupies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LinkClass {
+    /// Intra-pod links (NVLink-class).
     IntraPod,
+    /// Inter-pod links (fabric-class).
     InterPod,
 }
 
 /// One synchronous transfer step of a collective schedule.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TransferPhase {
+    /// Link class this step serializes on.
     pub link: LinkClass,
     /// Bytes each participant moves in this step.
     pub bytes: f64,

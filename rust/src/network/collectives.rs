@@ -34,6 +34,7 @@ impl CollectiveImpl {
 /// A fully resolved collective: payload, type, and two-level group shape.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CollectiveSpec {
+    /// Collective type.
     pub collective: Collective,
     /// Payload bytes per participant.
     pub bytes: f64,

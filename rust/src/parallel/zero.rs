@@ -12,9 +12,12 @@
 //!   * stage 2 (os+g):     + gradients / DP      (the paper's default)
 //!   * stage 3 (os+g+p):   + parameters / DP
 
-/// Bytes per parameter of each model-state component.
+/// Bytes per parameter of fp16 parameters.
 pub const PARAM_BYTES: f64 = 2.0;
+/// Bytes per parameter of fp16 gradients.
 pub const GRAD_BYTES: f64 = 2.0;
+/// Bytes per parameter of fp32 optimizer state (master + momentum +
+/// variance).
 pub const OPTIM_BYTES: f64 = 12.0;
 
 /// ZeRO-DP optimization stage.

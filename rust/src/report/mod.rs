@@ -49,6 +49,59 @@ impl FigureData {
     pub fn to_csv(&self) -> String {
         csv::render(self)
     }
+
+    /// Render as a JSON value (`comet scenario` output format "json").
+    /// Non-finite cells become `null` — JSON has no NaN.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let cell = |v: &f64| {
+            if v.is_finite() {
+                Value::Num(*v)
+            } else {
+                Value::Null
+            }
+        };
+        crate::util::json::obj(vec![
+            ("id", Value::Str(self.id.clone())),
+            ("title", Value::Str(self.title.clone())),
+            ("row_label", Value::Str(self.row_label.clone())),
+            (
+                "columns",
+                Value::Arr(
+                    self.columns
+                        .iter()
+                        .map(|c| Value::Str(c.clone()))
+                        .collect(),
+                ),
+            ),
+            (
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|(label, vals)| {
+                            crate::util::json::obj(vec![
+                                ("label", Value::Str(label.clone())),
+                                (
+                                    "values",
+                                    Value::Arr(vals.iter().map(cell).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "notes",
+                Value::Arr(
+                    self.notes
+                        .iter()
+                        .map(|n| Value::Str(n.clone()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -82,5 +135,18 @@ mod tests {
         let f = sample();
         assert_eq!(f.argmin("a"), Some("r2"));
         assert_eq!(f.argmin("b"), Some("r1"));
+    }
+
+    #[test]
+    fn json_is_parseable_and_nan_becomes_null() {
+        use crate::util::json;
+        let f = sample();
+        let v = json::parse(&f.to_json().to_string_pretty()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str(), Some("figX"));
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        // r2's second cell is NaN in the figure -> null in JSON.
+        let r2 = rows[1].get("values").unwrap().as_arr().unwrap();
+        assert_eq!(r2[1], json::Value::Null);
     }
 }

@@ -1,0 +1,36 @@
+//! The declarative scenario engine: COMET studies as data, not code.
+//!
+//! A scenario file (TOML or JSON) names a workload, a cluster, a study
+//! shape (the swept axes), evaluation options, and output presentation;
+//! the engine lowers it onto the same batched, cached, pooled evaluation
+//! hot path the figure drivers use. Every paper figure ships as a
+//! checked-in spec under `scenarios/` — the [`registry`] embeds those
+//! files, so `comet scenario run fig8a` and `comet scenario run
+//! scenarios/fig8a.toml` are the same study by construction — and new
+//! cluster-design studies are a new `.toml` file, not new Rust.
+//!
+//! * [`spec`] — the [`ScenarioSpec`] data model and its strict JSON
+//!   mapping (unknown keys are errors).
+//! * [`parse`] — the self-contained TOML-subset reader/writer.
+//! * [`run()`] — lowering onto [`crate::coordinator::Coordinator`].
+//! * [`registry`] — the built-in specs (paper figures + case studies).
+//!
+//! ```no_run
+//! use comet::coordinator::Coordinator;
+//! use comet::scenario::{registry, run};
+//!
+//! let spec = registry::get("fig8a").unwrap();
+//! let fig = run(&spec, &Coordinator::native()).unwrap();
+//! println!("{}", fig.to_table());
+//! ```
+
+pub mod parse;
+pub mod registry;
+mod run;
+pub mod spec;
+
+pub use run::run;
+pub use spec::{
+    BackendSpec, Content, Normalize, OptionsSpec, OutputFormat, OutputSpec,
+    ScenarioSpec, StrategyAxis, Study, WorkloadSpec,
+};

@@ -1,0 +1,560 @@
+//! Self-contained scenario-file reader: a minimal TOML subset plus JSON,
+//! both lowered to [`crate::util::json::Value`] so the spec layer parses
+//! one tree shape regardless of the on-disk syntax.
+//!
+//! The offline build vendors no `toml`/`serde` crates, so this module
+//! implements the slice of TOML that scenario files need:
+//!
+//! * `[table]` and `[nested.table]` headers,
+//! * `key = value` pairs with bare (`[A-Za-z0-9_-]+`) or basic-quoted keys,
+//! * basic strings with the common escapes, booleans, integers and floats
+//!   (with `_` separators and exponents), arrays (nestable, trailing comma
+//!   allowed, may span lines), and inline tables `{ k = v, ... }`,
+//! * `#` comments.
+//!
+//! Unsupported on purpose (a parse error, never a silent misread):
+//! array-of-tables `[[x]]`, dotted keys in assignments, literal/multiline
+//! strings, and dates. [`to_toml`] is the inverse used by
+//! `comet scenario export`; [`parse_document`] auto-detects JSON input by
+//! its leading `{`.
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
+
+/// Parse a scenario document, auto-detecting the syntax: a document whose
+/// first non-whitespace byte is `{` is JSON, anything else is TOML.
+pub fn parse_document(text: &str) -> Result<Value> {
+    match text.trim_start().as_bytes().first() {
+        Some(b'{') => json::parse(text),
+        _ => parse_toml(text),
+    }
+}
+
+/// Parse the TOML subset into a JSON value tree (objects all the way
+/// down; TOML integers become `Value::Num`).
+pub fn parse_toml(text: &str) -> Result<Value> {
+    let mut p = Toml {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    let mut root = BTreeMap::new();
+    let mut path: Vec<String> = Vec::new();
+    let mut seen_headers: std::collections::HashSet<Vec<String>> =
+        std::collections::HashSet::new();
+    loop {
+        p.skip_trivia();
+        match p.peek() {
+            None => break,
+            Some(b'[') => {
+                p.pos += 1;
+                if p.peek() == Some(b'[') {
+                    return Err(p.err("array-of-tables [[..]] is not supported"));
+                }
+                path = p.dotted_key()?;
+                p.skip_inline_ws();
+                p.expect(b']')?;
+                p.end_line()?;
+                if !seen_headers.insert(path.clone()) {
+                    return Err(p.err(&format!(
+                        "duplicate table header [{}]",
+                        path.join(".")
+                    )));
+                }
+                // Materialize the (possibly empty) table.
+                table_at(&mut root, &path, &p)?;
+            }
+            _ => {
+                let key = p.key()?;
+                p.skip_inline_ws();
+                p.expect(b'=')?;
+                p.skip_inline_ws();
+                let v = p.value()?;
+                p.end_line()?;
+                let t = table_at(&mut root, &path, &p)?;
+                if t.insert(key.clone(), v).is_some() {
+                    return Err(p.err(&format!("duplicate key '{key}'")));
+                }
+            }
+        }
+    }
+    Ok(Value::Obj(root))
+}
+
+/// Navigate (creating as needed) to the object at `path`.
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    p: &Toml<'_>,
+) -> Result<&'a mut BTreeMap<String, Value>> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Value::Obj(BTreeMap::new()));
+        match entry {
+            Value::Obj(m) => cur = m,
+            _ => {
+                return Err(p.err(&format!("'{seg}' is not a table")));
+            }
+        }
+    }
+    Ok(cur)
+}
+
+struct Toml<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Toml<'a> {
+    fn err(&self, msg: &str) -> Error {
+        // 1-based line number for human-friendly diagnostics.
+        let line = 1 + self.bytes[..self.pos.min(self.bytes.len())]
+            .iter()
+            .filter(|&&b| b == b'\n')
+            .count();
+        Error::Config(format!("toml parse error: {msg} (line {line})"))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    /// Skip spaces and tabs (not newlines).
+    fn skip_inline_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    /// Require nothing but optional whitespace/comment before the next
+    /// newline (or EOF) — TOML allows one statement per line.
+    fn end_line(&mut self) -> Result<()> {
+        self.skip_inline_ws();
+        if self.peek() == Some(b'#') {
+            while !matches!(self.peek(), None | Some(b'\n')) {
+                self.pos += 1;
+            }
+        }
+        match self.peek() {
+            None | Some(b'\n') | Some(b'\r') => Ok(()),
+            _ => Err(self.err("expected end of line")),
+        }
+    }
+
+    /// Skip whitespace (including newlines) and `#` comments.
+    fn skip_trivia(&mut self) {
+        loop {
+            match self.peek() {
+                Some(b' ' | b'\t' | b'\n' | b'\r') => self.pos += 1,
+                Some(b'#') => {
+                    while !matches!(self.peek(), None | Some(b'\n')) {
+                        self.pos += 1;
+                    }
+                }
+                _ => return,
+            }
+        }
+    }
+
+    fn bare_key(&mut self) -> Result<String> {
+        let start = self.pos;
+        while matches!(self.peek(),
+            Some(c) if c.is_ascii_alphanumeric() || c == b'_' || c == b'-')
+        {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err("expected a key"));
+        }
+        Ok(String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned())
+    }
+
+    fn key(&mut self) -> Result<String> {
+        if self.peek() == Some(b'"') {
+            self.basic_string()
+        } else {
+            self.bare_key()
+        }
+    }
+
+    fn dotted_key(&mut self) -> Result<Vec<String>> {
+        let mut segs = Vec::new();
+        loop {
+            self.skip_inline_ws();
+            segs.push(self.key()?);
+            self.skip_inline_ws();
+            if self.peek() == Some(b'.') {
+                self.pos += 1;
+            } else {
+                return Ok(segs);
+            }
+        }
+    }
+
+    fn basic_string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None | Some(b'\n') => {
+                    return Err(self.err("unterminated string"))
+                }
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let mut cp = 0u32;
+                            for _ in 0..4 {
+                                let c = self
+                                    .peek()
+                                    .ok_or_else(|| self.err("truncated \\u"))?;
+                                let d = (c as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| self.err("bad hex digit"))?;
+                                cp = cp * 16 + d;
+                                self.pos += 1;
+                            }
+                            self.pos -= 1; // re-consumed below
+                            s.push(
+                                char::from_u32(cp).ok_or_else(|| {
+                                    self.err("bad unicode escape")
+                                })?,
+                            );
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(b) if b < 0x80 => {
+                    s.push(b as char);
+                    self.pos += 1;
+                }
+                Some(b) => {
+                    // Multi-byte UTF-8: copy the encoded char through.
+                    let len = if b >= 0xF0 {
+                        4
+                    } else if b >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let chunk = self
+                        .bytes
+                        .get(self.pos..self.pos + len)
+                        .ok_or_else(|| self.err("truncated utf-8"))?;
+                    s.push_str(
+                        std::str::from_utf8(chunk)
+                            .map_err(|_| self.err("invalid utf-8"))?,
+                    );
+                    self.pos += len;
+                }
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek() {
+            Some(b'"') => Ok(Value::Str(self.basic_string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.inline_table(),
+            Some(b't') | Some(b'f') => {
+                let k = self.bare_key()?;
+                match k.as_str() {
+                    "true" => Ok(Value::Bool(true)),
+                    "false" => Ok(Value::Bool(false)),
+                    other => Err(self.err(&format!("bad value '{other}'"))),
+                }
+            }
+            Some(c) if c == b'-' || c == b'+' || c.is_ascii_digit() => {
+                self.number()
+            }
+            _ => Err(self.err("expected a value")),
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut a = Vec::new();
+        loop {
+            self.skip_trivia();
+            match self.peek() {
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(a));
+                }
+                None => return Err(self.err("unterminated array")),
+                _ => {}
+            }
+            a.push(self.value()?);
+            self.skip_trivia();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {}
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn inline_table(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_inline_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(m));
+        }
+        loop {
+            self.skip_inline_ws();
+            let k = self.key()?;
+            self.skip_inline_ws();
+            self.expect(b'=')?;
+            self.skip_inline_ws();
+            let v = self.value()?;
+            if m.insert(k.clone(), v).is_some() {
+                return Err(self.err(&format!("duplicate key '{k}'")));
+            }
+            self.skip_inline_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(m));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        while matches!(self.peek(),
+            Some(c) if c.is_ascii_digit()
+                || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E' | b'_'))
+        {
+            self.pos += 1;
+        }
+        let raw: String =
+            String::from_utf8_lossy(&self.bytes[start..self.pos])
+                .replace('_', "");
+        raw.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| self.err(&format!("bad number '{raw}'")))
+    }
+}
+
+// ---- writer ---------------------------------------------------------------
+
+/// Serialize a JSON value tree (the shape `ScenarioSpec::to_json`
+/// produces) as TOML. Sub-objects become `[dotted.sections]`; arrays may
+/// contain scalars or nested scalar arrays, not objects.
+pub fn to_toml(root: &Value) -> Result<String> {
+    let Value::Obj(m) = root else {
+        return Err(Error::Config(
+            "toml export requires a top-level object".into(),
+        ));
+    };
+    let mut out = String::new();
+    write_table(&mut out, m, &mut Vec::new())?;
+    Ok(out)
+}
+
+fn write_table(
+    out: &mut String,
+    m: &BTreeMap<String, Value>,
+    path: &mut Vec<String>,
+) -> Result<()> {
+    // Scalar/array keys first — anything after a [section] header would
+    // otherwise be parsed as belonging to that section.
+    for (k, v) in m {
+        if !matches!(v, Value::Obj(_)) {
+            out.push_str(&toml_key(k));
+            out.push_str(" = ");
+            write_scalar(out, v)?;
+            out.push('\n');
+        }
+    }
+    for (k, v) in m {
+        if let Value::Obj(sub) = v {
+            path.push(k.clone());
+            out.push_str(&format!(
+                "\n[{}]\n",
+                path.iter()
+                    .map(|s| toml_key(s))
+                    .collect::<Vec<_>>()
+                    .join(".")
+            ));
+            write_table(out, sub, path)?;
+            path.pop();
+        }
+    }
+    Ok(())
+}
+
+fn toml_key(k: &str) -> String {
+    let bare = !k.is_empty()
+        && k.bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-');
+    if bare {
+        k.to_string()
+    } else {
+        Value::Str(k.to_string()).to_string_compact()
+    }
+}
+
+fn write_scalar(out: &mut String, v: &Value) -> Result<()> {
+    match v {
+        Value::Obj(_) => Err(Error::Config(
+            "toml export: objects inside arrays are not supported".into(),
+        )),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                write_scalar(out, x)?;
+            }
+            out.push(']');
+            Ok(())
+        }
+        Value::Null => Err(Error::Config(
+            "toml export: null has no TOML form".into(),
+        )),
+        scalar => {
+            out.push_str(&scalar.to_string_compact());
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_scalars() {
+        let v = parse_toml(
+            "name = \"fig8a\"\ncount = 3\nratio = 2.5\nflag = true\n\
+             [study]\nkind = \"grid\"\nmin_mp = 1\n\
+             [study.sub]\nx = -4\n",
+        )
+        .unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("fig8a"));
+        assert_eq!(v.get("count").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("ratio").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("flag"), Some(&Value::Bool(true)));
+        let study = v.get("study").unwrap();
+        assert_eq!(study.get("kind").unwrap().as_str(), Some("grid"));
+        assert_eq!(study.get("sub").unwrap().get("x").unwrap().as_f64(), Some(-4.0));
+    }
+
+    #[test]
+    fn parses_arrays_and_inline_tables() {
+        let v = parse_toml(
+            "xs = [250, 500, 2039]\nnames = [\"a\", \"b\",]\n\
+             multi = [\n  1, # comment\n  2,\n]\n\
+             inline = { a = 1, b = \"x\" }\nnested = [[1, 2], [3]]\n",
+        )
+        .unwrap();
+        assert_eq!(
+            v.get("xs").unwrap().as_arr().unwrap()[2].as_f64(),
+            Some(2039.0)
+        );
+        assert_eq!(v.get("names").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("multi").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("inline").unwrap().get("b").unwrap().as_str(), Some("x"));
+        assert_eq!(
+            v.get("nested").unwrap().as_arr().unwrap()[0]
+                .as_arr()
+                .unwrap()
+                .len(),
+            2
+        );
+    }
+
+    #[test]
+    fn parses_numbers_with_separators_and_exponents() {
+        let v = parse_toml("a = 65_536\nb = 1.2e12\nc = -3e-2\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(65536.0));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(1.2e12));
+        assert_eq!(v.get("c").unwrap().as_f64(), Some(-0.03));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let v = parse_toml(
+            "# leading comment\n\na = 1 # trailing\n\n# only comment\nb = 2\n",
+        )
+        .unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn rejects_unsupported_and_malformed() {
+        assert!(parse_toml("[[points]]\nx = 1\n").is_err());
+        assert!(parse_toml("a = \n").is_err());
+        assert!(parse_toml("a = \"unterminated\n").is_err());
+        assert!(parse_toml("a = [1, 2\n").is_err());
+        assert!(parse_toml("a = 1\na = 2\n").is_err());
+        assert!(parse_toml("a = tru\n").is_err());
+        assert!(parse_toml("[x]\nk = 1\n[x.k.y]\nz = 2\n").is_err());
+        // One statement per line: a second key=value on the same line is
+        // invalid TOML and must not be silently accepted.
+        assert!(parse_toml("min_mp = 2 max_mp = 8\n").is_err());
+        assert!(parse_toml("[study] kind = \"grid\"\n").is_err());
+        // Redefining a table header merges silently in lenient parsers;
+        // here it is an error.
+        assert!(parse_toml("[study]\na = 1\n[study]\nb = 2\n").is_err());
+    }
+
+    #[test]
+    fn error_reports_line_number() {
+        let e = parse_toml("a = 1\nb = ?\n").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn document_autodetects_json() {
+        let v = parse_document("  {\"a\": [1, 2]}").unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+        let v = parse_document("a = 1\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn writer_roundtrips() {
+        let src = "flag = false\nname = \"x, with commas\"\nxs = [1, 2.5, \"s\"]\n\
+                   [outer]\nk = 3\n[outer.inner]\nv = [true]\n";
+        let v = parse_toml(src).unwrap();
+        let emitted = to_toml(&v).unwrap();
+        assert_eq!(parse_toml(&emitted).unwrap(), v);
+    }
+
+    #[test]
+    fn writer_rejects_objects_in_arrays() {
+        let v = parse_toml("xs = [{ a = 1 }]\n").unwrap();
+        assert!(to_toml(&v).is_err());
+    }
+}

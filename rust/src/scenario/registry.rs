@@ -1,0 +1,109 @@
+//! Built-in scenarios: every figure of the paper's evaluation plus the
+//! case studies, embedded from the checked-in `scenarios/*.toml` files.
+//!
+//! The registry parses the *same bytes* that live in the repository
+//! (`include_str!`), so a file edit is a registry edit — the two cannot
+//! drift. `tests/scenario_roundtrip.rs` further pins the registry to the
+//! legacy hand-written drivers in [`crate::coordinator::sweep`] by
+//! comparing full [`crate::report::FigureData`] output cell-for-cell.
+
+use crate::error::{Error, Result};
+
+use super::spec::ScenarioSpec;
+
+/// `(name, embedded TOML)` for every built-in scenario, in presentation
+/// order (quickstart first, then paper order, then case studies).
+const BUILTINS: &[(&str, &str)] = &[
+    ("quickstart", include_str!("../../../scenarios/quickstart.toml")),
+    ("fig6", include_str!("../../../scenarios/fig6.toml")),
+    ("fig8a", include_str!("../../../scenarios/fig8a.toml")),
+    ("fig8b", include_str!("../../../scenarios/fig8b.toml")),
+    ("fig9", include_str!("../../../scenarios/fig9.toml")),
+    ("fig10", include_str!("../../../scenarios/fig10.toml")),
+    ("fig11", include_str!("../../../scenarios/fig11.toml")),
+    ("fig12", include_str!("../../../scenarios/fig12.toml")),
+    ("fig13a", include_str!("../../../scenarios/fig13a.toml")),
+    ("fig13b", include_str!("../../../scenarios/fig13b.toml")),
+    ("fig15", include_str!("../../../scenarios/fig15.toml")),
+    (
+        "ablation-collectives",
+        include_str!("../../../scenarios/ablation_collectives.toml"),
+    ),
+    (
+        "ablation-zero",
+        include_str!("../../../scenarios/ablation_zero.toml"),
+    ),
+    (
+        "memory-expansion",
+        include_str!("../../../scenarios/memory_expansion.toml"),
+    ),
+    (
+        "cluster-compare",
+        include_str!("../../../scenarios/cluster_compare.toml"),
+    ),
+    (
+        "gemm-roofline",
+        include_str!("../../../scenarios/gemm_roofline.toml"),
+    ),
+];
+
+/// Names of all built-in scenarios, in presentation order.
+pub fn names() -> Vec<&'static str> {
+    BUILTINS.iter().map(|(n, _)| *n).collect()
+}
+
+/// The embedded TOML source of a built-in scenario.
+pub fn source(name: &str) -> Option<&'static str> {
+    BUILTINS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, text)| *text)
+}
+
+/// Parse a built-in scenario by name.
+pub fn get(name: &str) -> Result<ScenarioSpec> {
+    let text = source(name).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown scenario '{name}'; built-ins: {}",
+            names().join(", ")
+        ))
+    })?;
+    ScenarioSpec::parse_str(text)
+        .map_err(|e| Error::Config(format!("builtin scenario '{name}': {e}")))
+}
+
+/// Parse every built-in scenario.
+pub fn all() -> Result<Vec<ScenarioSpec>> {
+    names().iter().map(|n| get(n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_parses_and_is_self_named() {
+        for name in names() {
+            let spec = get(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec.name, name, "spec name must match registry key");
+        }
+        assert_eq!(all().unwrap().len(), names().len());
+    }
+
+    #[test]
+    fn unknown_name_lists_builtins() {
+        let e = get("fig99").unwrap_err();
+        assert!(e.to_string().contains("fig8a"), "{e}");
+    }
+
+    #[test]
+    fn figure_ids_cover_the_paper() {
+        for id in [
+            "fig6", "fig8a", "fig8b", "fig9", "fig10", "fig11", "fig12",
+            "fig13a", "fig13b", "fig15", "ablation-collectives",
+            "ablation-zero",
+        ] {
+            assert!(names().contains(&id), "missing builtin {id}");
+        }
+    }
+}

@@ -1,0 +1,985 @@
+//! Lowering of a [`ScenarioSpec`] onto the batched evaluation hot path.
+//!
+//! Every study kind follows the same shape as the hand-tuned figure
+//! drivers in [`crate::coordinator::sweep`]: enumerate the full
+//! (workload, cluster, options) job list up front, resolve it concurrently
+//! through [`Coordinator::derive_batch`], make **exactly one**
+//! [`Coordinator::evaluate_inputs`] call (normalization baselines ride in
+//! the same batch), then render a [`FigureData`]. The built-in registry
+//! specs are verified cell-for-cell against the legacy drivers by
+//! `tests/scenario_roundtrip.rs` — the lowering here must stay
+//! numerically identical to them.
+
+use crate::analytical::TrainingBreakdown;
+use crate::config::ClusterConfig;
+use crate::coordinator::sweep::{dlrm_nodes_per_instance, SweepSpec};
+use crate::coordinator::{Coordinator, GridSweep};
+use crate::error::{Error, Result};
+use crate::model::inputs::EvalOptions;
+use crate::network::CollectiveImpl;
+use crate::parallel::{
+    footprint_per_node, model_state_bytes, Strategy, ZeroStage,
+};
+use crate::report::FigureData;
+use crate::util::units::gb;
+use crate::workload::{CommScope, Workload};
+
+use super::spec::{
+    collective_name, Content, Normalize, ScenarioSpec, Study, WorkloadSpec,
+};
+
+/// Execute a scenario on a coordinator, producing the result grid.
+pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
+    let mut fig = match &spec.study {
+        Study::Footprint { strategies } => run_footprint(spec, strategies)?,
+        Study::Grid {
+            strategies,
+            em_bandwidths_gbps,
+            em_capacities_gb,
+            collectives,
+            zero_stages,
+            baseline,
+        } => run_grid(
+            spec,
+            coord,
+            &GridAxes {
+                strategies: strategies.resolve(spec.cluster.n_nodes),
+                em_bandwidths_gbps,
+                em_capacities_gb,
+                collectives,
+                zero_stages,
+                baseline: *baseline,
+            },
+        )?,
+        Study::ComputeScaling {
+            strategy,
+            scales,
+            em_bandwidths_gbps,
+        } => run_compute_scaling(spec, coord, *strategy, scales, em_bandwidths_gbps)?,
+        Study::NetworkScaling {
+            strategies,
+            intra_factors,
+            inter_factors,
+        } => run_network_scaling(spec, coord, strategies, intra_factors, inter_factors)?,
+        Study::NetworkRebalance { strategies, ratios } => {
+            run_network_rebalance(spec, coord, strategies, ratios)?
+        }
+        Study::ClusterSize {
+            sizes,
+            em_bandwidth_gbps,
+        } => run_cluster_size(spec, coord, sizes, *em_bandwidth_gbps)?,
+        Study::Packing {
+            instances,
+            packings,
+            em_bandwidths_gbps,
+        } => run_packing(spec, coord, *instances, packings, em_bandwidths_gbps)?,
+        Study::ClusterCompare {
+            clusters,
+            dlrm,
+            instances,
+            partition,
+        } => run_cluster_compare(spec, coord, clusters, dlrm, *instances, *partition)?,
+    };
+    if let Some(cols) = &spec.output.columns {
+        if cols.len() != fig.columns.len() {
+            return Err(Error::Config(format!(
+                "scenario '{}': columns override has {} entries, grid has {}",
+                spec.name,
+                cols.len(),
+                fig.columns.len()
+            )));
+        }
+        fig.columns = cols.clone();
+    }
+    Ok(fig)
+}
+
+// ---- shared helpers -------------------------------------------------------
+
+fn eval_opts(spec: &ScenarioSpec) -> EvalOptions {
+    let o = &spec.options;
+    EvalOptions {
+        zero_stage: o.zero_stage,
+        ignore_capacity: o.infinite_memory,
+        em_frac_override: o.em_frac,
+        footprint_override: None,
+        overlap_wg: o.overlap_wg,
+        collective_impl: o.collective,
+    }
+}
+
+fn build_for(w: &WorkloadSpec, s: &Strategy) -> Result<Workload> {
+    match w {
+        WorkloadSpec::Transformer(t) => t.build(s),
+        WorkloadSpec::Gemm(g) => g.build(s),
+        WorkloadSpec::Dlrm(_) => Err(Error::Config(
+            "scenario: a strategy sweep needs a transformer or gemm \
+             workload; use cluster-size/packing/cluster-compare studies \
+             for DLRM"
+                .into(),
+        )),
+    }
+}
+
+fn workload_total_params(w: &WorkloadSpec) -> f64 {
+    match w {
+        WorkloadSpec::Transformer(t) => t.total_params(),
+        WorkloadSpec::Dlrm(d) => d.total_params(),
+        WorkloadSpec::Gemm(g) => g.total_params(),
+    }
+}
+
+fn require_dlrm(spec: &ScenarioSpec) -> Result<&crate::workload::dlrm::Dlrm> {
+    match &spec.workload {
+        WorkloadSpec::Dlrm(d) => Ok(d),
+        _ => Err(Error::Config(format!(
+            "scenario '{}': the {} study requires a dlrm workload",
+            spec.name,
+            spec.study.kind()
+        ))),
+    }
+}
+
+fn figure(spec: &ScenarioSpec, default_row_label: &str) -> FigureData {
+    FigureData {
+        id: spec.name.clone(),
+        title: spec.title.clone(),
+        row_label: spec
+            .output
+            .row_label
+            .clone()
+            .unwrap_or_else(|| default_row_label.to_string()),
+        columns: Vec::new(),
+        rows: Vec::new(),
+        notes: spec.output.notes.clone(),
+    }
+}
+
+/// The six breakdown column headers + total (paper Fig. 8a order).
+const BREAKDOWN_COLS: [&str; 7] = [
+    "FP_Compute",
+    "FP_Exp_Comm",
+    "IG_Compute",
+    "IG_Exp_Comm",
+    "WG_Compute",
+    "WG_Exp_Comm",
+    "Total_s",
+];
+
+/// Render breakdown rows into `fig`: the six phase columns + `Total_s`,
+/// an optional normalization column (named `first_col` for
+/// [`Normalize::First`]), and an optional `Footprint_GB` column fed from
+/// per-row footprints in bytes. Shared by the grid and cluster-size
+/// studies — their output must never drift apart.
+fn render_breakdown(
+    fig: &mut FigureData,
+    evals: &[TrainingBreakdown],
+    labels: Vec<String>,
+    footprints: Option<Vec<f64>>,
+    normalize: Normalize,
+    first_col: &str,
+) {
+    fig.columns = BREAKDOWN_COLS.iter().map(|s| s.to_string()).collect();
+    let norm = match normalize {
+        Normalize::None => None,
+        Normalize::Best => {
+            fig.columns.push("Norm_to_best".into());
+            Some(
+                evals
+                    .iter()
+                    .map(|b| b.total())
+                    .fold(f64::INFINITY, f64::min),
+            )
+        }
+        Normalize::First => {
+            fig.columns.push(first_col.to_string());
+            evals.first().map(|b| b.total())
+        }
+    };
+    if footprints.is_some() {
+        fig.columns.push("Footprint_GB".into());
+    }
+    for (i, (label, b)) in labels.into_iter().zip(evals).enumerate() {
+        let mut vals = b.as_array().to_vec();
+        vals.push(b.total());
+        if let Some(base) = norm {
+            vals.push(b.total() / base);
+        }
+        if let Some(fps) = &footprints {
+            vals.push(fps[i] / gb(1.0));
+        }
+        fig.rows.push((label, vals));
+    }
+}
+
+/// Scale DP-scope WG collective payloads by the stage's communication
+/// multiplier (ZeRO-3's 1.5x parameter all-gather overhead).
+fn apply_zero_comm(mut w: Workload, stage: ZeroStage) -> Workload {
+    for l in &mut w.layers {
+        if l.comm_wg.scope == CommScope::Dp {
+            l.comm_wg.bytes *= stage.comm_multiplier();
+        }
+    }
+    w
+}
+
+// ---- footprint ------------------------------------------------------------
+
+fn run_footprint(
+    spec: &ScenarioSpec,
+    strategies: &super::spec::StrategyAxis,
+) -> Result<FigureData> {
+    let psi = workload_total_params(&spec.workload);
+    let mut fig = figure(spec, "(MP, DP)");
+    fig.columns = ZeroStage::ALL
+        .iter()
+        .map(|s| s.label().to_string())
+        .collect();
+    for s in strategies.resolve(spec.cluster.n_nodes) {
+        let vals: Vec<f64> = ZeroStage::ALL
+            .iter()
+            .map(|&st| model_state_bytes(psi, s.mp, s.dp, st) / gb(1.0))
+            .collect();
+        fig.rows.push((s.label(), vals));
+    }
+    Ok(fig)
+}
+
+// ---- grid -----------------------------------------------------------------
+
+struct GridAxes<'a> {
+    strategies: Vec<Strategy>,
+    em_bandwidths_gbps: &'a [f64],
+    em_capacities_gb: &'a [f64],
+    collectives: &'a [CollectiveImpl],
+    zero_stages: &'a [ZeroStage],
+    baseline: Option<Strategy>,
+}
+
+/// One evaluated grid point with everything rendering needs.
+struct GridRow {
+    strategy: Strategy,
+    stage: ZeroStage,
+    /// Expanded-memory bandwidth of the point, GB/s.
+    em_bw_gbps: Option<f64>,
+    /// Expanded-memory capacity of the point, GB.
+    em_cap_gb: Option<f64>,
+    collective: CollectiveImpl,
+    /// Per-node footprint of the point's (workload, stage), bytes.
+    footprint: f64,
+}
+
+fn run_grid(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    axes: &GridAxes<'_>,
+) -> Result<FigureData> {
+    let opts0 = eval_opts(spec);
+    let cluster = &spec.cluster;
+    let explicit_zero = !axes.zero_stages.is_empty();
+    let explicit_bw = !axes.em_bandwidths_gbps.is_empty();
+    let explicit_cap = !axes.em_capacities_gb.is_empty();
+    let explicit_coll = !axes.collectives.is_empty();
+    let zaxis: Vec<ZeroStage> = if explicit_zero {
+        axes.zero_stages.to_vec()
+    } else {
+        vec![opts0.zero_stage]
+    };
+    let coll_axis: Vec<CollectiveImpl> = if explicit_coll {
+        axes.collectives.to_vec()
+    } else {
+        vec![opts0.collective_impl]
+    };
+    let em_bws: Vec<f64> = axes.em_bandwidths_gbps.iter().map(|&b| gb(b)).collect();
+    let em_caps: Vec<f64> = axes.em_capacities_gb.iter().map(|&c| gb(c)).collect();
+
+    // Resolve the content and validate its shape against the axes BEFORE
+    // deriving/evaluating anything — a malformed spec must not pay for
+    // the full sweep first.
+    let content = match spec.output.content {
+        Content::Auto if axes.baseline.is_some() => Content::Speedup,
+        Content::Auto => Content::Breakdown,
+        c => c,
+    };
+    match content {
+        Content::Speedup => {
+            if axes.baseline.is_none() {
+                return Err(Error::Config(format!(
+                    "scenario '{}': speedup content requires study.baseline",
+                    spec.name
+                )));
+            }
+            if !explicit_bw || explicit_cap || explicit_coll || explicit_zero
+            {
+                return Err(Error::Config(format!(
+                    "scenario '{}': speedup pivots on em_bandwidths_gbps \
+                     and supports no other grid axis",
+                    spec.name
+                )));
+            }
+        }
+        Content::CollectiveContrast => {
+            if !explicit_coll
+                || coll_axis.len() != 2
+                || explicit_bw
+                || explicit_cap
+                || explicit_zero
+            {
+                return Err(Error::Config(format!(
+                    "scenario '{}': collective-contrast requires exactly \
+                     two collectives and no other grid axis",
+                    spec.name
+                )));
+            }
+        }
+        Content::ZeroTable => {
+            if !explicit_zero || explicit_bw || explicit_cap || explicit_coll
+            {
+                return Err(Error::Config(format!(
+                    "scenario '{}': zero-table requires a zero_stages axis \
+                     and no other grid axis",
+                    spec.name
+                )));
+            }
+        }
+        _ => {}
+    }
+
+    let mut specs: Vec<SweepSpec> = Vec::new();
+    let mut points: Vec<GridRow> = Vec::new();
+    let base_offset = match axes.baseline {
+        Some(b) => {
+            specs.push((
+                build_for(&spec.workload, &b)?,
+                cluster.clone(),
+                opts0,
+            ));
+            1
+        }
+        None => 0,
+    };
+    for s in &axes.strategies {
+        let w0 = build_for(&spec.workload, s)?;
+        for &stage in &zaxis {
+            let w = if explicit_zero {
+                apply_zero_comm(w0.clone(), stage)
+            } else {
+                w0.clone()
+            };
+            let fp = footprint_per_node(&w, s, stage).total();
+            let o = EvalOptions {
+                zero_stage: stage,
+                ..opts0
+            };
+            let mut g = GridSweep::new(vec![*s]);
+            if explicit_bw {
+                g = g.em_bandwidths(&em_bws);
+            }
+            if explicit_cap {
+                g = g.em_capacities(&em_caps);
+            }
+            g = g.collective_impls(&coll_axis);
+            for p in g.points() {
+                points.push(GridRow {
+                    strategy: *s,
+                    stage,
+                    em_bw_gbps: p.em_bandwidth.map(|b| b / 1e9),
+                    em_cap_gb: p.em_capacity.map(|c| c / 1e9),
+                    collective: p.collective_impl,
+                    footprint: fp,
+                });
+            }
+            specs.extend(g.specs(cluster, &o, |_| Ok(w.clone()))?);
+        }
+    }
+
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+    let grid_evals = &evals[base_offset..];
+
+    let label_of = |p: &GridRow| {
+        let mut l = p.strategy.label();
+        if explicit_zero {
+            l = format!("{l} {}", p.stage.label());
+        }
+        if let Some(bw) = p.em_bw_gbps {
+            if explicit_bw {
+                l = format!("{l} EM@{bw:.0}GB/s");
+            }
+        }
+        if let Some(cap) = p.em_cap_gb {
+            if explicit_cap {
+                l = format!("{l} cap{cap:.0}GB");
+            }
+        }
+        if explicit_coll {
+            l = format!("{l} {}", collective_name(p.collective));
+        }
+        l
+    };
+
+    let mut fig = figure(spec, "(MP, DP)");
+    match content {
+        Content::Breakdown => {
+            let labels = points.iter().map(&label_of).collect();
+            let footprints = spec
+                .output
+                .footprint
+                .then(|| points.iter().map(|p| p.footprint).collect());
+            render_breakdown(
+                &mut fig,
+                grid_evals,
+                labels,
+                footprints,
+                spec.output.normalize,
+                "Norm_to_first",
+            );
+        }
+        Content::Share => {
+            fig.columns =
+                vec!["Compute_frac".into(), "Exp_Comm_frac".into()];
+            for (p, b) in points.iter().zip(grid_evals) {
+                let compute = b.compute();
+                let comm = b.exposed_comm();
+                let total = compute + comm;
+                fig.rows.push((
+                    label_of(p),
+                    vec![compute / total, comm / total],
+                ));
+            }
+        }
+        Content::Speedup => {
+            let baseline = evals[0].total();
+            let width = axes.em_bandwidths_gbps.len();
+            fig.columns = axes
+                .em_bandwidths_gbps
+                .iter()
+                .map(|b| format!("{b:.0}GB/s"))
+                .collect();
+            for (i, s) in axes.strategies.iter().enumerate() {
+                let vals: Vec<f64> = (0..width)
+                    .map(|j| baseline / grid_evals[i * width + j].total())
+                    .collect();
+                fig.rows.push((s.label(), vals));
+            }
+        }
+        Content::CollectiveContrast => {
+            let short = |c: CollectiveImpl| match c {
+                CollectiveImpl::LogicalRing => "ring",
+                CollectiveImpl::Hierarchical => "hier",
+            };
+            let (a, b) = (short(coll_axis[0]), short(coll_axis[1]));
+            fig.columns = vec![
+                format!("{a}_total_s"),
+                format!("{b}_total_s"),
+                format!("{a}/{b}"),
+            ];
+            for (i, s) in axes.strategies.iter().enumerate() {
+                let ta = grid_evals[i * 2].total();
+                let tb = grid_evals[i * 2 + 1].total();
+                fig.rows.push((s.label(), vec![ta, tb, ta / tb]));
+            }
+        }
+        Content::ZeroTable => {
+            fig.columns = vec![
+                "Footprint_GB".into(),
+                "Total_s".into(),
+                "WG_Exp_Comm_s".into(),
+            ];
+            for (p, b) in points.iter().zip(grid_evals) {
+                fig.rows.push((
+                    format!("{} {}", p.strategy.label(), p.stage.label()),
+                    vec![p.footprint / gb(1.0), b.total(), b.wg_exposed_comm],
+                ));
+            }
+        }
+        Content::Auto => unreachable!("Auto resolved above"),
+    }
+    Ok(fig)
+}
+
+// ---- compute scaling (Fig. 10 shape) --------------------------------------
+
+fn run_compute_scaling(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    strategy: Strategy,
+    scales: &[f64],
+    em_bandwidths_gbps: &[f64],
+) -> Result<FigureData> {
+    let base_cluster = &spec.cluster;
+    let opts = eval_opts(spec);
+    let w = build_for(&spec.workload, &strategy)?;
+    let fp = footprint_per_node(&w, &strategy, opts.zero_stage).total();
+    let need = (fp - base_cluster.node.local.capacity).max(0.0);
+    let base_scale = scales.iter().position(|&x| x == 1.0).ok_or_else(|| {
+        Error::Config(format!(
+            "scenario '{}': compute-scaling scales must include 1.0",
+            spec.name
+        ))
+    })?;
+    if em_bandwidths_gbps.is_empty() {
+        return Err(Error::Config(format!(
+            "scenario '{}': compute-scaling requires em_bandwidths_gbps",
+            spec.name
+        )));
+    }
+
+    let mut specs: Vec<SweepSpec> =
+        Vec::with_capacity(scales.len() * em_bandwidths_gbps.len());
+    for &sc in scales {
+        for &bw in em_bandwidths_gbps {
+            let node = base_cluster
+                .node
+                .scale_compute(sc)
+                .with_expanded(need, gb(bw));
+            specs.push((w.clone(), base_cluster.with_node(node), opts));
+        }
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let width = em_bandwidths_gbps.len();
+    let baseline = evals[base_scale * width + (width - 1)].total();
+    let mut fig = figure(spec, "node compute");
+    fig.columns = em_bandwidths_gbps
+        .iter()
+        .map(|b| format!("EM@{b:.0}GB/s"))
+        .collect();
+    for (i, sc) in scales.iter().enumerate() {
+        fig.rows.push((
+            format!("compute x{sc}"),
+            (0..width)
+                .map(|j| evals[i * width + j].total() / baseline)
+                .collect(),
+        ));
+    }
+    Ok(fig)
+}
+
+// ---- network scaling (Fig. 11 shape) --------------------------------------
+
+fn run_network_scaling(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    strategies: &[Strategy],
+    intra_factors: &[f64],
+    inter_factors: &[f64],
+) -> Result<FigureData> {
+    let base_cluster = &spec.cluster;
+    let opts = eval_opts(spec);
+    let block = 1 + intra_factors.len() * inter_factors.len();
+    let mut specs: Vec<SweepSpec> =
+        Vec::with_capacity(strategies.len() * block);
+    for s in strategies {
+        let w = build_for(&spec.workload, s)?;
+        specs.push((w.clone(), base_cluster.clone(), opts));
+        for &fi in intra_factors {
+            for &fx in inter_factors {
+                specs.push((
+                    w.clone(),
+                    base_cluster.scale_network(fi, fx),
+                    opts,
+                ));
+            }
+        }
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let mut fig = figure(spec, "config / intra factor");
+    fig.columns = inter_factors
+        .iter()
+        .map(|f| format!("inter x{f}"))
+        .collect();
+    for (ci, s) in strategies.iter().enumerate() {
+        let base = evals[ci * block].total();
+        for (i, fi) in intra_factors.iter().enumerate() {
+            fig.rows.push((
+                format!("{} intra x{fi}", s.label()),
+                (0..inter_factors.len())
+                    .map(|j| {
+                        base / evals
+                            [ci * block + 1 + i * inter_factors.len() + j]
+                            .total()
+                    })
+                    .collect(),
+            ));
+        }
+    }
+    Ok(fig)
+}
+
+// ---- network rebalancing (Fig. 12 shape) ----------------------------------
+
+fn run_network_rebalance(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    strategies: &[Strategy],
+    ratios: &[f64],
+) -> Result<FigureData> {
+    let base_cluster = &spec.cluster;
+    let opts = eval_opts(spec);
+    let nc = strategies.len();
+    let mut specs: Vec<SweepSpec> =
+        Vec::with_capacity(nc * (1 + ratios.len()));
+    for s in strategies {
+        specs.push((
+            build_for(&spec.workload, s)?,
+            base_cluster.clone(),
+            opts,
+        ));
+    }
+    for &r in ratios {
+        let cluster = base_cluster.rebalance_network(r)?;
+        for s in strategies {
+            specs.push((
+                build_for(&spec.workload, s)?,
+                cluster.clone(),
+                opts,
+            ));
+        }
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let mut fig = figure(spec, "inter:intra ratio");
+    fig.columns = strategies.iter().map(|s| s.label()).collect();
+    for (ri, r) in ratios.iter().enumerate() {
+        let vals: Vec<f64> = (0..nc)
+            .map(|ci| evals[ci].total() / evals[nc + ri * nc + ci].total())
+            .collect();
+        fig.rows.push((format!("1:{r}"), vals));
+    }
+    Ok(fig)
+}
+
+// ---- DLRM cluster sizing (Fig. 13a shape) ---------------------------------
+
+fn run_cluster_size(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    sizes: &[usize],
+    em_bandwidth_gbps: Option<f64>,
+) -> Result<FigureData> {
+    let d = require_dlrm(spec)?;
+    if sizes.is_empty() {
+        return Err(Error::Config(format!(
+            "scenario '{}': cluster-size requires at least one size",
+            spec.name
+        )));
+    }
+    let base_opts = eval_opts(spec);
+    let mut footprints = Vec::with_capacity(sizes.len());
+    let mut specs: Vec<SweepSpec> = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let w = d.build(n)?;
+        let fp = d.footprint_per_node(n);
+        let opts = EvalOptions {
+            footprint_override: Some(fp),
+            ..base_opts
+        };
+        let mut cluster = spec.cluster.with_n_nodes(n);
+        let need = (fp - cluster.node.local.capacity).max(0.0);
+        if need > 0.0 {
+            let bw = em_bandwidth_gbps.ok_or_else(|| {
+                Error::Config(format!(
+                    "scenario '{}': the {}-node shard spills but no \
+                     em_bandwidth_gbps is set",
+                    spec.name, n
+                ))
+            })?;
+            cluster.node = cluster.node.with_expanded(need, gb(bw));
+        }
+        footprints.push(fp);
+        specs.push((w, cluster, opts));
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let mut fig = figure(spec, "cluster");
+    render_breakdown(
+        &mut fig,
+        &evals,
+        sizes.iter().map(|n| format!("{n} nodes")).collect(),
+        spec.output.footprint.then_some(footprints),
+        spec.output.normalize,
+        &format!("Norm_to_{}", sizes[0]),
+    );
+    Ok(fig)
+}
+
+// ---- DLRM packing (Fig. 13b shape) ----------------------------------------
+
+fn run_packing(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    instances: f64,
+    packings: &[usize],
+    em_bandwidths_gbps: &[f64],
+) -> Result<FigureData> {
+    let d = require_dlrm(spec)?;
+    let base_cluster = &spec.cluster;
+    let total_nodes = base_cluster.n_nodes;
+    let base_opts = eval_opts(spec);
+    let width = em_bandwidths_gbps.len();
+    if width == 0 || packings.is_empty() {
+        return Err(Error::Config(format!(
+            "scenario '{}': packing requires packings and \
+             em_bandwidths_gbps",
+            spec.name
+        )));
+    }
+
+    // Job 0: sequential waves of whole-partition instances, local memory.
+    let mut specs: Vec<SweepSpec> =
+        Vec::with_capacity(1 + packings.len() * width);
+    specs.push((
+        d.build(total_nodes)?,
+        base_cluster.clone(),
+        EvalOptions {
+            footprint_override: Some(d.footprint_per_node(total_nodes)),
+            ..base_opts
+        },
+    ));
+    for &n in packings {
+        let w = d.build(n)?;
+        let fp = d.footprint_per_node(n);
+        let opts = EvalOptions {
+            footprint_override: Some(fp),
+            ..base_opts
+        };
+        for &bw in em_bandwidths_gbps {
+            let mut cluster = base_cluster.with_n_nodes(n);
+            let need = (fp - cluster.node.local.capacity).max(0.0);
+            cluster.node = cluster.node.with_expanded(need, gb(bw));
+            specs.push((w.clone(), cluster, opts));
+        }
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let base = evals[0].total() * instances;
+    let mut fig = figure(spec, "packing");
+    fig.columns = em_bandwidths_gbps
+        .iter()
+        .map(|b| format!("{b:.0}GB/s"))
+        .collect();
+    for (pi, &n) in packings.iter().enumerate() {
+        let waves =
+            (instances * n as f64 / total_nodes as f64).max(1.0).ceil();
+        let vals: Vec<f64> = (0..width)
+            .map(|j| base / (evals[1 + pi * width + j].total() * waves))
+            .collect();
+        fig.rows.push((format!("{n} nodes/instance"), vals));
+    }
+    Ok(fig)
+}
+
+// ---- cluster comparison (Fig. 15 shape) -----------------------------------
+
+fn run_cluster_compare(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    cluster_names: &[String],
+    d: &crate::workload::dlrm::Dlrm,
+    instances: f64,
+    partition: usize,
+) -> Result<FigureData> {
+    let t = match &spec.workload {
+        WorkloadSpec::Transformer(t) => t,
+        _ => {
+            return Err(Error::Config(format!(
+                "scenario '{}': cluster-compare requires a transformer \
+                 workload (the DLRM rides in [study])",
+                spec.name
+            )))
+        }
+    };
+    let clusters: Vec<ClusterConfig> = cluster_names
+        .iter()
+        .map(|n| {
+            crate::config::presets::by_name(n).ok_or_else(|| {
+                Error::Config(format!(
+                    "scenario '{}': unknown cluster preset '{n}'",
+                    spec.name
+                ))
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    struct Plan {
+        dlrm_idx: usize,
+        waves: f64,
+        tf: std::ops::Range<usize>,
+    }
+    let mut specs: Vec<SweepSpec> = Vec::new();
+    let mut plans = Vec::with_capacity(clusters.len());
+    for cluster in &clusters {
+        let pool = cluster.n_nodes.min(partition);
+        let n_i = dlrm_nodes_per_instance(cluster, d).min(pool);
+        let waves = (instances * n_i as f64 / pool as f64).max(1.0).ceil();
+        let sub = cluster.with_n_nodes(n_i);
+        let w = d.build(n_i)?;
+        let opts = EvalOptions {
+            footprint_override: Some(d.footprint_per_node(n_i)),
+            ..eval_opts(spec)
+        };
+        let dlrm_idx = specs.len();
+        specs.push((w, sub, opts));
+
+        let topts = eval_opts(spec);
+        let tf_start = specs.len();
+        let max_mp = 128.min(cluster.n_nodes);
+        for s in Strategy::sweep_bounded(cluster.n_nodes, 1, max_mp) {
+            let w = t.build(&s)?;
+            let fp =
+                footprint_per_node(&w, &s, topts.zero_stage).total();
+            if fp > cluster.node.total_capacity() {
+                continue;
+            }
+            specs.push((w, cluster.clone(), topts));
+        }
+        plans.push(Plan {
+            dlrm_idx,
+            waves,
+            tf: tf_start..specs.len(),
+        });
+    }
+
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let dlrm_times: Vec<f64> = plans
+        .iter()
+        .map(|p| evals[p.dlrm_idx].total() * p.waves)
+        .collect();
+    let tf_times: Vec<f64> = plans
+        .iter()
+        .map(|p| {
+            if p.tf.is_empty() {
+                f64::NAN
+            } else {
+                evals[p.tf.clone()]
+                    .iter()
+                    .map(|b| b.total())
+                    .fold(f64::INFINITY, f64::min)
+            }
+        })
+        .collect();
+
+    let mut fig = figure(spec, "cluster");
+    fig.columns = vec![format!("DLRM_x{instances}"), t.name.clone()];
+    for (i, c) in clusters.iter().enumerate() {
+        fig.rows.push((
+            c.name.clone(),
+            vec![
+                dlrm_times[0] / dlrm_times[i],
+                tf_times[0] / tf_times[i],
+            ],
+        ));
+    }
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::ScenarioSpec;
+
+    fn run_str(doc: &str) -> Result<FigureData> {
+        let spec = ScenarioSpec::parse_str(doc)?;
+        run(&spec, &Coordinator::native())
+    }
+
+    #[test]
+    fn small_grid_breakdown_runs() {
+        let f = run_str(
+            "name = \"t\"\n\
+             [workload]\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"grid\"\nmin_mp = 1\nmax_mp = 8\n\
+             [options]\ninfinite_memory = true\n\
+             [output]\nnormalize = \"best\"\nfootprint = true\n",
+        )
+        .unwrap();
+        assert_eq!(f.rows.len(), 4); // MP8, MP4, MP2, MP1 on 64 nodes
+        assert_eq!(f.columns.len(), 7 + 2);
+        let best = f
+            .rows
+            .iter()
+            .map(|(_, v)| v[7])
+            .fold(f64::INFINITY, f64::min);
+        assert!((best - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gemm_grid_runs() {
+        let f = run_str(
+            "name = \"g\"\n\
+             [workload]\nkind = \"gemm\"\nm = 65536\nk = 8192\nn = 8192\n\
+             [study]\nkind = \"grid\"\n\
+             strategies = [\"MP1_DP1\", \"MP1_DP8\", \"MP1_DP64\"]\n",
+        )
+        .unwrap();
+        assert_eq!(f.rows.len(), 3);
+        // More DP = less per-node work = faster.
+        assert!(f.rows[0].1[6] > f.rows[2].1[6]);
+    }
+
+    #[test]
+    fn speedup_without_baseline_errors() {
+        let e = run_str(
+            "name = \"t\"\n[study]\nkind = \"grid\"\n\
+             strategies = [\"MP8_DP128\"]\n\
+             em_bandwidths_gbps = [500]\n\
+             [output]\ncontent = \"speedup\"\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("baseline"), "{e}");
+    }
+
+    #[test]
+    fn cluster_size_requires_dlrm() {
+        let e = run_str(
+            "name = \"t\"\n[study]\nkind = \"cluster-size\"\n\
+             sizes = [64, 32]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("dlrm"), "{e}");
+    }
+
+    #[test]
+    fn columns_override_must_match_width() {
+        let e = run_str(
+            "name = \"t\"\n\
+             [workload]\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"grid\"\nmax_mp = 2\n\
+             [output]\ncolumns = [\"just-one\"]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("columns"), "{e}");
+    }
+
+    #[test]
+    fn compute_scaling_needs_unit_scale() {
+        let e = run_str(
+            "name = \"t\"\n[study]\nkind = \"compute-scaling\"\n\
+             strategy = \"MP8_DP128\"\nscales = [0.5, 2.0]\n\
+             em_bandwidths_gbps = [2039]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("1.0"), "{e}");
+    }
+
+    #[test]
+    fn em_capacity_without_bandwidth_is_an_error() {
+        let e = run_str(
+            "name = \"t\"\n[study]\nkind = \"grid\"\n\
+             strategies = [\"MP8_DP128\"]\nem_capacities_gb = [100]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("bandwidth"), "{e}");
+    }
+}

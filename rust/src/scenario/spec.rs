@@ -1,0 +1,1551 @@
+//! The declarative scenario model: everything a cluster-design study needs
+//! — workload, cluster, sweep axes, evaluation options, and presentation —
+//! as plain data with a strict JSON mapping.
+//!
+//! A [`ScenarioSpec`] is parsed from TOML/JSON (see [`super::parse`]),
+//! resolves presets eagerly (so equality and serialization always operate
+//! on fully-resolved values), and is lowered onto the batched evaluation
+//! hot path by [`super::run()`]. Unknown keys are errors: a typo in a
+//! scenario file fails loudly instead of silently reverting to a default.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::{presets, serde_io, ClusterConfig};
+use crate::coordinator::Coordinator;
+use crate::error::{Error, Result};
+use crate::network::CollectiveImpl;
+use crate::parallel::{Strategy, ZeroStage};
+use crate::util::json::Value;
+use crate::workload::dlrm::Dlrm;
+use crate::workload::gemm::DenseGemm;
+use crate::workload::transformer::Transformer;
+
+/// A complete declarative scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Identifier; becomes the output figure's `id`.
+    pub name: String,
+    /// Human title; becomes the output figure's `title`.
+    pub title: String,
+    /// The workload under study.
+    pub workload: WorkloadSpec,
+    /// The (fully resolved) base cluster.
+    pub cluster: ClusterConfig,
+    /// The study shape: which axes are swept and how.
+    pub study: Study,
+    /// Evaluation options applied to every point.
+    pub options: OptionsSpec,
+    /// Output presentation.
+    pub output: OutputSpec,
+}
+
+/// The workload under study, with presets resolved to concrete knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// A Megatron-style transformer (MP x DP sweepable).
+    Transformer(Transformer),
+    /// A DLRM (rigid hybrid parallelism; node-count studies).
+    Dlrm(Dlrm),
+    /// A single dense GEMM microbenchmark (DP sweepable).
+    Gemm(DenseGemm),
+}
+
+/// A strategy axis: either the power-of-two (MP, DP) sweep bounded by MP
+/// degree, or an explicit list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StrategyAxis {
+    /// `Strategy::sweep_bounded(n_nodes, min_mp, max_mp)`; `max_mp = None`
+    /// means unbounded (the full sweep).
+    Pow2 {
+        /// Smallest MP degree included.
+        min_mp: usize,
+        /// Largest MP degree included (`None` = the cluster size).
+        max_mp: Option<usize>,
+    },
+    /// Explicit strategy list, in row order.
+    List(Vec<Strategy>),
+}
+
+impl StrategyAxis {
+    /// Resolve against a cluster of `n_nodes` (power of two).
+    pub fn resolve(&self, n_nodes: usize) -> Vec<Strategy> {
+        match self {
+            StrategyAxis::Pow2 { min_mp, max_mp } => Strategy::sweep_bounded(
+                n_nodes,
+                *min_mp,
+                max_mp.unwrap_or(n_nodes),
+            ),
+            StrategyAxis::List(v) => v.clone(),
+        }
+    }
+}
+
+/// The study shape. `Grid` is the general-purpose cross-product engine;
+/// the remaining variants parameterize the paper's bespoke case-study
+/// shapes (compute/network scaling, DLRM cluster sizing and packing, the
+/// Table III cluster comparison).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Study {
+    /// Pure ZeRO footprint model over a strategy sweep (paper Fig. 6) —
+    /// no cost-model evaluation.
+    Footprint {
+        /// Rows of the footprint table.
+        strategies: StrategyAxis,
+    },
+    /// Cross-product sweep: strategies x expanded-memory bandwidth x
+    /// expanded-memory capacity x collective implementation x ZeRO stage,
+    /// lowered onto [`crate::coordinator::GridSweep`].
+    Grid {
+        /// Strategy axis (always present; single-element for fixed-point
+        /// studies).
+        strategies: StrategyAxis,
+        /// Expanded-memory bandwidths, GB/s (empty = local memory only).
+        em_bandwidths_gbps: Vec<f64>,
+        /// Expanded-memory capacities, GB (empty = sized to the spill).
+        em_capacities_gb: Vec<f64>,
+        /// Collective implementations (empty = the options default).
+        collectives: Vec<CollectiveImpl>,
+        /// ZeRO stages (empty = the options default). When explicit, each
+        /// stage's DP communication-volume multiplier is applied.
+        zero_stages: Vec<ZeroStage>,
+        /// Normalization baseline evaluated on the base cluster (local
+        /// memory), e.g. Fig. 9's MP64_DP16.
+        baseline: Option<Strategy>,
+    },
+    /// Per-node compute-capability scaling at a fixed strategy, across
+    /// expanded-memory bandwidths (paper Fig. 10).
+    ComputeScaling {
+        /// The fixed parallelization strategy.
+        strategy: Strategy,
+        /// Peak-compute multipliers (rows); must include 1.0 (baseline).
+        scales: Vec<f64>,
+        /// Expanded-memory bandwidths, GB/s (columns).
+        em_bandwidths_gbps: Vec<f64>,
+    },
+    /// Intra-/inter-pod bandwidth scaling grid (paper Fig. 11).
+    NetworkScaling {
+        /// Strategies studied (row groups).
+        strategies: Vec<Strategy>,
+        /// Intra-pod bandwidth multipliers.
+        intra_factors: Vec<f64>,
+        /// Inter-pod bandwidth multipliers.
+        inter_factors: Vec<f64>,
+    },
+    /// Rebalancing a fixed aggregate per-node bandwidth between intra- and
+    /// inter-pod links (paper Fig. 12).
+    NetworkRebalance {
+        /// Strategies studied (columns).
+        strategies: Vec<Strategy>,
+        /// intra:inter bandwidth ratios (rows).
+        ratios: Vec<f64>,
+    },
+    /// DLRM iteration time vs cluster size (paper Fig. 13a). Requires a
+    /// DLRM workload.
+    ClusterSize {
+        /// Node counts (rows); the first is the normalization baseline.
+        sizes: Vec<usize>,
+        /// Expanded-memory bandwidth attached where the shard spills,
+        /// GB/s (`None` = never attach expanded memory).
+        em_bandwidth_gbps: Option<f64>,
+    },
+    /// Multi-instance DLRM turnaround vs expanded-memory bandwidth for
+    /// different nodes-per-instance packings (paper Fig. 13b). Requires a
+    /// DLRM workload.
+    Packing {
+        /// Instances trained (the turnaround job).
+        instances: f64,
+        /// Nodes per instance (rows).
+        packings: Vec<usize>,
+        /// Expanded-memory bandwidths, GB/s (columns).
+        em_bandwidths_gbps: Vec<f64>,
+    },
+    /// Cross-cluster comparison on DLRM turnaround + best-feasible
+    /// transformer strategy (paper Fig. 15 / Table III).
+    ClusterCompare {
+        /// Preset cluster names, in row order; the first is the
+        /// normalization baseline.
+        clusters: Vec<String>,
+        /// The DLRM co-workload.
+        dlrm: Dlrm,
+        /// DLRM instances for the turnaround column.
+        instances: f64,
+        /// GPU partition size DLRM instances wave over (paper: 64).
+        partition: usize,
+    },
+}
+
+impl Study {
+    /// The spec-file `kind` string of this study.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Study::Footprint { .. } => "footprint",
+            Study::Grid { .. } => "grid",
+            Study::ComputeScaling { .. } => "compute-scaling",
+            Study::NetworkScaling { .. } => "network-scaling",
+            Study::NetworkRebalance { .. } => "network-rebalance",
+            Study::ClusterSize { .. } => "cluster-size",
+            Study::Packing { .. } => "packing",
+            Study::ClusterCompare { .. } => "cluster-compare",
+        }
+    }
+}
+
+/// Which cost-model backend a scenario requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendSpec {
+    /// Closed-form f64 evaluation (default).
+    #[default]
+    Native,
+    /// Discrete-event simulation.
+    Des,
+    /// AOT artifact via PJRT; errors if artifacts are absent.
+    Artifact,
+    /// Artifact if available, else native.
+    Auto,
+}
+
+impl BackendSpec {
+    /// Build a coordinator for this backend.
+    pub fn coordinator(&self) -> Result<Coordinator> {
+        match self {
+            BackendSpec::Native => Ok(Coordinator::native()),
+            BackendSpec::Des => Ok(Coordinator::des()),
+            BackendSpec::Artifact => Coordinator::artifact(),
+            BackendSpec::Auto => Ok(Coordinator::auto()),
+        }
+    }
+
+    fn as_str(&self) -> &'static str {
+        match self {
+            BackendSpec::Native => "native",
+            BackendSpec::Des => "des",
+            BackendSpec::Artifact => "artifact",
+            BackendSpec::Auto => "auto",
+        }
+    }
+}
+
+/// Evaluation options (the spec-level mirror of
+/// [`crate::model::inputs::EvalOptions`], plus the backend choice).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptionsSpec {
+    /// Backend evaluating the scenario.
+    pub backend: BackendSpec,
+    /// Default ZeRO stage (footprints and DP partitioning).
+    pub zero_stage: ZeroStage,
+    /// Assume infinite capacity at full local bandwidth (Fig. 8a mode).
+    pub infinite_memory: bool,
+    /// Default collective implementation.
+    pub collective: CollectiveImpl,
+    /// Overlap WG communication with WG compute.
+    pub overlap_wg: bool,
+    /// Force the expanded-memory traffic fraction (sensitivity studies).
+    pub em_frac: Option<f64>,
+}
+
+impl Default for OptionsSpec {
+    fn default() -> Self {
+        OptionsSpec {
+            backend: BackendSpec::Native,
+            zero_stage: ZeroStage::OsG,
+            infinite_memory: false,
+            collective: CollectiveImpl::LogicalRing,
+            overlap_wg: true,
+            em_frac: None,
+        }
+    }
+}
+
+/// Output rendering format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutputFormat {
+    /// Boxed ASCII table (default).
+    #[default]
+    Table,
+    /// CSV.
+    Csv,
+    /// JSON.
+    Json,
+}
+
+impl OutputFormat {
+    fn as_str(&self) -> &'static str {
+        match self {
+            OutputFormat::Table => "table",
+            OutputFormat::Csv => "csv",
+            OutputFormat::Json => "json",
+        }
+    }
+}
+
+/// What the result grid contains (applies to `footprint`/`grid` studies;
+/// the other study kinds have a fixed presentation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Content {
+    /// Study-dependent default: `Speedup` when the grid has a baseline,
+    /// else `Breakdown`.
+    #[default]
+    Auto,
+    /// Six-phase time breakdown + total per point.
+    Breakdown,
+    /// Compute vs exposed-communication fractions (Fig. 8b).
+    Share,
+    /// Speedup over the baseline, pivoted on the expanded-memory
+    /// bandwidth axis (Fig. 9).
+    Speedup,
+    /// Side-by-side totals for exactly two collective implementations.
+    CollectiveContrast,
+    /// Footprint + total + exposed WG communication per ZeRO stage.
+    ZeroTable,
+}
+
+impl Content {
+    fn as_str(&self) -> &'static str {
+        match self {
+            Content::Auto => "auto",
+            Content::Breakdown => "breakdown",
+            Content::Share => "share",
+            Content::Speedup => "speedup",
+            Content::CollectiveContrast => "collective-contrast",
+            Content::ZeroTable => "zero-table",
+        }
+    }
+}
+
+/// Normalization column added to `Breakdown` output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Normalize {
+    /// No normalization column.
+    #[default]
+    None,
+    /// Normalize totals to the best (minimum) total.
+    Best,
+    /// Normalize totals to the first row.
+    First,
+}
+
+impl Normalize {
+    fn as_str(&self) -> &'static str {
+        match self {
+            Normalize::None => "none",
+            Normalize::Best => "best",
+            Normalize::First => "first",
+        }
+    }
+}
+
+/// Output presentation.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct OutputSpec {
+    /// Rendering format for `comet scenario run`.
+    pub format: OutputFormat,
+    /// Grid content selector.
+    pub content: Content,
+    /// Normalization column for breakdown content.
+    pub normalize: Normalize,
+    /// Append a per-point `Footprint_GB` column to breakdown content.
+    pub footprint: bool,
+    /// Row-dimension label (`None` = the study's default).
+    pub row_label: Option<String>,
+    /// Column-header override (length must match the produced grid).
+    pub columns: Option<Vec<String>>,
+    /// Free-form notes copied into the figure.
+    pub notes: Vec<String>,
+}
+
+// ---- JSON (de)serialization ----------------------------------------------
+
+fn map_of<'a>(v: &'a Value, ctx: &str) -> Result<&'a BTreeMap<String, Value>> {
+    match v {
+        Value::Obj(m) => Ok(m),
+        _ => Err(Error::Config(format!("scenario: '{ctx}' must be a table"))),
+    }
+}
+
+fn check_keys(
+    m: &BTreeMap<String, Value>,
+    allowed: &[&str],
+    ctx: &str,
+) -> Result<()> {
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(Error::Config(format!(
+                "scenario: unknown key '{k}' in {ctx} (allowed: {})",
+                allowed.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn opt_str(m: &BTreeMap<String, Value>, key: &str, ctx: &str) -> Result<Option<String>> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Value::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => Err(Error::Config(format!(
+            "scenario: '{key}' in {ctx} must be a string"
+        ))),
+    }
+}
+
+fn opt_f64(m: &BTreeMap<String, Value>, key: &str, ctx: &str) -> Result<Option<f64>> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Value::Num(n)) => Ok(Some(*n)),
+        Some(_) => Err(Error::Config(format!(
+            "scenario: '{key}' in {ctx} must be a number"
+        ))),
+    }
+}
+
+fn opt_usize(m: &BTreeMap<String, Value>, key: &str, ctx: &str) -> Result<Option<usize>> {
+    match opt_f64(m, key, ctx)? {
+        None => Ok(None),
+        Some(n) if n >= 0.0 && n.fract() == 0.0 => Ok(Some(n as usize)),
+        Some(n) => Err(Error::Config(format!(
+            "scenario: '{key}' in {ctx} must be a non-negative integer, got {n}"
+        ))),
+    }
+}
+
+fn opt_bool(m: &BTreeMap<String, Value>, key: &str, ctx: &str) -> Result<Option<bool>> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Value::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(Error::Config(format!(
+            "scenario: '{key}' in {ctx} must be a boolean"
+        ))),
+    }
+}
+
+fn f64_list(m: &BTreeMap<String, Value>, key: &str, ctx: &str) -> Result<Vec<f64>> {
+    match m.get(key) {
+        None => Ok(Vec::new()),
+        Some(Value::Arr(a)) => a
+            .iter()
+            .map(|v| {
+                v.as_f64().ok_or_else(|| {
+                    Error::Config(format!(
+                        "scenario: '{key}' in {ctx} must contain numbers"
+                    ))
+                })
+            })
+            .collect(),
+        Some(_) => Err(Error::Config(format!(
+            "scenario: '{key}' in {ctx} must be an array"
+        ))),
+    }
+}
+
+fn usize_list(m: &BTreeMap<String, Value>, key: &str, ctx: &str) -> Result<Vec<usize>> {
+    f64_list(m, key, ctx)?
+        .into_iter()
+        .map(|n| {
+            if n >= 0.0 && n.fract() == 0.0 {
+                Ok(n as usize)
+            } else {
+                Err(Error::Config(format!(
+                    "scenario: '{key}' in {ctx} must contain integers, got {n}"
+                )))
+            }
+        })
+        .collect()
+}
+
+fn str_list(m: &BTreeMap<String, Value>, key: &str, ctx: &str) -> Result<Vec<String>> {
+    match m.get(key) {
+        None => Ok(Vec::new()),
+        Some(Value::Arr(a)) => a
+            .iter()
+            .map(|v| {
+                v.as_str().map(|s| s.to_string()).ok_or_else(|| {
+                    Error::Config(format!(
+                        "scenario: '{key}' in {ctx} must contain strings"
+                    ))
+                })
+            })
+            .collect(),
+        Some(_) => Err(Error::Config(format!(
+            "scenario: '{key}' in {ctx} must be an array"
+        ))),
+    }
+}
+
+fn strategy_list(m: &BTreeMap<String, Value>, key: &str, ctx: &str) -> Result<Vec<Strategy>> {
+    str_list(m, key, ctx)?
+        .iter()
+        .map(|s| Strategy::parse(s))
+        .collect()
+}
+
+fn zero_stage_of(n: f64) -> Result<ZeroStage> {
+    match n {
+        x if x == 0.0 => Ok(ZeroStage::Baseline),
+        x if x == 1.0 => Ok(ZeroStage::Os),
+        x if x == 2.0 => Ok(ZeroStage::OsG),
+        x if x == 3.0 => Ok(ZeroStage::OsGP),
+        other => Err(Error::Config(format!(
+            "scenario: unknown ZeRO stage {other} (0|1|2|3)"
+        ))),
+    }
+}
+
+fn zero_stage_code(s: ZeroStage) -> f64 {
+    match s {
+        ZeroStage::Baseline => 0.0,
+        ZeroStage::Os => 1.0,
+        ZeroStage::OsG => 2.0,
+        ZeroStage::OsGP => 3.0,
+    }
+}
+
+fn collective_of(s: &str) -> Result<CollectiveImpl> {
+    match s {
+        "ring" => Ok(CollectiveImpl::LogicalRing),
+        "hierarchical" => Ok(CollectiveImpl::Hierarchical),
+        other => Err(Error::Config(format!(
+            "scenario: unknown collective '{other}' (ring|hierarchical)"
+        ))),
+    }
+}
+
+/// Short spec-file name of a collective implementation.
+pub fn collective_name(c: CollectiveImpl) -> &'static str {
+    match c {
+        CollectiveImpl::LogicalRing => "ring",
+        CollectiveImpl::Hierarchical => "hierarchical",
+    }
+}
+
+impl WorkloadSpec {
+    fn from_json(v: &Value) -> Result<WorkloadSpec> {
+        let m = map_of(v, "workload")?;
+        let kind = opt_str(m, "kind", "workload")?
+            .unwrap_or_else(|| "transformer".into());
+        match kind.as_str() {
+            "transformer" => {
+                check_keys(
+                    m,
+                    &[
+                        "kind", "preset", "name", "stacks", "d_model",
+                        "heads", "seq", "vocab", "ff_mult", "batch",
+                    ],
+                    "workload",
+                )?;
+                let mut t = match opt_str(m, "preset", "workload")?
+                    .as_deref()
+                    .unwrap_or("transformer-1t")
+                {
+                    "transformer-1t" => Transformer::t1(),
+                    "transformer-100m" => Transformer::t100m(),
+                    other => {
+                        return Err(Error::Config(format!(
+                            "scenario: unknown transformer preset '{other}'"
+                        )))
+                    }
+                };
+                if let Some(s) = opt_str(m, "name", "workload")? {
+                    t.name = s;
+                }
+                if let Some(n) = opt_usize(m, "stacks", "workload")? {
+                    t.stacks = n;
+                }
+                if let Some(x) = opt_f64(m, "d_model", "workload")? {
+                    t.d_model = x;
+                }
+                if let Some(x) = opt_f64(m, "heads", "workload")? {
+                    t.heads = x;
+                }
+                if let Some(x) = opt_f64(m, "seq", "workload")? {
+                    t.seq = x;
+                }
+                if let Some(x) = opt_f64(m, "vocab", "workload")? {
+                    t.vocab = x;
+                }
+                if let Some(x) = opt_f64(m, "ff_mult", "workload")? {
+                    t.ff_mult = x;
+                }
+                if let Some(x) = opt_f64(m, "batch", "workload")? {
+                    t.batch = x;
+                }
+                Ok(WorkloadSpec::Transformer(t))
+            }
+            "dlrm" => Ok(WorkloadSpec::Dlrm(dlrm_from_map(m)?)),
+            "gemm" => {
+                check_keys(m, &["kind", "name", "m", "k", "n"], "workload")?;
+                let req = |key: &str| {
+                    opt_f64(m, key, "workload")?.ok_or_else(|| {
+                        Error::Config(format!(
+                            "scenario: gemm workload requires '{key}'"
+                        ))
+                    })
+                };
+                let mut g = DenseGemm::new(req("m")?, req("k")?, req("n")?);
+                if let Some(s) = opt_str(m, "name", "workload")? {
+                    g.name = s;
+                }
+                Ok(WorkloadSpec::Gemm(g))
+            }
+            other => Err(Error::Config(format!(
+                "scenario: unknown workload kind '{other}' \
+                 (transformer|dlrm|gemm)"
+            ))),
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        match self {
+            WorkloadSpec::Transformer(t) => {
+                m.insert("kind".into(), Value::Str("transformer".into()));
+                m.insert("name".into(), Value::Str(t.name.clone()));
+                m.insert("stacks".into(), Value::Num(t.stacks as f64));
+                m.insert("d_model".into(), Value::Num(t.d_model));
+                m.insert("heads".into(), Value::Num(t.heads));
+                m.insert("seq".into(), Value::Num(t.seq));
+                m.insert("vocab".into(), Value::Num(t.vocab));
+                m.insert("ff_mult".into(), Value::Num(t.ff_mult));
+                m.insert("batch".into(), Value::Num(t.batch));
+            }
+            WorkloadSpec::Dlrm(d) => {
+                m.insert("kind".into(), Value::Str("dlrm".into()));
+                dlrm_to_map(d, &mut m);
+            }
+            WorkloadSpec::Gemm(g) => {
+                m.insert("kind".into(), Value::Str("gemm".into()));
+                m.insert("name".into(), Value::Str(g.name.clone()));
+                m.insert("m".into(), Value::Num(g.m));
+                m.insert("k".into(), Value::Num(g.k));
+                m.insert("n".into(), Value::Num(g.n));
+            }
+        }
+        Value::Obj(m)
+    }
+
+    /// Workload display name.
+    pub fn name(&self) -> &str {
+        match self {
+            WorkloadSpec::Transformer(t) => &t.name,
+            WorkloadSpec::Dlrm(d) => &d.name,
+            WorkloadSpec::Gemm(g) => &g.name,
+        }
+    }
+}
+
+fn dlrm_from_map(m: &BTreeMap<String, Value>) -> Result<Dlrm> {
+    check_keys(
+        m,
+        &[
+            "kind", "preset", "name", "emb_params", "emb_dim", "tables",
+            "pooling", "bottom_mlp", "top_mlp", "global_batch",
+        ],
+        "dlrm spec",
+    )?;
+    let mut d = match opt_str(m, "preset", "workload")?
+        .as_deref()
+        .unwrap_or("dlrm-1.2t")
+    {
+        "dlrm-1.2t" => Dlrm::dlrm_1_2t(),
+        "dlrm-small" => Dlrm::small(),
+        other => {
+            return Err(Error::Config(format!(
+                "scenario: unknown dlrm preset '{other}'"
+            )))
+        }
+    };
+    if let Some(s) = opt_str(m, "name", "workload")? {
+        d.name = s;
+    }
+    if let Some(x) = opt_f64(m, "emb_params", "workload")? {
+        d.emb_params = x;
+    }
+    if let Some(x) = opt_f64(m, "emb_dim", "workload")? {
+        d.emb_dim = x;
+    }
+    if let Some(x) = opt_f64(m, "tables", "workload")? {
+        d.tables = x;
+    }
+    if let Some(x) = opt_f64(m, "pooling", "workload")? {
+        d.pooling = x;
+    }
+    if let Some(x) = opt_f64(m, "global_batch", "workload")? {
+        d.global_batch = x;
+    }
+    if m.contains_key("bottom_mlp") {
+        d.bottom_mlp = f64_list(m, "bottom_mlp", "workload")?;
+    }
+    if m.contains_key("top_mlp") {
+        d.top_mlp = f64_list(m, "top_mlp", "workload")?;
+    }
+    Ok(d)
+}
+
+fn dlrm_to_map(d: &Dlrm, m: &mut BTreeMap<String, Value>) {
+    m.insert("name".into(), Value::Str(d.name.clone()));
+    m.insert("emb_params".into(), Value::Num(d.emb_params));
+    m.insert("emb_dim".into(), Value::Num(d.emb_dim));
+    m.insert("tables".into(), Value::Num(d.tables));
+    m.insert("pooling".into(), Value::Num(d.pooling));
+    m.insert(
+        "bottom_mlp".into(),
+        Value::Arr(d.bottom_mlp.iter().map(|&x| Value::Num(x)).collect()),
+    );
+    m.insert(
+        "top_mlp".into(),
+        Value::Arr(d.top_mlp.iter().map(|&x| Value::Num(x)).collect()),
+    );
+    m.insert("global_batch".into(), Value::Num(d.global_batch));
+}
+
+fn cluster_from_json(v: &Value) -> Result<ClusterConfig> {
+    let m = map_of(v, "cluster")?;
+    if m.contains_key("preset") {
+        let name = opt_str(m, "preset", "cluster")?.unwrap();
+        let mut c = presets::by_name(&name).ok_or_else(|| {
+            Error::Config(format!(
+                "scenario: unknown cluster preset '{name}'; presets: {:?}",
+                presets::preset_names()
+            ))
+        })?;
+        serde_io::apply_cluster_overrides(&mut c, v)?;
+        Ok(c)
+    } else {
+        // Inline clusters use the serde_io shape; reject stray keys so an
+        // override-style key on an inline cluster cannot be dropped
+        // silently.
+        check_keys(
+            m,
+            &["name", "n_nodes", "link_latency", "node", "topology"],
+            "cluster",
+        )?;
+        ClusterConfig::from_json(v)
+    }
+}
+
+impl Study {
+    fn strategies_axis(m: &BTreeMap<String, Value>) -> Result<StrategyAxis> {
+        match m.get("strategies") {
+            None | Some(Value::Str(_)) => {
+                if let Some(Value::Str(s)) = m.get("strategies") {
+                    if s != "pow2" {
+                        return Err(Error::Config(format!(
+                            "scenario: strategies must be \"pow2\" or a \
+                             list of MP<i>_DP<j> labels, got '{s}'"
+                        )));
+                    }
+                }
+                Ok(StrategyAxis::Pow2 {
+                    min_mp: opt_usize(m, "min_mp", "study")?.unwrap_or(1),
+                    max_mp: opt_usize(m, "max_mp", "study")?,
+                })
+            }
+            Some(Value::Arr(_)) => Ok(StrategyAxis::List(strategy_list(
+                m,
+                "strategies",
+                "study",
+            )?)),
+            Some(_) => Err(Error::Config(
+                "scenario: 'strategies' must be \"pow2\" or a list".into(),
+            )),
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<Study> {
+        let m = map_of(v, "study")?;
+        let kind = opt_str(m, "kind", "study")?.ok_or_else(|| {
+            Error::Config("scenario: study requires a 'kind'".into())
+        })?;
+        match kind.as_str() {
+            "footprint" => {
+                check_keys(
+                    m,
+                    &["kind", "strategies", "min_mp", "max_mp"],
+                    "study",
+                )?;
+                Ok(Study::Footprint {
+                    strategies: Self::strategies_axis(m)?,
+                })
+            }
+            "grid" => {
+                check_keys(
+                    m,
+                    &[
+                        "kind",
+                        "strategies",
+                        "min_mp",
+                        "max_mp",
+                        "em_bandwidths_gbps",
+                        "em_capacities_gb",
+                        "collectives",
+                        "zero_stages",
+                        "baseline",
+                    ],
+                    "study",
+                )?;
+                let collectives = str_list(m, "collectives", "study")?
+                    .iter()
+                    .map(|s| collective_of(s))
+                    .collect::<Result<Vec<_>>>()?;
+                let zero_stages = f64_list(m, "zero_stages", "study")?
+                    .into_iter()
+                    .map(zero_stage_of)
+                    .collect::<Result<Vec<_>>>()?;
+                let baseline = match opt_str(m, "baseline", "study")? {
+                    Some(s) => Some(Strategy::parse(&s)?),
+                    None => None,
+                };
+                Ok(Study::Grid {
+                    strategies: Self::strategies_axis(m)?,
+                    em_bandwidths_gbps: f64_list(
+                        m,
+                        "em_bandwidths_gbps",
+                        "study",
+                    )?,
+                    em_capacities_gb: f64_list(m, "em_capacities_gb", "study")?,
+                    collectives,
+                    zero_stages,
+                    baseline,
+                })
+            }
+            "compute-scaling" => {
+                check_keys(
+                    m,
+                    &["kind", "strategy", "scales", "em_bandwidths_gbps"],
+                    "study",
+                )?;
+                let s = opt_str(m, "strategy", "study")?.ok_or_else(|| {
+                    Error::Config(
+                        "scenario: compute-scaling requires 'strategy'".into(),
+                    )
+                })?;
+                Ok(Study::ComputeScaling {
+                    strategy: Strategy::parse(&s)?,
+                    scales: f64_list(m, "scales", "study")?,
+                    em_bandwidths_gbps: f64_list(
+                        m,
+                        "em_bandwidths_gbps",
+                        "study",
+                    )?,
+                })
+            }
+            "network-scaling" => {
+                check_keys(
+                    m,
+                    &["kind", "strategies", "intra_factors", "inter_factors"],
+                    "study",
+                )?;
+                Ok(Study::NetworkScaling {
+                    strategies: strategy_list(m, "strategies", "study")?,
+                    intra_factors: f64_list(m, "intra_factors", "study")?,
+                    inter_factors: f64_list(m, "inter_factors", "study")?,
+                })
+            }
+            "network-rebalance" => {
+                check_keys(m, &["kind", "strategies", "ratios"], "study")?;
+                Ok(Study::NetworkRebalance {
+                    strategies: strategy_list(m, "strategies", "study")?,
+                    ratios: f64_list(m, "ratios", "study")?,
+                })
+            }
+            "cluster-size" => {
+                check_keys(
+                    m,
+                    &["kind", "sizes", "em_bandwidth_gbps"],
+                    "study",
+                )?;
+                Ok(Study::ClusterSize {
+                    sizes: usize_list(m, "sizes", "study")?,
+                    em_bandwidth_gbps: opt_f64(m, "em_bandwidth_gbps", "study")?,
+                })
+            }
+            "packing" => {
+                check_keys(
+                    m,
+                    &["kind", "instances", "packings", "em_bandwidths_gbps"],
+                    "study",
+                )?;
+                Ok(Study::Packing {
+                    instances: opt_f64(m, "instances", "study")?.unwrap_or(8.0),
+                    packings: usize_list(m, "packings", "study")?,
+                    em_bandwidths_gbps: f64_list(
+                        m,
+                        "em_bandwidths_gbps",
+                        "study",
+                    )?,
+                })
+            }
+            "cluster-compare" => {
+                check_keys(
+                    m,
+                    &["kind", "clusters", "dlrm", "instances", "partition"],
+                    "study",
+                )?;
+                let clusters = str_list(m, "clusters", "study")?;
+                for c in &clusters {
+                    if presets::by_name(c).is_none() {
+                        return Err(Error::Config(format!(
+                            "scenario: unknown cluster preset '{c}' in \
+                             cluster-compare"
+                        )));
+                    }
+                }
+                let dlrm = match m.get("dlrm") {
+                    None => Dlrm::dlrm_1_2t(),
+                    Some(Value::Str(p)) => {
+                        let mut mm = BTreeMap::new();
+                        mm.insert("preset".into(), Value::Str(p.clone()));
+                        dlrm_from_map(&mm)?
+                    }
+                    Some(Value::Obj(mm)) => dlrm_from_map(mm)?,
+                    Some(_) => {
+                        return Err(Error::Config(
+                            "scenario: 'dlrm' must be a preset name or a \
+                             table"
+                                .into(),
+                        ))
+                    }
+                };
+                Ok(Study::ClusterCompare {
+                    clusters,
+                    dlrm,
+                    instances: opt_f64(m, "instances", "study")?.unwrap_or(8.0),
+                    partition: opt_usize(m, "partition", "study")?
+                        .unwrap_or(64),
+                })
+            }
+            other => Err(Error::Config(format!(
+                "scenario: unknown study kind '{other}'"
+            ))),
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("kind".into(), Value::Str(self.kind().into()));
+        let axis_to_json = |m: &mut BTreeMap<String, Value>, a: &StrategyAxis| {
+            match a {
+                StrategyAxis::Pow2 { min_mp, max_mp } => {
+                    m.insert("strategies".into(), Value::Str("pow2".into()));
+                    m.insert("min_mp".into(), Value::Num(*min_mp as f64));
+                    if let Some(x) = max_mp {
+                        m.insert("max_mp".into(), Value::Num(*x as f64));
+                    }
+                }
+                StrategyAxis::List(v) => {
+                    m.insert(
+                        "strategies".into(),
+                        Value::Arr(
+                            v.iter()
+                                .map(|s| Value::Str(s.label()))
+                                .collect(),
+                        ),
+                    );
+                }
+            }
+        };
+        let strategies_json = |v: &[Strategy]| {
+            Value::Arr(v.iter().map(|s| Value::Str(s.label())).collect())
+        };
+        let nums =
+            |v: &[f64]| Value::Arr(v.iter().map(|&x| Value::Num(x)).collect());
+        match self {
+            Study::Footprint { strategies } => axis_to_json(&mut m, strategies),
+            Study::Grid {
+                strategies,
+                em_bandwidths_gbps,
+                em_capacities_gb,
+                collectives,
+                zero_stages,
+                baseline,
+            } => {
+                axis_to_json(&mut m, strategies);
+                if !em_bandwidths_gbps.is_empty() {
+                    m.insert(
+                        "em_bandwidths_gbps".into(),
+                        nums(em_bandwidths_gbps),
+                    );
+                }
+                if !em_capacities_gb.is_empty() {
+                    m.insert("em_capacities_gb".into(), nums(em_capacities_gb));
+                }
+                if !collectives.is_empty() {
+                    m.insert(
+                        "collectives".into(),
+                        Value::Arr(
+                            collectives
+                                .iter()
+                                .map(|&c| {
+                                    Value::Str(collective_name(c).into())
+                                })
+                                .collect(),
+                        ),
+                    );
+                }
+                if !zero_stages.is_empty() {
+                    m.insert(
+                        "zero_stages".into(),
+                        Value::Arr(
+                            zero_stages
+                                .iter()
+                                .map(|&s| Value::Num(zero_stage_code(s)))
+                                .collect(),
+                        ),
+                    );
+                }
+                if let Some(b) = baseline {
+                    m.insert("baseline".into(), Value::Str(b.label()));
+                }
+            }
+            Study::ComputeScaling {
+                strategy,
+                scales,
+                em_bandwidths_gbps,
+            } => {
+                m.insert("strategy".into(), Value::Str(strategy.label()));
+                m.insert("scales".into(), nums(scales));
+                m.insert(
+                    "em_bandwidths_gbps".into(),
+                    nums(em_bandwidths_gbps),
+                );
+            }
+            Study::NetworkScaling {
+                strategies,
+                intra_factors,
+                inter_factors,
+            } => {
+                m.insert("strategies".into(), strategies_json(strategies));
+                m.insert("intra_factors".into(), nums(intra_factors));
+                m.insert("inter_factors".into(), nums(inter_factors));
+            }
+            Study::NetworkRebalance { strategies, ratios } => {
+                m.insert("strategies".into(), strategies_json(strategies));
+                m.insert("ratios".into(), nums(ratios));
+            }
+            Study::ClusterSize {
+                sizes,
+                em_bandwidth_gbps,
+            } => {
+                m.insert(
+                    "sizes".into(),
+                    Value::Arr(
+                        sizes.iter().map(|&n| Value::Num(n as f64)).collect(),
+                    ),
+                );
+                if let Some(x) = em_bandwidth_gbps {
+                    m.insert("em_bandwidth_gbps".into(), Value::Num(*x));
+                }
+            }
+            Study::Packing {
+                instances,
+                packings,
+                em_bandwidths_gbps,
+            } => {
+                m.insert("instances".into(), Value::Num(*instances));
+                m.insert(
+                    "packings".into(),
+                    Value::Arr(
+                        packings
+                            .iter()
+                            .map(|&n| Value::Num(n as f64))
+                            .collect(),
+                    ),
+                );
+                m.insert(
+                    "em_bandwidths_gbps".into(),
+                    nums(em_bandwidths_gbps),
+                );
+            }
+            Study::ClusterCompare {
+                clusters,
+                dlrm,
+                instances,
+                partition,
+            } => {
+                m.insert(
+                    "clusters".into(),
+                    Value::Arr(
+                        clusters
+                            .iter()
+                            .map(|c| Value::Str(c.clone()))
+                            .collect(),
+                    ),
+                );
+                let mut dm = BTreeMap::new();
+                dlrm_to_map(dlrm, &mut dm);
+                m.insert("dlrm".into(), Value::Obj(dm));
+                m.insert("instances".into(), Value::Num(*instances));
+                m.insert("partition".into(), Value::Num(*partition as f64));
+            }
+        }
+        Value::Obj(m)
+    }
+}
+
+impl OptionsSpec {
+    fn from_json(v: &Value) -> Result<OptionsSpec> {
+        let m = map_of(v, "options")?;
+        check_keys(
+            m,
+            &[
+                "backend",
+                "zero_stage",
+                "infinite_memory",
+                "collective",
+                "overlap_wg",
+                "em_frac",
+            ],
+            "options",
+        )?;
+        let mut o = OptionsSpec::default();
+        if let Some(s) = opt_str(m, "backend", "options")? {
+            o.backend = match s.as_str() {
+                "native" => BackendSpec::Native,
+                "des" => BackendSpec::Des,
+                "artifact" => BackendSpec::Artifact,
+                "auto" => BackendSpec::Auto,
+                other => {
+                    return Err(Error::Config(format!(
+                        "scenario: unknown backend '{other}' \
+                         (native|des|artifact|auto)"
+                    )))
+                }
+            };
+        }
+        if let Some(n) = opt_f64(m, "zero_stage", "options")? {
+            o.zero_stage = zero_stage_of(n)?;
+        }
+        if let Some(b) = opt_bool(m, "infinite_memory", "options")? {
+            o.infinite_memory = b;
+        }
+        if let Some(s) = opt_str(m, "collective", "options")? {
+            o.collective = collective_of(&s)?;
+        }
+        if let Some(b) = opt_bool(m, "overlap_wg", "options")? {
+            o.overlap_wg = b;
+        }
+        o.em_frac = opt_f64(m, "em_frac", "options")?;
+        Ok(o)
+    }
+
+    fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("backend".into(), Value::Str(self.backend.as_str().into()));
+        m.insert(
+            "zero_stage".into(),
+            Value::Num(zero_stage_code(self.zero_stage)),
+        );
+        m.insert(
+            "infinite_memory".into(),
+            Value::Bool(self.infinite_memory),
+        );
+        m.insert(
+            "collective".into(),
+            Value::Str(collective_name(self.collective).into()),
+        );
+        m.insert("overlap_wg".into(), Value::Bool(self.overlap_wg));
+        if let Some(x) = self.em_frac {
+            m.insert("em_frac".into(), Value::Num(x));
+        }
+        Value::Obj(m)
+    }
+}
+
+impl OutputSpec {
+    fn from_json(v: &Value) -> Result<OutputSpec> {
+        let m = map_of(v, "output")?;
+        check_keys(
+            m,
+            &[
+                "format",
+                "content",
+                "normalize",
+                "footprint",
+                "row_label",
+                "columns",
+                "notes",
+            ],
+            "output",
+        )?;
+        let mut o = OutputSpec::default();
+        if let Some(s) = opt_str(m, "format", "output")? {
+            o.format = match s.as_str() {
+                "table" => OutputFormat::Table,
+                "csv" => OutputFormat::Csv,
+                "json" => OutputFormat::Json,
+                other => {
+                    return Err(Error::Config(format!(
+                        "scenario: unknown output format '{other}' \
+                         (table|csv|json)"
+                    )))
+                }
+            };
+        }
+        if let Some(s) = opt_str(m, "content", "output")? {
+            o.content = match s.as_str() {
+                "auto" => Content::Auto,
+                "breakdown" => Content::Breakdown,
+                "share" => Content::Share,
+                "speedup" => Content::Speedup,
+                "collective-contrast" => Content::CollectiveContrast,
+                "zero-table" => Content::ZeroTable,
+                other => {
+                    return Err(Error::Config(format!(
+                        "scenario: unknown content '{other}'"
+                    )))
+                }
+            };
+        }
+        if let Some(s) = opt_str(m, "normalize", "output")? {
+            o.normalize = match s.as_str() {
+                "none" => Normalize::None,
+                "best" => Normalize::Best,
+                "first" => Normalize::First,
+                other => {
+                    return Err(Error::Config(format!(
+                        "scenario: unknown normalize '{other}' \
+                         (none|best|first)"
+                    )))
+                }
+            };
+        }
+        if let Some(b) = opt_bool(m, "footprint", "output")? {
+            o.footprint = b;
+        }
+        o.row_label = opt_str(m, "row_label", "output")?;
+        if m.contains_key("columns") {
+            o.columns = Some(str_list(m, "columns", "output")?);
+        }
+        o.notes = str_list(m, "notes", "output")?;
+        Ok(o)
+    }
+
+    fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("format".into(), Value::Str(self.format.as_str().into()));
+        m.insert("content".into(), Value::Str(self.content.as_str().into()));
+        m.insert(
+            "normalize".into(),
+            Value::Str(self.normalize.as_str().into()),
+        );
+        m.insert("footprint".into(), Value::Bool(self.footprint));
+        if let Some(r) = &self.row_label {
+            m.insert("row_label".into(), Value::Str(r.clone()));
+        }
+        if let Some(cols) = &self.columns {
+            m.insert(
+                "columns".into(),
+                Value::Arr(
+                    cols.iter().map(|c| Value::Str(c.clone())).collect(),
+                ),
+            );
+        }
+        if !self.notes.is_empty() {
+            m.insert(
+                "notes".into(),
+                Value::Arr(
+                    self.notes.iter().map(|n| Value::Str(n.clone())).collect(),
+                ),
+            );
+        }
+        Value::Obj(m)
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse from a JSON value tree (the shape both the TOML reader and
+    /// `to_json` produce).
+    pub fn from_json(v: &Value) -> Result<ScenarioSpec> {
+        let m = map_of(v, "scenario")?;
+        check_keys(
+            m,
+            &[
+                "name", "title", "workload", "cluster", "study", "options",
+                "output",
+            ],
+            "scenario",
+        )?;
+        let name = opt_str(m, "name", "scenario")?.ok_or_else(|| {
+            Error::Config("scenario: missing 'name'".into())
+        })?;
+        let title = opt_str(m, "title", "scenario")?.unwrap_or_else(|| name.clone());
+        let workload = match m.get("workload") {
+            Some(v) => WorkloadSpec::from_json(v)?,
+            None => WorkloadSpec::Transformer(Transformer::t1()),
+        };
+        let cluster = match m.get("cluster") {
+            Some(v) => cluster_from_json(v)?,
+            None => presets::dgx_a100_1024(),
+        };
+        let study = Study::from_json(m.get("study").ok_or_else(|| {
+            Error::Config("scenario: missing [study] section".into())
+        })?)?;
+        // cluster-compare takes its clusters from [study].clusters; a
+        // [cluster] section would be silently ignored, so reject it.
+        if matches!(study, Study::ClusterCompare { .. })
+            && m.contains_key("cluster")
+        {
+            return Err(Error::Config(
+                "scenario: cluster-compare studies name their clusters in \
+                 [study].clusters; remove the [cluster] section"
+                    .into(),
+            ));
+        }
+        let options = match m.get("options") {
+            Some(v) => OptionsSpec::from_json(v)?,
+            None => OptionsSpec::default(),
+        };
+        let output = match m.get("output") {
+            Some(v) => OutputSpec::from_json(v)?,
+            None => OutputSpec::default(),
+        };
+        Ok(ScenarioSpec {
+            name,
+            title,
+            workload,
+            cluster,
+            study,
+            options,
+            output,
+        })
+    }
+
+    /// Serialize to the canonical JSON tree (fully resolved — presets are
+    /// expanded). `from_json(to_json(spec)) == spec`.
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Value::Str(self.name.clone()));
+        m.insert("title".into(), Value::Str(self.title.clone()));
+        m.insert("workload".into(), self.workload.to_json());
+        // cluster-compare studies carry their clusters in [study]; a
+        // cluster section is rejected on parse, so don't emit one.
+        if !matches!(self.study, Study::ClusterCompare { .. }) {
+            m.insert("cluster".into(), self.cluster.to_json());
+        }
+        m.insert("study".into(), self.study.to_json());
+        m.insert("options".into(), self.options.to_json());
+        m.insert("output".into(), self.output.to_json());
+        Value::Obj(m)
+    }
+
+    /// Parse from TOML or JSON text.
+    pub fn parse_str(text: &str) -> Result<ScenarioSpec> {
+        Self::from_json(&super::parse::parse_document(text)?)
+    }
+
+    /// Load from a file (TOML or JSON, auto-detected).
+    pub fn load(path: &Path) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+        Self::parse_str(&text).map_err(|e| {
+            Error::Config(format!("{}: {e}", path.display()))
+        })
+    }
+
+    /// Serialize as a TOML scenario file (the `scenario export` format).
+    pub fn to_toml(&self) -> Result<String> {
+        super::parse::to_toml(&self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::gb;
+
+    #[test]
+    fn minimal_spec_gets_defaults() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"mini\"\n[study]\nkind = \"grid\"\n",
+        )
+        .unwrap();
+        assert_eq!(s.title, "mini");
+        assert_eq!(s.cluster, presets::dgx_a100_1024());
+        assert!(matches!(
+            s.workload,
+            WorkloadSpec::Transformer(ref t) if t.name == "transformer-1t"
+        ));
+        assert_eq!(s.options, OptionsSpec::default());
+        match &s.study {
+            Study::Grid { strategies, .. } => {
+                assert_eq!(
+                    *strategies,
+                    StrategyAxis::Pow2 {
+                        min_mp: 1,
+                        max_mp: None
+                    }
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn workload_knob_overrides_apply() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"x\"\n[workload]\nkind = \"transformer\"\n\
+             preset = \"transformer-100m\"\nstacks = 24\nbatch = 4\n\
+             [study]\nkind = \"grid\"\n",
+        )
+        .unwrap();
+        match &s.workload {
+            WorkloadSpec::Transformer(t) => {
+                assert_eq!(t.stacks, 24);
+                assert_eq!(t.batch, 4.0);
+                assert_eq!(t.d_model, 768.0); // preset value kept
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn cluster_preset_with_overrides() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"x\"\n[cluster]\npreset = \"baseline\"\nn_nodes = 256\n\
+             expanded_capacity_gb = 200\nexpanded_bandwidth_gbps = 500\n\
+             [study]\nkind = \"grid\"\n",
+        )
+        .unwrap();
+        assert_eq!(s.cluster.n_nodes, 256);
+        assert_eq!(s.cluster.node.expanded.capacity, gb(200.0));
+        assert_eq!(s.cluster.node.expanded.bandwidth, gb(500.0));
+    }
+
+    #[test]
+    fn unknown_keys_rejected_everywhere() {
+        for doc in [
+            "name = \"x\"\nbogus = 1\n[study]\nkind = \"grid\"\n",
+            "name = \"x\"\n[study]\nkind = \"grid\"\nbogus = 1\n",
+            "name = \"x\"\n[workload]\nbogus = 1\n[study]\nkind = \"grid\"\n",
+            "name = \"x\"\n[options]\nbogus = 1\n[study]\nkind = \"grid\"\n",
+            "name = \"x\"\n[output]\nbogus = 1\n[study]\nkind = \"grid\"\n",
+            "name = \"x\"\n[cluster]\npreset = \"baseline\"\nbogus = 1\n\
+             [study]\nkind = \"grid\"\n",
+        ] {
+            let e = ScenarioSpec::parse_str(doc).unwrap_err();
+            assert!(e.to_string().contains("bogus"), "{doc}: {e}");
+        }
+    }
+
+    #[test]
+    fn missing_name_or_study_rejected() {
+        assert!(ScenarioSpec::parse_str("[study]\nkind = \"grid\"\n").is_err());
+        assert!(ScenarioSpec::parse_str("name = \"x\"\n").is_err());
+        assert!(ScenarioSpec::parse_str(
+            "name = \"x\"\n[study]\nkind = \"wat\"\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        for doc in [
+            // bad strategy label
+            "name = \"x\"\n[study]\nkind = \"grid\"\n\
+             strategies = [\"MP8DP8\"]\n",
+            // bad zero stage
+            "name = \"x\"\n[study]\nkind = \"grid\"\nzero_stages = [5]\n",
+            // bad collective
+            "name = \"x\"\n[study]\nkind = \"grid\"\n\
+             collectives = [\"butterfly\"]\n",
+            // bad backend
+            "name = \"x\"\n[options]\nbackend = \"gpu\"\n\
+             [study]\nkind = \"grid\"\n",
+            // non-integer sizes
+            "name = \"x\"\n[study]\nkind = \"cluster-size\"\n\
+             sizes = [1.5]\n",
+            // unknown preset
+            "name = \"x\"\n[cluster]\npreset = \"Z9\"\n\
+             [study]\nkind = \"grid\"\n",
+        ] {
+            assert!(ScenarioSpec::parse_str(doc).is_err(), "{doc}");
+        }
+    }
+
+    #[test]
+    fn cluster_compare_rejects_cluster_section() {
+        let e = ScenarioSpec::parse_str(
+            "name = \"x\"\n[cluster]\npreset = \"baseline\"\n\
+             [study]\nkind = \"cluster-compare\"\nclusters = [\"A0\"]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("cluster-compare"), "{e}");
+        // Without the section it parses, and its JSON roundtrips (no
+        // cluster key is emitted).
+        let s = ScenarioSpec::parse_str(
+            "name = \"x\"\n[study]\nkind = \"cluster-compare\"\n\
+             clusters = [\"A0\"]\n",
+        )
+        .unwrap();
+        let back = ScenarioSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn dlrm_typo_keys_rejected_in_workload_and_study() {
+        let e = ScenarioSpec::parse_str(
+            "name = \"x\"\n[workload]\nkind = \"dlrm\"\nemb_parms = 5\n\
+             [study]\nkind = \"grid\"\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("emb_parms"), "{e}");
+        let e = ScenarioSpec::parse_str(
+            "name = \"x\"\n[study]\nkind = \"cluster-compare\"\n\
+             clusters = [\"A0\"]\ndlrm = { emb_parms = 5 }\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("emb_parms"), "{e}");
+    }
+
+    #[test]
+    fn inline_cluster_rejects_stray_keys() {
+        let mut cluster = match presets::dgx_a100_64().to_json() {
+            Value::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        // An override-style key on an inline cluster would otherwise be
+        // dropped silently by ClusterConfig::from_json.
+        cluster.insert("local_capacity_gb".into(), Value::Num(40.0));
+        let mut doc = BTreeMap::new();
+        doc.insert("name".into(), Value::Str("x".into()));
+        doc.insert("cluster".into(), Value::Obj(cluster));
+        let mut study = BTreeMap::new();
+        study.insert("kind".into(), Value::Str("grid".into()));
+        doc.insert("study".into(), Value::Obj(study));
+        let e = ScenarioSpec::from_json(&Value::Obj(doc)).unwrap_err();
+        assert!(e.to_string().contains("local_capacity_gb"), "{e}");
+    }
+
+    #[test]
+    fn json_roundtrip_through_text() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"rt\"\ntitle = \"Roundtrip\"\n\
+             [workload]\nkind = \"gemm\"\nm = 65536\nk = 8192\nn = 8192\n\
+             [cluster]\npreset = \"B1\"\n\
+             [study]\nkind = \"grid\"\nstrategies = [\"MP1_DP8\"]\n\
+             em_bandwidths_gbps = [250, 2039]\n\
+             [options]\ninfinite_memory = true\nbackend = \"des\"\n\
+             [output]\nformat = \"csv\"\nnormalize = \"best\"\n\
+             footprint = true\nnotes = [\"a\", \"b\"]\n",
+        )
+        .unwrap();
+        let text = s.to_json().to_string_pretty();
+        let back =
+            ScenarioSpec::from_json(&crate::util::json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn toml_export_roundtrips() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"rt\"\n[study]\nkind = \"packing\"\ninstances = 8\n\
+             packings = [32, 16, 8]\nem_bandwidths_gbps = [250, 500]\n\
+             [workload]\nkind = \"dlrm\"\n",
+        )
+        .unwrap();
+        let toml = s.to_toml().unwrap();
+        let back = ScenarioSpec::parse_str(&toml).unwrap();
+        assert_eq!(s, back);
+    }
+}

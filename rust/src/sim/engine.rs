@@ -47,7 +47,10 @@ pub struct SimStats {
 /// DES result: breakdown + stats.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimResult {
+    /// Per-phase training-time breakdown (same shape as the analytical
+    /// backend's).
     pub breakdown: TrainingBreakdown,
+    /// Simulation statistics (event count, link utilization).
     pub stats: SimStats,
 }
 

@@ -10,9 +10,11 @@ pub type SimTime = f64;
 /// A scheduled event.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Event<T> {
+    /// Fire time, seconds.
     pub time: SimTime,
     /// Monotonic sequence number — FIFO among equal-time events.
     pub seq: u64,
+    /// The event payload.
     pub payload: T,
 }
 

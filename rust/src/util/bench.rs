@@ -43,7 +43,9 @@ impl Default for BenchConfig {
 /// One benchmark's results.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Timing summary over the measured iterations, seconds.
     pub summary: Summary,
 }
 

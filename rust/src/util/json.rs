@@ -14,11 +14,17 @@ use crate::error::{Error, Result};
 /// output; COMET configs never rely on duplicate keys).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64; integers render without a fraction).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (key order = `BTreeMap` order; deterministic output).
     Obj(BTreeMap<String, Value>),
 }
 

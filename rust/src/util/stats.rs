@@ -3,12 +3,19 @@
 /// Summary statistics over a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Minimum.
     pub min: f64,
+    /// Maximum.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// 50th percentile (linear interpolation).
     pub median: f64,
+    /// 95th percentile (linear interpolation).
     pub p95: f64,
+    /// Population standard deviation.
     pub stddev: f64,
 }
 

@@ -17,6 +17,7 @@ use crate::error::{Error, Result};
 /// DLRM hyper-parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Dlrm {
+    /// Model name used in reports.
     pub name: String,
     /// Total embedding parameters (dominates model size).
     pub emb_params: f64,

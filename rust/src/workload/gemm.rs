@@ -1,6 +1,11 @@
-//! GEMM helpers shared by the workload builders.
+//! GEMM helpers shared by the workload builders, plus [`DenseGemm`] — a
+//! single-GEMM microbenchmark workload for the scenario engine.
 
-use super::layer::{LayerOp, Phase};
+use super::layer::{
+    Collective, Comm, CommScope, Layer, LayerOp, Phase, Workload, FP16,
+};
+use crate::error::{Error, Result};
+use crate::parallel::Strategy;
 
 /// FLOPs of one `(m x k) . (k x n)` GEMM (multiply-accumulate = 2 ops).
 pub fn gemm_flops(m: f64, k: f64, n: f64) -> f64 {
@@ -31,6 +36,89 @@ pub fn phase_operand_elems(op: &LayerOp, phase: Phase) -> f64 {
     (q.u + q.v + q.w) / super::layer::FP16
 }
 
+/// A single dense GEMM treated as a trainable "model": `Y = X(m x k) .
+/// W(k x n)` plus the mixed-precision Adam update of its `k x n` weights.
+///
+/// This is the scenario engine's microbenchmark workload — it isolates the
+/// roofline + collective cost model on one layer, which makes bandwidth
+/// and strategy sensitivities directly legible. Data parallelism splits
+/// the `m` (batch) dimension and all-reduces the full weight gradient;
+/// model parallelism is intentionally unsupported (a lone GEMM has no
+/// Megatron-style shard structure worth modeling).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseGemm {
+    /// Workload name used in reports (default "gemm").
+    pub name: String,
+    /// Batch (rows) dimension of the activation operand.
+    pub m: f64,
+    /// Contraction dimension.
+    pub k: f64,
+    /// Output-feature dimension (the weight is `k x n`).
+    pub n: f64,
+}
+
+impl DenseGemm {
+    /// A GEMM workload with the default name.
+    pub fn new(m: f64, k: f64, n: f64) -> DenseGemm {
+        DenseGemm {
+            name: "gemm".into(),
+            m,
+            k,
+            n,
+        }
+    }
+
+    /// Weight parameters (`k x n`).
+    pub fn total_params(&self) -> f64 {
+        self.k * self.n
+    }
+
+    /// Decompose for a strategy. Only data parallelism is supported:
+    /// `mp` must be 1, and `dp` splits the batch dimension.
+    pub fn build(&self, strategy: &Strategy) -> Result<Workload> {
+        if strategy.mp != 1 {
+            return Err(Error::Config(format!(
+                "GEMM workload supports data parallelism only (MP must be \
+                 1, got {})",
+                strategy.mp
+            )));
+        }
+        let dp = strategy.dp as f64;
+        let rows = self.m / dp;
+        if rows < 1.0 || self.k < 1.0 || self.n < 1.0 {
+            return Err(Error::Config(format!(
+                "GEMM {}x{}x{} cannot be split {} ways",
+                self.m, self.k, self.n, strategy.dp
+            )));
+        }
+        let mut mm = Layer::new("gemm", gemm(rows, self.k, self.n), 1.0);
+        mm.comm_wg = Comm {
+            collective: Collective::AllReduce,
+            bytes: self.k * self.n * FP16,
+            scope: CommScope::Dp,
+        };
+        let params = self.total_params();
+        // Mixed-precision Adam streams 16 B of state per param, read +
+        // write (same accounting as the Transformer builder).
+        let update = Layer::new(
+            "weight-update",
+            LayerOp::WeightUpdate {
+                params,
+                bytes: params * 32.0,
+            },
+            1.0,
+        );
+        Ok(Workload {
+            name: format!("{}@{}", self.name, strategy.label()),
+            layers: vec![mm, update],
+            mp: 1,
+            dp: strategy.dp,
+            nodes: strategy.dp,
+            total_params: params,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -56,5 +144,32 @@ mod tests {
     #[test]
     fn weight_bytes_fp16() {
         assert_eq!(weight_bytes(10.0, 20.0), 400.0);
+    }
+
+    #[test]
+    fn dense_gemm_builds_dp_workload() {
+        let g = DenseGemm::new(65_536.0, 8192.0, 8192.0);
+        let w = g.build(&Strategy::new(1, 8)).unwrap();
+        assert_eq!(w.nodes, 8);
+        assert_eq!(w.layers.len(), 2);
+        // Batch split 8 ways; weight shard replicated.
+        match w.layers[0].op {
+            LayerOp::Gemm { m, k, n } => {
+                assert_eq!(m, 65_536.0 / 8.0);
+                assert_eq!((k, n), (8192.0, 8192.0));
+            }
+            _ => panic!("first layer must be the GEMM"),
+        }
+        assert_eq!(w.layers[0].comm_wg.collective, Collective::AllReduce);
+        assert_eq!(w.layers[0].comm_wg.bytes, 8192.0 * 8192.0 * FP16);
+        assert_eq!(w.total_params, 8192.0 * 8192.0);
+    }
+
+    #[test]
+    fn dense_gemm_rejects_mp_and_oversplit() {
+        let g = DenseGemm::new(64.0, 64.0, 64.0);
+        assert!(g.build(&Strategy::new(2, 4)).is_err());
+        assert!(g.build(&Strategy::new(1, 128)).is_err());
+        assert!(g.build(&Strategy::new(1, 64)).is_ok());
     }
 }

@@ -29,10 +29,15 @@ impl Phase {
 /// Collective type (matches the artifact ABI codes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Collective {
+    /// No communication.
     None,
+    /// All-reduce.
     AllReduce,
+    /// All-to-all (personalized exchange).
     AllToAll,
+    /// All-gather.
     AllGather,
+    /// Reduce-scatter.
     ReduceScatter,
 }
 
@@ -63,9 +68,11 @@ pub enum CommScope {
 /// One communication collective attached to a layer phase.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Comm {
+    /// Collective type.
     pub collective: Collective,
     /// Payload bytes per participant.
     pub bytes: f64,
+    /// Node group the collective spans.
     pub scope: CommScope,
 }
 
@@ -236,9 +243,11 @@ pub struct Layer {
     pub repeat: f64,
     /// Extra parameters not captured by `op` (embedding tables).
     pub extra_params: f64,
-    /// Communication in each phase.
+    /// Communication in the forward pass.
     pub comm_fp: Comm,
+    /// Communication in the input-gradient phase.
     pub comm_ig: Comm,
+    /// Communication in the weight-gradient phase.
     pub comm_wg: Comm,
 }
 

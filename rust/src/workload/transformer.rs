@@ -35,6 +35,7 @@ use crate::parallel::Strategy;
 /// Transformer hyper-parameters (the model "signature" of SIV-A).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Transformer {
+    /// Model name used in reports.
     pub name: String,
     /// Encoder/decoder stack count (Table II's `#Stacks` = N).
     pub stacks: usize,

@@ -94,6 +94,54 @@ fn unknown_args_fail_cleanly() {
 }
 
 #[test]
+fn scenario_list_names_builtins() {
+    let (ok, stdout, _) = comet(&["scenario", "list"]);
+    assert!(ok);
+    for name in ["quickstart", "fig8a", "fig15", "memory-expansion"] {
+        assert!(stdout.contains(name), "{name} missing:\n{stdout}");
+    }
+}
+
+#[test]
+fn scenario_run_builtin_by_name() {
+    let (ok, stdout, stderr) = comet(&["scenario", "run", "quickstart"]);
+    assert!(ok, "stderr:\n{stderr}");
+    assert!(stdout.contains("MP8_DP8"), "{stdout}");
+    assert!(stdout.contains("Norm_to_best"));
+}
+
+#[test]
+fn scenario_run_from_checked_in_file() {
+    // Tests run with cwd = rust/; the spec fixtures live at the repo root.
+    let (ok, stdout, stderr) =
+        comet(&["scenario", "run", "../scenarios/quickstart.toml"]);
+    assert!(ok, "stderr:\n{stderr}");
+    assert!(stdout.contains("Quickstart"), "{stdout}");
+}
+
+#[test]
+fn scenario_show_and_export_roundtrip() {
+    let (ok, stdout, _) = comet(&["scenario", "show", "fig9"]);
+    assert!(ok);
+    assert!(stdout.contains("\"kind\": \"grid\""), "{stdout}");
+    let (ok, stdout, _) = comet(&["scenario", "export", "fig9"]);
+    assert!(ok);
+    // The exported TOML must parse back to the same spec.
+    let spec = comet::scenario::ScenarioSpec::parse_str(&stdout).unwrap();
+    assert_eq!(spec, comet::scenario::registry::get("fig9").unwrap());
+}
+
+#[test]
+fn scenario_errors_are_clean() {
+    let (ok, _, stderr) = comet(&["scenario", "run", "no-such-scenario"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown scenario"), "{stderr}");
+    let (ok, _, stderr) = comet(&["scenario", "frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("run|list|show|export"), "{stderr}");
+}
+
+#[test]
 fn validate_passes() {
     let (ok, stdout, stderr) = comet(&["validate"]);
     assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");

@@ -1,0 +1,231 @@
+//! Scenario-engine integration tests: built-in registry specs must
+//! reproduce the legacy hand-written figure drivers cell-for-cell, specs
+//! must round-trip through JSON text and TOML export, and malformed
+//! specs must fail loudly.
+
+use comet::coordinator::{sweep, Coordinator};
+use comet::report::FigureData;
+use comet::scenario::{registry, run, ScenarioSpec};
+use comet::util::json;
+
+/// Full structural + bit-exact numeric equality (NaN == NaN: the same
+/// code path must produce the same bits).
+fn assert_figures_eq(got: &FigureData, want: &FigureData) {
+    assert_eq!(got.id, want.id);
+    assert_eq!(got.title, want.title);
+    assert_eq!(got.row_label, want.row_label);
+    assert_eq!(got.columns, want.columns, "{}", got.id);
+    assert_eq!(got.notes, want.notes, "{}", got.id);
+    assert_eq!(got.rows.len(), want.rows.len(), "{}", got.id);
+    for ((gl, gv), (wl, wv)) in got.rows.iter().zip(&want.rows) {
+        assert_eq!(gl, wl, "{}", got.id);
+        assert_eq!(gv.len(), wv.len(), "{}/{}", got.id, gl);
+        for (i, (g, w)) in gv.iter().zip(wv).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "{}/{}[{i}]: {g} != {w}",
+                got.id,
+                gl
+            );
+        }
+    }
+}
+
+fn run_builtin(name: &str, coord: &Coordinator) -> FigureData {
+    let spec = registry::get(name).unwrap();
+    run(&spec, coord).unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+// ---- registry vs legacy drivers (the acceptance-criterion trio first) -----
+
+#[test]
+fn fig8a_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig8a", &coord), &sweep::fig8a(&coord).unwrap());
+}
+
+#[test]
+fn fig11_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig11", &coord), &sweep::fig11(&coord).unwrap());
+}
+
+#[test]
+fn fig13a_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig13a", &coord), &sweep::fig13a(&coord).unwrap());
+}
+
+#[test]
+fn fig6_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig6", &coord), &sweep::fig6());
+}
+
+#[test]
+fn fig8b_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig8b", &coord), &sweep::fig8b(&coord).unwrap());
+}
+
+#[test]
+fn fig9_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig9", &coord), &sweep::fig9(&coord).unwrap());
+}
+
+#[test]
+fn fig10_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig10", &coord), &sweep::fig10(&coord).unwrap());
+}
+
+#[test]
+fn fig12_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig12", &coord), &sweep::fig12(&coord).unwrap());
+}
+
+#[test]
+fn fig13b_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig13b", &coord), &sweep::fig13b(&coord).unwrap());
+}
+
+#[test]
+fn fig15_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(&run_builtin("fig15", &coord), &sweep::fig15(&coord).unwrap());
+}
+
+#[test]
+fn ablation_collectives_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(
+        &run_builtin("ablation-collectives", &coord),
+        &sweep::ablation_collectives(&coord).unwrap(),
+    );
+}
+
+#[test]
+fn ablation_zero_matches_legacy() {
+    let coord = Coordinator::native();
+    assert_figures_eq(
+        &run_builtin("ablation-zero", &coord),
+        &sweep::ablation_zero(&coord).unwrap(),
+    );
+}
+
+// ---- spec round-trips -----------------------------------------------------
+
+#[test]
+fn every_builtin_roundtrips_through_json_text() {
+    for name in registry::names() {
+        let spec = registry::get(name).unwrap();
+        let text = spec.to_json().to_string_pretty();
+        let back = ScenarioSpec::from_json(&json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(spec, back, "{name}");
+    }
+}
+
+#[test]
+fn every_builtin_roundtrips_through_toml_export() {
+    for name in registry::names() {
+        let spec = registry::get(name).unwrap();
+        let toml = spec.to_toml().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let back = ScenarioSpec::parse_str(&toml)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(spec, back, "{name}");
+    }
+}
+
+// ---- sanity on case studies ----------------------------------------------
+
+#[test]
+fn memory_expansion_crosses_over() {
+    // The case study's headline: MP8_DP128 loses at 250 GB/s EM, wins by
+    // ~1.4x at full-rate EM (paper Ex. 1).
+    let coord = Coordinator::native();
+    let f = run_builtin("memory-expansion", &coord);
+    let lo = f.cell("MP8_DP128", "250GB/s").unwrap();
+    let hi = f.cell("MP8_DP128", "2039GB/s").unwrap();
+    assert!(lo < 1.0, "{lo}");
+    assert!(hi > 1.0 && hi < 2.5, "{hi}");
+}
+
+#[test]
+fn cluster_compare_case_study_mirrors_fig15_values() {
+    let coord = Coordinator::native();
+    let case = run_builtin("cluster-compare", &coord);
+    let fig15 = sweep::fig15(&coord).unwrap();
+    // Same engine, same numbers; only id/title differ.
+    for (row, want) in case.rows.iter().zip(&fig15.rows) {
+        assert_eq!(row.0, want.0);
+        for (g, w) in row.1.iter().zip(&want.1) {
+            assert_eq!(g.to_bits(), w.to_bits(), "{}", row.0);
+        }
+    }
+    let c = case.cell("C2", "DLRM_x8").unwrap();
+    assert!(c > 2.0, "C2 DLRM speedup {c}");
+}
+
+#[test]
+fn quickstart_and_gemm_builtins_run() {
+    let coord = Coordinator::native();
+    let q = run_builtin("quickstart", &coord);
+    assert_eq!(q.rows.len(), 4);
+    let g = run_builtin("gemm-roofline", &coord);
+    assert_eq!(g.rows.len(), 4);
+    assert!(g.cell("MP1_DP512", "Total_s").unwrap() > 0.0);
+}
+
+// ---- error paths ----------------------------------------------------------
+
+#[test]
+fn malformed_specs_fail_loudly() {
+    // TOML syntax error.
+    assert!(ScenarioSpec::parse_str("name = \n").is_err());
+    // Unknown study kind.
+    assert!(ScenarioSpec::parse_str(
+        "name = \"x\"\n[study]\nkind = \"frobnicate\"\n"
+    )
+    .is_err());
+    // Unknown key (typo'd axis name).
+    assert!(ScenarioSpec::parse_str(
+        "name = \"x\"\n[study]\nkind = \"grid\"\nem_bandwidth_gbps = [1]\n"
+    )
+    .is_err());
+    // Strategy label garbage.
+    assert!(ScenarioSpec::parse_str(
+        "name = \"x\"\n[study]\nkind = \"grid\"\nstrategies = [\"8x128\"]\n"
+    )
+    .is_err());
+    // Cluster that fails validation (non-power-of-two).
+    assert!(ScenarioSpec::parse_str(
+        "name = \"x\"\n[cluster]\npreset = \"baseline\"\nn_nodes = 1000\n\
+         [study]\nkind = \"grid\"\n"
+    )
+    .is_err());
+}
+
+#[test]
+fn run_rejects_inconsistent_specs() {
+    let coord = Coordinator::native();
+    // Speedup without a baseline.
+    let spec = ScenarioSpec::parse_str(
+        "name = \"x\"\n[study]\nkind = \"grid\"\n\
+         strategies = [\"MP8_DP128\"]\nem_bandwidths_gbps = [500]\n\
+         [output]\ncontent = \"speedup\"\n",
+    )
+    .unwrap();
+    assert!(run(&spec, &coord).is_err());
+    // DLRM study with a transformer workload.
+    let spec = ScenarioSpec::parse_str(
+        "name = \"x\"\n[study]\nkind = \"packing\"\npackings = [8]\n\
+         em_bandwidths_gbps = [500]\n",
+    )
+    .unwrap();
+    assert!(run(&spec, &coord).is_err());
+}
