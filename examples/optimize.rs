@@ -1,0 +1,85 @@
+//! Find the best (strategy, memory) co-design for GPT-3 175B on the
+//! A100-like baseline cluster — without evaluating the whole grid.
+//!
+//! The branch-and-bound optimizer walks the strategy x expanded-memory
+//! lattice best-first, pruning subtrees whose admissible lower bound
+//! (compute-only roofline + exact blocking collectives) already loses to
+//! the incumbent top-k. Same engine as `comet optimize` and the
+//! `kind = "optimize"` scenarios; mirrors examples/scenario_run.rs.
+//!
+//! ```sh
+//! cargo run --release --example optimize
+//! ```
+
+use comet::coordinator::Coordinator;
+use comet::scenario::{optimizer_for, run_optimize, ScenarioSpec};
+
+fn main() -> comet::Result<()> {
+    // GPT-3 175B (Brown et al.): 96 stacks, d_model 12288, 96 heads,
+    // seq 2048, expressed as overrides on the transformer workload.
+    // MP is capped at 64 (it must divide the 96 attention heads' power-
+    // of-two sweep ceiling).
+    let spec = ScenarioSpec::parse_str(
+        r#"
+name = "optimize-gpt3"
+title = "Best (strategy, memory) co-design for GPT-3 175B on 1024 A100s"
+
+[workload]
+kind = "transformer"
+preset = "transformer-1t"
+name = "gpt3-175b"
+stacks = 96
+d_model = 12288
+heads = 96
+seq = 2048
+vocab = 50257
+
+[cluster]
+preset = "baseline"
+
+[study]
+kind = "optimize"
+strategies = "pow2"
+min_mp = 1
+max_mp = 64
+em_bandwidths_gbps = [250, 500, 1000, 2039]
+top_k = 5
+"#,
+    )?;
+
+    let coord = Coordinator::native();
+    let (fig, out) = run_optimize(&spec, &coord)?;
+    println!("{}", fig.to_table());
+
+    let best = out.best().expect("feasible point");
+    println!(
+        "argmin: {} ({:.3} s/iter, footprint {:.0} GB)",
+        best.label,
+        best.total(),
+        best.footprint / 1e9
+    );
+    println!(
+        "search evaluated {}/{} lattice points ({} pruned by bound, {} \
+         infeasible)",
+        out.evaluated, out.total_points, out.pruned, out.infeasible
+    );
+    println!("\ncompute-vs-communication Pareto frontier:");
+    for c in &out.frontier {
+        println!(
+            "  {:<28} compute {:.3} s  exposed comm {:.3} s",
+            c.label,
+            c.breakdown.compute(),
+            c.breakdown.exposed_comm()
+        );
+    }
+
+    // The exhaustive oracle agrees (and is what bench_optimizer compares
+    // evaluated-point counts against).
+    let exhaustive = optimizer_for(&spec, &coord)?.exhaustive()?;
+    assert_eq!(exhaustive.best().unwrap().label, best.label);
+    println!(
+        "\nexhaustive enumeration of all {} points confirms the argmin",
+        exhaustive.evaluated
+    );
+    Ok(())
+}

@@ -37,6 +37,14 @@ fn main() {
             black_box(sweep::all_figures(&ac).unwrap());
         });
     }
+    // Cache efficacy of the persistent coordinator travels with the
+    // trajectory point — the warm-cache timing is meaningless without it.
+    let (hits, misses) = coord.cache_stats();
+    b.metric("dse/warm_eval_cache_hits", hits as f64);
+    b.metric("dse/warm_eval_cache_misses", misses as f64);
+    let (dhits, dmisses) = coord.derive_cache_stats();
+    b.metric("dse/warm_derive_cache_hits", dhits as f64);
+    b.metric("dse/warm_decompositions", dmisses as f64);
     b.report("bench_dse_speed");
 
     // Trajectory point: `cargo bench` runs with the package root (rust/)

@@ -1,0 +1,78 @@
+//! Pruned-vs-exhaustive co-design search: times the branch-and-bound
+//! optimizer against full-grid enumeration on both built-in optimize
+//! scenarios and records the evaluated/pruned point counts alongside the
+//! timings in `BENCH_dse.json` (see BENCHMARKS.md for the comparison
+//! rule: search must evaluate <= 50% of the grid and return the
+//! identical argmin — the counts recorded here are what the rule is
+//! checked against over time).
+use comet::coordinator::Coordinator;
+use comet::scenario::{optimizer_for, registry};
+use comet::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    for name in ["optimize-transformer", "optimize-dlrm"] {
+        let spec = registry::get(name).unwrap();
+        // Correctness pass (untimed): the pruned search must return the
+        // exhaustive argmin.
+        let coord = Coordinator::native();
+        let opt = optimizer_for(&spec, &coord).unwrap();
+
+        let search = opt.search().unwrap();
+        let exhaustive = opt.exhaustive().unwrap();
+        assert_eq!(
+            search.best().unwrap().label,
+            exhaustive.best().unwrap().label,
+            "{name}: pruned search must return the exhaustive argmin"
+        );
+        println!(
+            "{name}: argmin {} | search evaluated {}/{} ({} pruned, {} \
+             infeasible) vs exhaustive {}",
+            search.best().unwrap().label,
+            search.evaluated,
+            search.total_points,
+            search.pruned,
+            search.infeasible,
+            exhaustive.evaluated,
+        );
+
+        // Timed runs build a fresh coordinator per iteration so every
+        // leaf evaluation is real work, not a warm-cache lookup — the
+        // pruned-vs-exhaustive wall-clock gap is the point of the bench.
+        b.bench(&format!("optimizer/{name}_search"), || {
+            let c = Coordinator::native();
+            let o = optimizer_for(&spec, &c).unwrap();
+            black_box(o.search().unwrap());
+        });
+        b.bench(&format!("optimizer/{name}_exhaustive"), || {
+            let c = Coordinator::native();
+            let o = optimizer_for(&spec, &c).unwrap();
+            black_box(o.exhaustive().unwrap());
+        });
+        b.metric(
+            &format!("optimizer/{name}_evaluated"),
+            search.evaluated as f64,
+        );
+        b.metric(&format!("optimizer/{name}_pruned"), search.pruned as f64);
+        b.metric(
+            &format!("optimizer/{name}_infeasible"),
+            search.infeasible as f64,
+        );
+        b.metric(
+            &format!("optimizer/{name}_exhaustive_evaluated"),
+            exhaustive.evaluated as f64,
+        );
+    }
+    b.report("bench_optimizer");
+
+    // Trajectory point next to the repo-root BENCHMARKS.md (cargo bench
+    // runs with rust/ as CWD), same file the DSE bench appends to.
+    let path = std::env::var("COMET_BENCH_JSON")
+        .unwrap_or_else(|_| "../BENCH_dse.json".to_string());
+    let label = std::env::var("COMET_BENCH_LABEL")
+        .unwrap_or_else(|_| "bench_optimizer".to_string());
+    match b.append_json(&path, &label) {
+        Ok(()) => println!("recorded trajectory point in {path}"),
+        Err(e) => eprintln!("could not record {path}: {e}"),
+    }
+}

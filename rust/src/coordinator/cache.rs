@@ -7,13 +7,19 @@
 //! **once** per input by the coordinator ([`ModelInputs::fingerprint`])
 //! and passed through [`EvalCache::get_by_key`] / [`EvalCache::put_by_key`]
 //! — the old `get` + `put` pair hashed every miss twice.
+//!
+//! [`DeriveCache`] is the stage-1 companion: it memoizes workload
+//! decompositions (the cluster-independent half of the two-stage derive)
+//! by [`Workload::fingerprint`], so grid sweeps decompose each distinct
+//! workload once instead of once per grid point.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::analytical::TrainingBreakdown;
-use crate::model::inputs::ModelInputs;
+use crate::model::inputs::{decompose, ModelInputs, WorkloadDecomposition};
+use crate::workload::Workload;
 
 /// Shard count: enough to make lock collisions rare at typical host core
 /// counts, small enough that `len()`/`clear()` stay cheap. Power of two so
@@ -97,6 +103,62 @@ impl EvalCache {
     /// Entries stored across all shards.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Stage-1 derive cache: memoizes [`WorkloadDecomposition`]s by
+/// [`Workload::fingerprint`], so a sweep that evaluates one workload
+/// across many (cluster, options) grid points decomposes it exactly once.
+/// The miss counter doubles as the decomposition-call counter the
+/// two-stage derive tests assert on.
+#[derive(Debug, Default)]
+pub struct DeriveCache {
+    map: Mutex<HashMap<u64, Arc<WorkloadDecomposition>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl DeriveCache {
+    /// Empty cache.
+    pub fn new() -> DeriveCache {
+        DeriveCache::default()
+    }
+
+    /// The decomposition of `workload`, computed on first sight and shared
+    /// (via `Arc`) afterwards. Decomposition happens under the map lock —
+    /// it is cheap (one pass over the layer list) and holding the lock
+    /// guarantees each distinct workload is decomposed exactly once even
+    /// under concurrent batches.
+    pub fn decomposition(&self, workload: &Workload) -> Arc<WorkloadDecomposition> {
+        let key = workload.fingerprint();
+        let mut map = self.map.lock().unwrap();
+        if let Some(dec) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return dec.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let dec = Arc::new(decompose(workload));
+        map.insert(key, dec.clone());
+        dec
+    }
+
+    /// (hits, misses) counters. `misses` is the number of decompositions
+    /// actually performed.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Distinct workloads decomposed so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
     }
 
     /// Whether the cache is empty.
@@ -200,6 +262,21 @@ mod tests {
         let (hits, misses) = cache.stats();
         assert_eq!(hits, N_SHARDS as u64 * 8);
         assert_eq!(misses, 0);
+    }
+
+    #[test]
+    fn derive_cache_decomposes_once_per_distinct_workload() {
+        let cache = DeriveCache::new();
+        let w8 = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let w16 = Transformer::t1().build(&Strategy::new(16, 64)).unwrap();
+        let a = cache.decomposition(&w8);
+        let b = cache.decomposition(&w8);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = cache.decomposition(&w16);
+        assert_eq!(c.mp, 16);
+        assert_eq!(cache.stats(), (1, 2));
+        assert_eq!(cache.len(), 2);
+        assert!(!cache.is_empty());
     }
 
     #[test]

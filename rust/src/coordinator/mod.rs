@@ -7,14 +7,19 @@ mod cache;
 mod scheduler;
 pub mod sweep;
 
-pub use cache::EvalCache;
+pub use cache::{DeriveCache, EvalCache};
 pub use scheduler::WorkerPool;
 pub use sweep::GridSweep;
+
+use std::sync::Arc;
 
 use crate::analytical::{evaluate as native_evaluate, TrainingBreakdown};
 use crate::config::ClusterConfig;
 use crate::error::Result;
-use crate::model::inputs::{derive_inputs, EvalOptions, ModelInputs};
+use crate::model::inputs::{
+    derive_inputs, resolve_inputs, EvalOptions, ModelInputs,
+    WorkloadDecomposition,
+};
 use crate::runtime::{BatchEvaluator, Runtime};
 use crate::sim::simulate;
 use crate::workload::Workload;
@@ -38,6 +43,7 @@ pub struct Coordinator {
     backend: Backend,
     runtime: Option<Runtime>,
     cache: EvalCache,
+    derive: DeriveCache,
     pool: WorkerPool,
 }
 
@@ -70,6 +76,7 @@ impl Coordinator {
             backend: Backend::Native,
             runtime: None,
             cache: EvalCache::new(),
+            derive: DeriveCache::new(),
             pool: WorkerPool::new(default_threads()),
         }
     }
@@ -80,6 +87,7 @@ impl Coordinator {
             backend: Backend::Des,
             runtime: None,
             cache: EvalCache::new(),
+            derive: DeriveCache::new(),
             pool: WorkerPool::new(default_threads()),
         }
     }
@@ -90,6 +98,7 @@ impl Coordinator {
             backend: Backend::Artifact,
             runtime: Some(Runtime::load_default()?),
             cache: EvalCache::new(),
+            derive: DeriveCache::new(),
             pool: WorkerPool::new(default_threads()),
         })
     }
@@ -205,19 +214,48 @@ impl Coordinator {
     /// Derive a batch of model inputs through the worker pool: the
     /// figure drivers enumerate their full (workload, cluster, options)
     /// grids up front and resolve them here concurrently.
+    ///
+    /// Two-stage: each **distinct** workload (by
+    /// [`Workload::fingerprint`]) is decomposed exactly once through the
+    /// coordinator's [`DeriveCache`] — a 1,000-point sweep over one
+    /// transformer decomposes it once, not 1,000 times — and the per-point
+    /// cluster/options resolution fans out over the pool.
     pub fn derive_batch(
         &self,
         specs: Vec<(Workload, ClusterConfig, EvalOptions)>,
     ) -> Result<Vec<ModelInputs>> {
+        // Stage 1 (serial, cached): decomposition per distinct workload.
+        let jobs: Vec<(Arc<WorkloadDecomposition>, ClusterConfig, EvalOptions)> =
+            specs
+                .into_iter()
+                .map(|(w, c, o)| (self.derive.decomposition(&w), c, o))
+                .collect();
+        // Stage 2 (parallel): bind every grid point to its cluster.
         self.pool
-            .map(specs, |(w, c, o)| derive_inputs(w, c, o))
+            .map(jobs, |(dec, c, o)| resolve_inputs(dec, c, o))
             .into_iter()
             .collect()
+    }
+
+    /// The decomposition of a workload, through the coordinator's derive
+    /// cache (the optimizer shares decompositions with the grid path
+    /// this way).
+    pub fn decomposition(
+        &self,
+        workload: &Workload,
+    ) -> Arc<WorkloadDecomposition> {
+        self.derive.decomposition(workload)
     }
 
     /// Cache statistics (hits, misses).
     pub fn cache_stats(&self) -> (u64, u64) {
         self.cache.stats()
+    }
+
+    /// Derive-cache statistics (hits, misses). Misses count actual
+    /// workload decompositions.
+    pub fn derive_cache_stats(&self) -> (u64, u64) {
+        self.derive.stats()
     }
 }
 
@@ -316,6 +354,62 @@ mod tests {
                 inp.name
             );
         }
+    }
+
+    #[test]
+    fn derive_batch_decomposes_once_per_distinct_workload() {
+        let coord = Coordinator::native();
+        let (w, c) = job();
+        // Ten grid points over the same workload (different options).
+        let specs: Vec<_> = (0..10)
+            .map(|i| {
+                (
+                    w.clone(),
+                    c.clone(),
+                    EvalOptions {
+                        em_frac_override: Some(i as f64 / 100.0),
+                        ..Default::default()
+                    },
+                )
+            })
+            .collect();
+        let inputs = coord.derive_batch(specs).unwrap();
+        assert_eq!(inputs.len(), 10);
+        let (hits, misses) = coord.derive_cache_stats();
+        assert_eq!(misses, 1, "one decomposition per distinct workload");
+        assert_eq!(hits, 9);
+        // A second batch with a new workload decomposes only the new one.
+        let w2 = Transformer::t1().build(&Strategy::new(16, 64)).unwrap();
+        coord
+            .derive_batch(vec![
+                (w2, c.clone(), EvalOptions::default()),
+                (w.clone(), c.clone(), EvalOptions::default()),
+            ])
+            .unwrap();
+        assert_eq!(coord.derive_cache_stats(), (10, 2));
+    }
+
+    #[test]
+    fn derive_batch_matches_single_pass_derive() {
+        let coord = Coordinator::native();
+        let c = presets::dgx_a100_1024();
+        let opts = EvalOptions::default();
+        let specs: Vec<_> = Strategy::sweep_bounded(1024, 1, 128)
+            .iter()
+            .map(|s| {
+                (
+                    Transformer::t1().build(s).unwrap(),
+                    c.clone(),
+                    opts,
+                )
+            })
+            .collect();
+        let singles: Vec<_> = specs
+            .iter()
+            .map(|(w, c, o)| derive_inputs(w, c, o).unwrap())
+            .collect();
+        let batched = coord.derive_batch(specs).unwrap();
+        assert_eq!(singles, batched);
     }
 
     #[test]

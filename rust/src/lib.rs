@@ -16,9 +16,10 @@
 //!   ([`parallel`]), cluster configuration ([`config`]), the analytical cost
 //!   model ([`compute`], [`network`], [`analytical`]), an ASTRA-SIM-like
 //!   discrete-event simulator ([`sim`]), the design-space-exploration
-//!   coordinator ([`coordinator`]), the declarative scenario engine
-//!   ([`scenario`]), figure/report drivers ([`report`]), and the PJRT
-//!   runtime ([`runtime`]).
+//!   coordinator ([`coordinator`]), the pruned co-design optimizer
+//!   ([`optimizer`]), the declarative scenario engine ([`scenario`]),
+//!   figure/report drivers ([`report`]), and the PJRT runtime
+//!   ([`runtime`]).
 //! * **L2/L1 (build-time Python)** — the same cost model expressed as a JAX
 //!   graph calling Pallas kernels, AOT-lowered once to `artifacts/*.hlo.txt`
 //!   and executed from Rust through the PJRT C API on the sweep hot path.
@@ -66,6 +67,7 @@ pub mod coordinator;
 pub mod error;
 pub mod model;
 pub mod network;
+pub mod optimizer;
 pub mod parallel;
 pub mod report;
 pub mod runtime;

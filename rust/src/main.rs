@@ -4,6 +4,11 @@
 //! ```text
 //! comet scenario <run FILE-or-NAME | list | show NAME | export NAME>
 //!       [--backend native|des|artifact|auto] [--out-dir DIR] [--out FILE]
+//!       [--verbose]
+//! comet optimize [--workload W] [--cluster PRESET] [--backend B]
+//!       [--min-mp N] [--max-mp N] [--em-bandwidths GB/s,..]
+//!       [--em-capacities GB,..] [--collectives ring,hierarchical]
+//!       [--zero-stages 0,2,..] [--top-k N] [--infinite-memory]
 //! comet figure <fig6|fig8a|fig8b|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|all>
 //!       [--backend native|des|artifact] [--out-dir DIR] [--csv]
 //! comet sweep   [--cluster PRESET] [--backend B] [--infinite-memory]
@@ -24,7 +29,10 @@ use comet::error::{Error, Result};
 use comet::model::inputs::{derive_inputs, EvalOptions};
 use comet::parallel::{footprint_per_node, Strategy, ZeroStage};
 use comet::report::FigureData;
-use comet::scenario::{self, registry, OutputFormat, ScenarioSpec};
+use comet::scenario::{
+    self, registry, OptionsSpec, OutputFormat, OutputSpec, ScenarioSpec,
+    StrategyAxis, Study, WorkloadSpec,
+};
 use comet::util::units::{fmt_bytes, fmt_secs};
 use comet::workload::dlrm::Dlrm;
 use comet::workload::transformer::Transformer;
@@ -346,6 +354,134 @@ fn cmd_validate(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated list of numbers ("250,500,2039").
+fn csv_f64(s: &str, flag: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            p.trim().parse::<f64>().map_err(|_| {
+                Error::Config(format!("--{flag}: bad number '{p}'"))
+            })
+        })
+        .collect()
+}
+
+/// `comet optimize`: construct an optimize scenario from flags and run
+/// the branch-and-bound search. The same engine as
+/// `comet scenario run optimize-*`, parameterized from the command line.
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let coord = coordinator_for(args)?;
+    let cluster = cluster_for(args)?;
+    let workload = match args.flag("workload").unwrap_or("transformer-1t") {
+        "transformer-1t" => WorkloadSpec::Transformer(Transformer::t1()),
+        "transformer-100m" => WorkloadSpec::Transformer(Transformer::t100m()),
+        "dlrm-1.2t" => WorkloadSpec::Dlrm(Dlrm::dlrm_1_2t()),
+        "dlrm-small" => WorkloadSpec::Dlrm(Dlrm::small()),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown workload '{other}' (transformer-1t|transformer-100m|\
+                 dlrm-1.2t|dlrm-small)"
+            )))
+        }
+    };
+    let num_flag = |name: &str, default: usize| -> Result<usize> {
+        match args.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{name}: bad integer '{v}'"))
+            }),
+        }
+    };
+    // Reuse the scenario-file parsers so the CLI and TOML surfaces accept
+    // exactly the same values (scenario::collective_of / zero_stage_of
+    // reject unknown names and non-integer stages alike).
+    let collectives = match args.flag("collectives") {
+        None => Vec::new(),
+        Some(s) => s
+            .split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| scenario::collective_of(p.trim()))
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let zero_stages = match args.flag("zero-stages") {
+        None => Vec::new(),
+        Some(s) => csv_f64(s, "zero-stages")?
+            .into_iter()
+            .map(scenario::zero_stage_of)
+            .collect::<Result<Vec<_>>>()?,
+    };
+    // DLRM workloads have no strategy axis: leave it at the spec default
+    // unless the user explicitly bounded it (optimizer_for then rejects
+    // the combination loudly).
+    let strategies = if matches!(workload, WorkloadSpec::Dlrm(_))
+        && args.flag("min-mp").is_none()
+        && args.flag("max-mp").is_none()
+    {
+        StrategyAxis::Pow2 {
+            min_mp: 1,
+            max_mp: None,
+        }
+    } else {
+        StrategyAxis::Pow2 {
+            min_mp: num_flag("min-mp", 1)?,
+            max_mp: Some(num_flag("max-mp", 128.min(cluster.n_nodes))?),
+        }
+    };
+    let study = Study::Optimize {
+        strategies,
+        em_bandwidths_gbps: match args.flag("em-bandwidths") {
+            Some(s) => csv_f64(s, "em-bandwidths")?,
+            None => Vec::new(),
+        },
+        em_capacities_gb: match args.flag("em-capacities") {
+            Some(s) => csv_f64(s, "em-capacities")?,
+            None => Vec::new(),
+        },
+        collectives,
+        zero_stages,
+        top_k: match num_flag("top-k", 5)? {
+            0 => {
+                return Err(Error::Config(
+                    "--top-k must be >= 1".into(),
+                ))
+            }
+            k => k,
+        },
+    };
+    let spec = ScenarioSpec {
+        name: "optimize".into(),
+        title: format!(
+            "Optimize {} on {} ({} nodes)",
+            workload.name(),
+            cluster.name,
+            cluster.n_nodes
+        ),
+        workload,
+        cluster,
+        study,
+        options: OptionsSpec {
+            infinite_memory: args.has("infinite-memory"),
+            ..Default::default()
+        },
+        output: OutputSpec::default(),
+    };
+    let (fig, out) = scenario::run_optimize(&spec, &coord)?;
+    emit_figure(&fig, args)?;
+    let (hits, misses) = coord.cache_stats();
+    let (dh, dm) = coord.derive_cache_stats();
+    eprintln!(
+        "[comet] optimizer backend={:?}: evaluated {}/{} points, {} pruned \
+         by bound, {} infeasible; eval cache {hits}/{misses} hit/miss, \
+         {dm} decompositions ({dh} reused)",
+        coord.backend(),
+        out.evaluated,
+        out.total_points,
+        out.pruned,
+        out.infeasible,
+    );
+    Ok(())
+}
+
 /// Resolve a `scenario run|show|export` target: a file if one exists at
 /// that path, otherwise a built-in registry name (so a stray directory
 /// named like a built-in cannot shadow it).
@@ -371,7 +507,15 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             } else {
                 spec.options.backend.coordinator()?
             };
-            let fig = scenario::run(&spec, &coord)?;
+            // Optimize studies keep their search report so --verbose can
+            // surface evaluated/pruned counts without re-running.
+            let (fig, search) = if matches!(spec.study, Study::Optimize { .. })
+            {
+                let (fig, out) = scenario::run_optimize(&spec, &coord)?;
+                (fig, Some(out))
+            } else {
+                (scenario::run(&spec, &coord)?, None)
+            };
             match spec.output.format {
                 OutputFormat::Table => println!("{}", fig.to_table()),
                 OutputFormat::Csv => println!("{}", fig.to_csv()),
@@ -402,6 +546,24 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 spec.name,
                 coord.backend()
             );
+            if args.has("verbose") {
+                let (dh, dm) = coord.derive_cache_stats();
+                eprintln!(
+                    "[comet] derive cache {dh} hits / {dm} misses \
+                     ({dm} workload decompositions)"
+                );
+                if let Some(out) = &search {
+                    eprintln!(
+                        "[comet] optimizer: evaluated {}/{} points, {} \
+                         pruned by bound, {} infeasible, frontier {}",
+                        out.evaluated,
+                        out.total_points,
+                        out.pruned,
+                        out.infeasible,
+                        out.frontier.len()
+                    );
+                }
+            }
             Ok(())
         }
         Some("list") | None => {
@@ -446,7 +608,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: comet <scenario|figure|sweep|eval|footprint|config|workload|compare|validate> [options]
+const USAGE: &str = "usage: comet <scenario|optimize|figure|sweep|eval|footprint|config|workload|compare|validate> [options]
 see README.md for per-command options";
 
 fn run() -> Result<()> {
@@ -454,6 +616,7 @@ fn run() -> Result<()> {
     let args = Args::parse(&raw);
     match args.positional.first().map(String::as_str) {
         Some("scenario") => cmd_scenario(&args),
+        Some("optimize") => cmd_optimize(&args),
         Some("figure") => cmd_figure(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("eval") => cmd_eval(&args),

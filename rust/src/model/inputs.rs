@@ -4,12 +4,24 @@
 //! structure; every backend (native analytical, AOT artifact, DES) consumes
 //! the same [`ModelInputs`], which is what makes their cross-validation
 //! meaningful.
+//!
+//! Derivation is **two-stage**: [`decompose`] extracts the
+//! cluster-independent [`WorkloadDecomposition`] (per-layer
+//! [`PhaseQuantities`], unresolved collectives, workload-only footprint
+//! terms) and [`resolve_inputs`] binds it to a concrete cluster and
+//! options. A sweep that evaluates one workload across 1,000 grid points
+//! decomposes it once and resolves 1,000 times; the single-pass
+//! [`derive_inputs`] is retained for one-off callers and as the
+//! equivalence oracle.
 
 use crate::config::ClusterConfig;
 use crate::error::{Error, Result};
 use crate::network::{CollectiveImpl, CollectiveSpec};
-use crate::parallel::{footprint_per_node, Strategy, ZeroStage};
-use crate::workload::{CommScope, Phase, PhaseQuantities, Workload};
+use crate::parallel::{
+    activation_working_bytes, footprint_per_node, model_state_bytes,
+    residual_state_bytes, Strategy, ZeroStage,
+};
+use crate::workload::{Comm, CommScope, Phase, PhaseQuantities, Workload};
 
 /// Evaluation options (the paper's per-figure modeling switches).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -147,25 +159,193 @@ impl ModelInputs {
     }
 }
 
-/// Resolve a [`CommScope`] into a two-level group shape.
+/// Resolve a [`CommScope`] into a two-level group shape for a workload of
+/// the given (MP, DP, nodes) layout.
 fn resolve_scope(
     scope: CommScope,
-    workload: &Workload,
+    mp: usize,
+    dp: usize,
+    nodes: usize,
     pod_size: usize,
 ) -> (usize, usize) {
-    let strategy = Strategy::new(workload.mp, workload.dp);
+    let strategy = Strategy::new(mp, dp);
     match scope {
         CommScope::Mp => strategy.mp_two_level(pod_size),
         CommScope::Dp => strategy.dp_two_level(pod_size),
         CommScope::All => {
-            let n = workload.nodes;
-            let intra = pod_size.min(n).max(1);
-            (intra, n / intra)
+            let intra = pod_size.min(nodes).max(1);
+            (intra, nodes / intra)
         }
     }
 }
 
+/// One layer of a [`WorkloadDecomposition`]: everything stage 1 extracts
+/// from a [`crate::workload::Layer`] — per-phase compute quantities plus
+/// the still-unresolved communication (scopes, not group shapes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlan {
+    /// Layer name (diagnostics).
+    pub name: String,
+    /// Instance multiplicity.
+    pub repeat: f64,
+    /// Compute quantities for FP / IG / WG.
+    pub q: [PhaseQuantities; 3],
+    /// Communication for FP / IG / WG, with scopes not yet resolved
+    /// against a topology.
+    pub comm: [Comm; 3],
+}
+
+/// Stage 1 of the two-stage derive: the cluster-independent decomposition
+/// of a workload.
+///
+/// Everything here depends only on the workload — per-layer
+/// [`PhaseQuantities`], unresolved communication, and the workload-only
+/// footprint terms — so one decomposition is shared by every grid point of
+/// a sweep that evaluates the same workload on different clusters or
+/// options ([`crate::coordinator::Coordinator::derive_batch`] memoizes
+/// them by [`Workload::fingerprint`]). Stage 2 ([`resolve_inputs`])
+/// resolves it against a concrete cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadDecomposition {
+    /// Workload name (flows into [`ModelInputs::name`]).
+    pub name: String,
+    /// MP degree the workload was built for.
+    pub mp: usize,
+    /// DP degree the workload was built for.
+    pub dp: usize,
+    /// Total nodes the workload occupies.
+    pub nodes: usize,
+    /// Total model parameters (across all MP shards, one DP replica).
+    pub total_params: f64,
+    /// Residual-state bytes (workload-only footprint term).
+    pub residual_bytes: f64,
+    /// Activation-working-memory bytes (workload-only footprint term).
+    pub awm_bytes: f64,
+    /// Per-layer plans, in forward order.
+    pub layers: Vec<LayerPlan>,
+}
+
+impl WorkloadDecomposition {
+    /// Per-node footprint at a ZeRO stage — identical (bit-for-bit) to
+    /// `footprint_per_node(workload, strategy, stage).total()` on the
+    /// workload this decomposition was built from.
+    pub fn footprint_total(&self, stage: ZeroStage) -> f64 {
+        model_state_bytes(self.total_params, self.mp, self.dp, stage)
+            + self.residual_bytes
+            + self.awm_bytes
+    }
+
+    /// Resolve one layer-phase communication against a pod size, producing
+    /// the fully resolved collective the cost models consume.
+    pub fn resolve_comm(&self, comm: &Comm, pod_size: usize) -> CollectiveSpec {
+        let (n_intra, n_inter) =
+            resolve_scope(comm.scope, self.mp, self.dp, self.nodes, pod_size);
+        CollectiveSpec {
+            collective: comm.collective,
+            bytes: comm.bytes,
+            n_intra,
+            n_inter,
+        }
+    }
+}
+
+/// Stage 1: decompose a workload into its cluster-independent plan.
+/// Infallible — all validation happens against the cluster in stage 2.
+pub fn decompose(workload: &Workload) -> WorkloadDecomposition {
+    let layers = workload
+        .layers
+        .iter()
+        .map(|l| LayerPlan {
+            name: l.name.clone(),
+            repeat: l.repeat,
+            q: Phase::ALL.map(|p| l.op.quantities(p)),
+            comm: Phase::ALL.map(|p| l.comm(p)),
+        })
+        .collect();
+    WorkloadDecomposition {
+        name: workload.name.clone(),
+        mp: workload.mp,
+        dp: workload.dp,
+        nodes: workload.nodes,
+        total_params: workload.total_params,
+        residual_bytes: residual_state_bytes(workload),
+        awm_bytes: activation_working_bytes(workload),
+        layers,
+    }
+}
+
+/// Stage 2: resolve a decomposition against a concrete cluster and
+/// evaluation options.
+///
+/// `resolve_inputs(&decompose(w), c, o)` is bit-identical to
+/// [`derive_inputs`]`(w, c, o)` — `tests/scenario_roundtrip.rs` pins the
+/// two paths against each other across every figure's design space.
+pub fn resolve_inputs(
+    dec: &WorkloadDecomposition,
+    cluster: &ClusterConfig,
+    opts: &EvalOptions,
+) -> Result<ModelInputs> {
+    cluster.validate()?;
+    if dec.nodes > cluster.n_nodes {
+        return Err(Error::Config(format!(
+            "workload spans {} nodes but cluster {} has {}",
+            dec.nodes, cluster.name, cluster.n_nodes
+        )));
+    }
+    let view = cluster.two_level();
+
+    let footprint = opts
+        .footprint_override
+        .unwrap_or_else(|| dec.footprint_total(opts.zero_stage));
+
+    let node = &cluster.node;
+    let params = NodeParams {
+        perf_peak: node.perf_peak,
+        bw_lm: node.local.bandwidth,
+        bw_em: node.expanded.bandwidth,
+        cap_lm: node.local.capacity,
+        sram: node.sram,
+        footprint,
+        bw_intra: view.bw_intra,
+        bw_inter: view.bw_inter,
+        link_latency: cluster.link_latency,
+        overlap_wg: opts.overlap_wg,
+        em_frac_override: if opts.ignore_capacity {
+            Some(0.0)
+        } else {
+            opts.em_frac_override
+        },
+        collective_impl: opts.collective_impl,
+    };
+
+    let layers = dec
+        .layers
+        .iter()
+        .map(|l| LayerRecord {
+            name: l.name.clone(),
+            repeat: l.repeat,
+            q: l.q,
+            comm: [0usize, 1, 2]
+                .map(|i| dec.resolve_comm(&l.comm[i], view.pod_size)),
+        })
+        .collect();
+
+    Ok(ModelInputs {
+        name: format!("{}%{}", dec.name, cluster.name),
+        layers,
+        params,
+    })
+}
+
 /// Derive the complete model inputs for one (workload, cluster) pair.
+///
+/// This is the single-pass reference implementation, retained as the
+/// equivalence oracle for the two-stage path ([`decompose`] +
+/// [`resolve_inputs`]) the sweep hot path uses — the two must stay
+/// bit-identical (pinned by `tests/scenario_roundtrip.rs`). One-off
+/// callers use this; batched callers go through
+/// [`crate::coordinator::Coordinator::derive_batch`] so decomposition is
+/// memoized per distinct workload.
 pub fn derive_inputs(
     workload: &Workload,
     cluster: &ClusterConfig,
@@ -223,7 +403,13 @@ pub fn derive_inputs(
             for (i, phase) in Phase::ALL.iter().enumerate() {
                 q[i] = l.op.quantities(*phase);
                 let c = l.comm(*phase);
-                let (ni, nx) = resolve_scope(c.scope, workload, view.pod_size);
+                let (ni, nx) = resolve_scope(
+                    c.scope,
+                    workload.mp,
+                    workload.dp,
+                    workload.nodes,
+                    view.pod_size,
+                );
                 comm[i] = CollectiveSpec {
                     collective: c.collective,
                     bytes: c.bytes,
@@ -307,6 +493,54 @@ mod tests {
         let cluster = presets::dgx_a100_64();
         let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
         assert!(derive_inputs(&w, &cluster, &EvalOptions::default()).is_err());
+    }
+
+    #[test]
+    fn two_stage_matches_single_pass() {
+        let cluster = presets::dgx_a100_1024();
+        for (mp, dp) in [(8usize, 128usize), (64, 16), (128, 8)] {
+            let w = Transformer::t1()
+                .build(&Strategy::new(mp, dp))
+                .unwrap();
+            for opts in [
+                EvalOptions::default(),
+                EvalOptions {
+                    ignore_capacity: true,
+                    ..Default::default()
+                },
+                EvalOptions {
+                    footprint_override: Some(123e9),
+                    overlap_wg: false,
+                    ..Default::default()
+                },
+            ] {
+                let single = derive_inputs(&w, &cluster, &opts).unwrap();
+                let staged =
+                    resolve_inputs(&decompose(&w), &cluster, &opts).unwrap();
+                assert_eq!(single, staged);
+                assert_eq!(single.fingerprint(), staged.fingerprint());
+            }
+        }
+    }
+
+    #[test]
+    fn decomposition_footprint_matches_footprint_per_node() {
+        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let dec = decompose(&w);
+        for stage in ZeroStage::ALL {
+            let want =
+                footprint_per_node(&w, &Strategy::new(8, 128), stage).total();
+            assert_eq!(dec.footprint_total(stage).to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn resolve_rejects_oversubscription_like_single_pass() {
+        let cluster = presets::dgx_a100_64();
+        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let e =
+            resolve_inputs(&decompose(&w), &cluster, &EvalOptions::default());
+        assert!(e.is_err());
     }
 
     #[test]

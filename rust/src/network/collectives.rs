@@ -29,6 +29,16 @@ impl CollectiveImpl {
             CollectiveImpl::Hierarchical => 1.0,
         }
     }
+
+    /// Canonical short name — the scenario-file vocabulary
+    /// (`ring` | `hierarchical`) that labels and spec (de)serialization
+    /// share.
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveImpl::LogicalRing => "ring",
+            CollectiveImpl::Hierarchical => "hierarchical",
+        }
+    }
 }
 
 /// A fully resolved collective: payload, type, and two-level group shape.

@@ -1,0 +1,145 @@
+//! Admissible lower bounds for the branch-and-bound optimizer.
+//!
+//! Both bounds are assembled from a [`WorkloadDecomposition`] with the
+//! **same accumulation order** as [`crate::analytical::evaluate`], so a
+//! fully specified leaf's bound is bit-for-bit `<=` its evaluated total:
+//!
+//! * [`compute_times`] — per-phase roofline compute time at a given
+//!   memory bandwidth. Evaluated at the best bandwidth any point of a
+//!   subtree can reach, it lower-bounds every point's compute time
+//!   (compute delay is monotone non-increasing in bandwidth).
+//! * [`blocking_comm_times`] — the FP and IG collective times for one
+//!   collective implementation. These are *exact* (they do not depend on
+//!   the expanded-memory axes); the WG collective is dropped entirely,
+//!   which lower-bounds its exposed share (overlap can only shrink it
+//!   to zero, never below).
+
+use crate::compute::{compute_delay, gemm_traffic};
+use crate::model::inputs::WorkloadDecomposition;
+use crate::network::{collective_cost, CollectiveImpl};
+use crate::workload::Collective;
+
+/// Per-phase `[FP, IG, WG]` compute times at memory bandwidth `bw`,
+/// mirroring `analytical::evaluate`'s layer/phase accumulation order.
+pub(crate) fn compute_times(
+    dec: &WorkloadDecomposition,
+    perf_peak: f64,
+    sram: f64,
+    bw: f64,
+) -> [f64; 3] {
+    let mut compute = [0.0f64; 3];
+    for layer in &dec.layers {
+        for (slot, q) in compute.iter_mut().zip(&layer.q) {
+            let traffic = gemm_traffic(q.u, q.v, q.w, sram);
+            *slot +=
+                layer.repeat * compute_delay(q.flops, traffic, perf_peak, bw);
+        }
+    }
+    compute
+}
+
+/// Blocking `(FP, IG)` collective times for one implementation on the
+/// cluster's two-level view, mirroring `analytical::evaluate`'s layer
+/// accumulation order (and its `Collective::None` fast path).
+pub(crate) fn blocking_comm_times(
+    dec: &WorkloadDecomposition,
+    pod_size: usize,
+    bw_intra: f64,
+    bw_inter: f64,
+    lat: f64,
+    impl_: CollectiveImpl,
+) -> (f64, f64) {
+    let mut comm = [0.0f64; 2];
+    for layer in &dec.layers {
+        for (phase, slot) in comm.iter_mut().enumerate() {
+            let c = &layer.comm[phase];
+            if matches!(c.collective, Collective::None) {
+                continue;
+            }
+            let spec = dec.resolve_comm(c, pod_size);
+            *slot += layer.repeat
+                * collective_cost(&spec, bw_intra, bw_inter, lat, impl_);
+        }
+    }
+    (comm[0], comm[1])
+}
+
+/// Assemble a leaf bound from per-phase compute times and blocking FP/IG
+/// communication, in the exact association order of
+/// [`crate::analytical::TrainingBreakdown::total`] with the WG exposed
+/// term replaced by its lower bound (zero). Because every term is
+/// non-negative and f64 addition is monotone, the result is `<=` the
+/// evaluated total bit-for-bit.
+pub(crate) fn assemble(compute: [f64; 3], comm_fp: f64, comm_ig: f64) -> f64 {
+    (((compute[0] + comm_fp) + compute[1]) + comm_ig) + compute[2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::evaluate;
+    use crate::config::presets;
+    use crate::model::inputs::{decompose, derive_inputs, EvalOptions};
+    use crate::parallel::Strategy;
+    use crate::workload::transformer::Transformer;
+
+    #[test]
+    fn assembled_bound_never_exceeds_evaluated_total() {
+        let cluster = presets::dgx_a100_1024();
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        for s in Strategy::sweep_bounded(1024, 1, 128) {
+            let w = Transformer::t1().build(&s).unwrap();
+            let dec = decompose(&w);
+            let inputs = derive_inputs(&w, &cluster, &opts).unwrap();
+            let b = evaluate(&inputs);
+            let view = cluster.two_level();
+            // ignore_capacity forces the full local bandwidth — the bound
+            // bandwidth equals the evaluated one, so the bound is the
+            // total minus the exposed WG share, exactly.
+            let compute = compute_times(
+                &dec,
+                cluster.node.perf_peak,
+                cluster.node.sram,
+                cluster.node.local.bandwidth,
+            );
+            let (c0, c1) = blocking_comm_times(
+                &dec,
+                view.pod_size,
+                view.bw_intra,
+                view.bw_inter,
+                cluster.link_latency,
+                opts.collective_impl,
+            );
+            let lb = assemble(compute, c0, c1);
+            assert!(
+                lb <= b.total(),
+                "{}: bound {lb} > total {}",
+                s.label(),
+                b.total()
+            );
+            // With WG fully overlapped (fig. 8), the bound is tight.
+            if b.wg_exposed_comm == 0.0 {
+                assert_eq!(lb.to_bits(), b.total().to_bits(), "{}", s.label());
+            }
+        }
+    }
+
+    #[test]
+    fn compute_times_monotone_in_bandwidth() {
+        let w = Transformer::t1()
+            .build(&Strategy::new(8, 128))
+            .unwrap();
+        let dec = decompose(&w);
+        let node = &presets::dgx_a100_1024().node;
+        let slow: f64 = compute_times(&dec, node.perf_peak, node.sram, 500e9)
+            .iter()
+            .sum();
+        let fast: f64 = compute_times(&dec, node.perf_peak, node.sram, 2039e9)
+            .iter()
+            .sum();
+        assert!(fast <= slow);
+    }
+}

@@ -1,0 +1,926 @@
+//! Pruned co-design optimizer: branch-and-bound / best-first search over
+//! the strategy x memory x collective design lattice.
+//!
+//! Every study in the repo used to answer "which configuration is best?"
+//! by evaluating its *entire* cross-product grid. This module turns that
+//! into a near-O(frontier) search: the lattice is explored best-first,
+//! ordered by **admissible lower bounds** derived from the analytical
+//! model (`bound.rs`), and a subtree is pruned the moment its bound
+//! proves it cannot reach the current top-k —
+//!
+//! * a compute-only roofline floor at the best memory bandwidth any point
+//!   of the subtree can reach lower-bounds total time (exposed
+//!   communication is non-negative),
+//! * the exact blocking FP/IG collective cost per implementation tightens
+//!   the floor (it is independent of the expanded-memory axes), and
+//! * `footprint_per_node` infeasibility (footprint beyond local +
+//!   expanded capacity) prunes points without evaluating them, matching
+//!   the Fig. 15 feasibility rule.
+//!
+//! The search tree has two levels: a **branch** per (workload, ZeRO
+//! stage) — its decomposition is computed once through the coordinator's
+//! derive cache — and a **leaf** per (expanded-memory bandwidth,
+//! capacity, collective implementation) point under it. Results are the
+//! exact argmin and top-k of exhaustive enumeration (ties broken by
+//! canonical lattice order; pinned by `tests/properties.rs`), plus the
+//! compute-vs-exposed-communication Pareto frontier of the evaluated
+//! candidates. [`Optimizer::exhaustive`] evaluates the full grid through
+//! the batched path and is both the testing oracle and the
+//! `bench_optimizer` comparison baseline.
+
+mod bound;
+
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::analytical::TrainingBreakdown;
+use crate::compute::{em_fraction, hybrid_bandwidth};
+use crate::config::ClusterConfig;
+use crate::coordinator::{Backend, Coordinator};
+use crate::error::{Error, Result};
+use crate::model::inputs::{
+    resolve_inputs, EvalOptions, ModelInputs, WorkloadDecomposition,
+};
+use crate::network::CollectiveImpl;
+use crate::parallel::ZeroStage;
+use crate::workload::Workload;
+
+/// The per-branch memory/collective axes of the design lattice. Axes
+/// default to a single baseline point (local memory only, spill-sized
+/// capacity, logical-ring collectives), mirroring
+/// [`crate::coordinator::GridSweep`].
+#[derive(Debug, Clone)]
+pub struct AxisSpec {
+    /// Expanded-memory bandwidths, bytes/s (`None` = local memory only).
+    em_bandwidths: Vec<Option<f64>>,
+    /// Expanded-memory capacities, bytes (`None` = sized to the spill).
+    em_capacities: Vec<Option<f64>>,
+    /// Collective implementations.
+    collectives: Vec<CollectiveImpl>,
+}
+
+impl Default for AxisSpec {
+    fn default() -> Self {
+        AxisSpec::new()
+    }
+}
+
+impl AxisSpec {
+    /// Baseline axes: local memory only, spill-sized capacity,
+    /// logical-ring collectives.
+    pub fn new() -> AxisSpec {
+        AxisSpec {
+            em_bandwidths: vec![None],
+            em_capacities: vec![None],
+            collectives: vec![CollectiveImpl::LogicalRing],
+        }
+    }
+
+    /// Sweep expanded-memory bandwidth (bytes/s).
+    pub fn em_bandwidths(mut self, bws: &[f64]) -> AxisSpec {
+        self.em_bandwidths = bws.iter().map(|&b| Some(b)).collect();
+        self
+    }
+
+    /// Sweep expanded-memory capacity (bytes) instead of sizing it to the
+    /// spill.
+    pub fn em_capacities(mut self, caps: &[f64]) -> AxisSpec {
+        self.em_capacities = caps.iter().map(|&c| Some(c)).collect();
+        self
+    }
+
+    /// Sweep collective implementations.
+    pub fn collective_impls(mut self, impls: &[CollectiveImpl]) -> AxisSpec {
+        self.collectives = impls.to_vec();
+        self
+    }
+
+    /// Points per branch (cross-product of the three axes).
+    pub fn len(&self) -> usize {
+        self.em_bandwidths.len()
+            * self.em_capacities.len()
+            * self.collectives.len()
+    }
+
+    /// Whether the axes name no points.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One (workload, ZeRO stage) branch of the search tree. The caller
+/// builds these — e.g. one per strategy x stage for a transformer, or a
+/// single one for a rigid DLRM packing.
+#[derive(Debug, Clone)]
+pub struct Branch {
+    /// Row label ("MP8_DP128", "MP8_DP128 zero-3", "16 nodes", ...).
+    pub label: String,
+    /// The decomposed workload (ZeRO communication multipliers already
+    /// applied when the stage axis is explicit).
+    pub workload: Workload,
+    /// ZeRO stage of this branch (drives the footprint and the
+    /// evaluation options).
+    pub stage: ZeroStage,
+    /// `Some` for workloads whose footprint is not the generic ZeRO
+    /// formula (DLRM's embedding shard); forwarded into
+    /// [`EvalOptions::footprint_override`]. When `None`, the optimizer
+    /// computes the footprint from the decomposition — exactly what
+    /// derivation will use, so the bounds stay exact by construction.
+    pub footprint_override: Option<f64>,
+}
+
+/// One fully specified point of the design lattice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignPoint {
+    /// Index of the branch this point belongs to.
+    pub branch: usize,
+    /// Expanded-memory bandwidth, bytes/s (`None` = local memory only).
+    pub em_bandwidth: Option<f64>,
+    /// Expanded-memory capacity, bytes (`None` = sized to the spill).
+    pub em_capacity: Option<f64>,
+    /// Collective implementation.
+    pub collective: CollectiveImpl,
+    /// Canonical lattice index (branch-major, then bandwidth, capacity,
+    /// collective) — the deterministic tie-breaker for equal totals.
+    pub index: usize,
+}
+
+/// One evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Human-readable label (branch label + the explicit point axes).
+    pub label: String,
+    /// The lattice point.
+    pub point: DesignPoint,
+    /// The evaluated time breakdown.
+    pub breakdown: TrainingBreakdown,
+    /// Per-node footprint of the point's branch, bytes.
+    pub footprint: f64,
+    /// The admissible lower bound under which the point was admitted;
+    /// always `<=` `breakdown.total()`.
+    pub lower_bound: f64,
+}
+
+impl Candidate {
+    /// Total iteration time.
+    pub fn total(&self) -> f64 {
+        self.breakdown.total()
+    }
+}
+
+/// The result of a search (or exhaustive enumeration).
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// The best `top_k` candidates, ascending by (total, lattice index);
+    /// `top[0]` is the argmin. Identical between [`Optimizer::search`]
+    /// and [`Optimizer::exhaustive`].
+    pub top: Vec<Candidate>,
+    /// Pareto frontier of the *evaluated* candidates in (compute,
+    /// exposed communication), ascending compute. Under search, subtrees
+    /// dominated in total time are pruned before evaluation, so this is
+    /// the frontier of the region competitive with the top-k.
+    pub frontier: Vec<Candidate>,
+    /// Feasible points actually evaluated.
+    pub evaluated: usize,
+    /// Feasible points pruned by the bound without evaluation.
+    pub pruned: usize,
+    /// Points skipped as capacity-infeasible.
+    pub infeasible: usize,
+    /// Full lattice size (feasible + infeasible).
+    pub total_points: usize,
+}
+
+impl Outcome {
+    /// The argmin configuration, if any point was feasible.
+    pub fn best(&self) -> Option<&Candidate> {
+        self.top.first()
+    }
+}
+
+/// Per-branch precomputed search state.
+struct BranchState {
+    dec: Arc<WorkloadDecomposition>,
+    /// The footprint evaluation will actually use for this branch's
+    /// points: the branch override, the base-options override, or the
+    /// decomposition's footprint at the branch stage — the same
+    /// precedence `resolve_inputs` applies.
+    footprint: f64,
+    /// Expanded-memory traffic fraction of this branch's footprint
+    /// (mirrors the backend's `em_fraction` resolution, including the
+    /// `ignore_capacity` / `em_frac` overrides).
+    frac: f64,
+    /// Exact blocking (FP, IG) collective times per collectives-axis
+    /// entry.
+    comm: Vec<(f64, f64)>,
+    /// Admissible bound over the whole subtree.
+    bound: f64,
+    /// Capacity-infeasible points under this branch.
+    infeasible: usize,
+}
+
+/// A fully specified, feasible leaf awaiting evaluation.
+struct Leaf {
+    point: DesignPoint,
+    cluster: ClusterConfig,
+    opts: EvalOptions,
+    bound: f64,
+}
+
+/// A heap node: an unexpanded branch subtree or a leaf.
+enum NodeRef {
+    Branch(usize),
+    Leaf(Box<Leaf>),
+}
+
+/// Min-heap entry ordered by (bound, insertion sequence).
+struct Entry {
+    bound: f64,
+    seq: usize,
+    node: NodeRef,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound.to_bits() == other.bound.to_bits() && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: `BinaryHeap` is a max-heap, we pop smallest bound
+        // first (then FIFO by sequence for determinism).
+        other
+            .bound
+            .total_cmp(&self.bound)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Safety factor applied to *subtree* bounds (not leaf bounds): a branch
+/// bound sums terms in a different association order than the evaluated
+/// totals, so shave a relative epsilon to keep pruning sound against
+/// f64 rounding. Leaf bounds reproduce the evaluation order exactly and
+/// need no margin.
+const BRANCH_BOUND_MARGIN: f64 = 1.0 - 1e-9;
+
+/// The branch-and-bound co-design optimizer. Borrows a [`Coordinator`]
+/// for (cached, backend-agnostic) evaluation.
+pub struct Optimizer<'a> {
+    coord: &'a Coordinator,
+    cluster: ClusterConfig,
+    opts: EvalOptions,
+    branches: Vec<Branch>,
+    axes: AxisSpec,
+    top_k: usize,
+}
+
+impl<'a> Optimizer<'a> {
+    /// A new optimizer over `branches` x `axes` on `cluster`.
+    ///
+    /// `opts` supplies the evaluation defaults; each branch's stage and
+    /// each point's collective implementation override it per leaf.
+    pub fn new(
+        coord: &'a Coordinator,
+        cluster: ClusterConfig,
+        opts: EvalOptions,
+        branches: Vec<Branch>,
+        axes: AxisSpec,
+    ) -> Result<Optimizer<'a>> {
+        cluster.validate()?;
+        if branches.is_empty() {
+            return Err(Error::Config(
+                "optimizer: needs at least one branch".into(),
+            ));
+        }
+        if axes.is_empty() {
+            return Err(Error::Config(
+                "optimizer: axes name no points".into(),
+            ));
+        }
+        if axes.em_capacities.iter().any(|c| c.is_some())
+            && axes.em_bandwidths.iter().all(|b| b.is_none())
+        {
+            return Err(Error::Config(
+                "optimizer: em_capacities without em_bandwidths; \
+                 expanded-memory capacity needs a bandwidth axis"
+                    .into(),
+            ));
+        }
+        Ok(Optimizer {
+            coord,
+            cluster,
+            opts,
+            branches,
+            axes,
+            top_k: 5,
+        })
+    }
+
+    /// Keep the best `k` configurations (default 5; clamped to >= 1).
+    pub fn with_top_k(mut self, k: usize) -> Optimizer<'a> {
+        self.top_k = k.max(1);
+        self
+    }
+
+    /// Full lattice size.
+    pub fn total_points(&self) -> usize {
+        self.branches.len() * self.axes.len()
+    }
+
+    // ---- lattice geometry -------------------------------------------------
+
+    /// Total capacity available to a point, bytes. Under
+    /// `ignore_capacity` (the Fig. 8a infinite-memory mode) every point
+    /// is feasible by definition — the same switch that forces the EM
+    /// traffic fraction to zero must also disable footprint pruning.
+    fn point_capacity(&self, bw: Option<f64>, cap: Option<f64>) -> f64 {
+        if self.opts.ignore_capacity {
+            return f64::INFINITY;
+        }
+        match bw {
+            // No expansion at this point: whatever the base node has.
+            None => self.cluster.node.total_capacity(),
+            Some(_) => match cap {
+                // Sized to the spill: always fits.
+                None => f64::INFINITY,
+                Some(c) => self.cluster.node.local.capacity + c,
+            },
+        }
+    }
+
+    /// The point's cluster: expanded memory attached exactly the way
+    /// [`crate::coordinator::GridSweep::specs`] does it.
+    fn leaf_cluster(
+        &self,
+        footprint: f64,
+        bw: Option<f64>,
+        cap: Option<f64>,
+    ) -> ClusterConfig {
+        match bw {
+            None => self.cluster.clone(),
+            Some(bw) => {
+                let spill = (footprint
+                    - self.cluster.node.local.capacity)
+                    .max(0.0);
+                let need = cap.unwrap_or(spill);
+                if need > 0.0 {
+                    self.cluster
+                        .with_node(self.cluster.node.with_expanded(need, bw))
+                } else {
+                    self.cluster.clone()
+                }
+            }
+        }
+    }
+
+    /// The point's evaluation options.
+    fn leaf_opts(&self, b: &Branch, impl_: CollectiveImpl) -> EvalOptions {
+        EvalOptions {
+            zero_stage: b.stage,
+            collective_impl: impl_,
+            footprint_override: b
+                .footprint_override
+                .or(self.opts.footprint_override),
+            ..self.opts
+        }
+    }
+
+    fn label_of(&self, b: &Branch, p: &DesignPoint) -> String {
+        let mut l = b.label.clone();
+        if let Some(bw) = p.em_bandwidth {
+            l.push_str(&format!(" EM@{:.0}GB/s", bw / 1e9));
+        }
+        if let Some(cap) = p.em_capacity {
+            l.push_str(&format!(" cap{:.0}GB", cap / 1e9));
+        }
+        if self.axes.collectives.len() > 1 {
+            l.push(' ');
+            l.push_str(p.collective.name());
+        }
+        l
+    }
+
+    // ---- bounds -----------------------------------------------------------
+
+    /// The branch's expanded-memory traffic fraction, mirroring the
+    /// backend's resolution of the same quantity.
+    fn branch_frac(&self, footprint: f64) -> f64 {
+        if self.opts.ignore_capacity {
+            0.0
+        } else {
+            self.opts.em_frac_override.unwrap_or_else(|| {
+                em_fraction(footprint, self.cluster.node.local.capacity)
+            })
+        }
+    }
+
+    fn prepare(&self) -> Vec<BranchState> {
+        let node = &self.cluster.node;
+        let view = self.cluster.two_level();
+        // Best expanded-memory bandwidth any point can reach. The base
+        // node's own expanded memory is always a candidate: points
+        // without an expansion axis keep it, and so do axis points whose
+        // branch has no spill (leaf_cluster's need == 0 path) — folding
+        // it in unconditionally keeps the subtree bound admissible even
+        // when the base expansion outruns every axis bandwidth.
+        let bw_em_best = self
+            .axes
+            .em_bandwidths
+            .iter()
+            .map(|b| b.unwrap_or(0.0))
+            .fold(node.expanded.bandwidth, f64::max);
+        self.branches
+            .iter()
+            .map(|b| {
+                let dec = self.coord.decomposition(&b.workload);
+                let footprint = b
+                    .footprint_override
+                    .or(self.opts.footprint_override)
+                    .unwrap_or_else(|| dec.footprint_total(b.stage));
+                let frac = self.branch_frac(footprint);
+                let comm: Vec<(f64, f64)> = self
+                    .axes
+                    .collectives
+                    .iter()
+                    .map(|&ci| {
+                        bound::blocking_comm_times(
+                            &dec,
+                            view.pod_size,
+                            view.bw_intra,
+                            view.bw_inter,
+                            self.cluster.link_latency,
+                            ci,
+                        )
+                    })
+                    .collect();
+                let bw_best =
+                    hybrid_bandwidth(node.local.bandwidth, bw_em_best, frac);
+                let compute = bound::compute_times(
+                    &dec,
+                    node.perf_peak,
+                    node.sram,
+                    bw_best,
+                );
+                let comm_min = comm
+                    .iter()
+                    .map(|(fp, ig)| fp + ig)
+                    .fold(f64::INFINITY, f64::min);
+                let bound = (compute[0] + compute[1] + compute[2] + comm_min)
+                    * BRANCH_BOUND_MARGIN;
+                let mut infeasible = 0;
+                for &bw in &self.axes.em_bandwidths {
+                    for &cap in &self.axes.em_capacities {
+                        if footprint > self.point_capacity(bw, cap) {
+                            infeasible += self.axes.collectives.len();
+                        }
+                    }
+                }
+                BranchState {
+                    dec,
+                    footprint,
+                    frac,
+                    comm,
+                    bound,
+                    infeasible,
+                }
+            })
+            .collect()
+    }
+
+    /// Expand one branch into its feasible leaves, canonically ordered.
+    fn expand(&self, bi: usize, st: &BranchState) -> Vec<Leaf> {
+        let b = &self.branches[bi];
+        let node = &self.cluster.node;
+        let (nbw, ncap, ncoll) = (
+            self.axes.em_bandwidths.len(),
+            self.axes.em_capacities.len(),
+            self.axes.collectives.len(),
+        );
+        let mut leaves = Vec::new();
+        for (ibw, &bw) in self.axes.em_bandwidths.iter().enumerate() {
+            for (icap, &cap) in self.axes.em_capacities.iter().enumerate() {
+                if st.footprint > self.point_capacity(bw, cap) {
+                    continue;
+                }
+                let cluster = self.leaf_cluster(st.footprint, bw, cap);
+                // Exact effective bandwidth of this point — em_fraction
+                // depends only on footprint and local capacity, so the
+                // leaf's compute floor is the backend's compute time.
+                let bw_eff = hybrid_bandwidth(
+                    node.local.bandwidth,
+                    cluster.node.expanded.bandwidth,
+                    st.frac,
+                );
+                let compute = bound::compute_times(
+                    &st.dec,
+                    node.perf_peak,
+                    node.sram,
+                    bw_eff,
+                );
+                for (ici, &ci) in self.axes.collectives.iter().enumerate() {
+                    let index =
+                        ((bi * nbw + ibw) * ncap + icap) * ncoll + ici;
+                    let (c0, c1) = st.comm[ici];
+                    leaves.push(Leaf {
+                        point: DesignPoint {
+                            branch: bi,
+                            em_bandwidth: bw,
+                            em_capacity: cap,
+                            collective: ci,
+                            index,
+                        },
+                        cluster: cluster.clone(),
+                        opts: self.leaf_opts(b, ci),
+                        bound: bound::assemble(compute, c0, c1),
+                    });
+                }
+            }
+        }
+        leaves
+    }
+
+    // ---- evaluation -------------------------------------------------------
+
+    fn resolve_leaf(&self, st: &BranchState, leaf: &Leaf) -> Result<ModelInputs> {
+        resolve_inputs(&st.dec, &leaf.cluster, &leaf.opts)
+    }
+
+    fn candidate(
+        &self,
+        leaf: &Leaf,
+        footprint: f64,
+        breakdown: TrainingBreakdown,
+    ) -> Candidate {
+        let b = &self.branches[leaf.point.branch];
+        Candidate {
+            label: self.label_of(b, &leaf.point),
+            point: leaf.point,
+            breakdown,
+            footprint,
+            lower_bound: leaf.bound,
+        }
+    }
+
+    fn outcome_from(
+        &self,
+        evaluated: Vec<Candidate>,
+        pruned: usize,
+        infeasible: usize,
+    ) -> Outcome {
+        let n_eval = evaluated.len();
+        let mut top = evaluated.clone();
+        top.sort_by(|a, b| {
+            a.total()
+                .total_cmp(&b.total())
+                .then_with(|| a.point.index.cmp(&b.point.index))
+        });
+        top.truncate(self.top_k);
+        Outcome {
+            top,
+            frontier: pareto(evaluated),
+            evaluated: n_eval,
+            pruned,
+            infeasible,
+            total_points: self.total_points(),
+        }
+    }
+
+    /// Branch-and-bound best-first search. Returns the exact argmin and
+    /// top-k of [`Optimizer::exhaustive`] while evaluating only the
+    /// points whose lower bound does not already lose to the incumbent
+    /// top-k.
+    ///
+    /// The bounds come from the closed-form analytical model and are
+    /// admissible only against the native backend's totals — DES and
+    /// artifact evaluations may land a few percent below the analytical
+    /// value, so pruning against them could discard the true argmin. On
+    /// a non-native coordinator this therefore falls back to exhaustive
+    /// enumeration: the exactness guarantee is kept, the pruning speedup
+    /// is not.
+    pub fn search(&self) -> Result<Outcome> {
+        if self.coord.backend() != Backend::Native {
+            return self.exhaustive();
+        }
+        let states = self.prepare();
+        let infeasible: usize = states.iter().map(|s| s.infeasible).sum();
+        let feasible_total = self.total_points() - infeasible;
+
+        let mut heap: BinaryHeap<Entry> = BinaryHeap::new();
+        let mut seq = 0usize;
+        for (i, st) in states.iter().enumerate() {
+            if st.infeasible == self.axes.len() {
+                // The whole subtree is capacity-infeasible: pruned
+                // without ever entering the heap.
+                continue;
+            }
+            heap.push(Entry {
+                bound: st.bound,
+                seq,
+                node: NodeRef::Branch(i),
+            });
+            seq += 1;
+        }
+
+        // Incumbent top-k totals (with lattice-index tie-break).
+        let mut incumbents: Vec<(f64, usize)> = Vec::new();
+        let mut evaluated: Vec<Candidate> = Vec::new();
+        while let Some(e) = heap.pop() {
+            if incumbents.len() >= self.top_k {
+                let worst = incumbents[self.top_k - 1].0;
+                // Everything still queued has bound >= e.bound; a strict
+                // loss here prunes the rest of the lattice. Equal bounds
+                // must still be expanded — an equal-total candidate with
+                // a smaller lattice index belongs in the top-k.
+                if e.bound > worst {
+                    break;
+                }
+            }
+            match e.node {
+                NodeRef::Branch(i) => {
+                    for leaf in self.expand(i, &states[i]) {
+                        heap.push(Entry {
+                            bound: leaf.bound,
+                            seq,
+                            node: NodeRef::Leaf(Box::new(leaf)),
+                        });
+                        seq += 1;
+                    }
+                }
+                NodeRef::Leaf(leaf) => {
+                    let st = &states[leaf.point.branch];
+                    let inputs = self.resolve_leaf(st, &leaf)?;
+                    let b = self
+                        .coord
+                        .evaluate_inputs(std::slice::from_ref(&inputs))?[0];
+                    let cand = self.candidate(&leaf, st.footprint, b);
+                    let key = (cand.total(), cand.point.index);
+                    let pos = incumbents
+                        .binary_search_by(|(t, i)| {
+                            t.total_cmp(&key.0).then_with(|| i.cmp(&key.1))
+                        })
+                        .unwrap_or_else(|p| p);
+                    incumbents.insert(pos, key);
+                    incumbents.truncate(self.top_k);
+                    evaluated.push(cand);
+                }
+            }
+        }
+        let pruned = feasible_total - evaluated.len();
+        Ok(self.outcome_from(evaluated, pruned, infeasible))
+    }
+
+    /// Exhaustive enumeration of the full lattice through the batched
+    /// evaluation path: every feasible point is resolved from the shared
+    /// decomposition and evaluated in **one**
+    /// [`Coordinator::evaluate_inputs`] call. The oracle `search()` is
+    /// tested against, and the baseline `bench_optimizer` compares
+    /// evaluated-point counts with.
+    pub fn exhaustive(&self) -> Result<Outcome> {
+        let states = self.prepare();
+        let infeasible: usize = states.iter().map(|s| s.infeasible).sum();
+        let mut leaves: Vec<Leaf> = Vec::new();
+        for (i, st) in states.iter().enumerate() {
+            leaves.extend(self.expand(i, st));
+        }
+        let inputs: Vec<ModelInputs> = leaves
+            .iter()
+            .map(|l| self.resolve_leaf(&states[l.point.branch], l))
+            .collect::<Result<_>>()?;
+        let evals = self.coord.evaluate_inputs(&inputs)?;
+        let evaluated: Vec<Candidate> = leaves
+            .iter()
+            .zip(&evals)
+            .map(|(l, &b)| {
+                self.candidate(l, states[l.point.branch].footprint, b)
+            })
+            .collect();
+        Ok(self.outcome_from(evaluated, 0, infeasible))
+    }
+}
+
+/// Non-dominated set in (compute, exposed communication), ascending
+/// compute. Duplicate (compute, comm) pairs keep the smallest lattice
+/// index.
+fn pareto(mut evaluated: Vec<Candidate>) -> Vec<Candidate> {
+    evaluated.sort_by(|a, b| {
+        a.breakdown
+            .compute()
+            .total_cmp(&b.breakdown.compute())
+            .then_with(|| {
+                a.breakdown
+                    .exposed_comm()
+                    .total_cmp(&b.breakdown.exposed_comm())
+            })
+            .then_with(|| a.point.index.cmp(&b.point.index))
+    });
+    let mut out: Vec<Candidate> = Vec::new();
+    let mut best_comm = f64::INFINITY;
+    for c in evaluated {
+        if c.breakdown.exposed_comm() < best_comm {
+            best_comm = c.breakdown.exposed_comm();
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::parallel::{footprint_per_node, Strategy};
+    use crate::util::units::gb;
+    use crate::workload::transformer::Transformer;
+
+    fn transformer_branches(
+        n_nodes: usize,
+        min_mp: usize,
+        max_mp: usize,
+    ) -> Vec<Branch> {
+        let stage = ZeroStage::OsG;
+        Strategy::sweep_bounded(n_nodes, min_mp, max_mp)
+            .into_iter()
+            .map(|s| Branch {
+                label: s.label(),
+                workload: Transformer::t1().build(&s).unwrap(),
+                stage,
+                footprint_override: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn search_matches_exhaustive_with_pruning() {
+        let coord = Coordinator::native();
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 2, 128),
+            AxisSpec::new().em_bandwidths(&[gb(250.0), gb(1000.0), gb(2039.0)]),
+        )
+        .unwrap()
+        .with_top_k(3);
+        let s = opt.search().unwrap();
+        let e = opt.exhaustive().unwrap();
+        assert_eq!(s.top.len(), e.top.len());
+        for (a, b) in s.top.iter().zip(&e.top) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.point.index, b.point.index);
+            assert_eq!(a.total().to_bits(), b.total().to_bits());
+        }
+        assert_eq!(e.evaluated, 21);
+        assert_eq!(e.pruned, 0);
+        assert!(s.evaluated < e.evaluated, "{} pruned", s.pruned);
+        assert_eq!(s.evaluated + s.pruned, e.evaluated);
+        // The best co-design is MP8 at full-rate expansion (paper Ex. 1).
+        assert_eq!(s.best().unwrap().label, "MP8_DP128 EM@2039GB/s");
+    }
+
+    #[test]
+    fn bounds_are_admissible() {
+        let coord = Coordinator::native();
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 2, 128),
+            AxisSpec::new().em_bandwidths(&[gb(500.0), gb(2039.0)]),
+        )
+        .unwrap();
+        let e = opt.exhaustive().unwrap();
+        for c in e.top.iter().chain(&e.frontier) {
+            assert!(
+                c.lower_bound <= c.total(),
+                "{}: bound {} > total {}",
+                c.label,
+                c.lower_bound,
+                c.total()
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_points_are_skipped_not_evaluated() {
+        // Without expansion, low-MP Transformer-1T footprints exceed the
+        // 80 GB node: those branches must be pruned as infeasible.
+        let coord = Coordinator::native();
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 2, 128),
+            AxisSpec::new(),
+        )
+        .unwrap();
+        let s = opt.search().unwrap();
+        let e = opt.exhaustive().unwrap();
+        assert_eq!(s.total_points, 7);
+        assert_eq!(s.infeasible, e.infeasible);
+        // The fitting strategies are exactly those whose footprint stays
+        // within the 80 GB node (MP8_DP128 at ~264 GB is out).
+        let fitting = Strategy::sweep_bounded(1024, 2, 128)
+            .iter()
+            .filter(|s| {
+                let w = Transformer::t1().build(s).unwrap();
+                footprint_per_node(&w, s, ZeroStage::OsG).total() <= 80e9
+            })
+            .count();
+        assert!((1..7).contains(&fitting));
+        assert_eq!(s.infeasible, 7 - fitting);
+        assert_eq!(s.evaluated + s.pruned, fitting);
+        let best = s.best().unwrap();
+        assert_eq!(best.label, e.best().unwrap().label);
+        assert!(best.footprint <= 80e9, "argmin must be feasible");
+    }
+
+    #[test]
+    fn frontier_is_nondominated_and_contains_argmin() {
+        let coord = Coordinator::native();
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions {
+                ignore_capacity: true,
+                ..Default::default()
+            },
+            transformer_branches(1024, 2, 128),
+            AxisSpec::new(),
+        )
+        .unwrap()
+        .with_top_k(7);
+        let e = opt.exhaustive().unwrap();
+        // Infinite-memory mode: no footprint pruning — all 7 strategies
+        // evaluate even though most spill the 80 GB node.
+        assert_eq!(e.infeasible, 0);
+        assert_eq!(e.evaluated, 7);
+        let f = &e.frontier;
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(
+                w[0].breakdown.compute() <= w[1].breakdown.compute()
+                    && w[0].breakdown.exposed_comm()
+                        > w[1].breakdown.exposed_comm(),
+                "frontier must trade compute for communication"
+            );
+        }
+        let best = e.best().unwrap();
+        assert!(
+            f.iter().any(|c| c.point.index == best.point.index),
+            "argmin must sit on the frontier"
+        );
+    }
+
+    #[test]
+    fn non_native_backend_search_falls_back_to_exhaustive() {
+        // The analytical bounds are not admissible against DES totals
+        // (they agree only to ~5%), so search() must not prune there.
+        let coord = Coordinator::des();
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_64(),
+            EvalOptions::default(),
+            transformer_branches(64, 8, 16),
+            AxisSpec::new().em_bandwidths(&[gb(500.0), gb(2039.0)]),
+        )
+        .unwrap()
+        .with_top_k(1);
+        let s = opt.search().unwrap();
+        assert_eq!(s.pruned, 0, "DES search must enumerate exhaustively");
+        assert_eq!(s.evaluated, 4);
+        let e = opt.exhaustive().unwrap();
+        assert_eq!(s.best().unwrap().label, e.best().unwrap().label);
+    }
+
+    #[test]
+    fn capacity_axis_requires_bandwidths() {
+        let coord = Coordinator::native();
+        let err = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 8, 8),
+            AxisSpec::new().em_capacities(&[gb(100.0)]),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn axis_spec_cross_product() {
+        let a = AxisSpec::new()
+            .em_bandwidths(&[1e9, 2e9])
+            .em_capacities(&[1e9, 2e9, 3e9])
+            .collective_impls(&[
+                CollectiveImpl::LogicalRing,
+                CollectiveImpl::Hierarchical,
+            ]);
+        assert_eq!(a.len(), 12);
+        assert!(!a.is_empty());
+        assert_eq!(AxisSpec::new().len(), 1);
+    }
+}

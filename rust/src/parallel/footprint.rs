@@ -41,10 +41,21 @@ pub fn footprint_per_node(
         stage,
     );
 
+    FootprintBreakdown {
+        model_states,
+        residual: residual_state_bytes(workload),
+        awm: activation_working_bytes(workload),
+    }
+}
+
+/// Residual-state bytes of a workload: fp16 activation parameters held for
+/// backward after checkpointing. Workload-only (no cluster, no ZeRO stage),
+/// so the two-stage derive precomputes it once per decomposition.
+pub fn residual_state_bytes(workload: &Workload) -> f64 {
     // Residual states: activations produced per layer instance held for
-    // backward (fp16). Scaled by repeats; attention scores and embeddings
-    // included via activation_elems.
-    let residual: f64 = workload
+    // backward (fp16). Attention scores and embeddings included via
+    // activation_elems.
+    workload
         .layers
         .iter()
         .map(|l| {
@@ -56,15 +67,14 @@ pub fn footprint_per_node(
             }
         })
         .sum::<f64>()
-        * checkpoint_fraction(workload);
+        * checkpoint_fraction(workload)
+}
 
-    let awm = workload.activation_working_elems() * FP16;
-
-    FootprintBreakdown {
-        model_states,
-        residual,
-        awm,
-    }
+/// Activation-working-memory bytes (ZeRO-Infinity's AWM): the largest
+/// single inter-checkpoint activation, fp16. Workload-only, like
+/// [`residual_state_bytes`].
+pub fn activation_working_bytes(workload: &Workload) -> f64 {
+    workload.activation_working_elems() * FP16
 }
 
 /// Fraction of activations held after checkpointing: one stack boundary per

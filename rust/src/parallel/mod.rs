@@ -5,6 +5,9 @@ mod footprint;
 mod strategy;
 mod zero;
 
-pub use footprint::{footprint_per_node, FootprintBreakdown};
+pub use footprint::{
+    activation_working_bytes, footprint_per_node, residual_state_bytes,
+    FootprintBreakdown,
+};
 pub use strategy::Strategy;
 pub use zero::{model_state_bytes, ZeroStage};

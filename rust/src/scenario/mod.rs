@@ -29,8 +29,9 @@ pub mod registry;
 mod run;
 pub mod spec;
 
-pub use run::run;
+pub use run::{optimizer_for, run, run_optimize};
 pub use spec::{
-    BackendSpec, Content, Normalize, OptionsSpec, OutputFormat, OutputSpec,
-    ScenarioSpec, StrategyAxis, Study, WorkloadSpec,
+    collective_name, collective_of, zero_stage_of, BackendSpec, Content,
+    Normalize, OptionsSpec, OutputFormat, OutputSpec, ScenarioSpec,
+    StrategyAxis, Study, WorkloadSpec,
 };

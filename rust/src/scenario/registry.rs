@@ -38,6 +38,14 @@ const BUILTINS: &[(&str, &str)] = &[
         include_str!("../../../scenarios/memory_expansion.toml"),
     ),
     (
+        "optimize-transformer",
+        include_str!("../../../scenarios/optimize_transformer.toml"),
+    ),
+    (
+        "optimize-dlrm",
+        include_str!("../../../scenarios/optimize_dlrm.toml"),
+    ),
+    (
         "cluster-compare",
         include_str!("../../../scenarios/cluster_compare.toml"),
     ),

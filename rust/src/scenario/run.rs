@@ -17,6 +17,7 @@ use crate::coordinator::{Coordinator, GridSweep};
 use crate::error::{Error, Result};
 use crate::model::inputs::EvalOptions;
 use crate::network::CollectiveImpl;
+use crate::optimizer::{AxisSpec, Branch, Optimizer, Outcome};
 use crate::parallel::{
     footprint_per_node, model_state_bytes, Strategy, ZeroStage,
 };
@@ -25,7 +26,8 @@ use crate::util::units::gb;
 use crate::workload::{CommScope, Workload};
 
 use super::spec::{
-    collective_name, Content, Normalize, ScenarioSpec, Study, WorkloadSpec,
+    collective_name, Content, Normalize, ScenarioSpec, StrategyAxis, Study,
+    WorkloadSpec,
 };
 
 /// Execute a scenario on a coordinator, producing the result grid.
@@ -73,6 +75,7 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
             packings,
             em_bandwidths_gbps,
         } => run_packing(spec, coord, *instances, packings, em_bandwidths_gbps)?,
+        Study::Optimize { .. } => run_optimize(spec, coord)?.0,
         Study::ClusterCompare {
             clusters,
             dlrm,
@@ -80,6 +83,17 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
             partition,
         } => run_cluster_compare(spec, coord, clusters, dlrm, *instances, *partition)?,
     };
+    apply_columns_override(spec, &mut fig)?;
+    Ok(fig)
+}
+
+/// Apply `[output].columns` to a rendered figure, validating the width.
+/// Idempotent — `run_optimize` applies it itself (the CLI calls it
+/// directly, bypassing [`run`]), and [`run`] applies it to every study.
+fn apply_columns_override(
+    spec: &ScenarioSpec,
+    fig: &mut FigureData,
+) -> Result<()> {
     if let Some(cols) = &spec.output.columns {
         if cols.len() != fig.columns.len() {
             return Err(Error::Config(format!(
@@ -91,7 +105,7 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
         }
         fig.columns = cols.clone();
     }
-    Ok(fig)
+    Ok(())
 }
 
 // ---- shared helpers -------------------------------------------------------
@@ -776,6 +790,175 @@ fn run_packing(
     Ok(fig)
 }
 
+// ---- optimize (branch-and-bound co-design search) -------------------------
+
+/// Build the branch-and-bound optimizer a `kind = "optimize"` scenario
+/// describes, without running it. Public so tests and `bench_optimizer`
+/// can drive [`Optimizer::search`] and [`Optimizer::exhaustive`] from the
+/// same spec and compare evaluated-point counts.
+pub fn optimizer_for<'a>(
+    spec: &ScenarioSpec,
+    coord: &'a Coordinator,
+) -> Result<Optimizer<'a>> {
+    let Study::Optimize {
+        strategies,
+        em_bandwidths_gbps,
+        em_capacities_gb,
+        collectives,
+        zero_stages,
+        top_k,
+    } = &spec.study
+    else {
+        return Err(Error::Config(format!(
+            "scenario '{}': optimizer_for needs an optimize study, got {}",
+            spec.name,
+            spec.study.kind()
+        )));
+    };
+    let opts0 = eval_opts(spec);
+    let explicit_zero = !zero_stages.is_empty();
+    let zaxis: Vec<ZeroStage> = if explicit_zero {
+        zero_stages.clone()
+    } else {
+        vec![opts0.zero_stage]
+    };
+
+    let mut branches: Vec<Branch> = Vec::new();
+    match &spec.workload {
+        WorkloadSpec::Dlrm(d) => {
+            // DLRM parallelism is rigid: one branch at the cluster size,
+            // footprint from the embedding-shard model (not the generic
+            // ZeRO formula).
+            let default_axis = StrategyAxis::Pow2 {
+                min_mp: 1,
+                max_mp: None,
+            };
+            if *strategies != default_axis {
+                return Err(Error::Config(format!(
+                    "scenario '{}': a dlrm optimize study has no strategy \
+                     axis; remove 'strategies'/'min_mp'/'max_mp'",
+                    spec.name
+                )));
+            }
+            if explicit_zero {
+                return Err(Error::Config(format!(
+                    "scenario '{}': zero_stages requires a transformer or \
+                     gemm workload",
+                    spec.name
+                )));
+            }
+            let n = spec.cluster.n_nodes;
+            branches.push(Branch {
+                label: format!("{n} nodes"),
+                workload: d.build(n)?,
+                stage: opts0.zero_stage,
+                footprint_override: Some(d.footprint_per_node(n)),
+            });
+        }
+        _ => {
+            for s in strategies.resolve(spec.cluster.n_nodes) {
+                let w0 = build_for(&spec.workload, &s)?;
+                for &stage in &zaxis {
+                    let w = if explicit_zero {
+                        apply_zero_comm(w0.clone(), stage)
+                    } else {
+                        w0.clone()
+                    };
+                    let label = if explicit_zero {
+                        format!("{} {}", s.label(), stage.label())
+                    } else {
+                        s.label()
+                    };
+                    branches.push(Branch {
+                        label,
+                        workload: w,
+                        stage,
+                        footprint_override: None,
+                    });
+                }
+            }
+        }
+    }
+
+    let mut axes = AxisSpec::new();
+    if !em_bandwidths_gbps.is_empty() {
+        let bws: Vec<f64> =
+            em_bandwidths_gbps.iter().map(|&b| gb(b)).collect();
+        axes = axes.em_bandwidths(&bws);
+    }
+    if !em_capacities_gb.is_empty() {
+        let caps: Vec<f64> = em_capacities_gb.iter().map(|&c| gb(c)).collect();
+        axes = axes.em_capacities(&caps);
+    }
+    if !collectives.is_empty() {
+        axes = axes.collective_impls(collectives);
+    } else {
+        axes = axes.collective_impls(&[opts0.collective_impl]);
+    }
+
+    Ok(Optimizer::new(coord, spec.cluster.clone(), opts0, branches, axes)
+        .map_err(|e| {
+            Error::Config(format!("scenario '{}': {e}", spec.name))
+        })?
+        .with_top_k(*top_k))
+}
+
+/// Run an optimize scenario, returning both the rendered figure (the
+/// top-k table) and the full search [`Outcome`] (argmin, frontier,
+/// evaluated/pruned counts).
+pub fn run_optimize(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+) -> Result<(FigureData, Outcome)> {
+    let out = optimizer_for(spec, coord)?.search()?;
+    if out.best().is_none() {
+        return Err(Error::Config(format!(
+            "scenario '{}': no feasible configuration in the design space \
+             ({} points, all capacity-infeasible)",
+            spec.name, out.total_points
+        )));
+    }
+    let on_frontier: std::collections::HashSet<usize> =
+        out.frontier.iter().map(|c| c.point.index).collect();
+
+    // The top-k rows are a breakdown table like every other study — go
+    // through the shared renderer (top[0] is the minimum, so
+    // Normalize::Best yields Norm_to_best = total/argmin) and append the
+    // one optimizer-specific column.
+    let mut fig = figure(spec, "configuration");
+    let evals: Vec<TrainingBreakdown> =
+        out.top.iter().map(|c| c.breakdown).collect();
+    render_breakdown(
+        &mut fig,
+        &evals,
+        out.top.iter().map(|c| c.label.clone()).collect(),
+        Some(out.top.iter().map(|c| c.footprint).collect()),
+        Normalize::Best,
+        "Norm_to_first",
+    );
+    fig.columns.push("Pareto".into());
+    for (row, c) in fig.rows.iter_mut().zip(&out.top) {
+        row.1.push(if on_frontier.contains(&c.point.index) {
+            1.0
+        } else {
+            0.0
+        });
+    }
+    fig.notes.push(format!(
+        "search: evaluated {}/{} lattice points ({} pruned by bound, {} \
+         infeasible)",
+        out.evaluated, out.total_points, out.pruned, out.infeasible
+    ));
+    fig.notes.push(format!(
+        "pareto frontier (compute vs exposed comm): {} of {} evaluated \
+         configurations",
+        out.frontier.len(),
+        out.evaluated
+    ));
+    apply_columns_override(spec, &mut fig)?;
+    Ok((fig, out))
+}
+
 // ---- cluster comparison (Fig. 15 shape) -----------------------------------
 
 fn run_cluster_compare(
@@ -971,6 +1154,51 @@ mod tests {
         )
         .unwrap_err();
         assert!(e.to_string().contains("1.0"), "{e}");
+    }
+
+    #[test]
+    fn optimize_study_runs_and_reports_search_stats() {
+        let f = run_str(
+            "name = \"opt\"\n\
+             [workload]\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"optimize\"\nmin_mp = 1\nmax_mp = 8\n\
+             top_k = 3\n\
+             [options]\ninfinite_memory = true\n",
+        )
+        .unwrap();
+        assert_eq!(f.rows.len(), 3);
+        assert_eq!(f.columns.len(), 7 + 3);
+        // Row 0 is the argmin: normalized total exactly 1.
+        let norm = f.columns.iter().position(|c| c == "Norm_to_best").unwrap();
+        assert_eq!(f.rows[0].1[norm], 1.0);
+        assert!(f
+            .rows
+            .iter()
+            .all(|(_, v)| v[norm] >= 1.0));
+        assert!(f
+            .notes
+            .iter()
+            .any(|n| n.contains("evaluated") && n.contains("pruned")));
+    }
+
+    #[test]
+    fn optimize_dlrm_rejects_strategy_and_zero_axes() {
+        let e = run_str(
+            "name = \"opt\"\n[workload]\nkind = \"dlrm\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"optimize\"\n\
+             strategies = [\"MP8_DP8\"]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("strategy"), "{e}");
+        let e = run_str(
+            "name = \"opt\"\n[workload]\nkind = \"dlrm\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"optimize\"\nzero_stages = [2, 3]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("zero_stages"), "{e}");
     }
 
     #[test]

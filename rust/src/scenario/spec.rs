@@ -160,6 +160,28 @@ pub enum Study {
         /// Expanded-memory bandwidths, GB/s (columns).
         em_bandwidths_gbps: Vec<f64>,
     },
+    /// Branch-and-bound co-design search over the strategy x
+    /// expanded-memory x collective x ZeRO lattice
+    /// ([`crate::optimizer`]): returns the argmin, the top-k, and the
+    /// compute-vs-communication Pareto frontier while pruning with
+    /// admissible analytical bounds instead of evaluating the whole
+    /// grid.
+    Optimize {
+        /// Strategy axis (transformer/gemm workloads; a DLRM workload
+        /// has rigid parallelism and must leave this at the default).
+        strategies: StrategyAxis,
+        /// Expanded-memory bandwidths, GB/s (empty = local memory only).
+        em_bandwidths_gbps: Vec<f64>,
+        /// Expanded-memory capacities, GB (empty = sized to the spill).
+        em_capacities_gb: Vec<f64>,
+        /// Collective implementations (empty = the options default).
+        collectives: Vec<CollectiveImpl>,
+        /// ZeRO stages (empty = the options default). When explicit, each
+        /// stage's DP communication-volume multiplier is applied.
+        zero_stages: Vec<ZeroStage>,
+        /// How many best configurations to report (default 5).
+        top_k: usize,
+    },
     /// Cross-cluster comparison on DLRM turnaround + best-feasible
     /// transformer strategy (paper Fig. 15 / Table III).
     ClusterCompare {
@@ -186,6 +208,7 @@ impl Study {
             Study::NetworkRebalance { .. } => "network-rebalance",
             Study::ClusterSize { .. } => "cluster-size",
             Study::Packing { .. } => "packing",
+            Study::Optimize { .. } => "optimize",
             Study::ClusterCompare { .. } => "cluster-compare",
         }
     }
@@ -479,7 +502,10 @@ fn strategy_list(m: &BTreeMap<String, Value>, key: &str, ctx: &str) -> Result<Ve
         .collect()
 }
 
-fn zero_stage_of(n: f64) -> Result<ZeroStage> {
+/// Parse a spec-file ZeRO stage number (0|1|2|3; anything else —
+/// including non-integers — is rejected). Shared with `comet optimize`'s
+/// `--zero-stages` flag so the two surfaces cannot drift.
+pub fn zero_stage_of(n: f64) -> Result<ZeroStage> {
     match n {
         x if x == 0.0 => Ok(ZeroStage::Baseline),
         x if x == 1.0 => Ok(ZeroStage::Os),
@@ -500,7 +526,10 @@ fn zero_stage_code(s: ZeroStage) -> f64 {
     }
 }
 
-fn collective_of(s: &str) -> Result<CollectiveImpl> {
+/// Parse a spec-file collective name (`ring` | `hierarchical`). Shared
+/// with `comet optimize`'s `--collectives` flag; inverse of
+/// [`collective_name`].
+pub fn collective_of(s: &str) -> Result<CollectiveImpl> {
     match s {
         "ring" => Ok(CollectiveImpl::LogicalRing),
         "hierarchical" => Ok(CollectiveImpl::Hierarchical),
@@ -510,12 +539,10 @@ fn collective_of(s: &str) -> Result<CollectiveImpl> {
     }
 }
 
-/// Short spec-file name of a collective implementation.
+/// Short spec-file name of a collective implementation (delegates to
+/// [`CollectiveImpl::name`] so every surface shares one vocabulary).
 pub fn collective_name(c: CollectiveImpl) -> &'static str {
-    match c {
-        CollectiveImpl::LogicalRing => "ring",
-        CollectiveImpl::Hierarchical => "hierarchical",
-    }
+    c.name()
 }
 
 impl WorkloadSpec {
@@ -875,6 +902,49 @@ impl Study {
                     )?,
                 })
             }
+            "optimize" => {
+                check_keys(
+                    m,
+                    &[
+                        "kind",
+                        "strategies",
+                        "min_mp",
+                        "max_mp",
+                        "em_bandwidths_gbps",
+                        "em_capacities_gb",
+                        "collectives",
+                        "zero_stages",
+                        "top_k",
+                    ],
+                    "study",
+                )?;
+                let collectives = str_list(m, "collectives", "study")?
+                    .iter()
+                    .map(|s| collective_of(s))
+                    .collect::<Result<Vec<_>>>()?;
+                let zero_stages = f64_list(m, "zero_stages", "study")?
+                    .into_iter()
+                    .map(zero_stage_of)
+                    .collect::<Result<Vec<_>>>()?;
+                let top_k = opt_usize(m, "top_k", "study")?.unwrap_or(5);
+                if top_k == 0 {
+                    return Err(Error::Config(
+                        "scenario: optimize top_k must be >= 1".into(),
+                    ));
+                }
+                Ok(Study::Optimize {
+                    strategies: Self::strategies_axis(m)?,
+                    em_bandwidths_gbps: f64_list(
+                        m,
+                        "em_bandwidths_gbps",
+                        "study",
+                    )?,
+                    em_capacities_gb: f64_list(m, "em_capacities_gb", "study")?,
+                    collectives,
+                    zero_stages,
+                    top_k,
+                })
+            }
             "cluster-compare" => {
                 check_keys(
                     m,
@@ -1055,6 +1125,50 @@ impl Study {
                     "em_bandwidths_gbps".into(),
                     nums(em_bandwidths_gbps),
                 );
+            }
+            Study::Optimize {
+                strategies,
+                em_bandwidths_gbps,
+                em_capacities_gb,
+                collectives,
+                zero_stages,
+                top_k,
+            } => {
+                axis_to_json(&mut m, strategies);
+                if !em_bandwidths_gbps.is_empty() {
+                    m.insert(
+                        "em_bandwidths_gbps".into(),
+                        nums(em_bandwidths_gbps),
+                    );
+                }
+                if !em_capacities_gb.is_empty() {
+                    m.insert("em_capacities_gb".into(), nums(em_capacities_gb));
+                }
+                if !collectives.is_empty() {
+                    m.insert(
+                        "collectives".into(),
+                        Value::Arr(
+                            collectives
+                                .iter()
+                                .map(|&c| {
+                                    Value::Str(collective_name(c).into())
+                                })
+                                .collect(),
+                        ),
+                    );
+                }
+                if !zero_stages.is_empty() {
+                    m.insert(
+                        "zero_stages".into(),
+                        Value::Arr(
+                            zero_stages
+                                .iter()
+                                .map(|&s| Value::Num(zero_stage_code(s)))
+                                .collect(),
+                        ),
+                    );
+                }
+                m.insert("top_k".into(), Value::Num(*top_k as f64));
             }
             Study::ClusterCompare {
                 clusters,
@@ -1534,6 +1648,41 @@ mod tests {
             ScenarioSpec::from_json(&crate::util::json::parse(&text).unwrap())
                 .unwrap();
         assert_eq!(s, back);
+    }
+
+    #[test]
+    fn optimize_study_parses_and_roundtrips() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"opt\"\n[study]\nkind = \"optimize\"\nmin_mp = 2\n\
+             max_mp = 128\nem_bandwidths_gbps = [500, 2039]\n\
+             collectives = [\"ring\", \"hierarchical\"]\ntop_k = 3\n",
+        )
+        .unwrap();
+        match &s.study {
+            Study::Optimize {
+                top_k,
+                em_bandwidths_gbps,
+                collectives,
+                ..
+            } => {
+                assert_eq!(*top_k, 3);
+                assert_eq!(em_bandwidths_gbps, &[500.0, 2039.0]);
+                assert_eq!(collectives.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        let back = ScenarioSpec::parse_str(&s.to_toml().unwrap()).unwrap();
+        assert_eq!(s, back);
+        // top_k defaults to 5; zero is rejected.
+        let d = ScenarioSpec::parse_str(
+            "name = \"opt\"\n[study]\nkind = \"optimize\"\n",
+        )
+        .unwrap();
+        assert!(matches!(d.study, Study::Optimize { top_k: 5, .. }));
+        assert!(ScenarioSpec::parse_str(
+            "name = \"opt\"\n[study]\nkind = \"optimize\"\ntop_k = 0\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -94,6 +94,9 @@ fn fmt_dur(secs: f64) -> String {
 pub struct Bencher {
     cfg: BenchConfig,
     results: Vec<BenchResult>,
+    /// Scalar side-metrics (cache hit counts, evaluated-point counts, ...)
+    /// recorded alongside the timings in every trajectory point.
+    metrics: Vec<(String, f64)>,
 }
 
 impl Bencher {
@@ -108,6 +111,7 @@ impl Bencher {
         Bencher {
             cfg,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -116,7 +120,20 @@ impl Bencher {
         Bencher {
             cfg,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
+    }
+
+    /// Record a scalar side-metric (e.g. cache hits, evaluated points).
+    /// Metrics print with the report and land in the `metrics` object of
+    /// the JSON trajectory point, so counters stop being write-only.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Recorded side-metrics.
+    pub fn metrics(&self) -> &[(String, f64)] {
+        &self.metrics
     }
 
     /// Time `f`, which must consume its work via `black_box`.
@@ -150,6 +167,9 @@ impl Bencher {
         for r in &self.results {
             println!("{}", r.line());
         }
+        for (name, value) in &self.metrics {
+            println!("{name:<44} {value}");
+        }
     }
 
     /// Access collected results.
@@ -177,7 +197,7 @@ impl Bencher {
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs() as f64)
             .unwrap_or(0.0);
-        let point = obj(vec![
+        let mut point = obj(vec![
             ("label", Value::Str(label.to_string())),
             ("unix_time_s", Value::Num(unix)),
             (
@@ -185,6 +205,15 @@ impl Bencher {
                 Value::Arr(self.results.iter().map(|r| r.to_json()).collect()),
             ),
         ]);
+        if !self.metrics.is_empty() {
+            let mut mm = std::collections::BTreeMap::new();
+            for (name, value) in &self.metrics {
+                mm.insert(name.clone(), Value::Num(*value));
+            }
+            if let Value::Obj(p) = &mut point {
+                p.insert("metrics".into(), Value::Obj(mm));
+            }
+        }
         let Value::Obj(m) = &mut root else {
             return Err(Error::Json(format!("{path}: root is not an object")));
         };
@@ -270,6 +299,34 @@ mod tests {
         let results = points[1].get("results").unwrap().as_arr().unwrap();
         assert_eq!(results[0].get("name").unwrap().as_str(), Some("noop"));
         assert!(results[0].get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn metrics_land_in_trajectory_point() {
+        let path = std::env::temp_dir()
+            .join(format!("comet_bench_metrics_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let mut b = fast();
+        b.bench("noop", || {
+            black_box(1);
+        });
+        b.metric("cache_hits", 42.0);
+        b.metric("evaluated_points", 9.0);
+        assert_eq!(b.metrics().len(), 2);
+        b.append_json(&path, "with-metrics").unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        let point = &v.get("points").unwrap().as_arr().unwrap()[0];
+        let metrics = point.get("metrics").unwrap();
+        assert_eq!(metrics.get("cache_hits").unwrap().as_f64(), Some(42.0));
+        assert_eq!(
+            metrics.get("evaluated_points").unwrap().as_f64(),
+            Some(9.0)
+        );
         let _ = std::fs::remove_file(&path);
     }
 

@@ -346,6 +346,59 @@ impl Workload {
     pub fn n_slots(&self) -> usize {
         self.layers.len()
     }
+
+    /// Cache fingerprint: FNV-1a over everything the two-stage derive
+    /// consumes — names (they flow into diagnostics), the (MP, DP, nodes)
+    /// shape, parameter totals, and every layer's per-phase quantities,
+    /// activation footprint, and communication. Two workloads with equal
+    /// fingerprints decompose identically, which is what lets the
+    /// coordinator's derive cache share one decomposition across a sweep.
+    pub fn fingerprint(&self) -> u64 {
+        fn eat_byte(h: &mut u64, b: u8) {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100000001b3);
+        }
+        fn eat(h: &mut u64, x: f64) {
+            for b in x.to_bits().to_le_bytes() {
+                eat_byte(h, b);
+            }
+        }
+        fn eat_str(h: &mut u64, s: &str) {
+            for b in s.as_bytes() {
+                eat_byte(h, *b);
+            }
+            // Terminator so "ab"+"c" and "a"+"bc" differ.
+            eat_byte(h, 0xff);
+        }
+        let mut h: u64 = 0xcbf29ce484222325;
+        eat_str(&mut h, &self.name);
+        eat(&mut h, self.mp as f64);
+        eat(&mut h, self.dp as f64);
+        eat(&mut h, self.nodes as f64);
+        eat(&mut h, self.total_params);
+        let scope_code = |s: CommScope| match s {
+            CommScope::Mp => 0.0,
+            CommScope::Dp => 1.0,
+            CommScope::All => 2.0,
+        };
+        for l in &self.layers {
+            eat_str(&mut h, &l.name);
+            eat(&mut h, l.repeat);
+            eat(&mut h, l.activation_elems());
+            for phase in Phase::ALL {
+                let q = l.op.quantities(phase);
+                eat(&mut h, q.flops);
+                eat(&mut h, q.u);
+                eat(&mut h, q.v);
+                eat(&mut h, q.w);
+                let c = l.comm(phase);
+                eat(&mut h, c.collective.code());
+                eat(&mut h, c.bytes);
+                eat(&mut h, scope_code(c.scope));
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -464,6 +517,38 @@ mod tests {
         assert_eq!(w.total_flops(), 96.0 + 200.0);
         assert_eq!(w.n_slots(), 2);
         assert_eq!(w.activation_working_elems(), 100.0);
+    }
+
+    #[test]
+    fn workload_fingerprint_distinguishes_content() {
+        let base = Workload {
+            name: "test".into(),
+            layers: vec![Layer::new(
+                "a",
+                LayerOp::Gemm {
+                    m: 2.0,
+                    k: 2.0,
+                    n: 2.0,
+                },
+                2.0,
+            )],
+            mp: 2,
+            dp: 4,
+            nodes: 8,
+            total_params: 8.0,
+        };
+        assert_eq!(base.fingerprint(), base.clone().fingerprint());
+        let mut renamed = base.clone();
+        renamed.name = "other".into();
+        assert_ne!(base.fingerprint(), renamed.fingerprint());
+        let mut reshaped = base.clone();
+        reshaped.mp = 4;
+        reshaped.dp = 2;
+        assert_ne!(base.fingerprint(), reshaped.fingerprint());
+        let mut recomm = base.clone();
+        recomm.layers[0].comm_wg =
+            Comm::allreduce(16.0, CommScope::Dp);
+        assert_ne!(base.fingerprint(), recomm.fingerprint());
     }
 
     #[test]

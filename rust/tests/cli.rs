@@ -142,6 +142,53 @@ fn scenario_errors_are_clean() {
 }
 
 #[test]
+fn optimize_command_prints_topk_and_search_stats() {
+    let (ok, stdout, stderr) = comet(&[
+        "optimize",
+        "--workload",
+        "transformer-100m",
+        "--cluster",
+        "dgx-a100-64",
+        "--max-mp",
+        "8",
+        "--top-k",
+        "3",
+        "--infinite-memory",
+    ]);
+    assert!(ok, "stderr:\n{stderr}");
+    assert!(stdout.contains("Norm_to_best"), "{stdout}");
+    assert!(stdout.contains("MP"), "{stdout}");
+    assert!(stderr.contains("evaluated"), "{stderr}");
+    assert!(stderr.contains("decompositions"), "{stderr}");
+}
+
+#[test]
+fn optimize_command_rejects_bad_flags() {
+    let (ok, _, stderr) = comet(&["optimize", "--workload", "resnet"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown workload"), "{stderr}");
+    let (ok, _, stderr) =
+        comet(&["optimize", "--em-bandwidths", "500,oops"]);
+    assert!(!ok);
+    assert!(stderr.contains("bad number"), "{stderr}");
+}
+
+#[test]
+fn scenario_run_optimize_builtin_verbose_reports_search() {
+    let (ok, stdout, stderr) = comet(&[
+        "scenario",
+        "run",
+        "optimize-transformer",
+        "--verbose",
+    ]);
+    assert!(ok, "stderr:\n{stderr}");
+    assert!(stdout.contains("MP8_DP128 EM@2039GB/s"), "{stdout}");
+    assert!(stdout.contains("pruned"), "{stdout}");
+    assert!(stderr.contains("optimizer: evaluated"), "{stderr}");
+    assert!(stderr.contains("derive cache"), "{stderr}");
+}
+
+#[test]
 fn validate_passes() {
     let (ok, stdout, stderr) = comet(&["validate"]);
     assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");

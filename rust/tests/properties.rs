@@ -5,9 +5,12 @@
 use comet::analytical::evaluate;
 use comet::compute::{gemm_traffic, hybrid_bandwidth};
 use comet::config::presets;
-use comet::model::inputs::{derive_inputs, EvalOptions};
+use comet::coordinator::Coordinator;
+use comet::model::inputs::{decompose, derive_inputs, resolve_inputs, EvalOptions};
 use comet::network::{collective_cost, CollectiveImpl, CollectiveSpec};
+use comet::optimizer::Outcome;
 use comet::parallel::{model_state_bytes, Strategy, ZeroStage};
+use comet::scenario::{optimizer_for, ScenarioSpec};
 use comet::sim::simulate;
 use comet::util::prng::Rng;
 use comet::util::stats::rel_diff;
@@ -212,6 +215,140 @@ fn cluster_json_roundtrip_random_mutations() {
         let back =
             comet::ClusterConfig::from_json(&c.to_json()).expect("roundtrip");
         assert_eq!(c, back, "case {case}");
+    }
+}
+
+/// Run an optimize scenario both ways and require identical rankings
+/// plus admissible bounds; returns (search, exhaustive).
+fn search_vs_exhaustive(doc: &str) -> (Outcome, Outcome) {
+    let spec = ScenarioSpec::parse_str(doc).unwrap();
+    let coord = Coordinator::native();
+    let opt = optimizer_for(&spec, &coord).unwrap();
+    let s = opt.search().unwrap();
+    let e = opt.exhaustive().unwrap();
+    assert_eq!(s.top.len(), e.top.len(), "{}", spec.name);
+    for (a, b) in s.top.iter().zip(&e.top) {
+        assert_eq!(a.point.index, b.point.index, "{}", spec.name);
+        assert_eq!(a.label, b.label, "{}", spec.name);
+        assert_eq!(
+            a.total().to_bits(),
+            b.total().to_bits(),
+            "{}: {}",
+            spec.name,
+            a.label
+        );
+    }
+    // Admissibility: every reported lower bound <= the evaluated cost.
+    for c in s.top.iter().chain(&s.frontier).chain(&e.frontier) {
+        assert!(
+            c.lower_bound <= c.total(),
+            "{}: {} bound {} > total {}",
+            spec.name,
+            c.label,
+            c.lower_bound,
+            c.total()
+        );
+    }
+    assert_eq!(s.infeasible, e.infeasible);
+    assert_eq!(s.evaluated + s.pruned, e.evaluated);
+    (s, e)
+}
+
+#[test]
+fn optimizer_matches_exhaustive_transformer_small_space() {
+    // Transformer-1T on a 64-node slice: every strategy spills, so the
+    // 2x2 (bandwidth x collective) axes genuinely move the totals.
+    let (s, e) = search_vs_exhaustive(
+        "name = \"opt-prop-tf\"\n\
+         [workload]\nkind = \"transformer\"\npreset = \"transformer-1t\"\n\
+         [cluster]\npreset = \"baseline\"\nn_nodes = 64\n\
+         [study]\nkind = \"optimize\"\nmin_mp = 8\nmax_mp = 32\n\
+         em_bandwidths_gbps = [500, 2039]\n\
+         collectives = [\"ring\", \"hierarchical\"]\ntop_k = 3\n",
+    );
+    assert_eq!(e.total_points, 3 * 2 * 2);
+    assert_eq!(e.evaluated, 12);
+    assert!(s.evaluated <= e.evaluated);
+}
+
+#[test]
+fn optimizer_matches_exhaustive_transformer_zero_axis() {
+    // ZeRO stage as a search axis (stage-3 pays its 1.5x DP volume).
+    let (s, e) = search_vs_exhaustive(
+        "name = \"opt-prop-zero\"\n\
+         [workload]\nkind = \"transformer\"\npreset = \"transformer-100m\"\n\
+         [cluster]\npreset = \"dgx-a100-64\"\n\
+         [study]\nkind = \"optimize\"\nmin_mp = 1\nmax_mp = 8\n\
+         zero_stages = [0, 2, 3]\ntop_k = 4\n\
+         [options]\ninfinite_memory = true\n",
+    );
+    assert_eq!(e.total_points, 4 * 3);
+    assert!(s.evaluated <= e.evaluated);
+}
+
+#[test]
+fn optimizer_matches_exhaustive_dlrm_small_space() {
+    // DLRM's rigid parallelism: a single branch, 2x2 memory axes, with
+    // the 40 GB capacity column infeasible (cannot hold the 70 GB
+    // spill). Ties across capacities break by lattice order — identical
+    // in both modes.
+    let (s, e) = search_vs_exhaustive(
+        "name = \"opt-prop-dlrm\"\n\
+         [workload]\nkind = \"dlrm\"\npreset = \"dlrm-1.2t\"\n\
+         [cluster]\npreset = \"dgx-a100-64\"\nn_nodes = 16\n\
+         [study]\nkind = \"optimize\"\n\
+         em_bandwidths_gbps = [500, 2039]\n\
+         em_capacities_gb = [40, 160]\ntop_k = 2\n",
+    );
+    assert_eq!(e.total_points, 4);
+    assert_eq!(e.infeasible, 2);
+    assert_eq!(e.evaluated, 2);
+    assert!(s.evaluated <= 2);
+    // Higher EM bandwidth can never lose on a spilled shard.
+    assert!(s.top[0].label.contains("2039"), "{}", s.top[0].label);
+}
+
+#[test]
+fn two_stage_derive_matches_single_pass_random_configs() {
+    // Randomized spot-check on top of the figure-space equivalence test:
+    // decompose+resolve must be bit-identical to single-pass derive for
+    // arbitrary option combinations.
+    let mut rng = Rng::new(909);
+    let clusters = [
+        presets::dgx_a100_1024(),
+        presets::table3_gpu('B', 1),
+        presets::dgx_a100_64(),
+    ];
+    for case in 0..60 {
+        let cluster = rng.choose(&clusters).clone();
+        let w = if rng.f64() < 0.7 {
+            let sweep = Strategy::sweep_bounded(cluster.n_nodes, 1, 128);
+            Transformer::t1().build(rng.choose(&sweep)).unwrap()
+        } else {
+            Dlrm::dlrm_1_2t()
+                .build(cluster.n_nodes.min(64))
+                .unwrap()
+        };
+        let opts = EvalOptions {
+            zero_stage: *rng.choose(&ZeroStage::ALL),
+            ignore_capacity: rng.f64() < 0.3,
+            em_frac_override: (rng.f64() < 0.3).then(|| rng.f64()),
+            footprint_override: (rng.f64() < 0.3)
+                .then(|| rng.log_range(1e9, 1e12)),
+            overlap_wg: rng.f64() < 0.8,
+            collective_impl: *rng.choose(&[
+                CollectiveImpl::LogicalRing,
+                CollectiveImpl::Hierarchical,
+            ]),
+        };
+        let single = derive_inputs(&w, &cluster, &opts).unwrap();
+        let staged = resolve_inputs(&decompose(&w), &cluster, &opts).unwrap();
+        assert_eq!(single, staged, "case {case}");
+        assert_eq!(
+            single.fingerprint(),
+            staged.fingerprint(),
+            "case {case}"
+        );
     }
 }
 

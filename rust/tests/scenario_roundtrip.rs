@@ -3,10 +3,19 @@
 //! must round-trip through JSON text and TOML export, and malformed
 //! specs must fail loudly.
 
+use comet::config::presets;
 use comet::coordinator::{sweep, Coordinator};
+use comet::model::inputs::{
+    decompose, derive_inputs, resolve_inputs, EvalOptions,
+};
+use comet::network::CollectiveImpl;
+use comet::parallel::{footprint_per_node, Strategy, ZeroStage};
 use comet::report::FigureData;
-use comet::scenario::{registry, run, ScenarioSpec};
+use comet::scenario::{optimizer_for, registry, run, ScenarioSpec};
 use comet::util::json;
+use comet::util::units::gb;
+use comet::workload::dlrm::Dlrm;
+use comet::workload::transformer::Transformer;
 
 /// Full structural + bit-exact numeric equality (NaN == NaN: the same
 /// code path must produce the same bits).
@@ -115,6 +124,209 @@ fn ablation_zero_matches_legacy() {
         &run_builtin("ablation-zero", &coord),
         &sweep::ablation_zero(&coord).unwrap(),
     );
+}
+
+// ---- two-stage derive vs single-pass oracle -------------------------------
+
+/// The two-stage derive (decompose + resolve, the batched hot path) must
+/// produce bit-identical `ModelInputs` to the single-pass `derive_inputs`
+/// oracle across the design spaces of all 12 built-in figure scenarios:
+/// the Fig. 8/9 strategy x memory grids, Fig. 10's scaled-compute nodes,
+/// Fig. 11/12's scaled and rebalanced networks, Fig. 13's DLRM sizings
+/// with footprint overrides, and Fig. 15's Table III clusters.
+#[test]
+fn two_stage_derive_matches_single_pass_across_figure_spaces() {
+    let base = presets::dgx_a100_1024();
+    let infinite = EvalOptions {
+        ignore_capacity: true,
+        ..Default::default()
+    };
+    let hier_infinite = EvalOptions {
+        collective_impl: CollectiveImpl::Hierarchical,
+        ..infinite
+    };
+    let mut specs: Vec<(
+        comet::workload::Workload,
+        comet::ClusterConfig,
+        EvalOptions,
+    )> = Vec::new();
+
+    // Figs. 8a/8b + ablation-collectives + ablation-zero: the full
+    // strategy sweep under both collectives and every ZeRO stage.
+    for s in Strategy::sweep_bounded(1024, 1, 128) {
+        let w = Transformer::t1().build(&s).unwrap();
+        specs.push((w.clone(), base.clone(), infinite));
+        specs.push((w.clone(), base.clone(), hier_infinite));
+        for stage in ZeroStage::ALL {
+            specs.push((
+                w.clone(),
+                base.clone(),
+                EvalOptions {
+                    zero_stage: stage,
+                    ..infinite
+                },
+            ));
+        }
+    }
+    // Fig. 9 + memory-expansion: spill-sized expanded memory per point.
+    for s in Strategy::sweep_bounded(1024, 2, 128) {
+        let w = Transformer::t1().build(&s).unwrap();
+        let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
+        let need = (fp - base.node.local.capacity).max(0.0);
+        for bw in [250.0, 1000.0, 2039.0] {
+            let cluster = if need > 0.0 {
+                base.with_node(base.node.with_expanded(need, gb(bw)))
+            } else {
+                base.clone()
+            };
+            specs.push((w.clone(), cluster, EvalOptions::default()));
+        }
+    }
+    // Fig. 10: compute-capability scaling.
+    {
+        let s = Strategy::new(8, 128);
+        let w = Transformer::t1().build(&s).unwrap();
+        let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
+        let need = (fp - base.node.local.capacity).max(0.0);
+        for sc in [0.25, 1.0, 8.0] {
+            let node = base.node.scale_compute(sc).with_expanded(need, gb(1000.0));
+            specs.push((w.clone(), base.with_node(node), EvalOptions::default()));
+        }
+    }
+    // Figs. 11/12: scaled and rebalanced networks.
+    for s in [Strategy::new(64, 16), Strategy::new(8, 128)] {
+        let w = Transformer::t1().build(&s).unwrap();
+        specs.push((w.clone(), base.scale_network(2.0, 0.5), hier_infinite));
+        specs.push((
+            w.clone(),
+            base.rebalance_network(6.0).unwrap(),
+            hier_infinite,
+        ));
+    }
+    // Figs. 13a/13b: DLRM sizings with footprint overrides + EM.
+    let d = Dlrm::dlrm_1_2t();
+    for n in [64usize, 32, 16, 8] {
+        let w = d.build(n).unwrap();
+        let fp = d.footprint_per_node(n);
+        let opts = EvalOptions {
+            footprint_override: Some(fp),
+            ..Default::default()
+        };
+        let mut cluster = presets::dgx_a100_64().with_n_nodes(n);
+        let need = (fp - cluster.node.local.capacity).max(0.0);
+        if need > 0.0 {
+            cluster.node = cluster.node.with_expanded(need, 2e12);
+        }
+        specs.push((w, cluster, opts));
+    }
+    // Fig. 15 / cluster-compare: every Table III cluster, DLRM packing +
+    // a feasible transformer strategy.
+    for cluster in presets::table3_all() {
+        let n_i = 8.min(cluster.n_nodes);
+        specs.push((
+            d.build(n_i).unwrap(),
+            cluster.with_n_nodes(n_i),
+            EvalOptions {
+                footprint_override: Some(d.footprint_per_node(n_i)),
+                ..Default::default()
+            },
+        ));
+        let s = Strategy::new(
+            64.min(cluster.n_nodes),
+            cluster.n_nodes / 64.min(cluster.n_nodes),
+        );
+        specs.push((
+            Transformer::t1().build(&s).unwrap(),
+            cluster.clone(),
+            EvalOptions::default(),
+        ));
+    }
+
+    assert!(specs.len() > 100, "space under-covered: {}", specs.len());
+    for (i, (w, c, o)) in specs.iter().enumerate() {
+        let single = derive_inputs(w, c, o).unwrap();
+        let staged = resolve_inputs(&decompose(w), c, o).unwrap();
+        assert_eq!(single, staged, "spec {i} ({})", single.name);
+        assert_eq!(
+            single.fingerprint(),
+            staged.fingerprint(),
+            "spec {i} ({})",
+            single.name
+        );
+    }
+}
+
+// ---- optimize built-ins ---------------------------------------------------
+
+/// Acceptance criterion: on both built-in optimize scenarios the
+/// branch-and-bound search evaluates at most half of the exhaustive
+/// grid's points while returning the identical argmin and top-k.
+#[test]
+fn optimize_builtins_prune_half_and_match_exhaustive() {
+    for name in ["optimize-transformer", "optimize-dlrm"] {
+        let spec = registry::get(name).unwrap();
+        let coord = Coordinator::native();
+        let opt = optimizer_for(&spec, &coord).unwrap();
+        let s = opt.search().unwrap();
+        let e = opt.exhaustive().unwrap();
+        assert_eq!(s.top.len(), e.top.len(), "{name}");
+        for (a, b) in s.top.iter().zip(&e.top) {
+            assert_eq!(a.point.index, b.point.index, "{name}");
+            assert_eq!(a.label, b.label, "{name}");
+            assert_eq!(a.total().to_bits(), b.total().to_bits(), "{name}");
+        }
+        assert!(
+            2 * s.evaluated <= e.evaluated,
+            "{name}: search evaluated {} of {} exhaustive points (> 50%)",
+            s.evaluated,
+            e.evaluated
+        );
+        assert_eq!(s.evaluated + s.pruned, e.evaluated, "{name}");
+    }
+}
+
+#[test]
+fn optimize_transformer_finds_the_paper_co_design() {
+    // Paper Ex. 1 / Fig. 9: with full-rate expanded memory, MP8_DP128
+    // overtakes every feasible local-memory configuration.
+    let coord = Coordinator::native();
+    let spec = registry::get("optimize-transformer").unwrap();
+    let out = optimizer_for(&spec, &coord).unwrap().search().unwrap();
+    let best = out.best().unwrap();
+    assert_eq!(best.label, "MP8_DP128 EM@2039GB/s");
+    assert_eq!(out.top.len(), 5);
+    assert_eq!(out.total_points, 49);
+    assert_eq!(out.infeasible, 0);
+}
+
+#[test]
+fn optimize_dlrm_prunes_infeasible_capacity_column() {
+    let coord = Coordinator::native();
+    let spec = registry::get("optimize-dlrm").unwrap();
+    let out = optimizer_for(&spec, &coord).unwrap().search().unwrap();
+    // 7 bandwidths x 3 capacities x 2 collectives; the 40 GB column
+    // (14 points) cannot hold the 70 GB spill.
+    assert_eq!(out.total_points, 42);
+    assert_eq!(out.infeasible, 14);
+    let best = out.best().unwrap();
+    assert!(best.label.contains("EM@2039GB/s"), "{}", best.label);
+    assert!(best.footprint > 80e9);
+}
+
+#[test]
+fn optimize_builtins_render_through_scenario_run() {
+    let coord = Coordinator::native();
+    for name in ["optimize-transformer", "optimize-dlrm"] {
+        let fig = run(&registry::get(name).unwrap(), &coord)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(fig.rows.len(), 5, "{name}");
+        assert!(fig.columns.contains(&"Pareto".into()), "{name}");
+        assert!(
+            fig.notes.iter().any(|n| n.contains("pruned")),
+            "{name}: {:?}",
+            fig.notes
+        );
+    }
 }
 
 // ---- spec round-trips -----------------------------------------------------
