@@ -18,7 +18,7 @@ fn main() -> comet::Result<()> {
     println!("{}", f.to_table());
 
     // --- Ex.1: what does MP8_DP128 need to beat the baseline? -----------
-    let s = Strategy::new(8, 128);
+    let s = Strategy::new(8, 128)?;
     let w = Transformer::t1().build(&s)?;
     let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
     let local = presets::dgx_a100_1024().node.local.capacity;

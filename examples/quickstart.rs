@@ -25,7 +25,7 @@ fn main() -> comet::Result<()> {
     println!("backend: {:?}\n", coord.backend());
 
     // --- single configuration ------------------------------------------
-    let strategy = Strategy::new(8, 128);
+    let strategy = Strategy::new(8, 128)?;
     let workload = model.build(&strategy)?;
     let b = coord.evaluate(&workload, &cluster)?;
     println!("{} on {}:", workload.name, cluster.name);
@@ -56,7 +56,7 @@ fn main() -> comet::Result<()> {
         "{:>14} {:>12} {:>14} {:>14}",
         "strategy", "total", "footprint", "feasible@80GB"
     );
-    for s in Strategy::sweep_bounded(cluster.n_nodes, 1, 128) {
+    for s in Strategy::sweep_bounded(cluster.n_nodes, 1, 128)? {
         let w = model.build(&s)?;
         let inputs = derive_inputs(&w, &cluster, &opts)?;
         let t =

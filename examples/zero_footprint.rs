@@ -32,7 +32,7 @@ fn main() -> comet::Result<()> {
     // Full footprint decomposition for the paper's two key strategies.
     println!("\nfull footprint decomposition (ZeRO-2):");
     let t = Transformer::t1();
-    for s in [Strategy::new(64, 16), Strategy::new(8, 128)] {
+    for s in [Strategy::new(64, 16)?, Strategy::new(8, 128)?] {
         let w = t.build(&s)?;
         let fp = footprint_per_node(&w, &s, ZeroStage::OsG);
         println!(

@@ -14,7 +14,9 @@ fn main() {
     let cluster = presets::dgx_a100_1024();
     let opts = EvalOptions { ignore_capacity: true, ..Default::default() };
     let inp = derive_inputs(
-        &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+        &Transformer::t1()
+            .build(&Strategy::new(8, 128).unwrap())
+            .unwrap(),
         &cluster,
         &opts,
     )

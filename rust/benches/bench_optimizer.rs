@@ -4,14 +4,18 @@
 //! timings in `BENCH_dse.json` (see BENCHMARKS.md for the comparison
 //! rule: search must evaluate <= 50% of the grid and return the
 //! identical argmin — the counts recorded here are what the rule is
-//! checked against over time).
+//! checked against over time). `pipeline-transformer` adds a 3D-lattice
+//! point (PP x microbatch x schedule branches) so the trajectory records
+//! how pruning scales with the pipeline axis.
 use comet::coordinator::Coordinator;
 use comet::scenario::{optimizer_for, registry};
 use comet::util::bench::{black_box, Bencher};
 
 fn main() {
     let mut b = Bencher::new();
-    for name in ["optimize-transformer", "optimize-dlrm"] {
+    for name in
+        ["optimize-transformer", "optimize-dlrm", "pipeline-transformer"]
+    {
         let spec = registry::get(name).unwrap();
         // Correctness pass (untimed): the pruned search must return the
         // exhaustive argmin.

@@ -6,13 +6,27 @@
 //! bandwidth (SIII-C1/C2) plus hierarchical collective cost (SIII-C3);
 //! exposure per SIII-C4 — FP/IG collectives block, the WG data-parallel
 //! collective overlaps with WG compute.
+//!
+//! **Pipeline parallelism (`pp > 1`)**: per-layer math is unchanged, but
+//! layers accumulate into their pipeline stage, and the stages compose
+//! through the fill–drain schedule recurrence [`pipeline_makespan`] —
+//! per-microbatch stage times on serial stage resources, point-to-point
+//! activation transfers on FIFO boundary links at the stage-boundary
+//! link class. For balanced stages the extra time over the bottleneck
+//! stage's own work is the classical bubble fraction `(pp - 1) / m` of
+//! `m` microbatches (GPipe and 1F1B share it; they differ in activation
+//! memory, which is folded into the derived footprint upstream). The
+//! `pp = 1` slice takes the original code path untouched.
 
 use crate::compute::{em_fraction, gemm_traffic, hybrid_bandwidth};
 use crate::model::inputs::ModelInputs;
 use crate::network::collective_cost;
 
 /// Per-iteration training-time breakdown, seconds (the paper's Fig. 8a
-/// stacked bars).
+/// stacked bars). With pipeline parallelism the six phase components
+/// describe the **bottleneck stage**, and the two pipeline terms account
+/// for everything the schedule adds on top; both are exactly zero on the
+/// `pp = 1` slice.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct TrainingBreakdown {
     /// Forward-pass compute time.
@@ -27,10 +41,16 @@ pub struct TrainingBreakdown {
     pub wg_compute: f64,
     /// Weight-gradient communication left exposed after overlap.
     pub wg_exposed_comm: f64,
+    /// Pipeline bubble: fill/drain + stage-imbalance idle time of the
+    /// bottleneck stage (0 when `pp = 1`).
+    pub bubble: f64,
+    /// Exposed stage-boundary point-to-point activation-transfer time
+    /// (0 when `pp = 1`).
+    pub pp_exposed_comm: f64,
 }
 
 impl TrainingBreakdown {
-    /// Total iteration time.
+    /// Total iteration time (phase components + pipeline terms).
     pub fn total(&self) -> f64 {
         self.fp_compute
             + self.fp_exposed_comm
@@ -38,6 +58,8 @@ impl TrainingBreakdown {
             + self.ig_exposed_comm
             + self.wg_compute
             + self.wg_exposed_comm
+            + self.bubble
+            + self.pp_exposed_comm
     }
 
     /// Total compute time.
@@ -45,9 +67,13 @@ impl TrainingBreakdown {
         self.fp_compute + self.ig_compute + self.wg_compute
     }
 
-    /// Total exposed communication time.
+    /// Total exposed communication time (collectives + stage-boundary
+    /// transfers; the bubble is idle, not communication).
     pub fn exposed_comm(&self) -> f64 {
-        self.fp_exposed_comm + self.ig_exposed_comm + self.wg_exposed_comm
+        self.fp_exposed_comm
+            + self.ig_exposed_comm
+            + self.wg_exposed_comm
+            + self.pp_exposed_comm
     }
 
     /// Fraction of the iteration spent on exposed communication (Fig. 8b).
@@ -60,7 +86,9 @@ impl TrainingBreakdown {
         }
     }
 
-    /// The six components as an array (artifact ABI order).
+    /// The six phase components as an array (artifact ABI order; the
+    /// pipeline terms are not part of the ABI — the artifact backend
+    /// rejects `pp > 1` inputs).
     pub fn as_array(&self) -> [f64; 6] {
         [
             self.fp_compute,
@@ -72,7 +100,7 @@ impl TrainingBreakdown {
         ]
     }
 
-    /// From the artifact ABI order.
+    /// From the artifact ABI order (pipeline terms zero).
     pub fn from_array(a: [f64; 6]) -> TrainingBreakdown {
         TrainingBreakdown {
             fp_compute: a[0],
@@ -81,8 +109,63 @@ impl TrainingBreakdown {
             ig_exposed_comm: a[3],
             wg_compute: a[4],
             wg_exposed_comm: a[5],
+            bubble: 0.0,
+            pp_exposed_comm: 0.0,
         }
     }
+}
+
+/// Makespan of the fill–drain (GPipe-style) pipeline schedule: `m`
+/// microbatches with per-microbatch forward times `u[s]` and backward
+/// times `b[s]` per stage, and a per-hop boundary transfer time `x`.
+/// Stage compute is a serial resource; each stage boundary is a FIFO
+/// link (transfers serialize), exactly the semantics the DES executes.
+///
+/// For balanced stages (`u[s] + b[s] = t`, `x = 0`) this evaluates to
+/// `(m + pp - 1) * t` — the classical `(pp - 1) / m` bubble fraction.
+/// The recurrence is monotone non-decreasing in every `u`, `b`, and `x`
+/// (compositions of `max` and `+`), which is what makes the optimizer's
+/// compute-floor pipeline bounds admissible bit-for-bit.
+pub fn pipeline_makespan(u: &[f64], b: &[f64], x: f64, m: usize) -> f64 {
+    let pp = u.len();
+    if pp == 0 {
+        return 0.0;
+    }
+    debug_assert_eq!(b.len(), pp);
+    // Per-stage compute frontier; boundary-link FIFO frontiers.
+    let mut stage = vec![0.0f64; pp];
+    let mut link = vec![0.0f64; pp.saturating_sub(1)];
+    for _ in 0..m {
+        let mut carry = 0.0f64;
+        for s in 0..pp {
+            let arrive = if s == 0 {
+                0.0
+            } else {
+                let t = carry.max(link[s - 1]) + x;
+                link[s - 1] = t;
+                t
+            };
+            stage[s] = arrive.max(stage[s]) + u[s];
+            carry = stage[s];
+        }
+    }
+    // Backward drains in reverse; a stage starts backward only after its
+    // forward work (stage[s] frontier) is done.
+    for _ in 0..m {
+        let mut carry = 0.0f64;
+        for s in (0..pp).rev() {
+            let arrive = if s == pp - 1 {
+                0.0
+            } else {
+                let t = carry.max(link[s]) + x;
+                link[s] = t;
+                t
+            };
+            stage[s] = arrive.max(stage[s]) + b[s];
+            carry = stage[s];
+        }
+    }
+    stage[0]
 }
 
 /// Evaluate the analytical cost model over derived inputs.
@@ -92,7 +175,17 @@ pub fn evaluate(inputs: &ModelInputs) -> TrainingBreakdown {
         .em_frac_override
         .unwrap_or_else(|| em_fraction(p.footprint, p.cap_lm));
     let bw_eff = hybrid_bandwidth(p.bw_lm, p.bw_em, frac_em);
+    if p.pp <= 1 {
+        evaluate_flat(inputs, bw_eff)
+    } else {
+        evaluate_pipeline(inputs, bw_eff)
+    }
+}
 
+/// The original 2D (`pp = 1`) evaluation — bit-for-bit the pre-pipeline
+/// code path; every pinned figure reproduces through here.
+fn evaluate_flat(inputs: &ModelInputs, bw_eff: f64) -> TrainingBreakdown {
+    let p = &inputs.params;
     let mut compute = [0.0f64; 3];
     let mut comm = [0.0f64; 3];
     for layer in &inputs.layers {
@@ -135,6 +228,102 @@ pub fn evaluate(inputs: &ModelInputs) -> TrainingBreakdown {
         ig_exposed_comm: comm[1],
         wg_compute: compute[2],
         wg_exposed_comm: wg_exposed,
+        bubble: 0.0,
+        pp_exposed_comm: 0.0,
+    }
+}
+
+/// Per-stage accumulation + the fill–drain schedule composition.
+fn evaluate_pipeline(inputs: &ModelInputs, bw_eff: f64) -> TrainingBreakdown {
+    let p = &inputs.params;
+    let pp = p.pp;
+    let m = p.microbatches.max(1);
+    let mf = m as f64;
+
+    // Per-stage per-phase accumulation: the same per-layer math as the
+    // flat path, bucketed by the layer's pipeline stage.
+    let mut compute = vec![[0.0f64; 3]; pp];
+    let mut comm = vec![[0.0f64; 3]; pp];
+    for layer in &inputs.layers {
+        let s = layer.stage.min(pp - 1);
+        for phase in 0..3 {
+            let q = &layer.q[phase];
+            let traffic = gemm_traffic(q.u, q.v, q.w, p.sram);
+            let delay = crate::compute::compute_delay(
+                q.flops,
+                traffic,
+                p.perf_peak,
+                bw_eff,
+            );
+            compute[s][phase] += layer.repeat * delay;
+            if !matches!(
+                layer.comm[phase].collective,
+                crate::workload::Collective::None
+            ) {
+                comm[s][phase] += layer.repeat
+                    * collective_cost(
+                        &layer.comm[phase],
+                        p.bw_intra,
+                        p.bw_inter,
+                        p.link_latency,
+                        p.collective_impl,
+                    );
+            }
+        }
+    }
+
+    // Per-microbatch stage service times; per-microbatch boundary hop.
+    let u: Vec<f64> = (0..pp)
+        .map(|s| (compute[s][0] + comm[s][0]) / mf)
+        .collect();
+    let b: Vec<f64> = (0..pp)
+        .map(|s| (compute[s][1] + comm[s][1] + compute[s][2]) / mf)
+        .collect();
+    let bw_b = if p.pp_inter { p.bw_inter } else { p.bw_intra };
+    let x = (p.pp_boundary_bytes / mf) / bw_b.max(1.0) + p.link_latency;
+
+    // Bottleneck stage: largest per-microbatch service (ties -> lowest
+    // stage index, matching the DES).
+    let mut btl = 0usize;
+    for s in 1..pp {
+        if u[s] + b[s] > u[btl] + b[btl] {
+            btl = s;
+        }
+    }
+    let wg_exp: Vec<f64> = (0..pp)
+        .map(|s| {
+            if p.overlap_wg {
+                (comm[s][2] - compute[s][2]).max(0.0)
+            } else {
+                comm[s][2]
+            }
+        })
+        .collect();
+
+    let total = pipeline_makespan(&u, &b, x, m) + wg_exp[btl];
+    // Bottleneck-stage busy time (full iteration, all phases + exposure).
+    let busy = compute[btl][0]
+        + comm[btl][0]
+        + compute[btl][1]
+        + comm[btl][1]
+        + compute[btl][2]
+        + wg_exp[btl];
+    // Whatever the schedule adds over the bottleneck's own work splits
+    // into exposed boundary transfers (capped at the critical-path
+    // 2 (pp - 1) hops) and bubble idle; both clamps guard f64 rounding.
+    let slack = (total - busy).max(0.0);
+    let pp_exposed = slack.min(2.0 * (pp as f64 - 1.0) * x);
+    let bubble = slack - pp_exposed;
+
+    TrainingBreakdown {
+        fp_compute: compute[btl][0],
+        fp_exposed_comm: comm[btl][0],
+        ig_compute: compute[btl][1],
+        ig_exposed_comm: comm[btl][1],
+        wg_compute: compute[btl][2],
+        wg_exposed_comm: wg_exp[btl],
+        bubble,
+        pp_exposed_comm: pp_exposed,
     }
 }
 
@@ -148,7 +337,9 @@ mod tests {
 
     fn eval(mp: usize, dp: usize, opts: &EvalOptions) -> TrainingBreakdown {
         let cluster = presets::dgx_a100_1024();
-        let w = Transformer::t1().build(&Strategy::new(mp, dp)).unwrap();
+        let w = Transformer::t1()
+            .build(&Strategy::new(mp, dp).unwrap())
+            .unwrap();
         evaluate(&derive_inputs(&w, &cluster, opts).unwrap())
     }
 
@@ -173,7 +364,7 @@ mod tests {
         // The paper's headline Fig. 8 result: MP8_DP128 minimizes iteration
         // time under infinite-capacity assumptions on the baseline cluster.
         let opts = fig8a_opts();
-        let sweep = Strategy::sweep_bounded(1024, 1, 128);
+        let sweep = Strategy::sweep_bounded(1024, 1, 128).unwrap();
         let best = sweep
             .iter()
             .min_by(|a, b| {
@@ -207,7 +398,7 @@ mod tests {
     fn fig8_wg_comm_fully_overlapped() {
         // Paper: "WG communication is fully overlapped by the WG compute in
         // every configuration".
-        for s in Strategy::sweep_bounded(1024, 2, 128) {
+        for s in Strategy::sweep_bounded(1024, 2, 128).unwrap() {
             let b = eval(s.mp, s.dp, &fig8a_opts());
             assert_eq!(b.wg_exposed_comm, 0.0, "{}: {b:?}", s.label());
         }
@@ -248,5 +439,122 @@ mod tests {
         let b = eval(8, 128, &fig8a_opts());
         let b2 = TrainingBreakdown::from_array(b.as_array());
         assert_eq!(b, b2);
+    }
+
+    fn eval_pipe(pp: usize, opts: &EvalOptions) -> TrainingBreakdown {
+        let cluster = presets::dgx_a100_1024();
+        let s = Strategy::new_3d(8, 128 / pp, pp).unwrap();
+        let w = Transformer::t1().build(&s).unwrap();
+        evaluate(&derive_inputs(&w, &cluster, opts).unwrap())
+    }
+
+    #[test]
+    fn pipeline_makespan_balanced_is_bubble_formula() {
+        // u + b = 1 per stage, free transfers: (m + pp - 1) * 1.
+        for (pp, m) in [(2usize, 4usize), (4, 8), (8, 2), (8, 1)] {
+            let u = vec![0.25; pp];
+            let b = vec![0.75; pp];
+            let got = pipeline_makespan(&u, &b, 0.0, m);
+            let want = (m + pp - 1) as f64;
+            assert!((got - want).abs() < 1e-9, "pp={pp} m={m}: {got}");
+        }
+        // Degenerate single stage: m services of u + b.
+        assert_eq!(pipeline_makespan(&[2.0], &[3.0], 10.0, 4), 20.0);
+    }
+
+    #[test]
+    fn pipeline_makespan_transfer_bound_corner() {
+        // When the boundary hop dominates, the FIFO links serialize the
+        // microbatches: makespan grows with m * x, not just (pp - 1) x.
+        let pp = 4;
+        let u = vec![1e-6; pp];
+        let b = vec![1e-6; pp];
+        let x = 1.0;
+        let m = 16;
+        let got = pipeline_makespan(&u, &b, x, m);
+        // Forward + backward critical path alone is 2 (pp - 1) x; the
+        // serialized microbatch train adds ~2 (m - 1) x on the busiest
+        // boundary.
+        assert!(got >= 2.0 * (pp as f64 - 1.0) * x);
+        assert!(got >= (m as f64) * x, "{got}");
+    }
+
+    #[test]
+    fn pipeline_makespan_monotone() {
+        let u = [0.3, 0.5, 0.4];
+        let b = [0.6, 0.2, 0.7];
+        let base = pipeline_makespan(&u, &b, 0.01, 8);
+        let mut u2 = u;
+        u2[1] *= 2.0;
+        assert!(pipeline_makespan(&u2, &b, 0.01, 8) >= base);
+        assert!(pipeline_makespan(&u, &b, 0.02, 8) >= base);
+        assert!(pipeline_makespan(&u, &b, 0.01, 9) >= base);
+    }
+
+    #[test]
+    fn pp1_breakdown_has_no_pipeline_terms() {
+        let b = eval(8, 128, &fig8a_opts());
+        assert_eq!(b.bubble, 0.0);
+        assert_eq!(b.pp_exposed_comm, 0.0);
+    }
+
+    #[test]
+    fn pipeline_bubble_shrinks_with_microbatches() {
+        let opts = |m: usize| EvalOptions {
+            ignore_capacity: true,
+            microbatches: m,
+            ..Default::default()
+        };
+        let few = eval_pipe(8, &opts(2));
+        let many = eval_pipe(8, &opts(32));
+        assert!(few.bubble > 0.0, "{few:?}");
+        assert!(
+            few.total() > many.total(),
+            "m=2 {} vs m=32 {}",
+            few.total(),
+            many.total()
+        );
+        // The bubble share tracks (pp - 1) / m for the balanced split.
+        let share = few.bubble / few.total();
+        assert!(share > 0.5, "bubble share {share}");
+        let share_many = many.bubble / many.total();
+        assert!(share_many < 0.25, "bubble share {share_many}");
+    }
+
+    #[test]
+    fn pipeline_total_bounded_below_by_stage_work() {
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            microbatches: 8,
+            ..Default::default()
+        };
+        for pp in [2usize, 4, 8] {
+            let b = eval_pipe(pp, &opts);
+            let stage_work = b.compute()
+                + b.fp_exposed_comm
+                + b.ig_exposed_comm
+                + b.wg_exposed_comm;
+            assert!(b.total() >= stage_work, "pp={pp}: {b:?}");
+            assert!(b.bubble >= 0.0 && b.pp_exposed_comm >= 0.0);
+        }
+    }
+
+    #[test]
+    fn pipeline_fits_where_2d_starves() {
+        // Capacity-enforced, no expanded memory: MP8_DP128 spills 264 GB
+        // and starves; MP8_DP16_PP8 holds a 1/64 shard and runs at full
+        // local bandwidth. This is the lattice-generalization headline.
+        let opts = EvalOptions {
+            microbatches: 8,
+            ..Default::default()
+        };
+        let starved = eval(8, 128, &opts);
+        let piped = eval_pipe(8, &opts);
+        assert!(
+            piped.total() < 0.01 * starved.total(),
+            "piped {} vs starved {}",
+            piped.total(),
+            starved.total()
+        );
     }
 }

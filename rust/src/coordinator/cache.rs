@@ -177,7 +177,9 @@ mod tests {
 
     fn inputs(mp: usize, dp: usize) -> ModelInputs {
         derive_inputs(
-            &Transformer::t1().build(&Strategy::new(mp, dp)).unwrap(),
+            &Transformer::t1()
+                .build(&Strategy::new(mp, dp).unwrap())
+                .unwrap(),
             &presets::dgx_a100_1024(),
             &EvalOptions::default(),
         )
@@ -228,13 +230,17 @@ mod tests {
     #[test]
     fn option_fields_affect_key() {
         let a = derive_inputs(
-            &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+            &Transformer::t1()
+                .build(&Strategy::new(8, 128).unwrap())
+                .unwrap(),
             &presets::dgx_a100_1024(),
             &EvalOptions::default(),
         )
         .unwrap();
         let b = derive_inputs(
-            &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+            &Transformer::t1()
+                .build(&Strategy::new(8, 128).unwrap())
+                .unwrap(),
             &presets::dgx_a100_1024(),
             &EvalOptions {
                 ignore_capacity: true,
@@ -267,8 +273,12 @@ mod tests {
     #[test]
     fn derive_cache_decomposes_once_per_distinct_workload() {
         let cache = DeriveCache::new();
-        let w8 = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
-        let w16 = Transformer::t1().build(&Strategy::new(16, 64)).unwrap();
+        let w8 = Transformer::t1()
+            .build(&Strategy::new(8, 128).unwrap())
+            .unwrap();
+        let w16 = Transformer::t1()
+            .build(&Strategy::new(16, 64).unwrap())
+            .unwrap();
         let a = cache.decomposition(&w8);
         let b = cache.decomposition(&w8);
         assert!(Arc::ptr_eq(&a, &b));

@@ -269,7 +269,9 @@ mod tests {
 
     fn job() -> (Workload, ClusterConfig) {
         (
-            Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+            Transformer::t1()
+                .build(&Strategy::new(8, 128).unwrap())
+                .unwrap(),
             presets::dgx_a100_1024(),
         )
     }
@@ -309,6 +311,7 @@ mod tests {
             ..Default::default()
         };
         let inputs: Vec<_> = Strategy::sweep_bounded(1024, 1, 128)
+            .unwrap()
             .iter()
             .map(|s| {
                 derive_inputs(
@@ -335,6 +338,7 @@ mod tests {
             ..Default::default()
         };
         let inputs: Vec<_> = Strategy::sweep_bounded(1024, 2, 64)
+            .unwrap()
             .iter()
             .map(|s| {
                 derive_inputs(
@@ -379,7 +383,9 @@ mod tests {
         assert_eq!(misses, 1, "one decomposition per distinct workload");
         assert_eq!(hits, 9);
         // A second batch with a new workload decomposes only the new one.
-        let w2 = Transformer::t1().build(&Strategy::new(16, 64)).unwrap();
+        let w2 = Transformer::t1()
+            .build(&Strategy::new(16, 64).unwrap())
+            .unwrap();
         coord
             .derive_batch(vec![
                 (w2, c.clone(), EvalOptions::default()),
@@ -395,6 +401,7 @@ mod tests {
         let c = presets::dgx_a100_1024();
         let opts = EvalOptions::default();
         let specs: Vec<_> = Strategy::sweep_bounded(1024, 1, 128)
+            .unwrap()
             .iter()
             .map(|s| {
                 (
@@ -446,6 +453,7 @@ mod tests {
         };
         let inputs: Arc<Vec<_>> = Arc::new(
             Strategy::sweep_bounded(1024, 1, 128)
+                .unwrap()
                 .iter()
                 .map(|s| {
                     derive_inputs(

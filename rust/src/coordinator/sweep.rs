@@ -25,7 +25,10 @@ use crate::config::{presets, ClusterConfig};
 use crate::error::Result;
 use crate::model::inputs::EvalOptions;
 use crate::network::CollectiveImpl;
-use crate::parallel::{footprint_per_node, model_state_bytes, Strategy, ZeroStage};
+use crate::parallel::{
+    footprint_per_node, model_state_bytes, pipeline_footprint_per_node,
+    Strategy, ZeroStage,
+};
 use crate::report::FigureData;
 use crate::util::units::gb;
 use crate::workload::dlrm::Dlrm;
@@ -160,7 +163,15 @@ impl GridSweep {
         let mut out = Vec::with_capacity(self.len());
         for s in &self.strategies {
             let w = build(s)?;
-            let fp = footprint_per_node(&w, s, opts.zero_stage).total();
+            // Pipeline-aware footprint (identical to footprint_per_node
+            // on the pp = 1 slice) so 3D strategies size their expanded
+            // memory to the worst stage's spill.
+            let fp = pipeline_footprint_per_node(
+                &w,
+                opts.zero_stage,
+                opts.pipe_schedule,
+                opts.microbatches,
+            );
             let spill = (fp - base.node.local.capacity).max(0.0);
             for &bw in &self.em_bandwidths {
                 for &cap in &self.em_capacities {
@@ -196,6 +207,7 @@ impl GridSweep {
 /// (MP <= 128).
 pub fn fig8_strategies() -> Vec<Strategy> {
     Strategy::sweep_bounded(1024, 1, 128)
+        .expect("1024 is a power of two")
 }
 
 /// Fig. 6: per-node memory footprint of Transformer-1T on 1024 nodes as a
@@ -205,7 +217,7 @@ pub fn fig6() -> FigureData {
     let t = Transformer::t1();
     let psi = t.total_params();
     let mut rows = Vec::new();
-    for s in Strategy::sweep(1024) {
+    for s in Strategy::sweep(1024).expect("1024 is a power of two") {
         let vals: Vec<f64> = ZeroStage::ALL
             .iter()
             .map(|&st| model_state_bytes(psi, s.mp, s.dp, st) / gb(1.0))
@@ -330,13 +342,13 @@ pub fn fig9(coord: &Coordinator) -> Result<FigureData> {
     // than the baseline's flank; MP > 128 is unbuildable at 160 heads).
     // Columns: the shared EM bandwidth sweep, expansion sized to each
     // row's spill.
-    let strategies = Strategy::sweep_bounded(1024, 2, 128);
+    let strategies = Strategy::sweep_bounded(1024, 2, 128)?;
     let grid = GridSweep::new(strategies.clone())
         .em_bandwidths(&EM_BW_SWEEP.map(gb));
 
     // Job 0: MP64_DP16 on local memory only (the normalization baseline).
     let mut specs: Vec<SweepSpec> = vec![(
-        Transformer::t1().build(&Strategy::new(64, 16))?,
+        Transformer::t1().build(&Strategy::new(64, 16)?)?,
         base_cluster.clone(),
         opts,
     )];
@@ -373,7 +385,7 @@ pub fn fig9(coord: &Coordinator) -> Result<FigureData> {
 /// expanded-memory bandwidths.
 pub fn fig10(coord: &Coordinator) -> Result<FigureData> {
     let base_cluster = presets::dgx_a100_1024();
-    let s = Strategy::new(8, 128);
+    let s = Strategy::new(8, 128)?;
     let w = Transformer::t1().build(&s)?;
     let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
     let need = (fp - base_cluster.node.local.capacity).max(0.0);
@@ -433,7 +445,7 @@ pub fn fig11(coord: &Coordinator) -> Result<FigureData> {
         ..Default::default()
     };
     let factors = [0.5, 1.0, 2.0, 4.0];
-    let configs = [Strategy::new(64, 16), Strategy::new(8, 128)];
+    let configs = [Strategy::new(64, 16)?, Strategy::new(8, 128)?];
 
     // Per config: one baseline job + the full factor x factor grid.
     let block = 1 + factors.len() * factors.len();
@@ -493,7 +505,7 @@ pub fn fig12(coord: &Coordinator) -> Result<FigureData> {
         ..Default::default()
     };
     let ratios = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 9.6, 12.0, 16.0, 24.0];
-    let configs = [Strategy::new(64, 16), Strategy::new(8, 128)];
+    let configs = [Strategy::new(64, 16)?, Strategy::new(8, 128)?];
     let nc = configs.len();
 
     // Jobs 0..nc: the stock 1:9.6 baselines; then ratio-major grid.
@@ -720,7 +732,7 @@ pub fn fig15(coord: &Coordinator) -> Result<FigureData> {
         let topts = EvalOptions::default();
         let tf_start = specs.len();
         let max_mp = 128.min(cluster.n_nodes);
-        for s in Strategy::sweep_bounded(cluster.n_nodes, 1, max_mp) {
+        for s in Strategy::sweep_bounded(cluster.n_nodes, 1, max_mp)? {
             let w = Transformer::t1().build(&s)?;
             let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
             // Infeasible if the footprint exceeds total (local + expanded)
@@ -835,7 +847,7 @@ pub fn ablation_zero(coord: &Coordinator) -> Result<FigureData> {
     let mut labels = Vec::new();
     let mut footprints = Vec::new();
     let mut specs: Vec<SweepSpec> = Vec::new();
-    for s in [Strategy::new(64, 16), Strategy::new(8, 128)] {
+    for s in [Strategy::new(64, 16)?, Strategy::new(8, 128)?] {
         let base = Transformer::t1().build(&s)?;
         for stage in ZeroStage::ALL {
             let mut w = base.clone();
@@ -958,14 +970,14 @@ mod tests {
 
     #[test]
     fn grid_sweep_cross_product_size() {
-        let grid = GridSweep::new(Strategy::sweep_bounded(1024, 2, 128))
+        let grid = GridSweep::new(Strategy::sweep_bounded(1024, 2, 128).unwrap())
             .em_bandwidths(&EM_BW_SWEEP.map(gb));
         // 7 strategies (MP128..MP2) x 7 bandwidths x 1 capacity x 1 impl.
         assert_eq!(grid.len(), 7 * EM_BW_SWEEP.len());
         assert_eq!(grid.points().len(), grid.len());
         assert!(!grid.is_empty());
 
-        let grid = GridSweep::new(Strategy::sweep(64))
+        let grid = GridSweep::new(Strategy::sweep(64).unwrap())
             .em_bandwidths(&[gb(500.0), gb(1000.0)])
             .em_capacities(&[gb(100.0), gb(200.0), gb(400.0)])
             .collective_impls(&[
@@ -979,7 +991,7 @@ mod tests {
 
     #[test]
     fn grid_sweep_rejects_capacity_without_bandwidth() {
-        let err = GridSweep::new(vec![Strategy::new(8, 8)])
+        let err = GridSweep::new(vec![Strategy::new(8, 8).unwrap()])
             .em_capacities(&[gb(100.0)])
             .specs(
                 &presets::dgx_a100_1024(),
@@ -992,8 +1004,8 @@ mod tests {
     #[test]
     fn grid_sweep_points_row_major() {
         let grid = GridSweep::new(vec![
-            Strategy::new(8, 8),
-            Strategy::new(4, 16),
+            Strategy::new(8, 8).unwrap(),
+            Strategy::new(4, 16).unwrap(),
         ])
         .em_bandwidths(&[1e9, 2e9])
         .collective_impls(&[
@@ -1003,18 +1015,18 @@ mod tests {
         let pts = grid.points();
         assert_eq!(pts.len(), 2 * 2 * 2);
         // Strategy outermost, then bandwidth, then impl innermost.
-        assert_eq!(pts[0].strategy, Strategy::new(8, 8));
+        assert_eq!(pts[0].strategy, Strategy::new(8, 8).unwrap());
         assert_eq!(pts[0].em_bandwidth, Some(1e9));
         assert_eq!(pts[0].collective_impl, CollectiveImpl::LogicalRing);
         assert_eq!(pts[1].collective_impl, CollectiveImpl::Hierarchical);
         assert_eq!(pts[2].em_bandwidth, Some(2e9));
-        assert_eq!(pts[4].strategy, Strategy::new(4, 16));
+        assert_eq!(pts[4].strategy, Strategy::new(4, 16).unwrap());
     }
 
     #[test]
     fn grid_sweep_specs_match_points() {
         let cluster = presets::dgx_a100_1024();
-        let grid = GridSweep::new(Strategy::sweep_bounded(1024, 8, 64))
+        let grid = GridSweep::new(Strategy::sweep_bounded(1024, 8, 64).unwrap())
             .em_bandwidths(&EM_BW_SWEEP.map(gb));
         let specs = grid
             .specs(&cluster, &EvalOptions::default(), |s| {

@@ -3,11 +3,14 @@
 //! Reproduction of *COMET: A Comprehensive Cluster Design Methodology for
 //! Distributed Deep Learning Training* (Kadiyala et al., Georgia Tech, 2022).
 //!
-//! COMET jointly explores model **parallelization strategies** (MP × DP) and
-//! **cluster resource provisioning** (per-node compute, local + expanded
-//! memory, intra-/inter-pod network) and estimates distributed-training time
-//! per iteration with an analytical roofline + hierarchical-collective cost
-//! model, optionally cross-checked by a discrete-event simulator.
+//! COMET jointly explores model **parallelization strategies** (the 3D
+//! MP × DP × PP lattice — tensor/model, data, and pipeline parallelism;
+//! the paper's 2D lattice is the `pp = 1` slice) and **cluster resource
+//! provisioning** (per-node compute, local + expanded memory,
+//! intra-/inter-pod network) and estimates distributed-training time per
+//! iteration with an analytical roofline + hierarchical-collective +
+//! pipeline-schedule cost model, optionally cross-checked by a
+//! discrete-event simulator.
 //!
 //! ## Architecture (three layers)
 //!
@@ -34,11 +37,16 @@
 //! use comet::workload::transformer::Transformer;
 //!
 //! let cluster = presets::dgx_a100_1024();
-//! let model = Transformer::t1()                    // Transformer-1T
-//!     .build(&Strategy::new(8, 128)).unwrap();     // MP8_DP128
+//! let model = Transformer::t1()                            // Transformer-1T
+//!     .build(&Strategy::new(8, 128).unwrap()).unwrap();    // MP8_DP128
 //! let coord = Coordinator::native();
 //! let breakdown = coord.evaluate(&model, &cluster).unwrap();
 //! println!("iteration time: {:.3} s", breakdown.total());
+//!
+//! // The same model pipeline-parallel: 8 stages of 8-way MP, DP 16.
+//! let piped = Transformer::t1()
+//!     .build(&Strategy::new_3d(8, 16, 8).unwrap()).unwrap();
+//! assert!(piped.pp == 8);
 //! ```
 //!
 //! ## Scenarios

@@ -5,10 +5,13 @@
 //! comet scenario <run FILE-or-NAME | list | show NAME | export NAME>
 //!       [--backend native|des|artifact|auto] [--out-dir DIR] [--out FILE]
 //!       [--verbose]
-//! comet optimize [--workload W] [--cluster PRESET] [--backend B]
-//!       [--min-mp N] [--max-mp N] [--em-bandwidths GB/s,..]
+//! comet optimize [SCENARIO] [--workload W] [--cluster PRESET] [--backend B]
+//!       [--min-mp N] [--max-mp N] [--max-pp N] [--microbatches M]
+//!       [--schedule gpipe|1f1b] [--em-bandwidths GB/s,..]
 //!       [--em-capacities GB,..] [--collectives ring,hierarchical]
 //!       [--zero-stages 0,2,..] [--top-k N] [--infinite-memory]
+//!       (SCENARIO = an optimize/pipeline builtin name or TOML path,
+//!        e.g. `comet optimize pipeline-transformer`)
 //! comet figure <fig6|fig8a|fig8b|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|all>
 //!       [--backend native|des|artifact] [--out-dir DIR] [--csv]
 //! comet sweep   [--cluster PRESET] [--backend B] [--infinite-memory]
@@ -127,7 +130,7 @@ fn workload_for(args: &Args) -> Result<Workload> {
                     args.flag("dp")
                         .map(|v| v.parse().unwrap_or(128))
                         .unwrap_or(128),
-                ),
+                )?,
             };
             t.build(&strategy)
         }
@@ -202,7 +205,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "config", "compute", "exposed", "total", "footprint"
     );
     for s in
-        Strategy::sweep_bounded(cluster.n_nodes, 1, 128.min(cluster.n_nodes))
+        Strategy::sweep_bounded(cluster.n_nodes, 1, 128.min(cluster.n_nodes))?
     {
         let w = match Transformer::t1().build(&s) {
             Ok(w) => w,
@@ -321,7 +324,7 @@ fn cmd_validate(_args: &Args) -> Result<()> {
     };
     let mut max_nd: f64 = 0.0;
     let mut max_na: f64 = 0.0;
-    for s in Strategy::sweep_bounded(1024, 1, 128) {
+    for s in Strategy::sweep_bounded(1024, 1, 128)? {
         let w = Transformer::t1().build(&s)?;
         let inputs = derive_inputs(&w, &cluster, &opts)?;
         let n = native.evaluate_inputs(std::slice::from_ref(&inputs))?[0];
@@ -369,8 +372,30 @@ fn csv_f64(s: &str, flag: &str) -> Result<Vec<f64>> {
 /// `comet optimize`: construct an optimize scenario from flags and run
 /// the branch-and-bound search. The same engine as
 /// `comet scenario run optimize-*`, parameterized from the command line.
+///
+/// With a positional target (`comet optimize pipeline-transformer` or a
+/// TOML path), the spec's own lattice is searched instead — the target
+/// must be an `optimize` or `pipeline` study.
 fn cmd_optimize(args: &Args) -> Result<()> {
     let coord = coordinator_for(args)?;
+    if let Some(target) = args.positional.get(1) {
+        let spec = scenario_spec_for(target)?;
+        if !matches!(
+            spec.study,
+            Study::Optimize { .. } | Study::Pipeline { .. }
+        ) {
+            return Err(Error::Config(format!(
+                "comet optimize needs an optimize or pipeline study; '{}' \
+                 is a {} study",
+                spec.name,
+                spec.study.kind()
+            )));
+        }
+        let (fig, out) = scenario::run_optimize(&spec, &coord)?;
+        emit_figure(&fig, args)?;
+        report_optimize_stats(&coord, &out);
+        return Ok(());
+    }
     let cluster = cluster_for(args)?;
     let workload = match args.flag("workload").unwrap_or("transformer-1t") {
         "transformer-1t" => WorkloadSpec::Transformer(Transformer::t1()),
@@ -416,15 +441,25 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let strategies = if matches!(workload, WorkloadSpec::Dlrm(_))
         && args.flag("min-mp").is_none()
         && args.flag("max-mp").is_none()
+        && args.flag("max-pp").is_none()
     {
         StrategyAxis::Pow2 {
             min_mp: 1,
             max_mp: None,
+            max_pp: 1,
         }
     } else {
         StrategyAxis::Pow2 {
             min_mp: num_flag("min-mp", 1)?,
             max_mp: Some(num_flag("max-mp", 128.min(cluster.n_nodes))?),
+            max_pp: match num_flag("max-pp", 1)? {
+                0 => {
+                    return Err(Error::Config(
+                        "--max-pp must be >= 1".into(),
+                    ))
+                }
+                p => p,
+            },
         }
     };
     let study = Study::Optimize {
@@ -461,12 +496,30 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         study,
         options: OptionsSpec {
             infinite_memory: args.has("infinite-memory"),
+            microbatches: match num_flag("microbatches", 8)? {
+                0 => {
+                    return Err(Error::Config(
+                        "--microbatches must be >= 1".into(),
+                    ))
+                }
+                n => n,
+            },
+            schedule: match args.flag("schedule") {
+                Some(s) => comet::parallel::PipeSchedule::parse(s)?,
+                None => comet::parallel::PipeSchedule::OneFOneB,
+            },
             ..Default::default()
         },
         output: OutputSpec::default(),
     };
     let (fig, out) = scenario::run_optimize(&spec, &coord)?;
     emit_figure(&fig, args)?;
+    report_optimize_stats(&coord, &out);
+    Ok(())
+}
+
+/// Shared stderr report for `comet optimize` (flag and spec-target modes).
+fn report_optimize_stats(coord: &Coordinator, out: &comet::optimizer::Outcome) {
     let (hits, misses) = coord.cache_stats();
     let (dh, dm) = coord.derive_cache_stats();
     eprintln!(
@@ -479,7 +532,6 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         out.pruned,
         out.infeasible,
     );
-    Ok(())
 }
 
 /// Resolve a `scenario run|show|export` target: a file if one exists at

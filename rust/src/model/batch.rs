@@ -52,7 +52,18 @@ pub struct PackedConfig {
 }
 
 /// Pack derived model inputs into the artifact ABI.
+///
+/// The ABI predates the 3D strategy lattice and has no stage/pipeline
+/// fields; pipeline-parallel inputs are rejected loudly rather than
+/// silently evaluated as if their stages were one flat layer list.
 pub fn pack(inputs: &ModelInputs) -> Result<PackedConfig> {
+    if inputs.params.pp > 1 {
+        return Err(Error::AbiMismatch(format!(
+            "{}: pipeline-parallel inputs (pp = {}) are not representable \
+             in the artifact ABI; use the native or DES backend",
+            inputs.name, inputs.params.pp
+        )));
+    }
     if inputs.layers.len() > L {
         return Err(Error::AbiMismatch(format!(
             "{} layers exceed the artifact's {} slots",
@@ -211,7 +222,9 @@ mod tests {
 
     fn sample_inputs() -> ModelInputs {
         derive_inputs(
-            &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+            &Transformer::t1()
+                .build(&Strategy::new(8, 128).unwrap())
+                .unwrap(),
             &presets::dgx_a100_1024(),
             &EvalOptions::default(),
         )

@@ -27,7 +27,9 @@ mod tests {
     #[test]
     fn transformer_on_baseline() {
         let b = evaluate_native(
-            &Transformer::t1().build(&Strategy::new(64, 16)).unwrap(),
+            &Transformer::t1()
+                .build(&Strategy::new(64, 16).unwrap())
+                .unwrap(),
             &presets::dgx_a100_1024(),
             &EvalOptions::default(),
         )

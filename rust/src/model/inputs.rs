@@ -19,7 +19,8 @@ use crate::error::{Error, Result};
 use crate::network::{CollectiveImpl, CollectiveSpec};
 use crate::parallel::{
     activation_working_bytes, footprint_per_node, model_state_bytes,
-    residual_state_bytes, Strategy, ZeroStage,
+    pipeline_stage_footprint, residual_state_bytes, stage_footprint_terms,
+    PipeSchedule, Strategy, ZeroStage,
 };
 use crate::workload::{Comm, CommScope, Phase, PhaseQuantities, Workload};
 
@@ -40,6 +41,15 @@ pub struct EvalOptions {
     /// Collective implementation (Table I baseline: logical ring; the
     /// SV-B4 network studies use hierarchical).
     pub collective_impl: CollectiveImpl,
+    /// Microbatches per iteration for pipeline-parallel workloads
+    /// (`pp > 1`). Ignored — and normalized to 1 in the derived inputs —
+    /// on the `pp = 1` slice, where the iteration processes its batch in
+    /// one piece.
+    pub microbatches: usize,
+    /// Pipeline schedule for `pp > 1` workloads (bubble is identical;
+    /// 1F1B holds fewer activations — see
+    /// [`crate::parallel::PipeSchedule`]). Ignored at `pp = 1`.
+    pub pipe_schedule: PipeSchedule,
 }
 
 impl Default for EvalOptions {
@@ -51,6 +61,8 @@ impl Default for EvalOptions {
             footprint_override: None,
             overlap_wg: true,
             collective_impl: CollectiveImpl::LogicalRing,
+            microbatches: 8,
+            pipe_schedule: PipeSchedule::OneFOneB,
         }
     }
 }
@@ -82,6 +94,20 @@ pub struct NodeParams {
     pub em_frac_override: Option<f64>,
     /// Collective implementation.
     pub collective_impl: CollectiveImpl,
+    /// Pipeline-parallel degree (`1` = the 2D slice; the backends take
+    /// their flat code path and ignore every other pipeline field).
+    pub pp: usize,
+    /// Microbatches per iteration (normalized to 1 when `pp == 1`).
+    pub microbatches: usize,
+    /// Pipeline schedule (normalized to the default when `pp == 1`).
+    pub pipe_schedule: PipeSchedule,
+    /// Largest stage-boundary activation payload, bytes, for the full
+    /// mini-batch (0 when `pp == 1`). Per-microbatch transfers move
+    /// `pp_boundary_bytes / microbatches`.
+    pub pp_boundary_bytes: f64,
+    /// Whether the stage-boundary point-to-point transfer crosses pods
+    /// (stage stride `mp * dp` >= pod size).
+    pub pp_inter: bool,
 }
 
 /// One layer's resolved cost-model record.
@@ -91,6 +117,8 @@ pub struct LayerRecord {
     pub name: String,
     /// Instance multiplicity.
     pub repeat: f64,
+    /// Pipeline stage this record belongs to (0 on the 2D slice).
+    pub stage: usize,
     /// Compute quantities for FP / IG / WG.
     pub q: [PhaseQuantities; 3],
     /// Collectives for FP / IG / WG (group shapes already resolved against
@@ -137,11 +165,17 @@ impl ModelInputs {
             if p.overlap_wg { 1.0 } else { 0.0 },
             p.em_frac_override.unwrap_or(-1.0),
             p.collective_impl.code(),
+            p.pp as f64,
+            p.microbatches as f64,
+            p.pipe_schedule.code(),
+            p.pp_boundary_bytes,
+            if p.pp_inter { 1.0 } else { 0.0 },
         ] {
             eat(v);
         }
         for l in &self.layers {
             eat(l.repeat);
+            eat(l.stage as f64);
             for q in &l.q {
                 eat(q.flops);
                 eat(q.u);
@@ -168,7 +202,9 @@ fn resolve_scope(
     nodes: usize,
     pod_size: usize,
 ) -> (usize, usize) {
-    let strategy = Strategy::new(mp, dp);
+    // MP/DP scopes live inside one pipeline stage, so the group shapes
+    // depend only on (mp, dp) — a pp = 1 view of the stage's layout.
+    let strategy = Strategy { mp, dp, pp: 1 };
     match scope {
         CommScope::Mp => strategy.mp_two_level(pod_size),
         CommScope::Dp => strategy.dp_two_level(pod_size),
@@ -186,8 +222,12 @@ fn resolve_scope(
 pub struct LayerPlan {
     /// Layer name (diagnostics).
     pub name: String,
-    /// Instance multiplicity.
+    /// Instance multiplicity. A repeated layer straddling a pipeline
+    /// stage boundary is split into one plan per stage with fractional
+    /// repeats.
     pub repeat: f64,
+    /// Pipeline stage this plan belongs to (0 on the 2D slice).
+    pub stage: usize,
     /// Compute quantities for FP / IG / WG.
     pub q: [PhaseQuantities; 3],
     /// Communication for FP / IG / WG, with scopes not yet resolved
@@ -213,26 +253,70 @@ pub struct WorkloadDecomposition {
     pub mp: usize,
     /// DP degree the workload was built for.
     pub dp: usize,
+    /// Pipeline-parallel degree the workload was built for.
+    pub pp: usize,
     /// Total nodes the workload occupies.
     pub nodes: usize,
     /// Total model parameters (across all MP shards, one DP replica).
     pub total_params: f64,
-    /// Residual-state bytes (workload-only footprint term).
+    /// Residual-state bytes (workload-only footprint term; the whole
+    /// MP shard, all stages).
     pub residual_bytes: f64,
-    /// Activation-working-memory bytes (workload-only footprint term).
+    /// Activation-working-memory bytes (workload-only footprint term;
+    /// whole-shard peak).
     pub awm_bytes: f64,
-    /// Per-layer plans, in forward order.
+    /// Per-stage residual-state bytes (length `pp`; sums to
+    /// `residual_bytes` and equals `[residual_bytes]` at `pp = 1`).
+    pub stage_residual: Vec<f64>,
+    /// Per-stage activation-working-memory bytes (length `pp`).
+    pub stage_awm: Vec<f64>,
+    /// Activation bytes crossing each stage boundary (length `pp - 1`),
+    /// full mini-batch.
+    pub boundary_bytes: Vec<f64>,
+    /// Per-layer plans, in forward order (stage-major: splitting a
+    /// repeated layer across stages preserves forward order).
     pub layers: Vec<LayerPlan>,
 }
 
 impl WorkloadDecomposition {
-    /// Per-node footprint at a ZeRO stage — identical (bit-for-bit) to
+    /// Per-node footprint at a ZeRO stage, treating the whole layer list
+    /// as one pipeline stage — identical (bit-for-bit) to
     /// `footprint_per_node(workload, strategy, stage).total()` on the
-    /// workload this decomposition was built from.
+    /// workload this decomposition was built from. This is the `pp = 1`
+    /// oracle; pipeline-aware callers use
+    /// [`WorkloadDecomposition::footprint`].
     pub fn footprint_total(&self, stage: ZeroStage) -> f64 {
         model_state_bytes(self.total_params, self.mp, self.dp, stage)
             + self.residual_bytes
             + self.awm_bytes
+    }
+
+    /// Pipeline-aware per-node footprint: at `pp = 1` exactly
+    /// [`WorkloadDecomposition::footprint_total`]; at `pp > 1` the worst
+    /// stage's model-state shard (further divided by `pp`), residual
+    /// activations held under the schedule, and per-microbatch AWM —
+    /// bit-identical to
+    /// [`crate::parallel::pipeline_footprint_per_node`] on the source
+    /// workload (pinned by tests).
+    pub fn footprint(
+        &self,
+        stage: ZeroStage,
+        sched: PipeSchedule,
+        microbatches: usize,
+    ) -> f64 {
+        if self.pp <= 1 {
+            return self.footprint_total(stage);
+        }
+        let model = model_state_bytes(self.total_params, self.mp, self.dp, stage)
+            / self.pp as f64;
+        pipeline_stage_footprint(
+            model,
+            &self.stage_residual,
+            &self.stage_awm,
+            sched,
+            self.pp,
+            microbatches,
+        )
     }
 
     /// Resolve one layer-phase communication against a pod size, producing
@@ -251,25 +335,45 @@ impl WorkloadDecomposition {
 
 /// Stage 1: decompose a workload into its cluster-independent plan.
 /// Infallible — all validation happens against the cluster in stage 2.
+///
+/// With pipeline parallelism the per-layer plans follow the contiguous
+/// FLOP-balanced stage partition ([`Workload::stage_partition`]): a
+/// repeated layer that straddles a stage boundary contributes one plan
+/// per stage with fractional repeats. At `pp = 1` the partition is the
+/// identity and the plans are exactly the per-layer list.
 pub fn decompose(workload: &Workload) -> WorkloadDecomposition {
-    let layers = workload
-        .layers
+    let stages = workload.stage_partition();
+    let (stage_residual, stage_awm) =
+        stage_footprint_terms(workload, &stages);
+    let boundary_bytes = workload.stage_boundary_bytes(&stages);
+    let layers = stages
         .iter()
-        .map(|l| LayerPlan {
-            name: l.name.clone(),
-            repeat: l.repeat,
-            q: Phase::ALL.map(|p| l.op.quantities(p)),
-            comm: Phase::ALL.map(|p| l.comm(p)),
+        .enumerate()
+        .flat_map(|(si, slices)| {
+            slices.iter().map(move |sl| {
+                let l = &workload.layers[sl.layer];
+                LayerPlan {
+                    name: l.name.clone(),
+                    repeat: sl.repeat,
+                    stage: si,
+                    q: Phase::ALL.map(|p| l.op.quantities(p)),
+                    comm: Phase::ALL.map(|p| l.comm(p)),
+                }
+            })
         })
         .collect();
     WorkloadDecomposition {
         name: workload.name.clone(),
         mp: workload.mp,
         dp: workload.dp,
+        pp: workload.pp,
         nodes: workload.nodes,
         total_params: workload.total_params,
         residual_bytes: residual_state_bytes(workload),
         awm_bytes: activation_working_bytes(workload),
+        stage_residual,
+        stage_awm,
+        boundary_bytes,
         layers,
     }
 }
@@ -294,9 +398,27 @@ pub fn resolve_inputs(
     }
     let view = cluster.two_level();
 
-    let footprint = opts
-        .footprint_override
-        .unwrap_or_else(|| dec.footprint_total(opts.zero_stage));
+    let footprint = opts.footprint_override.unwrap_or_else(|| {
+        dec.footprint(opts.zero_stage, opts.pipe_schedule, opts.microbatches)
+    });
+
+    // Pipeline fields normalize to fixed values on the 2D slice so
+    // `pp = 1` fingerprints (and the single-pass oracle) are unchanged
+    // by microbatch/schedule options that cannot affect the result.
+    let pp = dec.pp.max(1);
+    let (microbatches, pipe_schedule) = if pp > 1 {
+        (opts.microbatches.max(1), opts.pipe_schedule)
+    } else {
+        (1, PipeSchedule::default())
+    };
+    let pp_boundary_bytes =
+        dec.boundary_bytes.iter().copied().fold(0.0, f64::max);
+    let pp_inter = Strategy {
+        mp: dec.mp,
+        dp: dec.dp,
+        pp,
+    }
+    .pp_crosses_pods(view.pod_size);
 
     let node = &cluster.node;
     let params = NodeParams {
@@ -316,6 +438,11 @@ pub fn resolve_inputs(
             opts.em_frac_override
         },
         collective_impl: opts.collective_impl,
+        pp,
+        microbatches,
+        pipe_schedule,
+        pp_boundary_bytes,
+        pp_inter,
     };
 
     let layers = dec
@@ -324,6 +451,7 @@ pub fn resolve_inputs(
         .map(|l| LayerRecord {
             name: l.name.clone(),
             repeat: l.repeat,
+            stage: l.stage,
             q: l.q,
             comm: [0usize, 1, 2]
                 .map(|i| dec.resolve_comm(&l.comm[i], view.pod_size)),
@@ -339,10 +467,13 @@ pub fn resolve_inputs(
 
 /// Derive the complete model inputs for one (workload, cluster) pair.
 ///
-/// This is the single-pass reference implementation, retained as the
-/// equivalence oracle for the two-stage path ([`decompose`] +
-/// [`resolve_inputs`]) the sweep hot path uses — the two must stay
-/// bit-identical (pinned by `tests/scenario_roundtrip.rs`). One-off
+/// This is the single-pass reference implementation for the `pp = 1`
+/// slice, retained as the equivalence oracle for the two-stage path
+/// ([`decompose`] + [`resolve_inputs`]) the sweep hot path uses — the
+/// two must stay bit-identical (pinned by
+/// `tests/scenario_roundtrip.rs`). Pipeline-parallel workloads
+/// (`pp > 1`) need the stage partition and therefore delegate to the
+/// two-stage path — there is exactly one staging implementation. One-off
 /// callers use this; batched callers go through
 /// [`crate::coordinator::Coordinator::derive_batch`] so decomposition is
 /// memoized per distinct workload.
@@ -351,6 +482,9 @@ pub fn derive_inputs(
     cluster: &ClusterConfig,
     opts: &EvalOptions,
 ) -> Result<ModelInputs> {
+    if workload.pp > 1 {
+        return resolve_inputs(&decompose(workload), cluster, opts);
+    }
     cluster.validate()?;
     if workload.nodes > cluster.n_nodes {
         return Err(Error::Config(format!(
@@ -363,7 +497,11 @@ pub fn derive_inputs(
     let footprint = opts.footprint_override.unwrap_or_else(|| {
         footprint_per_node(
             workload,
-            &Strategy::new(workload.mp, workload.dp),
+            &Strategy {
+                mp: workload.mp,
+                dp: workload.dp,
+                pp: 1,
+            },
             opts.zero_stage,
         )
         .total()
@@ -387,6 +525,13 @@ pub fn derive_inputs(
             opts.em_frac_override
         },
         collective_impl: opts.collective_impl,
+        // The 2D slice: pipeline fields pinned to their normal forms,
+        // matching `resolve_inputs` exactly.
+        pp: 1,
+        microbatches: 1,
+        pipe_schedule: PipeSchedule::default(),
+        pp_boundary_bytes: 0.0,
+        pp_inter: false,
     };
 
     let layers = workload
@@ -420,6 +565,7 @@ pub fn derive_inputs(
             LayerRecord {
                 name: l.name.clone(),
                 repeat: l.repeat,
+                stage: 0,
                 q,
                 comm,
             }
@@ -443,7 +589,7 @@ mod tests {
     #[test]
     fn mp8_collectives_stay_intra_pod() {
         let cluster = presets::dgx_a100_1024();
-        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let w = Transformer::t1().build(&Strategy::new(8, 128).unwrap()).unwrap();
         let inp = derive_inputs(&w, &cluster, &EvalOptions::default()).unwrap();
         let mlp2 = inp.layers.iter().find(|l| l.name == "mlp-2").unwrap();
         // FP all-reduce: MP8 inside an 8-GPU pod.
@@ -457,7 +603,7 @@ mod tests {
     #[test]
     fn mp64_straddles_pods() {
         let cluster = presets::dgx_a100_1024();
-        let w = Transformer::t1().build(&Strategy::new(64, 16)).unwrap();
+        let w = Transformer::t1().build(&Strategy::new(64, 16).unwrap()).unwrap();
         let inp = derive_inputs(&w, &cluster, &EvalOptions::default()).unwrap();
         let mlp2 = inp.layers.iter().find(|l| l.name == "mlp-2").unwrap();
         assert_eq!(mlp2.comm[0].n_intra, 8);
@@ -477,7 +623,7 @@ mod tests {
     #[test]
     fn ignore_capacity_forces_no_spill() {
         let cluster = presets::dgx_a100_1024();
-        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let w = Transformer::t1().build(&Strategy::new(8, 128).unwrap()).unwrap();
         let opts = EvalOptions {
             ignore_capacity: true,
             ..Default::default()
@@ -491,7 +637,7 @@ mod tests {
     #[test]
     fn oversubscribed_workload_rejected() {
         let cluster = presets::dgx_a100_64();
-        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let w = Transformer::t1().build(&Strategy::new(8, 128).unwrap()).unwrap();
         assert!(derive_inputs(&w, &cluster, &EvalOptions::default()).is_err());
     }
 
@@ -500,7 +646,7 @@ mod tests {
         let cluster = presets::dgx_a100_1024();
         for (mp, dp) in [(8usize, 128usize), (64, 16), (128, 8)] {
             let w = Transformer::t1()
-                .build(&Strategy::new(mp, dp))
+                .build(&Strategy::new(mp, dp).unwrap())
                 .unwrap();
             for opts in [
                 EvalOptions::default(),
@@ -525,19 +671,116 @@ mod tests {
 
     #[test]
     fn decomposition_footprint_matches_footprint_per_node() {
-        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let w = Transformer::t1().build(&Strategy::new(8, 128).unwrap()).unwrap();
         let dec = decompose(&w);
         for stage in ZeroStage::ALL {
             let want =
-                footprint_per_node(&w, &Strategy::new(8, 128), stage).total();
+                footprint_per_node(&w, &Strategy::new(8, 128).unwrap(), stage)
+                    .total();
             assert_eq!(dec.footprint_total(stage).to_bits(), want.to_bits());
         }
     }
 
     #[test]
+    fn decomposition_footprint_matches_pipeline_oracle() {
+        // The cached per-stage terms and the workload-side oracle must
+        // agree bit-for-bit, for both schedules and several microbatch
+        // counts, on 2D and 3D strategies.
+        for s in [
+            Strategy::new(8, 128).unwrap(),
+            Strategy::new_3d(8, 32, 4).unwrap(),
+            Strategy::new_3d(8, 16, 8).unwrap(),
+        ] {
+            let w = Transformer::t1().build(&s).unwrap();
+            let dec = decompose(&w);
+            for stage in ZeroStage::ALL {
+                for sched in PipeSchedule::ALL {
+                    for m in [1usize, 4, 16] {
+                        let want =
+                            crate::parallel::pipeline_footprint_per_node(
+                                &w, stage, sched, m,
+                            );
+                        let got = dec.footprint(stage, sched, m);
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "{} {:?} {sched} m={m}",
+                            s.label(),
+                            stage
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_decomposition_has_staged_plans() {
+        let s = Strategy::new_3d(8, 16, 8).unwrap();
+        let w = Transformer::t1().build(&s).unwrap();
+        let dec = decompose(&w);
+        assert_eq!(dec.pp, 8);
+        assert_eq!(dec.stage_residual.len(), 8);
+        assert_eq!(dec.boundary_bytes.len(), 7);
+        assert!(dec.boundary_bytes.iter().all(|&b| b > 0.0));
+        // Stages are contiguous and non-decreasing through the plan list.
+        let stages: Vec<usize> = dec.layers.iter().map(|l| l.stage).collect();
+        assert!(stages.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*stages.last().unwrap(), 7);
+        // Per-stage repeat mass conserves the layer totals.
+        let total: f64 = dec.layers.iter().map(|l| l.repeat).sum();
+        let want: f64 = w.layers.iter().map(|l| l.repeat).sum();
+        assert!((total - want).abs() < 1e-9, "{total} vs {want}");
+    }
+
+    #[test]
+    fn pipeline_resolve_sets_boundary_params() {
+        let cluster = presets::dgx_a100_1024();
+        let s = Strategy::new_3d(8, 16, 8).unwrap();
+        let w = Transformer::t1().build(&s).unwrap();
+        let opts = EvalOptions {
+            microbatches: 16,
+            pipe_schedule: PipeSchedule::GPipe,
+            ..Default::default()
+        };
+        let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+        assert_eq!(inp.params.pp, 8);
+        assert_eq!(inp.params.microbatches, 16);
+        assert_eq!(inp.params.pipe_schedule, PipeSchedule::GPipe);
+        // A 128-node stage exceeds the 8-GPU pod: inter-pod boundary.
+        assert!(inp.params.pp_inter);
+        assert!(inp.params.pp_boundary_bytes > 0.0);
+        // The single-pass entry point and the two-stage path are the same
+        // implementation for pp > 1.
+        let staged = resolve_inputs(&decompose(&w), &cluster, &opts).unwrap();
+        assert_eq!(inp, staged);
+    }
+
+    #[test]
+    fn pp1_inputs_ignore_microbatch_and_schedule_options() {
+        // On the 2D slice the pipeline options are normalized away, so
+        // fingerprints (and cache keys) cannot split on irrelevant knobs.
+        let cluster = presets::dgx_a100_1024();
+        let w = Transformer::t1().build(&Strategy::new(8, 128).unwrap()).unwrap();
+        let base = derive_inputs(&w, &cluster, &EvalOptions::default()).unwrap();
+        let tweaked = derive_inputs(
+            &w,
+            &cluster,
+            &EvalOptions {
+                microbatches: 64,
+                pipe_schedule: PipeSchedule::GPipe,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(base, tweaked);
+        assert_eq!(base.fingerprint(), tweaked.fingerprint());
+    }
+
+    #[test]
     fn resolve_rejects_oversubscription_like_single_pass() {
         let cluster = presets::dgx_a100_64();
-        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let w = Transformer::t1().build(&Strategy::new(8, 128).unwrap()).unwrap();
         let e =
             resolve_inputs(&decompose(&w), &cluster, &EvalOptions::default());
         assert!(e.is_err());
@@ -546,7 +789,7 @@ mod tests {
     #[test]
     fn footprint_override_wins() {
         let cluster = presets::dgx_a100_1024();
-        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let w = Transformer::t1().build(&Strategy::new(8, 128).unwrap()).unwrap();
         let opts = EvalOptions {
             footprint_override: Some(123e9),
             ..Default::default()

@@ -14,6 +14,7 @@
 //!   which lower-bounds its exposed share (overlap can only shrink it
 //!   to zero, never below).
 
+use crate::analytical::pipeline_makespan;
 use crate::compute::{compute_delay, gemm_traffic};
 use crate::model::inputs::WorkloadDecomposition;
 use crate::network::{collective_cost, CollectiveImpl};
@@ -74,6 +75,87 @@ pub(crate) fn assemble(compute: [f64; 3], comm_fp: f64, comm_ig: f64) -> f64 {
     (((compute[0] + comm_fp) + compute[1]) + comm_ig) + compute[2]
 }
 
+/// Per-stage per-phase `[FP, IG, WG]` compute times at memory bandwidth
+/// `bw`, mirroring the pipeline backend's per-stage accumulation order
+/// (`analytical::evaluate`'s pipeline path).
+pub(crate) fn stage_compute_times(
+    dec: &WorkloadDecomposition,
+    perf_peak: f64,
+    sram: f64,
+    bw: f64,
+) -> Vec<[f64; 3]> {
+    let pp = dec.pp.max(1);
+    let mut compute = vec![[0.0f64; 3]; pp];
+    for layer in &dec.layers {
+        let s = layer.stage.min(pp - 1);
+        for (slot, q) in compute[s].iter_mut().zip(&layer.q) {
+            let traffic = gemm_traffic(q.u, q.v, q.w, sram);
+            *slot +=
+                layer.repeat * compute_delay(q.flops, traffic, perf_peak, bw);
+        }
+    }
+    compute
+}
+
+/// Per-stage blocking `(FP, IG)` collective times for one implementation,
+/// mirroring the pipeline backend's per-stage accumulation order.
+pub(crate) fn stage_blocking_comm_times(
+    dec: &WorkloadDecomposition,
+    pod_size: usize,
+    bw_intra: f64,
+    bw_inter: f64,
+    lat: f64,
+    impl_: CollectiveImpl,
+) -> Vec<(f64, f64)> {
+    let pp = dec.pp.max(1);
+    let mut comm = vec![(0.0f64, 0.0f64); pp];
+    for layer in &dec.layers {
+        let s = layer.stage.min(pp - 1);
+        for phase in 0..2 {
+            let c = &layer.comm[phase];
+            if matches!(c.collective, Collective::None) {
+                continue;
+            }
+            let spec = dec.resolve_comm(c, pod_size);
+            let cost = layer.repeat
+                * collective_cost(&spec, bw_intra, bw_inter, lat, impl_);
+            if phase == 0 {
+                comm[s].0 += cost;
+            } else {
+                comm[s].1 += cost;
+            }
+        }
+    }
+    comm
+}
+
+/// Assemble a pipeline leaf bound: per-microbatch stage services built
+/// from the per-stage compute floors + exact blocking FP/IG collectives
+/// (WG dropped — its exposed share is >= 0), composed through the same
+/// fill–drain recurrence the evaluation uses
+/// ([`crate::analytical::pipeline_makespan`]), with the exact boundary
+/// transfer time `x`. The recurrence is monotone in every service time,
+/// so the result lower-bounds the evaluated total bit-for-bit.
+pub(crate) fn assemble_pipeline(
+    compute: &[[f64; 3]],
+    comm: &[(f64, f64)],
+    m: usize,
+    x: f64,
+) -> f64 {
+    let mf = m.max(1) as f64;
+    let u: Vec<f64> = compute
+        .iter()
+        .zip(comm)
+        .map(|(c, (fp, _))| (c[0] + fp) / mf)
+        .collect();
+    let b: Vec<f64> = compute
+        .iter()
+        .zip(comm)
+        .map(|(c, (_, ig))| (c[1] + ig + c[2]) / mf)
+        .collect();
+    pipeline_makespan(&u, &b, x, m.max(1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,7 +172,7 @@ mod tests {
             ignore_capacity: true,
             ..Default::default()
         };
-        for s in Strategy::sweep_bounded(1024, 1, 128) {
+        for s in Strategy::sweep_bounded(1024, 1, 128).unwrap() {
             let w = Transformer::t1().build(&s).unwrap();
             let dec = decompose(&w);
             let inputs = derive_inputs(&w, &cluster, &opts).unwrap();
@@ -128,9 +210,55 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_bound_never_exceeds_evaluated_total() {
+        let cluster = presets::dgx_a100_1024();
+        let view = cluster.two_level();
+        for (pp, m) in [(2usize, 4usize), (4, 8), (8, 2)] {
+            let s = Strategy::new_3d(8, 128 / pp, pp).unwrap();
+            let w = Transformer::t1().build(&s).unwrap();
+            let dec = decompose(&w);
+            let opts = EvalOptions {
+                ignore_capacity: true,
+                microbatches: m,
+                ..Default::default()
+            };
+            let inputs = derive_inputs(&w, &cluster, &opts).unwrap();
+            let total = evaluate(&inputs).total();
+            let compute = stage_compute_times(
+                &dec,
+                cluster.node.perf_peak,
+                cluster.node.sram,
+                cluster.node.local.bandwidth,
+            );
+            let comm = stage_blocking_comm_times(
+                &dec,
+                view.pod_size,
+                view.bw_intra,
+                view.bw_inter,
+                cluster.link_latency,
+                opts.collective_impl,
+            );
+            let bw_b = if inputs.params.pp_inter {
+                view.bw_inter
+            } else {
+                view.bw_intra
+            };
+            let x = (inputs.params.pp_boundary_bytes / m as f64)
+                / bw_b.max(1.0)
+                + cluster.link_latency;
+            let lb = assemble_pipeline(&compute, &comm, m, x);
+            assert!(
+                lb <= total,
+                "{} m={m}: bound {lb} > total {total}",
+                s.label()
+            );
+        }
+    }
+
+    #[test]
     fn compute_times_monotone_in_bandwidth() {
         let w = Transformer::t1()
-            .build(&Strategy::new(8, 128))
+            .build(&Strategy::new(8, 128).unwrap())
             .unwrap();
         let dec = decompose(&w);
         let node = &presets::dgx_a100_1024().node;

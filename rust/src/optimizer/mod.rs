@@ -20,7 +20,12 @@
 //! The search tree has two levels: a **branch** per (workload, ZeRO
 //! stage) — its decomposition is computed once through the coordinator's
 //! derive cache — and a **leaf** per (expanded-memory bandwidth,
-//! capacity, collective implementation) point under it. Results are the
+//! capacity, collective implementation) point under it. Pipeline-parallel
+//! branches (`pp > 1`, optionally with per-branch microbatch/schedule
+//! overrides) get an admissible pipeline bound: per-stage compute floors
+//! + exact blocking collectives composed through the same fill–drain
+//! recurrence the evaluation uses, with the exact boundary-transfer and
+//! bubble terms at the branch's microbatch count (`bound.rs`). Results are the
 //! exact argmin and top-k of exhaustive enumeration (ties broken by
 //! canonical lattice order; pinned by `tests/properties.rs`), plus the
 //! compute-vs-exposed-communication Pareto frontier of the evaluated
@@ -42,7 +47,7 @@ use crate::model::inputs::{
     resolve_inputs, EvalOptions, ModelInputs, WorkloadDecomposition,
 };
 use crate::network::CollectiveImpl;
-use crate::parallel::ZeroStage;
+use crate::parallel::{PipeSchedule, Strategy, ZeroStage};
 use crate::workload::Workload;
 
 /// The per-branch memory/collective axes of the design lattice. Axes
@@ -127,6 +132,12 @@ pub struct Branch {
     /// computes the footprint from the decomposition — exactly what
     /// derivation will use, so the bounds stay exact by construction.
     pub footprint_override: Option<f64>,
+    /// Per-branch microbatch-count override for pipeline workloads
+    /// (`None` = the optimizer-wide options) — this is how the pipeline
+    /// study's PP x microbatch x schedule lattice maps onto branches.
+    pub microbatches: Option<usize>,
+    /// Per-branch pipeline-schedule override (`None` = the options).
+    pub schedule: Option<PipeSchedule>,
 }
 
 /// One fully specified point of the design lattice.
@@ -202,16 +213,21 @@ struct BranchState {
     dec: Arc<WorkloadDecomposition>,
     /// The footprint evaluation will actually use for this branch's
     /// points: the branch override, the base-options override, or the
-    /// decomposition's footprint at the branch stage — the same
-    /// precedence `resolve_inputs` applies.
+    /// decomposition's (pipeline-aware) footprint at the branch stage —
+    /// the same precedence `resolve_inputs` applies.
     footprint: f64,
     /// Expanded-memory traffic fraction of this branch's footprint
     /// (mirrors the backend's `em_fraction` resolution, including the
     /// `ignore_capacity` / `em_frac` overrides).
     frac: f64,
     /// Exact blocking (FP, IG) collective times per collectives-axis
-    /// entry.
-    comm: Vec<(f64, f64)>,
+    /// entry, per pipeline stage (one stage at `pp = 1`).
+    comm: Vec<Vec<(f64, f64)>>,
+    /// Microbatch count this branch evaluates with (1 at `pp = 1`).
+    m: usize,
+    /// Exact per-microbatch stage-boundary transfer time (0 at `pp = 1`;
+    /// independent of the expanded-memory axes, so exact for bounds).
+    x: f64,
     /// Admissible bound over the whole subtree.
     bound: f64,
     /// Capacity-infeasible points under this branch.
@@ -386,6 +402,8 @@ impl<'a> Optimizer<'a> {
             footprint_override: b
                 .footprint_override
                 .or(self.opts.footprint_override),
+            microbatches: b.microbatches.unwrap_or(self.opts.microbatches),
+            pipe_schedule: b.schedule.unwrap_or(self.opts.pipe_schedule),
             ..self.opts
         }
     }
@@ -438,40 +456,92 @@ impl<'a> Optimizer<'a> {
             .iter()
             .map(|b| {
                 let dec = self.coord.decomposition(&b.workload);
+                let pipeline = dec.pp > 1;
+                let m = if pipeline {
+                    b.microbatches.unwrap_or(self.opts.microbatches).max(1)
+                } else {
+                    1
+                };
+                let sched = b.schedule.unwrap_or(self.opts.pipe_schedule);
                 let footprint = b
                     .footprint_override
                     .or(self.opts.footprint_override)
-                    .unwrap_or_else(|| dec.footprint_total(b.stage));
+                    .unwrap_or_else(|| dec.footprint(b.stage, sched, m));
                 let frac = self.branch_frac(footprint);
-                let comm: Vec<(f64, f64)> = self
+                let x = if pipeline {
+                    let boundary = dec
+                        .boundary_bytes
+                        .iter()
+                        .copied()
+                        .fold(0.0, f64::max);
+                    // Same boundary-link classification the derive layer
+                    // uses (one shared predicate, no drift).
+                    let crosses = Strategy {
+                        mp: dec.mp,
+                        dp: dec.dp,
+                        pp: dec.pp,
+                    }
+                    .pp_crosses_pods(view.pod_size);
+                    let bw_b =
+                        if crosses { view.bw_inter } else { view.bw_intra };
+                    (boundary / m as f64) / bw_b.max(1.0)
+                        + self.cluster.link_latency
+                } else {
+                    0.0
+                };
+                let comm: Vec<Vec<(f64, f64)>> = self
                     .axes
                     .collectives
                     .iter()
                     .map(|&ci| {
-                        bound::blocking_comm_times(
-                            &dec,
-                            view.pod_size,
-                            view.bw_intra,
-                            view.bw_inter,
-                            self.cluster.link_latency,
-                            ci,
-                        )
+                        if pipeline {
+                            bound::stage_blocking_comm_times(
+                                &dec,
+                                view.pod_size,
+                                view.bw_intra,
+                                view.bw_inter,
+                                self.cluster.link_latency,
+                                ci,
+                            )
+                        } else {
+                            vec![bound::blocking_comm_times(
+                                &dec,
+                                view.pod_size,
+                                view.bw_intra,
+                                view.bw_inter,
+                                self.cluster.link_latency,
+                                ci,
+                            )]
+                        }
                     })
                     .collect();
                 let bw_best =
                     hybrid_bandwidth(node.local.bandwidth, bw_em_best, frac);
-                let compute = bound::compute_times(
-                    &dec,
-                    node.perf_peak,
-                    node.sram,
-                    bw_best,
-                );
-                let comm_min = comm
-                    .iter()
-                    .map(|(fp, ig)| fp + ig)
-                    .fold(f64::INFINITY, f64::min);
-                let bound = (compute[0] + compute[1] + compute[2] + comm_min)
-                    * BRANCH_BOUND_MARGIN;
+                let bound = if pipeline {
+                    let compute = bound::stage_compute_times(
+                        &dec,
+                        node.perf_peak,
+                        node.sram,
+                        bw_best,
+                    );
+                    comm.iter()
+                        .map(|c| bound::assemble_pipeline(&compute, c, m, x))
+                        .fold(f64::INFINITY, f64::min)
+                        * BRANCH_BOUND_MARGIN
+                } else {
+                    let compute = bound::compute_times(
+                        &dec,
+                        node.perf_peak,
+                        node.sram,
+                        bw_best,
+                    );
+                    let comm_min = comm
+                        .iter()
+                        .map(|c| c[0].0 + c[0].1)
+                        .fold(f64::INFINITY, f64::min);
+                    (compute[0] + compute[1] + compute[2] + comm_min)
+                        * BRANCH_BOUND_MARGIN
+                };
                 let mut infeasible = 0;
                 for &bw in &self.axes.em_bandwidths {
                     for &cap in &self.axes.em_capacities {
@@ -485,6 +555,8 @@ impl<'a> Optimizer<'a> {
                     footprint,
                     frac,
                     comm,
+                    m,
+                    x,
                     bound,
                     infeasible,
                 }
@@ -516,16 +588,40 @@ impl<'a> Optimizer<'a> {
                     cluster.node.expanded.bandwidth,
                     st.frac,
                 );
-                let compute = bound::compute_times(
-                    &st.dec,
-                    node.perf_peak,
-                    node.sram,
-                    bw_eff,
-                );
+                let pipeline = st.dec.pp > 1;
+                let compute_flat;
+                let compute_stages;
+                if pipeline {
+                    compute_flat = [0.0f64; 3];
+                    compute_stages = bound::stage_compute_times(
+                        &st.dec,
+                        node.perf_peak,
+                        node.sram,
+                        bw_eff,
+                    );
+                } else {
+                    compute_flat = bound::compute_times(
+                        &st.dec,
+                        node.perf_peak,
+                        node.sram,
+                        bw_eff,
+                    );
+                    compute_stages = Vec::new();
+                }
                 for (ici, &ci) in self.axes.collectives.iter().enumerate() {
                     let index =
                         ((bi * nbw + ibw) * ncap + icap) * ncoll + ici;
-                    let (c0, c1) = st.comm[ici];
+                    let bound = if pipeline {
+                        bound::assemble_pipeline(
+                            &compute_stages,
+                            &st.comm[ici],
+                            st.m,
+                            st.x,
+                        )
+                    } else {
+                        let (c0, c1) = st.comm[ici][0];
+                        bound::assemble(compute_flat, c0, c1)
+                    };
                     leaves.push(Leaf {
                         point: DesignPoint {
                             branch: bi,
@@ -536,7 +632,7 @@ impl<'a> Optimizer<'a> {
                         },
                         cluster: cluster.clone(),
                         opts: self.leaf_opts(b, ci),
-                        bound: bound::assemble(compute, c0, c1),
+                        bound,
                     });
                 }
             }
@@ -744,12 +840,15 @@ mod tests {
     ) -> Vec<Branch> {
         let stage = ZeroStage::OsG;
         Strategy::sweep_bounded(n_nodes, min_mp, max_mp)
+            .unwrap()
             .into_iter()
             .map(|s| Branch {
                 label: s.label(),
                 workload: Transformer::t1().build(&s).unwrap(),
                 stage,
                 footprint_override: None,
+                microbatches: None,
+                schedule: None,
             })
             .collect()
     }
@@ -825,6 +924,7 @@ mod tests {
         // The fitting strategies are exactly those whose footprint stays
         // within the 80 GB node (MP8_DP128 at ~264 GB is out).
         let fitting = Strategy::sweep_bounded(1024, 2, 128)
+            .unwrap()
             .iter()
             .filter(|s| {
                 let w = Transformer::t1().build(s).unwrap();
@@ -874,6 +974,88 @@ mod tests {
             f.iter().any(|c| c.point.index == best.point.index),
             "argmin must sit on the frontier"
         );
+    }
+
+    #[test]
+    fn search_matches_exhaustive_on_3d_lattice() {
+        // MP fixed at 8, PP in {1, 2, 4, 8}: the lattice grown by the
+        // pipeline axis must keep the search == exhaustive oracle, with
+        // every reported bound admissible.
+        let coord = Coordinator::native();
+        let branches: Vec<Branch> = Strategy::sweep_3d(1024, 8, 8, 8)
+            .unwrap()
+            .into_iter()
+            .map(|s| Branch {
+                label: s.label(),
+                workload: Transformer::t1().build(&s).unwrap(),
+                stage: ZeroStage::OsG,
+                footprint_override: None,
+                microbatches: None,
+                schedule: None,
+            })
+            .collect();
+        assert_eq!(branches.len(), 4);
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            branches,
+            AxisSpec::new().em_bandwidths(&[gb(500.0), gb(2039.0)]),
+        )
+        .unwrap()
+        .with_top_k(3);
+        let s = opt.search().unwrap();
+        let e = opt.exhaustive().unwrap();
+        assert_eq!(e.evaluated, 8);
+        assert_eq!(s.top.len(), e.top.len());
+        for (a, b) in s.top.iter().zip(&e.top) {
+            assert_eq!(a.point.index, b.point.index);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.total().to_bits(), b.total().to_bits());
+        }
+        assert_eq!(s.evaluated + s.pruned, e.evaluated);
+        for c in e.top.iter().chain(&e.frontier) {
+            assert!(
+                c.lower_bound <= c.total(),
+                "{}: bound {} > total {}",
+                c.label,
+                c.lower_bound,
+                c.total()
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_branch_overrides_reach_evaluation() {
+        // Two branches over the same 3D strategy, different microbatch
+        // counts: the fewer-microbatch branch pays a larger bubble.
+        let coord = Coordinator::native();
+        let s = Strategy::new_3d(8, 16, 8).unwrap();
+        let mk = |m: usize| Branch {
+            label: format!("{} m{m}", s.label()),
+            workload: Transformer::t1().build(&s).unwrap(),
+            stage: ZeroStage::OsG,
+            footprint_override: None,
+            microbatches: Some(m),
+            schedule: Some(crate::parallel::PipeSchedule::OneFOneB),
+        };
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions {
+                ignore_capacity: true,
+                ..Default::default()
+            },
+            vec![mk(2), mk(32)],
+            AxisSpec::new(),
+        )
+        .unwrap()
+        .with_top_k(2);
+        let e = opt.exhaustive().unwrap();
+        assert_eq!(e.evaluated, 2);
+        let best = e.best().unwrap();
+        assert!(best.label.contains("m32"), "{}", best.label);
+        assert!(e.top[1].breakdown.bubble > e.top[0].breakdown.bubble);
     }
 
     #[test]

@@ -3,9 +3,10 @@
 //! activation working memory between two checkpoints (ZeRO-Infinity's AWM;
 //! checkpoint activations themselves are host-offloaded and excluded).
 
+use super::pipeline::PipeSchedule;
 use super::strategy::Strategy;
 use super::zero::{model_state_bytes, ZeroStage};
-use crate::workload::{LayerOp, Workload, FP16};
+use crate::workload::{LayerOp, StageSlice, Workload, FP16};
 
 /// Per-node footprint decomposition, bytes.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -28,7 +29,10 @@ impl FootprintBreakdown {
 /// Footprint for a decomposed workload on its (MP, DP) strategy.
 ///
 /// `workload` must have been built for `strategy` (its layer shards are
-/// already per-node); `stage` selects the ZeRO optimization.
+/// already per-node); `stage` selects the ZeRO optimization. This is the
+/// `pp = 1` oracle — it treats the whole layer list as one pipeline
+/// stage; pipeline workloads use [`pipeline_footprint_per_node`], whose
+/// `pp = 1` value is identical by construction.
 pub fn footprint_per_node(
     workload: &Workload,
     strategy: &Strategy,
@@ -85,6 +89,92 @@ fn checkpoint_fraction(w: &Workload) -> f64 {
     (1.0 / max_repeat).min(1.0)
 }
 
+/// Per-stage `(residual, awm)` byte terms for a pipeline partition of
+/// `w` (see [`Workload::stage_partition`]): each stage's residual share
+/// is its slices' activation bytes weighted by the fraction of the
+/// layer's repeats it holds (so the per-stage terms sum to the
+/// whole-workload [`residual_state_bytes`]), and its AWM is the largest
+/// single activation among its slices. At `pp = 1` the single stage's
+/// terms equal the whole-workload values bit-for-bit.
+pub fn stage_footprint_terms(
+    w: &Workload,
+    stages: &[Vec<StageSlice>],
+) -> (Vec<f64>, Vec<f64>) {
+    let frac = checkpoint_fraction(w);
+    let mut residual = Vec::with_capacity(stages.len());
+    let mut awm = Vec::with_capacity(stages.len());
+    for slices in stages {
+        let mut res = 0.0f64;
+        let mut peak = 0.0f64;
+        for sl in slices {
+            let l = &w.layers[sl.layer];
+            if matches!(l.op, LayerOp::WeightUpdate { .. }) {
+                continue;
+            }
+            let bytes = l.activation_elems() * FP16;
+            let share = if l.repeat > 0.0 { sl.repeat / l.repeat } else { 1.0 };
+            res += bytes * share;
+            peak = peak.max(bytes);
+        }
+        residual.push(res * frac);
+        awm.push(peak);
+    }
+    (residual, awm)
+}
+
+/// Worst-stage pipeline footprint from precomputed per-stage terms:
+/// `max_s(model_shard + residual[s] * held + awm[s] / m)` with
+/// `held = in_flight(pp, m) / m`. The single formula behind both
+/// [`pipeline_footprint_per_node`] (workload side) and
+/// [`crate::model::inputs::WorkloadDecomposition::footprint`] (cached
+/// decomposition side) — one implementation, so the optimizer's
+/// capacity pruning and sweep-time EM sizing cannot drift.
+pub fn pipeline_stage_footprint(
+    model_shard: f64,
+    residual: &[f64],
+    awm: &[f64],
+    sched: PipeSchedule,
+    pp: usize,
+    microbatches: usize,
+) -> f64 {
+    let m = microbatches.max(1);
+    let mf = m as f64;
+    let held = sched.in_flight(pp, m) as f64 / mf;
+    residual
+        .iter()
+        .zip(awm)
+        .map(|(r, a)| model_shard + r * held + a / mf)
+        .fold(0.0, f64::max)
+}
+
+/// Pipeline-aware per-node footprint: the worst stage's model states
+/// (the MP shard further divided across `pp` stages), residual
+/// activations held under the schedule (`in_flight / m` of the
+/// full-batch residual), and the per-microbatch activation working
+/// memory. At `pp = 1` this is exactly
+/// `footprint_per_node(w, .., stage).total()` — pipeline terms collapse
+/// to the 2D formula.
+pub fn pipeline_footprint_per_node(
+    w: &Workload,
+    stage: ZeroStage,
+    sched: PipeSchedule,
+    microbatches: usize,
+) -> f64 {
+    if w.pp <= 1 {
+        let s = Strategy {
+            mp: w.mp,
+            dp: w.dp,
+            pp: 1,
+        };
+        return footprint_per_node(w, &s, stage).total();
+    }
+    let stages = w.stage_partition();
+    let (residual, awm) = stage_footprint_terms(w, &stages);
+    let model =
+        model_state_bytes(w.total_params, w.mp, w.dp, stage) / w.pp as f64;
+    pipeline_stage_footprint(model, &residual, &awm, sched, w.pp, microbatches)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,7 +186,7 @@ mod tests {
         // per-node requirement.
         let t = Transformer::t1();
         let f = |mp: usize, dp: usize| {
-            let s = Strategy::new(mp, dp);
+            let s = Strategy::new(mp, dp).unwrap();
             let w = t.build(&s).unwrap();
             footprint_per_node(&w, &s, ZeroStage::Baseline).model_states
         };
@@ -108,7 +198,7 @@ mod tests {
     fn mp8_dp128_needs_memory_expansion() {
         // Fig. 8a: MP8_DP128 needs ~250+ GB, over 3x the A100's 80 GB.
         let t = Transformer::t1();
-        let s = Strategy::new(8, 128);
+        let s = Strategy::new(8, 128).unwrap();
         let w = t.build(&s).unwrap();
         let fp = footprint_per_node(&w, &s, ZeroStage::OsG);
         assert!(fp.total() > 3.0 * 80e9, "{:.3e}", fp.total());
@@ -119,7 +209,7 @@ mod tests {
     fn mp64_dp16_fits_in_80gb() {
         // Fig. 8a: MP64 is the first in-memory-feasible configuration.
         let t = Transformer::t1();
-        let s = Strategy::new(64, 16);
+        let s = Strategy::new(64, 16).unwrap();
         let w = t.build(&s).unwrap();
         let fp = footprint_per_node(&w, &s, ZeroStage::OsG);
         assert!(fp.total() <= 80e9, "{:.4e}", fp.total());
@@ -128,11 +218,93 @@ mod tests {
     #[test]
     fn awm_positive_and_below_model_states_at_scale() {
         let t = Transformer::t1();
-        let s = Strategy::new(8, 128);
+        let s = Strategy::new(8, 128).unwrap();
         let w = t.build(&s).unwrap();
         let fp = footprint_per_node(&w, &s, ZeroStage::OsG);
         assert!(fp.awm > 0.0);
         assert!(fp.awm < fp.model_states);
+    }
+
+    #[test]
+    fn pipeline_footprint_collapses_to_2d_at_pp1() {
+        let t = Transformer::t1();
+        let s = Strategy::new(8, 128).unwrap();
+        let w = t.build(&s).unwrap();
+        for stage in ZeroStage::ALL {
+            let flat = footprint_per_node(&w, &s, stage).total();
+            for sched in PipeSchedule::ALL {
+                for m in [1usize, 8, 64] {
+                    let pipe = pipeline_footprint_per_node(&w, stage, sched, m);
+                    assert_eq!(pipe.to_bits(), flat.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_parallelism_shrinks_the_footprint() {
+        // MP8_DP128 spills a 80 GB node by >3x; MP8_DP16_PP8 holds a
+        // 1/64th model shard per node and fits comfortably.
+        let t = Transformer::t1();
+        let flat = {
+            let s = Strategy::new(8, 128).unwrap();
+            let w = t.build(&s).unwrap();
+            footprint_per_node(&w, &s, ZeroStage::OsG).total()
+        };
+        let piped = {
+            let s = Strategy::new_3d(8, 16, 8).unwrap();
+            let w = t.build(&s).unwrap();
+            pipeline_footprint_per_node(
+                &w,
+                ZeroStage::OsG,
+                PipeSchedule::OneFOneB,
+                8,
+            )
+        };
+        assert!(flat > 3.0 * 80e9, "{flat:.3e}");
+        assert!(piped < 80e9, "{piped:.3e}");
+    }
+
+    #[test]
+    fn one_f_one_b_holds_no_more_than_gpipe() {
+        let t = Transformer::t1();
+        let s = Strategy::new_3d(8, 16, 8).unwrap();
+        let w = t.build(&s).unwrap();
+        for m in [8usize, 16, 64] {
+            let g = pipeline_footprint_per_node(
+                &w,
+                ZeroStage::OsG,
+                PipeSchedule::GPipe,
+                m,
+            );
+            let o = pipeline_footprint_per_node(
+                &w,
+                ZeroStage::OsG,
+                PipeSchedule::OneFOneB,
+                m,
+            );
+            assert!(o <= g, "m={m}: 1f1b {o} > gpipe {g}");
+        }
+    }
+
+    #[test]
+    fn stage_terms_sum_to_whole_workload_residual() {
+        let t = Transformer::t1();
+        let w = t.build(&Strategy::new_3d(8, 32, 4).unwrap()).unwrap();
+        let stages = w.stage_partition();
+        let (residual, awm) = stage_footprint_terms(&w, &stages);
+        assert_eq!(residual.len(), 4);
+        let total: f64 = residual.iter().sum();
+        let want = residual_state_bytes(&w);
+        assert!(
+            (total - want).abs() < 1e-6 * want,
+            "stage residuals {total} vs whole {want}"
+        );
+        // Every stage's AWM is bounded by the whole-workload AWM.
+        let peak = activation_working_bytes(&w);
+        for a in &awm {
+            assert!(*a <= peak);
+        }
     }
 
     #[test]

@@ -1,13 +1,17 @@
-//! Parallelization strategies (paper SIII-B / SIV-B): the (MP, DP) sweep,
-//! ZeRO-DP memory optimizations, and per-node footprint estimation.
+//! Parallelization strategies (paper SIII-B / SIV-B): the 3D
+//! (MP, DP, PP) lattice and its sweeps, pipeline schedules, ZeRO-DP
+//! memory optimizations, and per-node footprint estimation.
 
 mod footprint;
+mod pipeline;
 mod strategy;
 mod zero;
 
 pub use footprint::{
-    activation_working_bytes, footprint_per_node, residual_state_bytes,
-    FootprintBreakdown,
+    activation_working_bytes, footprint_per_node,
+    pipeline_footprint_per_node, pipeline_stage_footprint,
+    residual_state_bytes, stage_footprint_terms, FootprintBreakdown,
 };
+pub use pipeline::PipeSchedule;
 pub use strategy::Strategy;
 pub use zero::{model_state_bytes, ZeroStage};

@@ -1,0 +1,102 @@
+//! Pipeline-parallel execution schedules.
+//!
+//! Both schedules the literature uses for synchronous pipeline training
+//! share the same bubble — `(pp - 1) / m` of the steady-state work for
+//! `m` microbatches over `pp` stages — because both fill and drain the
+//! pipeline once per iteration. Where they differ is **activation
+//! memory**: GPipe runs all `m` forward microbatches before any backward,
+//! holding `m` microbatches of activations per stage, while 1F1B
+//! interleaves one-forward-one-backward in steady state and holds at most
+//! `min(pp, m)`. The footprint model consumes [`PipeSchedule::in_flight`];
+//! the time model treats the two identically (see
+//! [`crate::analytical::pipeline_makespan`]).
+
+use crate::error::{Error, Result};
+
+/// Pipeline-parallel microbatch schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PipeSchedule {
+    /// GPipe: all forwards, then all backwards. Holds `m` microbatches of
+    /// activations per stage.
+    GPipe,
+    /// 1F1B (PipeDream-flush): one-forward-one-backward steady state.
+    /// Holds at most `min(pp, m)` microbatches of activations per stage.
+    #[default]
+    OneFOneB,
+}
+
+impl PipeSchedule {
+    /// Both schedules, spec-file order.
+    pub const ALL: [PipeSchedule; 2] =
+        [PipeSchedule::GPipe, PipeSchedule::OneFOneB];
+
+    /// Canonical short name — the scenario-file vocabulary
+    /// (`gpipe` | `1f1b`); inverse of [`PipeSchedule::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            PipeSchedule::GPipe => "gpipe",
+            PipeSchedule::OneFOneB => "1f1b",
+        }
+    }
+
+    /// Parse a spec-file schedule name (`gpipe` | `1f1b`).
+    pub fn parse(s: &str) -> Result<PipeSchedule> {
+        match s {
+            "gpipe" => Ok(PipeSchedule::GPipe),
+            "1f1b" => Ok(PipeSchedule::OneFOneB),
+            other => Err(Error::Config(format!(
+                "unknown pipeline schedule '{other}' (gpipe|1f1b)"
+            ))),
+        }
+    }
+
+    /// Stable numeric code (fingerprinting).
+    pub fn code(self) -> f64 {
+        match self {
+            PipeSchedule::GPipe => 0.0,
+            PipeSchedule::OneFOneB => 1.0,
+        }
+    }
+
+    /// Microbatches whose activations a stage holds live under this
+    /// schedule, out of `m` total over `pp` stages.
+    pub fn in_flight(self, pp: usize, m: usize) -> usize {
+        match self {
+            PipeSchedule::GPipe => m,
+            PipeSchedule::OneFOneB => pp.min(m),
+        }
+    }
+}
+
+impl std::fmt::Display for PipeSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_roundtrip() {
+        for s in PipeSchedule::ALL {
+            assert_eq!(PipeSchedule::parse(s.name()).unwrap(), s);
+        }
+        assert!(PipeSchedule::parse("interleaved").is_err());
+    }
+
+    #[test]
+    fn in_flight_counts() {
+        assert_eq!(PipeSchedule::GPipe.in_flight(4, 16), 16);
+        assert_eq!(PipeSchedule::OneFOneB.in_flight(4, 16), 4);
+        // Fewer microbatches than stages: both hold m.
+        assert_eq!(PipeSchedule::OneFOneB.in_flight(8, 2), 2);
+        assert_eq!(PipeSchedule::GPipe.in_flight(8, 2), 2);
+    }
+
+    #[test]
+    fn codes_distinct() {
+        assert_ne!(PipeSchedule::GPipe.code(), PipeSchedule::OneFOneB.code());
+    }
+}

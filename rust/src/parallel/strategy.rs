@@ -1,69 +1,162 @@
-//! The (MP, DP) parallelization strategy and its power-of-two sweep.
+//! The (MP, DP, PP) parallelization strategy lattice and its power-of-two
+//! sweeps.
+//!
+//! The paper's original lattice is 2D — `(MP, DP)` with `mp * dp == nodes`
+//! — and every historical label (`MP8_DP128`), spec, and pinned figure
+//! lives on that slice. This module generalizes it to 3D by adding a
+//! pipeline-parallel degree `pp`: the invariant becomes
+//! `mp * dp * pp == nodes`, the label gains a `_PP<k>` suffix **only when
+//! `pp > 1`**, and parsing a 2D label yields `pp == 1`, so the 2D lattice
+//! is exactly the `pp = 1` slice of the 3D one.
+//!
+//! Node layout convention (extends SIII-B): MP peers occupy consecutive
+//! nodes, DP replicas stride by `mp` within a pipeline stage, and the
+//! `pp` stages are outermost, strided by `mp * dp` — stage `s`, replica
+//! `d`, MP rank `m` sits at node `s*mp*dp + d*mp + m`.
 
 use crate::error::{Error, Result};
 
-/// A model/data parallelism split. Invariant: `mp * dp == cluster size`.
+/// A model/data/pipeline parallelism split. Invariant:
+/// `mp * dp * pp == cluster size`; `pp == 1` is the paper's 2D lattice.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Strategy {
     /// Model-parallel degree (consecutive nodes share one model copy).
     pub mp: usize,
-    /// Data-parallel degree (replicas of the MP group).
+    /// Data-parallel degree (replicas of the MP group within a stage).
     pub dp: usize,
+    /// Pipeline-parallel degree (contiguous layer stages; outermost
+    /// dimension of the node layout). `1` = no pipeline parallelism.
+    pub pp: usize,
 }
 
 impl Strategy {
-    /// New strategy; degrees must be >= 1.
-    pub fn new(mp: usize, dp: usize) -> Strategy {
-        assert!(mp >= 1 && dp >= 1, "degrees must be >= 1");
-        Strategy { mp, dp }
+    /// New 2D strategy (`pp = 1`); degrees must be >= 1.
+    pub fn new(mp: usize, dp: usize) -> Result<Strategy> {
+        Strategy::new_3d(mp, dp, 1)
+    }
+
+    /// New 3D strategy; all degrees must be >= 1.
+    pub fn new_3d(mp: usize, dp: usize, pp: usize) -> Result<Strategy> {
+        if mp == 0 || dp == 0 || pp == 0 {
+            return Err(Error::Config(format!(
+                "strategy degrees must be >= 1, got MP{mp}_DP{dp}_PP{pp}"
+            )));
+        }
+        Ok(Strategy { mp, dp, pp })
     }
 
     /// Total nodes used.
     pub fn nodes(&self) -> usize {
-        self.mp * self.dp
+        self.mp * self.dp * self.pp
     }
 
-    /// The paper's label convention, e.g. "MP8_DP128".
+    /// The label convention: the paper's `MP8_DP128` on the 2D slice,
+    /// `MP8_DP16_PP8` when pipeline-parallel. Every pre-3D label is
+    /// unchanged by construction.
     pub fn label(&self) -> String {
-        format!("MP{}_DP{}", self.mp, self.dp)
+        if self.pp == 1 {
+            format!("MP{}_DP{}", self.mp, self.dp)
+        } else {
+            format!("MP{}_DP{}_PP{}", self.mp, self.dp, self.pp)
+        }
     }
 
-    /// Parse "MP8_DP128".
+    /// Parse `MP8_DP128` (2D, `pp = 1`) or `MP8_DP16_PP8`. Zero degrees
+    /// (`MP0_*`, `*_PP0`), trailing garbage, and non-digit degree fields
+    /// are rejected.
     pub fn parse(s: &str) -> Result<Strategy> {
-        let err = || Error::Config(format!("bad strategy '{s}', want MP<m>_DP<d>"));
+        let err = || {
+            Error::Config(format!(
+                "bad strategy '{s}', want MP<m>_DP<d>[_PP<p>]"
+            ))
+        };
+        let digits = |t: &str| -> Result<usize> {
+            if t.is_empty() || !t.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(err());
+            }
+            t.parse().map_err(|_| err())
+        };
         let rest = s.strip_prefix("MP").ok_or_else(err)?;
-        let (m, d) = rest.split_once("_DP").ok_or_else(err)?;
-        let mp = m.parse().map_err(|_| err())?;
-        let dp = d.parse().map_err(|_| err())?;
-        if mp == 0 || dp == 0 {
+        let (m, rest) = rest.split_once("_DP").ok_or_else(err)?;
+        let (d, p) = match rest.split_once("_PP") {
+            Some((d, p)) => (d, Some(p)),
+            None => (rest, None),
+        };
+        let mp = digits(m)?;
+        let dp = digits(d)?;
+        let pp = match p {
+            Some(p) => digits(p)?,
+            None => 1,
+        };
+        if mp == 0 || dp == 0 || pp == 0 {
             return Err(err());
         }
-        Ok(Strategy { mp, dp })
+        Ok(Strategy { mp, dp, pp })
     }
 
-    /// All power-of-two splits of a cluster of `n` nodes, from
-    /// (MP=n, DP=1) down to (MP=1, DP=n) — the paper's SIII-B sweep order.
-    pub fn sweep(n: usize) -> Vec<Strategy> {
-        assert!(n.is_power_of_two(), "cluster size must be a power of two");
+    /// All power-of-two 2D splits of a cluster of `n` nodes, from
+    /// (MP=n, DP=1) down to (MP=1, DP=n) — the paper's SIII-B sweep
+    /// order. Errors on a non-power-of-two cluster size.
+    pub fn sweep(n: usize) -> Result<Vec<Strategy>> {
+        if n == 0 || !n.is_power_of_two() {
+            return Err(Error::Config(format!(
+                "strategy sweep needs a power-of-two cluster size, got {n}"
+            )));
+        }
         let mut out = Vec::new();
         let mut mp = n;
         loop {
-            out.push(Strategy { mp, dp: n / mp });
+            out.push(Strategy {
+                mp,
+                dp: n / mp,
+                pp: 1,
+            });
             if mp == 1 {
                 break;
             }
             mp /= 2;
         }
-        out
+        Ok(out)
     }
 
-    /// The sweep restricted to `mp <= max_mp` (fig. 9 omits MP > 256) and
-    /// `mp >= min_mp`.
-    pub fn sweep_bounded(n: usize, min_mp: usize, max_mp: usize) -> Vec<Strategy> {
-        Self::sweep(n)
+    /// The 2D sweep restricted to `mp <= max_mp` (fig. 9 omits MP > 256)
+    /// and `mp >= min_mp`.
+    pub fn sweep_bounded(
+        n: usize,
+        min_mp: usize,
+        max_mp: usize,
+    ) -> Result<Vec<Strategy>> {
+        Ok(Self::sweep(n)?
             .into_iter()
             .filter(|s| s.mp >= min_mp && s.mp <= max_mp)
-            .collect()
+            .collect())
+    }
+
+    /// All power-of-two 3D splits `mp * dp * pp == n` with
+    /// `min_mp <= mp <= max_mp` and `pp <= max_pp`, ordered PP-ascending
+    /// with the 2D sweep order inside each PP plane — so the `pp = 1`
+    /// prefix is exactly [`Strategy::sweep_bounded`] and 3D lattice
+    /// indices extend 2D ones.
+    pub fn sweep_3d(
+        n: usize,
+        min_mp: usize,
+        max_mp: usize,
+        max_pp: usize,
+    ) -> Result<Vec<Strategy>> {
+        if n == 0 || !n.is_power_of_two() {
+            return Err(Error::Config(format!(
+                "strategy sweep needs a power-of-two cluster size, got {n}"
+            )));
+        }
+        let mut out = Vec::new();
+        let mut pp = 1usize;
+        while pp <= max_pp.max(1) && pp <= n {
+            for s in Self::sweep_bounded(n / pp, min_mp, max_mp)? {
+                out.push(Strategy { pp, ..s });
+            }
+            pp *= 2;
+        }
+        Ok(out)
     }
 
     /// Two-level decomposition of the MP group on a podded topology:
@@ -75,11 +168,21 @@ impl Strategy {
     }
 
     /// Two-level decomposition of the DP group. DP peers are strided by
-    /// `mp`: if an MP group fills (or exceeds) a pod, every DP peer lives
-    /// in a different pod; otherwise `pod_size / mp` DP peers share a pod.
+    /// `mp` within a pipeline stage: if an MP group fills (or exceeds) a
+    /// pod, every DP peer lives in a different pod; otherwise
+    /// `pod_size / mp` DP peers share a pod.
     pub fn dp_two_level(&self, pod_size: usize) -> (usize, usize) {
         let intra = (pod_size / self.mp).max(1).min(self.dp);
         (intra, self.dp / intra)
+    }
+
+    /// Whether the stage-boundary point-to-point link crosses pods:
+    /// adjacent pipeline stages are `mp * dp` nodes apart, so the
+    /// activation transfer rides the inter-pod fabric whenever a stage
+    /// fills (or exceeds) a pod. Always `false` at `pp = 1` (there is no
+    /// boundary).
+    pub fn pp_crosses_pods(&self, pod_size: usize) -> bool {
+        self.pp > 1 && self.mp * self.dp >= pod_size
     }
 }
 
@@ -95,61 +198,113 @@ mod tests {
 
     #[test]
     fn sweep_covers_all_pow2_splits() {
-        let s = Strategy::sweep(1024);
+        let s = Strategy::sweep(1024).unwrap();
         assert_eq!(s.len(), 11);
-        assert_eq!(s[0], Strategy::new(1024, 1));
-        assert_eq!(s[10], Strategy::new(1, 1024));
+        assert_eq!(s[0], Strategy::new(1024, 1).unwrap());
+        assert_eq!(s[10], Strategy::new(1, 1024).unwrap());
         for st in &s {
             assert_eq!(st.nodes(), 1024);
+            assert_eq!(st.pp, 1);
         }
     }
 
     #[test]
     fn sweep_bounded_filters() {
-        let s = Strategy::sweep_bounded(1024, 2, 256);
+        let s = Strategy::sweep_bounded(1024, 2, 256).unwrap();
         assert!(s.iter().all(|st| st.mp >= 2 && st.mp <= 256));
         assert_eq!(s.len(), 8);
     }
 
     #[test]
+    fn non_pow2_and_zero_degrees_are_config_errors() {
+        assert!(Strategy::sweep(1000).is_err());
+        assert!(Strategy::sweep(0).is_err());
+        assert!(Strategy::sweep_bounded(48, 1, 8).is_err());
+        assert!(Strategy::sweep_3d(1000, 1, 8, 4).is_err());
+        assert!(Strategy::new(0, 4).is_err());
+        assert!(Strategy::new(4, 0).is_err());
+        assert!(Strategy::new_3d(4, 4, 0).is_err());
+        assert!(Strategy::new_3d(1, 1, 1).is_ok());
+    }
+
+    #[test]
+    fn sweep_3d_extends_the_2d_sweep() {
+        let flat = Strategy::sweep_bounded(64, 1, 64).unwrap();
+        let cube = Strategy::sweep_3d(64, 1, 64, 4).unwrap();
+        // The pp = 1 prefix is the 2D sweep verbatim.
+        assert_eq!(&cube[..flat.len()], &flat[..]);
+        for st in &cube {
+            assert_eq!(st.nodes(), 64);
+            assert!(st.pp <= 4);
+        }
+        // PP planes: 7 (pp=1) + 6 (pp=2) + 5 (pp=4) splits of 64.
+        assert_eq!(cube.len(), 7 + 6 + 5);
+        // max_pp = 1 degenerates to the 2D sweep.
+        assert_eq!(Strategy::sweep_3d(64, 1, 64, 1).unwrap(), flat);
+    }
+
+    #[test]
     fn label_roundtrip() {
-        for st in Strategy::sweep(64) {
+        for st in Strategy::sweep(64).unwrap() {
+            assert_eq!(Strategy::parse(&st.label()).unwrap(), st);
+        }
+        for st in Strategy::sweep_3d(64, 1, 64, 8).unwrap() {
             assert_eq!(Strategy::parse(&st.label()).unwrap(), st);
         }
         assert!(Strategy::parse("MP0_DP4").is_err());
         assert!(Strategy::parse("DP4_MP2").is_err());
         assert!(Strategy::parse("MP8DP2").is_err());
+        assert!(Strategy::parse("MP8_DP4_PP0").is_err());
+        assert!(Strategy::parse("MP8_DP4_PP").is_err());
+        assert!(Strategy::parse("MP8_DP4_PP2x").is_err());
+        assert!(Strategy::parse("MP8_DP4x_PP2").is_err());
+        assert!(Strategy::parse("MP+8_DP4").is_err());
+        // 3D parse carries the PP degree; an explicit _PP1 is accepted
+        // and canonicalizes to the 2D label.
+        let s = Strategy::parse("MP8_DP16_PP8").unwrap();
+        assert_eq!((s.mp, s.dp, s.pp), (8, 16, 8));
+        assert_eq!(Strategy::parse("MP8_DP16_PP1").unwrap().label(), "MP8_DP16");
     }
 
     #[test]
     fn mp_two_level_respects_pods() {
         // MP8 in 8-GPU pods: fully intra-pod.
-        assert_eq!(Strategy::new(8, 128).mp_two_level(8), (8, 1));
+        assert_eq!(Strategy::new(8, 128).unwrap().mp_two_level(8), (8, 1));
         // MP64 in 8-GPU pods: 8 peers/pod x 8 pods.
-        assert_eq!(Strategy::new(64, 16).mp_two_level(8), (8, 8));
+        assert_eq!(Strategy::new(64, 16).unwrap().mp_two_level(8), (8, 8));
         // MP2: inside one pod.
-        assert_eq!(Strategy::new(2, 512).mp_two_level(8), (2, 1));
+        assert_eq!(Strategy::new(2, 512).unwrap().mp_two_level(8), (2, 1));
     }
 
     #[test]
     fn dp_two_level_strides() {
         // MP8 fills the pod: every DP peer in a different pod.
-        assert_eq!(Strategy::new(8, 128).dp_two_level(8), (1, 128));
+        assert_eq!(Strategy::new(8, 128).unwrap().dp_two_level(8), (1, 128));
         // MP2 in 8-GPU pods: 4 DP peers per pod, 128 pods.
-        assert_eq!(Strategy::new(2, 512).dp_two_level(8), (4, 128));
+        assert_eq!(Strategy::new(2, 512).unwrap().dp_two_level(8), (4, 128));
         // MP1024_DP1: degenerate DP.
-        assert_eq!(Strategy::new(1024, 1).dp_two_level(8), (1, 1));
+        assert_eq!(Strategy::new(1024, 1).unwrap().dp_two_level(8), (1, 1));
     }
 
     #[test]
     fn two_level_products_match_degrees() {
         for pod in [4usize, 8, 16] {
-            for st in Strategy::sweep(256) {
+            for st in Strategy::sweep_3d(256, 1, 256, 8).unwrap() {
                 let (mi, mx) = st.mp_two_level(pod);
                 assert_eq!(mi * mx, st.mp);
                 let (di, dx) = st.dp_two_level(pod);
                 assert_eq!(di * dx, st.dp);
             }
         }
+    }
+
+    #[test]
+    fn pp_boundary_link_class() {
+        // MP8_DP16_PP8: a stage spans 128 nodes >> an 8-GPU pod.
+        assert!(Strategy::new_3d(8, 16, 8).unwrap().pp_crosses_pods(8));
+        // MP2_DP2_PP4: a 4-node stage fits inside an 8-GPU pod.
+        assert!(!Strategy::new_3d(2, 2, 4).unwrap().pp_crosses_pods(8));
+        // No boundary at pp = 1.
+        assert!(!Strategy::new(8, 128).unwrap().pp_crosses_pods(8));
     }
 }

@@ -96,6 +96,7 @@ mod tests {
             ..Default::default()
         };
         let inputs: Vec<_> = Strategy::sweep_bounded(1024, 1, 128)
+            .unwrap()
             .iter()
             .map(|s| {
                 derive_inputs(

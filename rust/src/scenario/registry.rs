@@ -46,6 +46,10 @@ const BUILTINS: &[(&str, &str)] = &[
         include_str!("../../../scenarios/optimize_dlrm.toml"),
     ),
     (
+        "pipeline-transformer",
+        include_str!("../../../scenarios/pipeline_transformer.toml"),
+    ),
+    (
         "cluster-compare",
         include_str!("../../../scenarios/cluster_compare.toml"),
     ),

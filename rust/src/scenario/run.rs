@@ -19,7 +19,8 @@ use crate::model::inputs::EvalOptions;
 use crate::network::CollectiveImpl;
 use crate::optimizer::{AxisSpec, Branch, Optimizer, Outcome};
 use crate::parallel::{
-    footprint_per_node, model_state_bytes, Strategy, ZeroStage,
+    model_state_bytes, pipeline_footprint_per_node, PipeSchedule, Strategy,
+    ZeroStage,
 };
 use crate::report::FigureData;
 use crate::util::units::gb;
@@ -45,7 +46,7 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
             spec,
             coord,
             &GridAxes {
-                strategies: strategies.resolve(spec.cluster.n_nodes),
+                strategies: strategies.resolve(spec.cluster.n_nodes)?,
                 em_bandwidths_gbps,
                 em_capacities_gb,
                 collectives,
@@ -76,6 +77,12 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
             em_bandwidths_gbps,
         } => run_packing(spec, coord, *instances, packings, em_bandwidths_gbps)?,
         Study::Optimize { .. } => run_optimize(spec, coord)?.0,
+        Study::Pipeline {
+            mp,
+            pps,
+            microbatch_counts,
+            schedules,
+        } => run_pipeline(spec, coord, *mp, pps, microbatch_counts, schedules)?,
         Study::ClusterCompare {
             clusters,
             dlrm,
@@ -119,6 +126,8 @@ fn eval_opts(spec: &ScenarioSpec) -> EvalOptions {
         footprint_override: None,
         overlap_wg: o.overlap_wg,
         collective_impl: o.collective,
+        microbatches: o.microbatches,
+        pipe_schedule: o.schedule,
     }
 }
 
@@ -185,6 +194,13 @@ const BREAKDOWN_COLS: [&str; 7] = [
 /// [`Normalize::First`]), and an optional `Footprint_GB` column fed from
 /// per-row footprints in bytes. Shared by the grid and cluster-size
 /// studies — their output must never drift apart.
+///
+/// Pipeline-parallel rows carry two extra terms (`bubble`,
+/// `pp_exposed_comm`) that the six phase columns do not cover; when any
+/// row has them, `Bubble` and `PP_Exp_Comm` columns are inserted before
+/// `Total_s` so the components always sum to the total. On the 2D slice
+/// both terms are exactly zero and the layout is bit-for-bit the
+/// pre-pipeline one.
 fn render_breakdown(
     fig: &mut FigureData,
     evals: &[TrainingBreakdown],
@@ -193,7 +209,15 @@ fn render_breakdown(
     normalize: Normalize,
     first_col: &str,
 ) {
-    fig.columns = BREAKDOWN_COLS.iter().map(|s| s.to_string()).collect();
+    let pipeline = evals
+        .iter()
+        .any(|b| b.bubble != 0.0 || b.pp_exposed_comm != 0.0);
+    fig.columns = BREAKDOWN_COLS[..6].iter().map(|s| s.to_string()).collect();
+    if pipeline {
+        fig.columns.push("Bubble".into());
+        fig.columns.push("PP_Exp_Comm".into());
+    }
+    fig.columns.push("Total_s".into());
     let norm = match normalize {
         Normalize::None => None,
         Normalize::Best => {
@@ -215,6 +239,10 @@ fn render_breakdown(
     }
     for (i, (label, b)) in labels.into_iter().zip(evals).enumerate() {
         let mut vals = b.as_array().to_vec();
+        if pipeline {
+            vals.push(b.bubble);
+            vals.push(b.pp_exposed_comm);
+        }
         vals.push(b.total());
         if let Some(base) = norm {
             vals.push(b.total() / base);
@@ -249,10 +277,14 @@ fn run_footprint(
         .iter()
         .map(|s| s.label().to_string())
         .collect();
-    for s in strategies.resolve(spec.cluster.n_nodes) {
+    for s in strategies.resolve(spec.cluster.n_nodes)? {
+        // PP shards the model-state shard further; /1 is exact on the 2D
+        // slice, so the pinned fig6 cells are untouched.
         let vals: Vec<f64> = ZeroStage::ALL
             .iter()
-            .map(|&st| model_state_bytes(psi, s.mp, s.dp, st) / gb(1.0))
+            .map(|&st| {
+                model_state_bytes(psi, s.mp, s.dp, st) / s.pp as f64 / gb(1.0)
+            })
             .collect();
         fig.rows.push((s.label(), vals));
     }
@@ -380,7 +412,12 @@ fn run_grid(
             } else {
                 w0.clone()
             };
-            let fp = footprint_per_node(&w, s, stage).total();
+            let fp = pipeline_footprint_per_node(
+                &w,
+                stage,
+                opts0.pipe_schedule,
+                opts0.microbatches,
+            );
             let o = EvalOptions {
                 zero_stage: stage,
                 ..opts0
@@ -524,7 +561,12 @@ fn run_compute_scaling(
     let base_cluster = &spec.cluster;
     let opts = eval_opts(spec);
     let w = build_for(&spec.workload, &strategy)?;
-    let fp = footprint_per_node(&w, &strategy, opts.zero_stage).total();
+    let fp = pipeline_footprint_per_node(
+        &w,
+        opts.zero_stage,
+        opts.pipe_schedule,
+        opts.microbatches,
+    );
     let need = (fp - base_cluster.node.local.capacity).max(0.0);
     let base_scale = scales.iter().position(|&x| x == 1.0).ok_or_else(|| {
         Error::Config(format!(
@@ -790,16 +832,165 @@ fn run_packing(
     Ok(fig)
 }
 
+// ---- pipeline (PP x microbatch x schedule case study) ---------------------
+
+/// Resolve one pipeline lattice point into its 3D strategy; DP is
+/// whatever is left of the cluster after MP x PP.
+fn pipeline_point(
+    spec: &ScenarioSpec,
+    mp: usize,
+    pp: usize,
+) -> Result<Strategy> {
+    let n = spec.cluster.n_nodes;
+    if mp * pp == 0 || n % (mp * pp) != 0 {
+        return Err(Error::Config(format!(
+            "scenario '{}': MP{mp} x PP{pp} does not divide the {n}-node \
+             cluster",
+            spec.name
+        )));
+    }
+    Strategy::new_3d(mp, n / (mp * pp), pp)
+}
+
+/// Row label of a pipeline lattice point.
+fn pipeline_label(pp: usize, sched: PipeSchedule, multi_sched: bool) -> String {
+    if multi_sched && pp > 1 {
+        format!("PP{pp} {}", sched.name())
+    } else {
+        format!("PP{pp}")
+    }
+}
+
+fn run_pipeline(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    mp: usize,
+    pps: &[usize],
+    microbatch_counts: &[usize],
+    schedules: &[PipeSchedule],
+) -> Result<FigureData> {
+    let opts0 = eval_opts(spec);
+    let multi_sched = schedules.len() > 1;
+    let mut labels: Vec<String> = Vec::new();
+    let mut specs: Vec<SweepSpec> = Vec::new();
+    for &pp in pps {
+        let s = pipeline_point(spec, mp, pp)?;
+        let w = build_for(&spec.workload, &s)?;
+        for &sched in schedules {
+            // A PP1 row is the 2D slice: microbatching and schedule have
+            // no effect, so emit it once.
+            if pp == 1 && sched != schedules[0] {
+                continue;
+            }
+            labels.push(pipeline_label(pp, sched, multi_sched));
+            for &m in microbatch_counts {
+                let o = EvalOptions {
+                    microbatches: m,
+                    pipe_schedule: sched,
+                    ..opts0
+                };
+                specs.push((w.clone(), spec.cluster.clone(), o));
+            }
+        }
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let width = microbatch_counts.len();
+    let mut fig = figure(spec, "PP / schedule");
+    fig.columns = microbatch_counts
+        .iter()
+        .map(|m| format!("m={m}"))
+        .collect();
+    for (i, label) in labels.into_iter().enumerate() {
+        let vals: Vec<f64> = (0..width)
+            .map(|j| evals[i * width + j].total())
+            .collect();
+        fig.rows.push((label, vals));
+    }
+    fig.notes.push(format!(
+        "cells: iteration time (s); MP{mp} fixed, DP = nodes / (MP x PP)"
+    ));
+    Ok(fig)
+}
+
+/// The pipeline study's lattice as optimizer branches: one branch per
+/// (PP, schedule, microbatch-count) point, so the branch-and-bound
+/// search returns its argmin with the same pruning guarantees as an
+/// optimize study.
+fn pipeline_optimizer<'a>(
+    spec: &ScenarioSpec,
+    coord: &'a Coordinator,
+    mp: usize,
+    pps: &[usize],
+    microbatch_counts: &[usize],
+    schedules: &[PipeSchedule],
+) -> Result<Optimizer<'a>> {
+    let opts0 = eval_opts(spec);
+    let mut branches: Vec<Branch> = Vec::new();
+    for &pp in pps {
+        let s = pipeline_point(spec, mp, pp)?;
+        let w = build_for(&spec.workload, &s)?;
+        for &sched in schedules {
+            if pp == 1 && sched != schedules[0] {
+                continue;
+            }
+            for &m in microbatch_counts {
+                if pp == 1 && m != microbatch_counts[0] {
+                    continue;
+                }
+                let label = if pp == 1 {
+                    s.label()
+                } else {
+                    format!("{} {} m{m}", s.label(), sched.name())
+                };
+                branches.push(Branch {
+                    label,
+                    workload: w.clone(),
+                    stage: opts0.zero_stage,
+                    footprint_override: None,
+                    microbatches: Some(m),
+                    schedule: Some(sched),
+                });
+            }
+        }
+    }
+    let axes =
+        AxisSpec::new().collective_impls(&[opts0.collective_impl]);
+    Optimizer::new(coord, spec.cluster.clone(), opts0, branches, axes)
+        .map_err(|e| Error::Config(format!("scenario '{}': {e}", spec.name)))
+}
+
 // ---- optimize (branch-and-bound co-design search) -------------------------
 
 /// Build the branch-and-bound optimizer a `kind = "optimize"` scenario
-/// describes, without running it. Public so tests and `bench_optimizer`
-/// can drive [`Optimizer::search`] and [`Optimizer::exhaustive`] from the
-/// same spec and compare evaluated-point counts.
+/// describes — or the PP x microbatch x schedule lattice of a
+/// `kind = "pipeline"` scenario (one branch per lattice point, so
+/// `comet optimize pipeline-transformer` searches the same space the
+/// study tabulates) — without running it. Public so tests and
+/// `bench_optimizer` can drive [`Optimizer::search`] and
+/// [`Optimizer::exhaustive`] from the same spec and compare
+/// evaluated-point counts.
 pub fn optimizer_for<'a>(
     spec: &ScenarioSpec,
     coord: &'a Coordinator,
 ) -> Result<Optimizer<'a>> {
+    if let Study::Pipeline {
+        mp,
+        pps,
+        microbatch_counts,
+        schedules,
+    } = &spec.study
+    {
+        return pipeline_optimizer(
+            spec,
+            coord,
+            *mp,
+            pps,
+            microbatch_counts,
+            schedules,
+        );
+    }
     let Study::Optimize {
         strategies,
         em_bandwidths_gbps,
@@ -810,7 +1001,8 @@ pub fn optimizer_for<'a>(
     } = &spec.study
     else {
         return Err(Error::Config(format!(
-            "scenario '{}': optimizer_for needs an optimize study, got {}",
+            "scenario '{}': optimizer_for needs an optimize or pipeline \
+             study, got {}",
             spec.name,
             spec.study.kind()
         )));
@@ -832,6 +1024,7 @@ pub fn optimizer_for<'a>(
             let default_axis = StrategyAxis::Pow2 {
                 min_mp: 1,
                 max_mp: None,
+                max_pp: 1,
             };
             if *strategies != default_axis {
                 return Err(Error::Config(format!(
@@ -853,10 +1046,12 @@ pub fn optimizer_for<'a>(
                 workload: d.build(n)?,
                 stage: opts0.zero_stage,
                 footprint_override: Some(d.footprint_per_node(n)),
+                microbatches: None,
+                schedule: None,
             });
         }
         _ => {
-            for s in strategies.resolve(spec.cluster.n_nodes) {
+            for s in strategies.resolve(spec.cluster.n_nodes)? {
                 let w0 = build_for(&spec.workload, &s)?;
                 for &stage in &zaxis {
                     let w = if explicit_zero {
@@ -874,6 +1069,8 @@ pub fn optimizer_for<'a>(
                         workload: w,
                         stage,
                         footprint_override: None,
+                        microbatches: None,
+                        schedule: None,
                     });
                 }
             }
@@ -1014,10 +1211,14 @@ fn run_cluster_compare(
         let topts = eval_opts(spec);
         let tf_start = specs.len();
         let max_mp = 128.min(cluster.n_nodes);
-        for s in Strategy::sweep_bounded(cluster.n_nodes, 1, max_mp) {
+        for s in Strategy::sweep_bounded(cluster.n_nodes, 1, max_mp)? {
             let w = t.build(&s)?;
-            let fp =
-                footprint_per_node(&w, &s, topts.zero_stage).total();
+            let fp = pipeline_footprint_per_node(
+                &w,
+                topts.zero_stage,
+                topts.pipe_schedule,
+                topts.microbatches,
+            );
             if fp > cluster.node.total_capacity() {
                 continue;
             }
@@ -1199,6 +1400,79 @@ mod tests {
         )
         .unwrap_err();
         assert!(e.to_string().contains("zero_stages"), "{e}");
+    }
+
+    #[test]
+    fn pipeline_study_runs_and_dedups_pp1_rows() {
+        let f = run_str(
+            "name = \"pipe\"\n[workload]\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"pipeline\"\nmp = 2\npps = [1, 2, 4]\n\
+             microbatches = [4, 8]\nschedules = [\"gpipe\", \"1f1b\"]\n\
+             [options]\ninfinite_memory = true\n",
+        )
+        .unwrap();
+        // PP1 appears once (schedule-independent); PP2/PP4 per schedule.
+        assert_eq!(f.rows.len(), 1 + 2 * 2);
+        assert_eq!(f.columns, vec!["m=4".to_string(), "m=8".to_string()]);
+        assert_eq!(f.rows[0].0, "PP1");
+        assert!(f.rows.iter().any(|(l, _)| l == "PP4 1f1b"));
+        for (label, vals) in &f.rows {
+            for v in vals {
+                assert!(v.is_finite() && *v > 0.0, "{label}: {v}");
+            }
+        }
+        // More microbatches shrink the bubble: for PP > 1 rows the m=8
+        // column must not be meaningfully slower than m=4 (per-hop
+        // latency grows with m, so allow a whisker).
+        for (label, vals) in f.rows.iter().skip(1) {
+            assert!(vals[1] <= vals[0] * 1.02, "{label}: {vals:?}");
+        }
+    }
+
+    #[test]
+    fn pipeline_study_rejects_bad_shapes() {
+        // MP x PP must divide the cluster.
+        let e = run_str(
+            "name = \"pipe\"\n[workload]\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"pipeline\"\nmp = 2\npps = [3]\n\
+             microbatches = [4]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("divide"), "{e}");
+        // DLRM has no pipeline axis.
+        let e = run_str(
+            "name = \"pipe\"\n[workload]\nkind = \"dlrm\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"pipeline\"\npps = [2]\nmicrobatches = [4]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("transformer"), "{e}");
+    }
+
+    #[test]
+    fn pipeline_study_searchable_via_optimizer() {
+        let spec = ScenarioSpec::parse_str(
+            "name = \"pipe\"\n[workload]\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"pipeline\"\nmp = 2\npps = [1, 2, 4]\n\
+             microbatches = [4, 8]\nschedules = [\"gpipe\", \"1f1b\"]\n\
+             [options]\ninfinite_memory = true\n",
+        )
+        .unwrap();
+        let coord = Coordinator::native();
+        let opt = optimizer_for(&spec, &coord).unwrap();
+        let s = opt.search().unwrap();
+        let e = opt.exhaustive().unwrap();
+        // PP1 collapses to one branch; PP2/PP4 span 2 schedules x 2 m.
+        assert_eq!(e.total_points, 1 + 2 * 4);
+        assert_eq!(s.best().unwrap().label, e.best().unwrap().label);
+        assert_eq!(
+            s.best().unwrap().total().to_bits(),
+            e.best().unwrap().total().to_bits()
+        );
+        assert_eq!(s.evaluated + s.pruned, e.evaluated);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::config::{presets, serde_io, ClusterConfig};
 use crate::coordinator::Coordinator;
 use crate::error::{Error, Result};
 use crate::network::CollectiveImpl;
-use crate::parallel::{Strategy, ZeroStage};
+use crate::parallel::{PipeSchedule, Strategy, ZeroStage};
 use crate::util::json::Value;
 use crate::workload::dlrm::Dlrm;
 use crate::workload::gemm::DenseGemm;
@@ -51,32 +51,43 @@ pub enum WorkloadSpec {
     Gemm(DenseGemm),
 }
 
-/// A strategy axis: either the power-of-two (MP, DP) sweep bounded by MP
-/// degree, or an explicit list.
+/// A strategy axis: either the power-of-two (MP, DP[, PP]) sweep bounded
+/// by MP degree (and optionally grown by the pipeline axis), or an
+/// explicit list.
 #[derive(Debug, Clone, PartialEq)]
 pub enum StrategyAxis {
-    /// `Strategy::sweep_bounded(n_nodes, min_mp, max_mp)`; `max_mp = None`
-    /// means unbounded (the full sweep).
+    /// `Strategy::sweep_bounded(n_nodes, min_mp, max_mp)` when
+    /// `max_pp == 1`, else the 3D `Strategy::sweep_3d` lattice;
+    /// `max_mp = None` means unbounded (the full sweep).
     Pow2 {
         /// Smallest MP degree included.
         min_mp: usize,
         /// Largest MP degree included (`None` = the cluster size).
         max_mp: Option<usize>,
+        /// Largest pipeline-parallel degree included (1 = the paper's 2D
+        /// lattice; the default).
+        max_pp: usize,
     },
-    /// Explicit strategy list, in row order.
+    /// Explicit strategy list (2D or 3D labels), in row order.
     List(Vec<Strategy>),
 }
 
 impl StrategyAxis {
-    /// Resolve against a cluster of `n_nodes` (power of two).
-    pub fn resolve(&self, n_nodes: usize) -> Vec<Strategy> {
+    /// Resolve against a cluster of `n_nodes`; errors on a
+    /// non-power-of-two cluster size.
+    pub fn resolve(&self, n_nodes: usize) -> Result<Vec<Strategy>> {
         match self {
-            StrategyAxis::Pow2 { min_mp, max_mp } => Strategy::sweep_bounded(
+            StrategyAxis::Pow2 {
+                min_mp,
+                max_mp,
+                max_pp,
+            } => Strategy::sweep_3d(
                 n_nodes,
                 *min_mp,
                 max_mp.unwrap_or(n_nodes),
+                *max_pp,
             ),
-            StrategyAxis::List(v) => v.clone(),
+            StrategyAxis::List(v) => Ok(v.clone()),
         }
     }
 }
@@ -182,6 +193,22 @@ pub enum Study {
         /// How many best configurations to report (default 5).
         top_k: usize,
     },
+    /// Pipeline-parallelism case study: at a fixed MP degree, sweep the
+    /// PP degree x microbatch count x schedule on one cluster (DP is
+    /// derived per point as `n_nodes / (mp * pp)`). Rows are
+    /// (PP, schedule), columns are microbatch counts, cells are iteration
+    /// time.
+    Pipeline {
+        /// Fixed model-parallel degree.
+        mp: usize,
+        /// Pipeline degrees swept (row groups); `1` rows are the 2D
+        /// slice and ignore microbatch count and schedule.
+        pps: Vec<usize>,
+        /// Microbatch counts swept (columns).
+        microbatch_counts: Vec<usize>,
+        /// Schedules swept (rows within a PP group; both by default).
+        schedules: Vec<PipeSchedule>,
+    },
     /// Cross-cluster comparison on DLRM turnaround + best-feasible
     /// transformer strategy (paper Fig. 15 / Table III).
     ClusterCompare {
@@ -209,6 +236,7 @@ impl Study {
             Study::ClusterSize { .. } => "cluster-size",
             Study::Packing { .. } => "packing",
             Study::Optimize { .. } => "optimize",
+            Study::Pipeline { .. } => "pipeline",
             Study::ClusterCompare { .. } => "cluster-compare",
         }
     }
@@ -265,6 +293,11 @@ pub struct OptionsSpec {
     pub overlap_wg: bool,
     /// Force the expanded-memory traffic fraction (sensitivity studies).
     pub em_frac: Option<f64>,
+    /// Default microbatch count for pipeline-parallel points (ignored on
+    /// the `pp = 1` slice).
+    pub microbatches: usize,
+    /// Default pipeline schedule (`gpipe` | `1f1b`; ignored at `pp = 1`).
+    pub schedule: PipeSchedule,
 }
 
 impl Default for OptionsSpec {
@@ -276,6 +309,8 @@ impl Default for OptionsSpec {
             collective: CollectiveImpl::LogicalRing,
             overlap_wg: true,
             em_frac: None,
+            microbatches: 8,
+            schedule: PipeSchedule::OneFOneB,
         }
     }
 }
@@ -765,6 +800,15 @@ impl Study {
                 Ok(StrategyAxis::Pow2 {
                     min_mp: opt_usize(m, "min_mp", "study")?.unwrap_or(1),
                     max_mp: opt_usize(m, "max_mp", "study")?,
+                    max_pp: match opt_usize(m, "max_pp", "study")? {
+                        Some(0) => {
+                            return Err(Error::Config(
+                                "scenario: max_pp must be >= 1".into(),
+                            ))
+                        }
+                        Some(p) => p,
+                        None => 1,
+                    },
                 })
             }
             Some(Value::Arr(_)) => Ok(StrategyAxis::List(strategy_list(
@@ -787,7 +831,7 @@ impl Study {
             "footprint" => {
                 check_keys(
                     m,
-                    &["kind", "strategies", "min_mp", "max_mp"],
+                    &["kind", "strategies", "min_mp", "max_mp", "max_pp"],
                     "study",
                 )?;
                 Ok(Study::Footprint {
@@ -802,6 +846,7 @@ impl Study {
                         "strategies",
                         "min_mp",
                         "max_mp",
+                        "max_pp",
                         "em_bandwidths_gbps",
                         "em_capacities_gb",
                         "collectives",
@@ -910,6 +955,7 @@ impl Study {
                         "strategies",
                         "min_mp",
                         "max_mp",
+                        "max_pp",
                         "em_bandwidths_gbps",
                         "em_capacities_gb",
                         "collectives",
@@ -943,6 +989,51 @@ impl Study {
                     collectives,
                     zero_stages,
                     top_k,
+                })
+            }
+            "pipeline" => {
+                check_keys(
+                    m,
+                    &["kind", "mp", "pps", "microbatches", "schedules"],
+                    "study",
+                )?;
+                let pps = usize_list(m, "pps", "study")?;
+                let microbatch_counts = usize_list(m, "microbatches", "study")?;
+                if pps.is_empty() || microbatch_counts.is_empty() {
+                    return Err(Error::Config(
+                        "scenario: pipeline study requires non-empty 'pps' \
+                         and 'microbatches'"
+                            .into(),
+                    ));
+                }
+                if pps.contains(&0) || microbatch_counts.contains(&0) {
+                    return Err(Error::Config(
+                        "scenario: pipeline degrees and microbatch counts \
+                         must be >= 1"
+                            .into(),
+                    ));
+                }
+                let schedules = str_list(m, "schedules", "study")?
+                    .iter()
+                    .map(|s| PipeSchedule::parse(s))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Study::Pipeline {
+                    mp: match opt_usize(m, "mp", "study")? {
+                        Some(0) => {
+                            return Err(Error::Config(
+                                "scenario: pipeline mp must be >= 1".into(),
+                            ))
+                        }
+                        Some(p) => p,
+                        None => 1,
+                    },
+                    pps,
+                    microbatch_counts,
+                    schedules: if schedules.is_empty() {
+                        PipeSchedule::ALL.to_vec()
+                    } else {
+                        schedules
+                    },
                 })
             }
             "cluster-compare" => {
@@ -995,11 +1086,18 @@ impl Study {
         m.insert("kind".into(), Value::Str(self.kind().into()));
         let axis_to_json = |m: &mut BTreeMap<String, Value>, a: &StrategyAxis| {
             match a {
-                StrategyAxis::Pow2 { min_mp, max_mp } => {
+                StrategyAxis::Pow2 {
+                    min_mp,
+                    max_mp,
+                    max_pp,
+                } => {
                     m.insert("strategies".into(), Value::Str("pow2".into()));
                     m.insert("min_mp".into(), Value::Num(*min_mp as f64));
                     if let Some(x) = max_mp {
                         m.insert("max_mp".into(), Value::Num(*x as f64));
+                    }
+                    if *max_pp > 1 {
+                        m.insert("max_pp".into(), Value::Num(*max_pp as f64));
                     }
                 }
                 StrategyAxis::List(v) => {
@@ -1170,6 +1268,38 @@ impl Study {
                 }
                 m.insert("top_k".into(), Value::Num(*top_k as f64));
             }
+            Study::Pipeline {
+                mp,
+                pps,
+                microbatch_counts,
+                schedules,
+            } => {
+                m.insert("mp".into(), Value::Num(*mp as f64));
+                m.insert(
+                    "pps".into(),
+                    Value::Arr(
+                        pps.iter().map(|&p| Value::Num(p as f64)).collect(),
+                    ),
+                );
+                m.insert(
+                    "microbatches".into(),
+                    Value::Arr(
+                        microbatch_counts
+                            .iter()
+                            .map(|&n| Value::Num(n as f64))
+                            .collect(),
+                    ),
+                );
+                m.insert(
+                    "schedules".into(),
+                    Value::Arr(
+                        schedules
+                            .iter()
+                            .map(|s| Value::Str(s.name().into()))
+                            .collect(),
+                    ),
+                );
+            }
             Study::ClusterCompare {
                 clusters,
                 dlrm,
@@ -1208,6 +1338,8 @@ impl OptionsSpec {
                 "collective",
                 "overlap_wg",
                 "em_frac",
+                "microbatches",
+                "schedule",
             ],
             "options",
         )?;
@@ -1239,6 +1371,17 @@ impl OptionsSpec {
             o.overlap_wg = b;
         }
         o.em_frac = opt_f64(m, "em_frac", "options")?;
+        if let Some(n) = opt_usize(m, "microbatches", "options")? {
+            if n == 0 {
+                return Err(Error::Config(
+                    "scenario: microbatches must be >= 1".into(),
+                ));
+            }
+            o.microbatches = n;
+        }
+        if let Some(s) = opt_str(m, "schedule", "options")? {
+            o.schedule = PipeSchedule::parse(&s)?;
+        }
         Ok(o)
     }
 
@@ -1261,6 +1404,14 @@ impl OptionsSpec {
         if let Some(x) = self.em_frac {
             m.insert("em_frac".into(), Value::Num(x));
         }
+        m.insert(
+            "microbatches".into(),
+            Value::Num(self.microbatches as f64),
+        );
+        m.insert(
+            "schedule".into(),
+            Value::Str(self.schedule.name().into()),
+        );
         Value::Obj(m)
     }
 }
@@ -1486,12 +1637,89 @@ mod tests {
                     *strategies,
                     StrategyAxis::Pow2 {
                         min_mp: 1,
-                        max_mp: None
+                        max_mp: None,
+                        max_pp: 1
                     }
                 );
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn pipeline_study_parses_and_roundtrips() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"pipe\"\n[study]\nkind = \"pipeline\"\nmp = 8\n\
+             pps = [1, 2, 4, 8]\nmicrobatches = [4, 8, 16]\n\
+             schedules = [\"gpipe\", \"1f1b\"]\n\
+             [options]\nmicrobatches = 16\nschedule = \"gpipe\"\n",
+        )
+        .unwrap();
+        match &s.study {
+            Study::Pipeline {
+                mp,
+                pps,
+                microbatch_counts,
+                schedules,
+            } => {
+                assert_eq!(*mp, 8);
+                assert_eq!(pps, &[1, 2, 4, 8]);
+                assert_eq!(microbatch_counts, &[4, 8, 16]);
+                assert_eq!(schedules.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.options.microbatches, 16);
+        assert_eq!(s.options.schedule, PipeSchedule::GPipe);
+        let back = ScenarioSpec::parse_str(&s.to_toml().unwrap()).unwrap();
+        assert_eq!(s, back);
+        // Schedules default to both; empty axes are rejected.
+        let d = ScenarioSpec::parse_str(
+            "name = \"pipe\"\n[study]\nkind = \"pipeline\"\npps = [2]\n\
+             microbatches = [8]\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            d.study,
+            Study::Pipeline { ref schedules, .. } if schedules.len() == 2
+        ));
+        for doc in [
+            "name = \"p\"\n[study]\nkind = \"pipeline\"\npps = []\n\
+             microbatches = [8]\n",
+            "name = \"p\"\n[study]\nkind = \"pipeline\"\npps = [2]\n\
+             microbatches = [0]\n",
+            "name = \"p\"\n[study]\nkind = \"pipeline\"\npps = [2]\n\
+             microbatches = [8]\nschedules = [\"zigzag\"]\n",
+            "name = \"p\"\n[options]\nmicrobatches = 0\n\
+             [study]\nkind = \"pipeline\"\npps = [2]\nmicrobatches = [8]\n",
+            "name = \"p\"\n[study]\nkind = \"pipeline\"\nmp = 0\n\
+             pps = [2]\nmicrobatches = [8]\n",
+        ] {
+            assert!(ScenarioSpec::parse_str(doc).is_err(), "{doc}");
+        }
+    }
+
+    #[test]
+    fn max_pp_extends_the_strategy_axis() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"x\"\n[study]\nkind = \"optimize\"\nmin_mp = 8\n\
+             max_mp = 8\nmax_pp = 4\n",
+        )
+        .unwrap();
+        match &s.study {
+            Study::Optimize { strategies, .. } => {
+                let v = strategies.resolve(1024).unwrap();
+                assert_eq!(v.len(), 3); // pp = 1, 2, 4 at MP8
+                assert!(v.iter().any(|st| st.pp == 4));
+            }
+            other => panic!("{other:?}"),
+        }
+        let back = ScenarioSpec::parse_str(&s.to_toml().unwrap()).unwrap();
+        assert_eq!(s, back);
+        assert!(ScenarioSpec::parse_str(
+            "name = \"x\"\n[study]\nkind = \"grid\"\nmax_pp = 0\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -164,6 +164,7 @@ impl Dlrm {
             layers,
             mp: nodes, // embedding sharding spans all nodes
             dp: nodes, // MLP replication spans all nodes
+            pp: 1,     // DLRM parallelism is rigid: no pipeline axis
             nodes,
             total_params: self.total_params(),
         })

@@ -74,13 +74,20 @@ impl DenseGemm {
     }
 
     /// Decompose for a strategy. Only data parallelism is supported:
-    /// `mp` must be 1, and `dp` splits the batch dimension.
+    /// `mp` and `pp` must be 1, and `dp` splits the batch dimension.
     pub fn build(&self, strategy: &Strategy) -> Result<Workload> {
         if strategy.mp != 1 {
             return Err(Error::Config(format!(
                 "GEMM workload supports data parallelism only (MP must be \
                  1, got {})",
                 strategy.mp
+            )));
+        }
+        if strategy.pp != 1 {
+            return Err(Error::Config(format!(
+                "GEMM workload supports data parallelism only (PP must be \
+                 1, got {}): a single layer has no pipeline stages",
+                strategy.pp
             )));
         }
         let dp = strategy.dp as f64;
@@ -113,6 +120,7 @@ impl DenseGemm {
             layers: vec![mm, update],
             mp: 1,
             dp: strategy.dp,
+            pp: 1,
             nodes: strategy.dp,
             total_params: params,
         })
@@ -149,7 +157,7 @@ mod tests {
     #[test]
     fn dense_gemm_builds_dp_workload() {
         let g = DenseGemm::new(65_536.0, 8192.0, 8192.0);
-        let w = g.build(&Strategy::new(1, 8)).unwrap();
+        let w = g.build(&Strategy::new(1, 8).unwrap()).unwrap();
         assert_eq!(w.nodes, 8);
         assert_eq!(w.layers.len(), 2);
         // Batch split 8 ways; weight shard replicated.
@@ -168,8 +176,9 @@ mod tests {
     #[test]
     fn dense_gemm_rejects_mp_and_oversplit() {
         let g = DenseGemm::new(64.0, 64.0, 64.0);
-        assert!(g.build(&Strategy::new(2, 4)).is_err());
-        assert!(g.build(&Strategy::new(1, 128)).is_err());
-        assert!(g.build(&Strategy::new(1, 64)).is_ok());
+        assert!(g.build(&Strategy::new(2, 4).unwrap()).is_err());
+        assert!(g.build(&Strategy::new(1, 128).unwrap()).is_err());
+        assert!(g.build(&Strategy::new(1, 64).unwrap()).is_ok());
+        assert!(g.build(&Strategy::new_3d(1, 8, 2).unwrap()).is_err());
     }
 }

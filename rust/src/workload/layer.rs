@@ -292,22 +292,39 @@ impl Layer {
     }
 }
 
+/// One (layer, repeat-share) slice of a pipeline-stage partition: the
+/// stage holds `repeat` instances' worth of layer `layer` (fractional when
+/// a repeated layer straddles a stage boundary).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSlice {
+    /// Index into [`Workload::layers`].
+    pub layer: usize,
+    /// Instance multiplicity assigned to this stage (may be fractional).
+    pub repeat: f64,
+}
+
 /// A decomposed model: named layer list plus bookkeeping, the unit of work
 /// the cost model and simulator consume.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Workload {
     /// Model name ("transformer-1t@mp8_dp128").
     pub name: String,
-    /// Decomposed layers in forward order.
+    /// Decomposed layers in forward order. With pipeline parallelism
+    /// (`pp > 1`) this is still the full MP-shard layer list; each node
+    /// holds only its stage's contiguous slice (see
+    /// [`Workload::stage_partition`]).
     pub layers: Vec<Layer>,
     /// MP degree the decomposition was built for.
     pub mp: usize,
     /// DP degree the decomposition was built for.
     pub dp: usize,
-    /// Total nodes the decomposition occupies. For MP x DP workloads this
-    /// is `mp * dp`; for DLRM-style hybrid parallelism (embeddings sharded
-    /// over all nodes AND MLPs replicated over all nodes) it is the node
-    /// count itself.
+    /// Pipeline-parallel degree (contiguous layer stages); `1` = no
+    /// pipeline parallelism.
+    pub pp: usize,
+    /// Total nodes the decomposition occupies. For MP x DP x PP workloads
+    /// this is `mp * dp * pp`; for DLRM-style hybrid parallelism
+    /// (embeddings sharded over all nodes AND MLPs replicated over all
+    /// nodes) it is the node count itself.
     pub nodes: usize,
     /// Total model parameters (across all MP shards, one DP replica).
     pub total_params: f64,
@@ -347,9 +364,118 @@ impl Workload {
         self.layers.len()
     }
 
+    /// Contiguous pipeline-stage partition of the layer list, balanced by
+    /// FLOPs (all three phases, including the optimizer update's).
+    ///
+    /// The layer sequence is treated as a continuous mass of
+    /// `repeat x per-instance-FLOPs` per layer and cut at the `pp - 1`
+    /// equal-mass boundaries; a repeated layer that straddles a boundary
+    /// is split with fractional repeats (the cost models already support
+    /// fractional multiplicities). Zero-FLOP layers attach to the stage
+    /// the cursor is in. At `pp = 1` this is the identity partition —
+    /// one stage holding every layer at its full repeat.
+    pub fn stage_partition(&self) -> Vec<Vec<StageSlice>> {
+        let pp = self.pp.max(1);
+        let per_rep: Vec<f64> = self
+            .layers
+            .iter()
+            .map(|l| {
+                Phase::ALL
+                    .iter()
+                    .map(|&p| l.op.quantities(p).flops)
+                    .sum::<f64>()
+            })
+            .collect();
+        if pp == 1 {
+            return vec![self
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| StageSlice {
+                    layer: i,
+                    repeat: l.repeat,
+                })
+                .collect()];
+        }
+        let total: f64 = self
+            .layers
+            .iter()
+            .zip(&per_rep)
+            .map(|(l, &f)| l.repeat * f)
+            .sum();
+        let mut stages: Vec<Vec<StageSlice>> = vec![Vec::new(); pp];
+        if total <= 0.0 {
+            // Degenerate (no compute anywhere): everything in stage 0.
+            stages[0] = self
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| StageSlice {
+                    layer: i,
+                    repeat: l.repeat,
+                })
+                .collect();
+            return stages;
+        }
+        let mut s = 0usize;
+        let mut cum = 0.0f64;
+        for (i, l) in self.layers.iter().enumerate() {
+            let f = per_rep[i];
+            if f <= 0.0 || l.repeat <= 0.0 {
+                stages[s].push(StageSlice {
+                    layer: i,
+                    repeat: l.repeat,
+                });
+                continue;
+            }
+            let mut left = l.repeat;
+            while left > 0.0 {
+                let boundary = total * (s + 1) as f64 / pp as f64;
+                let room = boundary - cum;
+                if s + 1 < pp && left * f > room {
+                    // Split at the stage boundary.
+                    let take = (room / f).max(0.0);
+                    if take > 0.0 {
+                        stages[s].push(StageSlice {
+                            layer: i,
+                            repeat: take,
+                        });
+                    }
+                    cum = boundary;
+                    left -= take;
+                    s += 1;
+                } else {
+                    stages[s].push(StageSlice { layer: i, repeat: left });
+                    cum += left * f;
+                    left = 0.0;
+                }
+            }
+        }
+        stages
+    }
+
+    /// Activation bytes crossing each stage boundary of a partition
+    /// (length `stages.len() - 1`): the output of the last
+    /// activation-producing layer of each stage, for the full mini-batch,
+    /// fp16. Per-microbatch payloads are this divided by the microbatch
+    /// count.
+    pub fn stage_boundary_bytes(&self, stages: &[Vec<StageSlice>]) -> Vec<f64> {
+        (0..stages.len().saturating_sub(1))
+            .map(|s| {
+                stages[s]
+                    .iter()
+                    .rev()
+                    .map(|sl| self.layers[sl.layer].activation_elems() * FP16)
+                    .find(|&b| b > 0.0)
+                    .unwrap_or(0.0)
+            })
+            .collect()
+    }
+
     /// Cache fingerprint: FNV-1a over everything the two-stage derive
-    /// consumes — names (they flow into diagnostics), the (MP, DP, nodes)
-    /// shape, parameter totals, and every layer's per-phase quantities,
+    /// consumes — names (they flow into diagnostics), the
+    /// (MP, DP, PP, nodes) shape, parameter totals, and every layer's
+    /// per-phase quantities,
     /// activation footprint, and communication. Two workloads with equal
     /// fingerprints decompose identically, which is what lets the
     /// coordinator's derive cache share one decomposition across a sweep.
@@ -374,6 +500,7 @@ impl Workload {
         eat_str(&mut h, &self.name);
         eat(&mut h, self.mp as f64);
         eat(&mut h, self.dp as f64);
+        eat(&mut h, self.pp as f64);
         eat(&mut h, self.nodes as f64);
         eat(&mut h, self.total_params);
         let scope_code = |s: CommScope| match s {
@@ -509,6 +636,7 @@ mod tests {
             ],
             mp: 1,
             dp: 1,
+            pp: 1,
             nodes: 1,
             total_params: 8.0,
         };
@@ -534,6 +662,7 @@ mod tests {
             )],
             mp: 2,
             dp: 4,
+            pp: 1,
             nodes: 8,
             total_params: 8.0,
         };
@@ -545,10 +674,105 @@ mod tests {
         reshaped.mp = 4;
         reshaped.dp = 2;
         assert_ne!(base.fingerprint(), reshaped.fingerprint());
+        let mut piped = base.clone();
+        piped.pp = 2;
+        assert_ne!(base.fingerprint(), piped.fingerprint());
         let mut recomm = base.clone();
         recomm.layers[0].comm_wg =
             Comm::allreduce(16.0, CommScope::Dp);
         assert_ne!(base.fingerprint(), recomm.fingerprint());
+    }
+
+    fn staged_workload(pp: usize) -> Workload {
+        Workload {
+            name: "staged".into(),
+            layers: vec![
+                Layer::new(
+                    "stack",
+                    LayerOp::Gemm {
+                        m: 8.0,
+                        k: 8.0,
+                        n: 8.0,
+                    },
+                    16.0,
+                ),
+                Layer::new(
+                    "head",
+                    LayerOp::Gemm {
+                        m: 8.0,
+                        k: 8.0,
+                        n: 16.0,
+                    },
+                    1.0,
+                ),
+            ],
+            mp: 1,
+            dp: 1,
+            pp,
+            nodes: pp,
+            total_params: 100.0,
+        }
+    }
+
+    #[test]
+    fn stage_partition_identity_at_pp1() {
+        let w = staged_workload(1);
+        let stages = w.stage_partition();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].len(), 2);
+        assert_eq!(stages[0][0], StageSlice { layer: 0, repeat: 16.0 });
+        assert_eq!(stages[0][1], StageSlice { layer: 1, repeat: 1.0 });
+    }
+
+    #[test]
+    fn stage_partition_balances_flops_and_conserves_repeats() {
+        for pp in [2usize, 3, 4, 8] {
+            let w = staged_workload(pp);
+            let stages = w.stage_partition();
+            assert_eq!(stages.len(), pp);
+            let flops3 = |i: usize| -> f64 {
+                Phase::ALL
+                    .iter()
+                    .map(|&p| w.layers[i].op.quantities(p).flops)
+                    .sum()
+            };
+            let total: f64 =
+                (0..2).map(|i| w.layers[i].repeat * flops3(i)).sum();
+            let mut per_layer = [0.0f64; 2];
+            for (s, slices) in stages.iter().enumerate() {
+                assert!(!slices.is_empty(), "pp={pp}: stage {s} empty");
+                let mass: f64 =
+                    slices.iter().map(|sl| sl.repeat * flops3(sl.layer)).sum();
+                assert!(
+                    (mass - total / pp as f64).abs() < 1e-6 * total,
+                    "pp={pp} stage {s}: mass {mass} vs {}",
+                    total / pp as f64
+                );
+                for sl in slices {
+                    per_layer[sl.layer] += sl.repeat;
+                }
+            }
+            assert!((per_layer[0] - 16.0).abs() < 1e-9);
+            assert!((per_layer[1] - 1.0).abs() < 1e-9);
+            // Contiguity: layer indices never decrease across stages.
+            let flat: Vec<usize> = stages
+                .iter()
+                .flat_map(|s| s.iter().map(|sl| sl.layer))
+                .collect();
+            assert!(flat.windows(2).all(|w| w[0] <= w[1]), "pp={pp}");
+        }
+    }
+
+    #[test]
+    fn stage_boundary_bytes_use_last_activation() {
+        let w = staged_workload(4);
+        let stages = w.stage_partition();
+        let bytes = w.stage_boundary_bytes(&stages);
+        assert_eq!(bytes.len(), 3);
+        // Every boundary inside the repeated stack carries its 8x8 output.
+        for b in &bytes {
+            assert_eq!(*b, 8.0 * 8.0 * FP16);
+        }
     }
 
     #[test]

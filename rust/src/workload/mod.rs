@@ -10,5 +10,5 @@ pub mod transformer;
 
 pub use layer::{
     Collective, Comm, CommScope, Layer, LayerOp, Phase, PhaseQuantities,
-    Workload, FP16,
+    StageSlice, Workload, FP16,
 };

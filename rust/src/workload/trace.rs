@@ -24,10 +24,11 @@ use crate::error::{Error, Result};
 /// Serialize a workload to the trace format.
 pub fn emit(w: &Workload) -> String {
     let mut out = format!(
-        "# comet-workload v1 {} mp={} dp={} nodes={} params={}\n",
+        "# comet-workload v1 {} mp={} dp={} pp={} nodes={} params={}\n",
         w.name.replace(' ', "_"),
         w.mp,
         w.dp,
+        w.pp,
         w.nodes,
         w.total_params
     );
@@ -65,6 +66,8 @@ pub fn parse(text: &str) -> Result<Workload> {
         .ok_or_else(|| Error::Config("empty trace".into()))?;
     let mut name = String::new();
     let (mut mp, mut dp, mut params) = (1usize, 1usize, 0.0f64);
+    // pp defaults to 1 so pre-3D traces parse unchanged.
+    let mut pp = 1usize;
     let mut nodes = 0usize;
     for (i, tok) in header.split_whitespace().enumerate() {
         match i {
@@ -75,6 +78,8 @@ pub fn parse(text: &str) -> Result<Workload> {
                     mp = v.parse().map_err(|_| bad(header))?;
                 } else if let Some(v) = tok.strip_prefix("dp=") {
                     dp = v.parse().map_err(|_| bad(header))?;
+                } else if let Some(v) = tok.strip_prefix("pp=") {
+                    pp = v.parse().map_err(|_| bad(header))?;
                 } else if let Some(v) = tok.strip_prefix("nodes=") {
                     nodes = v.parse().map_err(|_| bad(header))?;
                 } else if let Some(v) = tok.strip_prefix("params=") {
@@ -124,13 +129,14 @@ pub fn parse(text: &str) -> Result<Workload> {
         layers.push(layer);
     }
     if nodes == 0 {
-        nodes = mp * dp;
+        nodes = mp * dp * pp;
     }
     Ok(Workload {
         name,
         layers,
         mp,
         dp,
+        pp,
         nodes,
         total_params: params,
     })
@@ -194,12 +200,15 @@ mod tests {
 
     #[test]
     fn roundtrip_preserves_quantities() {
-        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let w = Transformer::t1()
+            .build(&Strategy::new(8, 128).unwrap())
+            .unwrap();
         let text = emit(&w);
         let back = parse(&text).unwrap();
         assert_eq!(back.layers.len(), w.layers.len());
         assert_eq!(back.mp, 8);
         assert_eq!(back.dp, 128);
+        assert_eq!(back.pp, 1);
         for (a, b) in w.layers.iter().zip(back.layers.iter()) {
             assert_eq!(a.repeat, b.repeat);
             for phase in Phase::ALL {
@@ -214,6 +223,23 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_preserves_pipeline_degree() {
+        let w = Transformer::t1()
+            .build(&Strategy::new_3d(8, 16, 8).unwrap())
+            .unwrap();
+        let text = emit(&w);
+        assert!(text.contains(" pp=8 "), "{}", text.lines().next().unwrap());
+        let back = parse(&text).unwrap();
+        assert_eq!(back.pp, 8);
+        assert_eq!(back.nodes, 1024);
+        // A pre-3D header (no pp= token) parses with pp = 1.
+        let legacy = "# comet-workload v1 old mp=2 dp=4 params=10\n";
+        let old = parse(legacy).unwrap();
+        assert_eq!(old.pp, 1);
+        assert_eq!(old.nodes, 8);
+    }
+
+    #[test]
     fn rejects_bad_header() {
         assert!(parse("garbage\n").is_err());
         assert!(parse("").is_err());
@@ -221,7 +247,9 @@ mod tests {
 
     #[test]
     fn rejects_truncated_line() {
-        let w = Transformer::t100m().build(&Strategy::new(2, 2)).unwrap();
+        let w = Transformer::t100m()
+            .build(&Strategy::new(2, 2).unwrap())
+            .unwrap();
         let text = emit(&w);
         let mut lines: Vec<&str> = text.lines().collect();
         let truncated = &lines[1][..lines[1].len() / 2];

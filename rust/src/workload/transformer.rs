@@ -99,7 +99,11 @@ impl Transformer {
 
     /// Decompose into per-node layers for a parallelization strategy.
     ///
-    /// Errors if MP exceeds the head count (cannot shard further).
+    /// Errors if MP exceeds the head count (cannot shard further) or PP
+    /// exceeds the stack count (cannot pipeline deeper than the layer
+    /// stacks). With `pp > 1` the returned workload still carries the
+    /// full MP-shard layer list; the contiguous stage split happens at
+    /// derivation time via [`Workload::stage_partition`].
     pub fn build(&self, strategy: &Strategy) -> Result<Workload> {
         let mp = strategy.mp as f64;
         let dp = strategy.dp as f64;
@@ -107,6 +111,13 @@ impl Transformer {
             return Err(Error::Config(format!(
                 "MP {} > heads {}: cannot shard attention",
                 strategy.mp, self.heads
+            )));
+        }
+        if strategy.pp > self.stacks {
+            return Err(Error::Config(format!(
+                "PP {} > stacks {}: cannot pipeline deeper than the stack \
+                 count",
+                strategy.pp, self.stacks
             )));
         }
         let d = self.d_model;
@@ -243,6 +254,7 @@ impl Transformer {
             layers,
             mp: strategy.mp,
             dp: strategy.dp,
+            pp: strategy.pp,
             nodes: strategy.nodes(),
             total_params: self.total_params(),
         })
@@ -272,15 +284,30 @@ mod tests {
     #[test]
     fn build_rejects_mp_beyond_heads() {
         let t = Transformer::t1();
-        assert!(t.build(&Strategy::new(256, 4)).is_err());
-        assert!(t.build(&Strategy::new(128, 8)).is_ok());
+        assert!(t.build(&Strategy::new(256, 4).unwrap()).is_err());
+        assert!(t.build(&Strategy::new(128, 8).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn build_carries_pipeline_degree() {
+        let t = Transformer::t1();
+        let s = Strategy::new_3d(8, 16, 8).unwrap();
+        let w = t.build(&s).unwrap();
+        assert_eq!(w.pp, 8);
+        assert_eq!(w.nodes, 1024);
+        assert_eq!(w.name, "transformer-1t@MP8_DP16_PP8");
+        // The layer list is the full MP shard regardless of PP.
+        let flat = t.build(&Strategy::new(8, 128).unwrap()).unwrap();
+        assert_eq!(w.layers, flat.layers);
+        // PP beyond the stack count cannot be pipelined.
+        assert!(t.build(&Strategy::new_3d(8, 1, 256).unwrap()).is_err());
     }
 
     #[test]
     fn params_per_node_scale_with_mp() {
         let t = Transformer::t1();
-        let w8 = t.build(&Strategy::new(8, 128)).unwrap();
-        let w16 = t.build(&Strategy::new(16, 64)).unwrap();
+        let w8 = t.build(&Strategy::new(8, 128).unwrap()).unwrap();
+        let w16 = t.build(&Strategy::new(16, 64).unwrap()).unwrap();
         let r = w8.params_per_node() / w16.params_per_node();
         assert!((r - 2.0).abs() < 0.05, "ratio {r}");
     }
@@ -290,8 +317,8 @@ mod tests {
         // Fixed per-replica batch: each node computes b sequences over a
         // 1/MP model shard, so halving MP doubles per-node FLOPs.
         let t = Transformer::t1();
-        let f8 = t.build(&Strategy::new(8, 128)).unwrap().total_flops();
-        let f16 = t.build(&Strategy::new(16, 64)).unwrap().total_flops();
+        let f8 = t.build(&Strategy::new(8, 128).unwrap()).unwrap().total_flops();
+        let f16 = t.build(&Strategy::new(16, 64).unwrap()).unwrap().total_flops();
         let r = f16 / f8;
         assert!((r - 0.5).abs() < 0.05, "ratio {r}");
     }
@@ -302,7 +329,7 @@ mod tests {
         // payload (b x seq x d_model) is strategy-independent.
         let t = Transformer::t1();
         let ar = |mp: usize, dp: usize| {
-            t.build(&Strategy::new(mp, dp))
+            t.build(&Strategy::new(mp, dp).unwrap())
                 .unwrap()
                 .layers
                 .iter()
@@ -318,7 +345,7 @@ mod tests {
     #[test]
     fn wg_sync_is_reduce_scatter() {
         let t = Transformer::t1();
-        let w = t.build(&Strategy::new(8, 128)).unwrap();
+        let w = t.build(&Strategy::new(8, 128).unwrap()).unwrap();
         let mlp = w.layers.iter().find(|l| l.name == "mlp-1").unwrap();
         assert_eq!(mlp.comm_wg.collective, Collective::ReduceScatter);
         assert_eq!(mlp.comm_wg.scope, CommScope::Dp);
@@ -326,7 +353,7 @@ mod tests {
 
     #[test]
     fn layer_count_fits_abi() {
-        let w = Transformer::t1().build(&Strategy::new(8, 128)).unwrap();
+        let w = Transformer::t1().build(&Strategy::new(8, 128).unwrap()).unwrap();
         assert!(w.n_slots() <= 192, "slots {}", w.n_slots());
         assert!(w.n_slots() >= 10);
     }
@@ -335,7 +362,7 @@ mod tests {
     fn weight_update_traffic_grows_as_mp_shrinks() {
         let t = Transformer::t1();
         let wu_bytes = |mp: usize, dp: usize| {
-            let w = t.build(&Strategy::new(mp, dp)).unwrap();
+            let w = t.build(&Strategy::new(mp, dp).unwrap()).unwrap();
             let l = w
                 .layers
                 .iter()

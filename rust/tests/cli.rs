@@ -189,6 +189,70 @@ fn scenario_run_optimize_builtin_verbose_reports_search() {
 }
 
 #[test]
+fn scenario_run_pipeline_builtin() {
+    let (ok, stdout, stderr) =
+        comet(&["scenario", "run", "pipeline-transformer"]);
+    assert!(ok, "stderr:\n{stderr}");
+    assert!(stdout.contains("PP8"), "{stdout}");
+    assert!(stdout.contains("m=16"), "{stdout}");
+    assert!(stdout.contains("gpipe"), "{stdout}");
+}
+
+#[test]
+fn optimize_command_accepts_pipeline_scenario_target() {
+    let (ok, stdout, stderr) =
+        comet(&["optimize", "pipeline-transformer"]);
+    assert!(ok, "stderr:\n{stderr}");
+    // The argmin is a deep pipeline; starved shallow points are pruned
+    // or infeasible.
+    assert!(stdout.contains("PP8"), "{stdout}");
+    assert!(stderr.contains("infeasible"), "{stderr}");
+    // A non-searchable study is rejected loudly.
+    let (ok, _, stderr) = comet(&["optimize", "fig8a"]);
+    assert!(!ok);
+    assert!(stderr.contains("optimize or pipeline"), "{stderr}");
+}
+
+#[test]
+fn optimize_command_sweeps_the_pp_axis_from_flags() {
+    let (ok, stdout, stderr) = comet(&[
+        "optimize",
+        "--workload",
+        "transformer-100m",
+        "--cluster",
+        "dgx-a100-64",
+        "--min-mp",
+        "2",
+        "--max-mp",
+        "2",
+        "--max-pp",
+        "4",
+        "--microbatches",
+        "8",
+        "--schedule",
+        "1f1b",
+        "--top-k",
+        "3",
+        "--infinite-memory",
+    ]);
+    assert!(ok, "stderr:\n{stderr}");
+    assert!(stdout.contains("_PP"), "{stdout}");
+}
+
+#[test]
+fn workload_trace_carries_pipeline_degree() {
+    let (ok, stdout, _) = comet(&[
+        "workload",
+        "--model",
+        "transformer-1t",
+        "--strategy",
+        "MP8_DP16_PP8",
+    ]);
+    assert!(ok);
+    assert!(stdout.contains("pp=8"), "{}", stdout.lines().next().unwrap());
+}
+
+#[test]
 fn validate_passes() {
     let (ok, stdout, stderr) = comet(&["validate"]);
     assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");

@@ -9,7 +9,7 @@ use comet::coordinator::Coordinator;
 use comet::model::inputs::{decompose, derive_inputs, resolve_inputs, EvalOptions};
 use comet::network::{collective_cost, CollectiveImpl, CollectiveSpec};
 use comet::optimizer::Outcome;
-use comet::parallel::{model_state_bytes, Strategy, ZeroStage};
+use comet::parallel::{model_state_bytes, PipeSchedule, Strategy, ZeroStage};
 use comet::scenario::{optimizer_for, ScenarioSpec};
 use comet::sim::simulate;
 use comet::util::prng::Rng;
@@ -136,6 +136,64 @@ fn zero_footprint_ordering_random_splits() {
 }
 
 #[test]
+fn strategy_label_roundtrip_random_2d_and_3d() {
+    let mut rng = Rng::new(1010);
+    for case in 0..CASES {
+        let mp = rng.pow2(0, 10) as usize;
+        let dp = rng.pow2(0, 10) as usize;
+        let pp = rng.pow2(0, 6) as usize;
+        let s = if rng.f64() < 0.5 {
+            Strategy::new(mp, dp).unwrap()
+        } else {
+            Strategy::new_3d(mp, dp, pp).unwrap()
+        };
+        assert_eq!(
+            Strategy::parse(&s.label()).unwrap(),
+            s,
+            "case {case}: {}",
+            s.label()
+        );
+        // Malformed variants of the same label must be rejected: zero
+        // degrees, trailing garbage, and PP0.
+        assert!(Strategy::parse(&format!("MP0_DP{dp}")).is_err());
+        assert!(Strategy::parse(&format!("MP{mp}_DP0")).is_err());
+        assert!(Strategy::parse(&format!("MP{mp}_DP{dp}_PP0")).is_err());
+        assert!(Strategy::parse(&format!("MP{mp}_DP{dp}x")).is_err());
+        assert!(Strategy::parse(&format!("MP{mp}_DP{dp}_PP{pp}y")).is_err());
+        assert!(Strategy::parse(&format!("MP{mp}_DP{dp}_PP")).is_err());
+        assert!(Strategy::parse(&format!(" MP{mp}_DP{dp}")).is_err());
+    }
+}
+
+#[test]
+fn des_tracks_analytical_across_random_pipeline_configs() {
+    let mut rng = Rng::new(1111);
+    let cluster = presets::dgx_a100_1024();
+    for case in 0..30 {
+        let pp = *rng.choose(&[2usize, 4, 8]);
+        let mp = *rng.choose(&[2usize, 4, 8]);
+        let dp = 1024 / (mp * pp);
+        let s = Strategy::new_3d(mp, dp, pp).unwrap();
+        let w = Transformer::t1().build(&s).unwrap();
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            microbatches: *rng.choose(&[2usize, 4, 8, 16]),
+            pipe_schedule: *rng.choose(&PipeSchedule::ALL),
+            ..Default::default()
+        };
+        let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+        let a = evaluate(&inp).total();
+        let d = simulate(&inp).breakdown.total();
+        assert!(
+            rel_diff(a, d) < 0.05,
+            "case {case} {} m={}: analytical {a} DES {d}",
+            s.label(),
+            opts.microbatches
+        );
+    }
+}
+
+#[test]
 fn des_tracks_analytical_across_random_configs() {
     let mut rng = Rng::new(505);
     let clusters = [
@@ -145,7 +203,7 @@ fn des_tracks_analytical_across_random_configs() {
     ];
     for case in 0..60 {
         let cluster = rng.choose(&clusters).clone();
-        let sweep = Strategy::sweep_bounded(cluster.n_nodes, 1, 128);
+        let sweep = Strategy::sweep_bounded(cluster.n_nodes, 1, 128).unwrap();
         let s = *rng.choose(&sweep);
         let w = Transformer::t1().build(&s).unwrap();
         let opts = EvalOptions {
@@ -170,7 +228,7 @@ fn trace_roundtrip_random_workloads() {
     for case in 0..40 {
         let w = if rng.f64() < 0.5 {
             let n = 1024;
-            let sweep = Strategy::sweep_bounded(n, 1, 128);
+            let sweep = Strategy::sweep_bounded(n, 1, 128).unwrap();
             Transformer::t1().build(rng.choose(&sweep)).unwrap()
         } else {
             Dlrm::dlrm_1_2t()
@@ -322,7 +380,7 @@ fn two_stage_derive_matches_single_pass_random_configs() {
     for case in 0..60 {
         let cluster = rng.choose(&clusters).clone();
         let w = if rng.f64() < 0.7 {
-            let sweep = Strategy::sweep_bounded(cluster.n_nodes, 1, 128);
+            let sweep = Strategy::sweep_bounded(cluster.n_nodes, 1, 128).unwrap();
             Transformer::t1().build(rng.choose(&sweep)).unwrap()
         } else {
             Dlrm::dlrm_1_2t()
@@ -340,6 +398,8 @@ fn two_stage_derive_matches_single_pass_random_configs() {
                 CollectiveImpl::LogicalRing,
                 CollectiveImpl::Hierarchical,
             ]),
+            microbatches: *rng.choose(&[1usize, 2, 8, 32]),
+            pipe_schedule: *rng.choose(&PipeSchedule::ALL),
         };
         let single = derive_inputs(&w, &cluster, &opts).unwrap();
         let staged = resolve_inputs(&decompose(&w), &cluster, &opts).unwrap();
@@ -358,7 +418,7 @@ fn faster_clusters_never_slower() {
     // iteration time (checked on random strategies).
     let mut rng = Rng::new(808);
     for case in 0..60 {
-        let sweep = Strategy::sweep_bounded(1024, 1, 128);
+        let sweep = Strategy::sweep_bounded(1024, 1, 128).unwrap();
         let s = *rng.choose(&sweep);
         let w = Transformer::t1().build(&s).unwrap();
         let base = presets::dgx_a100_1024();

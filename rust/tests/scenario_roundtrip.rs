@@ -153,7 +153,7 @@ fn two_stage_derive_matches_single_pass_across_figure_spaces() {
 
     // Figs. 8a/8b + ablation-collectives + ablation-zero: the full
     // strategy sweep under both collectives and every ZeRO stage.
-    for s in Strategy::sweep_bounded(1024, 1, 128) {
+    for s in Strategy::sweep_bounded(1024, 1, 128).unwrap() {
         let w = Transformer::t1().build(&s).unwrap();
         specs.push((w.clone(), base.clone(), infinite));
         specs.push((w.clone(), base.clone(), hier_infinite));
@@ -169,7 +169,7 @@ fn two_stage_derive_matches_single_pass_across_figure_spaces() {
         }
     }
     // Fig. 9 + memory-expansion: spill-sized expanded memory per point.
-    for s in Strategy::sweep_bounded(1024, 2, 128) {
+    for s in Strategy::sweep_bounded(1024, 2, 128).unwrap() {
         let w = Transformer::t1().build(&s).unwrap();
         let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
         let need = (fp - base.node.local.capacity).max(0.0);
@@ -184,7 +184,7 @@ fn two_stage_derive_matches_single_pass_across_figure_spaces() {
     }
     // Fig. 10: compute-capability scaling.
     {
-        let s = Strategy::new(8, 128);
+        let s = Strategy::new(8, 128).unwrap();
         let w = Transformer::t1().build(&s).unwrap();
         let fp = footprint_per_node(&w, &s, ZeroStage::OsG).total();
         let need = (fp - base.node.local.capacity).max(0.0);
@@ -194,7 +194,10 @@ fn two_stage_derive_matches_single_pass_across_figure_spaces() {
         }
     }
     // Figs. 11/12: scaled and rebalanced networks.
-    for s in [Strategy::new(64, 16), Strategy::new(8, 128)] {
+    for s in [
+        Strategy::new(64, 16).unwrap(),
+        Strategy::new(8, 128).unwrap(),
+    ] {
         let w = Transformer::t1().build(&s).unwrap();
         specs.push((w.clone(), base.scale_network(2.0, 0.5), hier_infinite));
         specs.push((
@@ -234,7 +237,8 @@ fn two_stage_derive_matches_single_pass_across_figure_spaces() {
         let s = Strategy::new(
             64.min(cluster.n_nodes),
             cluster.n_nodes / 64.min(cluster.n_nodes),
-        );
+        )
+        .unwrap();
         specs.push((
             Transformer::t1().build(&s).unwrap(),
             cluster.clone(),
@@ -327,6 +331,50 @@ fn optimize_builtins_render_through_scenario_run() {
             fig.notes
         );
     }
+}
+
+// ---- pipeline builtin -----------------------------------------------------
+
+/// Acceptance criterion: the `pipeline-transformer` builtin runs through
+/// the scenario engine (the PP x microbatch x schedule grid) AND through
+/// the branch-and-bound optimizer (`comet optimize pipeline-transformer`
+/// drives the same path), with search == exhaustive on the 3D lattice.
+#[test]
+fn pipeline_transformer_runs_via_scenario_and_optimizer() {
+    let coord = Coordinator::native();
+    let spec = registry::get("pipeline-transformer").unwrap();
+
+    // Scenario-run path: 1 PP1 row + 3 PP-planes x 2 schedules.
+    let fig = run(&spec, &coord).unwrap();
+    assert_eq!(fig.rows.len(), 1 + 3 * 2);
+    assert_eq!(fig.columns, vec!["m=4", "m=8", "m=16"]);
+    // PP1 = MP8_DP128 starves its 264 GB footprint without expansion;
+    // the pipeline rows run at full local bandwidth.
+    let pp1 = fig.cell("PP1", "m=8").unwrap();
+    let pp8 = fig.cell("PP8 1f1b", "m=16").unwrap();
+    assert!(pp1 > 100.0 * pp8, "PP1 {pp1} vs PP8 {pp8}");
+
+    // Optimizer path: same lattice as branches; exact search.
+    let opt = optimizer_for(&spec, &coord).unwrap();
+    let s = opt.search().unwrap();
+    let e = opt.exhaustive().unwrap();
+    // 1 deduped PP1 branch + 3 PP planes x 2 schedules x 3 microbatches.
+    assert_eq!(s.total_points, 1 + 3 * 2 * 3);
+    assert_eq!(s.infeasible, e.infeasible);
+    // The starved PP1 point exceeds the 80 GB node with no expansion
+    // axis: capacity-infeasible, pruned unevaluated (PP2 spills too).
+    assert!(s.infeasible >= 1, "{}", s.infeasible);
+    let best = s.best().unwrap();
+    assert_eq!(best.label, e.best().unwrap().label);
+    assert_eq!(
+        best.total().to_bits(),
+        e.best().unwrap().total().to_bits()
+    );
+    // The argmin is a deep pipeline at the largest microbatch count.
+    assert!(best.label.contains("PP8"), "{}", best.label);
+    assert!(best.label.contains("m16"), "{}", best.label);
+    assert!(best.footprint <= 80e9, "argmin must fit: {}", best.footprint);
+    assert!(best.breakdown.bubble > 0.0);
 }
 
 // ---- spec round-trips -----------------------------------------------------

@@ -51,6 +51,7 @@ fn artifact_matches_native_full_transformer_sweep() {
             ..Default::default()
         };
         let inputs: Vec<_> = Strategy::sweep_bounded(1024, 1, 128)
+            .unwrap()
             .iter()
             .map(|s| {
                 derive_inputs(
@@ -129,6 +130,7 @@ fn all_three_backends_rank_strategies_identically() {
     let rank = |coord: &Coordinator| -> Vec<String> {
         let mut labeled: Vec<(String, f64)> =
             Strategy::sweep_bounded(1024, 1, 128)
+                .unwrap()
                 .iter()
                 .map(|s| {
                     let w = Transformer::t1().build(s).unwrap();
@@ -162,6 +164,7 @@ fn batched_and_single_artifact_paths_agree() {
     let cluster = presets::dgx_a100_1024();
     let opts = EvalOptions::default();
     let inputs: Vec<_> = Strategy::sweep_bounded(1024, 8, 128)
+        .unwrap()
         .iter()
         .map(|s| {
             derive_inputs(
@@ -191,7 +194,9 @@ fn oversized_batches_chunk_correctly() {
     let opts = EvalOptions::default();
     // 100 configs > the largest exported batch (64): forces chunking.
     let base = derive_inputs(
-        &Transformer::t1().build(&Strategy::new(8, 128)).unwrap(),
+        &Transformer::t1()
+            .build(&Strategy::new(8, 128).unwrap())
+            .unwrap(),
         &cluster,
         &opts,
     )
