@@ -7,6 +7,13 @@
 //! checked against over time). `pipeline-transformer` adds a 3D-lattice
 //! point (PP x microbatch x schedule branches) so the trajectory records
 //! how pruning scales with the pipeline axis.
+//!
+//! Thread scaling: the `optimize-transformer` search is additionally
+//! timed at 1, 2, and the host's pool width in lanes
+//! (`optimizer/..._search_t<N>`), after an untimed pass asserting the
+//! outcomes are bit-identical across widths. BENCHMARKS.md's
+//! thread-scaling rule compares the tN/t1 speedup across trajectory
+//! points from the same machine.
 use comet::coordinator::Coordinator;
 use comet::scenario::{optimizer_for, registry};
 use comet::util::bench::{black_box, Bencher};
@@ -67,6 +74,41 @@ fn main() {
             exhaustive.evaluated as f64,
         );
     }
+
+    // ---- thread scaling: the same search at 1 / 2 / host lanes --------
+    let spec = registry::get("optimize-transformer").unwrap();
+    let host = Coordinator::native().threads();
+    // Untimed exactness pass: the outcome must be bit-identical at every
+    // lane count (the parallel driver's headline guarantee; one shared
+    // checker with the in-tree tests).
+    {
+        let coord = Coordinator::native();
+        let opt = optimizer_for(&spec, &coord).unwrap();
+        let seq = opt.search_sequential().unwrap();
+        for lanes in [2usize, host.max(2)] {
+            let par = opt.search_parallel(lanes).unwrap();
+            seq.assert_bit_identical(&par, &format!("t{lanes}"));
+        }
+    }
+    // The coordinator (and its pool threads) is hoisted OUT of the timed
+    // closure: the point is the search's scaling on a persistent pool,
+    // not per-iteration thread spawn/join. The search's leaf fast path
+    // does not consult the eval cache, so a reused coordinator stays
+    // honest work; only the derive cache warms up (identically at every
+    // width, during warmup).
+    let mut widths = vec![1usize, 2];
+    if !widths.contains(&host) {
+        widths.push(host);
+    }
+    for t in widths {
+        let c = Coordinator::native().with_threads(t);
+        let o = optimizer_for(&spec, &c).unwrap();
+        b.bench(&format!("optimizer/optimize-transformer_search_t{t}"), || {
+            black_box(o.search().unwrap());
+        });
+    }
+    b.metric("optimizer/thread_scaling_host_lanes", host as f64);
+
     b.report("bench_optimizer");
 
     // Trajectory point next to the repo-root BENCHMARKS.md (cargo bench

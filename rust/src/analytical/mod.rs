@@ -19,7 +19,7 @@
 //! `pp = 1` slice takes the original code path untouched.
 
 use crate::compute::{em_fraction, gemm_traffic, hybrid_bandwidth};
-use crate::model::inputs::ModelInputs;
+use crate::model::inputs::{LayerRecord, ModelInputs, NodeParams};
 use crate::network::collective_cost;
 
 /// Per-iteration training-time breakdown, seconds (the paper's Fig. 8a
@@ -170,25 +170,40 @@ pub fn pipeline_makespan(u: &[f64], b: &[f64], x: f64, m: usize) -> f64 {
 
 /// Evaluate the analytical cost model over derived inputs.
 pub fn evaluate(inputs: &ModelInputs) -> TrainingBreakdown {
-    let p = &inputs.params;
+    evaluate_parts(&inputs.layers, &inputs.params)
+}
+
+/// Evaluate from borrowed parts — identical math to [`evaluate`], split
+/// so callers that reuse one resolved layer list across many parameter
+/// points (the optimizer's leaf fast path: branch-invariant
+/// [`LayerRecord`]s, per-leaf stack-copied [`NodeParams`]) can evaluate
+/// without building a [`ModelInputs`] per point. Bit-for-bit the same
+/// result as `evaluate` on the assembled inputs.
+pub fn evaluate_parts(
+    layers: &[LayerRecord],
+    p: &NodeParams,
+) -> TrainingBreakdown {
     let frac_em = p
         .em_frac_override
         .unwrap_or_else(|| em_fraction(p.footprint, p.cap_lm));
     let bw_eff = hybrid_bandwidth(p.bw_lm, p.bw_em, frac_em);
     if p.pp <= 1 {
-        evaluate_flat(inputs, bw_eff)
+        evaluate_flat(layers, p, bw_eff)
     } else {
-        evaluate_pipeline(inputs, bw_eff)
+        evaluate_pipeline(layers, p, bw_eff)
     }
 }
 
 /// The original 2D (`pp = 1`) evaluation — bit-for-bit the pre-pipeline
 /// code path; every pinned figure reproduces through here.
-fn evaluate_flat(inputs: &ModelInputs, bw_eff: f64) -> TrainingBreakdown {
-    let p = &inputs.params;
+fn evaluate_flat(
+    layers: &[LayerRecord],
+    p: &NodeParams,
+    bw_eff: f64,
+) -> TrainingBreakdown {
     let mut compute = [0.0f64; 3];
     let mut comm = [0.0f64; 3];
-    for layer in &inputs.layers {
+    for layer in layers {
         for phase in 0..3 {
             let q = &layer.q[phase];
             let traffic = gemm_traffic(q.u, q.v, q.w, p.sram);
@@ -234,8 +249,11 @@ fn evaluate_flat(inputs: &ModelInputs, bw_eff: f64) -> TrainingBreakdown {
 }
 
 /// Per-stage accumulation + the fill–drain schedule composition.
-fn evaluate_pipeline(inputs: &ModelInputs, bw_eff: f64) -> TrainingBreakdown {
-    let p = &inputs.params;
+fn evaluate_pipeline(
+    layers: &[LayerRecord],
+    p: &NodeParams,
+    bw_eff: f64,
+) -> TrainingBreakdown {
     let pp = p.pp;
     let m = p.microbatches.max(1);
     let mf = m as f64;
@@ -244,7 +262,7 @@ fn evaluate_pipeline(inputs: &ModelInputs, bw_eff: f64) -> TrainingBreakdown {
     // flat path, bucketed by the layer's pipeline stage.
     let mut compute = vec![[0.0f64; 3]; pp];
     let mut comm = vec![[0.0f64; 3]; pp];
-    for layer in &inputs.layers {
+    for layer in layers {
         let s = layer.stage.min(pp - 1);
         for phase in 0..3 {
             let q = &layer.q[phase];

@@ -124,6 +124,15 @@ impl Coordinator {
         self.pool.threads()
     }
 
+    /// The coordinator's persistent worker pool. Exposed so subsystems
+    /// that batch their own work — the branch-and-bound optimizer fans
+    /// speculative leaf evaluations out here — can borrow the pool via
+    /// [`WorkerPool::scoped_map`] instead of spawning threads of their
+    /// own.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
     /// Rebuild the coordinator's pool with an explicit width (the old
     /// pool's workers are joined). `Coordinator::native().with_threads(1)`
     /// gives deterministic single-threaded evaluation.

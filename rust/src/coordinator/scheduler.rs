@@ -11,6 +11,13 @@
 //! and runs exactly `t` lanes — width 1 is strictly inline (deterministic
 //! single-threaded execution) and small batches never pay a cross-thread
 //! round-trip.
+//!
+//! Submission is **scoped**: [`WorkerPool::scoped_map`] accepts jobs and
+//! closures that borrow the caller's stack (no `'static` bound), which is
+//! what lets the branch-and-bound optimizer fan its per-batch leaf
+//! evaluations out over the coordinator's pool while borrowing its
+//! per-branch search state. [`WorkerPool::map`] is the owned-jobs
+//! convenience wrapper the batched derive/evaluate paths use.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -23,10 +30,18 @@ trait Task: Send + Sync {
     fn run_worker(&self);
 }
 
-/// One in-flight `map` call: jobs, the mapper, and per-job result slots.
+/// One in-flight `scoped_map` call. The jobs and the mapper live in the
+/// submitting call's scope and are held here as **raw pointers** plus an
+/// owned length — never as references — so a worker that arrives after
+/// the call returned only compares integers (`i >= n`) and touches no
+/// expired borrow; the pointers are dereferenced exclusively for claimed
+/// indices `i < n`, which can only happen while the submitting thread is
+/// still blocked in `scoped_map` (it cannot return before every claimed
+/// job completes).
 struct Batch<T, R> {
-    jobs: Vec<T>,
-    f: Box<dyn Fn(&T) -> R + Send + Sync>,
+    jobs: *const T,
+    n: usize,
+    f: *const (dyn Fn(&T) -> R + Send + Sync),
     /// Next unclaimed job index.
     next: AtomicUsize,
     /// Disjoint per-job result slots. Each slot's lock is touched exactly
@@ -41,6 +56,15 @@ struct Batch<T, R> {
     done_cv: Condvar,
 }
 
+// SAFETY: the raw `jobs`/`f` pointers are dereferenced only for claimed
+// indices `i < n`, i.e. while the submitting thread is blocked in
+// `scoped_map` and the pointed-to jobs/closure are alive. Sharing them
+// across worker threads hands out `&T` (needs `T: Sync`) and moves each
+// `R` into a slot the submitter takes (needs `R: Send`); everything else
+// in the struct is owned sync primitives.
+unsafe impl<T: Sync, R: Send> Send for Batch<T, R> {}
+unsafe impl<T: Sync, R: Send> Sync for Batch<T, R> {}
+
 fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
@@ -51,11 +75,15 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-impl<T: Send + Sync, R: Send> Batch<T, R> {
-    fn new(jobs: Vec<T>, f: Box<dyn Fn(&T) -> R + Send + Sync>) -> Batch<T, R> {
+impl<T: Sync, R: Send> Batch<T, R> {
+    fn new(
+        jobs: &[T],
+        f: &(dyn Fn(&T) -> R + Send + Sync),
+    ) -> Batch<T, R> {
         let n = jobs.len();
         Batch {
-            jobs,
+            jobs: jobs.as_ptr(),
+            n,
             f,
             next: AtomicUsize::new(0),
             slots: (0..n).map(|_| Mutex::new(None)).collect(),
@@ -69,10 +97,20 @@ impl<T: Send + Sync, R: Send> Batch<T, R> {
     fn execute(&self) {
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
-            if i >= self.jobs.len() {
+            if i >= self.n {
+                // Owned integer comparison only: a worker that dequeues
+                // this batch after completion (the submitter may already
+                // have returned) reborrows nothing.
                 break;
             }
-            match catch_unwind(AssertUnwindSafe(|| (self.f)(&self.jobs[i]))) {
+            // SAFETY: `i < n` means the batch is still incomplete, so
+            // the submitting thread is blocked in `scoped_map` and the
+            // jobs slice and closure it lent are alive; `i` is claimed
+            // by exactly one worker, and `&*jobs.add(i)` is a shared
+            // borrow of a `Sync` value.
+            let job = unsafe { &*self.jobs.add(i) };
+            let f = unsafe { &*self.f };
+            match catch_unwind(AssertUnwindSafe(|| f(job))) {
                 Ok(r) => *self.slots[i].lock().unwrap() = Some(r),
                 Err(payload) => {
                     let mut p = self.panic.lock().unwrap();
@@ -90,7 +128,7 @@ impl<T: Send + Sync, R: Send> Batch<T, R> {
     }
 }
 
-impl<T: Send + Sync, R: Send> Task for Batch<T, R> {
+impl<T: Sync, R: Send> Task for Batch<T, R> {
     fn run_worker(&self) {
         self.execute()
     }
@@ -148,9 +186,15 @@ impl WorkerPool {
         self.threads
     }
 
-    /// Map `f` over `jobs`, preserving order. Jobs run concurrently on
-    /// the pool's background workers plus the calling thread; a width-1
-    /// pool executes everything inline on the caller.
+    /// Map `f` over borrowed `jobs`, preserving order, **without**
+    /// requiring `'static` jobs or closures: both may borrow the caller's
+    /// stack (branch states, shared atomics, the optimizer itself). Jobs
+    /// run concurrently on the pool's background workers plus the calling
+    /// thread; a width-1 pool executes everything inline on the caller.
+    ///
+    /// The call does not return until every job has finished, which is
+    /// what makes lending stack data to the persistent workers sound —
+    /// see the `SAFETY` comment inside.
     ///
     /// # Panics
     ///
@@ -158,31 +202,73 @@ impl WorkerPool {
     /// the failing job's index prepended to the payload message. The
     /// remaining jobs still run to completion first (no worker is lost —
     /// the pool stays usable afterwards).
-    pub fn map<T, R>(
+    pub fn scoped_map<T, R>(
         &self,
-        jobs: Vec<T>,
-        f: impl Fn(&T) -> R + Send + Sync + 'static,
+        jobs: &[T],
+        f: impl Fn(&T) -> R + Send + Sync,
     ) -> Vec<R>
     where
-        T: Send + Sync + 'static,
-        R: Send + 'static,
+        T: Sync,
+        R: Send,
+    {
+        self.scoped_map_bounded(jobs, usize::MAX, f)
+    }
+
+    /// [`WorkerPool::scoped_map`] with the evaluation concurrency capped
+    /// at `lanes` total (the submitting thread counts as one): at most
+    /// `lanes - 1` background workers are notified. This is how the
+    /// optimizer's `threads` knob genuinely bounds CPU use instead of
+    /// merely sizing its batches — `lanes >= ` the pool width is the
+    /// uncapped behavior.
+    pub fn scoped_map_bounded<T, R>(
+        &self,
+        jobs: &[T],
+        lanes: usize,
+        f: impl Fn(&T) -> R + Send + Sync,
+    ) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
     {
         let n = jobs.len();
         if n == 0 {
             return Vec::new();
         }
-        let batch = Arc::new(Batch::new(jobs, Box::new(f)));
+        let batch = Arc::new(Batch::new(jobs, &f));
         // Fan out to at most n-1 workers (the submitter claims jobs too,
         // and a single-job batch never leaves the calling thread),
-        // starting at a rotating offset so concurrent small batches
-        // spread over different workers.
-        let fanout = (n - 1).min(self.senders.len());
+        // bounded by the requested lanes, starting at a rotating offset
+        // so concurrent small batches spread over different workers.
+        let fanout = (n - 1)
+            .min(self.senders.len())
+            .min(lanes.saturating_sub(1));
         if fanout > 0 {
+            // SAFETY: the workers' channel is typed `Arc<dyn Task>`
+            // (`'static`), but this batch points into the caller's
+            // scope, so its lifetime bound is erased here. Sound because:
+            //  * This call blocks below until `remaining == 0`, i.e.
+            //    until every job has been claimed AND finished; the
+            //    cursor `next` only grows, so a worker arriving later
+            //    can never obtain an index below `n` — `execute()` then
+            //    only compares owned integers and dereferences nothing.
+            //    The `jobs`/`f` raw pointers are therefore dereferenced
+            //    exclusively while this frame (which owns `f` and
+            //    borrows `jobs`) is still blocked here.
+            //  * A worker that drops its `Arc` after this call returned
+            //    drops only owned handshake state: raw pointers (no-op),
+            //    `None` result slots (the caller takes every `Some`
+            //    before returning, including on the panic path), and
+            //    plain atomics — no drop glue can touch the expired
+            //    scope.
+            let task: Arc<dyn Task + '_> = batch.clone();
+            // Raw-pointer cast that only widens the trait object's
+            // lifetime bound (same principal trait, same vtable).
+            let raw = Arc::into_raw(task) as *const (dyn Task + 'static);
+            let task: Arc<dyn Task> = unsafe { Arc::from_raw(raw) };
             let start = self.next_worker.fetch_add(fanout, Ordering::Relaxed);
             for j in 0..fanout {
                 let tx = &self.senders[(start + j) % self.senders.len()];
-                let task: Arc<dyn Task> = batch.clone();
-                let _ = tx.send(task);
+                let _ = tx.send(task.clone());
             }
         }
         batch.execute();
@@ -193,14 +279,37 @@ impl WorkerPool {
             done = batch.done_cv.wait(done).unwrap();
         }
         drop(done);
-        if let Some((i, msg)) = batch.panic.lock().unwrap().take() {
-            panic!("worker pool job {i} panicked: {msg}");
-        }
-        batch
+        // Drain every slot *before* the panic check so that even on the
+        // panic path no `R` is left for a worker's late `Arc` drop.
+        let results: Vec<Option<R>> = batch
             .slots
             .iter()
-            .map(|s| s.lock().unwrap().take().expect("pool slot filled"))
+            .map(|s| s.lock().unwrap().take())
+            .collect();
+        if let Some((i, msg)) = batch.panic.lock().unwrap().take() {
+            drop(results);
+            panic!("worker pool job {i} panicked: {msg}");
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("pool slot filled"))
             .collect()
+    }
+
+    /// Map `f` over owned `jobs`, preserving order (the batched
+    /// derive/evaluate entry point). Delegates to
+    /// [`WorkerPool::scoped_map`]; see there for the execution and panic
+    /// semantics.
+    pub fn map<T, R>(
+        &self,
+        jobs: Vec<T>,
+        f: impl Fn(&T) -> R + Send + Sync,
+    ) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+    {
+        self.scoped_map(&jobs, f)
     }
 }
 
@@ -285,6 +394,51 @@ mod tests {
         let pool = WorkerPool::new(2);
         let out = pool.map(vec!["a", "bb", "ccc"], |s| s.to_string());
         assert_eq!(out, vec!["a", "bb", "ccc"]);
+    }
+
+    #[test]
+    fn scoped_map_borrows_caller_state() {
+        // The whole point of scoped_map: jobs AND closure borrow the
+        // caller's stack — no 'static, no Arc plumbing.
+        let pool = WorkerPool::new(4);
+        let table: Vec<u64> = (0..100).map(|i| i * i).collect();
+        let jobs: Vec<usize> = (0..100).collect();
+        let out = pool.scoped_map(&jobs, |&i| table[i] + 1);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, table[i] + 1);
+        }
+    }
+
+    #[test]
+    fn scoped_map_shares_atomics_across_lanes() {
+        use std::sync::atomic::AtomicU64;
+        let pool = WorkerPool::new(4);
+        let sum = AtomicU64::new(0);
+        let jobs: Vec<u64> = (0..256).collect();
+        let out = pool.scoped_map(&jobs, |&x| {
+            sum.fetch_add(x, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(out.len(), 256);
+        assert_eq!(sum.load(Ordering::Relaxed), 255 * 256 / 2);
+    }
+
+    #[test]
+    fn bounded_lanes_cap_worker_fanout() {
+        use std::collections::HashSet;
+        let pool = WorkerPool::new(8);
+        let ids = Mutex::new(HashSet::new());
+        let jobs: Vec<u32> = (0..64).collect();
+        pool.scoped_map_bounded(&jobs, 2, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        assert!(ids.lock().unwrap().len() <= 2, "lanes=2 must cap fan-out");
+        // lanes = 1 stays strictly on the submitting thread.
+        let main_id = std::thread::current().id();
+        let only = pool
+            .scoped_map_bounded(&jobs, 1, |_| std::thread::current().id());
+        assert!(only.iter().all(|&id| id == main_id));
     }
 
     #[test]

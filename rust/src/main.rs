@@ -2,16 +2,21 @@
 //! workload/config inspection, and cross-backend validation.
 //!
 //! ```text
-//! comet scenario <run FILE-or-NAME | list | show NAME | export NAME>
+//! comet scenario <run FILE-or-NAME.. | list | show NAME | export NAME>
 //!       [--backend native|des|artifact|auto] [--out-dir DIR] [--out FILE]
-//!       [--verbose]
+//!       [--json] [--verbose]
+//!       (run accepts several targets; they share one coordinator, so
+//!        the derive cache carries across the studies)
 //! comet optimize [SCENARIO] [--workload W] [--cluster PRESET] [--backend B]
 //!       [--min-mp N] [--max-mp N] [--max-pp N] [--microbatches M]
 //!       [--schedule gpipe|1f1b] [--em-bandwidths GB/s,..]
 //!       [--em-capacities GB,..] [--collectives ring,hierarchical]
-//!       [--zero-stages 0,2,..] [--top-k N] [--infinite-memory]
+//!       [--zero-stages 0,2,..] [--top-k N] [--threads N]
+//!       [--infinite-memory] [--json]
 //!       (SCENARIO = an optimize/pipeline builtin name or TOML path,
-//!        e.g. `comet optimize pipeline-transformer`)
+//!        e.g. `comet optimize pipeline-transformer`; --threads N sets
+//!        the search's evaluation lanes — the result is bit-identical
+//!        at every N)
 //! comet figure <fig6|fig8a|fig8b|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|all>
 //!       [--backend native|des|artifact] [--out-dir DIR] [--csv]
 //! comet sweep   [--cluster PRESET] [--backend B] [--infinite-memory]
@@ -33,8 +38,8 @@ use comet::model::inputs::{derive_inputs, EvalOptions};
 use comet::parallel::{footprint_per_node, Strategy, ZeroStage};
 use comet::report::FigureData;
 use comet::scenario::{
-    self, registry, OptionsSpec, OutputFormat, OutputSpec, ScenarioSpec,
-    StrategyAxis, Study, WorkloadSpec,
+    self, registry, BackendSpec, OptionsSpec, OutputFormat, OutputSpec,
+    ScenarioSpec, StrategyAxis, Study, WorkloadSpec,
 };
 use comet::util::units::{fmt_bytes, fmt_secs};
 use comet::workload::dlrm::Dlrm;
@@ -141,13 +146,21 @@ fn workload_for(args: &Args) -> Result<Workload> {
 }
 
 fn emit_figure(f: &FigureData, args: &Args) -> Result<()> {
-    println!("{}", f.to_table());
+    if args.has("json") {
+        // Machine-readable stdout (CI byte-diffs thread counts on it);
+        // wins over the table and --csv prints, not over --out-dir.
+        println!("{}", f.to_json().to_string_pretty());
+    } else {
+        println!("{}", f.to_table());
+    }
     if let Some(dir) = args.flag("out-dir") {
         std::fs::create_dir_all(dir)?;
         let path = Path::new(dir).join(format!("{}.csv", f.id));
         std::fs::write(&path, f.to_csv())?;
-        println!("  wrote {}", path.display());
-    } else if args.has("csv") {
+        if !args.has("json") {
+            println!("  wrote {}", path.display());
+        }
+    } else if args.has("csv") && !args.has("json") {
         println!("{}", f.to_csv());
     }
     Ok(())
@@ -377,9 +390,26 @@ fn csv_f64(s: &str, flag: &str) -> Result<Vec<f64>> {
 /// TOML path), the spec's own lattice is searched instead — the target
 /// must be an `optimize` or `pipeline` study.
 fn cmd_optimize(args: &Args) -> Result<()> {
-    let coord = coordinator_for(args)?;
+    // --threads N: evaluation lanes for the search (and the pool width
+    // backing them). The outcome is bit-identical at every N — CI diffs
+    // the --threads 1 and --threads 4 JSON byte-for-byte.
+    let threads = match args.flag("threads") {
+        None => None,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => {
+                return Err(Error::Config(format!(
+                    "--threads: bad value '{v}' (integer >= 1)"
+                )))
+            }
+        },
+    };
+    let mut coord = coordinator_for(args)?;
+    if let Some(n) = threads {
+        coord = coord.with_threads(n);
+    }
     if let Some(target) = args.positional.get(1) {
-        let spec = scenario_spec_for(target)?;
+        let mut spec = scenario_spec_for(target)?;
         if !matches!(
             spec.study,
             Study::Optimize { .. } | Study::Pipeline { .. }
@@ -390,6 +420,12 @@ fn cmd_optimize(args: &Args) -> Result<()> {
                 spec.name,
                 spec.study.kind()
             )));
+        }
+        // The flag outranks the spec's own `threads` study option.
+        if let (Some(n), Study::Optimize { threads: t, .. }) =
+            (threads, &mut spec.study)
+        {
+            *t = Some(n);
         }
         let (fig, out) = scenario::run_optimize(&spec, &coord)?;
         emit_figure(&fig, args)?;
@@ -482,6 +518,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             }
             k => k,
         },
+        threads,
     };
     let spec = ScenarioSpec {
         name: "optimize".into(),
@@ -549,71 +586,103 @@ fn scenario_spec_for(target: &str) -> Result<ScenarioSpec> {
 fn cmd_scenario(args: &Args) -> Result<()> {
     match args.positional.get(1).map(String::as_str) {
         Some("run") => {
-            let target = args.positional.get(2).ok_or_else(|| {
-                Error::Config("scenario run <FILE|NAME>".into())
-            })?;
-            let spec = scenario_spec_for(target)?;
-            // --backend overrides the spec's choice.
-            let coord = if args.flag("backend").is_some() {
-                coordinator_for(args)?
-            } else {
-                spec.options.backend.coordinator()?
-            };
-            // Optimize studies keep their search report so --verbose can
-            // surface evaluated/pruned counts without re-running.
-            let (fig, search) = if matches!(spec.study, Study::Optimize { .. })
-            {
-                let (fig, out) = scenario::run_optimize(&spec, &coord)?;
-                (fig, Some(out))
-            } else {
-                (scenario::run(&spec, &coord)?, None)
-            };
-            match spec.output.format {
-                OutputFormat::Table => println!("{}", fig.to_table()),
-                OutputFormat::Csv => println!("{}", fig.to_csv()),
-                OutputFormat::Json => {
-                    println!("{}", fig.to_json().to_string_pretty())
-                }
+            let targets = &args.positional[2..];
+            if targets.is_empty() {
+                return Err(Error::Config(
+                    "scenario run <FILE|NAME>..".into(),
+                ));
             }
-            if let Some(dir) = args.flag("out-dir") {
-                std::fs::create_dir_all(dir)?;
-                // Persist in the spec's declared format (table output is
-                // persisted as plot-ready CSV, like `comet figure`).
-                let (ext, payload) = match spec.output.format {
-                    OutputFormat::Table | OutputFormat::Csv => {
-                        ("csv", fig.to_csv())
-                    }
-                    OutputFormat::Json => {
-                        ("json", fig.to_json().to_string_pretty())
+            // All targets of one invocation share coordinators (one per
+            // distinct backend, built lazily): the derive cache — and
+            // its decompositions — carries across the studies, so a
+            // multi-study run decomposes each distinct workload once.
+            // --backend overrides every spec's choice.
+            let flag_coord = if args.flag("backend").is_some() {
+                Some(coordinator_for(args)?)
+            } else {
+                None
+            };
+            let mut coords: Vec<(BackendSpec, Coordinator)> = Vec::new();
+            for target in targets {
+                let spec = scenario_spec_for(target)?;
+                let coord: &Coordinator = match &flag_coord {
+                    Some(c) => c,
+                    None => {
+                        let bs = spec.options.backend;
+                        if !coords.iter().any(|(b, _)| *b == bs) {
+                            coords.push((bs, bs.coordinator()?));
+                        }
+                        &coords.iter().find(|(b, _)| *b == bs).unwrap().1
                     }
                 };
-                let path = Path::new(dir).join(format!("{}.{ext}", fig.id));
-                std::fs::write(&path, payload)?;
-                println!("  wrote {}", path.display());
-            }
-            let (hits, misses) = coord.cache_stats();
-            eprintln!(
-                "[comet] scenario '{}' backend={:?} cache {hits} hits / \
-                 {misses} misses",
-                spec.name,
-                coord.backend()
-            );
-            if args.has("verbose") {
-                let (dh, dm) = coord.derive_cache_stats();
+                // Optimize studies keep their search report so --verbose
+                // can surface evaluated/pruned counts without re-running.
+                let (fig, search) =
+                    if matches!(spec.study, Study::Optimize { .. }) {
+                        let (fig, out) =
+                            scenario::run_optimize(&spec, coord)?;
+                        (fig, Some(out))
+                    } else {
+                        (scenario::run(&spec, coord)?, None)
+                    };
+                // --json overrides the spec's declared output format.
+                let format = if args.has("json") {
+                    OutputFormat::Json
+                } else {
+                    spec.output.format
+                };
+                match format {
+                    OutputFormat::Table => println!("{}", fig.to_table()),
+                    OutputFormat::Csv => println!("{}", fig.to_csv()),
+                    OutputFormat::Json => {
+                        println!("{}", fig.to_json().to_string_pretty())
+                    }
+                }
+                if let Some(dir) = args.flag("out-dir") {
+                    std::fs::create_dir_all(dir)?;
+                    // Persist in the effective format (table output is
+                    // persisted as plot-ready CSV, like `comet figure`).
+                    let (ext, payload) = match format {
+                        OutputFormat::Table | OutputFormat::Csv => {
+                            ("csv", fig.to_csv())
+                        }
+                        OutputFormat::Json => {
+                            ("json", fig.to_json().to_string_pretty())
+                        }
+                    };
+                    let path =
+                        Path::new(dir).join(format!("{}.{ext}", fig.id));
+                    std::fs::write(&path, payload)?;
+                    if !args.has("json") {
+                        // Keep --json stdout pure (byte-diffable) JSON.
+                        println!("  wrote {}", path.display());
+                    }
+                }
+                let (hits, misses) = coord.cache_stats();
                 eprintln!(
-                    "[comet] derive cache {dh} hits / {dm} misses \
-                     ({dm} workload decompositions)"
+                    "[comet] scenario '{}' backend={:?} cache {hits} hits / \
+                     {misses} misses",
+                    spec.name,
+                    coord.backend()
                 );
-                if let Some(out) = &search {
+                if args.has("verbose") {
+                    let (dh, dm) = coord.derive_cache_stats();
                     eprintln!(
-                        "[comet] optimizer: evaluated {}/{} points, {} \
-                         pruned by bound, {} infeasible, frontier {}",
-                        out.evaluated,
-                        out.total_points,
-                        out.pruned,
-                        out.infeasible,
-                        out.frontier.len()
+                        "[comet] derive cache {dh} hits / {dm} misses \
+                         ({dm} workload decompositions; cumulative across \
+                         this run's studies)"
                     );
+                    if let Some(out) = &search {
+                        eprintln!(
+                            "[comet] optimizer: evaluated {}/{} points, {} \
+                             pruned by bound, {} infeasible, frontier {}",
+                            out.evaluated,
+                            out.total_points,
+                            out.pruned,
+                            out.infeasible,
+                            out.frontier.len()
+                        );
+                    }
                 }
             }
             Ok(())

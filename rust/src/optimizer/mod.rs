@@ -32,13 +32,41 @@
 //! candidates. [`Optimizer::exhaustive`] evaluates the full grid through
 //! the batched path and is both the testing oracle and the
 //! `bench_optimizer` comparison baseline.
+//!
+//! # Parallel search
+//!
+//! [`Optimizer::search`] runs the branch-and-bound across the
+//! coordinator's [`crate::coordinator::WorkerPool`] **without giving up
+//! exactness**: the shared best-first frontier feeds batches of
+//! speculative leaves to the pool, workers read an atomic incumbent
+//! (monotonically tightening pruning threshold) before evaluating and
+//! CAS it down after, and the results are merged back *deterministically*
+//! in the frontier's canonical (bound, sequence) order by replaying the
+//! sequential driver's incumbent updates. A speculative leaf the
+//! sequential driver would never have reached is discarded; a leaf a
+//! worker skipped (its bound lost to a mid-batch incumbent) but that the
+//! replay does reach is evaluated lazily at merge time. The resulting
+//! [`Outcome`] — argmin, top-k, frontier, and the
+//! evaluated/pruned/infeasible counters — is therefore **bit-identical
+//! at every thread count** to [`Optimizer::search_sequential`], the
+//! in-tree equivalence oracle (pinned by `tests/properties.rs` at 1, 2,
+//! and 8 lanes).
+//!
+//! Each leaf evaluation takes a zero-allocation fast path: the
+//! branch-invariant resolved inputs (layer records, node parameters) are
+//! computed once per branch during preparation, and a leaf only
+//! stack-copies the parameter block, patches its two leaf-dependent
+//! fields (expanded-memory bandwidth, collective implementation), and
+//! calls [`crate::analytical::evaluate_parts`] — no per-point heap
+//! allocation, no `ModelInputs` rebuild.
 
 mod bound;
 
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::analytical::TrainingBreakdown;
+use crate::analytical::{evaluate_parts, TrainingBreakdown};
 use crate::compute::{em_fraction, hybrid_bandwidth};
 use crate::config::ClusterConfig;
 use crate::coordinator::{Backend, Coordinator};
@@ -184,7 +212,7 @@ impl Candidate {
 pub struct Outcome {
     /// The best `top_k` candidates, ascending by (total, lattice index);
     /// `top[0]` is the argmin. Identical between [`Optimizer::search`]
-    /// and [`Optimizer::exhaustive`].
+    /// (at any thread count) and [`Optimizer::exhaustive`].
     pub top: Vec<Candidate>,
     /// Pareto frontier of the *evaluated* candidates in (compute,
     /// exposed communication), ascending compute. Under search, subtrees
@@ -206,15 +234,80 @@ impl Outcome {
     pub fn best(&self) -> Option<&Candidate> {
         self.top.first()
     }
+
+    /// Test/bench support: assert that every result field of two
+    /// outcomes is identical — counters, top-k (label, lattice index,
+    /// full breakdown by bit pattern, bound, footprint), and frontier.
+    /// Panics with `ctx` on the first difference. One checker shared by
+    /// the unit tests, the integration tests, and `bench_optimizer`, so
+    /// their strictness cannot drift apart. Hidden from docs — not a
+    /// stability surface.
+    #[doc(hidden)]
+    pub fn assert_bit_identical(&self, other: &Outcome, ctx: &str) {
+        assert_eq!(self.evaluated, other.evaluated, "{ctx}: evaluated");
+        assert_eq!(self.pruned, other.pruned, "{ctx}: pruned");
+        assert_eq!(self.infeasible, other.infeasible, "{ctx}: infeasible");
+        assert_eq!(
+            self.total_points, other.total_points,
+            "{ctx}: total_points"
+        );
+        let check = |which: &str, a: &[Candidate], b: &[Candidate]| {
+            assert_eq!(a.len(), b.len(), "{ctx}: {which} length");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.label, y.label, "{ctx}: {which}");
+                assert_eq!(
+                    x.point.index, y.point.index,
+                    "{ctx}: {which} {}",
+                    x.label
+                );
+                assert_eq!(
+                    x.lower_bound.to_bits(),
+                    y.lower_bound.to_bits(),
+                    "{ctx}: {which} {} bound",
+                    x.label
+                );
+                assert_eq!(
+                    x.footprint.to_bits(),
+                    y.footprint.to_bits(),
+                    "{ctx}: {which} {} footprint",
+                    x.label
+                );
+                let (ba, bb) = (&x.breakdown, &y.breakdown);
+                for (i, (va, vb)) in ba
+                    .as_array()
+                    .iter()
+                    .chain([&ba.bubble, &ba.pp_exposed_comm])
+                    .zip(bb.as_array().iter().chain([&bb.bubble, &bb.pp_exposed_comm]))
+                    .enumerate()
+                {
+                    assert_eq!(
+                        va.to_bits(),
+                        vb.to_bits(),
+                        "{ctx}: {which} {} component {i}",
+                        x.label
+                    );
+                }
+            }
+        };
+        check("top", &self.top, &other.top);
+        check("frontier", &self.frontier, &other.frontier);
+    }
 }
 
 /// Per-branch precomputed search state.
 struct BranchState {
     dec: Arc<WorkloadDecomposition>,
+    /// Branch-invariant resolved inputs at the *base* cluster: the layer
+    /// records and every parameter except the two leaf axes
+    /// (expanded-memory bandwidth, collective implementation). A leaf
+    /// evaluation stack-copies `template.params`, patches those two
+    /// fields, and calls [`evaluate_parts`] — the zero-allocation fast
+    /// path. `tests` pin it bit-for-bit against the per-leaf
+    /// `resolve_inputs` oracle [`Optimizer::exhaustive`] uses.
+    template: ModelInputs,
     /// The footprint evaluation will actually use for this branch's
-    /// points: the branch override, the base-options override, or the
-    /// decomposition's (pipeline-aware) footprint at the branch stage —
-    /// the same precedence `resolve_inputs` applies.
+    /// points (taken from the template, so pruning and evaluation cannot
+    /// drift).
     footprint: f64,
     /// Expanded-memory traffic fraction of this branch's footprint
     /// (mirrors the backend's `em_fraction` resolution, including the
@@ -234,18 +327,24 @@ struct BranchState {
     infeasible: usize,
 }
 
-/// A fully specified, feasible leaf awaiting evaluation.
+/// A fully specified, feasible leaf awaiting evaluation. `Copy` — leaf
+/// expansion allocates nothing; everything leaf-dependent that
+/// evaluation needs is the point itself plus the effective
+/// expanded-memory bandwidth.
+#[derive(Clone, Copy)]
 struct Leaf {
     point: DesignPoint,
-    cluster: ClusterConfig,
-    opts: EvalOptions,
+    /// Expanded-memory bandwidth the evaluation will see: the axis value
+    /// when the point attaches a spill-backed expansion, else the base
+    /// node's own (mirrors `leaf_cluster` + `resolve_inputs` exactly).
+    bw_em: f64,
     bound: f64,
 }
 
 /// A heap node: an unexpanded branch subtree or a leaf.
 enum NodeRef {
     Branch(usize),
-    Leaf(Box<Leaf>),
+    Leaf(Leaf),
 }
 
 /// Min-heap entry ordered by (bound, insertion sequence).
@@ -284,8 +383,15 @@ impl Ord for Entry {
 /// need no margin.
 const BRANCH_BOUND_MARGIN: f64 = 1.0 - 1e-9;
 
+/// Speculative leaves fetched per pool lane per batch. Larger batches
+/// amortize the merge barrier but speculate further past the point where
+/// the sequential driver would have stopped; the merge replay discards
+/// the overshoot, so this constant trades wasted work against
+/// synchronization — it cannot affect the result.
+const LEAVES_PER_LANE: usize = 4;
+
 /// The branch-and-bound co-design optimizer. Borrows a [`Coordinator`]
-/// for (cached, backend-agnostic) evaluation.
+/// for (cached, backend-agnostic) evaluation and for its worker pool.
 pub struct Optimizer<'a> {
     coord: &'a Coordinator,
     cluster: ClusterConfig,
@@ -293,6 +399,9 @@ pub struct Optimizer<'a> {
     branches: Vec<Branch>,
     axes: AxisSpec,
     top_k: usize,
+    /// Evaluation lanes for [`Optimizer::search`] (`None` = the
+    /// coordinator's pool width; `1` = the sequential driver).
+    threads: Option<usize>,
 }
 
 impl<'a> Optimizer<'a> {
@@ -327,6 +436,26 @@ impl<'a> Optimizer<'a> {
                     .into(),
             ));
         }
+        // Degenerate axis values would previously surface as per-leaf
+        // `cluster.validate()` errors; the template fast path never
+        // builds those clusters, so reject them up front — search and
+        // exhaustive must fail identically.
+        for bw in axes.em_bandwidths.iter().flatten() {
+            if !bw.is_finite() || *bw <= 0.0 {
+                return Err(Error::Config(format!(
+                    "optimizer: expanded-memory bandwidth must be positive \
+                     and finite, got {bw}"
+                )));
+            }
+        }
+        for cap in axes.em_capacities.iter().flatten() {
+            if !cap.is_finite() || *cap < 0.0 {
+                return Err(Error::Config(format!(
+                    "optimizer: expanded-memory capacity must be \
+                     non-negative and finite, got {cap}"
+                )));
+            }
+        }
         Ok(Optimizer {
             coord,
             cluster,
@@ -334,12 +463,25 @@ impl<'a> Optimizer<'a> {
             branches,
             axes,
             top_k: 5,
+            threads: None,
         })
     }
 
     /// Keep the best `k` configurations (default 5; clamped to >= 1).
     pub fn with_top_k(mut self, k: usize) -> Optimizer<'a> {
         self.top_k = k.max(1);
+        self
+    }
+
+    /// Run [`Optimizer::search`] with at most `threads` evaluation lanes
+    /// (clamped to >= 1 and, effectively, to the coordinator's pool
+    /// width; `1` selects the sequential driver). Both the speculation
+    /// batch size and the pool fan-out are bounded by it, so the knob
+    /// genuinely caps CPU use. The default is the coordinator's pool
+    /// width. The outcome is bit-identical at every width — this knob
+    /// trades wall-clock only.
+    pub fn with_threads(mut self, threads: usize) -> Optimizer<'a> {
+        self.threads = Some(threads.max(1));
         self
     }
 
@@ -369,8 +511,21 @@ impl<'a> Optimizer<'a> {
         }
     }
 
+    /// Expanded-memory capacity a bandwidth-axis point attaches, bytes:
+    /// the explicit axis capacity, or the branch's spill when sized to
+    /// it. Zero disables attachment. The single predicate behind both
+    /// [`Optimizer::exhaustive`]'s leaf clusters and the search fast
+    /// path's `bw_em` patch — they cannot drift.
+    fn expansion_need(&self, footprint: f64, cap: Option<f64>) -> f64 {
+        cap.unwrap_or_else(|| {
+            (footprint - self.cluster.node.local.capacity).max(0.0)
+        })
+    }
+
     /// The point's cluster: expanded memory attached exactly the way
-    /// [`crate::coordinator::GridSweep::specs`] does it.
+    /// [`crate::coordinator::GridSweep::specs`] does it. Used by the
+    /// [`Optimizer::exhaustive`] oracle path; the search drivers use the
+    /// equivalent `bw_em` patch on the branch template instead.
     fn leaf_cluster(
         &self,
         footprint: f64,
@@ -380,10 +535,7 @@ impl<'a> Optimizer<'a> {
         match bw {
             None => self.cluster.clone(),
             Some(bw) => {
-                let spill = (footprint
-                    - self.cluster.node.local.capacity)
-                    .max(0.0);
-                let need = cap.unwrap_or(spill);
+                let need = self.expansion_need(footprint, cap);
                 if need > 0.0 {
                     self.cluster
                         .with_node(self.cluster.node.with_expanded(need, bw))
@@ -391,6 +543,23 @@ impl<'a> Optimizer<'a> {
                     self.cluster.clone()
                 }
             }
+        }
+    }
+
+    /// The expanded-memory bandwidth a point's evaluation sees —
+    /// `leaf_cluster`'s node without building it: the axis bandwidth iff
+    /// the point actually attaches an expansion (positive capacity need),
+    /// else the base node's own.
+    fn leaf_bw_em(
+        &self,
+        footprint: f64,
+        bw: Option<f64>,
+        cap: Option<f64>,
+    ) -> f64 {
+        match bw {
+            None => self.cluster.node.expanded.bandwidth,
+            Some(bw) if self.expansion_need(footprint, cap) > 0.0 => bw,
+            Some(_) => self.cluster.node.expanded.bandwidth,
         }
     }
 
@@ -437,7 +606,35 @@ impl<'a> Optimizer<'a> {
         }
     }
 
-    fn prepare(&self) -> Vec<BranchState> {
+    /// Per-branch search state: bounds, exact blocking collectives, and
+    /// the branch-invariant evaluation template. Stage 1 (decomposition)
+    /// runs serially through the coordinator's derive cache — each
+    /// distinct workload decomposes exactly once, deterministically —
+    /// and the per-branch state computation fans out over the pool
+    /// (pure per branch, order preserved), bounded by the driver's lane
+    /// count so a `threads` cap applies to preparation too.
+    fn prepare(&self, lanes: usize) -> Result<Vec<BranchState>> {
+        let decs: Vec<Arc<WorkloadDecomposition>> = self
+            .branches
+            .iter()
+            .map(|b| self.coord.decomposition(&b.workload))
+            .collect();
+        let idx: Vec<usize> = (0..self.branches.len()).collect();
+        self.coord
+            .pool()
+            .scoped_map_bounded(&idx, lanes, |&i| {
+                self.branch_state(i, decs[i].clone())
+            })
+            .into_iter()
+            .collect()
+    }
+
+    fn branch_state(
+        &self,
+        bi: usize,
+        dec: Arc<WorkloadDecomposition>,
+    ) -> Result<BranchState> {
+        let b = &self.branches[bi];
         let node = &self.cluster.node;
         let view = self.cluster.two_level();
         // Best expanded-memory bandwidth any point can reach. The base
@@ -452,121 +649,117 @@ impl<'a> Optimizer<'a> {
             .iter()
             .map(|b| b.unwrap_or(0.0))
             .fold(node.expanded.bandwidth, f64::max);
-        self.branches
+        let pipeline = dec.pp > 1;
+        let m = if pipeline {
+            b.microbatches.unwrap_or(self.opts.microbatches).max(1)
+        } else {
+            1
+        };
+        // The branch-invariant half of every leaf's inputs, resolved
+        // once: the collective axis is patched per leaf, so any entry
+        // serves as the template's placeholder.
+        let template = resolve_inputs(
+            &dec,
+            &self.cluster,
+            &self.leaf_opts(b, self.axes.collectives[0]),
+        )?;
+        // The footprint evaluation will actually use (same precedence
+        // `resolve_inputs` applies — taken from the template so the
+        // feasibility rule and the evaluation cannot drift).
+        let footprint = template.params.footprint;
+        let frac = self.branch_frac(footprint);
+        let x = if pipeline {
+            let boundary =
+                dec.boundary_bytes.iter().copied().fold(0.0, f64::max);
+            // Same boundary-link classification the derive layer
+            // uses (one shared predicate, no drift).
+            let crosses = Strategy {
+                mp: dec.mp,
+                dp: dec.dp,
+                pp: dec.pp,
+            }
+            .pp_crosses_pods(view.pod_size);
+            let bw_b = if crosses { view.bw_inter } else { view.bw_intra };
+            (boundary / m as f64) / bw_b.max(1.0) + self.cluster.link_latency
+        } else {
+            0.0
+        };
+        let comm: Vec<Vec<(f64, f64)>> = self
+            .axes
+            .collectives
             .iter()
-            .map(|b| {
-                let dec = self.coord.decomposition(&b.workload);
-                let pipeline = dec.pp > 1;
-                let m = if pipeline {
-                    b.microbatches.unwrap_or(self.opts.microbatches).max(1)
-                } else {
-                    1
-                };
-                let sched = b.schedule.unwrap_or(self.opts.pipe_schedule);
-                let footprint = b
-                    .footprint_override
-                    .or(self.opts.footprint_override)
-                    .unwrap_or_else(|| dec.footprint(b.stage, sched, m));
-                let frac = self.branch_frac(footprint);
-                let x = if pipeline {
-                    let boundary = dec
-                        .boundary_bytes
-                        .iter()
-                        .copied()
-                        .fold(0.0, f64::max);
-                    // Same boundary-link classification the derive layer
-                    // uses (one shared predicate, no drift).
-                    let crosses = Strategy {
-                        mp: dec.mp,
-                        dp: dec.dp,
-                        pp: dec.pp,
-                    }
-                    .pp_crosses_pods(view.pod_size);
-                    let bw_b =
-                        if crosses { view.bw_inter } else { view.bw_intra };
-                    (boundary / m as f64) / bw_b.max(1.0)
-                        + self.cluster.link_latency
-                } else {
-                    0.0
-                };
-                let comm: Vec<Vec<(f64, f64)>> = self
-                    .axes
-                    .collectives
-                    .iter()
-                    .map(|&ci| {
-                        if pipeline {
-                            bound::stage_blocking_comm_times(
-                                &dec,
-                                view.pod_size,
-                                view.bw_intra,
-                                view.bw_inter,
-                                self.cluster.link_latency,
-                                ci,
-                            )
-                        } else {
-                            vec![bound::blocking_comm_times(
-                                &dec,
-                                view.pod_size,
-                                view.bw_intra,
-                                view.bw_inter,
-                                self.cluster.link_latency,
-                                ci,
-                            )]
-                        }
-                    })
-                    .collect();
-                let bw_best =
-                    hybrid_bandwidth(node.local.bandwidth, bw_em_best, frac);
-                let bound = if pipeline {
-                    let compute = bound::stage_compute_times(
+            .map(|&ci| {
+                if pipeline {
+                    bound::stage_blocking_comm_times(
                         &dec,
-                        node.perf_peak,
-                        node.sram,
-                        bw_best,
-                    );
-                    comm.iter()
-                        .map(|c| bound::assemble_pipeline(&compute, c, m, x))
-                        .fold(f64::INFINITY, f64::min)
-                        * BRANCH_BOUND_MARGIN
+                        view.pod_size,
+                        view.bw_intra,
+                        view.bw_inter,
+                        self.cluster.link_latency,
+                        ci,
+                    )
                 } else {
-                    let compute = bound::compute_times(
+                    vec![bound::blocking_comm_times(
                         &dec,
-                        node.perf_peak,
-                        node.sram,
-                        bw_best,
-                    );
-                    let comm_min = comm
-                        .iter()
-                        .map(|c| c[0].0 + c[0].1)
-                        .fold(f64::INFINITY, f64::min);
-                    (compute[0] + compute[1] + compute[2] + comm_min)
-                        * BRANCH_BOUND_MARGIN
-                };
-                let mut infeasible = 0;
-                for &bw in &self.axes.em_bandwidths {
-                    for &cap in &self.axes.em_capacities {
-                        if footprint > self.point_capacity(bw, cap) {
-                            infeasible += self.axes.collectives.len();
-                        }
-                    }
-                }
-                BranchState {
-                    dec,
-                    footprint,
-                    frac,
-                    comm,
-                    m,
-                    x,
-                    bound,
-                    infeasible,
+                        view.pod_size,
+                        view.bw_intra,
+                        view.bw_inter,
+                        self.cluster.link_latency,
+                        ci,
+                    )]
                 }
             })
-            .collect()
+            .collect();
+        let bw_best =
+            hybrid_bandwidth(node.local.bandwidth, bw_em_best, frac);
+        let subtree_bound = if pipeline {
+            let compute = bound::stage_compute_times(
+                &dec,
+                node.perf_peak,
+                node.sram,
+                bw_best,
+            );
+            comm.iter()
+                .map(|c| bound::assemble_pipeline(&compute, c, m, x))
+                .fold(f64::INFINITY, f64::min)
+                * BRANCH_BOUND_MARGIN
+        } else {
+            let compute = bound::compute_times(
+                &dec,
+                node.perf_peak,
+                node.sram,
+                bw_best,
+            );
+            let comm_min = comm
+                .iter()
+                .map(|c| c[0].0 + c[0].1)
+                .fold(f64::INFINITY, f64::min);
+            (compute[0] + compute[1] + compute[2] + comm_min)
+                * BRANCH_BOUND_MARGIN
+        };
+        let mut infeasible = 0;
+        for &bw in &self.axes.em_bandwidths {
+            for &cap in &self.axes.em_capacities {
+                if footprint > self.point_capacity(bw, cap) {
+                    infeasible += self.axes.collectives.len();
+                }
+            }
+        }
+        Ok(BranchState {
+            dec,
+            template,
+            footprint,
+            frac,
+            comm,
+            m,
+            x,
+            bound: subtree_bound,
+            infeasible,
+        })
     }
 
     /// Expand one branch into its feasible leaves, canonically ordered.
     fn expand(&self, bi: usize, st: &BranchState) -> Vec<Leaf> {
-        let b = &self.branches[bi];
         let node = &self.cluster.node;
         let (nbw, ncap, ncoll) = (
             self.axes.em_bandwidths.len(),
@@ -579,15 +772,12 @@ impl<'a> Optimizer<'a> {
                 if st.footprint > self.point_capacity(bw, cap) {
                     continue;
                 }
-                let cluster = self.leaf_cluster(st.footprint, bw, cap);
+                let bw_em = self.leaf_bw_em(st.footprint, bw, cap);
                 // Exact effective bandwidth of this point — em_fraction
                 // depends only on footprint and local capacity, so the
                 // leaf's compute floor is the backend's compute time.
-                let bw_eff = hybrid_bandwidth(
-                    node.local.bandwidth,
-                    cluster.node.expanded.bandwidth,
-                    st.frac,
-                );
+                let bw_eff =
+                    hybrid_bandwidth(node.local.bandwidth, bw_em, st.frac);
                 let pipeline = st.dec.pp > 1;
                 let compute_flat;
                 let compute_stages;
@@ -630,8 +820,7 @@ impl<'a> Optimizer<'a> {
                             collective: ci,
                             index,
                         },
-                        cluster: cluster.clone(),
-                        opts: self.leaf_opts(b, ci),
+                        bw_em,
                         bound,
                     });
                 }
@@ -642,8 +831,17 @@ impl<'a> Optimizer<'a> {
 
     // ---- evaluation -------------------------------------------------------
 
-    fn resolve_leaf(&self, st: &BranchState, leaf: &Leaf) -> Result<ModelInputs> {
-        resolve_inputs(&st.dec, &leaf.cluster, &leaf.opts)
+    /// The zero-allocation leaf evaluation: stack-copy the branch
+    /// template's parameter block, patch the two leaf-dependent fields,
+    /// and run the closed-form model over the shared layer records.
+    /// Bit-identical to resolving the leaf's full `ModelInputs` (the
+    /// exhaustive oracle path) and evaluating that — pinned by the
+    /// `search == exhaustive` bit-equality tests.
+    fn eval_leaf(&self, st: &BranchState, leaf: &Leaf) -> TrainingBreakdown {
+        let mut params = st.template.params;
+        params.bw_em = leaf.bw_em;
+        params.collective_impl = leaf.point.collective;
+        evaluate_parts(&st.template.layers, &params)
     }
 
     fn candidate(
@@ -662,6 +860,20 @@ impl<'a> Optimizer<'a> {
         }
     }
 
+    /// Insert a candidate's (total, lattice index) key into the sorted
+    /// incumbent list, keeping the best `top_k`. Shared by both drivers —
+    /// the parallel merge replays exactly this update sequence.
+    fn admit(&self, incumbents: &mut Vec<(f64, usize)>, cand: &Candidate) {
+        let key = (cand.total(), cand.point.index);
+        let pos = incumbents
+            .binary_search_by(|(t, i)| {
+                t.total_cmp(&key.0).then_with(|| i.cmp(&key.1))
+            })
+            .unwrap_or_else(|p| p);
+        incumbents.insert(pos, key);
+        incumbents.truncate(self.top_k);
+    }
+
     fn outcome_from(
         &self,
         evaluated: Vec<Candidate>,
@@ -669,6 +881,17 @@ impl<'a> Optimizer<'a> {
         infeasible: usize,
     ) -> Outcome {
         let n_eval = evaluated.len();
+        // The counter invariant every driver must satisfy — a hard
+        // assert (not debug) so a drifting driver fails loudly in
+        // release CI too.
+        assert_eq!(
+            n_eval + pruned + infeasible,
+            self.total_points(),
+            "optimizer counters must partition the lattice: \
+             {n_eval} evaluated + {pruned} pruned + {infeasible} infeasible \
+             != {} total",
+            self.total_points()
+        );
         let mut top = evaluated.clone();
         top.sort_by(|a, b| {
             a.total()
@@ -686,26 +909,9 @@ impl<'a> Optimizer<'a> {
         }
     }
 
-    /// Branch-and-bound best-first search. Returns the exact argmin and
-    /// top-k of [`Optimizer::exhaustive`] while evaluating only the
-    /// points whose lower bound does not already lose to the incumbent
-    /// top-k.
-    ///
-    /// The bounds come from the closed-form analytical model and are
-    /// admissible only against the native backend's totals — DES and
-    /// artifact evaluations may land a few percent below the analytical
-    /// value, so pruning against them could discard the true argmin. On
-    /// a non-native coordinator this therefore falls back to exhaustive
-    /// enumeration: the exactness guarantee is kept, the pruning speedup
-    /// is not.
-    pub fn search(&self) -> Result<Outcome> {
-        if self.coord.backend() != Backend::Native {
-            return self.exhaustive();
-        }
-        let states = self.prepare();
-        let infeasible: usize = states.iter().map(|s| s.infeasible).sum();
-        let feasible_total = self.total_points() - infeasible;
-
+    /// Seed the search heap with every branch subtree that has at least
+    /// one feasible point. Returns (heap, next sequence number).
+    fn seed_heap(&self, states: &[BranchState]) -> (BinaryHeap<Entry>, usize) {
         let mut heap: BinaryHeap<Entry> = BinaryHeap::new();
         let mut seq = 0usize;
         for (i, st) in states.iter().enumerate() {
@@ -721,7 +927,45 @@ impl<'a> Optimizer<'a> {
             });
             seq += 1;
         }
+        (heap, seq)
+    }
 
+    /// Branch-and-bound best-first search. Returns the exact argmin and
+    /// top-k of [`Optimizer::exhaustive`] while evaluating only the
+    /// points whose lower bound does not already lose to the incumbent
+    /// top-k.
+    ///
+    /// Runs across the coordinator's worker pool by default (or the
+    /// explicit [`Optimizer::with_threads`] width); the outcome is
+    /// bit-identical to [`Optimizer::search_sequential`] at every thread
+    /// count — see the module docs for the determinism argument.
+    ///
+    /// The bounds come from the closed-form analytical model and are
+    /// admissible only against the native backend's totals — DES and
+    /// artifact evaluations may land a few percent below the analytical
+    /// value, so pruning against them could discard the true argmin. On
+    /// a non-native coordinator this therefore falls back to exhaustive
+    /// enumeration: the exactness guarantee is kept, the pruning speedup
+    /// is not.
+    pub fn search(&self) -> Result<Outcome> {
+        let lanes = self.threads.unwrap_or_else(|| self.coord.threads());
+        self.search_parallel(lanes)
+    }
+
+    /// The single-threaded best-first driver — the in-tree equivalence
+    /// oracle the parallel driver is pinned against (and the exact
+    /// search semantics: leaves are evaluated in ascending (bound,
+    /// sequence) order, tightening the incumbent top-k after each, until
+    /// the next bound strictly loses to the k-th incumbent).
+    pub fn search_sequential(&self) -> Result<Outcome> {
+        if self.coord.backend() != Backend::Native {
+            return self.exhaustive();
+        }
+        let states = self.prepare(1)?;
+        let infeasible: usize = states.iter().map(|s| s.infeasible).sum();
+        let feasible_total = self.total_points() - infeasible;
+
+        let (mut heap, mut seq) = self.seed_heap(&states);
         // Incumbent top-k totals (with lattice-index tie-break).
         let mut incumbents: Vec<(f64, usize)> = Vec::new();
         let mut evaluated: Vec<Candidate> = Vec::new();
@@ -742,26 +986,16 @@ impl<'a> Optimizer<'a> {
                         heap.push(Entry {
                             bound: leaf.bound,
                             seq,
-                            node: NodeRef::Leaf(Box::new(leaf)),
+                            node: NodeRef::Leaf(leaf),
                         });
                         seq += 1;
                     }
                 }
                 NodeRef::Leaf(leaf) => {
                     let st = &states[leaf.point.branch];
-                    let inputs = self.resolve_leaf(st, &leaf)?;
-                    let b = self
-                        .coord
-                        .evaluate_inputs(std::slice::from_ref(&inputs))?[0];
+                    let b = self.eval_leaf(st, &leaf);
                     let cand = self.candidate(&leaf, st.footprint, b);
-                    let key = (cand.total(), cand.point.index);
-                    let pos = incumbents
-                        .binary_search_by(|(t, i)| {
-                            t.total_cmp(&key.0).then_with(|| i.cmp(&key.1))
-                        })
-                        .unwrap_or_else(|p| p);
-                    incumbents.insert(pos, key);
-                    incumbents.truncate(self.top_k);
+                    self.admit(&mut incumbents, &cand);
                     evaluated.push(cand);
                 }
             }
@@ -770,14 +1004,151 @@ impl<'a> Optimizer<'a> {
         Ok(self.outcome_from(evaluated, pruned, infeasible))
     }
 
+    /// The parallel driver: batched speculative leaf expansion over the
+    /// coordinator's pool with a deterministic replay merge.
+    ///
+    /// Per cycle: pop entries from the shared frontier in canonical
+    /// (bound, sequence) order — expanding branch subtrees inline — until
+    /// `lanes * LEAVES_PER_LANE` leaves are pending or the batch-start
+    /// incumbent cuts the frontier; evaluate the pending leaves
+    /// concurrently (each worker reads the atomic incumbent first and
+    /// skips leaves that already lose, CAS-tightening it after each
+    /// evaluation when `top_k == 1`); then merge by replaying the
+    /// pending leaves *in collection order* through the sequential
+    /// driver's exact incumbent updates and cutoff. Leaves the replay
+    /// never reaches are discarded (speculation waste, not results);
+    /// leaves a worker skipped but the replay does reach are evaluated
+    /// lazily. Every decision that shapes the outcome happens in replay
+    /// order, so the result is bit-identical to the sequential driver.
+    pub fn search_parallel(&self, lanes: usize) -> Result<Outcome> {
+        if self.coord.backend() != Backend::Native {
+            return self.exhaustive();
+        }
+        if lanes <= 1 {
+            return self.search_sequential();
+        }
+        let states = self.prepare(lanes)?;
+        let infeasible: usize = states.iter().map(|s| s.infeasible).sum();
+        let feasible_total = self.total_points() - infeasible;
+
+        let (mut heap, mut seq) = self.seed_heap(&states);
+        // Shared pruning threshold, f64 bits (totals are positive, so
+        // the bit pattern orders like the value): the k-th incumbent
+        // total once the top-k is full, +inf before. The merge step owns
+        // it between batches; workers read it before evaluating and
+        // CAS-min it with fresh totals during a batch when `top_k == 1`
+        // (any single evaluated total upper-bounds the final argmin;
+        // for k > 1 no single total bounds the k-th best, so workers
+        // leave it to the merge).
+        let threshold = AtomicU64::new(f64::INFINITY.to_bits());
+        let mut incumbents: Vec<(f64, usize)> = Vec::new();
+        let mut evaluated: Vec<Candidate> = Vec::new();
+        let batch_cap = lanes.saturating_mul(LEAVES_PER_LANE).max(1);
+        let mut done = false;
+        while !done {
+            // ---- collect: pop the frontier in canonical order.
+            let cut = if incumbents.len() >= self.top_k {
+                incumbents[self.top_k - 1].0
+            } else {
+                f64::INFINITY
+            };
+            let mut pending: Vec<Leaf> = Vec::with_capacity(batch_cap);
+            while pending.len() < batch_cap {
+                let Some(e) = heap.pop() else {
+                    done = true;
+                    break;
+                };
+                // The sequential driver stops at the first entry whose
+                // bound strictly loses to the k-th incumbent. `cut` is
+                // that incumbent as of the batch start; mid-batch
+                // results only tighten it, so stopping here is exact —
+                // the replay below re-checks against the live value.
+                if e.bound > cut {
+                    done = true;
+                    break;
+                }
+                match e.node {
+                    NodeRef::Branch(i) => {
+                        for leaf in self.expand(i, &states[i]) {
+                            heap.push(Entry {
+                                bound: leaf.bound,
+                                seq,
+                                node: NodeRef::Leaf(leaf),
+                            });
+                            seq += 1;
+                        }
+                    }
+                    NodeRef::Leaf(leaf) => pending.push(leaf),
+                }
+            }
+            // ---- evaluate: speculative fan-out over the pool, capped
+            // at the driver's lane count.
+            let evals: Vec<Option<TrainingBreakdown>> =
+                self.coord.pool().scoped_map_bounded(&pending, lanes, |leaf| {
+                    let t = f64::from_bits(threshold.load(Ordering::Relaxed));
+                    if leaf.bound > t {
+                        // Provably cut at merge time (the threshold only
+                        // tightens): skip the work. If the replay still
+                        // reaches this leaf it evaluates lazily there.
+                        return None;
+                    }
+                    let st = &states[leaf.point.branch];
+                    let b = self.eval_leaf(st, leaf);
+                    if self.top_k == 1 {
+                        let bits = b.total().to_bits();
+                        let mut cur = threshold.load(Ordering::Relaxed);
+                        while f64::from_bits(cur) > b.total() {
+                            match threshold.compare_exchange_weak(
+                                cur,
+                                bits,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            ) {
+                                Ok(_) => break,
+                                Err(now) => cur = now,
+                            }
+                        }
+                    }
+                    Some(b)
+                });
+            // ---- merge: replay in collection order — exactly the
+            // sequential driver's update-and-cutoff sequence.
+            for (leaf, eval) in pending.iter().zip(evals) {
+                if incumbents.len() >= self.top_k
+                    && leaf.bound > incumbents[self.top_k - 1].0
+                {
+                    // The sequential driver terminates here; everything
+                    // speculatively evaluated beyond this point is
+                    // discarded.
+                    done = true;
+                    break;
+                }
+                let st = &states[leaf.point.branch];
+                let b = eval.unwrap_or_else(|| self.eval_leaf(st, leaf));
+                let cand = self.candidate(leaf, st.footprint, b);
+                self.admit(&mut incumbents, &cand);
+                evaluated.push(cand);
+            }
+            if incumbents.len() >= self.top_k {
+                threshold.store(
+                    incumbents[self.top_k - 1].0.to_bits(),
+                    Ordering::Relaxed,
+                );
+            }
+        }
+        let pruned = feasible_total - evaluated.len();
+        Ok(self.outcome_from(evaluated, pruned, infeasible))
+    }
+
     /// Exhaustive enumeration of the full lattice through the batched
     /// evaluation path: every feasible point is resolved from the shared
-    /// decomposition and evaluated in **one**
-    /// [`Coordinator::evaluate_inputs`] call. The oracle `search()` is
-    /// tested against, and the baseline `bench_optimizer` compares
-    /// evaluated-point counts with.
+    /// decomposition into full `ModelInputs` and evaluated in **one**
+    /// [`Coordinator::evaluate_inputs`] call. Deliberately independent
+    /// plumbing from the search drivers' template fast path — the oracle
+    /// `search()` is tested against (bit-for-bit), and the baseline
+    /// `bench_optimizer` compares evaluated-point counts with.
     pub fn exhaustive(&self) -> Result<Outcome> {
-        let states = self.prepare();
+        let states = self.prepare(usize::MAX)?;
         let infeasible: usize = states.iter().map(|s| s.infeasible).sum();
         let mut leaves: Vec<Leaf> = Vec::new();
         for (i, st) in states.iter().enumerate() {
@@ -785,7 +1156,20 @@ impl<'a> Optimizer<'a> {
         }
         let inputs: Vec<ModelInputs> = leaves
             .iter()
-            .map(|l| self.resolve_leaf(&states[l.point.branch], l))
+            .map(|l| {
+                let st = &states[l.point.branch];
+                let b = &self.branches[l.point.branch];
+                let cluster = self.leaf_cluster(
+                    st.footprint,
+                    l.point.em_bandwidth,
+                    l.point.em_capacity,
+                );
+                resolve_inputs(
+                    &st.dec,
+                    &cluster,
+                    &self.leaf_opts(b, l.point.collective),
+                )
+            })
             .collect::<Result<_>>()?;
         let evals = self.coord.evaluate_inputs(&inputs)?;
         let evaluated: Vec<Candidate> = leaves
@@ -879,6 +1263,129 @@ mod tests {
         assert_eq!(s.evaluated + s.pruned, e.evaluated);
         // The best co-design is MP8 at full-rate expansion (paper Ex. 1).
         assert_eq!(s.best().unwrap().label, "MP8_DP128 EM@2039GB/s");
+    }
+
+    #[test]
+    fn parallel_search_is_bit_identical_to_sequential() {
+        // The tentpole guarantee: the full Outcome — counters and
+        // frontier included — is invariant in the lane count.
+        let coord = Coordinator::native().with_threads(8);
+        for top_k in [1usize, 3] {
+            let opt = Optimizer::new(
+                &coord,
+                presets::dgx_a100_1024(),
+                EvalOptions::default(),
+                transformer_branches(1024, 2, 128),
+                AxisSpec::new()
+                    .em_bandwidths(&[gb(250.0), gb(1000.0), gb(2039.0)])
+                    .collective_impls(&[
+                        CollectiveImpl::LogicalRing,
+                        CollectiveImpl::Hierarchical,
+                    ]),
+            )
+            .unwrap()
+            .with_top_k(top_k);
+            let seq = opt.search_sequential().unwrap();
+            for lanes in [2usize, 3, 8] {
+                let par = opt.search_parallel(lanes).unwrap();
+                seq.assert_bit_identical(
+                    &par,
+                    &format!("top_k={top_k} lanes={lanes}"),
+                );
+            }
+            // The default dispatch (pool width) agrees too.
+            let dispatched = opt.search().unwrap();
+            seq.assert_bit_identical(&dispatched, "dispatch");
+            // And with_threads(1) forces the sequential driver.
+            let one = opt.search_parallel(1).unwrap();
+            seq.assert_bit_identical(&one, "lanes=1");
+        }
+    }
+
+    #[test]
+    fn counters_partition_the_lattice_in_every_driver() {
+        let coord = Coordinator::native();
+        // No expansion axis: some Transformer-1T branches are
+        // capacity-infeasible, so all three counters are non-trivial.
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 2, 128),
+            AxisSpec::new(),
+        )
+        .unwrap()
+        .with_top_k(2);
+        for out in [
+            opt.search_sequential().unwrap(),
+            opt.search_parallel(4).unwrap(),
+            opt.exhaustive().unwrap(),
+        ] {
+            assert_eq!(
+                out.evaluated + out.pruned + out.infeasible,
+                out.total_points
+            );
+            assert!(out.infeasible > 0);
+        }
+    }
+
+    #[test]
+    fn leaf_fast_path_matches_resolved_inputs_oracle() {
+        // The zero-allocation template patch must reproduce the full
+        // per-leaf resolve bit-for-bit, across capacity-spilled,
+        // spill-free, and infinite-memory branches.
+        use crate::analytical::evaluate;
+        let coord = Coordinator::native();
+        for opts in [
+            EvalOptions::default(),
+            EvalOptions {
+                ignore_capacity: true,
+                ..Default::default()
+            },
+        ] {
+            let opt = Optimizer::new(
+                &coord,
+                presets::dgx_a100_1024(),
+                opts,
+                transformer_branches(1024, 2, 128),
+                AxisSpec::new()
+                    .em_bandwidths(&[gb(500.0), gb(2039.0)])
+                    .em_capacities(&[gb(40.0), gb(400.0)])
+                    .collective_impls(&[
+                        CollectiveImpl::LogicalRing,
+                        CollectiveImpl::Hierarchical,
+                    ]),
+            )
+            .unwrap();
+            let states = opt.prepare(usize::MAX).unwrap();
+            for (i, st) in states.iter().enumerate() {
+                for leaf in opt.expand(i, st) {
+                    let fast = opt.eval_leaf(st, &leaf);
+                    let cluster = opt.leaf_cluster(
+                        st.footprint,
+                        leaf.point.em_bandwidth,
+                        leaf.point.em_capacity,
+                    );
+                    let inputs = resolve_inputs(
+                        &st.dec,
+                        &cluster,
+                        &opt.leaf_opts(
+                            &opt.branches[i],
+                            leaf.point.collective,
+                        ),
+                    )
+                    .unwrap();
+                    assert_eq!(inputs.params.bw_em, leaf.bw_em);
+                    let slow = evaluate(&inputs);
+                    assert_eq!(
+                        fast.total().to_bits(),
+                        slow.total().to_bits(),
+                        "branch {i} point {}",
+                        leaf.point.index
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -1023,6 +1530,10 @@ mod tests {
                 c.total()
             );
         }
+        // The pipeline lattice stays lane-invariant too.
+        let seq = opt.search_sequential().unwrap();
+        let par = opt.search_parallel(4).unwrap();
+        seq.assert_bit_identical(&par, "3d lanes=4");
     }
 
     #[test]
@@ -1088,6 +1599,42 @@ mod tests {
             EvalOptions::default(),
             transformer_branches(1024, 8, 8),
             AxisSpec::new().em_capacities(&[gb(100.0)]),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn degenerate_axis_values_rejected_at_construction() {
+        // A zero/NaN bandwidth used to surface as a per-leaf
+        // cluster-validation error in the old search; the fast path
+        // must reject it before any driver runs (identically for
+        // search and exhaustive).
+        let coord = Coordinator::native();
+        for axes in [
+            AxisSpec::new().em_bandwidths(&[0.0]),
+            AxisSpec::new().em_bandwidths(&[-1.0]),
+            AxisSpec::new().em_bandwidths(&[f64::NAN]),
+            AxisSpec::new()
+                .em_bandwidths(&[gb(500.0)])
+                .em_capacities(&[-1.0]),
+        ] {
+            let err = Optimizer::new(
+                &coord,
+                presets::dgx_a100_1024(),
+                EvalOptions::default(),
+                transformer_branches(1024, 8, 8),
+                axes,
+            );
+            assert!(err.is_err());
+        }
+        // Empty collectives collapse the lattice to zero points — also
+        // rejected at construction (axes.is_empty()).
+        let err = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 8, 8),
+            AxisSpec::new().collective_impls(&[]),
         );
         assert!(err.is_err());
     }

@@ -998,6 +998,7 @@ pub fn optimizer_for<'a>(
         collectives,
         zero_stages,
         top_k,
+        threads,
     } = &spec.study
     else {
         return Err(Error::Config(format!(
@@ -1093,11 +1094,16 @@ pub fn optimizer_for<'a>(
         axes = axes.collective_impls(&[opts0.collective_impl]);
     }
 
-    Ok(Optimizer::new(coord, spec.cluster.clone(), opts0, branches, axes)
-        .map_err(|e| {
-            Error::Config(format!("scenario '{}': {e}", spec.name))
-        })?
-        .with_top_k(*top_k))
+    let mut opt =
+        Optimizer::new(coord, spec.cluster.clone(), opts0, branches, axes)
+            .map_err(|e| {
+                Error::Config(format!("scenario '{}': {e}", spec.name))
+            })?
+            .with_top_k(*top_k);
+    if let Some(t) = threads {
+        opt = opt.with_threads(*t);
+    }
+    Ok(opt)
 }
 
 /// Run an optimize scenario, returning both the rendered figure (the

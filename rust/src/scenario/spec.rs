@@ -192,6 +192,11 @@ pub enum Study {
         zero_stages: Vec<ZeroStage>,
         /// How many best configurations to report (default 5).
         top_k: usize,
+        /// Evaluation lanes for the branch-and-bound search (`None` =
+        /// the coordinator's worker-pool width; `1` = the sequential
+        /// driver). The outcome is bit-identical at every width — this
+        /// only trades wall-clock.
+        threads: Option<usize>,
     },
     /// Pipeline-parallelism case study: at a fixed MP degree, sweep the
     /// PP degree x microbatch count x schedule on one cluster (DP is
@@ -961,6 +966,7 @@ impl Study {
                         "collectives",
                         "zero_stages",
                         "top_k",
+                        "threads",
                     ],
                     "study",
                 )?;
@@ -978,6 +984,12 @@ impl Study {
                         "scenario: optimize top_k must be >= 1".into(),
                     ));
                 }
+                let threads = opt_usize(m, "threads", "study")?;
+                if threads == Some(0) {
+                    return Err(Error::Config(
+                        "scenario: optimize threads must be >= 1".into(),
+                    ));
+                }
                 Ok(Study::Optimize {
                     strategies: Self::strategies_axis(m)?,
                     em_bandwidths_gbps: f64_list(
@@ -989,6 +1001,7 @@ impl Study {
                     collectives,
                     zero_stages,
                     top_k,
+                    threads,
                 })
             }
             "pipeline" => {
@@ -1231,6 +1244,7 @@ impl Study {
                 collectives,
                 zero_stages,
                 top_k,
+                threads,
             } => {
                 axis_to_json(&mut m, strategies);
                 if !em_bandwidths_gbps.is_empty() {
@@ -1267,6 +1281,9 @@ impl Study {
                     );
                 }
                 m.insert("top_k".into(), Value::Num(*top_k as f64));
+                if let Some(t) = threads {
+                    m.insert("threads".into(), Value::Num(*t as f64));
+                }
             }
             Study::Pipeline {
                 mp,
@@ -1909,6 +1926,35 @@ mod tests {
         assert!(matches!(d.study, Study::Optimize { top_k: 5, .. }));
         assert!(ScenarioSpec::parse_str(
             "name = \"opt\"\n[study]\nkind = \"optimize\"\ntop_k = 0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn optimize_threads_option_parses_and_roundtrips() {
+        // threads defaults to None (= pool width)...
+        let d = ScenarioSpec::parse_str(
+            "name = \"opt\"\n[study]\nkind = \"optimize\"\n",
+        )
+        .unwrap();
+        assert!(matches!(d.study, Study::Optimize { threads: None, .. }));
+        // ...an explicit width parses and survives TOML export...
+        let s = ScenarioSpec::parse_str(
+            "name = \"opt\"\n[study]\nkind = \"optimize\"\nthreads = 4\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            s.study,
+            Study::Optimize {
+                threads: Some(4),
+                ..
+            }
+        ));
+        let back = ScenarioSpec::parse_str(&s.to_toml().unwrap()).unwrap();
+        assert_eq!(s, back);
+        // ...and zero is rejected.
+        assert!(ScenarioSpec::parse_str(
+            "name = \"opt\"\n[study]\nkind = \"optimize\"\nthreads = 0\n"
         )
         .is_err());
     }

@@ -171,6 +171,83 @@ fn optimize_command_rejects_bad_flags() {
         comet(&["optimize", "--em-bandwidths", "500,oops"]);
     assert!(!ok);
     assert!(stderr.contains("bad number"), "{stderr}");
+    let (ok, _, stderr) =
+        comet(&["optimize", "optimize-transformer", "--threads", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("threads"), "{stderr}");
+}
+
+#[test]
+fn optimize_threads_output_is_byte_identical() {
+    // The CI acceptance check, as a test: the same search at 1 and 4
+    // evaluation lanes must print byte-identical JSON.
+    let run = |threads: &str| {
+        let (ok, stdout, stderr) = comet(&[
+            "optimize",
+            "optimize-transformer",
+            "--threads",
+            threads,
+            "--json",
+        ]);
+        assert!(ok, "--threads {threads} stderr:\n{stderr}");
+        assert!(stdout.contains("\"id\""), "{stdout}");
+        stdout
+    };
+    let one = run("1");
+    let four = run("4");
+    assert_eq!(one, four, "thread count changed the optimize output");
+    assert!(one.contains("MP8_DP128 EM@2039GB/s"), "{one}");
+}
+
+#[test]
+fn json_flag_keeps_out_dir_artifacts() {
+    // --json owns stdout but must not disable --out-dir persistence.
+    let dir = std::env::temp_dir().join("comet_cli_json_outdir");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (ok, stdout, stderr) = comet(&[
+        "figure",
+        "fig6",
+        "--json",
+        "--out-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr:\n{stderr}");
+    assert!(stdout.trim_start().starts_with('{'), "{stdout}");
+    assert!(dir.join("fig6.csv").exists(), "out-dir CSV must still land");
+}
+
+#[test]
+fn scenario_run_accepts_multiple_targets_with_shared_coordinator() {
+    // Two studies over the same workload in one invocation: the shared
+    // derive cache means the second study re-uses the first's
+    // decompositions (hits > 0 in the cumulative --verbose counters).
+    let (ok, stdout, stderr) = comet(&[
+        "scenario",
+        "run",
+        "optimize-transformer",
+        "memory-expansion",
+        "--verbose",
+    ]);
+    assert!(ok, "stderr:\n{stderr}");
+    assert!(stdout.contains("MP8_DP128 EM@2039GB/s"), "{stdout}");
+    assert!(stdout.contains("250GB/s"), "{stdout}");
+    // Both studies reported against the same coordinator.
+    assert!(
+        stderr.contains("scenario 'optimize-transformer'"),
+        "{stderr}"
+    );
+    assert!(stderr.contains("scenario 'memory-expansion'"), "{stderr}");
+    let last = stderr
+        .lines()
+        .filter(|l| l.contains("derive cache"))
+        .next_back()
+        .unwrap();
+    let hits: u64 = last
+        .split_whitespace()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    assert!(hits > 0, "expected cross-study derive-cache hits: {last}");
 }
 
 #[test]

@@ -367,6 +367,92 @@ fn optimizer_matches_exhaustive_dlrm_small_space() {
 }
 
 #[test]
+fn parallel_search_matches_sequential_and_exhaustive_random_lattices() {
+    // The parallel driver's headline guarantee, exercised over
+    // randomized 2D and 3D optimize lattices: at every thread count the
+    // full Outcome — argmin label, top-k order, Pareto frontier, and the
+    // exact evaluated/pruned/infeasible counters — is bit-identical to
+    // the sequential driver, and the top-k is bit-identical to the
+    // exhaustive oracle (ties broken by canonical lattice index).
+    let mut rng = Rng::new(4242);
+    let coord = Coordinator::native().with_threads(8);
+    for case in 0..10 {
+        let max_pp = *rng.choose(&[1usize, 2, 4]);
+        let min_mp = *rng.choose(&[1usize, 2]);
+        let max_mp = *rng.choose(&[4usize, 8]);
+        let top_k = 1 + rng.below(4);
+        let mut doc = format!(
+            "name = \"opt-rand-{case}\"\n\
+             [workload]\nkind = \"transformer\"\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"optimize\"\nmin_mp = {min_mp}\n\
+             max_mp = {max_mp}\nmax_pp = {max_pp}\ntop_k = {top_k}\n"
+        );
+        let with_bw = rng.f64() < 0.7;
+        if with_bw {
+            doc.push_str(*rng.choose(&[
+                "em_bandwidths_gbps = [500, 2039]\n",
+                "em_bandwidths_gbps = [250, 1000, 2039]\n",
+            ]));
+            if rng.f64() < 0.5 {
+                doc.push_str("em_capacities_gb = [40, 400]\n");
+            }
+        }
+        if rng.f64() < 0.5 {
+            doc.push_str("collectives = [\"ring\", \"hierarchical\"]\n");
+        }
+        if rng.f64() < 0.4 {
+            doc.push_str("zero_stages = [0, 2, 3]\n");
+        }
+        if rng.f64() < 0.5 {
+            doc.push_str("[options]\ninfinite_memory = true\n");
+        }
+        let spec = ScenarioSpec::parse_str(&doc).unwrap();
+        let opt = optimizer_for(&spec, &coord).unwrap();
+        let e = opt.exhaustive().unwrap();
+        let seq = opt.search_parallel(1).unwrap();
+        for threads in [2usize, 8] {
+            let par = opt.search_parallel(threads).unwrap();
+            // Everything, bit-for-bit (shared checker — same strictness
+            // as the unit tests and bench_optimizer).
+            seq.assert_bit_identical(&par, &format!("case {case} t{threads}"));
+        }
+        // The search (any width) returns the exhaustive top-k exactly.
+        assert_eq!(seq.top.len(), e.top.len(), "case {case}");
+        for (a, b) in seq.top.iter().zip(&e.top) {
+            assert_eq!(a.label, b.label, "case {case}");
+            assert_eq!(a.point.index, b.point.index, "case {case}");
+            assert_eq!(
+                a.total().to_bits(),
+                b.total().to_bits(),
+                "case {case}: {}",
+                a.label
+            );
+        }
+        assert_eq!(seq.infeasible, e.infeasible, "case {case}");
+        assert_eq!(seq.evaluated + seq.pruned, e.evaluated, "case {case}");
+        // Counters partition the lattice in every driver.
+        for out in [&seq, &e] {
+            assert_eq!(
+                out.evaluated + out.pruned + out.infeasible,
+                out.total_points,
+                "case {case}"
+            );
+        }
+        // Admissibility of every reported bound.
+        for c in seq.top.iter().chain(&seq.frontier) {
+            assert!(
+                c.lower_bound <= c.total(),
+                "case {case}: {} bound {} > total {}",
+                c.label,
+                c.lower_bound,
+                c.total()
+            );
+        }
+    }
+}
+
+#[test]
 fn two_stage_derive_matches_single_pass_random_configs() {
     // Randomized spot-check on top of the figure-space equivalence test:
     // decompose+resolve must be bit-identical to single-pass derive for

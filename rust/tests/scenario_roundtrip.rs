@@ -286,6 +286,14 @@ fn optimize_builtins_prune_half_and_match_exhaustive() {
             e.evaluated
         );
         assert_eq!(s.evaluated + s.pruned, e.evaluated, "{name}");
+        // Thread invariance on the shipped scenarios: the parallel
+        // driver's Outcome is bit-identical to the sequential oracle
+        // (shared checker — same strictness everywhere).
+        let seq = opt.search_sequential().unwrap();
+        for lanes in [2usize, 4] {
+            let par = opt.search_parallel(lanes).unwrap();
+            seq.assert_bit_identical(&par, &format!("{name} t{lanes}"));
+        }
     }
 }
 
