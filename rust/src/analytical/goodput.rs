@@ -1,0 +1,240 @@
+//! Analytical goodput model: closed-form training efficiency under
+//! failures, stragglers, and link degradation.
+//!
+//! `goodput = ideal_throughput x efficiency(mtbf, ckpt)`, with three
+//! multiplicative efficiency factors:
+//!
+//! * **Checkpoint–restart** (`eff_ckpt`): with cluster MTBF `M`, a
+//!   checkpoint write cost `delta = footprint / ckpt_bw`, and the
+//!   Young/Daly optimal interval `tau = sqrt(2 delta M)`, the fraction
+//!   of wall-clock spent on useful work is
+//!   `(tau / (tau + delta)) * (1 - (restart + (tau + delta)/2) / M)`:
+//!   the first factor is checkpoint-write overhead, the second the
+//!   expected restart plus half-interval rework per failure.
+//! * **Stragglers** (`eff_straggler`): collectives and pipeline stages
+//!   gate on the slowest participant, so any straggler inflates the
+//!   whole step by its slowdown factor: `1 / slowdown`.
+//! * **Link degradation** (`eff_link`): only the exposed-communication
+//!   share of the step stretches when links lose bandwidth, so
+//!   `1 / (1 + (factor - 1) * comm_fraction)`.
+//!
+//! The product is clamped to `(MIN_EFFICIENCY, 1]`. The upper clamp is
+//! what makes the optimizer's analytical lower bound admissible for the
+//! goodput objective: `score = total / efficiency >= total >= bound`
+//! holds bit-wise because dividing by a value in (0, 1] is a single
+//! correctly-rounded, monotone operation (see `optimizer`).
+
+use crate::analytical::TrainingBreakdown;
+use crate::resilience::FaultModel;
+
+/// Floor on the modeled efficiency; keeps goodput scores finite even in
+/// regimes where the model predicts the cluster makes no progress.
+pub const MIN_EFFICIENCY: f64 = 1e-12;
+
+/// Resilience-efficiency breakdown for one (cluster, strategy) design
+/// point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Goodput {
+    /// Seconds to write one checkpoint (footprint over the effective
+    /// checkpoint bandwidth). Zero when failures are disabled.
+    pub ckpt_write_s: f64,
+    /// Young/Daly optimal checkpoint interval in seconds (infinite when
+    /// failures are disabled).
+    pub ckpt_interval_s: f64,
+    /// Cluster-level MTBF in seconds (infinite when disabled).
+    pub mtbf_cluster_s: f64,
+    /// Checkpoint–restart efficiency factor in [0, 1].
+    pub eff_ckpt: f64,
+    /// Straggler efficiency factor in (0, 1].
+    pub eff_straggler: f64,
+    /// Link-degradation efficiency factor in (0, 1].
+    pub eff_link: f64,
+    /// Overall efficiency: product of the factors, clamped to
+    /// (`MIN_EFFICIENCY`, 1].
+    pub efficiency: f64,
+}
+
+impl Goodput {
+    /// Effective (goodput-adjusted) time for a step that ideally takes
+    /// `total_s`: wall-clock seconds per unit of useful work.
+    pub fn effective_time(&self, total_s: f64) -> f64 {
+        total_s / self.efficiency
+    }
+}
+
+/// Evaluate the goodput efficiency of one design point.
+///
+/// `ckpt_bytes` is the per-node checkpoint footprint (model, optimizer,
+/// and residual state — the same footprint the memory planner places),
+/// and `ckpt_bw` the effective checkpoint bandwidth, normally from
+/// [`crate::resilience::checkpoint_bandwidth`].
+pub fn analyze(
+    fault: &FaultModel,
+    n_nodes: usize,
+    ckpt_bytes: f64,
+    ckpt_bw: f64,
+    breakdown: &TrainingBreakdown,
+) -> Goodput {
+    let m = fault.mtbf_cluster_s(n_nodes);
+
+    let (ckpt_write_s, ckpt_interval_s, eff_ckpt) = if !m.is_finite() {
+        // Failures disabled: no checkpoints, perfect efficiency. This
+        // branch is exact (1.0, not approximately 1.0) so the disabled
+        // slice stays bit-identical to the fault-free model.
+        (0.0, f64::INFINITY, 1.0)
+    } else {
+        let delta = if ckpt_bw > 0.0 { ckpt_bytes / ckpt_bw } else { 0.0 };
+        if delta > 0.0 {
+            let tau = (2.0 * delta * m).sqrt();
+            // Per renewal cycle of tau useful seconds: one write of
+            // delta; per failure (every M seconds): a restart plus on
+            // average half a cycle of rework.
+            let waste = (fault.restart_s + (tau + delta) / 2.0) / m;
+            let eff = (tau / (tau + delta)) * (1.0 - waste).max(0.0);
+            (delta, tau, eff)
+        } else {
+            // Free checkpoints: only restart time is lost per failure.
+            (0.0, f64::INFINITY, (1.0 - fault.restart_s / m).max(0.0))
+        }
+    };
+
+    let eff_straggler = if fault.straggler_count(n_nodes) > 0 {
+        1.0 / fault.straggler_slowdown
+    } else {
+        1.0
+    };
+
+    let eff_link = if fault.degraded_count(n_nodes) > 0 {
+        1.0 / (1.0 + (fault.link_degrade_factor - 1.0)
+            * breakdown.comm_fraction())
+    } else {
+        1.0
+    };
+
+    let efficiency =
+        (eff_ckpt * eff_straggler * eff_link).clamp(MIN_EFFICIENCY, 1.0);
+
+    Goodput {
+        ckpt_write_s,
+        ckpt_interval_s,
+        mtbf_cluster_s: m,
+        eff_ckpt,
+        eff_straggler,
+        eff_link,
+        efficiency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breakdown(compute: f64, comm: f64) -> TrainingBreakdown {
+        TrainingBreakdown {
+            fp_compute: compute,
+            fp_exposed_comm: comm,
+            ig_compute: 0.0,
+            ig_exposed_comm: 0.0,
+            wg_compute: 0.0,
+            wg_exposed_comm: 0.0,
+            bubble: 0.0,
+            pp_exposed_comm: 0.0,
+        }
+    }
+
+    #[test]
+    fn disabled_faults_give_exact_unit_efficiency() {
+        let b = breakdown(1.0, 0.5);
+        let g = analyze(&FaultModel::none(), 1024, 264e9, 31.25e9, &b);
+        assert_eq!(g.efficiency, 1.0);
+        assert_eq!(g.eff_ckpt, 1.0);
+        assert_eq!(g.ckpt_write_s, 0.0);
+        assert!(g.ckpt_interval_s.is_infinite());
+        assert_eq!(g.effective_time(2.5), 2.5);
+    }
+
+    #[test]
+    fn efficiency_is_monotone_in_mtbf() {
+        let b = breakdown(1.0, 0.2);
+        let mut prev = 0.0;
+        for mtbf in [50.0, 200.0, 1000.0, 10_000.0, 1e6] {
+            let f = FaultModel {
+                mtbf_node_hours: mtbf,
+                restart_s: 120.0,
+                ..FaultModel::none()
+            };
+            let g = analyze(&f, 1024, 264e9, 31.25e9, &b);
+            assert!(g.efficiency.is_finite());
+            assert!(g.efficiency > 0.0 && g.efficiency <= 1.0);
+            assert!(
+                g.efficiency >= prev,
+                "efficiency must grow with MTBF: {} < {prev} at {mtbf}h",
+                g.efficiency
+            );
+            prev = g.efficiency;
+        }
+    }
+
+    #[test]
+    fn bigger_checkpoints_cost_more() {
+        let b = breakdown(1.0, 0.2);
+        let f = FaultModel {
+            mtbf_node_hours: 200.0,
+            restart_s: 60.0,
+            ..FaultModel::none()
+        };
+        let small = analyze(&f, 1024, 70e9, 31.25e9, &b);
+        let large = analyze(&f, 1024, 264e9, 31.25e9, &b);
+        assert!(large.ckpt_write_s > small.ckpt_write_s);
+        assert!(large.efficiency < small.efficiency);
+        // Young/Daly: interval grows with the write cost.
+        assert!(large.ckpt_interval_s > small.ckpt_interval_s);
+    }
+
+    #[test]
+    fn straggler_and_link_factors() {
+        let b = breakdown(1.0, 1.0); // comm_fraction = 0.5
+        let f = FaultModel {
+            straggler_frac: 0.25,
+            straggler_slowdown: 2.0,
+            link_degrade_frac: 0.1,
+            link_degrade_factor: 3.0,
+            ..FaultModel::none()
+        };
+        let g = analyze(&f, 64, 70e9, 31.25e9, &b);
+        assert_eq!(g.eff_ckpt, 1.0);
+        assert!((g.eff_straggler - 0.5).abs() < 1e-12);
+        // 1 / (1 + (3 - 1) * 0.5) = 0.5
+        assert!((g.eff_link - 0.5).abs() < 1e-12);
+        assert!((g.efficiency - 0.25).abs() < 1e-12);
+        assert!((g.effective_time(2.0) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_never_hits_zero_or_nan() {
+        let b = breakdown(1.0, 0.0);
+        // MTBF so low the bracket goes negative: clamped to the floor.
+        let f = FaultModel {
+            mtbf_node_hours: 0.001,
+            restart_s: 600.0,
+            ..FaultModel::none()
+        };
+        let g = analyze(&f, 4096, 264e9, 31.25e9, &b);
+        assert!(g.efficiency >= MIN_EFFICIENCY);
+        assert!(g.efficiency.is_finite());
+        assert!(g.effective_time(1.0).is_finite());
+    }
+
+    #[test]
+    fn zero_cost_checkpoints_lose_only_restart_time() {
+        let b = breakdown(1.0, 0.0);
+        let f = FaultModel {
+            mtbf_node_hours: 1.0,
+            restart_s: 36.0,
+            ..FaultModel::none()
+        };
+        // 1 node: M = 3600 s; restart 36 s => eff_ckpt = 0.99.
+        let g = analyze(&f, 1, 0.0, 31.25e9, &b);
+        assert!((g.eff_ckpt - 0.99).abs() < 1e-12, "{}", g.eff_ckpt);
+    }
+}

@@ -18,6 +18,8 @@
 //! memory, which is folded into the derived footprint upstream). The
 //! `pp = 1` slice takes the original code path untouched.
 
+pub mod goodput;
+
 use crate::compute::{em_fraction, gemm_traffic, hybrid_bandwidth};
 use crate::model::inputs::{LayerRecord, ModelInputs, NodeParams};
 use crate::network::collective_cost;

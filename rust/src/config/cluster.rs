@@ -117,17 +117,23 @@ impl ClusterConfig {
                         self.name, pod_size, self.n_nodes
                     )));
                 }
-                if bw_intra <= 0.0 || bw_inter <= 0.0 {
+                if !bw_intra.is_finite()
+                    || !bw_inter.is_finite()
+                    || bw_intra <= 0.0
+                    || bw_inter <= 0.0
+                {
                     return Err(Error::Config(format!(
-                        "{}: network bandwidths must be > 0",
+                        "{}: network bandwidths must be finite numbers > 0, \
+                         got intra {bw_intra} inter {bw_inter}",
                         self.name
                     )));
                 }
             }
             Topology::SingleSwitch { bw } => {
-                if bw <= 0.0 {
+                if !bw.is_finite() || bw <= 0.0 {
                     return Err(Error::Config(format!(
-                        "{}: switch bandwidth must be > 0",
+                        "{}: switch bandwidth must be a finite number > 0, \
+                         got {bw}",
                         self.name
                     )));
                 }
@@ -143,18 +149,19 @@ impl ClusterConfig {
                         self.name, dims, self.n_nodes
                     )));
                 }
-                if links == 0 || link_bw <= 0.0 {
+                if links == 0 || !link_bw.is_finite() || link_bw <= 0.0 {
                     return Err(Error::Config(format!(
-                        "{}: torus links/bandwidth must be > 0",
+                        "{}: torus links/bandwidth must be finite numbers \
+                         > 0, got {links} links at {link_bw}",
                         self.name
                     )));
                 }
             }
         }
-        if self.link_latency < 0.0 {
+        if !self.link_latency.is_finite() || self.link_latency < 0.0 {
             return Err(Error::Config(format!(
-                "{}: negative link latency",
-                self.name
+                "{}: link latency must be a finite number >= 0, got {}",
+                self.name, self.link_latency
             )));
         }
         Ok(())
@@ -343,5 +350,26 @@ mod tests {
         let c = presets::tpu_v4_4096().with_n_nodes(512);
         c.validate().unwrap();
         assert_eq!(c.n_nodes, 512);
+    }
+
+    #[test]
+    fn nan_bandwidths_and_latency_are_rejected() {
+        let mut c = presets::dgx_a100_1024();
+        if let Topology::HierarchicalSwitch {
+            ref mut bw_inter, ..
+        } = c.topology
+        {
+            *bw_inter = f64::NAN;
+        }
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.contains("finite"), "{e}");
+
+        let mut c = presets::dgx_a100_1024();
+        c.link_latency = f64::NAN;
+        assert!(c.validate().is_err());
+
+        let mut c = presets::dgx_a100_1024();
+        c.link_latency = f64::INFINITY;
+        assert!(c.validate().is_err());
     }
 }

@@ -53,16 +53,37 @@ pub struct NodeConfig {
 }
 
 impl NodeConfig {
-    /// Validate physical sanity.
+    /// Validate physical sanity. Every quantity must be a finite,
+    /// strictly positive number — `!(x > 0.0)` style checks catch NaN
+    /// (all comparisons with NaN are false), and explicit `is_finite`
+    /// guards reject infinities that would otherwise sail through and
+    /// surface as NaN step times downstream.
     pub fn validate(&self) -> Result<()> {
-        if self.perf_peak <= 0.0 {
+        if !self.perf_peak.is_finite() || self.perf_peak <= 0.0 {
             return Err(Error::Config(format!(
-                "{}: perf_peak must be > 0",
-                self.name
+                "{}: perf_peak must be a finite number > 0, got {}",
+                self.name, self.perf_peak
             )));
         }
-        if self.sram <= 0.0 {
-            return Err(Error::Config(format!("{}: sram must be > 0", self.name)));
+        if !self.sram.is_finite() || self.sram <= 0.0 {
+            return Err(Error::Config(format!(
+                "{}: sram must be a finite number > 0, got {}",
+                self.name, self.sram
+            )));
+        }
+        for (tier, m) in [("local", &self.local), ("expanded", &self.expanded)]
+        {
+            if !m.capacity.is_finite()
+                || !m.bandwidth.is_finite()
+                || m.capacity < 0.0
+                || m.bandwidth < 0.0
+            {
+                return Err(Error::Config(format!(
+                    "{}: {tier} memory capacity/bandwidth must be finite \
+                     numbers >= 0, got capacity {} bandwidth {}",
+                    self.name, m.capacity, m.bandwidth
+                )));
+            }
         }
         if !self.local.present() {
             return Err(Error::Config(format!(
@@ -154,5 +175,24 @@ mod tests {
     fn memory_none_is_absent() {
         assert!(!MemoryConfig::none().present());
         assert!(MemoryConfig::new(gb(1.0), gbps(1.0)).present());
+    }
+
+    #[test]
+    fn nan_and_infinite_values_are_rejected() {
+        // NaN passes `<= 0.0` style checks (all NaN comparisons are
+        // false), so validation must catch it explicitly.
+        let mut n = a100();
+        n.perf_peak = f64::NAN;
+        assert!(n.validate().is_err());
+        let mut n = a100();
+        n.sram = f64::INFINITY;
+        assert!(n.validate().is_err());
+        let mut n = a100();
+        n.local.bandwidth = f64::NAN;
+        let e = n.validate().unwrap_err().to_string();
+        assert!(e.contains("local"), "{e}");
+        let mut n = a100();
+        n.expanded = MemoryConfig::new(gb(480.0), -1.0);
+        assert!(n.validate().is_err());
     }
 }

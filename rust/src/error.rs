@@ -18,6 +18,13 @@ pub enum Error {
     Json(String),
     /// I/O error with path context.
     Io(String),
+    /// Malformed user input (scenario TOML, trace files) with key/line
+    /// context — a parse problem, not an invalid-but-well-formed config.
+    Parse(String),
+    /// A worker-pool job panicked; the panic was caught at the CLI
+    /// boundary and converted into a clean error (the pool itself stays
+    /// usable — `scheduler` re-raises with the job index).
+    Worker(String),
 }
 
 impl fmt::Display for Error {
@@ -29,6 +36,8 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Parse(m) => write!(f, "toml parse error: {m}"),
+            Error::Worker(m) => write!(f, "worker error: {m}"),
         }
     }
 }
@@ -38,6 +47,20 @@ impl std::error::Error for Error {}
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
         Error::Io(e.to_string())
+    }
+}
+
+impl Error {
+    /// Convert a caught panic payload (e.g. a worker-pool re-raise,
+    /// which panics with `worker pool job {i} panicked: ...`) into a
+    /// displayable [`Error::Worker`] for the CLI boundary.
+    pub fn from_panic(payload: Box<dyn std::any::Any + Send>) -> Error {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "panic with non-string payload".into());
+        Error::Worker(msg)
     }
 }
 
@@ -60,5 +83,31 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn parse_error_keeps_line_context() {
+        let e = Error::Parse("bad value for 'top_k' (line 12)".into());
+        let s = e.to_string();
+        assert!(s.contains("toml parse error"), "{s}");
+        assert!(s.contains("line 12"), "{s}");
+    }
+
+    #[test]
+    fn panic_payloads_convert_to_worker_errors() {
+        let caught = std::panic::catch_unwind(|| {
+            panic!("worker pool job 3 panicked: boom");
+        })
+        .unwrap_err();
+        let e = Error::from_panic(caught);
+        let s = e.to_string();
+        assert!(matches!(e, Error::Worker(_)));
+        assert!(s.contains("worker error"), "{s}");
+        assert!(s.contains("job 3"), "{s}");
+        // `panic!` with a formatted message yields a `String` payload;
+        // a literal yields `&'static str` — both must convert.
+        let caught = std::panic::catch_unwind(|| panic!("plain literal"))
+            .unwrap_err();
+        assert!(Error::from_panic(caught).to_string().contains("literal"));
     }
 }

@@ -20,7 +20,8 @@
 //!   model ([`compute`], [`network`], [`analytical`]), an ASTRA-SIM-like
 //!   discrete-event simulator ([`sim`]), the design-space-exploration
 //!   coordinator ([`coordinator`]), the pruned co-design optimizer
-//!   ([`optimizer`]), the declarative scenario engine ([`scenario`]),
+//!   ([`optimizer`]), the fault/goodput model ([`resilience`],
+//!   [`analytical::goodput`]), the declarative scenario engine ([`scenario`]),
 //!   figure/report drivers ([`report`]), and the PJRT runtime
 //!   ([`runtime`]).
 //! * **L2/L1 (build-time Python)** — the same cost model expressed as a JAX
@@ -78,6 +79,7 @@ pub mod network;
 pub mod optimizer;
 pub mod parallel;
 pub mod report;
+pub mod resilience;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;

@@ -12,11 +12,12 @@
 //!       [--schedule gpipe|1f1b] [--em-bandwidths GB/s,..]
 //!       [--em-capacities GB,..] [--collectives ring,hierarchical]
 //!       [--zero-stages 0,2,..] [--top-k N] [--threads N]
-//!       [--infinite-memory] [--json]
+//!       [--objective time|goodput] [--infinite-memory] [--json]
 //!       (SCENARIO = an optimize/pipeline builtin name or TOML path,
 //!        e.g. `comet optimize pipeline-transformer`; --threads N sets
 //!        the search's evaluation lanes — the result is bit-identical
-//!        at every N)
+//!        at every N; --objective goodput ranks by fault-adjusted
+//!        effective time under the spec's [resilience] model)
 //! comet figure <fig6|fig8a|fig8b|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|all>
 //!       [--backend native|des|artifact] [--out-dir DIR] [--csv]
 //! comet sweep   [--cluster PRESET] [--backend B] [--infinite-memory]
@@ -35,6 +36,7 @@ use comet::config::presets;
 use comet::coordinator::{sweep, Coordinator};
 use comet::error::{Error, Result};
 use comet::model::inputs::{derive_inputs, EvalOptions};
+use comet::optimizer::Objective;
 use comet::parallel::{footprint_per_node, Strategy, ZeroStage};
 use comet::report::FigureData;
 use comet::scenario::{
@@ -404,6 +406,13 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             }
         },
     };
+    // --objective time|goodput: ranking objective for the search. The
+    // goodput objective needs a fault model; the spec's [resilience]
+    // table supplies it (or the documented defaults when absent).
+    let objective = match args.flag("objective") {
+        None => None,
+        Some(v) => Some(Objective::parse(v)?),
+    };
     let mut coord = coordinator_for(args)?;
     if let Some(n) = threads {
         coord = coord.with_threads(n);
@@ -421,11 +430,23 @@ fn cmd_optimize(args: &Args) -> Result<()> {
                 spec.study.kind()
             )));
         }
-        // The flag outranks the spec's own `threads` study option.
+        // The flags outrank the spec's own study options.
         if let (Some(n), Study::Optimize { threads: t, .. }) =
             (threads, &mut spec.study)
         {
             *t = Some(n);
+        }
+        match (objective, &mut spec.study) {
+            (Some(o), Study::Optimize { objective: obj, .. }) => *obj = o,
+            (Some(_), _) => {
+                return Err(Error::Config(format!(
+                    "--objective applies to optimize studies; '{}' is a {} \
+                     study",
+                    spec.name,
+                    spec.study.kind()
+                )))
+            }
+            (None, _) => {}
         }
         let (fig, out) = scenario::run_optimize(&spec, &coord)?;
         emit_figure(&fig, args)?;
@@ -519,6 +540,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             k => k,
         },
         threads,
+        objective: objective.unwrap_or_default(),
     };
     let spec = ScenarioSpec {
         name: "optimize".into(),
@@ -754,7 +776,16 @@ fn run() -> Result<()> {
 }
 
 fn main() -> ExitCode {
-    match run() {
+    // Last-resort boundary for panics that escape the library — e.g. the
+    // worker pool re-raising a job panic with its index. The quiet hook
+    // suppresses the raw backtrace print (the payload message survives
+    // into the error), so the user sees one actionable line and a
+    // nonzero exit instead of a panic dump. The pool itself already
+    // contains worker panics; this converts the re-raise at the top.
+    std::panic::set_hook(Box::new(|_| {}));
+    let result =
+        std::panic::catch_unwind(run).unwrap_or_else(|p| Err(Error::from_panic(p)));
+    match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("comet: {e}");

@@ -66,7 +66,7 @@ use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::analytical::{evaluate_parts, TrainingBreakdown};
+use crate::analytical::{evaluate_parts, goodput, TrainingBreakdown};
 use crate::compute::{em_fraction, hybrid_bandwidth};
 use crate::config::ClusterConfig;
 use crate::coordinator::{Backend, Coordinator};
@@ -76,7 +76,55 @@ use crate::model::inputs::{
 };
 use crate::network::CollectiveImpl;
 use crate::parallel::{PipeSchedule, Strategy, ZeroStage};
+use crate::resilience::{checkpoint_bandwidth, FaultModel};
 use crate::workload::Workload;
+
+/// What the optimizer ranks candidates by.
+///
+/// Under [`Objective::Time`] a candidate's score **is** its evaluated
+/// iteration time, bit-for-bit — nothing in the search changes. Under
+/// [`Objective::Goodput`] the score is the *effective* time
+/// `total / efficiency`, where the efficiency folds in Young/Daly
+/// checkpoint–restart waste (from the candidate's own footprint over
+/// the effective checkpoint bandwidth), straggler inflation, and link
+/// degradation (see [`crate::analytical::goodput`]).
+///
+/// The existing analytical lower bounds stay admissible for the goodput
+/// score: efficiency is clamped to `(0, 1]`, and dividing a total by a
+/// value in `(0, 1]` is a single correctly-rounded, monotone f64
+/// operation, so `score >= total >= bound` holds bit-wise. Pruning
+/// against the incumbent k-th *score* therefore never discards a point
+/// that could reach the top-k, and search == exhaustive is preserved at
+/// every thread count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// Rank by raw per-iteration training time (the default).
+    #[default]
+    Time,
+    /// Rank by failure-aware effective time (goodput).
+    Goodput,
+}
+
+impl Objective {
+    /// Parse a CLI/scenario objective name.
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s {
+            "time" => Ok(Objective::Time),
+            "goodput" => Ok(Objective::Goodput),
+            other => Err(Error::Config(format!(
+                "unknown objective '{other}' (expected time|goodput)"
+            ))),
+        }
+    }
+
+    /// The canonical name (`time` / `goodput`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Time => "time",
+            Objective::Goodput => "goodput",
+        }
+    }
+}
 
 /// The per-branch memory/collective axes of the design lattice. Axes
 /// default to a single baseline point (local memory only, spill-sized
@@ -196,8 +244,15 @@ pub struct Candidate {
     /// Per-node footprint of the point's branch, bytes.
     pub footprint: f64,
     /// The admissible lower bound under which the point was admitted;
-    /// always `<=` `breakdown.total()`.
+    /// always `<=` `breakdown.total()` `<=` [`Candidate::score`].
     pub lower_bound: f64,
+    /// The ranking key under the optimizer's [`Objective`]: the raw
+    /// total under [`Objective::Time`] (bit-identical), the effective
+    /// time `total / efficiency` under [`Objective::Goodput`].
+    pub score: f64,
+    /// Modeled resilience efficiency in (0, 1]; exactly `1.0` under
+    /// [`Objective::Time`] or a disabled fault model.
+    pub efficiency: f64,
 }
 
 impl Candidate {
@@ -210,9 +265,10 @@ impl Candidate {
 /// The result of a search (or exhaustive enumeration).
 #[derive(Debug, Clone)]
 pub struct Outcome {
-    /// The best `top_k` candidates, ascending by (total, lattice index);
-    /// `top[0]` is the argmin. Identical between [`Optimizer::search`]
-    /// (at any thread count) and [`Optimizer::exhaustive`].
+    /// The best `top_k` candidates, ascending by (score, lattice index)
+    /// — score == total under the default time objective; `top[0]` is
+    /// the argmin. Identical between [`Optimizer::search`] (at any
+    /// thread count) and [`Optimizer::exhaustive`].
     pub top: Vec<Candidate>,
     /// Pareto frontier of the *evaluated* candidates in (compute,
     /// exposed communication), ascending compute. Under search, subtrees
@@ -270,6 +326,18 @@ impl Outcome {
                     x.footprint.to_bits(),
                     y.footprint.to_bits(),
                     "{ctx}: {which} {} footprint",
+                    x.label
+                );
+                assert_eq!(
+                    x.score.to_bits(),
+                    y.score.to_bits(),
+                    "{ctx}: {which} {} score",
+                    x.label
+                );
+                assert_eq!(
+                    x.efficiency.to_bits(),
+                    y.efficiency.to_bits(),
+                    "{ctx}: {which} {} efficiency",
                     x.label
                 );
                 let (ba, bb) = (&x.breakdown, &y.breakdown);
@@ -402,6 +470,11 @@ pub struct Optimizer<'a> {
     /// Evaluation lanes for [`Optimizer::search`] (`None` = the
     /// coordinator's pool width; `1` = the sequential driver).
     threads: Option<usize>,
+    /// Ranking objective (default: raw iteration time).
+    objective: Objective,
+    /// Fault model the goodput objective scores against (identity under
+    /// [`Objective::Time`]).
+    faults: FaultModel,
 }
 
 impl<'a> Optimizer<'a> {
@@ -464,7 +537,25 @@ impl<'a> Optimizer<'a> {
             axes,
             top_k: 5,
             threads: None,
+            objective: Objective::Time,
+            faults: FaultModel::none(),
         })
+    }
+
+    /// Rank candidates by `objective`, scoring goodput against `faults`
+    /// (validated here). With [`Objective::Time`] the fault model is
+    /// ignored and the optimizer behaves bit-identically to the
+    /// default; the same holds for [`Objective::Goodput`] with
+    /// [`FaultModel::none`], whose efficiency is exactly 1.
+    pub fn with_objective(
+        mut self,
+        objective: Objective,
+        faults: FaultModel,
+    ) -> Result<Optimizer<'a>> {
+        faults.validate()?;
+        self.objective = objective;
+        self.faults = faults;
+        Ok(self)
     }
 
     /// Keep the best `k` configurations (default 5; clamped to >= 1).
@@ -844,6 +935,40 @@ impl<'a> Optimizer<'a> {
         evaluate_parts(&st.template.layers, &params)
     }
 
+    /// The ranking key of an evaluated leaf under the active objective,
+    /// as (score, efficiency). The time objective returns the total
+    /// untouched — no arithmetic, so the disabled slice is bit-identical.
+    /// The goodput score divides by an efficiency clamped to `(0, 1]`,
+    /// a monotone correctly-rounded operation, so
+    /// `score >= total >= leaf.bound` holds bit-wise and every
+    /// bound-vs-incumbent comparison in the drivers stays admissible.
+    fn score_of(
+        &self,
+        leaf: &Leaf,
+        footprint: f64,
+        breakdown: &TrainingBreakdown,
+    ) -> (f64, f64) {
+        match self.objective {
+            Objective::Time => (breakdown.total(), 1.0),
+            Objective::Goodput => {
+                let view = self.cluster.two_level();
+                let ckpt_bw = checkpoint_bandwidth(
+                    view.bw_inter,
+                    self.cluster.node.local.bandwidth,
+                    leaf.bw_em,
+                );
+                let g = goodput::analyze(
+                    &self.faults,
+                    self.cluster.n_nodes,
+                    footprint,
+                    ckpt_bw,
+                    breakdown,
+                );
+                (breakdown.total() / g.efficiency, g.efficiency)
+            }
+        }
+    }
+
     fn candidate(
         &self,
         leaf: &Leaf,
@@ -851,20 +976,23 @@ impl<'a> Optimizer<'a> {
         breakdown: TrainingBreakdown,
     ) -> Candidate {
         let b = &self.branches[leaf.point.branch];
+        let (score, efficiency) = self.score_of(leaf, footprint, &breakdown);
         Candidate {
             label: self.label_of(b, &leaf.point),
             point: leaf.point,
             breakdown,
             footprint,
             lower_bound: leaf.bound,
+            score,
+            efficiency,
         }
     }
 
-    /// Insert a candidate's (total, lattice index) key into the sorted
+    /// Insert a candidate's (score, lattice index) key into the sorted
     /// incumbent list, keeping the best `top_k`. Shared by both drivers —
     /// the parallel merge replays exactly this update sequence.
     fn admit(&self, incumbents: &mut Vec<(f64, usize)>, cand: &Candidate) {
-        let key = (cand.total(), cand.point.index);
+        let key = (cand.score, cand.point.index);
         let pos = incumbents
             .binary_search_by(|(t, i)| {
                 t.total_cmp(&key.0).then_with(|| i.cmp(&key.1))
@@ -894,8 +1022,8 @@ impl<'a> Optimizer<'a> {
         );
         let mut top = evaluated.clone();
         top.sort_by(|a, b| {
-            a.total()
-                .total_cmp(&b.total())
+            a.score
+                .total_cmp(&b.score)
                 .then_with(|| a.point.index.cmp(&b.point.index))
         });
         top.truncate(self.top_k);
@@ -966,7 +1094,9 @@ impl<'a> Optimizer<'a> {
         let feasible_total = self.total_points() - infeasible;
 
         let (mut heap, mut seq) = self.seed_heap(&states);
-        // Incumbent top-k totals (with lattice-index tie-break).
+        // Incumbent top-k scores (with lattice-index tie-break);
+        // score == total under the default time objective, so bound
+        // comparisons against them stay admissible either way.
         let mut incumbents: Vec<(f64, usize)> = Vec::new();
         let mut evaluated: Vec<Candidate> = Vec::new();
         while let Some(e) = heap.pop() {
@@ -1032,13 +1162,14 @@ impl<'a> Optimizer<'a> {
         let feasible_total = self.total_points() - infeasible;
 
         let (mut heap, mut seq) = self.seed_heap(&states);
-        // Shared pruning threshold, f64 bits (totals are positive, so
+        // Shared pruning threshold, f64 bits (scores are positive, so
         // the bit pattern orders like the value): the k-th incumbent
-        // total once the top-k is full, +inf before. The merge step owns
-        // it between batches; workers read it before evaluating and
-        // CAS-min it with fresh totals during a batch when `top_k == 1`
-        // (any single evaluated total upper-bounds the final argmin;
-        // for k > 1 no single total bounds the k-th best, so workers
+        // score once the top-k is full, +inf before (score == total
+        // under the time objective). The merge step owns it between
+        // batches; workers read it before evaluating and CAS-min it
+        // with fresh scores during a batch when `top_k == 1` (any
+        // single evaluated score upper-bounds the final argmin score;
+        // for k > 1 no single score bounds the k-th best, so workers
         // leave it to the merge).
         let threshold = AtomicU64::new(f64::INFINITY.to_bits());
         let mut incumbents: Vec<(f64, usize)> = Vec::new();
@@ -1095,9 +1226,13 @@ impl<'a> Optimizer<'a> {
                     let st = &states[leaf.point.branch];
                     let b = self.eval_leaf(st, leaf);
                     if self.top_k == 1 {
-                        let bits = b.total().to_bits();
+                        // The threshold holds the incumbent *score* —
+                        // under the goodput objective a total would be
+                        // too tight a cut (score >= total).
+                        let (score, _) = self.score_of(leaf, st.footprint, &b);
+                        let bits = score.to_bits();
                         let mut cur = threshold.load(Ordering::Relaxed);
-                        while f64::from_bits(cur) > b.total() {
+                        while f64::from_bits(cur) > score {
                             match threshold.compare_exchange_weak(
                                 cur,
                                 bits,
@@ -1636,6 +1771,168 @@ mod tests {
             transformer_branches(1024, 8, 8),
             AxisSpec::new().collective_impls(&[]),
         );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn goodput_with_disabled_faults_is_bit_identical_to_time() {
+        // The faults-disabled slice of the goodput objective must be the
+        // time objective, bit for bit: efficiency is exactly 1.0 and
+        // `total / 1.0` is exact.
+        let coord = Coordinator::native();
+        let mk = |objective| {
+            Optimizer::new(
+                &coord,
+                presets::dgx_a100_1024(),
+                EvalOptions::default(),
+                transformer_branches(1024, 2, 128),
+                AxisSpec::new()
+                    .em_bandwidths(&[gb(250.0), gb(1000.0), gb(2039.0)]),
+            )
+            .unwrap()
+            .with_top_k(3)
+            .with_objective(objective, FaultModel::none())
+            .unwrap()
+        };
+        let time = mk(Objective::Time).search().unwrap();
+        let good = mk(Objective::Goodput).search().unwrap();
+        time.assert_bit_identical(&good, "goodput(none) vs time");
+        assert_eq!(good.best().unwrap().efficiency, 1.0);
+    }
+
+    #[test]
+    fn goodput_search_matches_exhaustive_at_every_lane_count() {
+        // The acceptance criterion: with faults enabled, search ==
+        // exhaustive (argmin / top-k / counter partition) and the
+        // parallel driver is bit-identical at 1, 2, and 8 lanes.
+        let coord = Coordinator::native().with_threads(8);
+        let faults = FaultModel {
+            mtbf_node_hours: 200.0,
+            restart_s: 120.0,
+            straggler_frac: 0.02,
+            straggler_slowdown: 1.5,
+            link_degrade_frac: 0.05,
+            link_degrade_factor: 2.0,
+            seed: 42,
+        };
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 2, 128),
+            AxisSpec::new().em_bandwidths(&[gb(250.0), gb(1000.0), gb(2039.0)]),
+        )
+        .unwrap()
+        .with_top_k(3)
+        .with_objective(Objective::Goodput, faults)
+        .unwrap();
+        let seq = opt.search_sequential().unwrap();
+        for lanes in [1usize, 2, 8] {
+            let par = opt.search_parallel(lanes).unwrap();
+            seq.assert_bit_identical(&par, &format!("goodput lanes={lanes}"));
+        }
+        let e = opt.exhaustive().unwrap();
+        assert_eq!(seq.top.len(), e.top.len());
+        for (a, b) in seq.top.iter().zip(&e.top) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.point.index, b.point.index);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+        assert_eq!(seq.evaluated + seq.pruned, e.evaluated);
+        // The admissibility chain for every reported candidate.
+        for c in seq.top.iter().chain(&seq.frontier) {
+            assert!(c.efficiency > 0.0 && c.efficiency <= 1.0);
+            assert!(
+                c.lower_bound <= c.total() && c.total() <= c.score,
+                "{}: bound {} total {} score {}",
+                c.label,
+                c.lower_bound,
+                c.total(),
+                c.score
+            );
+        }
+    }
+
+    #[test]
+    fn goodput_objective_penalizes_large_checkpoints() {
+        // Two branches with identical step times (ignore_capacity pins
+        // the EM fraction to zero, so the footprint override cannot
+        // change the evaluation) but very different checkpoint sizes.
+        // The time objective breaks the tie by lattice order — the big
+        // checkpoint wins; under failures the goodput objective flips
+        // the argmin to the small checkpoint.
+        let coord = Coordinator::native();
+        let s = Strategy::new(8, 128).unwrap();
+        let mk_branch = |label: &str, fp: f64| Branch {
+            label: label.into(),
+            workload: Transformer::t1().build(&s).unwrap(),
+            stage: ZeroStage::OsG,
+            footprint_override: Some(fp),
+            microbatches: None,
+            schedule: None,
+        };
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        let mk_opt = |objective, faults| {
+            Optimizer::new(
+                &coord,
+                presets::dgx_a100_1024(),
+                opts,
+                vec![
+                    mk_branch("big-ckpt", 10e12),
+                    mk_branch("small-ckpt", 100e9),
+                ],
+                AxisSpec::new(),
+            )
+            .unwrap()
+            .with_top_k(2)
+            .with_objective(objective, faults)
+            .unwrap()
+        };
+        let faults = FaultModel {
+            mtbf_node_hours: 100.0,
+            restart_s: 60.0,
+            ..FaultModel::none()
+        };
+        let time = mk_opt(Objective::Time, FaultModel::none());
+        let good = mk_opt(Objective::Goodput, faults);
+        let t = time.search().unwrap();
+        assert_eq!(t.best().unwrap().label, "big-ckpt");
+        let g = good.search().unwrap();
+        assert_eq!(g.best().unwrap().label, "small-ckpt");
+        assert!(g.best().unwrap().efficiency < 1.0);
+        // The flip is driver-invariant.
+        let e = good.exhaustive().unwrap();
+        assert_eq!(e.best().unwrap().label, "small-ckpt");
+        good.search_sequential()
+            .unwrap()
+            .assert_bit_identical(&good.search_parallel(4).unwrap(), "flip");
+    }
+
+    #[test]
+    fn objective_parse_and_validation() {
+        assert_eq!(Objective::parse("time").unwrap(), Objective::Time);
+        assert_eq!(Objective::parse("goodput").unwrap(), Objective::Goodput);
+        assert!(Objective::parse("speed").is_err());
+        assert_eq!(Objective::Goodput.name(), "goodput");
+        assert_eq!(Objective::default(), Objective::Time);
+        // with_objective validates the fault model.
+        let coord = Coordinator::native();
+        let bad = FaultModel {
+            straggler_frac: 2.0,
+            ..FaultModel::none()
+        };
+        let err = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 8, 8),
+            AxisSpec::new(),
+        )
+        .unwrap()
+        .with_objective(Objective::Goodput, bad);
         assert!(err.is_err());
     }
 

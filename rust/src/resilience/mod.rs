@@ -1,0 +1,276 @@
+//! Fault and resilience modeling for cluster design.
+//!
+//! At the 1k–10k-node scale the paper targets, realized utilization is
+//! governed as much by failures and stragglers as by the compute /
+//! memory / network balance the rest of the crate models. This module
+//! defines the declarative [`FaultModel`] that scenario specs carry:
+//! per-node MTBF, a straggler slowdown distribution (fraction of nodes
+//! times a slowdown factor), and link-degradation events. Everything is
+//! driven by the deterministic [`crate::util::prng`] generator, so a
+//! fault-injected run is reproducible from its seed.
+//!
+//! The model is consumed in three places:
+//! * [`crate::analytical::goodput`] turns it into a closed-form
+//!   efficiency factor (Young/Daly checkpoint waste, straggler and
+//!   link-degradation inflation);
+//! * [`crate::sim`] injects it into the discrete-event simulator
+//!   (degraded service rates plus a checkpoint–restart renewal process);
+//! * [`crate::optimizer`] scales its time objective by the efficiency
+//!   to rank candidates by goodput instead of raw step time.
+
+use crate::error::{Error, Result};
+use crate::util::prng::Rng;
+
+/// Seconds per hour, for MTBF unit conversion.
+pub const SECONDS_PER_HOUR: f64 = 3600.0;
+
+/// Declarative fault model attached to a scenario (`[resilience]`
+/// table) or supplied with `--objective goodput`.
+///
+/// The disabled model ([`FaultModel::none`]) is the identity: infinite
+/// MTBF, no stragglers, no link degradation. Every consumer must reduce
+/// to its fault-free behaviour bit-for-bit under it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultModel {
+    /// Mean time between failures of a single node, in hours.
+    /// `f64::INFINITY` disables failures (and checkpointing) entirely.
+    pub mtbf_node_hours: f64,
+    /// Wall-clock seconds to detect a failure and restart the job from
+    /// the last checkpoint (scheduling + reload, not rework).
+    pub restart_s: f64,
+    /// Fraction of nodes that are stragglers in any given step.
+    pub straggler_frac: f64,
+    /// Service-time inflation of a straggler node (>= 1). Collectives
+    /// and pipeline stages gate on the slowest participant, so one
+    /// straggler slows the whole step.
+    pub straggler_slowdown: f64,
+    /// Fraction of nodes whose links are degraded.
+    pub link_degrade_frac: f64,
+    /// Bandwidth-division factor on degraded links (>= 1; 2 = half
+    /// bandwidth).
+    pub link_degrade_factor: f64,
+    /// PRNG seed for failure-time and straggler-placement sampling.
+    pub seed: u64,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel::none()
+    }
+}
+
+impl FaultModel {
+    /// The disabled fault model: infinite MTBF, no stragglers, no link
+    /// degradation. Consumers must behave exactly as if no fault model
+    /// existed.
+    pub fn none() -> FaultModel {
+        FaultModel {
+            mtbf_node_hours: f64::INFINITY,
+            restart_s: 0.0,
+            straggler_frac: 0.0,
+            straggler_slowdown: 1.0,
+            link_degrade_frac: 0.0,
+            link_degrade_factor: 1.0,
+            seed: 42,
+        }
+    }
+
+    /// Documented defaults used by `--objective goodput` when the
+    /// scenario spec carries no `[resilience]` table: 500 h per-node
+    /// MTBF, 120 s restart, 1% stragglers at 1.5x, no link degradation.
+    pub fn default_faults() -> FaultModel {
+        FaultModel {
+            mtbf_node_hours: 500.0,
+            restart_s: 120.0,
+            straggler_frac: 0.01,
+            straggler_slowdown: 1.5,
+            link_degrade_frac: 0.0,
+            link_degrade_factor: 1.0,
+            seed: 42,
+        }
+    }
+
+    /// True when any fault dimension is active (seed alone does not
+    /// count).
+    pub fn enabled(&self) -> bool {
+        self.mtbf_node_hours.is_finite()
+            || (self.straggler_frac > 0.0 && self.straggler_slowdown > 1.0)
+            || (self.link_degrade_frac > 0.0 && self.link_degrade_factor > 1.0)
+    }
+
+    /// Validate ranges, with actionable messages.
+    pub fn validate(&self) -> Result<()> {
+        let err = |m: String| Err(Error::Config(m));
+        if !(self.mtbf_node_hours > 0.0) {
+            return err(format!(
+                "resilience: mtbf_node_hours must be > 0 (or omitted for \
+                 no failures), got {}",
+                self.mtbf_node_hours
+            ));
+        }
+        if !self.restart_s.is_finite() || self.restart_s < 0.0 {
+            return err(format!(
+                "resilience: restart_s must be finite and >= 0, got {}",
+                self.restart_s
+            ));
+        }
+        for (name, frac) in [
+            ("straggler_frac", self.straggler_frac),
+            ("link_degrade_frac", self.link_degrade_frac),
+        ] {
+            if !frac.is_finite() || !(0.0..=1.0).contains(&frac) {
+                return err(format!(
+                    "resilience: {name} must be in [0, 1], got {frac}"
+                ));
+            }
+        }
+        for (name, factor) in [
+            ("straggler_slowdown", self.straggler_slowdown),
+            ("link_degrade_factor", self.link_degrade_factor),
+        ] {
+            if !factor.is_finite() || factor < 1.0 {
+                return err(format!(
+                    "resilience: {name} must be finite and >= 1 \
+                     (1 = no effect), got {factor}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of straggler nodes on an `n`-node cluster (rounded).
+    pub fn straggler_count(&self, n_nodes: usize) -> usize {
+        ((self.straggler_frac * n_nodes as f64).round() as usize).min(n_nodes)
+    }
+
+    /// Number of nodes with degraded links on an `n`-node cluster.
+    pub fn degraded_count(&self, n_nodes: usize) -> usize {
+        ((self.link_degrade_frac * n_nodes as f64).round() as usize)
+            .min(n_nodes)
+    }
+
+    /// Cluster-level MTBF in seconds: `n` nodes failing independently
+    /// divide the per-node MTBF by `n`.
+    pub fn mtbf_cluster_s(&self, n_nodes: usize) -> f64 {
+        if !self.mtbf_node_hours.is_finite() {
+            return f64::INFINITY;
+        }
+        self.mtbf_node_hours * SECONDS_PER_HOUR / n_nodes.max(1) as f64
+    }
+
+    /// Sample the wall-clock seconds until the next cluster failure
+    /// (exponential with mean [`FaultModel::mtbf_cluster_s`]). Returns
+    /// infinity when failures are disabled.
+    pub fn time_to_failure(&self, rng: &mut Rng, n_nodes: usize) -> f64 {
+        let m = self.mtbf_cluster_s(n_nodes);
+        if !m.is_finite() {
+            return f64::INFINITY;
+        }
+        // Inverse-CDF sampling; 1 - u is in (0, 1] so ln is finite.
+        -(1.0 - rng.f64()).ln() * m
+    }
+}
+
+/// Effective checkpoint bandwidth: state is read out of the tier it
+/// lives in (expanded memory at `bw_em` when attached, local HBM at
+/// `bw_lm` otherwise) and streamed over the inter-pod network at
+/// `bw_inter`; the slower leg bounds the write. A strategy that leans
+/// on memory expansion therefore checkpoints its larger footprint at a
+/// rate the EM tier can cap, so the memory-expansion story also changes
+/// checkpoint time.
+pub fn checkpoint_bandwidth(bw_inter: f64, bw_lm: f64, bw_em: f64) -> f64 {
+    let read = if bw_em > 0.0 { bw_em } else { bw_lm };
+    bw_inter.min(read)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_disabled_and_valid() {
+        let f = FaultModel::none();
+        assert!(!f.enabled());
+        f.validate().unwrap();
+        assert_eq!(f, FaultModel::default());
+        assert!(f.mtbf_cluster_s(1024).is_infinite());
+        assert_eq!(f.straggler_count(1024), 0);
+        assert_eq!(f.degraded_count(1024), 0);
+    }
+
+    #[test]
+    fn default_faults_are_enabled_and_valid() {
+        let f = FaultModel::default_faults();
+        assert!(f.enabled());
+        f.validate().unwrap();
+        // 500 h over 1024 nodes ~ 1758 s cluster MTBF.
+        let m = f.mtbf_cluster_s(1024);
+        assert!((m - 500.0 * 3600.0 / 1024.0).abs() < 1e-9, "{m}");
+        assert_eq!(f.straggler_count(1024), 10);
+    }
+
+    #[test]
+    fn validate_rejects_bad_ranges() {
+        let cases: &[(&str, FaultModel)] = &[
+            ("mtbf", FaultModel { mtbf_node_hours: 0.0, ..FaultModel::none() }),
+            (
+                "mtbf-nan",
+                FaultModel { mtbf_node_hours: f64::NAN, ..FaultModel::none() },
+            ),
+            ("restart", FaultModel { restart_s: -1.0, ..FaultModel::none() }),
+            (
+                "frac",
+                FaultModel { straggler_frac: 1.5, ..FaultModel::none() },
+            ),
+            (
+                "slowdown",
+                FaultModel { straggler_slowdown: 0.5, ..FaultModel::none() },
+            ),
+            (
+                "degrade",
+                FaultModel {
+                    link_degrade_factor: f64::NAN,
+                    ..FaultModel::none()
+                },
+            ),
+        ];
+        for (tag, f) in cases {
+            assert!(f.validate().is_err(), "{tag} should be rejected");
+        }
+    }
+
+    #[test]
+    fn failure_sampling_is_seed_deterministic() {
+        let f = FaultModel { mtbf_node_hours: 100.0, ..FaultModel::none() };
+        let sample = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..32).map(|_| f.time_to_failure(&mut rng, 256)).collect()
+        };
+        let a: Vec<f64> = sample(7);
+        let b: Vec<f64> = sample(7);
+        let c: Vec<f64> = sample(8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let m = f.mtbf_cluster_s(256);
+        for t in &a {
+            assert!(t.is_finite() && *t >= 0.0);
+        }
+        // The empirical mean of many samples should be near the MTBF.
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| f.time_to_failure(&mut rng, 256)).sum::<f64>()
+                / n as f64;
+        assert!((mean - m).abs() / m < 0.05, "mean {mean} vs mtbf {m}");
+    }
+
+    #[test]
+    fn checkpoint_bandwidth_takes_the_slower_leg() {
+        // No EM: HBM read, network-bound.
+        assert_eq!(checkpoint_bandwidth(31.25e9, 2e12, 0.0), 31.25e9);
+        // Fast EM: still network-bound.
+        assert_eq!(checkpoint_bandwidth(31.25e9, 2e12, 2.039e12), 31.25e9);
+        // Slow EM tier caps the read-out below the network.
+        assert_eq!(checkpoint_bandwidth(31.25e9, 2e12, 10e9), 10e9);
+    }
+}

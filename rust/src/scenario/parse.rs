@@ -109,12 +109,16 @@ struct Toml<'a> {
 
 impl<'a> Toml<'a> {
     fn err(&self, msg: &str) -> Error {
-        // 1-based line number for human-friendly diagnostics.
+        // 1-based line number for human-friendly diagnostics. Every
+        // malformed-input path in the reader funnels through here, so a
+        // bad scenario file always reports what and where as a typed
+        // [`Error::Parse`] (whose Display adds the "toml parse error:"
+        // prefix) instead of panicking somewhere downstream.
         let line = 1 + self.bytes[..self.pos.min(self.bytes.len())]
             .iter()
             .filter(|&&b| b == b'\n')
             .count();
-        Error::Config(format!("toml parse error: {msg} (line {line})"))
+        Error::Parse(format!("{msg} (line {line})"))
     }
 
     fn peek(&self) -> Option<u8> {

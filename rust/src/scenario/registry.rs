@@ -50,6 +50,10 @@ const BUILTINS: &[(&str, &str)] = &[
         include_str!("../../../scenarios/pipeline_transformer.toml"),
     ),
     (
+        "resilience-transformer",
+        include_str!("../../../scenarios/resilience_transformer.toml"),
+    ),
+    (
         "cluster-compare",
         include_str!("../../../scenarios/cluster_compare.toml"),
     ),

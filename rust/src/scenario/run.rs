@@ -10,14 +10,15 @@
 //! `tests/scenario_roundtrip.rs` — the lowering here must stay
 //! numerically identical to them.
 
-use crate::analytical::TrainingBreakdown;
+use crate::analytical::{goodput, TrainingBreakdown};
 use crate::config::ClusterConfig;
 use crate::coordinator::sweep::{dlrm_nodes_per_instance, SweepSpec};
 use crate::coordinator::{Coordinator, GridSweep};
 use crate::error::{Error, Result};
 use crate::model::inputs::EvalOptions;
 use crate::network::CollectiveImpl;
-use crate::optimizer::{AxisSpec, Branch, Optimizer, Outcome};
+use crate::optimizer::{AxisSpec, Branch, Objective, Optimizer, Outcome};
+use crate::resilience::{checkpoint_bandwidth, FaultModel};
 use crate::parallel::{
     model_state_bytes, pipeline_footprint_per_node, PipeSchedule, Strategy,
     ZeroStage,
@@ -77,6 +78,17 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
             em_bandwidths_gbps,
         } => run_packing(spec, coord, *instances, packings, em_bandwidths_gbps)?,
         Study::Optimize { .. } => run_optimize(spec, coord)?.0,
+        Study::Resilience {
+            strategies,
+            mtbf_hours,
+            em_bandwidth_gbps,
+        } => run_resilience(
+            spec,
+            coord,
+            strategies,
+            mtbf_hours,
+            *em_bandwidth_gbps,
+        )?,
         Study::Pipeline {
             mp,
             pps,
@@ -999,6 +1011,7 @@ pub fn optimizer_for<'a>(
         zero_stages,
         top_k,
         threads,
+        objective,
     } = &spec.study
     else {
         return Err(Error::Config(format!(
@@ -1094,12 +1107,25 @@ pub fn optimizer_for<'a>(
         axes = axes.collective_impls(&[opts0.collective_impl]);
     }
 
+    // A goodput search with no [resilience] table still needs a fault
+    // model to rank against — fall back to the representative defaults.
+    let faults = if *objective == Objective::Goodput
+        && spec.resilience == FaultModel::none()
+    {
+        FaultModel::default_faults()
+    } else {
+        spec.resilience
+    };
     let mut opt =
         Optimizer::new(coord, spec.cluster.clone(), opts0, branches, axes)
             .map_err(|e| {
                 Error::Config(format!("scenario '{}': {e}", spec.name))
             })?
-            .with_top_k(*top_k);
+            .with_top_k(*top_k)
+            .with_objective(*objective, faults)
+            .map_err(|e| {
+                Error::Config(format!("scenario '{}': {e}", spec.name))
+            })?;
     if let Some(t) = threads {
         opt = opt.with_threads(*t);
     }
@@ -1147,6 +1173,25 @@ pub fn run_optimize(
             0.0
         });
     }
+    if matches!(
+        spec.study,
+        Study::Optimize {
+            objective: Objective::Goodput,
+            ..
+        }
+    ) {
+        fig.columns.push("Efficiency".into());
+        fig.columns.push("Effective_s".into());
+        for (row, c) in fig.rows.iter_mut().zip(&out.top) {
+            row.1.push(c.efficiency);
+            row.1.push(c.score);
+        }
+        fig.notes.push(
+            "objective: goodput — ranked by Effective_s = Total_s / \
+             efficiency under the [resilience] fault model"
+                .into(),
+        );
+    }
     fig.notes.push(format!(
         "search: evaluated {}/{} lattice points ({} pruned by bound, {} \
          infeasible)",
@@ -1160,6 +1205,107 @@ pub fn run_optimize(
     ));
     apply_columns_override(spec, &mut fig)?;
     Ok((fig, out))
+}
+
+// ---- resilience (goodput vs MTBF sweep) -----------------------------------
+
+/// Goodput sensitivity study: rows are strategies, columns are per-node
+/// MTBF values, cells are the fault-adjusted effective iteration time
+/// `total / efficiency` under the scenario's `[resilience]` model with
+/// the column's MTBF substituted in. The ideal step time is evaluated
+/// once per strategy (it does not depend on MTBF); only the analytical
+/// goodput factor varies across columns. Expanded memory is attached
+/// exactly like the fig9 grid — capacity sized to each strategy's spill
+/// over local HBM — so strategies that lean on memory expansion
+/// checkpoint a larger footprint and pay for it as MTBF shrinks.
+fn run_resilience(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    strategies: &StrategyAxis,
+    mtbf_hours: &[f64],
+    em_bandwidth_gbps: Option<f64>,
+) -> Result<FigureData> {
+    let strategies = strategies.resolve(spec.cluster.n_nodes)?;
+    let opts0 = eval_opts(spec);
+    let view = spec.cluster.two_level();
+    let bw_lm = spec.cluster.node.local.bandwidth;
+
+    // One evaluation job per strategy; checkpoint footprint and
+    // bandwidth recorded alongside for the per-column goodput factors.
+    let mut specs: Vec<SweepSpec> = Vec::with_capacity(strategies.len());
+    let mut footprints = Vec::with_capacity(strategies.len());
+    let mut ckpt_bws = Vec::with_capacity(strategies.len());
+    for s in &strategies {
+        let w = build_for(&spec.workload, s)?;
+        let fp = pipeline_footprint_per_node(
+            &w,
+            opts0.zero_stage,
+            opts0.pipe_schedule,
+            opts0.microbatches,
+        );
+        let mut cluster = spec.cluster.clone();
+        let need = (fp - cluster.node.local.capacity).max(0.0);
+        let mut bw_em = 0.0;
+        if need > 0.0 {
+            let bw = em_bandwidth_gbps.ok_or_else(|| {
+                Error::Config(format!(
+                    "scenario '{}': {} spills {:.0} GB over local memory \
+                     but no em_bandwidth_gbps is set",
+                    spec.name,
+                    s.label(),
+                    need / gb(1.0)
+                ))
+            })?;
+            bw_em = gb(bw);
+            cluster.node = cluster.node.with_expanded(need, bw_em);
+        }
+        footprints.push(fp);
+        ckpt_bws.push(checkpoint_bandwidth(view.bw_inter, bw_lm, bw_em));
+        specs.push((w, cluster, opts0));
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let mut fig = figure(spec, "(MP, DP)");
+    fig.columns = mtbf_hours.iter().map(|h| format!("MTBF_{h}h")).collect();
+    for (i, s) in strategies.iter().enumerate() {
+        let vals: Vec<f64> = mtbf_hours
+            .iter()
+            .map(|&h| {
+                let fault = FaultModel {
+                    mtbf_node_hours: h,
+                    ..spec.resilience
+                };
+                goodput::analyze(
+                    &fault,
+                    spec.cluster.n_nodes,
+                    footprints[i],
+                    ckpt_bws[i],
+                    &evals[i],
+                )
+                .effective_time(evals[i].total())
+            })
+            .collect();
+        fig.rows.push((s.label(), vals));
+    }
+
+    // Per-column argmin: where the preferred design flips as failures
+    // get more frequent.
+    let argmin_of = |col: usize| {
+        let mut best = 0;
+        for (r, row) in fig.rows.iter().enumerate() {
+            if row.1[col] < fig.rows[best].1[col] {
+                best = r;
+            }
+        }
+        fig.rows[best].0.clone()
+    };
+    let argmins: Vec<String> = (0..mtbf_hours.len())
+        .map(|c| format!("{}h: {}", mtbf_hours[c], argmin_of(c)))
+        .collect();
+    fig.notes
+        .push(format!("best per MTBF column: {}", argmins.join(", ")));
+    Ok(fig)
 }
 
 // ---- cluster comparison (Fig. 15 shape) -----------------------------------
@@ -1489,5 +1635,75 @@ mod tests {
         )
         .unwrap_err();
         assert!(e.to_string().contains("bandwidth"), "{e}");
+    }
+
+    #[test]
+    fn resilience_study_runs_and_orders_by_mtbf() {
+        let f = run_str(
+            "name = \"res\"\n\
+             [workload]\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [resilience]\nrestart_s = 120\n\
+             [study]\nkind = \"resilience\"\nmin_mp = 1\nmax_mp = 8\n\
+             mtbf_hours = [100000, 500, 50]\n",
+        )
+        .unwrap();
+        assert_eq!(f.rows.len(), 4); // MP8..MP1 on 64 nodes
+        assert_eq!(
+            f.columns,
+            vec!["MTBF_100000h", "MTBF_500h", "MTBF_50h"]
+        );
+        for (label, vals) in &f.rows {
+            // Effective time is finite, positive, and monotonically
+            // non-improving as MTBF shrinks (left-to-right).
+            for v in vals {
+                assert!(v.is_finite() && *v > 0.0, "{label}: {v}");
+            }
+            assert!(vals[0] <= vals[1] && vals[1] <= vals[2], "{label}");
+        }
+        assert!(f.notes.iter().any(|n| n.contains("best per MTBF")), "{f:?}");
+    }
+
+    #[test]
+    fn resilience_spill_without_em_bandwidth_is_an_error() {
+        // Transformer-1T at MP2 spills far past 80 GB of local HBM; the
+        // study must demand an EM bandwidth rather than silently placing
+        // the footprint nowhere.
+        let e = run_str(
+            "name = \"res\"\n\
+             [workload]\npreset = \"transformer-1t\"\n\
+             [cluster]\npreset = \"baseline\"\n\
+             [study]\nkind = \"resilience\"\nmin_mp = 2\nmax_mp = 2\n\
+             mtbf_hours = [500]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("em_bandwidth_gbps"), "{e}");
+    }
+
+    #[test]
+    fn goodput_objective_reports_efficiency_columns() {
+        let f = run_str(
+            "name = \"opt\"\n\
+             [workload]\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [resilience]\nmtbf_node_hours = 200\nrestart_s = 120\n\
+             [study]\nkind = \"optimize\"\nmin_mp = 1\nmax_mp = 8\n\
+             top_k = 3\nobjective = \"goodput\"\n\
+             [options]\ninfinite_memory = true\n",
+        )
+        .unwrap();
+        let eff = f.columns.iter().position(|c| c == "Efficiency").unwrap();
+        let es = f.columns.iter().position(|c| c == "Effective_s").unwrap();
+        let total = f.columns.iter().position(|c| c == "Total_s").unwrap();
+        for (label, vals) in &f.rows {
+            assert!(vals[eff] > 0.0 && vals[eff] <= 1.0, "{label}");
+            // Effective_s = Total_s / efficiency >= Total_s.
+            assert!(vals[es] >= vals[total], "{label}");
+        }
+        // Rows are ranked by the goodput score, not raw time.
+        for w in f.rows.windows(2) {
+            assert!(w[0].1[es] <= w[1].1[es]);
+        }
+        assert!(f.notes.iter().any(|n| n.contains("goodput")), "{f:?}");
     }
 }

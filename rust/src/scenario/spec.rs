@@ -15,7 +15,9 @@ use crate::config::{presets, serde_io, ClusterConfig};
 use crate::coordinator::Coordinator;
 use crate::error::{Error, Result};
 use crate::network::CollectiveImpl;
+use crate::optimizer::Objective;
 use crate::parallel::{PipeSchedule, Strategy, ZeroStage};
+use crate::resilience::FaultModel;
 use crate::util::json::Value;
 use crate::workload::dlrm::Dlrm;
 use crate::workload::gemm::DenseGemm;
@@ -36,6 +38,9 @@ pub struct ScenarioSpec {
     pub study: Study,
     /// Evaluation options applied to every point.
     pub options: OptionsSpec,
+    /// Fault model for goodput objectives and `resilience` studies
+    /// (the `[resilience]` table; defaults to no faults).
+    pub resilience: FaultModel,
     /// Output presentation.
     pub output: OutputSpec,
 }
@@ -197,6 +202,23 @@ pub enum Study {
         /// driver). The outcome is bit-identical at every width — this
         /// only trades wall-clock.
         threads: Option<usize>,
+        /// Ranking objective: raw iteration time (default) or
+        /// fault-adjusted goodput under the scenario's `[resilience]`
+        /// model ([`crate::optimizer::Objective`]).
+        objective: Objective,
+    },
+    /// Goodput sensitivity study: fault-adjusted effective iteration
+    /// time per strategy across a node-MTBF sweep, using the scenario's
+    /// `[resilience]` table for everything but the swept MTBF. Shows
+    /// where the preferred design flips as failures get more frequent.
+    Resilience {
+        /// Strategy axis (rows).
+        strategies: StrategyAxis,
+        /// Per-node MTBF values swept, hours (columns).
+        mtbf_hours: Vec<f64>,
+        /// Expanded-memory bandwidth attached where the footprint
+        /// spills, GB/s (`None` = never attach expanded memory).
+        em_bandwidth_gbps: Option<f64>,
     },
     /// Pipeline-parallelism case study: at a fixed MP degree, sweep the
     /// PP degree x microbatch count x schedule on one cluster (DP is
@@ -241,6 +263,7 @@ impl Study {
             Study::ClusterSize { .. } => "cluster-size",
             Study::Packing { .. } => "packing",
             Study::Optimize { .. } => "optimize",
+            Study::Resilience { .. } => "resilience",
             Study::Pipeline { .. } => "pipeline",
             Study::ClusterCompare { .. } => "cluster-compare",
         }
@@ -790,6 +813,69 @@ fn cluster_from_json(v: &Value) -> Result<ClusterConfig> {
     }
 }
 
+fn fault_model_from_json(v: &Value) -> Result<FaultModel> {
+    let m = map_of(v, "resilience")?;
+    check_keys(
+        m,
+        &[
+            "mtbf_node_hours",
+            "restart_s",
+            "straggler_frac",
+            "straggler_slowdown",
+            "link_degrade_frac",
+            "link_degrade_factor",
+            "seed",
+        ],
+        "resilience",
+    )?;
+    let mut f = FaultModel::none();
+    if let Some(x) = opt_f64(m, "mtbf_node_hours", "resilience")? {
+        f.mtbf_node_hours = x;
+    }
+    if let Some(x) = opt_f64(m, "restart_s", "resilience")? {
+        f.restart_s = x;
+    }
+    if let Some(x) = opt_f64(m, "straggler_frac", "resilience")? {
+        f.straggler_frac = x;
+    }
+    if let Some(x) = opt_f64(m, "straggler_slowdown", "resilience")? {
+        f.straggler_slowdown = x;
+    }
+    if let Some(x) = opt_f64(m, "link_degrade_frac", "resilience")? {
+        f.link_degrade_frac = x;
+    }
+    if let Some(x) = opt_f64(m, "link_degrade_factor", "resilience")? {
+        f.link_degrade_factor = x;
+    }
+    if let Some(n) = opt_usize(m, "seed", "resilience")? {
+        f.seed = n as u64;
+    }
+    f.validate()?;
+    Ok(f)
+}
+
+fn fault_model_to_json(f: &FaultModel) -> Value {
+    let mut m = BTreeMap::new();
+    // The disabled MTBF is infinity, which TOML/JSON numbers cannot
+    // carry — omit it (the parse default) rather than serialize it.
+    if f.mtbf_node_hours.is_finite() {
+        m.insert("mtbf_node_hours".into(), Value::Num(f.mtbf_node_hours));
+    }
+    m.insert("restart_s".into(), Value::Num(f.restart_s));
+    m.insert("straggler_frac".into(), Value::Num(f.straggler_frac));
+    m.insert(
+        "straggler_slowdown".into(),
+        Value::Num(f.straggler_slowdown),
+    );
+    m.insert("link_degrade_frac".into(), Value::Num(f.link_degrade_frac));
+    m.insert(
+        "link_degrade_factor".into(),
+        Value::Num(f.link_degrade_factor),
+    );
+    m.insert("seed".into(), Value::Num(f.seed as f64));
+    Value::Obj(m)
+}
+
 impl Study {
     fn strategies_axis(m: &BTreeMap<String, Value>) -> Result<StrategyAxis> {
         match m.get("strategies") {
@@ -967,6 +1053,7 @@ impl Study {
                         "zero_stages",
                         "top_k",
                         "threads",
+                        "objective",
                     ],
                     "study",
                 )?;
@@ -990,6 +1077,10 @@ impl Study {
                         "scenario: optimize threads must be >= 1".into(),
                     ));
                 }
+                let objective = match opt_str(m, "objective", "study")? {
+                    Some(s) => Objective::parse(&s)?,
+                    None => Objective::Time,
+                };
                 Ok(Study::Optimize {
                     strategies: Self::strategies_axis(m)?,
                     em_bandwidths_gbps: f64_list(
@@ -1002,6 +1093,43 @@ impl Study {
                     zero_stages,
                     top_k,
                     threads,
+                    objective,
+                })
+            }
+            "resilience" => {
+                check_keys(
+                    m,
+                    &[
+                        "kind",
+                        "strategies",
+                        "min_mp",
+                        "max_mp",
+                        "max_pp",
+                        "mtbf_hours",
+                        "em_bandwidth_gbps",
+                    ],
+                    "study",
+                )?;
+                let mtbf_hours = f64_list(m, "mtbf_hours", "study")?;
+                if mtbf_hours.is_empty() {
+                    return Err(Error::Config(
+                        "scenario: resilience study requires a non-empty \
+                         'mtbf_hours' sweep"
+                            .into(),
+                    ));
+                }
+                for &h in &mtbf_hours {
+                    if !(h > 0.0) {
+                        return Err(Error::Config(format!(
+                            "scenario: mtbf_hours entries must be positive, \
+                             got {h}"
+                        )));
+                    }
+                }
+                Ok(Study::Resilience {
+                    strategies: Self::strategies_axis(m)?,
+                    mtbf_hours,
+                    em_bandwidth_gbps: opt_f64(m, "em_bandwidth_gbps", "study")?,
                 })
             }
             "pipeline" => {
@@ -1245,6 +1373,7 @@ impl Study {
                 zero_stages,
                 top_k,
                 threads,
+                objective,
             } => {
                 axis_to_json(&mut m, strategies);
                 if !em_bandwidths_gbps.is_empty() {
@@ -1283,6 +1412,25 @@ impl Study {
                 m.insert("top_k".into(), Value::Num(*top_k as f64));
                 if let Some(t) = threads {
                     m.insert("threads".into(), Value::Num(*t as f64));
+                }
+                // Emitted only when non-default so pre-objective exports
+                // stay byte-identical.
+                if *objective != Objective::Time {
+                    m.insert(
+                        "objective".into(),
+                        Value::Str(objective.name().into()),
+                    );
+                }
+            }
+            Study::Resilience {
+                strategies,
+                mtbf_hours,
+                em_bandwidth_gbps,
+            } => {
+                axis_to_json(&mut m, strategies);
+                m.insert("mtbf_hours".into(), nums(mtbf_hours));
+                if let Some(x) = em_bandwidth_gbps {
+                    m.insert("em_bandwidth_gbps".into(), Value::Num(*x));
                 }
             }
             Study::Pipeline {
@@ -1543,7 +1691,7 @@ impl ScenarioSpec {
             m,
             &[
                 "name", "title", "workload", "cluster", "study", "options",
-                "output",
+                "resilience", "output",
             ],
             "scenario",
         )?;
@@ -1577,6 +1725,10 @@ impl ScenarioSpec {
             Some(v) => OptionsSpec::from_json(v)?,
             None => OptionsSpec::default(),
         };
+        let resilience = match m.get("resilience") {
+            Some(v) => fault_model_from_json(v)?,
+            None => FaultModel::none(),
+        };
         let output = match m.get("output") {
             Some(v) => OutputSpec::from_json(v)?,
             None => OutputSpec::default(),
@@ -1588,6 +1740,7 @@ impl ScenarioSpec {
             cluster,
             study,
             options,
+            resilience,
             output,
         })
     }
@@ -1606,6 +1759,11 @@ impl ScenarioSpec {
         }
         m.insert("study".into(), self.study.to_json());
         m.insert("options".into(), self.options.to_json());
+        // Emitted only when non-default so pre-resilience exports stay
+        // byte-identical.
+        if self.resilience != FaultModel::none() {
+            m.insert("resilience".into(), fault_model_to_json(&self.resilience));
+        }
         m.insert("output".into(), self.output.to_json());
         Value::Obj(m)
     }
@@ -1957,6 +2115,96 @@ mod tests {
             "name = \"opt\"\n[study]\nkind = \"optimize\"\nthreads = 0\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn optimize_objective_parses_and_roundtrips() {
+        // objective defaults to time and is then not serialized...
+        let d = ScenarioSpec::parse_str(
+            "name = \"opt\"\n[study]\nkind = \"optimize\"\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            d.study,
+            Study::Optimize {
+                objective: Objective::Time,
+                ..
+            }
+        ));
+        assert!(!d.to_toml().unwrap().contains("objective"));
+        // ...goodput parses, roundtrips, and combines with [resilience].
+        let s = ScenarioSpec::parse_str(
+            "name = \"opt\"\n[resilience]\nmtbf_node_hours = 200\n\
+             restart_s = 90\nstraggler_frac = 0.02\n\
+             straggler_slowdown = 1.5\nseed = 7\n\
+             [study]\nkind = \"optimize\"\nobjective = \"goodput\"\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            s.study,
+            Study::Optimize {
+                objective: Objective::Goodput,
+                ..
+            }
+        ));
+        assert_eq!(s.resilience.mtbf_node_hours, 200.0);
+        assert_eq!(s.resilience.restart_s, 90.0);
+        assert_eq!(s.resilience.seed, 7);
+        let back = ScenarioSpec::parse_str(&s.to_toml().unwrap()).unwrap();
+        assert_eq!(s, back);
+        // Unknown objectives and invalid fault models are rejected.
+        assert!(ScenarioSpec::parse_str(
+            "name = \"x\"\n[study]\nkind = \"optimize\"\n\
+             objective = \"carbon\"\n"
+        )
+        .is_err());
+        assert!(ScenarioSpec::parse_str(
+            "name = \"x\"\n[resilience]\nstraggler_frac = 2.0\n\
+             [study]\nkind = \"optimize\"\n"
+        )
+        .is_err());
+        assert!(ScenarioSpec::parse_str(
+            "name = \"x\"\n[resilience]\nbogus = 1\n\
+             [study]\nkind = \"optimize\"\n"
+        )
+        .unwrap_err()
+        .to_string()
+        .contains("bogus"));
+    }
+
+    #[test]
+    fn resilience_study_parses_and_roundtrips() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"res\"\n[resilience]\nrestart_s = 120\n\
+             mtbf_node_hours = 500\n\
+             [study]\nkind = \"resilience\"\nstrategies = \"pow2\"\n\
+             min_mp = 2\nmax_mp = 128\nmtbf_hours = [2000, 500, 50]\n\
+             em_bandwidth_gbps = 2039\n",
+        )
+        .unwrap();
+        match &s.study {
+            Study::Resilience {
+                mtbf_hours,
+                em_bandwidth_gbps,
+                ..
+            } => {
+                assert_eq!(mtbf_hours, &[2000.0, 500.0, 50.0]);
+                assert_eq!(*em_bandwidth_gbps, Some(2039.0));
+            }
+            other => panic!("{other:?}"),
+        }
+        let back = ScenarioSpec::parse_str(&s.to_toml().unwrap()).unwrap();
+        assert_eq!(s, back);
+        // The MTBF sweep is required, non-empty, and positive.
+        for doc in [
+            "name = \"r\"\n[study]\nkind = \"resilience\"\n",
+            "name = \"r\"\n[study]\nkind = \"resilience\"\n\
+             mtbf_hours = []\n",
+            "name = \"r\"\n[study]\nkind = \"resilience\"\n\
+             mtbf_hours = [-5]\n",
+        ] {
+            assert!(ScenarioSpec::parse_str(doc).is_err(), "{doc}");
+        }
     }
 
     #[test]

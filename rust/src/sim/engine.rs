@@ -697,6 +697,198 @@ fn simulate_pipeline(inputs: &ModelInputs) -> SimResult {
     }
 }
 
+// ---- fault injection ------------------------------------------------------
+
+/// What happened on the fault timeline of a goodput simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEventKind {
+    /// A node failed; all uncommitted work since the last checkpoint is
+    /// lost.
+    Failure {
+        /// The failed node's index (sampled deterministically).
+        node: usize,
+    },
+    /// The job finished restarting from the last checkpoint.
+    Restart,
+    /// A checkpoint write completed; work up to here is committed.
+    Checkpoint,
+}
+
+/// One entry of the deterministic fault-event trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Wall-clock time of the event, seconds.
+    pub at_s: f64,
+    /// The event.
+    pub kind: FaultEventKind,
+}
+
+/// Result of a checkpoint–restart goodput simulation
+/// ([`simulate_goodput`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoodputSim {
+    /// Fault-free per-step time from the plain DES, seconds.
+    pub ideal_step_s: f64,
+    /// Straggler/link-degraded per-step time ([`simulate_faulty`]).
+    pub step_s: f64,
+    /// Useful (committed) work over total wall-clock, relative to the
+    /// fault-free rate — the DES counterpart of
+    /// [`crate::analytical::goodput::Goodput::efficiency`].
+    pub efficiency: f64,
+    /// Wall-clock seconds simulated.
+    pub wall_s: f64,
+    /// Failures injected.
+    pub failures: usize,
+    /// Checkpoints committed.
+    pub checkpoints: usize,
+    /// The full event trace (failure/restart/checkpoint), in time order;
+    /// identical across runs for the same seed.
+    pub trace: Vec<FaultEvent>,
+}
+
+/// Run the DES with straggler and link-degradation service rates
+/// injected: stragglers gate every barrier (collectives, pipeline
+/// stages), so any straggler slows the whole job's compute and memory
+/// streams by its slowdown factor, and degraded links divide the
+/// network bandwidths. The disabled fault model returns exactly
+/// [`simulate`]'s result.
+pub fn simulate_faulty(
+    inputs: &ModelInputs,
+    fault: &crate::resilience::FaultModel,
+    n_nodes: usize,
+) -> SimResult {
+    let mut inj = inputs.clone();
+    if fault.straggler_count(n_nodes) > 0 {
+        let s = fault.straggler_slowdown;
+        inj.params.perf_peak /= s;
+        inj.params.bw_lm /= s;
+        if inj.params.bw_em > 0.0 {
+            inj.params.bw_em /= s;
+        }
+    }
+    if fault.degraded_count(n_nodes) > 0 {
+        let f = fault.link_degrade_factor;
+        inj.params.bw_intra /= f;
+        inj.params.bw_inter /= f;
+    }
+    simulate(&inj)
+}
+
+/// Hard cap on simulated fault events — bounds the renewal loop when
+/// the model predicts essentially no forward progress (MTBF below the
+/// restart + checkpoint cycle).
+const MAX_FAULT_EVENTS: usize = 100_000;
+
+/// Checkpoint–restart renewal simulation over `horizon_steps` training
+/// steps: work proceeds at the straggler/link-degraded step rate,
+/// checkpoints are written every Young/Daly interval (costing the
+/// footprint over the effective checkpoint bandwidth), and failures
+/// arrive as a Poisson process at the cluster MTBF, each losing the
+/// uncommitted work since the last checkpoint and charging the restart
+/// time. Failure times and failed-node indices come from the
+/// deterministic PRNG seeded by `fault.seed` — the trace and totals are
+/// bit-identical across runs.
+pub fn simulate_goodput(
+    inputs: &ModelInputs,
+    fault: &crate::resilience::FaultModel,
+    n_nodes: usize,
+    horizon_steps: usize,
+) -> GoodputSim {
+    use crate::analytical::goodput;
+    use crate::resilience::checkpoint_bandwidth;
+    use crate::util::prng::Rng;
+
+    let ideal = simulate(inputs);
+    let faulty = simulate_faulty(inputs, fault, n_nodes);
+    let ideal_step_s = ideal.breakdown.total();
+    let step_s = faulty.breakdown.total();
+
+    // Shared checkpoint geometry with the analytical model: same
+    // footprint, same bandwidth rule, same Young/Daly interval.
+    let p = &inputs.params;
+    let ckpt_bw = checkpoint_bandwidth(p.bw_inter, p.bw_lm, p.bw_em);
+    let g = goodput::analyze(
+        fault,
+        n_nodes,
+        p.footprint,
+        ckpt_bw,
+        &faulty.breakdown,
+    );
+    let (tau, delta) = (g.ckpt_interval_s, g.ckpt_write_s);
+
+    let horizon_s = horizon_steps as f64 * step_s;
+    let mut rng = Rng::new(fault.seed);
+    let mut trace: Vec<FaultEvent> = Vec::new();
+    let mut wall = 0.0f64;
+    let mut committed = 0.0f64; // checkpoint-protected useful seconds
+    let mut failures = 0usize;
+    let mut checkpoints = 0usize;
+    let mut next_fail = fault.time_to_failure(&mut rng, n_nodes);
+    // delta == 0 with a finite MTBF is the free-continuous-checkpoint
+    // limit (tau -> 0): a failure then loses no work, only restart time.
+    let continuous = delta == 0.0 && !tau.is_finite();
+
+    // Work segments always start at a committed boundary: run until the
+    // next checkpoint is due (paying the write) or the horizon is done.
+    // A failure striking before that milestone — including mid-write —
+    // loses the whole uncommitted segment and charges the restart.
+    while committed < horizon_s && trace.len() < MAX_FAULT_EVENTS {
+        let to_ckpt = if tau.is_finite() { tau } else { f64::INFINITY };
+        let to_done = horizon_s - committed;
+        let work = to_ckpt.min(to_done);
+        let write = if to_ckpt <= to_done { delta } else { 0.0 };
+        if next_fail <= wall + work + write {
+            let node = rng.below(n_nodes.max(1));
+            trace.push(FaultEvent {
+                at_s: next_fail,
+                kind: FaultEventKind::Failure { node },
+            });
+            failures += 1;
+            if continuous {
+                committed += (next_fail - wall).min(to_done);
+            }
+            wall = next_fail + fault.restart_s;
+            trace.push(FaultEvent {
+                at_s: wall,
+                kind: FaultEventKind::Restart,
+            });
+            next_fail = wall + fault.time_to_failure(&mut rng, n_nodes);
+            continue;
+        }
+        if to_done < to_ckpt {
+            wall += to_done;
+            committed += to_done;
+            break;
+        }
+        wall += to_ckpt + delta;
+        committed += to_ckpt;
+        checkpoints += 1;
+        trace.push(FaultEvent {
+            at_s: wall,
+            kind: FaultEventKind::Checkpoint,
+        });
+    }
+
+    // Efficiency relative to the fault-free rate: committed useful work
+    // happened at the degraded step rate, so fold the straggler/link
+    // inflation in alongside the checkpoint–restart wall-clock waste.
+    let rate = if step_s > 0.0 { ideal_step_s / step_s } else { 1.0 };
+    let efficiency = if wall > 0.0 {
+        (committed / wall) * rate
+    } else {
+        1.0
+    };
+    GoodputSim {
+        ideal_step_s,
+        step_s,
+        efficiency,
+        wall_s: wall,
+        failures,
+        checkpoints,
+        trace,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -947,5 +1139,143 @@ mod tests {
             d.wg_exposed_comm,
             a.wg_exposed_comm
         );
+    }
+
+    #[test]
+    fn faulty_with_disabled_model_matches_plain_des_bitwise() {
+        let inp = inputs(8, 128);
+        let fault = crate::resilience::FaultModel::none();
+        assert_eq!(simulate_faulty(&inp, &fault, 1024), simulate(&inp));
+    }
+
+    #[test]
+    fn faulty_stragglers_and_degraded_links_slow_the_job() {
+        let inp = inputs(8, 128);
+        let mut fault = crate::resilience::FaultModel::none();
+        fault.straggler_frac = 0.02;
+        fault.straggler_slowdown = 1.5;
+        let base = simulate(&inp).breakdown.total();
+        let slow = simulate_faulty(&inp, &fault, 1024).breakdown.total();
+        assert!(slow > base, "straggler {slow} vs base {base}");
+        fault.link_degrade_frac = 0.05;
+        fault.link_degrade_factor = 2.0;
+        let slower = simulate_faulty(&inp, &fault, 1024).breakdown.total();
+        assert!(slower > slow, "degraded {slower} vs straggler {slow}");
+    }
+
+    #[test]
+    fn goodput_sim_disabled_faults_are_free() {
+        let inp = inputs(8, 128);
+        let fault = crate::resilience::FaultModel::none();
+        let des = simulate_goodput(&inp, &fault, 1024, 50);
+        assert_eq!(des.efficiency, 1.0);
+        assert_eq!(des.failures, 0);
+        assert_eq!(des.checkpoints, 0);
+        assert!(des.trace.is_empty());
+        assert_eq!(des.step_s.to_bits(), des.ideal_step_s.to_bits());
+    }
+
+    #[test]
+    fn goodput_sim_is_seed_deterministic() {
+        let inp = inputs(8, 128);
+        let mut fault = crate::resilience::FaultModel::default_faults();
+        fault.mtbf_node_hours = 50.0;
+        // Size the horizon to ~10 cluster MTBFs so failures certainly
+        // land, regardless of the absolute step time.
+        let step = simulate(&inp).breakdown.total();
+        let steps =
+            ((10.0 * fault.mtbf_cluster_s(1024)) / step).ceil() as usize;
+        let a = simulate_goodput(&inp, &fault, 1024, steps);
+        let b = simulate_goodput(&inp, &fault, 1024, steps);
+        assert_eq!(a, b);
+        let inp2 = inp.clone();
+        let c = std::thread::spawn(move || {
+            simulate_goodput(&inp2, &fault, 1024, steps)
+        })
+        .join()
+        .unwrap();
+        assert_eq!(a, c);
+        assert!(a.failures >= 1, "expected failures, got {:?}", a);
+        let mut other = fault;
+        other.seed = 7;
+        let d = simulate_goodput(&inp, &other, 1024, steps);
+        assert_ne!(a.trace, d.trace);
+    }
+
+    #[test]
+    fn goodput_sim_matches_analytical_in_failure_dominated_corner() {
+        use crate::analytical::goodput;
+        use crate::resilience::{checkpoint_bandwidth, FaultModel};
+        let inp = inputs(8, 128);
+        let step = simulate(&inp).breakdown.total();
+        let n = 1024;
+        // Engineer the renewal geometry in units of the step time so the
+        // statistics converge: MTBF = 200 steps, checkpoint write =
+        // 2 steps, restart = 5 steps, horizon = 20k steps (~120
+        // failures, ~700 checkpoints). `ignore_capacity` pins em_frac,
+        // so overriding the footprint changes only checkpoint size.
+        let mut fault = FaultModel::none();
+        fault.mtbf_node_hours = 200.0 * step * n as f64 / 3600.0;
+        fault.restart_s = 5.0 * step;
+        let ckpt_bw = checkpoint_bandwidth(
+            inp.params.bw_inter,
+            inp.params.bw_lm,
+            inp.params.bw_em,
+        );
+        let mut inp2 = inp.clone();
+        inp2.params.footprint = 2.0 * step * ckpt_bw;
+        let des = simulate_goodput(&inp2, &fault, n, 20_000);
+        let g = goodput::analyze(
+            &fault,
+            n,
+            inp2.params.footprint,
+            ckpt_bw,
+            &simulate(&inp2).breakdown,
+        );
+        assert!(des.failures > 30, "{}", des.failures);
+        assert!(des.checkpoints > 100, "{}", des.checkpoints);
+        assert!((0.3..1.0).contains(&des.efficiency), "{}", des.efficiency);
+        assert!(
+            (des.efficiency - g.efficiency).abs() < 0.06,
+            "DES {} vs analytical {}",
+            des.efficiency,
+            g.efficiency
+        );
+    }
+
+    #[test]
+    fn goodput_sim_matches_analytical_in_straggler_dominated_corner() {
+        use crate::analytical::goodput;
+        use crate::resilience::{checkpoint_bandwidth, FaultModel};
+        let inp = inputs(2, 512);
+        let mut fault = FaultModel::none();
+        fault.straggler_frac = 0.02;
+        fault.straggler_slowdown = 1.5;
+        let des = simulate_goodput(&inp, &fault, 1024, 100);
+        assert_eq!(des.failures, 0);
+        assert!(des.trace.is_empty());
+        assert!(des.step_s > des.ideal_step_s);
+        let ckpt_bw = checkpoint_bandwidth(
+            inp.params.bw_inter,
+            inp.params.bw_lm,
+            inp.params.bw_em,
+        );
+        let g = goodput::analyze(
+            &fault,
+            1024,
+            inp.params.footprint,
+            ckpt_bw,
+            &simulate_faulty(&inp, &fault, 1024).breakdown,
+        );
+        // The analytical model charges the full 1/slowdown; the DES only
+        // slows compute/memory streams, not the network, so agreement is
+        // loose — but both must land in the same regime.
+        assert!(
+            rel_diff(des.efficiency, g.efficiency) < 0.25,
+            "DES {} vs analytical {}",
+            des.efficiency,
+            g.efficiency
+        );
+        assert!(des.efficiency < 1.0, "{}", des.efficiency);
     }
 }

@@ -5,4 +5,7 @@ pub mod engine;
 pub mod event;
 pub mod link;
 
-pub use engine::{simulate, SimResult, SimStats};
+pub use engine::{
+    simulate, simulate_faulty, simulate_goodput, FaultEvent, FaultEventKind,
+    GoodputSim, SimResult, SimStats,
+};

@@ -330,6 +330,70 @@ fn workload_trace_carries_pipeline_degree() {
 }
 
 #[test]
+fn optimize_goodput_objective_output_is_byte_identical_across_threads() {
+    // The resilience acceptance check: the goodput-objective search must
+    // also be thread-count invariant, byte for byte, on the JSON output.
+    let run = |threads: &str| {
+        let (ok, stdout, stderr) = comet(&[
+            "optimize",
+            "optimize-transformer",
+            "--objective",
+            "goodput",
+            "--threads",
+            threads,
+            "--json",
+        ]);
+        assert!(ok, "--threads {threads} stderr:\n{stderr}");
+        assert!(stdout.contains("\"id\""), "{stdout}");
+        stdout
+    };
+    let one = run("1");
+    let four = run("4");
+    assert_eq!(one, four, "thread count changed the goodput output");
+    // The goodput ranking reports effective seconds and efficiency.
+    assert!(one.contains("Effective_s"), "{one}");
+    assert!(one.contains("Efficiency"), "{one}");
+}
+
+#[test]
+fn optimize_rejects_bad_objective() {
+    let (ok, _, stderr) = comet(&[
+        "optimize",
+        "optimize-transformer",
+        "--objective",
+        "carbon",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("objective"), "{stderr}");
+}
+
+#[test]
+fn scenario_run_resilience_builtin() {
+    let (ok, stdout, stderr) =
+        comet(&["scenario", "run", "resilience-transformer"]);
+    assert!(ok, "stderr:\n{stderr}");
+    assert!(stdout.contains("MTBF_500h"), "{stdout}");
+    assert!(stdout.contains("best per MTBF"), "{stdout}");
+}
+
+#[test]
+fn malformed_scenario_file_fails_cleanly_without_panic() {
+    // A syntactically broken TOML must produce a one-line parse error
+    // with a line number on stderr, a nonzero exit, and no panic spew.
+    let dir = std::env::temp_dir().join("comet_cli_malformed");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("broken.toml");
+    std::fs::write(&path, "name = \"broken\"\n[workload\nkind = 3\n")
+        .unwrap();
+    let (ok, _, stderr) = comet(&["scenario", "run", path.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(stderr.contains("toml parse error"), "{stderr}");
+    assert!(stderr.contains("line 2"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+    assert!(!stderr.contains("backtrace"), "{stderr}");
+}
+
+#[test]
 fn validate_passes() {
     let (ok, stdout, stderr) = comet(&["validate"]);
     assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");

@@ -2,7 +2,7 @@
 //! offline crate set has no proptest, so comet::util::prng drives the
 //! generation; every case count is fixed and seeds are printed on failure).
 
-use comet::analytical::evaluate;
+use comet::analytical::{evaluate, goodput};
 use comet::compute::{gemm_traffic, hybrid_bandwidth};
 use comet::config::presets;
 use comet::coordinator::Coordinator;
@@ -10,8 +10,9 @@ use comet::model::inputs::{decompose, derive_inputs, resolve_inputs, EvalOptions
 use comet::network::{collective_cost, CollectiveImpl, CollectiveSpec};
 use comet::optimizer::Outcome;
 use comet::parallel::{model_state_bytes, PipeSchedule, Strategy, ZeroStage};
+use comet::resilience::{checkpoint_bandwidth, FaultModel};
 use comet::scenario::{optimizer_for, ScenarioSpec};
-use comet::sim::simulate;
+use comet::sim::{simulate, simulate_goodput};
 use comet::util::prng::Rng;
 use comet::util::stats::rel_diff;
 use comet::workload::dlrm::Dlrm;
@@ -449,6 +450,211 @@ fn parallel_search_matches_sequential_and_exhaustive_random_lattices() {
                 c.total()
             );
         }
+    }
+}
+
+#[test]
+fn evaluate_and_goodput_never_nan_on_random_valid_configs() {
+    // Robustness contract: any cluster that passes `validate()` combined
+    // with any fault model that passes `FaultModel::validate()` yields
+    // finite costs through the whole stack — evaluator, goodput
+    // efficiency model, and effective time — never NaN or ±inf.
+    let mut rng = Rng::new(6161);
+    for case in 0..60 {
+        let mut c = presets::dgx_a100_1024();
+        c.node.perf_peak = rng.log_range(1e12, 1e17);
+        c.node.sram = rng.log_range(1e6, 1e11);
+        c.node.local.capacity = rng.log_range(1e10, 1e12);
+        c.node.local.bandwidth = rng.log_range(1e11, 2e13);
+        if rng.f64() < 0.5 {
+            c.node.expanded.capacity = rng.log_range(1e9, 1e12);
+            c.node.expanded.bandwidth = rng.log_range(1e10, 2e12);
+        }
+        c.validate().expect("generator must emit valid clusters");
+        let sweep = Strategy::sweep_bounded(c.n_nodes, 1, 128).unwrap();
+        let s = *rng.choose(&sweep);
+        let w = Transformer::t1().build(&s).unwrap();
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        let b = evaluate(&derive_inputs(&w, &c, &opts).unwrap());
+        assert!(
+            b.total().is_finite() && b.total() > 0.0,
+            "case {case}: total {}",
+            b.total()
+        );
+
+        let fault = FaultModel {
+            mtbf_node_hours: if rng.f64() < 0.2 {
+                f64::INFINITY
+            } else {
+                rng.log_range(1.0, 1e7)
+            },
+            restart_s: rng.range(0.0, 3600.0),
+            straggler_frac: rng.range(0.0, 0.2),
+            straggler_slowdown: rng.range(1.0, 4.0),
+            link_degrade_frac: rng.range(0.0, 0.2),
+            link_degrade_factor: rng.range(1.0, 4.0),
+            seed: case as u64,
+        };
+        fault.validate().expect("generator must emit valid fault models");
+        let ckpt_bw = checkpoint_bandwidth(
+            rng.log_range(1e9, 1e12),
+            c.node.local.bandwidth,
+            c.node.expanded.bandwidth,
+        );
+        let g = goodput::analyze(
+            &fault,
+            c.n_nodes,
+            rng.log_range(1e9, 1e13),
+            ckpt_bw,
+            &b,
+        );
+        assert!(
+            g.efficiency.is_finite()
+                && g.efficiency > 0.0
+                && g.efficiency <= 1.0,
+            "case {case}: efficiency {}",
+            g.efficiency
+        );
+        assert!(
+            g.ckpt_write_s.is_finite() && g.ckpt_write_s >= 0.0,
+            "case {case}: ckpt_write_s {}",
+            g.ckpt_write_s
+        );
+        let t = g.effective_time(b.total());
+        assert!(
+            t.is_finite() && t >= b.total(),
+            "case {case}: effective {t} vs total {}",
+            b.total()
+        );
+    }
+}
+
+#[test]
+fn goodput_search_matches_exhaustive_random_lattices_across_threads() {
+    // The resilience counterpart of the random-lattice bit-identity test:
+    // with a fault model attached and the goodput objective selected,
+    // every thread count must still return the exhaustive argmin/top-k
+    // bit-for-bit, the counters must still partition the lattice, and
+    // the admissibility chain `bound <= total <= score` must hold for
+    // every reported candidate (the score divides the total by an
+    // efficiency in (0, 1], so the fault-free bound stays admissible).
+    let mut rng = Rng::new(5353);
+    let coord = Coordinator::native().with_threads(8);
+    for case in 0..8 {
+        let max_pp = *rng.choose(&[1usize, 2]);
+        let max_mp = *rng.choose(&[4usize, 8]);
+        let top_k = 1 + rng.below(4);
+        let mtbf = *rng.choose(&[50.0f64, 500.0, 5000.0]);
+        let frac = *rng.choose(&[0.0f64, 0.02]);
+        let mut doc = format!(
+            "name = \"goodput-rand-{case}\"\n\
+             [workload]\nkind = \"transformer\"\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [resilience]\nmtbf_node_hours = {mtbf}\nrestart_s = 90\n\
+             straggler_frac = {frac}\nstraggler_slowdown = 1.5\n\
+             [study]\nkind = \"optimize\"\nobjective = \"goodput\"\n\
+             min_mp = 1\nmax_mp = {max_mp}\nmax_pp = {max_pp}\n\
+             top_k = {top_k}\n"
+        );
+        if rng.f64() < 0.6 {
+            doc.push_str("em_bandwidths_gbps = [500, 2039]\n");
+        }
+        if rng.f64() < 0.4 {
+            doc.push_str("zero_stages = [0, 2, 3]\n");
+        }
+        if rng.f64() < 0.5 {
+            doc.push_str("[options]\ninfinite_memory = true\n");
+        }
+        let spec = ScenarioSpec::parse_str(&doc).unwrap();
+        let opt = optimizer_for(&spec, &coord).unwrap();
+        let e = opt.exhaustive().unwrap();
+        let seq = opt.search_parallel(1).unwrap();
+        for threads in [2usize, 8] {
+            let par = opt.search_parallel(threads).unwrap();
+            seq.assert_bit_identical(&par, &format!("case {case} t{threads}"));
+        }
+        assert_eq!(seq.top.len(), e.top.len(), "case {case}");
+        for (a, b) in seq.top.iter().zip(&e.top) {
+            assert_eq!(a.label, b.label, "case {case}");
+            assert_eq!(a.point.index, b.point.index, "case {case}");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "case {case}: {}",
+                a.label
+            );
+        }
+        assert_eq!(seq.infeasible, e.infeasible, "case {case}");
+        assert_eq!(seq.evaluated + seq.pruned, e.evaluated, "case {case}");
+        for out in [&seq, &e] {
+            assert_eq!(
+                out.evaluated + out.pruned + out.infeasible,
+                out.total_points,
+                "case {case}"
+            );
+        }
+        for c in seq.top.iter().chain(&seq.frontier) {
+            assert!(
+                c.efficiency > 0.0 && c.efficiency <= 1.0,
+                "case {case}: {} efficiency {}",
+                c.label,
+                c.efficiency
+            );
+            assert!(
+                c.lower_bound <= c.total() && c.total() <= c.score,
+                "case {case}: {} bound {} total {} score {}",
+                c.label,
+                c.lower_bound,
+                c.total(),
+                c.score
+            );
+        }
+    }
+}
+
+#[test]
+fn goodput_sim_deterministic_for_random_fault_models() {
+    // Same seed, same fault model => the DES checkpoint-restart renewal
+    // simulation returns an identical event trace and identical totals,
+    // both across back-to-back runs and across threads.
+    let mut rng = Rng::new(7272);
+    let cluster = presets::dgx_a100_64();
+    for case in 0..10 {
+        let sweep = Strategy::sweep_bounded(cluster.n_nodes, 1, 64).unwrap();
+        let s = *rng.choose(&sweep);
+        let w = Transformer::t100m().build(&s).unwrap();
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+        let fault = FaultModel {
+            mtbf_node_hours: rng.range(0.5, 100.0),
+            restart_s: rng.range(1.0, 300.0),
+            straggler_frac: rng.range(0.0, 0.1),
+            straggler_slowdown: rng.range(1.0, 3.0),
+            seed: 1000 + case as u64,
+            ..FaultModel::none()
+        };
+        let a = simulate_goodput(&inp, &fault, cluster.n_nodes, 2_000);
+        let b = simulate_goodput(&inp, &fault, cluster.n_nodes, 2_000);
+        assert_eq!(a, b, "case {case}: back-to-back runs diverged");
+        let inp2 = inp.clone();
+        let n = cluster.n_nodes;
+        let c = std::thread::spawn(move || {
+            simulate_goodput(&inp2, &fault, n, 2_000)
+        })
+        .join()
+        .unwrap();
+        assert_eq!(a, c, "case {case}: cross-thread run diverged");
+        assert!(
+            a.efficiency.is_finite() && a.efficiency > 0.0,
+            "case {case}: efficiency {}",
+            a.efficiency
+        );
     }
 }
 
