@@ -22,7 +22,36 @@ pub mod goodput;
 
 use crate::compute::{em_fraction, gemm_traffic, hybrid_bandwidth};
 use crate::model::inputs::{LayerRecord, ModelInputs, NodeParams};
-use crate::network::collective_cost;
+use crate::network::{collective_cost_auto, CollectiveSpec};
+
+/// One layer-phase collective under the params' addressing: tiered
+/// resolution costs on the chain, legacy resolution on the two-level
+/// view (bit-identical to the historical direct call).
+pub(crate) fn layer_collective_cost(c: &CollectiveSpec, p: &NodeParams) -> f64 {
+    collective_cost_auto(
+        c,
+        p.bw_intra,
+        p.bw_inter,
+        p.link_latency,
+        &p.tier_bw,
+        &p.tier_lat,
+        p.collective_impl,
+    )
+}
+
+/// Bandwidth and latency of the stage-boundary point-to-point link under
+/// the params' addressing (legacy: the `pp_inter` link class; tiered:
+/// the boundary tier).
+pub(crate) fn pp_boundary_link(p: &NodeParams) -> (f64, f64) {
+    if p.n_tiers > 0 {
+        let t = p.pp_tier.min(p.n_tiers.saturating_sub(1));
+        (p.tier_bw[t], p.tier_lat[t])
+    } else if p.pp_inter {
+        (p.bw_inter, p.link_latency)
+    } else {
+        (p.bw_intra, p.link_latency)
+    }
+}
 
 /// Per-iteration training-time breakdown, seconds (the paper's Fig. 8a
 /// stacked bars). With pipeline parallelism the six phase components
@@ -222,13 +251,7 @@ fn evaluate_flat(
                 crate::workload::Collective::None
             ) {
                 comm[phase] += layer.repeat
-                    * collective_cost(
-                        &layer.comm[phase],
-                        p.bw_intra,
-                        p.bw_inter,
-                        p.link_latency,
-                        p.collective_impl,
-                    );
+                    * layer_collective_cost(&layer.comm[phase], p);
             }
         }
     }
@@ -281,13 +304,7 @@ fn evaluate_pipeline(
                 crate::workload::Collective::None
             ) {
                 comm[s][phase] += layer.repeat
-                    * collective_cost(
-                        &layer.comm[phase],
-                        p.bw_intra,
-                        p.bw_inter,
-                        p.link_latency,
-                        p.collective_impl,
-                    );
+                    * layer_collective_cost(&layer.comm[phase], p);
             }
         }
     }
@@ -299,8 +316,8 @@ fn evaluate_pipeline(
     let b: Vec<f64> = (0..pp)
         .map(|s| (compute[s][1] + comm[s][1] + compute[s][2]) / mf)
         .collect();
-    let bw_b = if p.pp_inter { p.bw_inter } else { p.bw_intra };
-    let x = (p.pp_boundary_bytes / mf) / bw_b.max(1.0) + p.link_latency;
+    let (bw_b, lat_b) = pp_boundary_link(p);
+    let x = (p.pp_boundary_bytes / mf) / bw_b.max(1.0) + lat_b;
 
     // Bottleneck stage: largest per-microbatch service (ties -> lowest
     // stage index, matching the DES).

@@ -1,9 +1,92 @@
-//! Cluster-level configuration: node count, network topology, link latency.
+//! Cluster-level configuration: node count, network topology, link latency,
+//! and (optionally) heterogeneous node groups.
+//!
+//! Topologies are described either by the paper's three closed shapes
+//! (hierarchical switch, flat switch, 3D torus) or by an explicit N-tier
+//! switch chain ([`Topology::Tiered`]). Every topology *lowers* to a
+//! [`TierChain`] — the canonical form consumed by the collective cost
+//! model — and, for backends that only understand two link classes, to
+//! the legacy [`TwoLevelView`] projection.
 
 use super::node::NodeConfig;
 use crate::error::{Error, Result};
 
-/// Network topology of the cluster (paper Fig. 14's three shapes).
+/// Maximum number of tiers a lowered topology chain can carry. Four is
+/// enough for node -> rack -> pod -> spine fabrics; the cap lets
+/// per-tier data live in `Copy` arrays inside hot-path structs.
+pub const MAX_TIERS: usize = 4;
+
+/// One tier of an N-tier switch chain, innermost first.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierSpec {
+    /// Fan-out: how many units of the tier below are grouped at this
+    /// tier (tier 0 groups individual nodes).
+    pub group: usize,
+    /// Per-node, per-direction bandwidth through this tier, bytes/s.
+    pub bandwidth: f64,
+    /// Per-hop latency at this tier, seconds.
+    pub latency: f64,
+}
+
+/// A topology lowered to its canonical tier chain, innermost tier first.
+/// The product of `groups[..n_tiers]` equals the cluster node count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierChain {
+    /// Number of active tiers (1..=[`MAX_TIERS`]).
+    pub n_tiers: usize,
+    /// Per-tier group fan-out; unused slots are 1.
+    pub groups: [usize; MAX_TIERS],
+    /// Per-tier per-node bandwidth, bytes/s; unused slots are 0.
+    pub bandwidth: [f64; MAX_TIERS],
+    /// Per-tier per-hop latency, seconds; unused slots are 0.
+    pub latency: [f64; MAX_TIERS],
+}
+
+impl TierChain {
+    /// Project the chain onto the legacy two-level view: tier 0 is the
+    /// pod, the outermost tier supplies the inter-pod bandwidth.
+    pub fn two_level(&self) -> TwoLevelView {
+        let top = self.n_tiers.saturating_sub(1);
+        TwoLevelView {
+            pod_size: self.groups[0],
+            bw_intra: self.bandwidth[0],
+            bw_inter: self.bandwidth[top],
+        }
+    }
+}
+
+/// One group of identical nodes in a heterogeneous cluster. Scales are
+/// relative to the cluster's base [`NodeConfig`]: `perf_scale` multiplies
+/// peak compute, `mem_scale` multiplies local memory capacity, and
+/// `bw_scale` multiplies network tier bandwidths. Synchronous training is
+/// gated by the slowest group, so evaluation applies the minimum of each
+/// scale across groups (see [`ClusterConfig::group_scales`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeGroup {
+    /// Nodes in this group; counts must sum to the cluster node count.
+    pub count: usize,
+    /// Peak-compute multiplier vs the base node.
+    pub perf_scale: f64,
+    /// Local-memory-capacity multiplier vs the base node.
+    pub mem_scale: f64,
+    /// Network-bandwidth multiplier vs the base node's tier bandwidths.
+    pub bw_scale: f64,
+}
+
+/// Bottleneck scales of a heterogeneous cluster: the minimum of each
+/// [`NodeGroup`] scale, applied uniformly by the evaluators.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupScales {
+    /// Minimum `perf_scale` across groups.
+    pub perf: f64,
+    /// Minimum `mem_scale` across groups.
+    pub mem: f64,
+    /// Minimum `bw_scale` across groups.
+    pub bw: f64,
+}
+
+/// Network topology of the cluster (paper Fig. 14's three shapes, plus
+/// an explicit multi-tier chain).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Topology {
     /// Two-level switch hierarchy: pods of `pod_size` nodes with high
@@ -26,11 +109,16 @@ pub enum Topology {
         links: usize,
         link_bw: f64,
     },
+    /// Explicit N-tier switch chain, innermost tier first (e.g. NVLink
+    /// island -> rack -> spine). Group fan-outs must multiply to the
+    /// cluster node count.
+    Tiered { tiers: Vec<TierSpec> },
 }
 
-/// The analytical cost model reduces every topology to a two-level view:
-/// groups of `pod_size` peers communicating at `bw_intra`, pods talking to
-/// each other at `bw_inter`. Flat topologies set `pod_size = n_nodes`.
+/// The legacy two-level network view: groups of `pod_size` peers
+/// communicating at `bw_intra`, pods talking to each other at `bw_inter`.
+/// Flat topologies set `pod_size = n_nodes`; tiered topologies project
+/// their innermost and outermost tiers onto it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TwoLevelView {
     /// Peers per pod (flat topologies: the whole cluster).
@@ -42,38 +130,124 @@ pub struct TwoLevelView {
 }
 
 impl Topology {
-    /// Reduce to the two-level view used by the collective cost model.
-    pub fn two_level(&self, n_nodes: usize) -> TwoLevelView {
+    /// Reduce to the two-level view used by the legacy collective cost
+    /// model. Errors when a hierarchical `pod_size` does not divide the
+    /// cluster: a remainder pod would silently skew every collective
+    /// cost, so it must be rejected, not truncated.
+    pub fn two_level(&self, n_nodes: usize) -> Result<TwoLevelView> {
         match *self {
             Topology::HierarchicalSwitch {
                 pod_size,
                 bw_intra,
                 bw_inter,
-            } => TwoLevelView {
-                pod_size,
-                bw_intra,
-                bw_inter,
-            },
-            Topology::SingleSwitch { bw } => TwoLevelView {
+            } => {
+                if pod_size == 0 || n_nodes % pod_size != 0 {
+                    return Err(Error::Config(format!(
+                        "pod_size {pod_size} does not divide n_nodes \
+                         {n_nodes}: a remainder pod would skew the \
+                         two-level collective model; pick a pod_size \
+                         that divides the cluster (or shrink n_nodes)"
+                    )));
+                }
+                Ok(TwoLevelView {
+                    pod_size,
+                    bw_intra,
+                    bw_inter,
+                })
+            }
+            Topology::SingleSwitch { bw } => Ok(TwoLevelView {
                 pod_size: n_nodes,
                 bw_intra: bw,
                 bw_inter: bw,
-            },
+            }),
             Topology::Torus3D { links, link_bw, .. } => {
                 let agg = links as f64 * link_bw;
-                TwoLevelView {
+                Ok(TwoLevelView {
                     pod_size: n_nodes,
                     bw_intra: agg,
                     bw_inter: agg,
-                }
+                })
+            }
+            Topology::Tiered { .. } => {
+                Ok(self.tier_chain(n_nodes, 0.0)?.two_level())
             }
         }
     }
 
-    /// Number of pods for a given cluster size.
+    /// Lower to the canonical tier chain. Legacy topologies become a
+    /// 2-tier (hierarchical) or 1-tier (flat, torus) chain carrying
+    /// `link_latency` at every tier; [`Topology::Tiered`] carries its
+    /// own per-tier latencies.
+    pub fn tier_chain(
+        &self,
+        n_nodes: usize,
+        link_latency: f64,
+    ) -> Result<TierChain> {
+        let mut chain = TierChain {
+            n_tiers: 1,
+            groups: [1; MAX_TIERS],
+            bandwidth: [0.0; MAX_TIERS],
+            latency: [0.0; MAX_TIERS],
+        };
+        match *self {
+            Topology::HierarchicalSwitch {
+                bw_intra, bw_inter, ..
+            } => {
+                let view = self.two_level(n_nodes)?;
+                chain.n_tiers = 2;
+                chain.groups[0] = view.pod_size;
+                chain.groups[1] = n_nodes / view.pod_size.max(1);
+                chain.bandwidth[0] = bw_intra;
+                chain.bandwidth[1] = bw_inter;
+                chain.latency[0] = link_latency;
+                chain.latency[1] = link_latency;
+            }
+            Topology::SingleSwitch { .. } | Topology::Torus3D { .. } => {
+                let view = self.two_level(n_nodes)?;
+                chain.groups[0] = n_nodes;
+                chain.bandwidth[0] = view.bw_intra;
+                chain.latency[0] = link_latency;
+            }
+            Topology::Tiered { ref tiers } => {
+                if tiers.is_empty() || tiers.len() > MAX_TIERS {
+                    return Err(Error::Config(format!(
+                        "tiered topology must have 1..={MAX_TIERS} tiers, \
+                         got {}",
+                        tiers.len()
+                    )));
+                }
+                let product: usize =
+                    tiers.iter().map(|t| t.group.max(1)).product();
+                if product != n_nodes || tiers.iter().any(|t| t.group == 0) {
+                    return Err(Error::Config(format!(
+                        "tier group fan-outs {:?} must be > 0 and multiply \
+                         to n_nodes {n_nodes} (got {product})",
+                        tiers.iter().map(|t| t.group).collect::<Vec<_>>()
+                    )));
+                }
+                chain.n_tiers = tiers.len();
+                for (i, t) in tiers.iter().enumerate() {
+                    chain.groups[i] = t.group;
+                    chain.bandwidth[i] = t.bandwidth;
+                    chain.latency[i] = t.latency;
+                }
+            }
+        }
+        Ok(chain)
+    }
+
+    /// Number of pods for a given cluster size (flat topologies: 1).
     pub fn n_pods(&self, n_nodes: usize) -> usize {
-        let view = self.two_level(n_nodes);
-        n_nodes.div_ceil(view.pod_size)
+        match *self {
+            Topology::HierarchicalSwitch { pod_size, .. } => {
+                n_nodes.div_ceil(pod_size.max(1))
+            }
+            Topology::SingleSwitch { .. } | Topology::Torus3D { .. } => 1,
+            Topology::Tiered { ref tiers } => {
+                let pod = tiers.first().map(|t| t.group).unwrap_or(n_nodes);
+                n_nodes.div_ceil(pod.max(1))
+            }
+        }
     }
 }
 
@@ -82,14 +256,18 @@ impl Topology {
 pub struct ClusterConfig {
     /// Name (e.g. "B1", "dgx-a100-1024").
     pub name: String,
-    /// Per-node resources (homogeneous cluster, as in the paper).
+    /// Per-node resources of the base node type.
     pub node: NodeConfig,
     /// Total node count.
     pub n_nodes: usize,
     /// Network topology.
     pub topology: Topology,
     /// Per-hop link latency, seconds (the alpha term of collectives).
+    /// Tiered topologies carry per-tier latencies instead.
     pub link_latency: f64,
+    /// Heterogeneous node groups; empty means homogeneous (the base
+    /// node everywhere), which is the paper's setting.
+    pub groups: Vec<NodeGroup>,
 }
 
 impl ClusterConfig {
@@ -157,6 +335,26 @@ impl ClusterConfig {
                     )));
                 }
             }
+            Topology::Tiered { ref tiers } => {
+                // Structural checks (tier count, fan-out product).
+                self.topology.tier_chain(self.n_nodes, self.link_latency)?;
+                for (i, t) in tiers.iter().enumerate() {
+                    if !t.bandwidth.is_finite() || t.bandwidth <= 0.0 {
+                        return Err(Error::Config(format!(
+                            "{}: tier {i} bandwidth must be a finite number \
+                             > 0, got {}",
+                            self.name, t.bandwidth
+                        )));
+                    }
+                    if !t.latency.is_finite() || t.latency < 0.0 {
+                        return Err(Error::Config(format!(
+                            "{}: tier {i} latency must be a finite number \
+                             >= 0, got {}",
+                            self.name, t.latency
+                        )));
+                    }
+                }
+            }
         }
         if !self.link_latency.is_finite() || self.link_latency < 0.0 {
             return Err(Error::Config(format!(
@@ -164,12 +362,81 @@ impl ClusterConfig {
                 self.name, self.link_latency
             )));
         }
+        if !self.groups.is_empty() {
+            let total: usize = self.groups.iter().map(|g| g.count).sum();
+            if total != self.n_nodes {
+                return Err(Error::Config(format!(
+                    "{}: node group counts sum to {total}, expected n_nodes {}",
+                    self.name, self.n_nodes
+                )));
+            }
+            for (i, g) in self.groups.iter().enumerate() {
+                let ok = |s: f64| s.is_finite() && s > 0.0;
+                if g.count == 0
+                    || !ok(g.perf_scale)
+                    || !ok(g.mem_scale)
+                    || !ok(g.bw_scale)
+                {
+                    return Err(Error::Config(format!(
+                        "{}: node group {i} needs count > 0 and finite \
+                         scales > 0, got count {} perf {} mem {} bw {}",
+                        self.name,
+                        g.count,
+                        g.perf_scale,
+                        g.mem_scale,
+                        g.bw_scale
+                    )));
+                }
+            }
+        }
         Ok(())
     }
 
-    /// Two-level network view for the cost model.
-    pub fn two_level(&self) -> TwoLevelView {
+    /// Two-level network view for the legacy cost model. Errors when the
+    /// topology's pod structure does not divide the cluster.
+    pub fn two_level(&self) -> Result<TwoLevelView> {
         self.topology.two_level(self.n_nodes)
+    }
+
+    /// Canonical tier chain for the tier-aware cost model.
+    pub fn tier_chain(&self) -> Result<TierChain> {
+        self.topology.tier_chain(self.n_nodes, self.link_latency)
+    }
+
+    /// Outermost-tier (cluster-egress) bandwidth, bytes/s. Infallible:
+    /// reads the topology parameters directly, so callers that only
+    /// need an egress bandwidth (checkpoint drains) avoid the
+    /// divisibility checks of [`ClusterConfig::two_level`].
+    pub fn inter_bandwidth(&self) -> f64 {
+        match self.topology {
+            Topology::HierarchicalSwitch { bw_inter, .. } => bw_inter,
+            Topology::SingleSwitch { bw } => bw,
+            Topology::Torus3D { links, link_bw, .. } => {
+                links as f64 * link_bw
+            }
+            Topology::Tiered { ref tiers } => {
+                tiers.last().map(|t| t.bandwidth).unwrap_or(0.0)
+            }
+        }
+    }
+
+    /// Bottleneck scales of a heterogeneous cluster, or `None` when the
+    /// cluster is homogeneous (no groups). Synchronous training runs at
+    /// the pace of the slowest group, so the evaluators multiply the
+    /// base node's compute, memory capacity, and tier bandwidths by the
+    /// minimum scale across groups.
+    pub fn group_scales(&self) -> Option<GroupScales> {
+        if self.groups.is_empty() {
+            return None;
+        }
+        let fold = |f: fn(&NodeGroup) -> f64| {
+            self.groups.iter().map(f).fold(f64::INFINITY, f64::min)
+        };
+        Some(GroupScales {
+            perf: fold(|g| g.perf_scale),
+            mem: fold(|g| g.mem_scale),
+            bw: fold(|g| g.bw_scale),
+        })
     }
 
     /// Derived cluster with network bandwidths scaled (fig. 11's knob).
@@ -243,6 +510,30 @@ impl ClusterConfig {
                 *dims = [2, half, n / (2 * half.max(1))];
             }
         }
+        if let Topology::Tiered { ref mut tiers } = c.topology {
+            // Shrink from the outermost tier until fan-outs multiply to n
+            // (power-of-two groups halve exactly; a fan-out of 1 drops).
+            loop {
+                let product: usize =
+                    tiers.iter().map(|t| t.group.max(1)).product();
+                if product <= n.max(1) {
+                    break;
+                }
+                let last = tiers.len() - 1;
+                if tiers[last].group > 1 {
+                    tiers[last].group /= 2;
+                } else if tiers.len() > 1 {
+                    tiers.pop();
+                } else {
+                    break;
+                }
+            }
+        }
+        // Groups are sized for the original cluster; a truncated cluster
+        // keeps the base node homogeneous rather than guessing a split.
+        if c.n_nodes != self.n_nodes {
+            c.groups.clear();
+        }
         c.name = format!("{}~n{}", c.name, n);
         c
     }
@@ -262,7 +553,7 @@ mod tests {
     #[test]
     fn two_level_of_hierarchical() {
         let c = presets::dgx_a100_1024();
-        let v = c.two_level();
+        let v = c.two_level().unwrap();
         assert_eq!(v.pod_size, 8);
         assert_eq!(v.bw_intra, gbps(300.0));
         assert_eq!(v.bw_inter, gbps(31.25));
@@ -272,7 +563,7 @@ mod tests {
     #[test]
     fn two_level_of_flat() {
         let t = Topology::SingleSwitch { bw: tbps(1.0) };
-        let v = t.two_level(64);
+        let v = t.two_level(64).unwrap();
         assert_eq!(v.pod_size, 64);
         assert_eq!(v.bw_intra, v.bw_inter);
     }
@@ -284,9 +575,136 @@ mod tests {
             links: 6,
             link_bw: gbps(48.0),
         };
-        let v = t.two_level(4096);
+        let v = t.two_level(4096).unwrap();
         assert_eq!(v.bw_intra, gbps(288.0));
         assert_eq!(v.pod_size, 4096);
+    }
+
+    #[test]
+    fn two_level_rejects_remainder_pod() {
+        // Regression: a pod_size that does not divide n_nodes used to be
+        // silently accepted, skewing every downstream collective cost.
+        let t = Topology::HierarchicalSwitch {
+            pod_size: 7,
+            bw_intra: gbps(300.0),
+            bw_inter: gbps(31.25),
+        };
+        let e = t.two_level(1024).unwrap_err().to_string();
+        assert!(e.contains("does not divide"), "{e}");
+        assert!(e.contains("pod_size 7"), "{e}");
+        let e = Topology::HierarchicalSwitch {
+            pod_size: 0,
+            bw_intra: 1.0,
+            bw_inter: 1.0,
+        }
+        .two_level(8)
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("pod_size 0"), "{e}");
+    }
+
+    #[test]
+    fn legacy_topologies_lower_to_expected_chains() {
+        let c = presets::dgx_a100_1024();
+        let chain = c.tier_chain().unwrap();
+        assert_eq!(chain.n_tiers, 2);
+        assert_eq!(&chain.groups[..2], &[8, 128]);
+        assert_eq!(chain.bandwidth[0], gbps(300.0));
+        assert_eq!(chain.bandwidth[1], gbps(31.25));
+        assert_eq!(chain.latency[0], c.link_latency);
+        assert_eq!(chain.two_level(), c.two_level().unwrap());
+
+        let flat = presets::dojo_64();
+        let chain = flat.tier_chain().unwrap();
+        assert_eq!(chain.n_tiers, 1);
+        assert_eq!(chain.groups[0], 64);
+        assert_eq!(chain.two_level(), flat.two_level().unwrap());
+    }
+
+    #[test]
+    fn tiered_topology_validates_and_projects() {
+        let mut c = presets::dgx_a100_64();
+        c.topology = Topology::Tiered {
+            tiers: vec![
+                TierSpec {
+                    group: 8,
+                    bandwidth: gbps(300.0),
+                    latency: 1e-6,
+                },
+                TierSpec {
+                    group: 4,
+                    bandwidth: gbps(50.0),
+                    latency: 2e-6,
+                },
+                TierSpec {
+                    group: 2,
+                    bandwidth: gbps(12.5),
+                    latency: 5e-6,
+                },
+            ],
+        };
+        c.validate().unwrap();
+        let chain = c.tier_chain().unwrap();
+        assert_eq!(chain.n_tiers, 3);
+        assert_eq!(&chain.groups[..3], &[8, 4, 2]);
+        let v = c.two_level().unwrap();
+        assert_eq!(v.pod_size, 8);
+        assert_eq!(v.bw_intra, gbps(300.0));
+        assert_eq!(v.bw_inter, gbps(12.5));
+        assert_eq!(c.inter_bandwidth(), gbps(12.5));
+        assert_eq!(c.topology.n_pods(64), 8);
+
+        // Fan-outs must multiply to the cluster size.
+        if let Topology::Tiered { ref mut tiers } = c.topology {
+            tiers[2].group = 4;
+        }
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.contains("multiply to n_nodes"), "{e}");
+    }
+
+    #[test]
+    fn tiered_with_n_nodes_shrinks_outer_tiers() {
+        let c = presets::tiered_het_64();
+        for n in [32usize, 8, 2, 1] {
+            let small = c.with_n_nodes(n);
+            small.validate().unwrap_or_else(|e| panic!("n={n}: {e}"));
+            assert_eq!(small.n_nodes, n);
+        }
+    }
+
+    #[test]
+    fn node_groups_validate() {
+        let mut c = presets::dgx_a100_64();
+        c.groups = vec![
+            NodeGroup {
+                count: 48,
+                perf_scale: 1.0,
+                mem_scale: 1.0,
+                bw_scale: 1.0,
+            },
+            NodeGroup {
+                count: 16,
+                perf_scale: 0.5,
+                mem_scale: 2.0,
+                bw_scale: 0.25,
+            },
+        ];
+        c.validate().unwrap();
+        let s = c.group_scales().unwrap();
+        assert_eq!(s.perf, 0.5);
+        assert_eq!(s.mem, 1.0);
+        assert_eq!(s.bw, 0.25);
+
+        c.groups[0].count = 40;
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.contains("sum to 56"), "{e}");
+
+        c.groups[0].count = 48;
+        c.groups[1].perf_scale = f64::NAN;
+        assert!(c.validate().is_err());
+
+        c.groups.clear();
+        assert!(c.group_scales().is_none());
     }
 
     #[test]
@@ -318,7 +736,7 @@ mod tests {
     #[test]
     fn scale_network_scales_both() {
         let c = presets::dgx_a100_1024().scale_network(2.0, 0.5);
-        let v = c.two_level();
+        let v = c.two_level().unwrap();
         assert_eq!(v.bw_intra, gbps(600.0));
         assert_eq!(v.bw_inter, gbps(15.625));
     }
@@ -326,11 +744,11 @@ mod tests {
     #[test]
     fn rebalance_preserves_aggregate() {
         let base = presets::dgx_a100_1024();
-        let b0 = base.two_level();
+        let b0 = base.two_level().unwrap();
         let total = b0.bw_intra + b0.bw_inter;
         for ratio in [1.0, 3.0, 6.0, 9.6, 24.0] {
             let c = base.rebalance_network(ratio).unwrap();
-            let v = c.two_level();
+            let v = c.two_level().unwrap();
             assert!((v.bw_intra + v.bw_inter - total).abs() < 1.0);
             assert!((v.bw_intra / v.bw_inter - ratio).abs() / ratio < 1e-9);
         }
@@ -340,7 +758,7 @@ mod tests {
     fn rebalance_fig12_values() {
         // Paper: 1:6 ratio on 331.25 GB/s aggregate => ~284 intra, ~47.3 inter.
         let c = presets::dgx_a100_1024().rebalance_network(6.0).unwrap();
-        let v = c.two_level();
+        let v = c.two_level().unwrap();
         assert!((v.bw_intra - gbps(283.93)).abs() < gbps(0.1));
         assert!((v.bw_inter - gbps(47.32)).abs() < gbps(0.1));
     }

@@ -9,6 +9,9 @@ mod node;
 pub mod presets;
 pub mod serde_io;
 
-pub use cluster::{ClusterConfig, Topology, TwoLevelView};
+pub use cluster::{
+    ClusterConfig, GroupScales, NodeGroup, TierChain, TierSpec, Topology,
+    TwoLevelView, MAX_TIERS,
+};
 pub use node::{MemoryConfig, NodeConfig};
 pub use serde_io::apply_cluster_overrides;

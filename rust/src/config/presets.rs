@@ -1,6 +1,6 @@
 //! Preset clusters: the paper's Table I baseline and Table III variants.
 
-use super::cluster::{ClusterConfig, Topology};
+use super::cluster::{ClusterConfig, NodeGroup, TierSpec, Topology};
 use super::node::{MemoryConfig, NodeConfig};
 use crate::util::units::*;
 
@@ -28,6 +28,7 @@ pub fn dgx_a100_1024() -> ClusterConfig {
             bw_inter: gbps(31.25),
         },
         link_latency: DEFAULT_LINK_LATENCY,
+        groups: vec![],
     }
 }
 
@@ -100,6 +101,7 @@ fn gpu_cluster(
             bw_inter,
         },
         link_latency: DEFAULT_LINK_LATENCY,
+        groups: vec![],
     }
 }
 
@@ -137,6 +139,7 @@ pub fn tpu_v4_4096() -> ClusterConfig {
             link_bw: gbps(48.0),
         },
         link_latency: DEFAULT_LINK_LATENCY,
+        groups: vec![],
     }
 }
 
@@ -155,6 +158,61 @@ pub fn dojo_64() -> ClusterConfig {
         n_nodes: 64,
         topology: Topology::SingleSwitch { bw: tbps(1.0) },
         link_latency: DEFAULT_LINK_LATENCY,
+        groups: vec![],
+    }
+}
+
+/// A 64-node exercise cluster for the multi-tier + heterogeneity path:
+/// three fabric tiers (8-GPU NVLink boards, 4-board racks, 2-rack rows)
+/// with decreasing per-tier bandwidth, and two node generations — 48
+/// full-speed nodes plus 16 older ones at half compute/fabric speed.
+/// The synchronous-training bottleneck rule makes the old generation's
+/// scales the effective ones.
+pub fn tiered_het_64() -> ClusterConfig {
+    ClusterConfig {
+        name: "tiered-het-64".into(),
+        node: NodeConfig {
+            name: "A100".into(),
+            perf_peak: tflops(624.0),
+            sram: mb(40.0),
+            local: MemoryConfig::new(gb(80.0), gbps(2039.0)),
+            expanded: MemoryConfig::none(),
+        },
+        n_nodes: 64,
+        topology: Topology::Tiered {
+            tiers: vec![
+                TierSpec {
+                    group: 8,
+                    bandwidth: gbps(300.0),
+                    latency: 1e-6,
+                },
+                TierSpec {
+                    group: 4,
+                    bandwidth: gbps(50.0),
+                    latency: 2e-6,
+                },
+                TierSpec {
+                    group: 2,
+                    bandwidth: gbps(12.5),
+                    latency: 5e-6,
+                },
+            ],
+        },
+        link_latency: DEFAULT_LINK_LATENCY,
+        groups: vec![
+            NodeGroup {
+                count: 48,
+                perf_scale: 1.0,
+                mem_scale: 1.0,
+                bw_scale: 1.0,
+            },
+            NodeGroup {
+                count: 16,
+                perf_scale: 0.5,
+                mem_scale: 1.0,
+                bw_scale: 0.5,
+            },
+        ],
     }
 }
 
@@ -176,6 +234,7 @@ pub fn by_name(name: &str) -> Option<ClusterConfig> {
     match name {
         "baseline" | "dgx-a100-1024" => Some(dgx_a100_1024()),
         "dgx-a100-64" => Some(dgx_a100_64()),
+        "tiered-het-64" => Some(tiered_het_64()),
         "TPUv4" | "tpuv4" => Some(tpu_v4_4096()),
         "Dojo" | "dojo" => Some(dojo_64()),
         _ => {
@@ -199,6 +258,7 @@ pub fn preset_names() -> Vec<&'static str> {
     vec![
         "baseline",
         "dgx-a100-64",
+        "tiered-het-64",
         "A0",
         "A1",
         "A2",
@@ -224,6 +284,18 @@ mod tests {
         }
         dgx_a100_1024().validate().unwrap();
         dgx_a100_64().validate().unwrap();
+        tiered_het_64().validate().unwrap();
+    }
+
+    #[test]
+    fn tiered_preset_shapes() {
+        let c = tiered_het_64();
+        let chain = c.tier_chain().unwrap();
+        assert_eq!(chain.n_tiers, 3);
+        assert_eq!(&chain.groups[..3], &[8, 4, 2]);
+        assert!(chain.bandwidth[0] > chain.bandwidth[2]);
+        assert_eq!(c.inter_bandwidth(), 12.5e9);
+        assert_eq!(c.groups.iter().map(|g| g.count).sum::<usize>(), 64);
     }
 
     #[test]
@@ -254,8 +326,8 @@ mod tests {
 
     #[test]
     fn table3_network_tiers() {
-        let a = table3_gpu('A', 0).two_level();
-        let c = table3_gpu('C', 0).two_level();
+        let a = table3_gpu('A', 0).two_level().unwrap();
+        let c = table3_gpu('C', 0).two_level().unwrap();
         assert_eq!(a.bw_intra, 150e9);
         assert_eq!(a.bw_inter, 6.25e9);
         assert_eq!(c.bw_intra, 450e9);
@@ -267,7 +339,7 @@ mod tests {
     fn dojo_and_tpu_scale() {
         assert_eq!(dojo_64().node.perf_peak, 54.3e15);
         assert_eq!(tpu_v4_4096().n_nodes, 4096);
-        assert_eq!(tpu_v4_4096().two_level().bw_intra, 288e9);
+        assert_eq!(tpu_v4_4096().two_level().unwrap().bw_intra, 288e9);
     }
 
     #[test]

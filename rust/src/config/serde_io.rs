@@ -4,7 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use super::cluster::{ClusterConfig, Topology};
+use super::cluster::{ClusterConfig, NodeGroup, TierSpec, Topology};
 use super::node::{MemoryConfig, NodeConfig};
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
@@ -18,6 +18,10 @@ impl ClusterConfig {
         o.insert("link_latency".into(), Value::Num(self.link_latency));
         o.insert("node".into(), node_to_json(&self.node));
         o.insert("topology".into(), topo_to_json(&self.topology));
+        // Homogeneous clusters stay byte-identical to the legacy schema.
+        if !self.groups.is_empty() {
+            o.insert("groups".into(), groups_to_json(&self.groups));
+        }
         Value::Obj(o)
     }
 
@@ -34,12 +38,17 @@ impl ClusterConfig {
             v.get("topology")
                 .ok_or_else(|| Error::Json("missing 'topology'".into()))?,
         )?;
+        let groups = match v.get("groups") {
+            None => Vec::new(),
+            Some(g) => groups_from_json(g)?,
+        };
         let c = ClusterConfig {
             name,
             node,
             n_nodes,
             topology,
             link_latency,
+            groups,
         };
         c.validate()?;
         Ok(c)
@@ -121,6 +130,27 @@ fn topo_to_json(t: &Topology) -> Value {
             o.insert("links".into(), Value::Num(links as f64));
             o.insert("link_bw".into(), Value::Num(link_bw));
         }
+        Topology::Tiered { ref tiers } => {
+            o.insert("kind".into(), Value::Str("tiered".into()));
+            o.insert(
+                "group".into(),
+                Value::Arr(
+                    tiers.iter().map(|t| Value::Num(t.group as f64)).collect(),
+                ),
+            );
+            o.insert(
+                "bandwidth".into(),
+                Value::Arr(
+                    tiers.iter().map(|t| Value::Num(t.bandwidth)).collect(),
+                ),
+            );
+            o.insert(
+                "latency".into(),
+                Value::Arr(
+                    tiers.iter().map(|t| Value::Num(t.latency)).collect(),
+                ),
+            );
+        }
     }
     Value::Obj(o)
 }
@@ -155,8 +185,91 @@ fn topo_from_json(v: &Value) -> Result<Topology> {
                 link_bw: req_num(v, "link_bw")?,
             })
         }
+        "tiered" => {
+            let group = num_arr(v, "group")?;
+            let bandwidth = num_arr(v, "bandwidth")?;
+            let latency = num_arr(v, "latency")?;
+            if group.len() != bandwidth.len() || group.len() != latency.len()
+            {
+                return Err(Error::Json(format!(
+                    "tiered topology arrays must have equal length, got \
+                     group={}, bandwidth={}, latency={}",
+                    group.len(),
+                    bandwidth.len(),
+                    latency.len()
+                )));
+            }
+            let tiers = group
+                .iter()
+                .zip(&bandwidth)
+                .zip(&latency)
+                .map(|((&g, &bw), &lat)| TierSpec {
+                    group: g as usize,
+                    bandwidth: bw,
+                    latency: lat,
+                })
+                .collect();
+            Ok(Topology::Tiered { tiers })
+        }
         k => Err(Error::Json(format!("unknown topology kind '{k}'"))),
     }
+}
+
+fn groups_to_json(groups: &[NodeGroup]) -> Value {
+    let mut o = BTreeMap::new();
+    let col = |f: &dyn Fn(&NodeGroup) -> f64| {
+        Value::Arr(groups.iter().map(|g| Value::Num(f(g))).collect())
+    };
+    o.insert("count".into(), col(&|g| g.count as f64));
+    o.insert("perf_scale".into(), col(&|g| g.perf_scale));
+    o.insert("mem_scale".into(), col(&|g| g.mem_scale));
+    o.insert("bw_scale".into(), col(&|g| g.bw_scale));
+    Value::Obj(o)
+}
+
+fn groups_from_json(v: &Value) -> Result<Vec<NodeGroup>> {
+    let count = num_arr(v, "count")?;
+    let perf = num_arr(v, "perf_scale")?;
+    let mem = num_arr(v, "mem_scale")?;
+    let bw = num_arr(v, "bw_scale")?;
+    if perf.len() != count.len()
+        || mem.len() != count.len()
+        || bw.len() != count.len()
+    {
+        return Err(Error::Json(format!(
+            "node group arrays must have equal length, got count={}, \
+             perf_scale={}, mem_scale={}, bw_scale={}",
+            count.len(),
+            perf.len(),
+            mem.len(),
+            bw.len()
+        )));
+    }
+    Ok(count
+        .iter()
+        .zip(&perf)
+        .zip(&mem)
+        .zip(&bw)
+        .map(|(((&c, &p), &m), &b)| NodeGroup {
+            count: c as usize,
+            perf_scale: p,
+            mem_scale: m,
+            bw_scale: b,
+        })
+        .collect())
+}
+
+fn num_arr(v: &Value, key: &str) -> Result<Vec<f64>> {
+    v.get(key)
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| Error::Json(format!("missing array '{key}'")))?
+        .iter()
+        .map(|x| {
+            x.as_f64().ok_or_else(|| {
+                Error::Json(format!("'{key}' entries must be numbers"))
+            })
+        })
+        .collect()
 }
 
 /// Apply scenario-style overrides (human units: GB, GB/s, TFLOP/s, us) to
@@ -342,7 +455,7 @@ mod tests {
         assert_eq!(c.n_nodes, 256);
         assert_eq!(c.node.expanded.capacity, 480e9);
         assert_eq!(c.node.expanded.bandwidth, 500e9);
-        assert_eq!(c.two_level().bw_inter, 62.5e9);
+        assert_eq!(c.two_level().unwrap().bw_inter, 62.5e9);
         assert_eq!(c.link_latency, 2e-6);
     }
 
@@ -361,6 +474,28 @@ mod tests {
         let mut c = presets::dojo_64();
         let net = json::parse(r#"{"bw_intra_gbps": 600}"#).unwrap();
         assert!(apply_cluster_overrides(&mut c, &net).is_err());
+    }
+
+    #[test]
+    fn roundtrip_tiered_heterogeneous() {
+        let c = presets::tiered_het_64();
+        assert!(!c.groups.is_empty(), "preset should be heterogeneous");
+        let j = c.to_json();
+        let back = ClusterConfig::from_json(&j).unwrap();
+        assert_eq!(c, back);
+        // The legacy schema has no "groups" key for homogeneous clusters.
+        let legacy = presets::dgx_a100_1024().to_json();
+        assert!(legacy.get("groups").is_none());
+    }
+
+    #[test]
+    fn mismatched_group_arrays_rejected() {
+        let v = json::parse(
+            r#"{"count": [48, 16], "perf_scale": [1.0],
+                "mem_scale": [1.0, 1.0], "bw_scale": [1.0, 1.0]}"#,
+        )
+        .unwrap();
+        assert!(groups_from_json(&v).is_err());
     }
 
     #[test]

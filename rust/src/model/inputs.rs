@@ -14,13 +14,13 @@
 //! [`derive_inputs`] is retained for one-off callers and as the
 //! equivalence oracle.
 
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, TierChain, MAX_TIERS};
 use crate::error::{Error, Result};
 use crate::network::{CollectiveImpl, CollectiveSpec};
 use crate::parallel::{
     activation_working_bytes, footprint_per_node, model_state_bytes,
     pipeline_stage_footprint, residual_state_bytes, stage_footprint_terms,
-    PipeSchedule, Strategy, ZeroStage,
+    tier_fill, PipeSchedule, Strategy, TierMapping, ZeroStage,
 };
 use crate::workload::{Comm, CommScope, Phase, PhaseQuantities, Workload};
 
@@ -50,6 +50,10 @@ pub struct EvalOptions {
     /// 1F1B holds fewer activations — see
     /// [`crate::parallel::PipeSchedule`]). Ignored at `pp = 1`.
     pub pipe_schedule: PipeSchedule,
+    /// Which strategy axis packs into the innermost network tiers of a
+    /// multi-tier fabric. The default ([`TierMapping::MpInner`]) on a
+    /// <= 2-tier chain is exactly the legacy two-level resolution.
+    pub tier_mapping: TierMapping,
 }
 
 impl Default for EvalOptions {
@@ -63,6 +67,7 @@ impl Default for EvalOptions {
             collective_impl: CollectiveImpl::LogicalRing,
             microbatches: 8,
             pipe_schedule: PipeSchedule::OneFOneB,
+            tier_mapping: TierMapping::MpInner,
         }
     }
 }
@@ -108,6 +113,18 @@ pub struct NodeParams {
     /// Whether the stage-boundary point-to-point transfer crosses pods
     /// (stage stride `mp * dp` >= pod size).
     pub pp_inter: bool,
+    /// Active network tiers (0 = legacy two-level resolution; the
+    /// backends then read `bw_intra`/`bw_inter` and ignore the tier
+    /// arrays).
+    pub n_tiers: usize,
+    /// Per-tier bandwidth, bytes/s, innermost first (tiered resolution
+    /// only; unused slots are 0).
+    pub tier_bw: [f64; MAX_TIERS],
+    /// Per-tier per-hop latency, seconds (tiered resolution only).
+    pub tier_lat: [f64; MAX_TIERS],
+    /// Tier the stage-boundary point-to-point transfer rides (tiered
+    /// resolution only; the tier-chain analogue of `pp_inter`).
+    pub pp_tier: usize,
 }
 
 /// One layer's resolved cost-model record.
@@ -170,8 +187,14 @@ impl ModelInputs {
             p.pipe_schedule.code(),
             p.pp_boundary_bytes,
             if p.pp_inter { 1.0 } else { 0.0 },
+            p.n_tiers as f64,
+            p.pp_tier as f64,
         ] {
             eat(v);
+        }
+        for (bw, lat) in p.tier_bw.iter().zip(&p.tier_lat) {
+            eat(*bw);
+            eat(*lat);
         }
         for l in &self.layers {
             eat(l.repeat);
@@ -187,6 +210,10 @@ impl ModelInputs {
                 eat(c.bytes);
                 eat(c.n_intra as f64);
                 eat(c.n_inter as f64);
+                eat(c.n_tiers as f64);
+                for t in &c.tier_n {
+                    eat(*t as f64);
+                }
             }
         }
         h
@@ -211,6 +238,30 @@ fn resolve_scope(
         CommScope::All => {
             let intra = pod_size.min(nodes).max(1);
             (intra, nodes / intra)
+        }
+    }
+}
+
+/// Resolve a [`CommScope`] into per-tier group counts on an N-tier
+/// chain — the tier-aware analogue of [`resolve_scope`]. At `k = 2`
+/// under [`TierMapping::MpInner`] the result projects exactly onto the
+/// legacy two-level shapes.
+fn resolve_scope_tiered(
+    scope: CommScope,
+    mp: usize,
+    dp: usize,
+    nodes: usize,
+    chain: &TierChain,
+    mapping: TierMapping,
+) -> [usize; MAX_TIERS] {
+    let strategy = Strategy { mp, dp, pp: 1 };
+    let k = chain.n_tiers;
+    match scope {
+        CommScope::Mp => strategy.tier_split(&chain.groups, k, mapping).0,
+        CommScope::Dp => strategy.tier_split(&chain.groups, k, mapping).1,
+        CommScope::All => {
+            let mut caps = chain.groups;
+            tier_fill(nodes, &mut caps, k)
         }
     }
 }
@@ -324,12 +375,33 @@ impl WorkloadDecomposition {
     pub fn resolve_comm(&self, comm: &Comm, pod_size: usize) -> CollectiveSpec {
         let (n_intra, n_inter) =
             resolve_scope(comm.scope, self.mp, self.dp, self.nodes, pod_size);
-        CollectiveSpec {
-            collective: comm.collective,
-            bytes: comm.bytes,
-            n_intra,
-            n_inter,
-        }
+        CollectiveSpec::two_level(comm.collective, comm.bytes, n_intra, n_inter)
+    }
+
+    /// Resolve one layer-phase communication against an N-tier chain
+    /// under a strategy-to-tier mapping. The produced spec carries the
+    /// per-tier participant shape plus its two-level projection for
+    /// backends that only model two link classes.
+    pub fn resolve_comm_tiered(
+        &self,
+        comm: &Comm,
+        chain: &TierChain,
+        mapping: TierMapping,
+    ) -> CollectiveSpec {
+        let tier_n = resolve_scope_tiered(
+            comm.scope,
+            self.mp,
+            self.dp,
+            self.nodes,
+            chain,
+            mapping,
+        );
+        CollectiveSpec::tiered(
+            comm.collective,
+            comm.bytes,
+            tier_n,
+            chain.n_tiers,
+        )
     }
 }
 
@@ -396,7 +468,13 @@ pub fn resolve_inputs(
             dec.nodes, cluster.name, cluster.n_nodes
         )));
     }
-    let view = cluster.two_level();
+    let view = cluster.two_level()?;
+    let chain = cluster.tier_chain()?;
+    // Tier-aware resolution only activates beyond what the two-level
+    // view can express; <= 2-tier chains under the default mapping take
+    // the legacy path so every historical result stays bit-identical.
+    let tiered =
+        chain.n_tiers > 2 || opts.tier_mapping != TierMapping::MpInner;
 
     let footprint = opts.footprint_override.unwrap_or_else(|| {
         dec.footprint(opts.zero_stage, opts.pipe_schedule, opts.microbatches)
@@ -413,23 +491,51 @@ pub fn resolve_inputs(
     };
     let pp_boundary_bytes =
         dec.boundary_bytes.iter().copied().fold(0.0, f64::max);
-    let pp_inter = Strategy {
+    let strategy = Strategy {
         mp: dec.mp,
         dp: dec.dp,
         pp,
-    }
-    .pp_crosses_pods(view.pod_size);
+    };
+    let pp_inter = strategy.pp_crosses_pods(view.pod_size);
+    let pp_tier = if tiered {
+        strategy.pp_boundary_tier(&chain.groups, chain.n_tiers)
+    } else {
+        0
+    };
 
+    // Heterogeneous clusters: synchronous training runs at the pace of
+    // the slowest node group, so the base node's compute, memory
+    // capacity, and fabric bandwidths take the bottleneck scales.
+    // Homogeneous clusters skip this entirely (bit-identity).
     let node = &cluster.node;
+    let mut perf_peak = node.perf_peak;
+    let mut cap_lm = node.local.capacity;
+    let mut bw_intra = view.bw_intra;
+    let mut bw_inter = view.bw_inter;
+    let mut tier_bw = if tiered {
+        chain.bandwidth
+    } else {
+        [0.0; MAX_TIERS]
+    };
+    if let Some(s) = cluster.group_scales() {
+        perf_peak *= s.perf;
+        cap_lm *= s.mem;
+        bw_intra *= s.bw;
+        bw_inter *= s.bw;
+        for bw in tier_bw.iter_mut() {
+            *bw *= s.bw;
+        }
+    }
+
     let params = NodeParams {
-        perf_peak: node.perf_peak,
+        perf_peak,
         bw_lm: node.local.bandwidth,
         bw_em: node.expanded.bandwidth,
-        cap_lm: node.local.capacity,
+        cap_lm,
         sram: node.sram,
         footprint,
-        bw_intra: view.bw_intra,
-        bw_inter: view.bw_inter,
+        bw_intra,
+        bw_inter,
         link_latency: cluster.link_latency,
         overlap_wg: opts.overlap_wg,
         em_frac_override: if opts.ignore_capacity {
@@ -443,6 +549,14 @@ pub fn resolve_inputs(
         pipe_schedule,
         pp_boundary_bytes,
         pp_inter,
+        n_tiers: if tiered { chain.n_tiers } else { 0 },
+        tier_bw,
+        tier_lat: if tiered {
+            chain.latency
+        } else {
+            [0.0; MAX_TIERS]
+        },
+        pp_tier,
     };
 
     let layers = dec
@@ -453,8 +567,17 @@ pub fn resolve_inputs(
             repeat: l.repeat,
             stage: l.stage,
             q: l.q,
-            comm: [0usize, 1, 2]
-                .map(|i| dec.resolve_comm(&l.comm[i], view.pod_size)),
+            comm: [0usize, 1, 2].map(|i| {
+                if tiered {
+                    dec.resolve_comm_tiered(
+                        &l.comm[i],
+                        &chain,
+                        opts.tier_mapping,
+                    )
+                } else {
+                    dec.resolve_comm(&l.comm[i], view.pod_size)
+                }
+            }),
         })
         .collect();
 
@@ -486,13 +609,22 @@ pub fn derive_inputs(
         return resolve_inputs(&decompose(workload), cluster, opts);
     }
     cluster.validate()?;
+    // Tier-aware and heterogeneous resolution lives in one place — the
+    // two-stage path — so delegate exactly like pipeline parallelism.
+    let chain = cluster.tier_chain()?;
+    if chain.n_tiers > 2
+        || opts.tier_mapping != TierMapping::MpInner
+        || !cluster.groups.is_empty()
+    {
+        return resolve_inputs(&decompose(workload), cluster, opts);
+    }
     if workload.nodes > cluster.n_nodes {
         return Err(Error::Config(format!(
             "workload spans {} nodes but cluster {} has {}",
             workload.nodes, cluster.name, cluster.n_nodes
         )));
     }
-    let view = cluster.two_level();
+    let view = cluster.two_level()?;
 
     let footprint = opts.footprint_override.unwrap_or_else(|| {
         footprint_per_node(
@@ -532,6 +664,10 @@ pub fn derive_inputs(
         pipe_schedule: PipeSchedule::default(),
         pp_boundary_bytes: 0.0,
         pp_inter: false,
+        n_tiers: 0,
+        tier_bw: [0.0; MAX_TIERS],
+        tier_lat: [0.0; MAX_TIERS],
+        pp_tier: 0,
     };
 
     let layers = workload
@@ -539,12 +675,12 @@ pub fn derive_inputs(
         .iter()
         .map(|l| {
             let mut q = [PhaseQuantities::default(); 3];
-            let mut comm = [CollectiveSpec {
-                collective: crate::workload::Collective::None,
-                bytes: 0.0,
-                n_intra: 1,
-                n_inter: 1,
-            }; 3];
+            let mut comm = [CollectiveSpec::two_level(
+                crate::workload::Collective::None,
+                0.0,
+                1,
+                1,
+            ); 3];
             for (i, phase) in Phase::ALL.iter().enumerate() {
                 q[i] = l.op.quantities(*phase);
                 let c = l.comm(*phase);
@@ -555,12 +691,8 @@ pub fn derive_inputs(
                     workload.nodes,
                     view.pod_size,
                 );
-                comm[i] = CollectiveSpec {
-                    collective: c.collective,
-                    bytes: c.bytes,
-                    n_intra: ni,
-                    n_inter: nx,
-                };
+                comm[i] =
+                    CollectiveSpec::two_level(c.collective, c.bytes, ni, nx);
             }
             LayerRecord {
                 name: l.name.clone(),
@@ -796,5 +928,80 @@ mod tests {
         };
         let inp = derive_inputs(&w, &cluster, &opts).unwrap();
         assert_eq!(inp.params.footprint, 123e9);
+    }
+
+    #[test]
+    fn tiered_cluster_resolves_per_tier_shapes() {
+        // 8 x 4 x 2 chain: MP8 fills tier 0; DP8 spreads across tiers
+        // 1-2 under the default MpInner mapping.
+        let cluster = presets::tiered_het_64();
+        let w = Transformer::t1().build(&Strategy::new(8, 8).unwrap()).unwrap();
+        let inp = derive_inputs(&w, &cluster, &EvalOptions::default()).unwrap();
+        assert_eq!(inp.params.n_tiers, 3);
+        assert!(inp.params.tier_bw[0] > inp.params.tier_bw[2]);
+        let mlp2 = inp.layers.iter().find(|l| l.name == "mlp-2").unwrap();
+        assert_eq!(mlp2.comm[0].n_tiers, 3);
+        assert_eq!(&mlp2.comm[0].tier_n[..3], &[8, 1, 1]);
+        assert_eq!(&mlp2.comm[2].tier_n[..3], &[1, 4, 2]);
+        // Two-level projection preserved for two-class backends.
+        assert_eq!(mlp2.comm[2].n_intra, 1);
+        assert_eq!(mlp2.comm[2].n_inter, 8);
+
+        // The single-pass oracle delegates and agrees exactly.
+        let staged = resolve_inputs(
+            &decompose(&w),
+            &cluster,
+            &EvalOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(inp, staged);
+    }
+
+    #[test]
+    fn dp_inner_mapping_swaps_axes_on_tiered_cluster() {
+        let cluster = presets::tiered_het_64();
+        let w = Transformer::t1().build(&Strategy::new(4, 16).unwrap()).unwrap();
+        let opts = EvalOptions {
+            tier_mapping: TierMapping::DpInner,
+            ..Default::default()
+        };
+        let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+        let mlp2 = inp.layers.iter().find(|l| l.name == "mlp-2").unwrap();
+        // DP16 packs the innermost tier first under DpInner.
+        assert_eq!(mlp2.comm[2].tier_n[0], 8);
+        assert_eq!(mlp2.comm[0].tier_n[0], 1);
+    }
+
+    #[test]
+    fn heterogeneous_groups_scale_bottleneck_params() {
+        use crate::config::NodeGroup;
+        let mut cluster = presets::dgx_a100_1024();
+        cluster.groups = vec![
+            NodeGroup {
+                count: 512,
+                perf_scale: 1.0,
+                mem_scale: 1.0,
+                bw_scale: 1.0,
+            },
+            NodeGroup {
+                count: 512,
+                perf_scale: 0.5,
+                mem_scale: 2.0,
+                bw_scale: 0.5,
+            },
+        ];
+        let w = Transformer::t1().build(&Strategy::new(8, 128).unwrap()).unwrap();
+        let base =
+            derive_inputs(&w, &presets::dgx_a100_1024(), &EvalOptions::default())
+                .unwrap();
+        let het = derive_inputs(&w, &cluster, &EvalOptions::default()).unwrap();
+        assert_eq!(het.params.perf_peak, 0.5 * base.params.perf_peak);
+        assert_eq!(het.params.cap_lm, base.params.cap_lm);
+        assert_eq!(het.params.bw_intra, 0.5 * base.params.bw_intra);
+        assert_eq!(het.params.bw_inter, 0.5 * base.params.bw_inter);
+        // Memory-system bandwidths are per-node, not fabric: unscaled.
+        assert_eq!(het.params.bw_lm, base.params.bw_lm);
+        // Layer resolution is unchanged (same topology shape).
+        assert_eq!(het.layers, base.layers);
     }
 }

@@ -152,12 +152,7 @@ mod tests {
     use CollectiveImpl::{Hierarchical, LogicalRing};
 
     fn spec(c: Collective, bytes: f64, ni: usize, nx: usize) -> CollectiveSpec {
-        CollectiveSpec {
-            collective: c,
-            bytes,
-            n_intra: ni,
-            n_inter: nx,
-        }
+        CollectiveSpec::two_level(c, bytes, ni, nx)
     }
 
     /// Integrating the schedule serially (or max() for all-to-all) must

@@ -6,6 +6,7 @@
 //! oracle (python/compile/kernels/{collective,ref}.py); the cross-layer
 //! integration test enforces this.
 
+use crate::config::MAX_TIERS;
 use crate::workload::Collective;
 
 /// Collective implementation (paper Table I vs SV-B4).
@@ -41,7 +42,14 @@ impl CollectiveImpl {
     }
 }
 
-/// A fully resolved collective: payload, type, and two-level group shape.
+/// A fully resolved collective: payload, type, and group shape.
+///
+/// `n_intra`/`n_inter` carry the two-level shape every backend
+/// understands. When the spec was resolved on an N-tier chain,
+/// `n_tiers > 0` and `tier_n` carries the per-tier participant
+/// fan-out (innermost first); `n_intra`/`n_inter` then hold the
+/// two-level projection (tier 0 vs everything above) so two-class
+/// backends such as the DES engine stay usable.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CollectiveSpec {
     /// Collective type.
@@ -52,12 +60,58 @@ pub struct CollectiveSpec {
     pub n_intra: usize,
     /// Participant groups across pods.
     pub n_inter: usize,
+    /// Active tiers in `tier_n` (0 = legacy two-level resolution).
+    pub n_tiers: usize,
+    /// Per-tier participant fan-out, innermost first; unused slots are 1.
+    pub tier_n: [usize; MAX_TIERS],
 }
 
 impl CollectiveSpec {
+    /// A legacy two-level spec (no tier annotation).
+    pub fn two_level(
+        collective: Collective,
+        bytes: f64,
+        n_intra: usize,
+        n_inter: usize,
+    ) -> Self {
+        CollectiveSpec {
+            collective,
+            bytes,
+            n_intra,
+            n_inter,
+            n_tiers: 0,
+            tier_n: [1; MAX_TIERS],
+        }
+    }
+
+    /// A tier-annotated spec; `n_intra`/`n_inter` are set to the
+    /// two-level projection (tier 0 vs the product of outer tiers).
+    pub fn tiered(
+        collective: Collective,
+        bytes: f64,
+        tier_n: [usize; MAX_TIERS],
+        n_tiers: usize,
+    ) -> Self {
+        let k = n_tiers.clamp(1, MAX_TIERS);
+        let n_intra = tier_n[0].max(1);
+        let n_inter = tier_n[1..k].iter().product::<usize>().max(1);
+        CollectiveSpec {
+            collective,
+            bytes,
+            n_intra,
+            n_inter,
+            n_tiers: k,
+            tier_n,
+        }
+    }
+
     /// Total participants.
     pub fn n(&self) -> usize {
-        self.n_intra * self.n_inter
+        if self.n_tiers > 0 {
+            self.tier_n[..self.n_tiers].iter().product()
+        } else {
+            self.n_intra * self.n_inter
+        }
     }
 }
 
@@ -126,6 +180,146 @@ pub fn collective_cost(
     }
 }
 
+/// Index of the outermost tier an operation actually crosses: the
+/// highest tier with more than one participant group (falling back to
+/// tier 0). Generalizes the legacy `n_inter > 1 ? inter : intra` flat
+/// link-class choice.
+fn crossing_tier(spec: &CollectiveSpec, k: usize) -> usize {
+    (0..k).rev().find(|&t| spec.tier_n[t] > 1).unwrap_or(0)
+}
+
+/// Cost (seconds) of a collective on an N-tier chain — the k-tier
+/// generalization of [`collective_cost`].
+///
+/// * All-reduce, hierarchical: reduce-scatter up the chain (tier t
+///   operates on the tier-(t-1)-reduced shard `bytes / prod(n_0..n_t)`),
+///   a full all-reduce ring at the top tier, then all-gather back down.
+///   At `k = 2` this is bit-identical to the legacy two-level cost.
+/// * Logical-ring impls serialize one flat ring at the bandwidth of the
+///   outermost tier the group crosses.
+/// * All-to-all: each tier carries the fraction of peers first reachable
+///   at that tier, concurrently; cost is the max serialization time plus
+///   the flat latency term at the crossing tier.
+pub fn collective_cost_tiered(
+    spec: &CollectiveSpec,
+    tier_bw: &[f64; MAX_TIERS],
+    tier_lat: &[f64; MAX_TIERS],
+    impl_: CollectiveImpl,
+) -> f64 {
+    let k = spec.n_tiers.clamp(1, MAX_TIERS);
+    let n = spec.tier_n[..k].iter().product::<usize>() as f64;
+    if spec.bytes <= 0.0 || n <= 1.0 {
+        return 0.0;
+    }
+    // Shard size entering each tier: the payload already reduced by all
+    // tiers below it.
+    let mut shard = [0.0_f64; MAX_TIERS];
+    let mut b = spec.bytes;
+    for t in 0..k {
+        shard[t] = b;
+        b /= (spec.tier_n[t] as f64).max(1.0);
+    }
+    let cross = crossing_tier(spec, k);
+    let (bw_flat, lat_flat) = (tier_bw[cross], tier_lat[cross]);
+    match spec.collective {
+        Collective::None => 0.0,
+        Collective::AllReduce => match impl_ {
+            CollectiveImpl::LogicalRing => {
+                2.0 * ring_pass(spec.bytes, n, bw_flat, lat_flat)
+            }
+            CollectiveImpl::Hierarchical => {
+                let mut acc = 0.0;
+                for t in 0..k - 1 {
+                    acc += ring_pass(
+                        shard[t],
+                        spec.tier_n[t] as f64,
+                        tier_bw[t],
+                        tier_lat[t],
+                    );
+                }
+                acc += 2.0
+                    * ring_pass(
+                        shard[k - 1],
+                        spec.tier_n[k - 1] as f64,
+                        tier_bw[k - 1],
+                        tier_lat[k - 1],
+                    );
+                for t in (0..k - 1).rev() {
+                    acc += ring_pass(
+                        shard[t],
+                        spec.tier_n[t] as f64,
+                        tier_bw[t],
+                        tier_lat[t],
+                    );
+                }
+                acc
+            }
+        },
+        Collective::AllToAll => {
+            let peers = (n - 1.0).max(1.0);
+            // Fraction of peers first reachable at each tier; the last
+            // tier takes the remainder so fractions sum to exactly 1.
+            let mut within = 1.0_f64;
+            let mut frac = [0.0_f64; MAX_TIERS];
+            let mut below_last = 0.0;
+            for (t, f) in frac.iter_mut().enumerate().take(k - 1) {
+                let prev = within;
+                within *= spec.tier_n[t] as f64;
+                *f = if t == 0 {
+                    (within - 1.0).max(0.0) / peers
+                } else {
+                    (within - prev).max(0.0) / peers
+                };
+                below_last += *f;
+            }
+            frac[k - 1] = 1.0 - below_last;
+            let mut cost = spec.bytes * frac[0] / tier_bw[0].max(1.0);
+            for t in 1..k {
+                cost = cost.max(spec.bytes * frac[t] / tier_bw[t].max(1.0));
+            }
+            cost + (n - 1.0) * lat_flat
+        }
+        Collective::AllGather | Collective::ReduceScatter => match impl_ {
+            CollectiveImpl::LogicalRing => {
+                ring_pass(spec.bytes, n, bw_flat, lat_flat)
+            }
+            CollectiveImpl::Hierarchical => {
+                let mut acc = 0.0;
+                for t in 0..k {
+                    acc += ring_pass(
+                        shard[t],
+                        spec.tier_n[t] as f64,
+                        tier_bw[t],
+                        tier_lat[t],
+                    );
+                }
+                acc
+            }
+        },
+    }
+}
+
+/// Dispatch on the spec's addressing: tier-annotated specs cost on the
+/// chain, legacy specs cost on the two-level view. Keeps every legacy
+/// call path bit-identical while letting tier-aware inputs flow through
+/// the same evaluators.
+#[allow(clippy::too_many_arguments)]
+pub fn collective_cost_auto(
+    spec: &CollectiveSpec,
+    bw_intra: f64,
+    bw_inter: f64,
+    lat: f64,
+    tier_bw: &[f64; MAX_TIERS],
+    tier_lat: &[f64; MAX_TIERS],
+    impl_: CollectiveImpl,
+) -> f64 {
+    if spec.n_tiers > 0 {
+        collective_cost_tiered(spec, tier_bw, tier_lat, impl_)
+    } else {
+        collective_cost(spec, bw_intra, bw_inter, lat, impl_)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,12 +327,7 @@ mod tests {
     use CollectiveImpl::{Hierarchical, LogicalRing};
 
     fn ar(bytes: f64, ni: usize, nx: usize) -> CollectiveSpec {
-        CollectiveSpec {
-            collective: Collective::AllReduce,
-            bytes,
-            n_intra: ni,
-            n_inter: nx,
-        }
+        CollectiveSpec::two_level(Collective::AllReduce, bytes, ni, nx)
     }
 
     #[test]
@@ -182,12 +371,7 @@ mod tests {
 
     #[test]
     fn alltoall_balances_link_classes() {
-        let spec = CollectiveSpec {
-            collective: Collective::AllToAll,
-            bytes: 64e9,
-            n_intra: 8,
-            n_inter: 8,
-        };
+        let spec = CollectiveSpec::two_level(Collective::AllToAll, 64e9, 8, 8);
         // 7/63 of peers intra, 56/63 inter.
         let c = collective_cost(&spec, 300e9, 31.25e9, 0.0, Hierarchical);
         let want = (64e9 * (56.0 / 63.0) / 31.25e9_f64)
@@ -197,12 +381,7 @@ mod tests {
 
     #[test]
     fn allgather_is_half_of_allreduce_flat() {
-        let ag = CollectiveSpec {
-            collective: Collective::AllGather,
-            bytes: 1e9,
-            n_intra: 8,
-            n_inter: 1,
-        };
+        let ag = CollectiveSpec::two_level(Collective::AllGather, 1e9, 8, 1);
         let arr = ar(1e9, 8, 1);
         let cag = collective_cost(&ag, 300e9, 31.25e9, 0.0, Hierarchical);
         let car = collective_cost(&arr, 300e9, 31.25e9, 0.0, Hierarchical);
@@ -230,6 +409,67 @@ mod tests {
             let c = collective_cost(&ar(1e9, 8, nx), 300e9, 31.25e9, 1e-6, Hierarchical);
             assert!(c >= prev);
             prev = c;
+        }
+    }
+
+    #[test]
+    fn tiered_two_tiers_matches_legacy_bitwise() {
+        let bw = [300e9, 31.25e9, 0.0, 0.0];
+        let lat = [1e-6; 4];
+        for coll in [
+            Collective::AllReduce,
+            Collective::AllGather,
+            Collective::ReduceScatter,
+            Collective::AllToAll,
+        ] {
+            for (ni, nx) in [(8, 16), (8, 1), (1, 16), (2, 2)] {
+                let legacy = CollectiveSpec::two_level(coll, 3e9, ni, nx);
+                let tiered =
+                    CollectiveSpec::tiered(coll, 3e9, [ni, nx, 1, 1], 2);
+                for impl_ in [LogicalRing, Hierarchical] {
+                    let a =
+                        collective_cost(&legacy, bw[0], bw[1], 1e-6, impl_);
+                    let b = collective_cost_tiered(&tiered, &bw, &lat, impl_);
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{coll:?} {impl_:?} ni={ni} nx={nx}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_three_tier_allreduce_closed_form() {
+        // 8x4x2 chain, hierarchical: rs/ag per lower tier plus a full
+        // ring at the top on the twice-reduced shard.
+        let spec =
+            CollectiveSpec::tiered(Collective::AllReduce, 1e9, [8, 4, 2, 1], 3);
+        let bw = [300e9, 50e9, 12.5e9, 0.0];
+        let lat = [0.0; 4];
+        let got = collective_cost_tiered(&spec, &bw, &lat, Hierarchical);
+        let t0 = 7.0 / 8.0 * 1e9 / 300e9;
+        let t1 = 3.0 / 4.0 * (1e9 / 8.0) / 50e9;
+        let t2 = 2.0 * (1.0 / 2.0) * (1e9 / 32.0) / 12.5e9;
+        let want = 2.0 * (t0 + t1) + t2;
+        assert!((got - want).abs() / want < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn tiered_cost_monotone_in_every_tier_bandwidth() {
+        let spec =
+            CollectiveSpec::tiered(Collective::AllReduce, 1e9, [8, 4, 2, 1], 3);
+        let bw = [300e9, 50e9, 12.5e9, 0.0];
+        let lat = [1e-6; 4];
+        for impl_ in [LogicalRing, Hierarchical] {
+            let base = collective_cost_tiered(&spec, &bw, &lat, impl_);
+            for t in 0..3 {
+                let mut faster = bw;
+                faster[t] *= 2.0;
+                let c = collective_cost_tiered(&spec, &faster, &lat, impl_);
+                assert!(c <= base, "tier {t} {impl_:?}: {c} > {base}");
+            }
         }
     }
 }

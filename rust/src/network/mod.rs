@@ -5,4 +5,7 @@
 pub mod chunking;
 pub mod collectives;
 
-pub use collectives::{collective_cost, CollectiveImpl, CollectiveSpec};
+pub use collectives::{
+    collective_cost, collective_cost_auto, collective_cost_tiered,
+    CollectiveImpl, CollectiveSpec,
+};

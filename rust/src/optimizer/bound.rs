@@ -16,8 +16,8 @@
 
 use crate::analytical::pipeline_makespan;
 use crate::compute::{compute_delay, gemm_traffic};
-use crate::model::inputs::WorkloadDecomposition;
-use crate::network::{collective_cost, CollectiveImpl};
+use crate::model::inputs::{LayerRecord, NodeParams, WorkloadDecomposition};
+use crate::network::{collective_cost_auto, CollectiveImpl};
 use crate::workload::Collective;
 
 /// Per-phase `[FP, IG, WG]` compute times at memory bandwidth `bw`,
@@ -39,27 +39,34 @@ pub(crate) fn compute_times(
     compute
 }
 
-/// Blocking `(FP, IG)` collective times for one implementation on the
-/// cluster's two-level view, mirroring `analytical::evaluate`'s layer
-/// accumulation order (and its `Collective::None` fast path).
+/// Blocking `(FP, IG)` collective times for one implementation over the
+/// branch template's already-resolved layer records, mirroring
+/// `analytical::evaluate`'s layer accumulation order (and its
+/// `Collective::None` fast path). The records carry the group shapes —
+/// two-level or tiered — so the dispatch matches evaluation exactly and
+/// the FP/IG comm terms stay *exact* (not just admissible).
 pub(crate) fn blocking_comm_times(
-    dec: &WorkloadDecomposition,
-    pod_size: usize,
-    bw_intra: f64,
-    bw_inter: f64,
-    lat: f64,
+    layers: &[LayerRecord],
+    p: &NodeParams,
     impl_: CollectiveImpl,
 ) -> (f64, f64) {
     let mut comm = [0.0f64; 2];
-    for layer in &dec.layers {
+    for layer in layers {
         for (phase, slot) in comm.iter_mut().enumerate() {
             let c = &layer.comm[phase];
             if matches!(c.collective, Collective::None) {
                 continue;
             }
-            let spec = dec.resolve_comm(c, pod_size);
             *slot += layer.repeat
-                * collective_cost(&spec, bw_intra, bw_inter, lat, impl_);
+                * collective_cost_auto(
+                    c,
+                    p.bw_intra,
+                    p.bw_inter,
+                    p.link_latency,
+                    &p.tier_bw,
+                    &p.tier_lat,
+                    impl_,
+                );
         }
     }
     (comm[0], comm[1])
@@ -97,28 +104,33 @@ pub(crate) fn stage_compute_times(
     compute
 }
 
-/// Per-stage blocking `(FP, IG)` collective times for one implementation,
-/// mirroring the pipeline backend's per-stage accumulation order.
+/// Per-stage blocking `(FP, IG)` collective times for one implementation
+/// over the branch template's resolved layer records, mirroring the
+/// pipeline backend's per-stage accumulation order.
 pub(crate) fn stage_blocking_comm_times(
-    dec: &WorkloadDecomposition,
-    pod_size: usize,
-    bw_intra: f64,
-    bw_inter: f64,
-    lat: f64,
+    layers: &[LayerRecord],
+    p: &NodeParams,
     impl_: CollectiveImpl,
 ) -> Vec<(f64, f64)> {
-    let pp = dec.pp.max(1);
+    let pp = p.pp.max(1);
     let mut comm = vec![(0.0f64, 0.0f64); pp];
-    for layer in &dec.layers {
+    for layer in layers {
         let s = layer.stage.min(pp - 1);
         for phase in 0..2 {
             let c = &layer.comm[phase];
             if matches!(c.collective, Collective::None) {
                 continue;
             }
-            let spec = dec.resolve_comm(c, pod_size);
             let cost = layer.repeat
-                * collective_cost(&spec, bw_intra, bw_inter, lat, impl_);
+                * collective_cost_auto(
+                    c,
+                    p.bw_intra,
+                    p.bw_inter,
+                    p.link_latency,
+                    &p.tier_bw,
+                    &p.tier_lat,
+                    impl_,
+                );
             if phase == 0 {
                 comm[s].0 += cost;
             } else {
@@ -177,7 +189,6 @@ mod tests {
             let dec = decompose(&w);
             let inputs = derive_inputs(&w, &cluster, &opts).unwrap();
             let b = evaluate(&inputs);
-            let view = cluster.two_level();
             // ignore_capacity forces the full local bandwidth — the bound
             // bandwidth equals the evaluated one, so the bound is the
             // total minus the exposed WG share, exactly.
@@ -188,11 +199,8 @@ mod tests {
                 cluster.node.local.bandwidth,
             );
             let (c0, c1) = blocking_comm_times(
-                &dec,
-                view.pod_size,
-                view.bw_intra,
-                view.bw_inter,
-                cluster.link_latency,
+                &inputs.layers,
+                &inputs.params,
                 opts.collective_impl,
             );
             let lb = assemble(compute, c0, c1);
@@ -212,7 +220,7 @@ mod tests {
     #[test]
     fn pipeline_bound_never_exceeds_evaluated_total() {
         let cluster = presets::dgx_a100_1024();
-        let view = cluster.two_level();
+        let view = cluster.two_level().unwrap();
         for (pp, m) in [(2usize, 4usize), (4, 8), (8, 2)] {
             let s = Strategy::new_3d(8, 128 / pp, pp).unwrap();
             let w = Transformer::t1().build(&s).unwrap();
@@ -231,11 +239,8 @@ mod tests {
                 cluster.node.local.bandwidth,
             );
             let comm = stage_blocking_comm_times(
-                &dec,
-                view.pod_size,
-                view.bw_intra,
-                view.bw_inter,
-                cluster.link_latency,
+                &inputs.layers,
+                &inputs.params,
                 opts.collective_impl,
             );
             let bw_b = if inputs.params.pp_inter {

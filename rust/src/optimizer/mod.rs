@@ -66,7 +66,9 @@ use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::analytical::{evaluate_parts, goodput, TrainingBreakdown};
+use crate::analytical::{
+    evaluate_parts, goodput, pp_boundary_link, TrainingBreakdown,
+};
 use crate::compute::{em_fraction, hybrid_bandwidth};
 use crate::config::ClusterConfig;
 use crate::coordinator::{Backend, Coordinator};
@@ -75,7 +77,7 @@ use crate::model::inputs::{
     resolve_inputs, EvalOptions, ModelInputs, WorkloadDecomposition,
 };
 use crate::network::CollectiveImpl;
-use crate::parallel::{PipeSchedule, Strategy, ZeroStage};
+use crate::parallel::{PipeSchedule, ZeroStage};
 use crate::resilience::{checkpoint_bandwidth, FaultModel};
 use crate::workload::Workload;
 
@@ -686,14 +688,17 @@ impl<'a> Optimizer<'a> {
     // ---- bounds -----------------------------------------------------------
 
     /// The branch's expanded-memory traffic fraction, mirroring the
-    /// backend's resolution of the same quantity.
-    fn branch_frac(&self, footprint: f64) -> f64 {
+    /// backend's resolution of the same quantity. `cap_lm` is the branch
+    /// template's local capacity — possibly group-scaled on a
+    /// heterogeneous cluster — so the fraction matches the evaluation's
+    /// exactly.
+    fn branch_frac(&self, footprint: f64, cap_lm: f64) -> f64 {
         if self.opts.ignore_capacity {
             0.0
         } else {
-            self.opts.em_frac_override.unwrap_or_else(|| {
-                em_fraction(footprint, self.cluster.node.local.capacity)
-            })
+            self.opts
+                .em_frac_override
+                .unwrap_or_else(|| em_fraction(footprint, cap_lm))
         }
     }
 
@@ -727,7 +732,6 @@ impl<'a> Optimizer<'a> {
     ) -> Result<BranchState> {
         let b = &self.branches[bi];
         let node = &self.cluster.node;
-        let view = self.cluster.two_level();
         // Best expanded-memory bandwidth any point can reach. The base
         // node's own expanded memory is always a candidate: points
         // without an expansion axis keep it, and so do axis points whose
@@ -758,20 +762,14 @@ impl<'a> Optimizer<'a> {
         // `resolve_inputs` applies — taken from the template so the
         // feasibility rule and the evaluation cannot drift).
         let footprint = template.params.footprint;
-        let frac = self.branch_frac(footprint);
+        let frac = self.branch_frac(footprint, template.params.cap_lm);
         let x = if pipeline {
-            let boundary =
-                dec.boundary_bytes.iter().copied().fold(0.0, f64::max);
-            // Same boundary-link classification the derive layer
-            // uses (one shared predicate, no drift).
-            let crosses = Strategy {
-                mp: dec.mp,
-                dp: dec.dp,
-                pp: dec.pp,
-            }
-            .pp_crosses_pods(view.pod_size);
-            let bw_b = if crosses { view.bw_inter } else { view.bw_intra };
-            (boundary / m as f64) / bw_b.max(1.0) + self.cluster.link_latency
+            // Same boundary-link dispatch the evaluation uses (one
+            // shared helper, no drift) — two-level or tiered, and the
+            // boundary bytes are the template's own resolution.
+            let (bw_b, lat_b) = pp_boundary_link(&template.params);
+            (template.params.pp_boundary_bytes / m as f64) / bw_b.max(1.0)
+                + lat_b
         } else {
             0.0
         };
@@ -782,32 +780,26 @@ impl<'a> Optimizer<'a> {
             .map(|&ci| {
                 if pipeline {
                     bound::stage_blocking_comm_times(
-                        &dec,
-                        view.pod_size,
-                        view.bw_intra,
-                        view.bw_inter,
-                        self.cluster.link_latency,
+                        &template.layers,
+                        &template.params,
                         ci,
                     )
                 } else {
                     vec![bound::blocking_comm_times(
-                        &dec,
-                        view.pod_size,
-                        view.bw_intra,
-                        view.bw_inter,
-                        self.cluster.link_latency,
+                        &template.layers,
+                        &template.params,
                         ci,
                     )]
                 }
             })
             .collect();
         let bw_best =
-            hybrid_bandwidth(node.local.bandwidth, bw_em_best, frac);
+            hybrid_bandwidth(template.params.bw_lm, bw_em_best, frac);
         let subtree_bound = if pipeline {
             let compute = bound::stage_compute_times(
                 &dec,
-                node.perf_peak,
-                node.sram,
+                template.params.perf_peak,
+                template.params.sram,
                 bw_best,
             );
             comm.iter()
@@ -817,8 +809,8 @@ impl<'a> Optimizer<'a> {
         } else {
             let compute = bound::compute_times(
                 &dec,
-                node.perf_peak,
-                node.sram,
+                template.params.perf_peak,
+                template.params.sram,
                 bw_best,
             );
             let comm_min = comm
@@ -851,7 +843,7 @@ impl<'a> Optimizer<'a> {
 
     /// Expand one branch into its feasible leaves, canonically ordered.
     fn expand(&self, bi: usize, st: &BranchState) -> Vec<Leaf> {
-        let node = &self.cluster.node;
+        let p = &st.template.params;
         let (nbw, ncap, ncoll) = (
             self.axes.em_bandwidths.len(),
             self.axes.em_capacities.len(),
@@ -867,8 +859,10 @@ impl<'a> Optimizer<'a> {
                 // Exact effective bandwidth of this point — em_fraction
                 // depends only on footprint and local capacity, so the
                 // leaf's compute floor is the backend's compute time.
-                let bw_eff =
-                    hybrid_bandwidth(node.local.bandwidth, bw_em, st.frac);
+                // Template parameters, not the raw node: on a
+                // heterogeneous cluster the group-scaled values are what
+                // the evaluation sees.
+                let bw_eff = hybrid_bandwidth(p.bw_lm, bw_em, st.frac);
                 let pipeline = st.dec.pp > 1;
                 let compute_flat;
                 let compute_stages;
@@ -876,15 +870,15 @@ impl<'a> Optimizer<'a> {
                     compute_flat = [0.0f64; 3];
                     compute_stages = bound::stage_compute_times(
                         &st.dec,
-                        node.perf_peak,
-                        node.sram,
+                        p.perf_peak,
+                        p.sram,
                         bw_eff,
                     );
                 } else {
                     compute_flat = bound::compute_times(
                         &st.dec,
-                        node.perf_peak,
-                        node.sram,
+                        p.perf_peak,
+                        p.sram,
                         bw_eff,
                     );
                     compute_stages = Vec::new();
@@ -951,9 +945,8 @@ impl<'a> Optimizer<'a> {
         match self.objective {
             Objective::Time => (breakdown.total(), 1.0),
             Objective::Goodput => {
-                let view = self.cluster.two_level();
                 let ckpt_bw = checkpoint_bandwidth(
-                    view.bw_inter,
+                    self.cluster.inter_bandwidth(),
                     self.cluster.node.local.bandwidth,
                     leaf.bw_em,
                 );

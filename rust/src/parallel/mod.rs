@@ -13,5 +13,6 @@ pub use footprint::{
     residual_state_bytes, stage_footprint_terms, FootprintBreakdown,
 };
 pub use pipeline::PipeSchedule;
-pub use strategy::Strategy;
+pub(crate) use strategy::tier_fill;
+pub use strategy::{Strategy, TierMapping};
 pub use zero::{model_state_bytes, ZeroStage};

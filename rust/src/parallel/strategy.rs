@@ -14,7 +14,73 @@
 //! `pp` stages are outermost, strided by `mp * dp` — stage `s`, replica
 //! `d`, MP rank `m` sits at node `s*mp*dp + d*mp + m`.
 
+use crate::config::MAX_TIERS;
 use crate::error::{Error, Result};
+
+/// Which strategy axis is packed into the innermost network tiers of a
+/// multi-tier fabric (the `tier-mapping` study knob). The legacy
+/// two-level resolution is exactly [`TierMapping::MpInner`] on a 2-tier
+/// chain: MP peers occupy consecutive nodes, DP replicas stride by `mp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TierMapping {
+    /// MP innermost (the paper's SIII-B layout): MP peers fill the
+    /// lowest tiers first, DP replicas stride across what remains.
+    #[default]
+    MpInner,
+    /// DP innermost: data-parallel replicas fill the lowest tiers first,
+    /// MP groups stride across the outer tiers (gradient exchange rides
+    /// the fast tiers, activation exchange the slow ones).
+    DpInner,
+}
+
+impl TierMapping {
+    /// Canonical scenario-file name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TierMapping::MpInner => "mp-inner",
+            TierMapping::DpInner => "dp-inner",
+        }
+    }
+
+    /// Parse the scenario-file vocabulary.
+    pub fn parse(s: &str) -> Result<TierMapping> {
+        match s {
+            "mp-inner" => Ok(TierMapping::MpInner),
+            "dp-inner" => Ok(TierMapping::DpInner),
+            other => Err(Error::Config(format!(
+                "unknown tier mapping '{other}', want mp-inner | dp-inner"
+            ))),
+        }
+    }
+
+    /// Both mappings, in presentation order.
+    pub const ALL: [TierMapping; 2] = [TierMapping::MpInner, TierMapping::DpInner];
+}
+
+/// Greedy bottom-up fill of a communication group of `total` peers onto
+/// the remaining per-tier capacity `caps` (fan-out still unclaimed at
+/// each tier). Inner tiers are bounded by capacity; the outermost tier
+/// absorbs the remainder, mirroring the legacy two-level split where
+/// `intra = total.min(pod)` and `inter = total / intra`.
+pub(crate) fn tier_fill(
+    total: usize,
+    caps: &mut [usize; MAX_TIERS],
+    k: usize,
+) -> [usize; MAX_TIERS] {
+    let mut out = [1usize; MAX_TIERS];
+    let mut rem = total.max(1);
+    for t in 0..k {
+        let take = if t + 1 == k {
+            rem
+        } else {
+            rem.min(caps[t].max(1))
+        };
+        out[t] = take.max(1);
+        rem /= out[t];
+        caps[t] = (caps[t] / out[t]).max(1);
+    }
+    out
+}
 
 /// A model/data/pipeline parallelism split. Invariant:
 /// `mp * dp * pp == cluster size`; `pp == 1` is the paper's 2D lattice.
@@ -184,6 +250,60 @@ impl Strategy {
     pub fn pp_crosses_pods(&self, pod_size: usize) -> bool {
         self.pp > 1 && self.mp * self.dp >= pod_size
     }
+
+    /// Per-tier fan-out of the MP and DP groups on an N-tier chain with
+    /// per-tier group sizes `groups[..k]`, under the given mapping:
+    /// the inner axis fills the lowest tiers first, the outer axis
+    /// strides across the remaining capacity. Returns
+    /// `(mp_tiers, dp_tiers)`; products equal `mp` and `dp`. At
+    /// `k = 2` with [`TierMapping::MpInner`] this reproduces
+    /// [`Strategy::mp_two_level`] / [`Strategy::dp_two_level`] exactly.
+    pub fn tier_split(
+        &self,
+        groups: &[usize; MAX_TIERS],
+        k: usize,
+        mapping: TierMapping,
+    ) -> ([usize; MAX_TIERS], [usize; MAX_TIERS]) {
+        let mut caps = *groups;
+        match mapping {
+            TierMapping::MpInner => {
+                let m = tier_fill(self.mp, &mut caps, k);
+                let d = tier_fill(self.dp, &mut caps, k);
+                (m, d)
+            }
+            TierMapping::DpInner => {
+                let d = tier_fill(self.dp, &mut caps, k);
+                let m = tier_fill(self.mp, &mut caps, k);
+                (m, d)
+            }
+        }
+    }
+
+    /// Outermost tier the stage-boundary point-to-point link rides:
+    /// adjacent pipeline stages are `mp * dp` nodes apart, so the
+    /// transfer crosses tier `t` whenever a stage fills everything below
+    /// it. Tier 0 when `pp = 1` (no boundary) or the stage fits inside
+    /// the innermost tier; at `k = 2` this is
+    /// [`Strategy::pp_crosses_pods`] as a tier index.
+    pub fn pp_boundary_tier(
+        &self,
+        groups: &[usize; MAX_TIERS],
+        k: usize,
+    ) -> usize {
+        if self.pp <= 1 {
+            return 0;
+        }
+        let stride = self.mp * self.dp;
+        let mut tier = 0;
+        let mut below = 1usize;
+        for t in 1..k {
+            below *= groups[t - 1];
+            if stride >= below {
+                tier = t;
+            }
+        }
+        tier
+    }
 }
 
 impl std::fmt::Display for Strategy {
@@ -306,5 +426,67 @@ mod tests {
         assert!(!Strategy::new_3d(2, 2, 4).unwrap().pp_crosses_pods(8));
         // No boundary at pp = 1.
         assert!(!Strategy::new(8, 128).unwrap().pp_crosses_pods(8));
+    }
+
+    #[test]
+    fn tier_split_matches_two_level_on_two_tiers() {
+        // MpInner on a 2-tier chain must reproduce the legacy two-level
+        // splits for every strategy in the sweep.
+        let groups = [8usize, 128, 1, 1];
+        for st in Strategy::sweep(1024).unwrap() {
+            let (m, d) = st.tier_split(&groups, 2, TierMapping::MpInner);
+            assert_eq!((m[0], m[1]), st.mp_two_level(8), "{st}");
+            assert_eq!((d[0], d[1]), st.dp_two_level(8), "{st}");
+        }
+    }
+
+    #[test]
+    fn tier_split_products_match_degrees() {
+        let groups = [8usize, 4, 4, 2];
+        for st in Strategy::sweep_3d(256, 1, 256, 4).unwrap() {
+            for mapping in TierMapping::ALL {
+                let (m, d) = st.tier_split(&groups, 4, mapping);
+                assert_eq!(m.iter().product::<usize>(), st.mp, "{st}");
+                assert_eq!(d.iter().product::<usize>(), st.dp, "{st}");
+            }
+        }
+    }
+
+    #[test]
+    fn dp_inner_swaps_the_fill_order() {
+        let groups = [8usize, 4, 2, 1];
+        let st = Strategy::new(4, 16).unwrap();
+        let (m, d) = st.tier_split(&groups, 3, TierMapping::MpInner);
+        assert_eq!(&m[..3], &[4, 1, 1]);
+        assert_eq!(&d[..3], &[2, 4, 2]);
+        let (m, d) = st.tier_split(&groups, 3, TierMapping::DpInner);
+        assert_eq!(&d[..3], &[8, 2, 1]);
+        assert_eq!(&m[..3], &[1, 2, 2]);
+    }
+
+    #[test]
+    fn pp_boundary_tier_generalizes_pod_crossing() {
+        let groups = [8usize, 4, 2, 1];
+        // Stage of 32 nodes fills tiers 0-1: boundary rides tier 2.
+        assert_eq!(
+            Strategy::new_3d(8, 4, 2).unwrap().pp_boundary_tier(&groups, 3),
+            2
+        );
+        // Stage of 4 nodes fits inside the innermost tier.
+        assert_eq!(
+            Strategy::new_3d(2, 2, 16).unwrap().pp_boundary_tier(&groups, 3),
+            0
+        );
+        // pp = 1: no boundary.
+        assert_eq!(
+            Strategy::new(8, 8).unwrap().pp_boundary_tier(&groups, 3),
+            0
+        );
+        // k = 2 agrees with pp_crosses_pods for the whole 3D sweep.
+        let two = [8usize, 8, 1, 1];
+        for st in Strategy::sweep_3d(64, 1, 64, 8).unwrap() {
+            let tier = st.pp_boundary_tier(&two, 2);
+            assert_eq!(tier == 1, st.pp_crosses_pods(8), "{st}");
+        }
     }
 }

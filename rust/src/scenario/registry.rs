@@ -46,8 +46,16 @@ const BUILTINS: &[(&str, &str)] = &[
         include_str!("../../../scenarios/optimize_dlrm.toml"),
     ),
     (
+        "optimize-tiered",
+        include_str!("../../../scenarios/optimize_tiered.toml"),
+    ),
+    (
         "pipeline-transformer",
         include_str!("../../../scenarios/pipeline_transformer.toml"),
+    ),
+    (
+        "tier-mapping",
+        include_str!("../../../scenarios/tier_mapping.toml"),
     ),
     (
         "resilience-transformer",

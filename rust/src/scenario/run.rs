@@ -21,7 +21,7 @@ use crate::optimizer::{AxisSpec, Branch, Objective, Optimizer, Outcome};
 use crate::resilience::{checkpoint_bandwidth, FaultModel};
 use crate::parallel::{
     model_state_bytes, pipeline_footprint_per_node, PipeSchedule, Strategy,
-    ZeroStage,
+    TierMapping, ZeroStage,
 };
 use crate::report::FigureData;
 use crate::util::units::gb;
@@ -95,6 +95,10 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
             microbatch_counts,
             schedules,
         } => run_pipeline(spec, coord, *mp, pps, microbatch_counts, schedules)?,
+        Study::TierMapping {
+            strategies,
+            mappings,
+        } => run_tier_mapping(spec, coord, strategies, mappings)?,
         Study::ClusterCompare {
             clusters,
             dlrm,
@@ -140,6 +144,7 @@ fn eval_opts(spec: &ScenarioSpec) -> EvalOptions {
         collective_impl: o.collective,
         microbatches: o.microbatches,
         pipe_schedule: o.schedule,
+        tier_mapping: o.tier_mapping,
     }
 }
 
@@ -926,6 +931,45 @@ fn run_pipeline(
     Ok(fig)
 }
 
+fn run_tier_mapping(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    strategies: &StrategyAxis,
+    mappings: &[TierMapping],
+) -> Result<FigureData> {
+    let opts0 = eval_opts(spec);
+    let strategies = strategies.resolve(spec.cluster.n_nodes)?;
+    let mut specs: Vec<SweepSpec> = Vec::new();
+    for s in &strategies {
+        let w = build_for(&spec.workload, s)?;
+        for &mapping in mappings {
+            let o = EvalOptions {
+                tier_mapping: mapping,
+                ..opts0
+            };
+            specs.push((w.clone(), spec.cluster.clone(), o));
+        }
+    }
+    let inputs = coord.derive_batch(specs)?;
+    let evals = coord.evaluate_inputs(&inputs)?;
+
+    let width = mappings.len();
+    let mut fig = figure(spec, "strategy");
+    fig.columns = mappings.iter().map(|m| m.name().to_string()).collect();
+    for (i, s) in strategies.iter().enumerate() {
+        let vals: Vec<f64> = (0..width)
+            .map(|j| evals[i * width + j].total())
+            .collect();
+        fig.rows.push((s.label(), vals));
+    }
+    fig.notes.push(
+        "cells: iteration time (s); columns: which strategy axis maps to \
+         the innermost fabric tiers"
+            .into(),
+    );
+    Ok(fig)
+}
+
 /// The pipeline study's lattice as optimizer branches: one branch per
 /// (PP, schedule, microbatch-count) point, so the branch-and-bound
 /// search returns its argmin with the same pruning guarantees as an
@@ -1227,7 +1271,7 @@ fn run_resilience(
 ) -> Result<FigureData> {
     let strategies = strategies.resolve(spec.cluster.n_nodes)?;
     let opts0 = eval_opts(spec);
-    let view = spec.cluster.two_level();
+    let bw_inter = spec.cluster.inter_bandwidth();
     let bw_lm = spec.cluster.node.local.bandwidth;
 
     // One evaluation job per strategy; checkpoint footprint and
@@ -1260,7 +1304,7 @@ fn run_resilience(
             cluster.node = cluster.node.with_expanded(need, bw_em);
         }
         footprints.push(fp);
-        ckpt_bws.push(checkpoint_bandwidth(view.bw_inter, bw_lm, bw_em));
+        ckpt_bws.push(checkpoint_bandwidth(bw_inter, bw_lm, bw_em));
         specs.push((w, cluster, opts0));
     }
     let inputs = coord.derive_batch(specs)?;

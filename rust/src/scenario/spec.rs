@@ -16,7 +16,7 @@ use crate::coordinator::Coordinator;
 use crate::error::{Error, Result};
 use crate::network::CollectiveImpl;
 use crate::optimizer::Objective;
-use crate::parallel::{PipeSchedule, Strategy, ZeroStage};
+use crate::parallel::{PipeSchedule, Strategy, TierMapping, ZeroStage};
 use crate::resilience::FaultModel;
 use crate::util::json::Value;
 use crate::workload::dlrm::Dlrm;
@@ -236,6 +236,17 @@ pub enum Study {
         /// Schedules swept (rows within a PP group; both by default).
         schedules: Vec<PipeSchedule>,
     },
+    /// Tier-mapping case study on a multi-tier cluster: which strategy
+    /// axis lives on which fabric tier. Rows are strategies, columns are
+    /// [`TierMapping`]s (MP innermost vs DP innermost), cells are
+    /// iteration time — the tiered analogue of the paper's network
+    /// placement discussion.
+    TierMapping {
+        /// Strategy axis (rows).
+        strategies: StrategyAxis,
+        /// Mappings compared (columns; both by default).
+        mappings: Vec<TierMapping>,
+    },
     /// Cross-cluster comparison on DLRM turnaround + best-feasible
     /// transformer strategy (paper Fig. 15 / Table III).
     ClusterCompare {
@@ -265,6 +276,7 @@ impl Study {
             Study::Optimize { .. } => "optimize",
             Study::Resilience { .. } => "resilience",
             Study::Pipeline { .. } => "pipeline",
+            Study::TierMapping { .. } => "tier-mapping",
             Study::ClusterCompare { .. } => "cluster-compare",
         }
     }
@@ -326,6 +338,10 @@ pub struct OptionsSpec {
     pub microbatches: usize,
     /// Default pipeline schedule (`gpipe` | `1f1b`; ignored at `pp = 1`).
     pub schedule: PipeSchedule,
+    /// Which strategy axis maps to the innermost fabric tiers on a
+    /// multi-tier topology (`mp-inner` | `dp-inner`; ignored on legacy
+    /// two-level clusters, which always resolve MP innermost).
+    pub tier_mapping: TierMapping,
 }
 
 impl Default for OptionsSpec {
@@ -339,6 +355,7 @@ impl Default for OptionsSpec {
             em_frac: None,
             microbatches: 8,
             schedule: PipeSchedule::OneFOneB,
+            tier_mapping: TierMapping::MpInner,
         }
     }
 }
@@ -806,7 +823,7 @@ fn cluster_from_json(v: &Value) -> Result<ClusterConfig> {
         // silently.
         check_keys(
             m,
-            &["name", "n_nodes", "link_latency", "node", "topology"],
+            &["name", "n_nodes", "link_latency", "node", "topology", "groups"],
             "cluster",
         )?;
         ClusterConfig::from_json(v)
@@ -1177,6 +1194,32 @@ impl Study {
                     },
                 })
             }
+            "tier-mapping" => {
+                check_keys(
+                    m,
+                    &[
+                        "kind",
+                        "strategies",
+                        "min_mp",
+                        "max_mp",
+                        "max_pp",
+                        "mappings",
+                    ],
+                    "study",
+                )?;
+                let mappings = str_list(m, "mappings", "study")?
+                    .iter()
+                    .map(|s| TierMapping::parse(s))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Study::TierMapping {
+                    strategies: Self::strategies_axis(m)?,
+                    mappings: if mappings.is_empty() {
+                        TierMapping::ALL.to_vec()
+                    } else {
+                        mappings
+                    },
+                })
+            }
             "cluster-compare" => {
                 check_keys(
                     m,
@@ -1465,6 +1508,21 @@ impl Study {
                     ),
                 );
             }
+            Study::TierMapping {
+                strategies,
+                mappings,
+            } => {
+                axis_to_json(&mut m, strategies);
+                m.insert(
+                    "mappings".into(),
+                    Value::Arr(
+                        mappings
+                            .iter()
+                            .map(|t| Value::Str(t.name().into()))
+                            .collect(),
+                    ),
+                );
+            }
             Study::ClusterCompare {
                 clusters,
                 dlrm,
@@ -1505,6 +1563,7 @@ impl OptionsSpec {
                 "em_frac",
                 "microbatches",
                 "schedule",
+                "tier_mapping",
             ],
             "options",
         )?;
@@ -1547,6 +1606,9 @@ impl OptionsSpec {
         if let Some(s) = opt_str(m, "schedule", "options")? {
             o.schedule = PipeSchedule::parse(&s)?;
         }
+        if let Some(s) = opt_str(m, "tier_mapping", "options")? {
+            o.tier_mapping = TierMapping::parse(&s)?;
+        }
         Ok(o)
     }
 
@@ -1577,6 +1639,14 @@ impl OptionsSpec {
             "schedule".into(),
             Value::Str(self.schedule.name().into()),
         );
+        // Emitted only when non-default so legacy exports stay
+        // byte-identical.
+        if self.tier_mapping != TierMapping::MpInner {
+            m.insert(
+                "tier_mapping".into(),
+                Value::Str(self.tier_mapping.name().into()),
+            );
+        }
         Value::Obj(m)
     }
 }
@@ -1872,6 +1942,70 @@ mod tests {
         ] {
             assert!(ScenarioSpec::parse_str(doc).is_err(), "{doc}");
         }
+    }
+
+    #[test]
+    fn tier_mapping_study_parses_and_roundtrips() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"tm\"\n[cluster]\npreset = \"tiered-het-64\"\n\
+             [study]\nkind = \"tier-mapping\"\n\
+             strategies = [\"MP8_DP8\", \"MP4_DP16\"]\n\
+             mappings = [\"mp-inner\", \"dp-inner\"]\n",
+        )
+        .unwrap();
+        match &s.study {
+            Study::TierMapping {
+                strategies,
+                mappings,
+            } => {
+                assert_eq!(strategies.resolve(64).unwrap().len(), 2);
+                assert_eq!(
+                    mappings,
+                    &[TierMapping::MpInner, TierMapping::DpInner]
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        let back = ScenarioSpec::parse_str(&s.to_toml().unwrap()).unwrap();
+        assert_eq!(s, back);
+        // Mappings default to both; bad names are rejected.
+        let d = ScenarioSpec::parse_str(
+            "name = \"tm\"\n[study]\nkind = \"tier-mapping\"\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            d.study,
+            Study::TierMapping { ref mappings, .. } if mappings.len() == 2
+        ));
+        assert!(ScenarioSpec::parse_str(
+            "name = \"tm\"\n[study]\nkind = \"tier-mapping\"\n\
+             mappings = [\"inside-out\"]\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tier_mapping_option_parses_and_roundtrips() {
+        let s = ScenarioSpec::parse_str(
+            "name = \"tm\"\n[options]\ntier_mapping = \"dp-inner\"\n\
+             [study]\nkind = \"grid\"\n",
+        )
+        .unwrap();
+        assert_eq!(s.options.tier_mapping, TierMapping::DpInner);
+        let back = ScenarioSpec::parse_str(&s.to_toml().unwrap()).unwrap();
+        assert_eq!(s, back);
+        // The default mapping is omitted from exports (legacy files stay
+        // byte-identical).
+        let plain = ScenarioSpec::parse_str(
+            "name = \"tm\"\n[study]\nkind = \"grid\"\n",
+        )
+        .unwrap();
+        assert!(!plain.to_toml().unwrap().contains("tier_mapping"));
+        assert!(ScenarioSpec::parse_str(
+            "name = \"tm\"\n[options]\ntier_mapping = \"sideways\"\n\
+             [study]\nkind = \"grid\"\n"
+        )
+        .is_err());
     }
 
     #[test]

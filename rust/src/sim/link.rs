@@ -112,6 +112,72 @@ impl Links {
     }
 }
 
+/// A generalization of [`Links`] to N link classes — one FIFO resource
+/// per topology tier. The engine itself still runs on the two-class
+/// [`Links`] (tiered inputs project onto it); `TierLinks` exists so the
+/// tiered collective closed forms can be cross-checked against an
+/// event-driven per-tier ring simulation (`tests/properties.rs`).
+#[derive(Debug, Clone)]
+pub struct TierLinks {
+    tiers: Vec<LinkState>,
+}
+
+impl TierLinks {
+    /// New link set, one `(bandwidth, latency)` pair per tier,
+    /// innermost first.
+    pub fn new(tiers: &[(f64, f64)]) -> TierLinks {
+        TierLinks {
+            tiers: tiers
+                .iter()
+                .map(|&(bw, lat)| LinkState {
+                    bw: bw.max(1.0),
+                    lat,
+                    free_at: 0.0,
+                    busy: 0.0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of tiers.
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Duration a transfer occupies tier `t`'s link.
+    pub fn duration(&self, t: usize, bytes: f64, hops: usize) -> f64 {
+        let s = &self.tiers[t];
+        bytes / s.bw + hops as f64 * s.lat
+    }
+
+    /// Enqueue a transfer on tier `t` that may not start before `ready`;
+    /// returns its completion time (same FIFO discipline as [`Links`]).
+    pub fn transfer(
+        &mut self,
+        t: usize,
+        ready: SimTime,
+        bytes: f64,
+        hops: usize,
+    ) -> SimTime {
+        let d = self.duration(t, bytes, hops);
+        let s = &mut self.tiers[t];
+        let start = ready.max(s.free_at);
+        s.free_at = start + d;
+        s.busy += d;
+        s.free_at
+    }
+
+    /// Time tier `t`'s link becomes free.
+    pub fn free_at(&self, t: usize) -> SimTime {
+        self.tiers[t].free_at
+    }
+
+    /// Total busy time of tier `t` (utilization numerator).
+    pub fn busy(&self, t: usize) -> f64 {
+        self.tiers[t].busy
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +211,23 @@ mod tests {
         let mut l = Links::new(100.0, 10.0, 0.0);
         let t = l.transfer(LinkClass::IntraPod, 5.0, 100.0, 0);
         assert_eq!(t, 6.0);
+    }
+
+    #[test]
+    fn tier_links_fifo_per_tier() {
+        let mut l = TierLinks::new(&[(100.0, 0.0), (10.0, 0.5)]);
+        assert_eq!(l.n_tiers(), 2);
+        let t1 = l.transfer(0, 0.0, 100.0, 0); // 1 s on tier 0
+        assert_eq!(t1, 1.0);
+        // Tier 1 is an independent resource: starts at 0, 1 s wire +
+        // one hop of latency.
+        let t2 = l.transfer(1, 0.0, 10.0, 1);
+        assert_eq!(t2, 1.5);
+        // Tier 0 serializes behind the first transfer.
+        let t3 = l.transfer(0, 0.0, 200.0, 0);
+        assert_eq!(t3, 3.0);
+        assert_eq!(l.busy(0), 3.0);
+        assert_eq!(l.free_at(1), 1.5);
     }
 
     #[test]

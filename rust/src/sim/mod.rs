@@ -9,3 +9,4 @@ pub use engine::{
     simulate, simulate_faulty, simulate_goodput, FaultEvent, FaultEventKind,
     GoodputSim, SimResult, SimStats,
 };
+pub use link::TierLinks;

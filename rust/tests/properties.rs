@@ -4,15 +4,17 @@
 
 use comet::analytical::{evaluate, goodput};
 use comet::compute::{gemm_traffic, hybrid_bandwidth};
-use comet::config::presets;
+use comet::config::{presets, MAX_TIERS};
 use comet::coordinator::Coordinator;
 use comet::model::inputs::{decompose, derive_inputs, resolve_inputs, EvalOptions};
-use comet::network::{collective_cost, CollectiveImpl, CollectiveSpec};
+use comet::network::{
+    collective_cost, collective_cost_tiered, CollectiveImpl, CollectiveSpec,
+};
 use comet::optimizer::Outcome;
 use comet::parallel::{model_state_bytes, PipeSchedule, Strategy, ZeroStage};
 use comet::resilience::{checkpoint_bandwidth, FaultModel};
 use comet::scenario::{optimizer_for, ScenarioSpec};
-use comet::sim::{simulate, simulate_goodput};
+use comet::sim::{simulate, simulate_goodput, TierLinks};
 use comet::util::prng::Rng;
 use comet::util::stats::rel_diff;
 use comet::workload::dlrm::Dlrm;
@@ -63,12 +65,12 @@ fn collective_cost_invariants() {
         Collective::ReduceScatter,
     ];
     for case in 0..CASES {
-        let spec = CollectiveSpec {
-            collective: *rng.choose(&types),
-            bytes: rng.log_range(1e3, 1e12),
-            n_intra: rng.pow2(0, 5) as usize,
-            n_inter: rng.pow2(0, 7) as usize,
-        };
+        let spec = CollectiveSpec::two_level(
+            *rng.choose(&types),
+            rng.log_range(1e3, 1e12),
+            rng.pow2(0, 5) as usize,
+            rng.pow2(0, 7) as usize,
+        );
         let bwi = rng.log_range(1e10, 1e12);
         let bwx = rng.log_range(1e9, bwi);
         let lat = rng.range(0.0, 1e-5);
@@ -113,6 +115,323 @@ fn collective_cost_invariants() {
                 CollectiveImpl::LogicalRing,
             );
             assert!(h <= r * 1.001, "case {case}: hier {h} vs ring {r}");
+        }
+    }
+}
+
+#[test]
+fn tiered_collective_costs_finite_positive_and_monotone() {
+    // Randomized N-tier chains x collectives: costs stay finite and
+    // non-negative, doubling the payload never gets cheaper, and raising
+    // any single tier's bandwidth never makes a collective slower.
+    let mut rng = Rng::new(1717);
+    let types = [
+        Collective::AllReduce,
+        Collective::AllToAll,
+        Collective::AllGather,
+        Collective::ReduceScatter,
+    ];
+    for case in 0..CASES {
+        let k = 1 + rng.below(MAX_TIERS);
+        let mut tier_n = [1usize; MAX_TIERS];
+        for t in tier_n.iter_mut().take(k) {
+            *t = rng.pow2(0, 3) as usize;
+        }
+        let spec = CollectiveSpec::tiered(
+            *rng.choose(&types),
+            rng.log_range(1e3, 1e12),
+            tier_n,
+            k,
+        );
+        let mut bw = [1.0f64; MAX_TIERS];
+        let mut lat = [0.0f64; MAX_TIERS];
+        bw[0] = rng.log_range(1e10, 1e12);
+        lat[0] = rng.range(0.0, 1e-5);
+        for t in 1..k {
+            bw[t] = bw[t - 1] / rng.range(1.0, 16.0);
+            lat[t] = lat[t - 1] * rng.range(1.0, 4.0);
+        }
+        for impl_ in [CollectiveImpl::LogicalRing, CollectiveImpl::Hierarchical]
+        {
+            let c = collective_cost_tiered(&spec, &bw, &lat, impl_);
+            assert!(c.is_finite() && c >= 0.0, "case {case}: {c}");
+            if spec.n() > 1 {
+                assert!(c > 0.0, "case {case}: free op over {} nodes", spec.n());
+            }
+            let bigger = CollectiveSpec::tiered(
+                spec.collective,
+                spec.bytes * 2.0,
+                tier_n,
+                k,
+            );
+            assert!(
+                collective_cost_tiered(&bigger, &bw, &lat, impl_) >= c - 1e-12,
+                "case {case}: bytes monotonicity ({impl_:?})"
+            );
+            for t in 0..k {
+                let mut faster = bw;
+                faster[t] *= rng.range(1.5, 8.0);
+                let c2 = collective_cost_tiered(&spec, &faster, &lat, impl_);
+                assert!(
+                    c2 <= c + 1e-12,
+                    "case {case} tier {t} ({impl_:?}): {c2} > {c}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn two_tier_chain_bit_identical_to_legacy_two_level() {
+    // The lowering contract behind every figure pin, randomized: a
+    // 2-tier chain must cost bit-for-bit what the legacy two-level view
+    // costs, for every collective, implementation, and group shape.
+    let mut rng = Rng::new(1818);
+    let types = [
+        Collective::AllReduce,
+        Collective::AllToAll,
+        Collective::AllGather,
+        Collective::ReduceScatter,
+    ];
+    for case in 0..CASES {
+        let ni = rng.pow2(0, 5) as usize;
+        let nx = rng.pow2(0, 6) as usize;
+        let bytes = rng.log_range(1e3, 1e12);
+        let bwi = rng.log_range(1e10, 1e12);
+        let bwx = rng.log_range(1e9, bwi);
+        let lat = rng.range(0.0, 1e-5);
+        let coll = *rng.choose(&types);
+        let legacy = CollectiveSpec::two_level(coll, bytes, ni, nx);
+        let tiered = CollectiveSpec::tiered(coll, bytes, [ni, nx, 1, 1], 2);
+        let bw = [bwi, bwx, 0.0, 0.0];
+        let lats = [lat; MAX_TIERS];
+        for impl_ in [CollectiveImpl::LogicalRing, CollectiveImpl::Hierarchical]
+        {
+            let a = collective_cost(&legacy, bwi, bwx, lat, impl_);
+            let b = collective_cost_tiered(&tiered, &bw, &lats, impl_);
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "case {case} {coll:?} {impl_:?} {ni}x{nx}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn collapsing_equal_bandwidth_adjacent_tiers_preserves_cost() {
+    // With zero latency, two adjacent tiers sharing one bandwidth are
+    // indistinguishable from a single tier holding their product: the
+    // ring byte terms telescope ((n0-1)/n0 + (n1-1)/(n0*n1) =
+    // (n0*n1-1)/(n0*n1)). Latency terms do not collapse — a merged ring
+    // takes n0*n1-1 hops vs (n0-1)+(n1-1) — and all-to-all re-buckets
+    // peer fractions, so both stay out of scope.
+    let mut rng = Rng::new(1919);
+    let types = [
+        Collective::AllReduce,
+        Collective::AllGather,
+        Collective::ReduceScatter,
+    ];
+    let k = 3;
+    for case in 0..CASES {
+        let mut tier_n = [1usize; MAX_TIERS];
+        for t in tier_n.iter_mut().take(k) {
+            *t = rng.pow2(0, 3) as usize;
+        }
+        let j = rng.below(k - 1); // merge tiers j and j+1
+        let mut bw = [1.0f64; MAX_TIERS];
+        bw[0] = rng.log_range(1e10, 1e12);
+        for t in 1..k {
+            bw[t] = bw[t - 1] / rng.range(1.0, 8.0);
+        }
+        bw[j + 1] = bw[j];
+        let lat = [0.0f64; MAX_TIERS];
+        let bytes = rng.log_range(1e3, 1e12);
+
+        let mut merged_n = [1usize; MAX_TIERS];
+        let mut merged_bw = [1.0f64; MAX_TIERS];
+        let (mut m, mut t) = (0, 0);
+        while t < k {
+            if t == j {
+                merged_n[m] = tier_n[j] * tier_n[j + 1];
+                merged_bw[m] = bw[j];
+                t += 2;
+            } else {
+                merged_n[m] = tier_n[t];
+                merged_bw[m] = bw[t];
+                t += 1;
+            }
+            m += 1;
+        }
+        let coll = *rng.choose(&types);
+        for impl_ in [CollectiveImpl::LogicalRing, CollectiveImpl::Hierarchical]
+        {
+            let a = collective_cost_tiered(
+                &CollectiveSpec::tiered(coll, bytes, tier_n, k),
+                &bw,
+                &lat,
+                impl_,
+            );
+            let b = collective_cost_tiered(
+                &CollectiveSpec::tiered(coll, bytes, merged_n, k - 1),
+                &merged_bw,
+                &lat,
+                impl_,
+            );
+            if a == 0.0 {
+                assert_eq!(b, 0.0, "case {case} {coll:?} {impl_:?} j={j}");
+            } else {
+                assert!(
+                    ((a - b) / a).abs() < 1e-12,
+                    "case {case} {coll:?} {impl_:?} j={j}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tiered_closed_form_matches_event_driven_ring_sim() {
+    // Oracle cross-check: the tiered hierarchical closed form vs an
+    // event-by-event per-tier ring execution on the DES FIFO link
+    // resources. Each ring pass becomes n-1 discrete transfers of one
+    // shard-slice each (1 latency hop per step); phases chain on
+    // completion, exactly how the two-level DES schedules collectives.
+    let mut rng = Rng::new(2020);
+    let k = 3;
+    for case in 0..60 {
+        let mut tier_n = [1usize; MAX_TIERS];
+        for t in tier_n.iter_mut().take(k) {
+            *t = *rng.choose(&[2usize, 4, 8]);
+        }
+        let mut bw = [1.0f64; MAX_TIERS];
+        let mut lat = [0.0f64; MAX_TIERS];
+        bw[0] = rng.log_range(1e10, 1e12);
+        lat[0] = rng.range(1e-7, 1e-5);
+        for t in 1..k {
+            bw[t] = bw[t - 1] / rng.range(2.0, 16.0);
+            lat[t] = lat[t - 1] * rng.range(1.0, 4.0);
+        }
+        let bytes = rng.log_range(1e6, 1e11);
+        for coll in [
+            Collective::AllReduce,
+            Collective::AllGather,
+            Collective::ReduceScatter,
+        ] {
+            let spec = CollectiveSpec::tiered(coll, bytes, tier_n, k);
+            let want = collective_cost_tiered(
+                &spec,
+                &bw,
+                &lat,
+                CollectiveImpl::Hierarchical,
+            );
+            let pairs: Vec<(f64, f64)> =
+                (0..k).map(|t| (bw[t], lat[t])).collect();
+            let mut links = TierLinks::new(&pairs);
+            let mut shard = [0.0f64; MAX_TIERS];
+            let mut b = bytes;
+            for t in 0..k {
+                shard[t] = b;
+                b /= tier_n[t] as f64;
+            }
+            // Hierarchical schedule: reduce-scatter up the chain, a full
+            // all-reduce ring at the top (AR only), all-gather back down;
+            // half collectives make one pass per tier.
+            let mut passes: Vec<usize> = Vec::new();
+            match coll {
+                Collective::AllReduce => {
+                    passes.extend(0..k - 1);
+                    passes.push(k - 1);
+                    passes.push(k - 1);
+                    passes.extend((0..k - 1).rev());
+                }
+                _ => passes.extend(0..k),
+            }
+            let mut now = 0.0;
+            for &t in &passes {
+                let n = tier_n[t];
+                let step = shard[t] / n as f64;
+                for _ in 0..n - 1 {
+                    now = links.transfer(t, now, step, 1);
+                }
+            }
+            assert!(
+                rel_diff(want, now) < 1e-9,
+                "case {case} {coll:?}: closed {want} vs sim {now}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tiered_heterogeneous_search_matches_exhaustive_across_threads() {
+    // Optimizer exactness on the heterogeneous 3-tier lattice: branch
+    // and bound — sequential and parallel at 2 and 8 threads — must
+    // return the exhaustive argmin/top-k/frontier and exact counters
+    // bit-for-bit on the tiered-het-64 preset, where per-tier collective
+    // costs and group-scaled node parameters shape every leaf.
+    let mut rng = Rng::new(2121);
+    let coord = Coordinator::native().with_threads(8);
+    for case in 0..6 {
+        let max_pp = *rng.choose(&[1usize, 2]);
+        let min_mp = *rng.choose(&[1usize, 2]);
+        let max_mp = *rng.choose(&[8usize, 16, 32]);
+        let top_k = 1 + rng.below(4);
+        let mut doc = format!(
+            "name = \"opt-tiered-{case}\"\n\
+             [workload]\nkind = \"transformer\"\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"tiered-het-64\"\n\
+             [study]\nkind = \"optimize\"\nmin_mp = {min_mp}\n\
+             max_mp = {max_mp}\nmax_pp = {max_pp}\ntop_k = {top_k}\n"
+        );
+        if rng.f64() < 0.7 {
+            doc.push_str("em_bandwidths_gbps = [500, 2039]\n");
+        }
+        if rng.f64() < 0.5 {
+            doc.push_str("collectives = [\"ring\", \"hierarchical\"]\n");
+        }
+        if rng.f64() < 0.4 {
+            doc.push_str("zero_stages = [0, 2, 3]\n");
+        }
+        if rng.f64() < 0.5 {
+            doc.push_str("[options]\ninfinite_memory = true\n");
+        }
+        let spec = ScenarioSpec::parse_str(&doc).unwrap();
+        let opt = optimizer_for(&spec, &coord).unwrap();
+        let e = opt.exhaustive().unwrap();
+        let seq = opt.search_parallel(1).unwrap();
+        for threads in [2usize, 8] {
+            let par = opt.search_parallel(threads).unwrap();
+            seq.assert_bit_identical(&par, &format!("case {case} t{threads}"));
+        }
+        assert_eq!(seq.top.len(), e.top.len(), "case {case}");
+        for (a, b) in seq.top.iter().zip(&e.top) {
+            assert_eq!(a.label, b.label, "case {case}");
+            assert_eq!(a.point.index, b.point.index, "case {case}");
+            assert_eq!(
+                a.total().to_bits(),
+                b.total().to_bits(),
+                "case {case}: {}",
+                a.label
+            );
+        }
+        assert_eq!(seq.infeasible, e.infeasible, "case {case}");
+        assert_eq!(seq.evaluated + seq.pruned, e.evaluated, "case {case}");
+        for out in [&seq, &e] {
+            assert_eq!(
+                out.evaluated + out.pruned + out.infeasible,
+                out.total_points,
+                "case {case}"
+            );
+        }
+        for c in seq.top.iter().chain(&seq.frontier) {
+            assert!(
+                c.lower_bound <= c.total(),
+                "case {case}: {} bound {} > total {}",
+                c.label,
+                c.lower_bound,
+                c.total()
+            );
         }
     }
 }

@@ -385,6 +385,39 @@ fn pipeline_transformer_runs_via_scenario_and_optimizer() {
     assert!(best.breakdown.bubble > 0.0);
 }
 
+// ---- tiered builtins ------------------------------------------------------
+
+/// The two tiered-cluster builtins run end-to-end: `tier-mapping`
+/// produces the full strategy x mapping grid with finite positive cells,
+/// and `optimize-tiered` returns the exhaustive top-k bit-for-bit on the
+/// heterogeneous 3-tier lattice.
+#[test]
+fn tiered_builtins_run_through_scenario_engine() {
+    let coord = Coordinator::native();
+    let fig = run(&registry::get("tier-mapping").unwrap(), &coord).unwrap();
+    assert_eq!(fig.rows.len(), 4);
+    assert_eq!(fig.columns, vec!["mp-inner", "dp-inner"]);
+    for r in ["MP8_DP8", "MP4_DP16", "MP16_DP4", "MP2_DP32"] {
+        for c in ["mp-inner", "dp-inner"] {
+            let v = fig.cell(r, c).unwrap();
+            assert!(v.is_finite() && v > 0.0, "{r}/{c}: {v}");
+        }
+    }
+
+    let spec = registry::get("optimize-tiered").unwrap();
+    let opt = optimizer_for(&spec, &coord).unwrap();
+    let s = opt.search().unwrap();
+    let e = opt.exhaustive().unwrap();
+    assert_eq!(s.top.len(), e.top.len());
+    for (a, b) in s.top.iter().zip(&e.top) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.point.index, b.point.index);
+        assert_eq!(a.total().to_bits(), b.total().to_bits());
+    }
+    assert_eq!(s.infeasible, e.infeasible);
+    assert_eq!(s.evaluated + s.pruned, e.evaluated);
+}
+
 // ---- spec round-trips -----------------------------------------------------
 
 #[test]
