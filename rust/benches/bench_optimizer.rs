@@ -109,6 +109,33 @@ fn main() {
     }
     b.metric("optimizer/thread_scaling_host_lanes", host as f64);
 
+    // ---- checkpoint overhead: flush at every safe boundary ------------
+    // `checkpoint_every = 0` writes the resumable state at every batch
+    // boundary — the worst case for the crash-safety machinery. Compared
+    // against `optimize-transformer_search_t<host>` (same hoisted
+    // coordinator, no checkpointing) the gap is the pure serialization +
+    // tmp-rename cost per boundary.
+    {
+        let c = Coordinator::native();
+        let o = optimizer_for(&spec, &c).unwrap();
+        let ck = std::env::temp_dir()
+            .join(format!("comet-bench-ck-{}.json", std::process::id()));
+        let exec = comet::optimizer::SearchExec::default()
+            .with_checkpoint(ck.clone())
+            .with_checkpoint_every(0.0);
+        // Untimed exactness pass: checkpointing must not change the
+        // outcome (counters included).
+        let plain = o.search().unwrap();
+        let with_ck = o.search_with(&exec).unwrap();
+        plain.assert_bit_identical(&with_ck, "checkpoint-every-0");
+        b.bench("optimizer/optimize-transformer_search_ckpt0", || {
+            black_box(o.search_with(&exec).unwrap());
+        });
+        let bytes = std::fs::metadata(&ck).map(|m| m.len()).unwrap_or(0);
+        b.metric("optimizer/checkpoint_bytes", bytes as f64);
+        let _ = std::fs::remove_file(&ck);
+    }
+
     b.report("bench_optimizer");
 
     // Trajectory point next to the repo-root BENCHMARKS.md (cargo bench

@@ -12,6 +12,7 @@ pub use scheduler::WorkerPool;
 pub use sweep::GridSweep;
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::analytical::{evaluate as native_evaluate, TrainingBreakdown};
 use crate::config::ClusterConfig;
@@ -22,6 +23,7 @@ use crate::model::inputs::{
 };
 use crate::runtime::{BatchEvaluator, Runtime};
 use crate::sim::simulate;
+use crate::util::cancel::RunControl;
 use crate::workload::Workload;
 
 /// Which cost-model backend evaluates configurations.
@@ -55,6 +57,13 @@ impl std::fmt::Debug for Coordinator {
             .finish()
     }
 }
+
+/// Minimum watchdog budget for a deadline-supervised batch: even when
+/// the run's deadline is (almost) spent, a healthy in-flight batch gets
+/// this long to finish rather than being abandoned spuriously — the
+/// boundary `control.check` right before the fan-out already rejected a
+/// truly expired deadline.
+const WATCHDOG_FLOOR: Duration = Duration::from_millis(250);
 
 fn default_threads() -> usize {
     // COMET_THREADS bounds the pool on shared machines and makes
@@ -170,6 +179,23 @@ impl Coordinator {
         &self,
         inputs: &[ModelInputs],
     ) -> Result<Vec<TrainingBreakdown>> {
+        self.evaluate_inputs_controlled(inputs, &RunControl::unbounded())
+    }
+
+    /// [`Coordinator::evaluate_inputs`] with a cooperative stop check at
+    /// the batch boundary: a cancelled token or an exceeded deadline
+    /// stops the batch *before* it fans out (a batch in flight always
+    /// completes — that is the safe-boundary contract every checkpoint
+    /// and partial-outcome guarantee builds on). A panicking evaluation
+    /// job no longer poisons the pool: it surfaces as a structured
+    /// [`crate::error::Error::Job`] with the in-batch job index while
+    /// the rest of the batch completes and the worker respawns.
+    pub fn evaluate_inputs_controlled(
+        &self,
+        inputs: &[ModelInputs],
+        control: &RunControl,
+    ) -> Result<Vec<TrainingBreakdown>> {
+        control.check("batch evaluation")?;
         // Partition into hits and misses.
         let keys: Vec<u64> = inputs.iter().map(|i| i.fingerprint()).collect();
         let mut results: Vec<Option<TrainingBreakdown>> =
@@ -205,10 +231,12 @@ impl Coordinator {
                     let rt = self.runtime.as_ref().expect("artifact runtime");
                     BatchEvaluator::new(rt).evaluate(&owned)?
                 }
-                Backend::Native => self.pool.map(owned, native_evaluate),
-                Backend::Des => {
-                    self.pool.map(owned, |inp| simulate(inp).breakdown)
+                Backend::Native => {
+                    self.pool_batch(owned, control, native_evaluate)?
                 }
+                Backend::Des => self.pool_batch(owned, control, |inp| {
+                    simulate(inp).breakdown
+                })?,
             };
             for (&i, b) in reps.iter().zip(&computed) {
                 self.cache.put_by_key(keys[i], *b);
@@ -218,6 +246,34 @@ impl Coordinator {
             }
         }
         Ok(results.into_iter().map(|r| r.unwrap()).collect())
+    }
+
+    /// Backend batch fan-out with deadline-aware supervision: with no
+    /// deadline armed, a plain structured-error map; with one armed, the
+    /// pool's watchdog sized to the remaining budget (floored so a
+    /// nearly-expired deadline still lets a healthy batch finish), so a
+    /// stuck evaluation becomes [`crate::error::Error::Deadline`]
+    /// instead of a hang. Both paths fill slots in job order — the
+    /// result is byte-identical either way.
+    fn pool_batch<T, R>(
+        &self,
+        owned: Vec<T>,
+        control: &RunControl,
+        f: impl Fn(&T) -> R + Send + Sync + 'static,
+    ) -> Result<Vec<R>>
+    where
+        T: Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        match control.deadline_remaining() {
+            Some(rem) => self.pool.try_map_watchdog(
+                owned,
+                usize::MAX,
+                rem.max(WATCHDOG_FLOOR),
+                f,
+            ),
+            None => self.pool.try_map(owned, f),
+        }
     }
 
     /// Derive a batch of model inputs through the worker pool: the
@@ -233,15 +289,28 @@ impl Coordinator {
         &self,
         specs: Vec<(Workload, ClusterConfig, EvalOptions)>,
     ) -> Result<Vec<ModelInputs>> {
+        self.derive_batch_controlled(specs, &RunControl::unbounded())
+    }
+
+    /// [`Coordinator::derive_batch`] with a cooperative stop check
+    /// between its two stages (same batch-boundary contract as
+    /// [`Coordinator::evaluate_inputs_controlled`]).
+    pub fn derive_batch_controlled(
+        &self,
+        specs: Vec<(Workload, ClusterConfig, EvalOptions)>,
+        control: &RunControl,
+    ) -> Result<Vec<ModelInputs>> {
+        control.check("batch derivation")?;
         // Stage 1 (serial, cached): decomposition per distinct workload.
         let jobs: Vec<(Arc<WorkloadDecomposition>, ClusterConfig, EvalOptions)> =
             specs
                 .into_iter()
                 .map(|(w, c, o)| (self.derive.decomposition(&w), c, o))
                 .collect();
+        control.check("batch input resolution")?;
         // Stage 2 (parallel): bind every grid point to its cluster.
         self.pool
-            .map(jobs, |(dec, c, o)| resolve_inputs(dec, c, o))
+            .try_map(jobs, |(dec, c, o)| resolve_inputs(dec, c, o))?
             .into_iter()
             .collect()
     }
@@ -502,5 +571,36 @@ mod tests {
         let a = coord.evaluate(&w, &c).unwrap();
         let n = Coordinator::native().evaluate(&w, &c).unwrap();
         assert!(rel_diff(a.total(), n.total()) < 1e-4);
+    }
+
+    #[test]
+    fn controlled_batches_stop_at_boundaries() {
+        use crate::util::cancel::RunControl;
+        let coord = Coordinator::native();
+        let (w, c) = job();
+        let cancelled = RunControl::unbounded().cancel_after_polls(0);
+        // Both batch entry points refuse to start under a tripped
+        // control and report a structured cancel, not a panic.
+        let err = coord
+            .derive_batch_controlled(
+                vec![(w.clone(), c.clone(), EvalOptions::default())],
+                &cancelled,
+            )
+            .unwrap_err();
+        assert!(matches!(err, crate::error::Error::Cancelled(_)), "{err}");
+        let inputs = coord
+            .derive_batch(vec![(w, c, EvalOptions::default())])
+            .unwrap();
+        let err = coord
+            .evaluate_inputs_controlled(&inputs, &cancelled)
+            .unwrap_err();
+        assert!(matches!(err, crate::error::Error::Cancelled(_)), "{err}");
+        // An unbounded control changes nothing: same results as the
+        // plain entry points.
+        let a = coord
+            .evaluate_inputs_controlled(&inputs, &RunControl::unbounded())
+            .unwrap();
+        let b = coord.evaluate_inputs(&inputs).unwrap();
+        assert_eq!(a, b);
     }
 }

@@ -18,17 +18,44 @@
 //! evaluations out over the coordinator's pool while borrowing its
 //! per-branch search state. [`WorkerPool::map`] is the owned-jobs
 //! convenience wrapper the batched derive/evaluate paths use.
+//!
+//! **Fault isolation**: a panicking job never poisons the pool. Every
+//! panic is caught inside the worker loop and recorded per job index;
+//! the batch always runs to completion and the pool stays reusable. Two
+//! reporting surfaces exist: the legacy [`WorkerPool::scoped_map`]
+//! re-raises the first (lowest-index) panic on the caller, while the
+//! `try_*` variants return a structured
+//! [`Error::Job`](crate::error::Error::Job) — optionally after retrying
+//! the failed indices once with a short backoff
+//! ([`WorkerPool::try_scoped_map_retry`]). For jobs that may *stall*
+//! rather than panic, [`WorkerPool::try_map_watchdog`] runs an owned
+//! (`'static`) batch under a timeout: a stuck batch is abandoned (the
+//! leaked batch keeps its jobs alive for the stalled worker), the
+//! targeted workers are respawned to restore pool width, and the caller
+//! gets [`Error::Deadline`](crate::error::Error::Deadline) instead of a
+//! hang. Scoped batches cannot be abandoned — the submitter *must*
+//! block until `remaining == 0` for the lent borrows to stay sound —
+//! which is why the watchdog exists only on the owned path.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
 
 /// Type-erased batch handle the worker threads execute.
 trait Task: Send + Sync {
     fn run_worker(&self);
 }
+
+/// Pause before re-running failed indices in
+/// [`WorkerPool::try_scoped_map_retry`] — long enough for a transient
+/// resource squeeze to clear, short enough to be invisible next to any
+/// real batch.
+const RETRY_BACKOFF: Duration = Duration::from_millis(10);
 
 /// One in-flight `scoped_map` call. The jobs and the mapper live in the
 /// submitting call's scope and are held here as **raw pointers** plus an
@@ -50,8 +77,9 @@ struct Batch<T, R> {
     /// Jobs not yet finished; the worker that drops this to zero signals
     /// `done`.
     remaining: AtomicUsize,
-    /// First observed panic: (job index, payload message).
-    panic: Mutex<Option<(usize, String)>>,
+    /// Every observed panic: (job index, payload message). Collected in
+    /// completion order; callers sort by index for determinism.
+    failures: Mutex<Vec<(usize, String)>>,
     done: Mutex<bool>,
     done_cv: Condvar,
 }
@@ -88,7 +116,7 @@ impl<T: Sync, R: Send> Batch<T, R> {
             next: AtomicUsize::new(0),
             slots: (0..n).map(|_| Mutex::new(None)).collect(),
             remaining: AtomicUsize::new(n),
-            panic: Mutex::new(None),
+            failures: Mutex::new(Vec::new()),
             done: Mutex::new(false),
             done_cv: Condvar::new(),
         }
@@ -112,12 +140,11 @@ impl<T: Sync, R: Send> Batch<T, R> {
             let f = unsafe { &*self.f };
             match catch_unwind(AssertUnwindSafe(|| f(job))) {
                 Ok(r) => *self.slots[i].lock().unwrap() = Some(r),
-                Err(payload) => {
-                    let mut p = self.panic.lock().unwrap();
-                    if p.is_none() {
-                        *p = Some((i, panic_message(payload.as_ref())));
-                    }
-                }
+                Err(payload) => self
+                    .failures
+                    .lock()
+                    .unwrap()
+                    .push((i, panic_message(payload.as_ref()))),
             }
             if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                 let mut d = self.done.lock().unwrap();
@@ -134,15 +161,44 @@ impl<T: Sync, R: Send> Task for Batch<T, R> {
     }
 }
 
+/// Spawn one background worker thread: drains its channel until the
+/// sender side is dropped (pool drop or respawn), executing each batch
+/// with every per-job panic caught inside [`Batch::execute`].
+fn spawn_worker(idx: usize) -> (Sender<Arc<dyn Task>>, JoinHandle<()>) {
+    let (tx, rx) = channel::<Arc<dyn Task>>();
+    let handle = std::thread::Builder::new()
+        .name(format!("comet-pool-{idx}"))
+        .spawn(move || {
+            while let Ok(task) = rx.recv() {
+                task.run_worker();
+            }
+        })
+        .expect("spawn pool worker");
+    (tx, handle)
+}
+
+/// One background worker: its feed channel plus its join handle.
+/// Wrapped in a `Mutex` on the pool so a worker can be **respawned**
+/// under `&self` (watchdog recovery, [`WorkerPool::heal`]) — replacing
+/// the sender ends the old thread's `recv` loop once it finishes its
+/// current task, and a fresh thread takes over the slot.
+struct WorkerSlot {
+    sender: Option<Sender<Arc<dyn Task>>>,
+    handle: Option<JoinHandle<()>>,
+    /// Bumped on every respawn (observable via [`WorkerPool::respawns`]).
+    generation: usize,
+}
+
 /// Persistent worker pool. Threads are spawned once and fed batches over
 /// per-worker channels; dropping the pool shuts them down.
 pub struct WorkerPool {
-    senders: Vec<Sender<Arc<dyn Task>>>,
-    handles: Vec<JoinHandle<()>>,
+    workers: Vec<Mutex<WorkerSlot>>,
     threads: usize,
     /// Rotates which workers small batches notify, so concurrent
     /// submitters don't all pin their jobs behind the low-index workers.
     next_worker: AtomicUsize,
+    /// Total workers respawned over the pool's lifetime.
+    respawned: AtomicUsize,
 }
 
 impl std::fmt::Debug for WorkerPool {
@@ -158,32 +214,73 @@ impl WorkerPool {
     /// workers plus the submitting thread.
     pub fn new(threads: usize) -> WorkerPool {
         let threads = threads.max(1);
-        let mut senders = Vec::with_capacity(threads - 1);
-        let mut handles = Vec::with_capacity(threads - 1);
+        let mut workers = Vec::with_capacity(threads - 1);
         for i in 0..threads - 1 {
-            let (tx, rx) = channel::<Arc<dyn Task>>();
-            senders.push(tx);
-            let handle = std::thread::Builder::new()
-                .name(format!("comet-pool-{i}"))
-                .spawn(move || {
-                    while let Ok(task) = rx.recv() {
-                        task.run_worker();
-                    }
-                })
-                .expect("spawn pool worker");
-            handles.push(handle);
+            let (sender, handle) = spawn_worker(i);
+            workers.push(Mutex::new(WorkerSlot {
+                sender: Some(sender),
+                handle: Some(handle),
+                generation: 0,
+            }));
         }
         WorkerPool {
-            senders,
-            handles,
+            workers,
             threads,
             next_worker: AtomicUsize::new(0),
+            respawned: AtomicUsize::new(0),
         }
     }
 
     /// Total pool width (background workers + the submitting thread).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Workers respawned over the pool's lifetime (watchdog recovery or
+    /// [`WorkerPool::heal`]).
+    pub fn respawns(&self) -> usize {
+        self.respawned.load(Ordering::Relaxed)
+    }
+
+    /// Replace worker `idx` with a fresh thread. The old thread's sender
+    /// is dropped, so it exits its `recv` loop as soon as it finishes
+    /// whatever it is doing (a stalled thread dies when its stuck job
+    /// finally returns); its handle is detached rather than joined so
+    /// recovery never blocks on the very stall it is recovering from.
+    fn respawn_worker(&self, idx: usize) {
+        let mut slot = self.workers[idx].lock().unwrap();
+        let (sender, handle) = spawn_worker(idx);
+        slot.sender = Some(sender);
+        drop(slot.handle.take()); // detach the old thread
+        slot.handle = Some(handle);
+        slot.generation += 1;
+        self.respawned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Defensive sweep: respawn any background worker whose thread has
+    /// terminated (a caught panic never kills a worker, but a foreign
+    /// exception or exotic unwind could). Returns how many were revived.
+    pub fn heal(&self) -> usize {
+        let mut revived = 0;
+        for idx in 0..self.workers.len() {
+            let finished = {
+                let slot = self.workers[idx].lock().unwrap();
+                slot.handle.as_ref().map(|h| h.is_finished()).unwrap_or(true)
+            };
+            if finished {
+                self.respawn_worker(idx);
+                revived += 1;
+            }
+        }
+        revived
+    }
+
+    /// Send `task` to worker `idx` (no-op if its sender is missing).
+    fn send_to(&self, idx: usize, task: Arc<dyn Task>) {
+        let slot = self.workers[idx].lock().unwrap();
+        if let Some(tx) = &slot.sender {
+            let _ = tx.send(task);
+        }
     }
 
     /// Map `f` over borrowed `jobs`, preserving order, **without**
@@ -230,17 +327,42 @@ impl WorkerPool {
         T: Sync,
         R: Send,
     {
+        let (results, failures) = self.scoped_run_bounded(jobs, lanes, &f);
+        if let Some((i, msg)) = failures.into_iter().min_by_key(|(i, _)| *i) {
+            drop(results);
+            panic!("worker pool job {i} panicked: {msg}");
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("pool slot filled"))
+            .collect()
+    }
+
+    /// Shared engine for every scoped surface: runs the batch to
+    /// completion and returns the per-slot results plus every captured
+    /// per-job panic (unsorted), leaving policy — re-raise, structured
+    /// error, retry — to the wrappers.
+    fn scoped_run_bounded<T, R>(
+        &self,
+        jobs: &[T],
+        lanes: usize,
+        f: &(dyn Fn(&T) -> R + Send + Sync),
+    ) -> (Vec<Option<R>>, Vec<(usize, String)>)
+    where
+        T: Sync,
+        R: Send,
+    {
         let n = jobs.len();
         if n == 0 {
-            return Vec::new();
+            return (Vec::new(), Vec::new());
         }
-        let batch = Arc::new(Batch::new(jobs, &f));
+        let batch = Arc::new(Batch::new(jobs, f));
         // Fan out to at most n-1 workers (the submitter claims jobs too,
         // and a single-job batch never leaves the calling thread),
         // bounded by the requested lanes, starting at a rotating offset
         // so concurrent small batches spread over different workers.
         let fanout = (n - 1)
-            .min(self.senders.len())
+            .min(self.workers.len())
             .min(lanes.saturating_sub(1));
         if fanout > 0 {
             // SAFETY: the workers' channel is typed `Arc<dyn Task>`
@@ -267,8 +389,7 @@ impl WorkerPool {
             let task: Arc<dyn Task> = unsafe { Arc::from_raw(raw) };
             let start = self.next_worker.fetch_add(fanout, Ordering::Relaxed);
             for j in 0..fanout {
-                let tx = &self.senders[(start + j) % self.senders.len()];
-                let _ = tx.send(task.clone());
+                self.send_to((start + j) % self.workers.len(), task.clone());
             }
         }
         batch.execute();
@@ -279,21 +400,75 @@ impl WorkerPool {
             done = batch.done_cv.wait(done).unwrap();
         }
         drop(done);
-        // Drain every slot *before* the panic check so that even on the
-        // panic path no `R` is left for a worker's late `Arc` drop.
+        // Drain every slot *before* handing out the failures so that
+        // even on the panic path no `R` is left for a worker's late
+        // `Arc` drop.
         let results: Vec<Option<R>> = batch
             .slots
             .iter()
             .map(|s| s.lock().unwrap().take())
             .collect();
-        if let Some((i, msg)) = batch.panic.lock().unwrap().take() {
-            drop(results);
-            panic!("worker pool job {i} panicked: {msg}");
+        let failures = std::mem::take(&mut *batch.failures.lock().unwrap());
+        (results, failures)
+    }
+
+    /// [`WorkerPool::scoped_map_bounded`] with structured failure
+    /// reporting: a panicking job yields
+    /// [`Error::Job`]`{ index, cause }` (lowest failing index when
+    /// several jobs panic) instead of re-raising on the caller. The
+    /// batch still runs to completion and the pool stays reusable.
+    pub fn try_scoped_map_bounded<T, R>(
+        &self,
+        jobs: &[T],
+        lanes: usize,
+        f: impl Fn(&T) -> R + Send + Sync,
+    ) -> Result<Vec<R>>
+    where
+        T: Sync,
+        R: Send,
+    {
+        self.try_scoped_map_retry(jobs, lanes, false, f)
+    }
+
+    /// [`WorkerPool::try_scoped_map_bounded`] for jobs flagged
+    /// retryable: after the batch completes, every failed index is
+    /// re-run **once** inline on the caller following a short backoff
+    /// (transient failures — artifact I/O hiccups, OOM-kill races —
+    /// get a second chance; deterministic panics fail again and
+    /// surface as [`Error::Job`]).
+    pub fn try_scoped_map_retry<T, R>(
+        &self,
+        jobs: &[T],
+        lanes: usize,
+        retry_once: bool,
+        f: impl Fn(&T) -> R + Send + Sync,
+    ) -> Result<Vec<R>>
+    where
+        T: Sync,
+        R: Send,
+    {
+        let (mut results, mut failures) =
+            self.scoped_run_bounded(jobs, lanes, &f);
+        failures.sort_by_key(|(i, _)| *i);
+        if !failures.is_empty() && retry_once {
+            std::thread::sleep(RETRY_BACKOFF);
+            let mut still = Vec::new();
+            for (i, _) in failures {
+                match catch_unwind(AssertUnwindSafe(|| f(&jobs[i]))) {
+                    Ok(r) => results[i] = Some(r),
+                    Err(p) => still.push((i, panic_message(p.as_ref()))),
+                }
+            }
+            failures = still;
         }
-        results
+        if let Some((index, cause)) = failures.into_iter().next() {
+            drop(results);
+            return Err(Error::Job { index, cause });
+        }
+        Ok(results
             .into_iter()
             .map(|r| r.expect("pool slot filled"))
-            .collect()
+            .collect())
     }
 
     /// Map `f` over owned `jobs`, preserving order (the batched
@@ -311,13 +486,192 @@ impl WorkerPool {
     {
         self.scoped_map(&jobs, f)
     }
+
+    /// [`WorkerPool::map`] with structured failure reporting
+    /// ([`Error::Job`] instead of a re-raised panic).
+    pub fn try_map<T, R>(
+        &self,
+        jobs: Vec<T>,
+        f: impl Fn(&T) -> R + Send + Sync,
+    ) -> Result<Vec<R>>
+    where
+        T: Sync,
+        R: Send,
+    {
+        self.try_scoped_map_bounded(&jobs, usize::MAX, f)
+    }
+
+    /// Run an **owned** (`'static`) batch under a watchdog: if the batch
+    /// has not completed within `timeout`, it is abandoned — the still-
+    /// running batch keeps its own jobs and closure alive (it is
+    /// `Arc`-shared, no borrowed state), the workers it was fanned out
+    /// to are respawned so the pool regains full width, and the caller
+    /// gets [`Error::Deadline`] naming the first incomplete job instead
+    /// of hanging forever. Panicking jobs inside the timeout surface as
+    /// [`Error::Job`], exactly like the `try_*` scoped surfaces.
+    ///
+    /// The submitting thread does **not** claim jobs here (it has to
+    /// stay free to time out), so the batch runs entirely on background
+    /// workers; a width-1 pool spawns one temporary thread for it.
+    pub fn try_map_watchdog<T, R>(
+        &self,
+        jobs: Vec<T>,
+        lanes: usize,
+        timeout: Duration,
+        f: impl Fn(&T) -> R + Send + Sync + 'static,
+    ) -> Result<Vec<R>>
+    where
+        T: Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let batch = Arc::new(OwnedBatch {
+            jobs,
+            f: Box::new(f),
+            next: AtomicUsize::new(0),
+            slots: (0..n).map(|_| Mutex::new(None)).collect(),
+            remaining: AtomicUsize::new(n),
+            failures: Mutex::new(Vec::new()),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        let fanout = n.min(self.workers.len()).min(lanes.max(1));
+        let start = self.next_worker.fetch_add(fanout, Ordering::Relaxed);
+        let mut targets = Vec::with_capacity(fanout.max(1));
+        if fanout > 0 {
+            let task: Arc<dyn Task> = batch.clone();
+            for j in 0..fanout {
+                let idx = (start + j) % self.workers.len();
+                targets.push(idx);
+                self.send_to(idx, task.clone());
+            }
+        } else {
+            // No background workers (width-1 pool): one temporary
+            // detached thread runs the batch so the caller can still
+            // time out.
+            let task = batch.clone();
+            std::thread::Builder::new()
+                .name("comet-pool-tmp".into())
+                .spawn(move || task.execute())
+                .expect("spawn temp pool worker");
+        }
+        let done = batch.done.lock().unwrap();
+        let (done, wait) = batch
+            .done_cv
+            .wait_timeout_while(done, timeout, |d| !*d)
+            .unwrap();
+        if wait.timed_out() && !*done {
+            drop(done);
+            let claimed = batch.next.load(Ordering::Relaxed).min(n);
+            let failed: Vec<usize> = batch
+                .failures
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(i, _)| *i)
+                .collect();
+            let stuck = (0..n)
+                .find(|&i| {
+                    let unclaimed = i >= claimed;
+                    let unfinished = batch.slots[i].lock().unwrap().is_none()
+                        && !failed.contains(&i);
+                    unclaimed || unfinished
+                })
+                .unwrap_or(0);
+            // Restore pool width: the stalled workers' replacements take
+            // over their slots; the old threads die once their stuck
+            // jobs return (the leaked Arc keeps the batch alive for
+            // them).
+            for idx in targets {
+                self.respawn_worker(idx);
+            }
+            return Err(Error::Deadline(format!(
+                "worker batch stalled: job {stuck} incomplete after \
+                 {:.1}s (watchdog); {} worker(s) respawned",
+                timeout.as_secs_f64(),
+                fanout.max(1)
+            )));
+        }
+        drop(done);
+        let results: Vec<Option<R>> = batch
+            .slots
+            .iter()
+            .map(|s| s.lock().unwrap().take())
+            .collect();
+        let mut failures =
+            std::mem::take(&mut *batch.failures.lock().unwrap());
+        failures.sort_by_key(|(i, _)| *i);
+        if let Some((index, cause)) = failures.into_iter().next() {
+            return Err(Error::Job { index, cause });
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("pool slot filled"))
+            .collect())
+    }
+}
+
+/// An owned, `'static` batch for the watchdog path: unlike [`Batch`],
+/// everything lives inside the `Arc`, so abandoning it on timeout is
+/// plain reference counting — the stalled worker's clone keeps the jobs
+/// and closure alive until it finally returns.
+struct OwnedBatch<T, R> {
+    jobs: Vec<T>,
+    f: Box<dyn Fn(&T) -> R + Send + Sync>,
+    next: AtomicUsize,
+    slots: Vec<Mutex<Option<R>>>,
+    remaining: AtomicUsize,
+    failures: Mutex<Vec<(usize, String)>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl<T: Send + Sync + 'static, R: Send + 'static> OwnedBatch<T, R> {
+    fn execute(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.jobs.len() {
+                break;
+            }
+            match catch_unwind(AssertUnwindSafe(|| (self.f)(&self.jobs[i]))) {
+                Ok(r) => *self.slots[i].lock().unwrap() = Some(r),
+                Err(payload) => self
+                    .failures
+                    .lock()
+                    .unwrap()
+                    .push((i, panic_message(payload.as_ref()))),
+            }
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut d = self.done.lock().unwrap();
+                *d = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Send + 'static> Task for OwnedBatch<T, R> {
+    fn run_worker(&self) {
+        self.execute()
+    }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        // Closing the channels ends each worker's recv loop.
-        self.senders.clear();
-        for h in self.handles.drain(..) {
+        // Closing the channels ends each worker's recv loop; join only
+        // the current generation (stalled predecessors were detached).
+        let mut handles = Vec::new();
+        for slot in &mut self.workers {
+            let slot = slot.get_mut().unwrap();
+            drop(slot.sender.take());
+            if let Some(h) = slot.handle.take() {
+                handles.push(h);
+            }
+        }
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -459,6 +813,168 @@ mod tests {
         assert!(msg.contains("boom on five"), "{msg}");
         // The pool remains fully usable after a panicking batch.
         assert_eq!(pool.map(vec![1u32, 2, 3], |x| x * 10), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn try_map_reports_structured_job_error_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<u32> = (0..8).collect();
+        let err = pool
+            .try_map(jobs, |&x| {
+                if x == 3 {
+                    panic!("bad leaf");
+                }
+                x * 2
+            })
+            .unwrap_err();
+        match err {
+            Error::Job { index, cause } => {
+                assert_eq!(index, 3);
+                assert!(cause.contains("bad leaf"), "{cause}");
+            }
+            other => panic!("expected Error::Job, got {other}"),
+        }
+        // Structured failure, same isolation guarantee: reusable pool.
+        assert_eq!(
+            pool.try_map(vec![1u32, 2], |x| x + 1).unwrap(),
+            vec![2, 3]
+        );
+    }
+
+    #[test]
+    fn try_map_reports_lowest_failing_index() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<u32> = (0..16).collect();
+        let err = pool
+            .try_map(jobs, |&x| {
+                if x % 5 == 2 {
+                    panic!("boom {x}");
+                }
+                x
+            })
+            .unwrap_err();
+        match err {
+            Error::Job { index, .. } => assert_eq!(index, 2),
+            other => panic!("expected Error::Job, got {other}"),
+        }
+    }
+
+    #[test]
+    fn retry_once_recovers_transient_failures() {
+        use std::collections::HashSet;
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<u32> = (0..8).collect();
+        // Fails the FIRST attempt for job 6, succeeds on retry.
+        let seen = Mutex::new(HashSet::new());
+        let out = pool
+            .try_scoped_map_retry(&jobs, usize::MAX, true, |&x| {
+                if x == 6 && seen.lock().unwrap().insert(x) {
+                    panic!("transient");
+                }
+                x * 10
+            })
+            .unwrap();
+        assert_eq!(out[6], 60);
+        assert_eq!(out.len(), 8);
+        // A deterministic panic still fails after the retry.
+        let err = pool
+            .try_scoped_map_retry(&jobs, usize::MAX, true, |&x| {
+                if x == 1 {
+                    panic!("permanent");
+                }
+                x
+            })
+            .unwrap_err();
+        assert!(matches!(err, Error::Job { index: 1, .. }), "{err}");
+    }
+
+    #[test]
+    fn watchdog_times_out_stuck_batch_and_pool_recovers() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<u32> = (0..4).collect();
+        let err = pool
+            .try_map_watchdog(
+                jobs,
+                usize::MAX,
+                Duration::from_millis(40),
+                |&x| {
+                    if x == 2 {
+                        std::thread::sleep(Duration::from_millis(400));
+                    }
+                    x
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Deadline(_)), "{err}");
+        assert!(err.to_string().contains("stalled"), "{err}");
+        assert!(pool.respawns() > 0, "stalled workers must be respawned");
+        // The pool is immediately usable at full width again.
+        assert_eq!(pool.map(vec![1u32, 2, 3], |x| x * 2), vec![2, 4, 6]);
+        // Give the stalled job time to finish so the detached thread
+        // exits before the test process tears down allocator state.
+        std::thread::sleep(Duration::from_millis(450));
+    }
+
+    #[test]
+    fn watchdog_passes_through_fast_batches_and_panics() {
+        let pool = WorkerPool::new(4);
+        let out = pool
+            .try_map_watchdog(
+                (0..32u32).collect(),
+                usize::MAX,
+                Duration::from_secs(10),
+                |&x| x + 1,
+            )
+            .unwrap();
+        assert_eq!(out[31], 32);
+        let err = pool
+            .try_map_watchdog(
+                (0..8u32).collect(),
+                usize::MAX,
+                Duration::from_secs(10),
+                |&x| {
+                    if x == 4 {
+                        panic!("inside watchdog");
+                    }
+                    x
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Job { index: 4, .. }), "{err}");
+    }
+
+    #[test]
+    fn watchdog_works_on_width_one_pool() {
+        // No background workers: the watchdog path spawns a temp thread
+        // so even a width-1 pool cannot hang the caller.
+        let pool = WorkerPool::new(1);
+        let out = pool
+            .try_map_watchdog(
+                vec![1u32, 2, 3],
+                usize::MAX,
+                Duration::from_secs(10),
+                |&x| x * 3,
+            )
+            .unwrap();
+        assert_eq!(out, vec![3, 6, 9]);
+        let err = pool
+            .try_map_watchdog(
+                vec![0u32],
+                usize::MAX,
+                Duration::from_millis(30),
+                |_| std::thread::sleep(Duration::from_millis(300)),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Deadline(_)), "{err}");
+        std::thread::sleep(Duration::from_millis(350));
+    }
+
+    #[test]
+    fn heal_is_a_noop_on_a_healthy_pool() {
+        let pool = WorkerPool::new(4);
+        pool.map((0..8u32).collect(), |&x| x);
+        assert_eq!(pool.heal(), 0);
+        assert_eq!(pool.respawns(), 0);
     }
 
     #[test]

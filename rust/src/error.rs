@@ -25,6 +25,22 @@ pub enum Error {
     /// boundary and converted into a clean error (the pool itself stays
     /// usable — `scheduler` re-raises with the job index).
     Worker(String),
+    /// A specific worker-pool job failed (panicked or stalled) while the
+    /// rest of the batch completed. Carries the job index so callers can
+    /// retry or report precisely which unit of work died.
+    Job {
+        /// Index of the failed job within its batch.
+        index: usize,
+        /// Captured panic message / stall description.
+        cause: String,
+    },
+    /// A run was cancelled cooperatively (SIGINT or an explicit
+    /// [`crate::util::cancel::CancelToken`]); partial results may have
+    /// been checkpointed or returned separately.
+    Cancelled(String),
+    /// A run exceeded its deadline and was stopped at a safe boundary;
+    /// partial results may have been checkpointed or returned separately.
+    Deadline(String),
 }
 
 impl fmt::Display for Error {
@@ -38,6 +54,11 @@ impl fmt::Display for Error {
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::Parse(m) => write!(f, "toml parse error: {m}"),
             Error::Worker(m) => write!(f, "worker error: {m}"),
+            Error::Job { index, cause } => {
+                write!(f, "worker error: job {index} failed: {cause}")
+            }
+            Error::Cancelled(m) => write!(f, "cancelled: {m}"),
+            Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }
@@ -91,6 +112,22 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("toml parse error"), "{s}");
         assert!(s.contains("line 12"), "{s}");
+    }
+
+    #[test]
+    fn job_cancel_and_deadline_display_with_context() {
+        let e = Error::Job {
+            index: 7,
+            cause: "division by zero".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("worker error"), "{s}");
+        assert!(s.contains("job 7"), "{s}");
+        assert!(s.contains("division by zero"), "{s}");
+        let s = Error::Cancelled("search".into()).to_string();
+        assert!(s.contains("cancelled"), "{s}");
+        let s = Error::Deadline("search after 5s".into()).to_string();
+        assert!(s.contains("deadline exceeded"), "{s}");
     }
 
     #[test]

@@ -13,11 +13,18 @@
 //!       [--em-capacities GB,..] [--collectives ring,hierarchical]
 //!       [--zero-stages 0,2,..] [--top-k N] [--threads N]
 //!       [--objective time|goodput] [--infinite-memory] [--json]
+//!       [--deadline SECS] [--checkpoint FILE] [--checkpoint-every SECS]
+//!       [--resume FILE]
 //!       (SCENARIO = an optimize/pipeline builtin name or TOML path,
 //!        e.g. `comet optimize pipeline-transformer`; --threads N sets
 //!        the search's evaluation lanes — the result is bit-identical
 //!        at every N; --objective goodput ranks by fault-adjusted
-//!        effective time under the spec's [resilience] model)
+//!        effective time under the spec's [resilience] model;
+//!        --deadline stops the search at a safe boundary when the
+//!        budget expires and reports the partial best-so-far table;
+//!        SIGINT does the same; either flushes --checkpoint when set,
+//!        and --resume continues from it to a final result that is
+//!        bit-identical to an uninterrupted run at any thread count)
 //! comet figure <fig6|fig8a|fig8b|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|all>
 //!       [--backend native|des|artifact] [--out-dir DIR] [--csv]
 //! comet sweep   [--cluster PRESET] [--backend B] [--infinite-memory]
@@ -28,6 +35,11 @@
 //! comet compare [--backend B]
 //! comet validate
 //! ```
+//!
+//! Exit codes: `0` = success; `2` = partial result (deadline expired or
+//! run cancelled — best-so-far printed, checkpoint flushed when
+//! configured); `3` = configuration / input error; `4` = internal error
+//! (worker panic, backend failure).
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -384,6 +396,19 @@ fn csv_f64(s: &str, flag: &str) -> Result<Vec<f64>> {
         .collect()
 }
 
+/// Parse a `--flag SECS` non-negative seconds value.
+fn secs_flag(args: &Args, name: &str) -> Result<Option<f64>> {
+    match args.flag(name) {
+        None => Ok(None),
+        Some(v) => match v.parse::<f64>() {
+            Ok(d) if d >= 0.0 && d.is_finite() => Ok(Some(d)),
+            _ => Err(Error::Config(format!(
+                "--{name}: bad value '{v}' (seconds >= 0)"
+            ))),
+        },
+    }
+}
+
 /// `comet optimize`: construct an optimize scenario from flags and run
 /// the branch-and-bound search. The same engine as
 /// `comet scenario run optimize-*`, parameterized from the command line.
@@ -391,7 +416,11 @@ fn csv_f64(s: &str, flag: &str) -> Result<Vec<f64>> {
 /// With a positional target (`comet optimize pipeline-transformer` or a
 /// TOML path), the spec's own lattice is searched instead — the target
 /// must be an `optimize` or `pipeline` study.
-fn cmd_optimize(args: &Args) -> Result<()> {
+///
+/// Returns the process exit code: success exits 0, a partial result
+/// (deadline expired or SIGINT) prints the best-so-far table, flushes
+/// the checkpoint when one is configured, and exits 2.
+fn cmd_optimize(args: &Args) -> Result<ExitCode> {
     // --threads N: evaluation lanes for the search (and the pool width
     // backing them). The outcome is bit-identical at every N — CI diffs
     // the --threads 1 and --threads 4 JSON byte-for-byte.
@@ -412,6 +441,18 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let objective = match args.flag("objective") {
         None => None,
         Some(v) => Some(Objective::parse(v)?),
+    };
+    // Execution-robustness flags: a wall-clock budget, a checkpoint to
+    // flush resumable search state to, and a checkpoint to resume from.
+    // SIGINT cancels cooperatively at the next safe boundary — the
+    // search still returns its partial result and flushes the
+    // checkpoint before the process exits.
+    let exec = scenario::ExecOverrides {
+        token: Some(comet::util::cancel::install_sigint_token()),
+        resume: args.flag("resume").map(String::from),
+        deadline_s: secs_flag(args, "deadline")?,
+        checkpoint: args.flag("checkpoint").map(String::from),
+        checkpoint_every_s: secs_flag(args, "checkpoint-every")?,
     };
     let mut coord = coordinator_for(args)?;
     if let Some(n) = threads {
@@ -448,10 +489,8 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             }
             (None, _) => {}
         }
-        let (fig, out) = scenario::run_optimize(&spec, &coord)?;
-        emit_figure(&fig, args)?;
-        report_optimize_stats(&coord, &out);
-        return Ok(());
+        let (fig, out) = scenario::run_optimize_exec(&spec, &coord, &exec)?;
+        return finish_optimize(args, &coord, &fig, &out);
     }
     let cluster = cluster_for(args)?;
     let workload = match args.flag("workload").unwrap_or("transformer-1t") {
@@ -541,6 +580,11 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         },
         threads,
         objective: objective.unwrap_or_default(),
+        // The execution knobs travel via `ExecOverrides` (built from the
+        // flags above), not the ad-hoc spec.
+        deadline_s: None,
+        checkpoint: None,
+        checkpoint_every_s: None,
     };
     let spec = ScenarioSpec {
         name: "optimize".into(),
@@ -571,10 +615,31 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         },
         output: OutputSpec::default(),
     };
-    let (fig, out) = scenario::run_optimize(&spec, &coord)?;
-    emit_figure(&fig, args)?;
-    report_optimize_stats(&coord, &out);
-    Ok(())
+    let (fig, out) = scenario::run_optimize_exec(&spec, &coord, &exec)?;
+    finish_optimize(args, &coord, &fig, &out)
+}
+
+/// Emit the optimize result and map its completeness to an exit code:
+/// 0 for a finished search, 2 for a partial (deadline/cancel) one.
+fn finish_optimize(
+    args: &Args,
+    coord: &Coordinator,
+    fig: &FigureData,
+    out: &comet::optimizer::Outcome,
+) -> Result<ExitCode> {
+    emit_figure(fig, args)?;
+    report_optimize_stats(coord, out);
+    if let Some(stop) = &out.stop {
+        eprintln!(
+            "[comet] PARTIAL ({}): {} of {} lattice points unexplored; \
+             best-so-far reported — resume from the checkpoint to finish",
+            stop.label(),
+            out.remaining,
+            out.total_points
+        );
+        return Ok(ExitCode::from(2));
+    }
+    Ok(ExitCode::SUCCESS)
 }
 
 /// Shared stderr report for `comet optimize` (flag and spec-target modes).
@@ -754,24 +819,40 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 const USAGE: &str = "usage: comet <scenario|optimize|figure|sweep|eval|footprint|config|workload|compare|validate> [options]
 see README.md for per-command options";
 
-fn run() -> Result<()> {
+fn run() -> Result<ExitCode> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw);
+    let done = |r: Result<()>| r.map(|()| ExitCode::SUCCESS);
     match args.positional.first().map(String::as_str) {
-        Some("scenario") => cmd_scenario(&args),
+        Some("scenario") => done(cmd_scenario(&args)),
         Some("optimize") => cmd_optimize(&args),
-        Some("figure") => cmd_figure(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("eval") => cmd_eval(&args),
-        Some("footprint") => cmd_footprint(&args),
-        Some("config") => cmd_config(&args),
-        Some("workload") => cmd_workload(&args),
-        Some("compare") => cmd_compare(&args),
-        Some("validate") => cmd_validate(&args),
+        Some("figure") => done(cmd_figure(&args)),
+        Some("sweep") => done(cmd_sweep(&args)),
+        Some("eval") => done(cmd_eval(&args)),
+        Some("footprint") => done(cmd_footprint(&args)),
+        Some("config") => done(cmd_config(&args)),
+        Some("workload") => done(cmd_workload(&args)),
+        Some("compare") => done(cmd_compare(&args)),
+        Some("validate") => done(cmd_validate(&args)),
         _ => {
             eprintln!("{USAGE}");
             Err(Error::Config("no command given".into()))
         }
+    }
+}
+
+/// Map an error to its documented exit code: `2` = stopped by a
+/// deadline or cancel, `3` = configuration / input problem, `4` =
+/// internal failure (worker panic, backend/runtime error).
+fn exit_code_for(e: &Error) -> ExitCode {
+    match e {
+        Error::Cancelled(_) | Error::Deadline(_) => ExitCode::from(2),
+        Error::Config(_)
+        | Error::Parse(_)
+        | Error::Json(_)
+        | Error::Io(_)
+        | Error::Artifact(_) => ExitCode::from(3),
+        _ => ExitCode::from(4),
     }
 }
 
@@ -786,10 +867,10 @@ fn main() -> ExitCode {
     let result =
         std::panic::catch_unwind(run).unwrap_or_else(|p| Err(Error::from_panic(p)));
     match result {
-        Ok(()) => ExitCode::SUCCESS,
+        Ok(code) => code,
         Err(e) => {
             eprintln!("comet: {e}");
-            ExitCode::FAILURE
+            exit_code_for(&e)
         }
     }
 }

@@ -1,0 +1,330 @@
+//! Versioned, crash-safe checkpoints for the branch-and-bound search.
+//!
+//! A checkpoint captures the driver state at a **batch-collection
+//! boundary** — the only places the parallel driver's state provably
+//! equals the sequential driver's state after the same evaluation prefix
+//! (see the determinism argument in the module docs of
+//! [`crate::optimizer`]). Because of that equality, a checkpoint written
+//! by any driver at any thread count resumes on any driver at any thread
+//! count to the same final [`crate::optimizer::Outcome`], bit for bit.
+//!
+//! The format stores **integers only**: evaluated leaves as canonical
+//! lattice indices in evaluation order, the frontier heap as
+//! `(sequence, branch-index | leaf-lattice-index)` pairs, and the next
+//! sequence number. No f64 crosses the file boundary — on resume the
+//! optimizer re-runs its deterministic preparation, re-expands the
+//! referenced branches, and **replays** the evaluated indices through
+//! the exact `eval_leaf`/`admit` sequence, reconstructing every bound,
+//! score, and incumbent from scratch. Replay is cheap relative to the
+//! search it saves (bounded by the evaluated prefix) and immune to any
+//! question of float round-tripping.
+//!
+//! A fingerprint of the optimizer's full specification (cluster,
+//! branches, axes, objective, fault model, options, top-k) guards
+//! against resuming with a different spec; the `comet_checkpoint`
+//! version key guards against format drift.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, obj, Value};
+
+/// Checkpoint format version. Bump on any layout change; old files are
+/// rejected with an actionable error instead of being misread.
+pub const VERSION: usize = 1;
+
+/// A frontier-heap node: an unexpanded branch subtree (by branch index)
+/// or a pending leaf (by canonical lattice index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Node {
+    /// Unexpanded branch subtree.
+    Branch(usize),
+    /// Pending feasible leaf, by canonical lattice index.
+    Leaf(usize),
+}
+
+/// One frontier-heap entry: the node plus its insertion sequence number
+/// (the deterministic FIFO tie-breaker of equal bounds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeapEntry {
+    /// Heap insertion sequence (unique per entry).
+    pub seq: usize,
+    /// What the entry refers to.
+    pub node: Node,
+}
+
+/// A serialized search state at a batch-collection boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Format version (see [`VERSION`]).
+    pub version: usize,
+    /// FNV-1a fingerprint of the optimizer spec that wrote this file;
+    /// resume refuses a mismatch.
+    pub fingerprint: u64,
+    /// Why the checkpoint was written (`"cancelled"`, `"deadline"`,
+    /// `"interval"`) — informational only.
+    pub stop: String,
+    /// Canonical lattice indices of every evaluated leaf, **in
+    /// evaluation order** (the order `admit` replays them in).
+    pub evaluated: Vec<usize>,
+    /// The frontier heap, sorted by `seq` for a stable file layout
+    /// (heap semantics do not depend on entry order — the (bound, seq)
+    /// total order is strict).
+    pub heap: Vec<HeapEntry>,
+    /// The next sequence number the resumed driver hands out.
+    pub next_seq: usize,
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk JSON layout.
+    pub fn to_json(&self) -> Value {
+        let heap: Vec<Value> = self
+            .heap
+            .iter()
+            .map(|e| {
+                let (key, idx) = match e.node {
+                    Node::Branch(i) => ("branch", i),
+                    Node::Leaf(i) => ("leaf", i),
+                };
+                obj(vec![
+                    ("seq", Value::Num(e.seq as f64)),
+                    (key, Value::Num(idx as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("comet_checkpoint", Value::Num(self.version as f64)),
+            ("fingerprint", Value::Str(format!("{:016x}", self.fingerprint))),
+            ("stop", Value::Str(self.stop.clone())),
+            (
+                "evaluated",
+                Value::Arr(
+                    self.evaluated
+                        .iter()
+                        .map(|&i| Value::Num(i as f64))
+                        .collect(),
+                ),
+            ),
+            ("heap", Value::Arr(heap)),
+            ("next_seq", Value::Num(self.next_seq as f64)),
+        ])
+    }
+
+    /// Parse the on-disk JSON layout, validating version and structure.
+    pub fn from_json(v: &Value) -> Result<Checkpoint> {
+        let version = v
+            .get("comet_checkpoint")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| {
+                Error::Json(
+                    "not a comet checkpoint (missing 'comet_checkpoint' \
+                     version key)"
+                        .into(),
+                )
+            })?;
+        if version != VERSION {
+            return Err(Error::Config(format!(
+                "checkpoint version {version} is not supported (this build \
+                 reads version {VERSION}); re-run without --resume"
+            )));
+        }
+        let fingerprint = v
+            .get("fingerprint")
+            .and_then(Value::as_str)
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| {
+                Error::Json("checkpoint: bad or missing 'fingerprint'".into())
+            })?;
+        let stop = v
+            .get("stop")
+            .and_then(Value::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let evaluated = v
+            .get("evaluated")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| {
+                Error::Json("checkpoint: missing 'evaluated' array".into())
+            })?
+            .iter()
+            .map(|e| {
+                e.as_usize().ok_or_else(|| {
+                    Error::Json(
+                        "checkpoint: non-integer lattice index in \
+                         'evaluated'"
+                            .into(),
+                    )
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let heap = v
+            .get("heap")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| {
+                Error::Json("checkpoint: missing 'heap' array".into())
+            })?
+            .iter()
+            .map(|e| {
+                let seq = e.get("seq").and_then(Value::as_usize).ok_or_else(
+                    || Error::Json("checkpoint: heap entry missing 'seq'".into()),
+                )?;
+                let node = match (
+                    e.get("branch").and_then(Value::as_usize),
+                    e.get("leaf").and_then(Value::as_usize),
+                ) {
+                    (Some(b), None) => Node::Branch(b),
+                    (None, Some(l)) => Node::Leaf(l),
+                    _ => {
+                        return Err(Error::Json(
+                            "checkpoint: heap entry needs exactly one of \
+                             'branch' or 'leaf'"
+                                .into(),
+                        ))
+                    }
+                };
+                Ok(HeapEntry { seq, node })
+            })
+            .collect::<Result<Vec<HeapEntry>>>()?;
+        let next_seq =
+            v.get("next_seq").and_then(Value::as_usize).ok_or_else(|| {
+                Error::Json("checkpoint: missing 'next_seq'".into())
+            })?;
+        Ok(Checkpoint {
+            version,
+            fingerprint,
+            stop,
+            evaluated,
+            heap,
+            next_seq,
+        })
+    }
+
+    /// Parse a checkpoint from JSON text.
+    pub fn parse(text: &str) -> Result<Checkpoint> {
+        Checkpoint::from_json(&json::parse(text)?)
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path`, so a crash mid-write never leaves a torn checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let text = self.to_json().to_string_pretty();
+        let tmp = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "checkpoint.json".into())
+        ));
+        std::fs::write(&tmp, text.as_bytes()).map_err(|e| {
+            Error::Io(format!("writing checkpoint {}: {e}", tmp.display()))
+        })?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            Error::Io(format!(
+                "committing checkpoint {}: {e}",
+                path.display()
+            ))
+        })
+    }
+
+    /// Load and parse a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Io(format!("reading checkpoint {}: {e}", path.display()))
+        })?;
+        Checkpoint::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            version: VERSION,
+            fingerprint: 0xdead_beef_0123_4567,
+            stop: "deadline".into(),
+            evaluated: vec![3, 0, 7],
+            heap: vec![
+                HeapEntry {
+                    seq: 2,
+                    node: Node::Branch(1),
+                },
+                HeapEntry {
+                    seq: 5,
+                    node: Node::Leaf(12),
+                },
+            ],
+            next_seq: 6,
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let ck = sample();
+        let text = ck.to_json().to_string_pretty();
+        let back = Checkpoint::parse(&text).unwrap();
+        assert_eq!(ck, back);
+        // Fingerprints above 2^53 must survive (hex string, not f64).
+        assert_eq!(back.fingerprint, 0xdead_beef_0123_4567);
+    }
+
+    #[test]
+    fn unsupported_version_is_rejected_with_context() {
+        let mut v = sample().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert("comet_checkpoint".into(), Value::Num(99.0));
+        }
+        let err = Checkpoint::from_json(&v).unwrap_err();
+        let s = err.to_string();
+        assert!(s.contains("version 99"), "{s}");
+        assert!(s.contains("--resume"), "{s}");
+    }
+
+    #[test]
+    fn non_checkpoint_json_is_rejected() {
+        let err = Checkpoint::parse("{\"hello\": 1}").unwrap_err();
+        assert!(
+            err.to_string().contains("comet_checkpoint"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn heap_entry_must_name_branch_xor_leaf() {
+        let mut v = sample().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert(
+                "heap".into(),
+                Value::Arr(vec![obj(vec![
+                    ("seq", Value::Num(0.0)),
+                    ("branch", Value::Num(1.0)),
+                    ("leaf", Value::Num(2.0)),
+                ])]),
+            );
+        }
+        let err = Checkpoint::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("exactly one"), "{err}");
+    }
+
+    #[test]
+    fn save_and_load_round_trip_through_disk() {
+        let ck = sample();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "comet_ckpt_test_{}.json",
+            std::process::id()
+        ));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn load_of_missing_file_reports_path() {
+        let err =
+            Checkpoint::load(Path::new("/nonexistent/ck.json")).unwrap_err();
+        let s = err.to_string();
+        assert!(s.contains("/nonexistent/ck.json"), "{s}");
+    }
+}

@@ -59,12 +59,31 @@
 //! fields (expanded-memory bandwidth, collective implementation), and
 //! calls [`crate::analytical::evaluate_parts`] — no per-point heap
 //! allocation, no `ModelInputs` rebuild.
+//!
+//! # Cancellation, deadlines, and checkpoint/resume
+//!
+//! Both search drivers poll a [`crate::util::cancel::RunControl`] at
+//! their safe boundaries — every heap pop in the sequential driver,
+//! every batch-collection boundary in the parallel driver — via
+//! [`Optimizer::search_with`] and friends. A stop does not discard the
+//! run: it returns a *partial* [`Outcome`] (`complete == false`) with
+//! the incumbent top-k, the frontier of what was evaluated, and a
+//! `remaining` counter, and can flush a versioned JSON checkpoint
+//! ([`checkpoint`]). Resuming from that checkpoint replays the recorded
+//! evaluation prefix through the exact sequential admit/cutoff logic,
+//! so the resumed run's final outcome is **bit-identical to an
+//! uninterrupted run at any thread count** — the batch-boundary states
+//! of the parallel driver are, by the determinism argument above,
+//! exactly the sequential driver's states after the same prefix.
 
 mod bound;
+pub mod checkpoint;
 
 use std::collections::BinaryHeap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::analytical::{
     evaluate_parts, goodput, pp_boundary_link, TrainingBreakdown,
@@ -79,7 +98,10 @@ use crate::model::inputs::{
 use crate::network::CollectiveImpl;
 use crate::parallel::{PipeSchedule, ZeroStage};
 use crate::resilience::{checkpoint_bandwidth, FaultModel};
+use crate::util::cancel::{RunControl, StopReason};
 use crate::workload::Workload;
+
+use checkpoint::Checkpoint;
 
 /// What the optimizer ranks candidates by.
 ///
@@ -285,6 +307,16 @@ pub struct Outcome {
     pub infeasible: usize,
     /// Full lattice size (feasible + infeasible).
     pub total_points: usize,
+    /// `true` for a run that reached its natural cutoff (the counters
+    /// partition the lattice as evaluated + pruned + infeasible);
+    /// `false` for a run stopped early by cancellation or a deadline.
+    pub complete: bool,
+    /// Feasible points neither evaluated nor provably pruned when the
+    /// run stopped (always `0` when `complete`). The full invariant is
+    /// `evaluated + pruned + infeasible + remaining == total_points`.
+    pub remaining: usize,
+    /// Why a partial run stopped (`None` when `complete`).
+    pub stop: Option<StopReason>,
 }
 
 impl Outcome {
@@ -309,6 +341,8 @@ impl Outcome {
             self.total_points, other.total_points,
             "{ctx}: total_points"
         );
+        assert_eq!(self.complete, other.complete, "{ctx}: complete");
+        assert_eq!(self.remaining, other.remaining, "{ctx}: remaining");
         let check = |which: &str, a: &[Candidate], b: &[Candidate]| {
             assert_eq!(a.len(), b.len(), "{ctx}: {which} length");
             for (x, y) in a.iter().zip(b) {
@@ -362,6 +396,63 @@ impl Outcome {
         check("top", &self.top, &other.top);
         check("frontier", &self.frontier, &other.frontier);
     }
+}
+
+/// Execution policy for a search run: cooperative stop sources, an
+/// optional checkpoint sink, and an optional checkpoint to resume from.
+/// The default is today's behavior exactly — unbounded, no
+/// checkpointing — so plain [`Optimizer::search`] callers see no change.
+#[derive(Debug, Clone, Default)]
+pub struct SearchExec {
+    /// Stop sources polled at every safe boundary.
+    pub control: RunControl,
+    /// Where to flush checkpoints (on stop, and on the interval below).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Also checkpoint every this-many seconds at safe boundaries
+    /// (`Some(0.0)` = every boundary; `None` = only on stop).
+    pub checkpoint_every_s: Option<f64>,
+    /// Resume from a previously written checkpoint instead of starting
+    /// fresh. The checkpoint's spec fingerprint must match.
+    pub resume: Option<Checkpoint>,
+}
+
+impl SearchExec {
+    /// Attach stop sources.
+    pub fn with_control(mut self, control: RunControl) -> Self {
+        self.control = control;
+        self
+    }
+
+    /// Attach a checkpoint sink (flushed on stop; plus on the interval
+    /// when one is set).
+    pub fn with_checkpoint(mut self, path: PathBuf) -> Self {
+        self.checkpoint_path = Some(path);
+        self
+    }
+
+    /// Also checkpoint on a wall-clock interval (`0.0` = every safe
+    /// boundary — useful for tests and crash-safety drills).
+    pub fn with_checkpoint_every(mut self, secs: f64) -> Self {
+        self.checkpoint_every_s = Some(secs.max(0.0));
+        self
+    }
+
+    /// Resume from `ck` instead of starting fresh.
+    pub fn with_resume(mut self, ck: Checkpoint) -> Self {
+        self.resume = Some(ck);
+        self
+    }
+}
+
+/// The driver-independent mutable search state: the best-first frontier
+/// heap, its sequence counter, the incumbent top-k, and the evaluated
+/// candidates in evaluation order. Both drivers mutate exactly this; a
+/// checkpoint is a pure function of it (plus the optimizer spec).
+struct SearchState {
+    heap: BinaryHeap<Entry>,
+    seq: usize,
+    incumbents: Vec<(f64, usize)>,
+    evaluated: Vec<Candidate>,
 }
 
 /// Per-branch precomputed search state.
@@ -477,6 +568,11 @@ pub struct Optimizer<'a> {
     /// Fault model the goodput objective scores against (identity under
     /// [`Objective::Time`]).
     faults: FaultModel,
+    /// Fault-injection hook: panic when evaluating this lattice index.
+    /// Seeded from `COMET_PANIC_LEAF` at construction (read once — no
+    /// per-leaf env traffic); used by the pool-isolation tests and the
+    /// CI panic-injection smoke. `None` in every real run.
+    panic_leaf: Option<usize>,
 }
 
 impl<'a> Optimizer<'a> {
@@ -541,7 +637,20 @@ impl<'a> Optimizer<'a> {
             threads: None,
             objective: Objective::Time,
             faults: FaultModel::none(),
+            panic_leaf: std::env::var("COMET_PANIC_LEAF")
+                .ok()
+                .and_then(|v| v.parse().ok()),
         })
+    }
+
+    /// Test support: arm the panic-injection hook directly (the
+    /// in-process alternative to `COMET_PANIC_LEAF`, which unit tests
+    /// must not set — the environment is process-global and tests run
+    /// concurrently). Hidden from docs — not a stability surface.
+    #[doc(hidden)]
+    pub fn with_panic_leaf(mut self, index: usize) -> Optimizer<'a> {
+        self.panic_leaf = Some(index);
+        self
     }
 
     /// Rank candidates by `objective`, scoring goodput against `faults`
@@ -923,6 +1032,12 @@ impl<'a> Optimizer<'a> {
     /// exhaustive oracle path) and evaluating that — pinned by the
     /// `search == exhaustive` bit-equality tests.
     fn eval_leaf(&self, st: &BranchState, leaf: &Leaf) -> TrainingBreakdown {
+        if self.panic_leaf == Some(leaf.point.index) {
+            panic!(
+                "injected leaf panic at lattice index {} (COMET_PANIC_LEAF)",
+                leaf.point.index
+            );
+        }
         let mut params = st.template.params;
         params.bw_em = leaf.bw_em;
         params.collective_impl = leaf.point.collective;
@@ -1027,7 +1142,253 @@ impl<'a> Optimizer<'a> {
             pruned,
             infeasible,
             total_points: self.total_points(),
+            complete: true,
+            remaining: 0,
+            stop: None,
         }
+    }
+
+    /// A *partial* outcome for a run stopped at a safe boundary:
+    /// best-so-far top-k and frontier over the evaluated prefix, with
+    /// everything not yet evaluated reported as `remaining` (nothing is
+    /// claimed pruned — the run never reached its cutoff proof).
+    fn outcome_partial(
+        &self,
+        evaluated: Vec<Candidate>,
+        infeasible: usize,
+        reason: StopReason,
+    ) -> Outcome {
+        let n_eval = evaluated.len();
+        let remaining = self
+            .total_points()
+            .checked_sub(infeasible + n_eval)
+            .expect("partial outcome: evaluated + infeasible exceeds lattice");
+        let mut top = evaluated.clone();
+        top.sort_by(|a, b| {
+            a.score
+                .total_cmp(&b.score)
+                .then_with(|| a.point.index.cmp(&b.point.index))
+        });
+        top.truncate(self.top_k);
+        Outcome {
+            top,
+            frontier: pareto(evaluated),
+            evaluated: n_eval,
+            pruned: 0,
+            infeasible,
+            total_points: self.total_points(),
+            complete: false,
+            remaining,
+            stop: Some(reason),
+        }
+    }
+
+    /// FNV-1a fingerprint of the full optimizer specification — cluster,
+    /// branches, axes (by f64 bit pattern, via the shortest-round-trip
+    /// `Debug` rendering), options, objective, fault model, and top-k.
+    /// Written into checkpoints; resume refuses a mismatch, because a
+    /// checkpoint's lattice indices are only meaningful against the
+    /// exact spec that wrote them.
+    pub fn fingerprint(&self) -> u64 {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "ckpt-v{};cluster={:?};opts={:?};axes={:?};objective={};\
+             faults={:?};top_k={};",
+            checkpoint::VERSION,
+            self.cluster,
+            self.opts,
+            self.axes,
+            self.objective.name(),
+            self.faults,
+            self.top_k,
+        );
+        for b in &self.branches {
+            let _ = write!(
+                s,
+                "branch[{:?},{:?},{:?},{:?},{:?}];",
+                b.label, b.workload, b.stage, b.footprint_override, b.schedule,
+            );
+            let _ = write!(s, "mb={:?};", b.microbatches);
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for byte in s.as_bytes() {
+            h ^= u64::from(*byte);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+
+    /// The initial driver state: fresh (seeded heap) or restored from a
+    /// resume checkpoint.
+    fn initial_state(
+        &self,
+        states: &[BranchState],
+        exec: &SearchExec,
+    ) -> Result<SearchState> {
+        match &exec.resume {
+            None => {
+                let (heap, seq) = self.seed_heap(states);
+                Ok(SearchState {
+                    heap,
+                    seq,
+                    incumbents: Vec::new(),
+                    evaluated: Vec::new(),
+                })
+            }
+            Some(ck) => self.restore_state(states, ck),
+        }
+    }
+
+    /// Rebuild a driver state from a checkpoint: validate the spec
+    /// fingerprint, re-expand the referenced branch subtrees (the same
+    /// deterministic `expand` the live search uses), rebuild the heap
+    /// with its recorded sequence numbers, and **replay** the recorded
+    /// evaluation prefix through the exact `eval_leaf`/`admit` sequence.
+    /// Every bound, score, and incumbent is recomputed — the file stores
+    /// only integers, so no float ever round-trips through disk.
+    fn restore_state(
+        &self,
+        states: &[BranchState],
+        ck: &Checkpoint,
+    ) -> Result<SearchState> {
+        let fp = self.fingerprint();
+        if ck.fingerprint != fp {
+            return Err(Error::Config(format!(
+                "checkpoint fingerprint {:016x} does not match this \
+                 search's spec ({fp:016x}); the checkpoint was written by \
+                 a different cluster/branch/axis configuration",
+                ck.fingerprint
+            )));
+        }
+        // Lazily expanded per-branch leaf tables (lattice index -> leaf).
+        let mut tables: Vec<Option<Vec<Leaf>>> =
+            states.iter().map(|_| None).collect();
+        let axes_len = self.axes.len();
+        let mut leaf_at = |idx: usize| -> Result<Leaf> {
+            let bi = idx / axes_len.max(1);
+            if bi >= states.len() {
+                return Err(Error::Config(format!(
+                    "checkpoint references lattice index {idx}, outside \
+                     this search's {} points",
+                    self.total_points()
+                )));
+            }
+            if tables[bi].is_none() {
+                tables[bi] = Some(self.expand(bi, &states[bi]));
+            }
+            tables[bi]
+                .as_ref()
+                .unwrap()
+                .iter()
+                .find(|l| l.point.index == idx)
+                .copied()
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "checkpoint references lattice index {idx}, which \
+                         is capacity-infeasible under this spec"
+                    ))
+                })
+        };
+        let mut heap: BinaryHeap<Entry> = BinaryHeap::new();
+        for e in &ck.heap {
+            let (bound, node) = match e.node {
+                checkpoint::Node::Branch(bi) => {
+                    if bi >= states.len() {
+                        return Err(Error::Config(format!(
+                            "checkpoint references branch {bi}, outside \
+                             this search's {} branches",
+                            states.len()
+                        )));
+                    }
+                    (states[bi].bound, NodeRef::Branch(bi))
+                }
+                checkpoint::Node::Leaf(idx) => {
+                    let leaf = leaf_at(idx)?;
+                    (leaf.bound, NodeRef::Leaf(leaf))
+                }
+            };
+            heap.push(Entry {
+                bound,
+                seq: e.seq,
+                node,
+            });
+        }
+        let mut incumbents: Vec<(f64, usize)> = Vec::new();
+        let mut evaluated: Vec<Candidate> =
+            Vec::with_capacity(ck.evaluated.len());
+        for &idx in &ck.evaluated {
+            let leaf = leaf_at(idx)?;
+            let st = &states[leaf.point.branch];
+            let b = self.eval_leaf(st, &leaf);
+            let cand = self.candidate(&leaf, st.footprint, b);
+            self.admit(&mut incumbents, &cand);
+            evaluated.push(cand);
+        }
+        Ok(SearchState {
+            heap,
+            seq: ck.next_seq,
+            incumbents,
+            evaluated,
+        })
+    }
+
+    /// Serialize the driver state (integers only — see
+    /// [`Optimizer::restore_state`] for the inverse).
+    fn checkpoint_of(&self, state: &SearchState, reason: &str) -> Checkpoint {
+        let mut heap: Vec<checkpoint::HeapEntry> = state
+            .heap
+            .iter()
+            .map(|e| checkpoint::HeapEntry {
+                seq: e.seq,
+                node: match &e.node {
+                    NodeRef::Branch(i) => checkpoint::Node::Branch(*i),
+                    NodeRef::Leaf(l) => checkpoint::Node::Leaf(l.point.index),
+                },
+            })
+            .collect();
+        heap.sort_by_key(|e| e.seq);
+        Checkpoint {
+            version: checkpoint::VERSION,
+            fingerprint: self.fingerprint(),
+            stop: reason.to_string(),
+            evaluated: state.evaluated.iter().map(|c| c.point.index).collect(),
+            heap,
+            next_seq: state.seq,
+        }
+    }
+
+    /// Safe-boundary bookkeeping shared by both drivers: poll the stop
+    /// sources (flushing a final checkpoint on a stop) and service the
+    /// periodic checkpoint interval. Returns the stop reason when the
+    /// driver must return a partial outcome.
+    fn at_boundary(
+        &self,
+        state: &SearchState,
+        exec: &SearchExec,
+        last_ckpt: &mut Option<Instant>,
+    ) -> Result<Option<StopReason>> {
+        if let Some(reason) = exec.control.should_stop() {
+            if let Some(path) = &exec.checkpoint_path {
+                self.checkpoint_of(state, reason.label()).save(path)?;
+            }
+            return Ok(Some(reason));
+        }
+        if let (Some(path), Some(every)) =
+            (&exec.checkpoint_path, exec.checkpoint_every_s)
+        {
+            let now = Instant::now();
+            let due = match last_ckpt {
+                None => true,
+                Some(t) => now.duration_since(*t).as_secs_f64() >= every,
+            };
+            if due {
+                self.checkpoint_of(state, "interval").save(path)?;
+                *last_ckpt = Some(now);
+            }
+        }
+        Ok(None)
     }
 
     /// Seed the search heap with every branch subtree that has at least
@@ -1069,8 +1430,15 @@ impl<'a> Optimizer<'a> {
     /// enumeration: the exactness guarantee is kept, the pruning speedup
     /// is not.
     pub fn search(&self) -> Result<Outcome> {
+        self.search_with(&SearchExec::default())
+    }
+
+    /// [`Optimizer::search`] under an execution policy: cooperative
+    /// cancellation/deadline stop sources, checkpoint flushing, and
+    /// resume. The default policy reproduces `search` exactly.
+    pub fn search_with(&self, exec: &SearchExec) -> Result<Outcome> {
         let lanes = self.threads.unwrap_or_else(|| self.coord.threads());
-        self.search_parallel(lanes)
+        self.search_parallel_with(lanes, exec)
     }
 
     /// The single-threaded best-first driver — the in-tree equivalence
@@ -1079,22 +1447,50 @@ impl<'a> Optimizer<'a> {
     /// sequence) order, tightening the incumbent top-k after each, until
     /// the next bound strictly loses to the k-th incumbent).
     pub fn search_sequential(&self) -> Result<Outcome> {
+        self.search_sequential_with(&SearchExec::default())
+    }
+
+    /// [`Optimizer::search_sequential`] under an execution policy. The
+    /// safe boundary is every heap pop: each iteration polls the stop
+    /// sources before popping, so the state a stop (or an interval
+    /// checkpoint) observes is exactly a between-evaluations state.
+    pub fn search_sequential_with(
+        &self,
+        exec: &SearchExec,
+    ) -> Result<Outcome> {
         if self.coord.backend() != Backend::Native {
-            return self.exhaustive();
+            if exec.resume.is_some() {
+                return Err(Error::Config(
+                    "optimizer: --resume requires the native backend \
+                     (non-native backends enumerate exhaustively and \
+                     write no checkpoints)"
+                        .into(),
+                ));
+            }
+            return self.exhaustive_controlled(&exec.control);
         }
         let states = self.prepare(1)?;
         let infeasible: usize = states.iter().map(|s| s.infeasible).sum();
         let feasible_total = self.total_points() - infeasible;
 
-        let (mut heap, mut seq) = self.seed_heap(&states);
-        // Incumbent top-k scores (with lattice-index tie-break);
-        // score == total under the default time objective, so bound
-        // comparisons against them stay admissible either way.
-        let mut incumbents: Vec<(f64, usize)> = Vec::new();
-        let mut evaluated: Vec<Candidate> = Vec::new();
-        while let Some(e) = heap.pop() {
-            if incumbents.len() >= self.top_k {
-                let worst = incumbents[self.top_k - 1].0;
+        let mut state = self.initial_state(&states, exec)?;
+        let mut last_ckpt: Option<Instant> = None;
+        loop {
+            if let Some(reason) =
+                self.at_boundary(&state, exec, &mut last_ckpt)?
+            {
+                return Ok(self.outcome_partial(
+                    state.evaluated,
+                    infeasible,
+                    reason,
+                ));
+            }
+            let Some(e) = state.heap.pop() else { break };
+            // Incumbent top-k scores (with lattice-index tie-break);
+            // score == total under the default time objective, so bound
+            // comparisons against them stay admissible either way.
+            if state.incumbents.len() >= self.top_k {
+                let worst = state.incumbents[self.top_k - 1].0;
                 // Everything still queued has bound >= e.bound; a strict
                 // loss here prunes the rest of the lattice. Equal bounds
                 // must still be expanded — an equal-total candidate with
@@ -1106,25 +1502,25 @@ impl<'a> Optimizer<'a> {
             match e.node {
                 NodeRef::Branch(i) => {
                     for leaf in self.expand(i, &states[i]) {
-                        heap.push(Entry {
+                        state.heap.push(Entry {
                             bound: leaf.bound,
-                            seq,
+                            seq: state.seq,
                             node: NodeRef::Leaf(leaf),
                         });
-                        seq += 1;
+                        state.seq += 1;
                     }
                 }
                 NodeRef::Leaf(leaf) => {
                     let st = &states[leaf.point.branch];
                     let b = self.eval_leaf(st, &leaf);
                     let cand = self.candidate(&leaf, st.footprint, b);
-                    self.admit(&mut incumbents, &cand);
-                    evaluated.push(cand);
+                    self.admit(&mut state.incumbents, &cand);
+                    state.evaluated.push(cand);
                 }
             }
         }
-        let pruned = feasible_total - evaluated.len();
-        Ok(self.outcome_from(evaluated, pruned, infeasible))
+        let pruned = feasible_total - state.evaluated.len();
+        Ok(self.outcome_from(state.evaluated, pruned, infeasible))
     }
 
     /// The parallel driver: batched speculative leaf expansion over the
@@ -1144,17 +1540,42 @@ impl<'a> Optimizer<'a> {
     /// lazily. Every decision that shapes the outcome happens in replay
     /// order, so the result is bit-identical to the sequential driver.
     pub fn search_parallel(&self, lanes: usize) -> Result<Outcome> {
+        self.search_parallel_with(lanes, &SearchExec::default())
+    }
+
+    /// [`Optimizer::search_parallel`] under an execution policy. The
+    /// safe boundary is the batch-collection boundary — the start of
+    /// each collect/evaluate/merge cycle, where (by the determinism
+    /// argument in the module docs) the driver state equals the
+    /// sequential driver's state after the same evaluation prefix, so
+    /// checkpoints written here resume bit-identically on any driver at
+    /// any thread count. A leaf evaluation that panics surfaces as a
+    /// structured [`Error::Job`] (the pool captures it per job index and
+    /// stays healthy) instead of aborting the process.
+    pub fn search_parallel_with(
+        &self,
+        lanes: usize,
+        exec: &SearchExec,
+    ) -> Result<Outcome> {
         if self.coord.backend() != Backend::Native {
-            return self.exhaustive();
+            if exec.resume.is_some() {
+                return Err(Error::Config(
+                    "optimizer: --resume requires the native backend \
+                     (non-native backends enumerate exhaustively and \
+                     write no checkpoints)"
+                        .into(),
+                ));
+            }
+            return self.exhaustive_controlled(&exec.control);
         }
         if lanes <= 1 {
-            return self.search_sequential();
+            return self.search_sequential_with(exec);
         }
         let states = self.prepare(lanes)?;
         let infeasible: usize = states.iter().map(|s| s.infeasible).sum();
         let feasible_total = self.total_points() - infeasible;
 
-        let (mut heap, mut seq) = self.seed_heap(&states);
+        let mut state = self.initial_state(&states, exec)?;
         // Shared pruning threshold, f64 bits (scores are positive, so
         // the bit pattern orders like the value): the k-th incumbent
         // score once the top-k is full, +inf before (score == total
@@ -1163,22 +1584,38 @@ impl<'a> Optimizer<'a> {
         // with fresh scores during a batch when `top_k == 1` (any
         // single evaluated score upper-bounds the final argmin score;
         // for k > 1 no single score bounds the k-th best, so workers
-        // leave it to the merge).
-        let threshold = AtomicU64::new(f64::INFINITY.to_bits());
-        let mut incumbents: Vec<(f64, usize)> = Vec::new();
-        let mut evaluated: Vec<Candidate> = Vec::new();
+        // leave it to the merge). A resumed run seeds it from the
+        // replayed incumbents.
+        let threshold =
+            AtomicU64::new(if state.incumbents.len() >= self.top_k {
+                state.incumbents[self.top_k - 1].0.to_bits()
+            } else {
+                f64::INFINITY.to_bits()
+            });
         let batch_cap = lanes.saturating_mul(LEAVES_PER_LANE).max(1);
+        let mut last_ckpt: Option<Instant> = None;
         let mut done = false;
         while !done {
+            // ---- safe boundary: between-batch state is sequential-
+            // reachable, so stops and checkpoints happen only here.
+            if let Some(reason) =
+                self.at_boundary(&state, exec, &mut last_ckpt)?
+            {
+                return Ok(self.outcome_partial(
+                    state.evaluated,
+                    infeasible,
+                    reason,
+                ));
+            }
             // ---- collect: pop the frontier in canonical order.
-            let cut = if incumbents.len() >= self.top_k {
-                incumbents[self.top_k - 1].0
+            let cut = if state.incumbents.len() >= self.top_k {
+                state.incumbents[self.top_k - 1].0
             } else {
                 f64::INFINITY
             };
             let mut pending: Vec<Leaf> = Vec::with_capacity(batch_cap);
             while pending.len() < batch_cap {
-                let Some(e) = heap.pop() else {
+                let Some(e) = state.heap.pop() else {
                     done = true;
                     break;
                 };
@@ -1194,21 +1631,26 @@ impl<'a> Optimizer<'a> {
                 match e.node {
                     NodeRef::Branch(i) => {
                         for leaf in self.expand(i, &states[i]) {
-                            heap.push(Entry {
+                            state.heap.push(Entry {
                                 bound: leaf.bound,
-                                seq,
+                                seq: state.seq,
                                 node: NodeRef::Leaf(leaf),
                             });
-                            seq += 1;
+                            state.seq += 1;
                         }
                     }
                     NodeRef::Leaf(leaf) => pending.push(leaf),
                 }
             }
             // ---- evaluate: speculative fan-out over the pool, capped
-            // at the driver's lane count.
-            let evals: Vec<Option<TrainingBreakdown>> =
-                self.coord.pool().scoped_map_bounded(&pending, lanes, |leaf| {
+            // at the driver's lane count. A panicking evaluation is
+            // captured per job index by the pool (which respawns the
+            // worker and finishes the rest of the batch) and surfaces
+            // here as `Error::Job`.
+            let evals: Vec<Option<TrainingBreakdown>> = self
+                .coord
+                .pool()
+                .try_scoped_map_bounded(&pending, lanes, |leaf| {
                     let t = f64::from_bits(threshold.load(Ordering::Relaxed));
                     if leaf.bound > t {
                         // Provably cut at merge time (the threshold only
@@ -1238,12 +1680,12 @@ impl<'a> Optimizer<'a> {
                         }
                     }
                     Some(b)
-                });
+                })?;
             // ---- merge: replay in collection order — exactly the
             // sequential driver's update-and-cutoff sequence.
             for (leaf, eval) in pending.iter().zip(evals) {
-                if incumbents.len() >= self.top_k
-                    && leaf.bound > incumbents[self.top_k - 1].0
+                if state.incumbents.len() >= self.top_k
+                    && leaf.bound > state.incumbents[self.top_k - 1].0
                 {
                     // The sequential driver terminates here; everything
                     // speculatively evaluated beyond this point is
@@ -1254,18 +1696,18 @@ impl<'a> Optimizer<'a> {
                 let st = &states[leaf.point.branch];
                 let b = eval.unwrap_or_else(|| self.eval_leaf(st, leaf));
                 let cand = self.candidate(leaf, st.footprint, b);
-                self.admit(&mut incumbents, &cand);
-                evaluated.push(cand);
+                self.admit(&mut state.incumbents, &cand);
+                state.evaluated.push(cand);
             }
-            if incumbents.len() >= self.top_k {
+            if state.incumbents.len() >= self.top_k {
                 threshold.store(
-                    incumbents[self.top_k - 1].0.to_bits(),
+                    state.incumbents[self.top_k - 1].0.to_bits(),
                     Ordering::Relaxed,
                 );
             }
         }
-        let pruned = feasible_total - evaluated.len();
-        Ok(self.outcome_from(evaluated, pruned, infeasible))
+        let pruned = feasible_total - state.evaluated.len();
+        Ok(self.outcome_from(state.evaluated, pruned, infeasible))
     }
 
     /// Exhaustive enumeration of the full lattice through the batched
@@ -1276,30 +1718,39 @@ impl<'a> Optimizer<'a> {
     /// `search()` is tested against (bit-for-bit), and the baseline
     /// `bench_optimizer` compares evaluated-point counts with.
     pub fn exhaustive(&self) -> Result<Outcome> {
+        self.exhaustive_controlled(&RunControl::unbounded())
+    }
+
+    /// [`Optimizer::exhaustive`] with cooperative stop checks between
+    /// its phases (and per-leaf during input resolution). Exhaustive
+    /// enumeration has no incremental state worth keeping, so a stop is
+    /// an [`Error::Cancelled`] / [`Error::Deadline`] rather than a
+    /// partial outcome.
+    fn exhaustive_controlled(&self, control: &RunControl) -> Result<Outcome> {
+        control.check("exhaustive enumeration")?;
         let states = self.prepare(usize::MAX)?;
         let infeasible: usize = states.iter().map(|s| s.infeasible).sum();
         let mut leaves: Vec<Leaf> = Vec::new();
         for (i, st) in states.iter().enumerate() {
             leaves.extend(self.expand(i, st));
         }
-        let inputs: Vec<ModelInputs> = leaves
-            .iter()
-            .map(|l| {
-                let st = &states[l.point.branch];
-                let b = &self.branches[l.point.branch];
-                let cluster = self.leaf_cluster(
-                    st.footprint,
-                    l.point.em_bandwidth,
-                    l.point.em_capacity,
-                );
-                resolve_inputs(
-                    &st.dec,
-                    &cluster,
-                    &self.leaf_opts(b, l.point.collective),
-                )
-            })
-            .collect::<Result<_>>()?;
-        let evals = self.coord.evaluate_inputs(&inputs)?;
+        let mut inputs: Vec<ModelInputs> = Vec::with_capacity(leaves.len());
+        for l in &leaves {
+            control.check("exhaustive input resolution")?;
+            let st = &states[l.point.branch];
+            let b = &self.branches[l.point.branch];
+            let cluster = self.leaf_cluster(
+                st.footprint,
+                l.point.em_bandwidth,
+                l.point.em_capacity,
+            );
+            inputs.push(resolve_inputs(
+                &st.dec,
+                &cluster,
+                &self.leaf_opts(b, l.point.collective),
+            )?);
+        }
+        let evals = self.coord.evaluate_inputs_controlled(&inputs, control)?;
         let evaluated: Vec<Candidate> = leaves
             .iter()
             .zip(&evals)
@@ -1941,5 +2392,175 @@ mod tests {
         assert_eq!(a.len(), 12);
         assert!(!a.is_empty());
         assert_eq!(AxisSpec::new().len(), 1);
+    }
+
+    fn robust_fixture(coord: &Coordinator) -> Optimizer<'_> {
+        Optimizer::new(
+            coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 2, 128),
+            AxisSpec::new().em_bandwidths(&[gb(250.0), gb(1000.0), gb(2039.0)]),
+        )
+        .unwrap()
+        .with_top_k(3)
+    }
+
+    #[test]
+    fn cancelled_search_returns_partial_outcome_with_counters() {
+        let coord = Coordinator::native().with_threads(2);
+        // top_k = 21 covers the whole 21-point lattice, so no pruning
+        // cutoff can finish the search early: the sequential driver
+        // takes 7 branch + 21 leaf iterations and the 2-lane driver
+        // needs ceil(21/8) batches, making the cancel points below
+        // mid-search by construction.
+        let opt = robust_fixture(&coord).with_top_k(21);
+        let full = opt.search_sequential().unwrap();
+        assert!(full.complete && full.remaining == 0 && full.stop.is_none());
+        assert_eq!(full.evaluated, 21);
+        for (lanes, polls) in [(1usize, 4u64), (2, 1)] {
+            let exec = SearchExec::default().with_control(
+                RunControl::unbounded().cancel_after_polls(polls),
+            );
+            let out = opt.search_parallel_with(lanes, &exec).unwrap();
+            assert!(!out.complete, "lanes={lanes}");
+            assert_eq!(out.stop, Some(StopReason::Cancelled));
+            // Partial runs prove nothing about unexplored points:
+            // everything not evaluated (and not statically infeasible)
+            // is `remaining`, never `pruned`.
+            assert_eq!(out.pruned, 0);
+            assert_eq!(
+                out.evaluated + out.infeasible + out.remaining,
+                out.total_points
+            );
+            assert!(out.remaining > 0, "cancelled too late to be partial");
+            assert!(out.evaluated < full.evaluated);
+        }
+        // A zero deadline stops before the first batch.
+        let exec = SearchExec::default().with_control(
+            RunControl::unbounded()
+                .with_deadline(crate::util::cancel::Deadline::after_secs(0.0)),
+        );
+        let out = opt.search_with(&exec).unwrap();
+        assert!(!out.complete);
+        assert_eq!(out.stop, Some(StopReason::DeadlineExceeded));
+        assert_eq!(out.evaluated, 0);
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical_to_uninterrupted() {
+        let coord = Coordinator::native().with_threads(8);
+        // A 42-point lattice (3 bandwidths x 2 collectives over 7
+        // branches) with top_k covering it all: no pruning cutoff, so
+        // every driver needs multiple batches (8-lane cap is 32) and
+        // each cancel point below lands strictly mid-search.
+        let opt = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 2, 128),
+            AxisSpec::new()
+                .em_bandwidths(&[gb(250.0), gb(1000.0), gb(2039.0)])
+                .collective_impls(&[
+                    CollectiveImpl::LogicalRing,
+                    CollectiveImpl::Hierarchical,
+                ]),
+        )
+        .unwrap()
+        .with_top_k(42);
+        let oracle = opt.search_sequential().unwrap();
+        assert!(oracle.complete);
+        let dir = std::env::temp_dir();
+        for (case, lanes, polls) in
+            [("seq", 1usize, 6u64), ("par2", 2, 2), ("par8", 8, 1)]
+        {
+            let path = dir.join(format!(
+                "comet-ckpt-resume-{}-{case}.json",
+                std::process::id()
+            ));
+            let exec = SearchExec::default()
+                .with_control(RunControl::unbounded().cancel_after_polls(polls))
+                .with_checkpoint(path.clone());
+            let partial = opt.search_parallel_with(lanes, &exec).unwrap();
+            assert!(!partial.complete, "{case}: cancelled run completed");
+            // The flushed checkpoint resumes — on ANY driver — to the
+            // exact uninterrupted outcome, counters included.
+            let ck = Checkpoint::load(&path).unwrap();
+            let resumed = opt.search_parallel_with(
+                lanes,
+                &SearchExec::default().with_resume(ck.clone()),
+            );
+            oracle.assert_bit_identical(
+                &resumed.unwrap(),
+                &format!("resume {case} same-lanes"),
+            );
+            let cross = opt
+                .search_sequential_with(
+                    &SearchExec::default().with_resume(ck),
+                )
+                .unwrap();
+            oracle.assert_bit_identical(&cross, &format!("resume {case} seq"));
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn checkpoint_rejects_mismatched_spec_fingerprint() {
+        let coord = Coordinator::native();
+        let opt = robust_fixture(&coord);
+        let exec = SearchExec::default()
+            .with_control(RunControl::unbounded().cancel_after_polls(1));
+        let path = std::env::temp_dir().join(format!(
+            "comet-ckpt-fp-{}.json",
+            std::process::id()
+        ));
+        let exec = exec.with_checkpoint(path.clone());
+        opt.search_sequential_with(&exec).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        // A different lattice (extra EM capacity axis) must refuse the
+        // checkpoint instead of resuming into the wrong search.
+        let other = Optimizer::new(
+            &coord,
+            presets::dgx_a100_1024(),
+            EvalOptions::default(),
+            transformer_branches(1024, 2, 128),
+            AxisSpec::new()
+                .em_bandwidths(&[gb(250.0), gb(1000.0), gb(2039.0)])
+                .em_capacities(&[gb(100.0)]),
+        )
+        .unwrap()
+        .with_top_k(3);
+        let err = other
+            .search_sequential_with(&SearchExec::default().with_resume(ck))
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("fingerprint"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn panicking_leaf_surfaces_job_error_and_pool_survives() {
+        let coord = Coordinator::native().with_threads(2);
+        let clean = robust_fixture(&coord).search_parallel(2).unwrap();
+        let victim = clean.best().unwrap().point.index;
+        let err = robust_fixture(&coord)
+            .with_panic_leaf(victim)
+            .search_parallel(2)
+            .unwrap_err();
+        match &err {
+            crate::error::Error::Job { cause, .. } => {
+                assert!(
+                    cause.contains("injected leaf panic"),
+                    "cause: {cause}"
+                );
+            }
+            other => panic!("expected Error::Job, got {other:?}"),
+        }
+        // The pool healed: the same coordinator completes a fresh
+        // search bit-identically to the pre-panic run.
+        let after = robust_fixture(&coord).search_parallel(2).unwrap();
+        clean.assert_bit_identical(&after, "post-panic pool reuse");
     }
 }

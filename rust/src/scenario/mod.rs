@@ -29,7 +29,9 @@ pub mod registry;
 mod run;
 pub mod spec;
 
-pub use run::{optimizer_for, run, run_optimize};
+pub use run::{
+    optimizer_for, run, run_optimize, run_optimize_exec, ExecOverrides,
+};
 pub use spec::{
     collective_name, collective_of, zero_stage_of, BackendSpec, Content,
     Normalize, OptionsSpec, OutputFormat, OutputSpec, ScenarioSpec,

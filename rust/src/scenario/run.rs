@@ -17,8 +17,12 @@ use crate::coordinator::{Coordinator, GridSweep};
 use crate::error::{Error, Result};
 use crate::model::inputs::EvalOptions;
 use crate::network::CollectiveImpl;
-use crate::optimizer::{AxisSpec, Branch, Objective, Optimizer, Outcome};
+use crate::optimizer::checkpoint::Checkpoint;
+use crate::optimizer::{
+    AxisSpec, Branch, Objective, Optimizer, Outcome, SearchExec,
+};
 use crate::resilience::{checkpoint_bandwidth, FaultModel};
+use crate::util::cancel::{CancelToken, Deadline, RunControl};
 use crate::parallel::{
     model_state_bytes, pipeline_footprint_per_node, PipeSchedule, Strategy,
     TierMapping, ZeroStage,
@@ -26,6 +30,8 @@ use crate::parallel::{
 use crate::report::FigureData;
 use crate::util::units::gb;
 use crate::workload::{CommScope, Workload};
+
+use std::path::Path;
 
 use super::spec::{
     collective_name, Content, Normalize, ScenarioSpec, StrategyAxis, Study,
@@ -82,12 +88,14 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
             strategies,
             mtbf_hours,
             em_bandwidth_gbps,
+            deadline_s,
         } => run_resilience(
             spec,
             coord,
             strategies,
             mtbf_hours,
             *em_bandwidth_gbps,
+            *deadline_s,
         )?,
         Study::Pipeline {
             mp,
@@ -1056,6 +1064,11 @@ pub fn optimizer_for<'a>(
         top_k,
         threads,
         objective,
+        // Execution knobs are consumed by `run_optimize_exec`, not the
+        // search-space construction.
+        deadline_s: _,
+        checkpoint: _,
+        checkpoint_every_s: _,
     } = &spec.study
     else {
         return Err(Error::Config(format!(
@@ -1176,6 +1189,68 @@ pub fn optimizer_for<'a>(
     Ok(opt)
 }
 
+/// Runtime execution inputs the CLI layers on top of a spec: an
+/// externally-owned cancel token (wired to SIGINT by `comet optimize`)
+/// and a checkpoint file to resume from. The spec-level knobs
+/// (`deadline_s`, `checkpoint`, `checkpoint_every_s` on the study) are
+/// read from the study itself.
+#[derive(Debug, Clone, Default)]
+pub struct ExecOverrides {
+    /// Cooperative cancel signal observed at safe search boundaries.
+    pub token: Option<CancelToken>,
+    /// Path to a checkpoint written by a previous interrupted run.
+    pub resume: Option<String>,
+    /// `--deadline` flag; outranks the study's `deadline_s`.
+    pub deadline_s: Option<f64>,
+    /// `--checkpoint` flag; outranks the study's `checkpoint`.
+    pub checkpoint: Option<String>,
+    /// `--checkpoint-every` flag; outranks `checkpoint_every_s`.
+    pub checkpoint_every_s: Option<f64>,
+}
+
+/// Assemble the [`SearchExec`] described by an optimize study's
+/// execution knobs plus the CLI's runtime overrides (flags outrank the
+/// spec; pipeline studies carry no knobs, so only flags apply there).
+fn search_exec(spec: &ScenarioSpec, ex: &ExecOverrides) -> Result<SearchExec> {
+    let (spec_d, spec_c, spec_e) = match &spec.study {
+        Study::Optimize {
+            deadline_s,
+            checkpoint,
+            checkpoint_every_s,
+            ..
+        } => (*deadline_s, checkpoint.clone(), *checkpoint_every_s),
+        _ => (None, None, None),
+    };
+    let deadline_s = ex.deadline_s.or(spec_d);
+    let ckpt = ex.checkpoint.clone().or(spec_c);
+    let every = ex.checkpoint_every_s.or(spec_e);
+    if every.is_some() && ckpt.is_none() {
+        return Err(Error::Config(
+            "--checkpoint-every requires a checkpoint path \
+             (--checkpoint or the study's 'checkpoint')"
+                .into(),
+        ));
+    }
+    let mut control = RunControl::unbounded();
+    if let Some(t) = &ex.token {
+        control = control.with_token(t.clone());
+    }
+    if let Some(d) = deadline_s {
+        control = control.with_deadline(Deadline::after_secs(d));
+    }
+    let mut exec = SearchExec::default().with_control(control);
+    if let Some(p) = ckpt {
+        exec = exec.with_checkpoint(p.into());
+    }
+    if let Some(e) = every {
+        exec = exec.with_checkpoint_every(e);
+    }
+    if let Some(path) = &ex.resume {
+        exec = exec.with_resume(Checkpoint::load(Path::new(path))?);
+    }
+    Ok(exec)
+}
+
 /// Run an optimize scenario, returning both the rendered figure (the
 /// top-k table) and the full search [`Outcome`] (argmin, frontier,
 /// evaluated/pruned counts).
@@ -1183,8 +1258,21 @@ pub fn run_optimize(
     spec: &ScenarioSpec,
     coord: &Coordinator,
 ) -> Result<(FigureData, Outcome)> {
-    let out = optimizer_for(spec, coord)?.search()?;
-    if out.best().is_none() {
+    run_optimize_exec(spec, coord, &ExecOverrides::default())
+}
+
+/// [`run_optimize`] with runtime execution inputs. A search stopped by
+/// a deadline or cancel returns a **partial** outcome (`!out.complete`)
+/// rendered with explicit `PARTIAL` notes instead of an error, so an
+/// interrupted run still reports its best-so-far table.
+pub fn run_optimize_exec(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    ex: &ExecOverrides,
+) -> Result<(FigureData, Outcome)> {
+    let exec = search_exec(spec, ex)?;
+    let out = optimizer_for(spec, coord)?.search_with(&exec)?;
+    if out.complete && out.best().is_none() {
         return Err(Error::Config(format!(
             "scenario '{}': no feasible configuration in the design space \
              ({} points, all capacity-infeasible)",
@@ -1236,6 +1324,16 @@ pub fn run_optimize(
                 .into(),
         );
     }
+    if let Some(stop) = out.stop {
+        fig.notes.push(format!(
+            "PARTIAL ({}): search stopped early with {} of {} lattice \
+             points unexplored — rows are best-so-far; resume from the \
+             checkpoint to finish",
+            stop.label(),
+            out.remaining,
+            out.total_points
+        ));
+    }
     fig.notes.push(format!(
         "search: evaluated {}/{} lattice points ({} pruned by bound, {} \
          infeasible)",
@@ -1268,7 +1366,15 @@ fn run_resilience(
     strategies: &StrategyAxis,
     mtbf_hours: &[f64],
     em_bandwidth_gbps: Option<f64>,
+    deadline_s: Option<f64>,
 ) -> Result<FigureData> {
+    // A `deadline_s` budget stops the sweep at the next batch boundary
+    // with [`Error::Deadline`] — the study is one derive + one evaluate
+    // call, so there is no meaningful partial table to salvage.
+    let mut control = RunControl::unbounded();
+    if let Some(d) = deadline_s {
+        control = control.with_deadline(Deadline::after_secs(d));
+    }
     let strategies = strategies.resolve(spec.cluster.n_nodes)?;
     let opts0 = eval_opts(spec);
     let bw_inter = spec.cluster.inter_bandwidth();
@@ -1307,8 +1413,8 @@ fn run_resilience(
         ckpt_bws.push(checkpoint_bandwidth(bw_inter, bw_lm, bw_em));
         specs.push((w, cluster, opts0));
     }
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, &control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, &control)?;
 
     let mut fig = figure(spec, "(MP, DP)");
     fig.columns = mtbf_hours.iter().map(|h| format!("MTBF_{h}h")).collect();

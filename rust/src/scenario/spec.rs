@@ -206,6 +206,18 @@ pub enum Study {
         /// fault-adjusted goodput under the scenario's `[resilience]`
         /// model ([`crate::optimizer::Objective`]).
         objective: Objective,
+        /// Wall-clock budget for the search, seconds (`None` =
+        /// unbounded). On expiry the search stops at a safe boundary
+        /// and reports its partial best-so-far result.
+        deadline_s: Option<f64>,
+        /// Checkpoint file the search flushes its resumable state to on
+        /// stop (and on the interval below). `comet optimize
+        /// --resume <path>` continues from it bit-identically.
+        checkpoint: Option<String>,
+        /// Also checkpoint every this-many seconds at safe boundaries
+        /// (`0` = every boundary; `None` = only on stop). Requires
+        /// `checkpoint`.
+        checkpoint_every_s: Option<f64>,
     },
     /// Goodput sensitivity study: fault-adjusted effective iteration
     /// time per strategy across a node-MTBF sweep, using the scenario's
@@ -219,6 +231,10 @@ pub enum Study {
         /// Expanded-memory bandwidth attached where the footprint
         /// spills, GB/s (`None` = never attach expanded memory).
         em_bandwidth_gbps: Option<f64>,
+        /// Wall-clock budget for the sweep, seconds (`None` =
+        /// unbounded). On expiry the run stops with a deadline error at
+        /// the next strategy/MTBF cell boundary.
+        deadline_s: Option<f64>,
     },
     /// Pipeline-parallelism case study: at a fixed MP degree, sweep the
     /// PP degree x microbatch count x schedule on one cluster (DP is
@@ -1071,6 +1087,9 @@ impl Study {
                         "top_k",
                         "threads",
                         "objective",
+                        "deadline_s",
+                        "checkpoint",
+                        "checkpoint_every_s",
                     ],
                     "study",
                 )?;
@@ -1098,6 +1117,33 @@ impl Study {
                     Some(s) => Objective::parse(&s)?,
                     None => Objective::Time,
                 };
+                let deadline_s = opt_f64(m, "deadline_s", "study")?;
+                if let Some(d) = deadline_s {
+                    if !(d >= 0.0) {
+                        return Err(Error::Config(format!(
+                            "scenario: optimize deadline_s must be >= 0, \
+                             got {d}"
+                        )));
+                    }
+                }
+                let checkpoint = opt_str(m, "checkpoint", "study")?;
+                let checkpoint_every_s =
+                    opt_f64(m, "checkpoint_every_s", "study")?;
+                if let Some(e) = checkpoint_every_s {
+                    if !(e >= 0.0) {
+                        return Err(Error::Config(format!(
+                            "scenario: optimize checkpoint_every_s must be \
+                             >= 0, got {e}"
+                        )));
+                    }
+                    if checkpoint.is_none() {
+                        return Err(Error::Config(
+                            "scenario: optimize checkpoint_every_s requires \
+                             'checkpoint'"
+                                .into(),
+                        ));
+                    }
+                }
                 Ok(Study::Optimize {
                     strategies: Self::strategies_axis(m)?,
                     em_bandwidths_gbps: f64_list(
@@ -1111,6 +1157,9 @@ impl Study {
                     top_k,
                     threads,
                     objective,
+                    deadline_s,
+                    checkpoint,
+                    checkpoint_every_s,
                 })
             }
             "resilience" => {
@@ -1124,6 +1173,7 @@ impl Study {
                         "max_pp",
                         "mtbf_hours",
                         "em_bandwidth_gbps",
+                        "deadline_s",
                     ],
                     "study",
                 )?;
@@ -1143,10 +1193,20 @@ impl Study {
                         )));
                     }
                 }
+                let deadline_s = opt_f64(m, "deadline_s", "study")?;
+                if let Some(d) = deadline_s {
+                    if !(d >= 0.0) {
+                        return Err(Error::Config(format!(
+                            "scenario: resilience deadline_s must be >= 0, \
+                             got {d}"
+                        )));
+                    }
+                }
                 Ok(Study::Resilience {
                     strategies: Self::strategies_axis(m)?,
                     mtbf_hours,
                     em_bandwidth_gbps: opt_f64(m, "em_bandwidth_gbps", "study")?,
+                    deadline_s,
                 })
             }
             "pipeline" => {
@@ -1417,6 +1477,9 @@ impl Study {
                 top_k,
                 threads,
                 objective,
+                deadline_s,
+                checkpoint,
+                checkpoint_every_s,
             } => {
                 axis_to_json(&mut m, strategies);
                 if !em_bandwidths_gbps.is_empty() {
@@ -1464,16 +1527,31 @@ impl Study {
                         Value::Str(objective.name().into()),
                     );
                 }
+                // Execution knobs are emitted only when set so exports
+                // predating them stay byte-identical.
+                if let Some(d) = deadline_s {
+                    m.insert("deadline_s".into(), Value::Num(*d));
+                }
+                if let Some(p) = checkpoint {
+                    m.insert("checkpoint".into(), Value::Str(p.clone()));
+                }
+                if let Some(e) = checkpoint_every_s {
+                    m.insert("checkpoint_every_s".into(), Value::Num(*e));
+                }
             }
             Study::Resilience {
                 strategies,
                 mtbf_hours,
                 em_bandwidth_gbps,
+                deadline_s,
             } => {
                 axis_to_json(&mut m, strategies);
                 m.insert("mtbf_hours".into(), nums(mtbf_hours));
                 if let Some(x) = em_bandwidth_gbps {
                     m.insert("em_bandwidth_gbps".into(), Value::Num(*x));
+                }
+                if let Some(d) = deadline_s {
+                    m.insert("deadline_s".into(), Value::Num(*d));
                 }
             }
             Study::Pipeline {
@@ -2304,6 +2382,76 @@ mod tests {
         .unwrap_err()
         .to_string()
         .contains("bogus"));
+    }
+
+    #[test]
+    fn optimize_exec_knobs_parse_and_roundtrip() {
+        // Absent knobs stay None and are not serialized, so exports
+        // predating them are byte-identical.
+        let d = ScenarioSpec::parse_str(
+            "name = \"opt\"\n[study]\nkind = \"optimize\"\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            d.study,
+            Study::Optimize {
+                deadline_s: None,
+                checkpoint: None,
+                checkpoint_every_s: None,
+                ..
+            }
+        ));
+        let toml = d.to_toml().unwrap();
+        assert!(!toml.contains("deadline_s"));
+        assert!(!toml.contains("checkpoint"));
+        // Explicit knobs parse and survive TOML export.
+        let s = ScenarioSpec::parse_str(
+            "name = \"opt\"\n[study]\nkind = \"optimize\"\n\
+             deadline_s = 30\ncheckpoint = \"/tmp/ck.json\"\n\
+             checkpoint_every_s = 0\n",
+        )
+        .unwrap();
+        match &s.study {
+            Study::Optimize {
+                deadline_s,
+                checkpoint,
+                checkpoint_every_s,
+                ..
+            } => {
+                assert_eq!(*deadline_s, Some(30.0));
+                assert_eq!(checkpoint.as_deref(), Some("/tmp/ck.json"));
+                assert_eq!(*checkpoint_every_s, Some(0.0));
+            }
+            other => panic!("{other:?}"),
+        }
+        let back = ScenarioSpec::parse_str(&s.to_toml().unwrap()).unwrap();
+        assert_eq!(s, back);
+        // Negative budgets and an interval without a checkpoint path
+        // are rejected.
+        assert!(ScenarioSpec::parse_str(
+            "name = \"x\"\n[study]\nkind = \"optimize\"\ndeadline_s = -1\n"
+        )
+        .is_err());
+        assert!(ScenarioSpec::parse_str(
+            "name = \"x\"\n[study]\nkind = \"optimize\"\n\
+             checkpoint_every_s = 5\n"
+        )
+        .is_err());
+        // Resilience sweeps accept a deadline too.
+        let r = ScenarioSpec::parse_str(
+            "name = \"r\"\n[study]\nkind = \"resilience\"\n\
+             mtbf_hours = [500]\ndeadline_s = 10\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            r.study,
+            Study::Resilience {
+                deadline_s: Some(d),
+                ..
+            } if d == 10.0
+        ));
+        let back = ScenarioSpec::parse_str(&r.to_toml().unwrap()).unwrap();
+        assert_eq!(r, back);
     }
 
     #[test]

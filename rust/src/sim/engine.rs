@@ -744,6 +744,13 @@ pub struct GoodputSim {
     /// The full event trace (failure/restart/checkpoint), in time order;
     /// identical across runs for the same seed.
     pub trace: Vec<FaultEvent>,
+    /// `true` when the renewal loop hit [`MAX_FAULT_EVENTS`] before
+    /// committing the full horizon: the model predicts essentially no
+    /// forward progress (MTBF below the restart + checkpoint cycle), and
+    /// `efficiency`/`wall_s` describe only the simulated prefix. Callers
+    /// rendering results must surface this instead of presenting the
+    /// truncated numbers as a completed horizon.
+    pub truncated: bool,
 }
 
 /// Run the DES with straggler and link-degradation service rates
@@ -794,6 +801,29 @@ pub fn simulate_goodput(
     n_nodes: usize,
     horizon_steps: usize,
 ) -> GoodputSim {
+    simulate_goodput_controlled(
+        inputs,
+        fault,
+        n_nodes,
+        horizon_steps,
+        &crate::util::cancel::RunControl::unbounded(),
+    )
+    .expect("unbounded goodput simulation cannot be stopped")
+}
+
+/// [`simulate_goodput`] with a cooperative stop source polled every
+/// renewal-loop event (failures arrive thousands-per-horizon under
+/// pessimistic fault models, so the loop is a long-running path in its
+/// own right). A stop surfaces as [`crate::error::Error::Cancelled`] /
+/// [`crate::error::Error::Deadline`] — the renewal trace has no useful
+/// partial interpretation.
+pub fn simulate_goodput_controlled(
+    inputs: &ModelInputs,
+    fault: &crate::resilience::FaultModel,
+    n_nodes: usize,
+    horizon_steps: usize,
+    control: &crate::util::cancel::RunControl,
+) -> crate::error::Result<GoodputSim> {
     use crate::analytical::goodput;
     use crate::resilience::checkpoint_bandwidth;
     use crate::util::prng::Rng;
@@ -833,6 +863,7 @@ pub fn simulate_goodput(
     // A failure striking before that milestone — including mid-write —
     // loses the whole uncommitted segment and charges the restart.
     while committed < horizon_s && trace.len() < MAX_FAULT_EVENTS {
+        control.check("goodput renewal simulation")?;
         let to_ckpt = if tau.is_finite() { tau } else { f64::INFINITY };
         let to_done = horizon_s - committed;
         let work = to_ckpt.min(to_done);
@@ -878,7 +909,12 @@ pub fn simulate_goodput(
     } else {
         1.0
     };
-    GoodputSim {
+    // An event-budget exhaustion is a modeling signal, not a rounding
+    // artifact: surface it explicitly so downstream consumers (scenario
+    // tables, goodput scoring) never mistake a truncated prefix for the
+    // full horizon.
+    let truncated = committed < horizon_s && trace.len() >= MAX_FAULT_EVENTS;
+    Ok(GoodputSim {
         ideal_step_s,
         step_s,
         efficiency,
@@ -886,7 +922,8 @@ pub fn simulate_goodput(
         failures,
         checkpoints,
         trace,
-    }
+        truncated,
+    })
 }
 
 #[cfg(test)]
@@ -1200,6 +1237,49 @@ mod tests {
         other.seed = 7;
         let d = simulate_goodput(&inp, &other, 1024, steps);
         assert_ne!(a.trace, d.trace);
+    }
+
+    #[test]
+    fn goodput_sim_truncation_is_surfaced_not_silent() {
+        let inp = inputs(8, 128);
+        // MTBF orders of magnitude below the restart cycle: the model
+        // predicts essentially no forward progress, so the renewal loop
+        // must exhaust its event budget — and say so.
+        let mut fault = crate::resilience::FaultModel::default_faults();
+        fault.mtbf_node_hours = 1e-9;
+        fault.restart_s = 10.0;
+        let des = simulate_goodput(&inp, &fault, 1024, 50);
+        assert!(des.truncated, "expected event-budget truncation");
+        assert!(
+            des.trace.len() >= MAX_FAULT_EVENTS - 1,
+            "trace should be at the budget, got {}",
+            des.trace.len()
+        );
+        // A healthy model completes its horizon untruncated.
+        let ok = simulate_goodput(
+            &inp,
+            &crate::resilience::FaultModel::none(),
+            1024,
+            10,
+        );
+        assert!(!ok.truncated);
+    }
+
+    #[test]
+    fn goodput_sim_stops_cooperatively_mid_renewal_loop() {
+        use crate::util::cancel::RunControl;
+        let inp = inputs(8, 128);
+        let mut fault = crate::resilience::FaultModel::default_faults();
+        fault.mtbf_node_hours = 1e-9;
+        fault.restart_s = 10.0;
+        let control = RunControl::unbounded().cancel_after_polls(10);
+        let err =
+            simulate_goodput_controlled(&inp, &fault, 1024, 50, &control)
+                .unwrap_err();
+        assert!(
+            matches!(err, crate::error::Error::Cancelled(_)),
+            "{err}"
+        );
     }
 
     #[test]

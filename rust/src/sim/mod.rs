@@ -6,7 +6,8 @@ pub mod event;
 pub mod link;
 
 pub use engine::{
-    simulate, simulate_faulty, simulate_goodput, FaultEvent, FaultEventKind,
-    GoodputSim, SimResult, SimStats,
+    simulate, simulate_faulty, simulate_goodput,
+    simulate_goodput_controlled, FaultEvent, FaultEventKind, GoodputSim,
+    SimResult, SimStats,
 };
 pub use link::TierLinks;

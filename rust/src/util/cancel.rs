@@ -1,0 +1,372 @@
+//! Cooperative cancellation and deadlines for long-running paths.
+//!
+//! Every driver that can run for minutes (the branch-and-bound search,
+//! batched coordinator evaluation, the goodput renewal simulation)
+//! accepts a [`RunControl`] and polls [`RunControl::should_stop`] at its
+//! safe boundaries: sequential-pop iterations, parallel batch-collection
+//! boundaries, and fault-event steps. Polling is cheap — one relaxed
+//! atomic load plus (when a deadline is armed and the poll stride says
+//! so) one monotonic-clock read — so drivers can poll every iteration
+//! without measurable overhead.
+//!
+//! Stopping is *cooperative*: a set token never interrupts a leaf
+//! evaluation mid-flight, it only prevents the next unit of work from
+//! starting. That is what makes checkpoint/resume deterministic — the
+//! run always halts at a state the sequential driver could also have
+//! been in (see `optimizer::checkpoint`).
+//!
+//! The module also hosts the process-wide SIGINT hookup used by
+//! `main.rs`: a signal handler (installed via a direct `signal(2)` FFI
+//! declaration — the offline crate set has no `libc`) that trips a
+//! global flag, which [`install_sigint_token`] bridges onto an ordinary
+//! [`CancelToken`]. A second Ctrl-C restores the default disposition and
+//! kills the process the usual way.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a run stopped early. Ordered by precedence: explicit cancellation
+/// wins over a deadline when both trip in the same poll.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The [`CancelToken`] was set (Ctrl-C, a dropped client, an
+    /// explicit test hook).
+    Cancelled,
+    /// The monotonic [`Deadline`] passed.
+    DeadlineExceeded,
+}
+
+impl StopReason {
+    /// Short lower-case label (used in notes, checkpoints, stderr).
+    pub fn label(&self) -> &'static str {
+        match self {
+            StopReason::Cancelled => "cancelled",
+            StopReason::DeadlineExceeded => "deadline",
+        }
+    }
+}
+
+/// Clone-cheap cooperative cancellation flag shared between the
+/// requesting side (signal handler, server, test) and the running side.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// Fresh, unset token.
+    pub fn new() -> Self {
+        CancelToken {
+            flag: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Request cancellation. Idempotent; visible to all clones.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Has cancellation been requested?
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+/// A monotonic wall-clock budget. Constructed once at run start;
+/// [`Deadline::exceeded`] compares against `Instant::now()`.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// Deadline `budget` from now.
+    pub fn after(budget: Duration) -> Self {
+        Deadline {
+            at: Instant::now() + budget,
+        }
+    }
+
+    /// Deadline `secs` seconds from now.
+    pub fn after_secs(secs: f64) -> Self {
+        Deadline::after(Duration::from_secs_f64(secs.max(0.0)))
+    }
+
+    /// Has the deadline passed?
+    pub fn exceeded(&self) -> bool {
+        Instant::now() >= self.at
+    }
+
+    /// Time left (zero once exceeded).
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(Instant::now())
+    }
+}
+
+/// Everything a driver needs to decide "keep going?": an optional
+/// cancellation token, an optional deadline, and an optional
+/// deterministic poll-count trip wire (tests cancel "after exactly N
+/// safe-boundary polls" so resume properties never depend on timing).
+#[derive(Debug, Clone, Default)]
+pub struct RunControl {
+    token: Option<CancelToken>,
+    deadline: Option<Deadline>,
+    /// Trip as Cancelled once `polls` reaches this count.
+    cancel_at_poll: Option<u64>,
+    polls: Arc<AtomicU64>,
+}
+
+impl RunControl {
+    /// A control that never stops — the default for plain library calls.
+    pub fn unbounded() -> Self {
+        RunControl::default()
+    }
+
+    /// True when no stop source is armed; drivers may skip polling work.
+    pub fn is_unbounded(&self) -> bool {
+        self.token.is_none()
+            && self.deadline.is_none()
+            && self.cancel_at_poll.is_none()
+    }
+
+    /// Attach a cancellation token.
+    pub fn with_token(mut self, token: CancelToken) -> Self {
+        self.token = Some(token);
+        self
+    }
+
+    /// Attach a deadline.
+    pub fn with_deadline(mut self, deadline: Deadline) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Deterministic test hook: report Cancelled on the `n`-th poll
+    /// (0-based: `cancel_after_polls(0)` trips on the first poll).
+    pub fn cancel_after_polls(mut self, n: u64) -> Self {
+        self.cancel_at_poll = Some(n);
+        self
+    }
+
+    /// Poll at a safe boundary. Returns the stop reason, if any.
+    /// Cancellation takes precedence over the deadline. Cost: one
+    /// relaxed atomic (when the poll-count hook is armed), one acquire
+    /// load (when a token is attached), one monotonic clock read (when
+    /// a deadline is armed) — nothing when unbounded.
+    pub fn should_stop(&self) -> Option<StopReason> {
+        if let Some(n) = self.cancel_at_poll {
+            // The counter is shared across clones so parallel drivers
+            // that poll from one logical loop still count globally.
+            let seen = self.polls.fetch_add(1, Ordering::Relaxed);
+            if seen >= n {
+                return Some(StopReason::Cancelled);
+            }
+        }
+        if let Some(t) = &self.token {
+            if t.is_cancelled() {
+                return Some(StopReason::Cancelled);
+            }
+        }
+        if let Some(d) = &self.deadline {
+            if d.exceeded() {
+                return Some(StopReason::DeadlineExceeded);
+            }
+        }
+        None
+    }
+
+    /// Remaining deadline budget, when a deadline is armed. Batch fan-
+    /// out paths use this to arm a watchdog sized to the budget, so a
+    /// stuck batch turns into a deadline error instead of a hang.
+    pub fn deadline_remaining(&self) -> Option<Duration> {
+        self.deadline.map(|d| d.remaining())
+    }
+
+    /// Poll, converting a stop into an error (for paths without a
+    /// partial-result channel, e.g. coordinator batch evaluation).
+    pub fn check(&self, what: &str) -> crate::error::Result<()> {
+        match self.should_stop() {
+            None => Ok(()),
+            Some(StopReason::Cancelled) => {
+                Err(crate::error::Error::Cancelled(what.to_string()))
+            }
+            Some(StopReason::DeadlineExceeded) => {
+                Err(crate::error::Error::Deadline(what.to_string()))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SIGINT -> CancelToken bridge (no libc crate in the offline set).
+// ---------------------------------------------------------------------
+
+/// Process-global flag the signal handler is allowed to touch
+/// (async-signal-safe: a single atomic store).
+static SIGINT_TRIPPED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sys {
+    use super::SIGINT_TRIPPED;
+    use std::sync::atomic::Ordering;
+
+    pub const SIGINT: i32 = 2;
+    pub const SIG_DFL: usize = 0;
+
+    extern "C" {
+        /// `signal(2)` from the platform C library; the offline crate
+        /// set has no `libc`, so the symbol is declared directly.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_sigint(_sig: i32) {
+        SIGINT_TRIPPED.store(true, Ordering::Release);
+        // Restore the default disposition so a second Ctrl-C kills the
+        // process immediately instead of being swallowed.
+        unsafe {
+            signal(SIGINT, SIG_DFL);
+        }
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    pub fn install() {}
+}
+
+/// Install (idempotently) a SIGINT handler that trips a global flag and
+/// return a [`CancelToken`] wired to it via a lightweight watcher
+/// thread. The first Ctrl-C cancels cooperatively; the second one kills
+/// the process (default disposition is restored inside the handler).
+pub fn install_sigint_token() -> CancelToken {
+    sys::install();
+    let token = CancelToken::new();
+    let watcher = token.clone();
+    // Detached watcher: polls the signal flag at 50ms. The process
+    // exits through main() long before thread teardown matters.
+    std::thread::Builder::new()
+        .name("comet-sigint".into())
+        .spawn(move || loop {
+            if SIGINT_TRIPPED.load(Ordering::Acquire) {
+                watcher.cancel();
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        })
+        .expect("spawn sigint watcher");
+    token
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_cancels_across_clones() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(!t.is_cancelled());
+        u.cancel();
+        assert!(t.is_cancelled());
+        // Idempotent.
+        u.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn unbounded_control_never_stops() {
+        let c = RunControl::unbounded();
+        assert!(c.is_unbounded());
+        for _ in 0..1000 {
+            assert_eq!(c.should_stop(), None);
+        }
+        assert!(c.check("noop").is_ok());
+    }
+
+    #[test]
+    fn token_stop_maps_to_cancelled() {
+        let t = CancelToken::new();
+        let c = RunControl::unbounded().with_token(t.clone());
+        assert!(!c.is_unbounded());
+        assert_eq!(c.should_stop(), None);
+        t.cancel();
+        assert_eq!(c.should_stop(), Some(StopReason::Cancelled));
+        assert!(matches!(
+            c.check("search"),
+            Err(crate::error::Error::Cancelled(_))
+        ));
+    }
+
+    #[test]
+    fn zero_deadline_trips_on_first_poll() {
+        let c = RunControl::unbounded()
+            .with_deadline(Deadline::after(Duration::from_secs(0)));
+        assert_eq!(c.should_stop(), Some(StopReason::DeadlineExceeded));
+        assert!(matches!(
+            c.check("search"),
+            Err(crate::error::Error::Deadline(_))
+        ));
+    }
+
+    #[test]
+    fn generous_deadline_does_not_trip() {
+        let c = RunControl::unbounded()
+            .with_deadline(Deadline::after(Duration::from_secs(3600)));
+        for _ in 0..100 {
+            assert_eq!(c.should_stop(), None);
+        }
+        assert!(c.should_stop().is_none());
+    }
+
+    #[test]
+    fn cancel_after_polls_is_deterministic() {
+        let c = RunControl::unbounded().cancel_after_polls(3);
+        assert_eq!(c.should_stop(), None); // poll 0
+        assert_eq!(c.should_stop(), None); // poll 1
+        assert_eq!(c.should_stop(), None); // poll 2
+        assert_eq!(c.should_stop(), Some(StopReason::Cancelled)); // poll 3
+        // Stays stopped.
+        assert_eq!(c.should_stop(), Some(StopReason::Cancelled));
+    }
+
+    #[test]
+    fn poll_counter_is_shared_across_clones() {
+        let c = RunControl::unbounded().cancel_after_polls(2);
+        let d = c.clone();
+        assert_eq!(c.should_stop(), None); // poll 0
+        assert_eq!(d.should_stop(), None); // poll 1
+        assert_eq!(c.should_stop(), Some(StopReason::Cancelled)); // poll 2
+    }
+
+    #[test]
+    fn cancellation_outranks_deadline() {
+        let t = CancelToken::new();
+        t.cancel();
+        let c = RunControl::unbounded()
+            .with_token(t)
+            .with_deadline(Deadline::after(Duration::from_secs(0)));
+        assert_eq!(c.should_stop(), Some(StopReason::Cancelled));
+    }
+
+    #[test]
+    fn deadline_remaining_saturates() {
+        let d = Deadline::after_secs(0.0);
+        assert!(d.exceeded());
+        assert_eq!(d.remaining(), Duration::ZERO);
+        let d = Deadline::after_secs(-5.0);
+        assert!(d.exceeded());
+    }
+
+    #[test]
+    fn stop_reason_labels() {
+        assert_eq!(StopReason::Cancelled.label(), "cancelled");
+        assert_eq!(StopReason::DeadlineExceeded.label(), "deadline");
+    }
+}

@@ -4,6 +4,7 @@
 //! statistics, and the micro-benchmark harness used by `cargo bench`.
 
 pub mod bench;
+pub mod cancel;
 pub mod json;
 pub mod prng;
 pub mod stats;

@@ -393,6 +393,119 @@ fn malformed_scenario_file_fails_cleanly_without_panic() {
     assert!(!stderr.contains("backtrace"), "{stderr}");
 }
 
+/// Like [`comet`], but returns the raw exit code and lets the caller set
+/// environment variables on the child process only (never on the test
+/// process — libtest runs tests concurrently in one process).
+fn comet_code(
+    args: &[&str],
+    env: &[(&str, &str)],
+) -> (Option<i32>, String, String) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_comet"));
+    cmd.args(args);
+    for (k, v) in env {
+        cmd.env(k, v);
+    }
+    let out = cmd.output().expect("spawn comet");
+    (
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn exit_codes_distinguish_failure_classes() {
+    // 0 = success.
+    let (code, _, _) = comet_code(&["config", "list"], &[]);
+    assert_eq!(code, Some(0));
+    // 3 = configuration / input error.
+    let (code, _, stderr) = comet_code(&["sweep", "--cluster", "Z9"], &[]);
+    assert_eq!(code, Some(3), "{stderr}");
+    let (code, _, stderr) =
+        comet_code(&["optimize", "--deadline", "nope"], &[]);
+    assert_eq!(code, Some(3), "{stderr}");
+    assert!(stderr.contains("--deadline"), "{stderr}");
+    let (code, _, stderr) = comet_code(
+        &["optimize", "optimize-transformer", "--checkpoint-every", "5"],
+        &[],
+    );
+    assert_eq!(code, Some(3), "{stderr}");
+    assert!(stderr.contains("checkpoint"), "{stderr}");
+}
+
+#[test]
+fn deadline_partial_checkpoint_then_resume_matches_uninterrupted() {
+    // `--deadline 0` stops at the first safe boundary: exit 2 signals a
+    // partial result and the checkpoint is flushed before exit.
+    let dir = std::env::temp_dir().join("comet_cli_resume");
+    let _ = std::fs::create_dir_all(&dir);
+    let ck = dir.join("ck.json");
+    let _ = std::fs::remove_file(&ck);
+    let ck_s = ck.to_str().unwrap().to_owned();
+    let (code, _, stderr) = comet_code(
+        &[
+            "optimize",
+            "optimize-transformer",
+            "--deadline",
+            "0",
+            "--checkpoint",
+            &ck_s,
+            "--json",
+        ],
+        &[],
+    );
+    assert_eq!(code, Some(2), "stderr:\n{stderr}");
+    assert!(stderr.contains("PARTIAL"), "{stderr}");
+    assert!(ck.exists(), "checkpoint must be flushed on deadline");
+    // Resuming runs the search to completion, and the completed JSON is
+    // byte-identical to a run that was never interrupted.
+    let (code, resumed, stderr) = comet_code(
+        &[
+            "optimize",
+            "optimize-transformer",
+            "--resume",
+            &ck_s,
+            "--json",
+        ],
+        &[],
+    );
+    assert_eq!(code, Some(0), "stderr:\n{stderr}");
+    let (code, oracle, stderr) =
+        comet_code(&["optimize", "optimize-transformer", "--json"], &[]);
+    assert_eq!(code, Some(0), "stderr:\n{stderr}");
+    assert_eq!(resumed, oracle, "resume changed the optimize output");
+    let _ = std::fs::remove_file(&ck);
+}
+
+#[test]
+fn injected_worker_panic_is_isolated_and_exits_internal_error() {
+    // COMET_PANIC_LEAF makes one lattice-point evaluation panic inside
+    // the worker pool. The pool must capture it as a structured job
+    // error — one clean line on stderr, exit code 4, no panic spew.
+    // top_k covers the whole lattice so leaf 0 is always evaluated.
+    let (code, _, stderr) = comet_code(
+        &[
+            "optimize",
+            "--workload",
+            "transformer-100m",
+            "--cluster",
+            "dgx-a100-64",
+            "--max-mp",
+            "8",
+            "--top-k",
+            "100",
+            "--infinite-memory",
+            "--threads",
+            "2",
+        ],
+        &[("COMET_PANIC_LEAF", "0")],
+    );
+    assert_eq!(code, Some(4), "{stderr}");
+    assert!(stderr.contains("job"), "{stderr}");
+    assert!(stderr.contains("injected leaf panic"), "{stderr}");
+    assert!(!stderr.contains("backtrace"), "{stderr}");
+}
+
 #[test]
 fn validate_passes() {
     let (ok, stdout, stderr) = comet(&["validate"]);

@@ -10,11 +10,12 @@ use comet::model::inputs::{decompose, derive_inputs, resolve_inputs, EvalOptions
 use comet::network::{
     collective_cost, collective_cost_tiered, CollectiveImpl, CollectiveSpec,
 };
-use comet::optimizer::Outcome;
+use comet::optimizer::{checkpoint::Checkpoint, Outcome, SearchExec};
 use comet::parallel::{model_state_bytes, PipeSchedule, Strategy, ZeroStage};
 use comet::resilience::{checkpoint_bandwidth, FaultModel};
 use comet::scenario::{optimizer_for, ScenarioSpec};
 use comet::sim::{simulate, simulate_goodput, TierLinks};
+use comet::util::cancel::RunControl;
 use comet::util::prng::Rng;
 use comet::util::stats::rel_diff;
 use comet::workload::dlrm::Dlrm;
@@ -768,6 +769,89 @@ fn parallel_search_matches_sequential_and_exhaustive_random_lattices() {
                 c.lower_bound,
                 c.total()
             );
+        }
+    }
+}
+
+#[test]
+fn cancel_checkpoint_resume_bit_identical_random_lattices() {
+    // The execution-robustness headline guarantee, randomized: cancel a
+    // search at an arbitrary safe boundary, flush the checkpoint,
+    // resume (repeatedly — each hop may be cancelled again), and the
+    // final Outcome must be bit-identical — argmin, top-k, frontier,
+    // AND the evaluated/pruned/infeasible/remaining counters — to an
+    // uninterrupted run, at every thread count. Every partial hop must
+    // also keep the partial counter partition exact.
+    let mut rng = Rng::new(6464);
+    let coord = Coordinator::native().with_threads(8);
+    let dir = std::env::temp_dir();
+    for case in 0..6 {
+        let max_pp = *rng.choose(&[1usize, 2, 4]);
+        let min_mp = *rng.choose(&[1usize, 2]);
+        let max_mp = *rng.choose(&[4usize, 8]);
+        let top_k = 1 + rng.below(4);
+        let mut doc = format!(
+            "name = \"resume-rand-{case}\"\n\
+             [workload]\nkind = \"transformer\"\npreset = \"transformer-100m\"\n\
+             [cluster]\npreset = \"dgx-a100-64\"\n\
+             [study]\nkind = \"optimize\"\nmin_mp = {min_mp}\n\
+             max_mp = {max_mp}\nmax_pp = {max_pp}\ntop_k = {top_k}\n"
+        );
+        if rng.f64() < 0.7 {
+            doc.push_str("em_bandwidths_gbps = [500, 2039]\n");
+        }
+        if rng.f64() < 0.5 {
+            doc.push_str("collectives = [\"ring\", \"hierarchical\"]\n");
+        }
+        if rng.f64() < 0.5 {
+            doc.push_str("[options]\ninfinite_memory = true\n");
+        }
+        let spec = ScenarioSpec::parse_str(&doc).unwrap();
+        let opt = optimizer_for(&spec, &coord).unwrap();
+        let oracle = opt.search_sequential().unwrap();
+        assert!(
+            oracle.complete && oracle.remaining == 0 && oracle.stop.is_none(),
+            "case {case}: oracle not complete"
+        );
+        for threads in [1usize, 2, 8] {
+            let path = dir.join(format!(
+                "comet-prop-ck-{}-{case}-{threads}.json",
+                std::process::id()
+            ));
+            let mut resume: Option<Checkpoint> = None;
+            let mut hops = 0usize;
+            let out = loop {
+                hops += 1;
+                // >= 1 poll per hop guarantees progress, so the chain
+                // terminates; 200 hops is far beyond any lattice here.
+                assert!(hops <= 200, "case {case} t{threads}: no progress");
+                let polls = 1 + rng.below(9) as u64;
+                let mut exec = SearchExec::default()
+                    .with_control(
+                        RunControl::unbounded().cancel_after_polls(polls),
+                    )
+                    .with_checkpoint(path.clone());
+                if let Some(ck) = resume.take() {
+                    exec = exec.with_resume(ck);
+                }
+                let out = opt.search_parallel_with(threads, &exec).unwrap();
+                if out.complete {
+                    break out;
+                }
+                assert!(out.stop.is_some(), "case {case} t{threads}");
+                assert_eq!(out.pruned, 0, "case {case} t{threads}");
+                assert_eq!(
+                    out.evaluated + out.infeasible + out.remaining,
+                    out.total_points,
+                    "case {case} t{threads}: partial partition"
+                );
+                resume = Some(Checkpoint::load(&path).unwrap());
+            };
+            oracle.assert_bit_identical(
+                &out,
+                &format!("case {case} t{threads} hops={hops}"),
+            );
+            let _ = std::fs::remove_file(&path);
         }
     }
 }
