@@ -1,0 +1,131 @@
+//! Deterministic DES trace emitter for the CI queue byte-diff.
+//!
+//! Runs a 2D (dp-dominated) sim, a fig9-scale pp > 1 pipeline sim, and a
+//! checkpoint-restart goodput renewal on one of the two schedulers and
+//! prints every result — full breakdowns, event counters, and the entire
+//! goodput fault trace — with `{:.17e}` (round-trip exact for f64). CI
+//! runs it twice and byte-diffs the outputs:
+//!
+//! ```sh
+//! COMET_DES_QUEUE=heap     cargo run --release --example des_trace > a
+//! COMET_DES_QUEUE=calendar cargo run --release --example des_trace > b
+//! diff a b   # any byte of divergence fails the build
+//! ```
+//!
+//! `heap` selects the retained `BinaryHeap` oracle queue, `calendar`
+//! (the default) the production calendar queue; both drive the same
+//! generic engine core, so the diff pins the scheduler swap end to end.
+
+use comet::analytical::TrainingBreakdown;
+use comet::config::presets;
+use comet::model::inputs::{derive_inputs, EvalOptions, ModelInputs};
+use comet::parallel::Strategy;
+use comet::resilience::FaultModel;
+use comet::sim::{
+    simulate, simulate_goodput, simulate_goodput_oracle, simulate_oracle,
+    FaultEventKind, SimResult,
+};
+use comet::workload::transformer::Transformer;
+
+fn print_breakdown(tag: &str, b: &TrainingBreakdown) {
+    println!("{tag}.fp_compute       {:.17e}", b.fp_compute);
+    println!("{tag}.fp_exposed_comm  {:.17e}", b.fp_exposed_comm);
+    println!("{tag}.ig_compute       {:.17e}", b.ig_compute);
+    println!("{tag}.ig_exposed_comm  {:.17e}", b.ig_exposed_comm);
+    println!("{tag}.wg_compute       {:.17e}", b.wg_compute);
+    println!("{tag}.wg_exposed_comm  {:.17e}", b.wg_exposed_comm);
+    println!("{tag}.bubble           {:.17e}", b.bubble);
+    println!("{tag}.pp_exposed_comm  {:.17e}", b.pp_exposed_comm);
+    println!("{tag}.total            {:.17e}", b.total());
+}
+
+fn print_result(tag: &str, r: &SimResult) {
+    print_breakdown(tag, &r.breakdown);
+    println!("{tag}.events           {}", r.stats.events);
+    println!("{tag}.peak_events      {}", r.stats.peak_events);
+    println!("{tag}.util_intra       {:.17e}", r.stats.util_intra);
+    println!("{tag}.util_inter       {:.17e}", r.stats.util_inter);
+}
+
+fn main() -> comet::Result<()> {
+    let queue = std::env::var("COMET_DES_QUEUE")
+        .unwrap_or_else(|_| "calendar".to_string());
+    let heap = match queue.as_str() {
+        "heap" => true,
+        "calendar" => false,
+        other => {
+            return Err(comet::Error::Config(format!(
+                "COMET_DES_QUEUE: unknown queue '{other}' (heap|calendar)"
+            )))
+        }
+    };
+    // The queue name is deliberately NOT printed: the two outputs must
+    // be byte-identical, including this header.
+    println!("des_trace v1");
+
+    let cluster = presets::dgx_a100_1024();
+    let sim = |inp: &ModelInputs| {
+        if heap {
+            simulate_oracle(inp)
+        } else {
+            simulate(inp)
+        }
+    };
+
+    // 2D dp-dominated config (Fig. 8a's optimum): the WG-overlap path
+    // that actually exercises the event queue.
+    let flat = derive_inputs(
+        &Transformer::t1().build(&Strategy::new(8, 128)?)?,
+        &cluster,
+        &EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        },
+    )?;
+    print_result("flat_mp8_dp128", &sim(&flat));
+
+    // Fig. 9-scale pp > 1 pipeline config (1f1b, 8 microbatches).
+    let pipe = derive_inputs(
+        &Transformer::t1().build(&Strategy::new_3d(8, 32, 4)?)?,
+        &cluster,
+        &EvalOptions {
+            ignore_capacity: true,
+            microbatches: 8,
+            ..Default::default()
+        },
+    )?;
+    print_result("pipe_mp8_dp32_pp4", &sim(&pipe));
+
+    // Goodput renewal with a converging geometry: MTBF ~ 200 steps,
+    // restart 5 steps, 2k-step horizon — enough failures, checkpoints,
+    // and restarts to exercise the whole trace machinery.
+    let step = sim(&flat).breakdown.total();
+    let n = cluster.n_nodes;
+    let mut fault = FaultModel::none();
+    fault.mtbf_node_hours = 200.0 * step * n as f64 / 3600.0;
+    fault.restart_s = 5.0 * step;
+    fault.straggler_frac = 0.02;
+    fault.straggler_slowdown = 1.5;
+    fault.seed = 7;
+    let g = if heap {
+        simulate_goodput_oracle(&flat, &fault, n, 2_000)
+    } else {
+        simulate_goodput(&flat, &fault, n, 2_000)
+    };
+    println!("goodput.ideal_step_s  {:.17e}", g.ideal_step_s);
+    println!("goodput.step_s        {:.17e}", g.step_s);
+    println!("goodput.efficiency    {:.17e}", g.efficiency);
+    println!("goodput.wall_s        {:.17e}", g.wall_s);
+    println!("goodput.failures      {}", g.failures);
+    println!("goodput.checkpoints   {}", g.checkpoints);
+    println!("goodput.truncated     {}", g.truncated);
+    for (i, ev) in g.trace.iter().enumerate() {
+        let kind = match ev.kind {
+            FaultEventKind::Failure { node } => format!("failure node={node}"),
+            FaultEventKind::Restart => "restart".to_string(),
+            FaultEventKind::Checkpoint => "checkpoint".to_string(),
+        };
+        println!("goodput.trace[{i}]  {:.17e}  {kind}", ev.at_s);
+    }
+    Ok(())
+}

@@ -7,8 +7,13 @@
 //! evaluation.
 use std::time::Instant;
 
+use comet::config::presets;
 use comet::coordinator::{sweep, Coordinator};
+use comet::model::inputs::{derive_inputs, EvalOptions};
+use comet::parallel::Strategy;
+use comet::sim::{simulate, simulate_with, SimScratch};
 use comet::util::bench::{black_box, Bencher};
+use comet::workload::transformer::Transformer;
 
 fn main() {
     let t0 = Instant::now();
@@ -45,6 +50,43 @@ fn main() {
     let (dhits, dmisses) = coord.derive_cache_stats();
     b.metric("dse/warm_derive_cache_hits", dhits as f64);
     b.metric("dse/warm_decompositions", dmisses as f64);
+
+    // DES raw-throughput metrics on the fig9-scale pp > 1 point (the
+    // ≥5x events/sec acceptance target vs the pre-calendar-queue
+    // baseline lives in BENCHMARKS.md).
+    let cluster = presets::dgx_a100_1024();
+    let pipe = derive_inputs(
+        &Transformer::t1()
+            .build(&Strategy::new_3d(8, 32, 4).unwrap())
+            .unwrap(),
+        &cluster,
+        &EvalOptions {
+            ignore_capacity: true,
+            microbatches: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let events = simulate(&pipe).stats.events;
+    let mut scratch = SimScratch::new();
+    let mean_s = b
+        .bench("des/simulate_fig9_pp4_config", || {
+            black_box(simulate_with(black_box(&pipe), &mut scratch));
+        })
+        .summary
+        .mean;
+    b.metric("des_events_per_sec", events as f64 / mean_s.max(1e-12));
+    // Peak pending events come from a 2D (dp-dominated) sim: the pp > 1
+    // path precomputes its event order and never queues.
+    let flat = derive_inputs(
+        &Transformer::t1()
+            .build(&Strategy::new(8, 128).unwrap())
+            .unwrap(),
+        &cluster,
+        &EvalOptions { ignore_capacity: true, ..Default::default() },
+    )
+    .unwrap();
+    b.metric("des_peak_events", simulate(&flat).stats.peak_events as f64);
     b.report("bench_dse_speed");
 
     // Trajectory point: `cargo bench` runs with the package root (rust/)

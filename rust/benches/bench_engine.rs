@@ -6,7 +6,7 @@ use comet::model::batch::{pack, stack};
 use comet::model::inputs::{derive_inputs, EvalOptions};
 use comet::parallel::Strategy;
 use comet::runtime::{BatchEvaluator, Runtime};
-use comet::sim::simulate;
+use comet::sim::{simulate, simulate_oracle, simulate_with, SimScratch};
 use comet::util::bench::{black_box, Bencher};
 use comet::workload::transformer::Transformer;
 
@@ -21,6 +21,19 @@ fn main() {
         &opts,
     )
     .unwrap();
+    // Fig. 9-scale pipeline point (pp > 1): the --cross-check workload.
+    let pipe = derive_inputs(
+        &Transformer::t1()
+            .build(&Strategy::new_3d(8, 32, 4).unwrap())
+            .unwrap(),
+        &cluster,
+        &EvalOptions {
+            ignore_capacity: true,
+            microbatches: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
     let batch: Vec<_> = (0..64).map(|_| inp.clone()).collect();
 
     let mut b = Bencher::new();
@@ -29,6 +42,18 @@ fn main() {
     });
     b.bench("des/simulate_1_config", || {
         black_box(simulate(black_box(&inp)));
+    });
+    // Retained heap-queue oracle (fresh scratch each run) — the baseline
+    // the calendar-queue speedup in BENCHMARKS.md is measured against.
+    b.bench("des/simulate_1_config_oracle_heap", || {
+        black_box(simulate_oracle(black_box(&inp)));
+    });
+    let mut scratch = SimScratch::new();
+    b.bench("des/simulate_1_config_reused_scratch", || {
+        black_box(simulate_with(black_box(&inp), &mut scratch));
+    });
+    b.bench("des/simulate_fig9_pp4_config", || {
+        black_box(simulate(black_box(&pipe)));
     });
     b.bench("abi/pack_1_config", || {
         black_box(pack(black_box(&inp)).unwrap());

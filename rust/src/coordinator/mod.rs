@@ -234,6 +234,10 @@ impl Coordinator {
                 Backend::Native => {
                     self.pool_batch(owned, control, native_evaluate)?
                 }
+                // Each persistent pool worker reuses its own
+                // thread-local SimScratch across jobs (schedulers,
+                // slab, phase buffers), so a DES batch allocates only
+                // on each worker's first job.
                 Backend::Des => self.pool_batch(owned, control, |inp| {
                     simulate(inp).breakdown
                 })?,

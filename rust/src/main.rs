@@ -14,7 +14,7 @@
 //!       [--zero-stages 0,2,..] [--top-k N] [--threads N]
 //!       [--objective time|goodput] [--infinite-memory] [--json]
 //!       [--deadline SECS] [--checkpoint FILE] [--checkpoint-every SECS]
-//!       [--resume FILE]
+//!       [--resume FILE] [--cross-check des]
 //!       (SCENARIO = an optimize/pipeline builtin name or TOML path,
 //!        e.g. `comet optimize pipeline-transformer`; --threads N sets
 //!        the search's evaluation lanes — the result is bit-identical
@@ -24,7 +24,9 @@
 //!        budget expires and reports the partial best-so-far table;
 //!        SIGINT does the same; either flushes --checkpoint when set,
 //!        and --resume continues from it to a final result that is
-//!        bit-identical to an uninterrupted run at any thread count)
+//!        bit-identical to an uninterrupted run at any thread count;
+//!        --cross-check des re-simulates every top-k candidate on the
+//!        DES engine and reports the analytical/DES divergence)
 //! comet figure <fig6|fig8a|fig8b|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|all>
 //!       [--backend native|des|artifact] [--out-dir DIR] [--csv]
 //! comet sweep   [--cluster PRESET] [--backend B] [--infinite-memory]
@@ -442,6 +444,17 @@ fn cmd_optimize(args: &Args) -> Result<ExitCode> {
         None => None,
         Some(v) => Some(Objective::parse(v)?),
     };
+    // --cross-check des: after the search, re-simulate every top-k
+    // candidate on the DES engine and report the analytical/DES
+    // divergence. Validated up front so a typo fails before the search.
+    match args.flag("cross-check") {
+        None | Some("des") => {}
+        Some(other) => {
+            return Err(Error::Config(format!(
+                "--cross-check: unknown mode '{other}' (supported: des)"
+            )))
+        }
+    }
     // Execution-robustness flags: a wall-clock budget, a checkpoint to
     // flush resumable search state to, and a checkpoint to resume from.
     // SIGINT cancels cooperatively at the next safe boundary — the
@@ -490,7 +503,7 @@ fn cmd_optimize(args: &Args) -> Result<ExitCode> {
             (None, _) => {}
         }
         let (fig, out) = scenario::run_optimize_exec(&spec, &coord, &exec)?;
-        return finish_optimize(args, &coord, &fig, &out);
+        return finish_optimize(args, &coord, &spec, &fig, &out);
     }
     let cluster = cluster_for(args)?;
     let workload = match args.flag("workload").unwrap_or("transformer-1t") {
@@ -616,7 +629,7 @@ fn cmd_optimize(args: &Args) -> Result<ExitCode> {
         output: OutputSpec::default(),
     };
     let (fig, out) = scenario::run_optimize_exec(&spec, &coord, &exec)?;
-    finish_optimize(args, &coord, &fig, &out)
+    finish_optimize(args, &coord, &spec, &fig, &out)
 }
 
 /// Emit the optimize result and map its completeness to an exit code:
@@ -624,11 +637,37 @@ fn cmd_optimize(args: &Args) -> Result<ExitCode> {
 fn finish_optimize(
     args: &Args,
     coord: &Coordinator,
+    spec: &ScenarioSpec,
     fig: &FigureData,
     out: &comet::optimizer::Outcome,
 ) -> Result<ExitCode> {
     emit_figure(fig, args)?;
     report_optimize_stats(coord, out);
+    if args.flag("cross-check") == Some("des") {
+        let rows = scenario::cross_check_des(spec, coord, out)?;
+        let mut worst = 0.0f64;
+        for r in &rows {
+            eprintln!(
+                "[comet] cross-check des: {} analytical={:.6e}s \
+                 des={:.6e}s rel_diff={:.4}",
+                r.label, r.analytical_s, r.des_s, r.rel_diff
+            );
+            worst = worst.max(r.rel_diff);
+        }
+        if worst > 0.05 {
+            eprintln!(
+                "[comet] cross-check des: WARNING — worst analytical/DES \
+                 divergence {worst:.4} exceeds 0.05; the analytical \
+                 ranking may be unreliable for this lattice"
+            );
+        } else {
+            eprintln!(
+                "[comet] cross-check des: {} candidates re-simulated, \
+                 worst rel_diff {worst:.4}",
+                rows.len()
+            );
+        }
+    }
     if let Some(stop) = &out.stop {
         eprintln!(
             "[comet] PARTIAL ({}): {} of {} lattice points unexplored; \

@@ -145,6 +145,173 @@ pub fn concurrent_phases(c: Collective) -> bool {
     matches!(c, Collective::AllToAll)
 }
 
+/// One synchronous transfer step addressed by link-class *index*: the
+/// topology tier (innermost first) for tier-annotated specs, or
+/// `{0 = intra-pod, 1 = inter-pod}` for legacy two-level specs. This is
+/// the engine's native phase type — tiered collectives run on their
+/// N-tier FIFO links directly instead of projecting onto two classes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierPhase {
+    /// Link-class index this step serializes on.
+    pub tier: usize,
+    /// Bytes each participant moves in this step.
+    pub bytes: f64,
+    /// Ring steps folded into this phase (latency hops).
+    pub hops: usize,
+}
+
+/// Class index of a legacy two-level link class.
+pub fn class_of(link: LinkClass) -> usize {
+    match link {
+        LinkClass::IntraPod => 0,
+        LinkClass::InterPod => 1,
+    }
+}
+
+/// Expand a tier-annotated collective into per-tier transfer phases,
+/// writing into `phases` (cleared first) — the k-tier generalization of
+/// [`schedule_into`], mirroring `collective_cost_tiered` pass for pass:
+/// hierarchical impls ring up the chain on the progressively reduced
+/// shard and back down; logical-ring impls serialize one flat ring at
+/// the outermost tier the group crosses; all-to-all emits one
+/// concurrent phase per tier carrying the fraction of peers first
+/// reachable there. Serially integrating the schedule on idle links
+/// reproduces the closed form (exactly for ring passes; all-to-all
+/// differs in how per-phase latency accrues, same as the legacy
+/// two-level schedule).
+pub fn schedule_tiered_into(
+    spec: &CollectiveSpec,
+    impl_: CollectiveImpl,
+    phases: &mut Vec<TierPhase>,
+) {
+    phases.clear();
+    let k = spec.n_tiers.clamp(1, crate::config::MAX_TIERS);
+    let n_us: usize = spec.tier_n[..k].iter().product();
+    let n = n_us as f64;
+    if spec.bytes <= 0.0 || n_us <= 1 {
+        return;
+    }
+    // Shard entering each tier (payload reduced by all tiers below),
+    // same recurrence as the closed form.
+    let mut shard = [0.0_f64; crate::config::MAX_TIERS];
+    let mut b = spec.bytes;
+    for t in 0..k {
+        shard[t] = b;
+        b /= (spec.tier_n[t] as f64).max(1.0);
+    }
+    let cross = (0..k).rev().find(|&t| spec.tier_n[t] > 1).unwrap_or(0);
+    // One ring pass (RS or AG) over tier t's group on its own links;
+    // `(n-1)/n * bytes` matches ring_pass's association bit-for-bit.
+    let ring = |phases: &mut Vec<TierPhase>, t: usize, bytes: f64| {
+        let nt = spec.tier_n[t];
+        if nt > 1 {
+            phases.push(TierPhase {
+                tier: t,
+                bytes: (nt as f64 - 1.0) / nt as f64 * bytes,
+                hops: nt - 1,
+            });
+        }
+    };
+    let flat = |phases: &mut Vec<TierPhase>| {
+        phases.push(TierPhase {
+            tier: cross,
+            bytes: (n - 1.0) / n * spec.bytes,
+            hops: n_us - 1,
+        });
+    };
+    match (spec.collective, impl_) {
+        (Collective::None, _) => {}
+        (Collective::AllReduce, CollectiveImpl::LogicalRing) => {
+            flat(phases);
+            flat(phases);
+        }
+        (Collective::AllReduce, CollectiveImpl::Hierarchical) => {
+            for t in 0..k - 1 {
+                ring(phases, t, shard[t]); // RS up the chain
+            }
+            ring(phases, k - 1, shard[k - 1]); // top-tier RS
+            ring(phases, k - 1, shard[k - 1]); // top-tier AG
+            for t in (0..k - 1).rev() {
+                ring(phases, t, shard[t]); // AG back down
+            }
+        }
+        (
+            Collective::AllGather | Collective::ReduceScatter,
+            CollectiveImpl::LogicalRing,
+        ) => {
+            flat(phases);
+        }
+        (
+            Collective::AllGather | Collective::ReduceScatter,
+            CollectiveImpl::Hierarchical,
+        ) => {
+            for t in 0..k {
+                ring(phases, t, shard[t]);
+            }
+        }
+        (Collective::AllToAll, _) => {
+            // Fraction of peers first reachable at each tier (remainder
+            // on the last tier), concurrent on their own links — the
+            // same split as the closed form's max().
+            let peers = (n - 1.0).max(1.0);
+            let mut within = 1.0_f64;
+            let mut within_us = 1_usize;
+            let mut below_last = 0.0;
+            for t in 0..k {
+                let prev = within;
+                let prev_us = within_us;
+                within *= spec.tier_n[t] as f64;
+                within_us *= spec.tier_n[t];
+                let f = if t == k - 1 {
+                    1.0 - below_last
+                } else if t == 0 {
+                    (within - 1.0).max(0.0) / peers
+                } else {
+                    (within - prev).max(0.0) / peers
+                };
+                below_last += f;
+                let hops = if t == 0 {
+                    within_us - 1
+                } else {
+                    within_us - prev_us
+                };
+                if f > 0.0 {
+                    phases.push(TierPhase {
+                        tier: t,
+                        bytes: spec.bytes * f,
+                        hops,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Expand any collective into class-indexed phases: tier-annotated
+/// specs go through [`schedule_tiered_into`] natively; legacy two-level
+/// specs go through [`schedule_into`] (via `legacy`, a reusable scratch
+/// buffer) and map `{IntraPod, InterPod}` onto classes `{0, 1}` — so
+/// the legacy phase list is byte-for-byte the old schedule, just
+/// re-addressed.
+pub fn schedule_classes_into(
+    spec: &CollectiveSpec,
+    impl_: CollectiveImpl,
+    out: &mut Vec<TierPhase>,
+    legacy: &mut Vec<TransferPhase>,
+) {
+    if spec.n_tiers > 0 {
+        schedule_tiered_into(spec, impl_, out);
+    } else {
+        schedule_into(spec, impl_, legacy);
+        out.clear();
+        out.extend(legacy.iter().map(|p| TierPhase {
+            tier: class_of(p.link),
+            bytes: p.bytes,
+            hops: p.hops,
+        }));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +420,110 @@ mod tests {
         assert_eq!(buf, schedule(&s2, LogicalRing));
         schedule_into(&spec(Collective::None, 1e9, 8, 8), LogicalRing, &mut buf);
         assert!(buf.is_empty());
+    }
+
+    fn integrate_tiered(
+        s: &CollectiveSpec,
+        bw: &[f64; 4],
+        lat: &[f64; 4],
+        impl_: CollectiveImpl,
+    ) -> f64 {
+        let mut phases = Vec::new();
+        schedule_tiered_into(s, impl_, &mut phases);
+        let t = |p: &TierPhase| {
+            p.bytes / bw[p.tier].max(1.0) + p.hops as f64 * lat[p.tier]
+        };
+        if concurrent_phases(s.collective) {
+            phases.iter().map(|p| t(p)).fold(0.0, f64::max)
+        } else {
+            phases.iter().map(|p| t(p)).sum()
+        }
+    }
+
+    // Serially integrating the tiered schedule on idle links must
+    // reproduce the tiered closed form — the same pin the legacy
+    // two-level schedule carries against collective_cost.
+    #[test]
+    fn tiered_schedule_matches_closed_form() {
+        use crate::network::collectives::collective_cost_tiered;
+        let bw = [300e9, 50e9, 12.5e9, 1e9];
+        let lat = [1e-7, 5e-7, 1e-6, 2e-6];
+        for impl_ in [LogicalRing, Hierarchical] {
+            for c in [
+                Collective::AllReduce,
+                Collective::AllGather,
+                Collective::ReduceScatter,
+            ] {
+                for (tier_n, k) in [
+                    ([8usize, 4, 2, 1], 3),
+                    ([8, 1, 2, 1], 3),
+                    ([2, 2, 2, 2], 4),
+                    ([1, 16, 1, 1], 2),
+                    ([4, 1, 1, 1], 1),
+                ] {
+                    let s = CollectiveSpec::tiered(c, 3e9, tier_n, k);
+                    let a = collective_cost_tiered(&s, &bw, &lat, impl_);
+                    let b = integrate_tiered(&s, &bw, &lat, impl_);
+                    assert!(
+                        (a - b).abs() <= 1e-12 * a.abs().max(1e-30),
+                        "{c:?} {impl_:?} {tier_n:?}x{k}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    // All-to-all phases run concurrently per tier; at zero latency the
+    // max over phases is the closed form exactly (latency accrues
+    // per-phase in the schedule vs once in the closed form — the same
+    // accepted divergence as the legacy two-level schedule).
+    #[test]
+    fn tiered_alltoall_matches_max_at_zero_latency() {
+        use crate::network::collectives::collective_cost_tiered;
+        let bw = [300e9, 50e9, 12.5e9, 1e9];
+        let lat = [0.0; 4];
+        for (tier_n, k) in
+            [([8usize, 4, 2, 1], 3), ([2, 2, 2, 2], 4), ([8, 8, 1, 1], 2)]
+        {
+            let s =
+                CollectiveSpec::tiered(Collective::AllToAll, 64e9, tier_n, k);
+            let a = collective_cost_tiered(&s, &bw, &lat, LogicalRing);
+            let b = integrate_tiered(&s, &bw, &lat, LogicalRing);
+            assert!(
+                (a - b).abs() <= 1e-12 * a.abs(),
+                "{tier_n:?}x{k}: {a} vs {b}"
+            );
+        }
+    }
+
+    // The class-indexed expansion of a legacy spec is the legacy
+    // schedule verbatim, re-addressed onto classes {0, 1}.
+    #[test]
+    fn classes_of_legacy_spec_map_schedule_verbatim() {
+        let s = spec(Collective::AllReduce, 1e9, 8, 16);
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        schedule_classes_into(&s, Hierarchical, &mut out, &mut scratch);
+        let legacy = schedule(&s, Hierarchical);
+        assert_eq!(out.len(), legacy.len());
+        for (a, b) in out.iter().zip(legacy.iter()) {
+            assert_eq!(a.tier, class_of(b.link));
+            assert_eq!(a.bytes.to_bits(), b.bytes.to_bits());
+            assert_eq!(a.hops, b.hops);
+        }
+    }
+
+    #[test]
+    fn tiered_schedule_degenerate_is_empty() {
+        let mut out = Vec::new();
+        let s =
+            CollectiveSpec::tiered(Collective::AllReduce, 1e9, [1, 1, 1, 1], 3);
+        schedule_tiered_into(&s, Hierarchical, &mut out);
+        assert!(out.is_empty());
+        let s0 =
+            CollectiveSpec::tiered(Collective::AllReduce, 0.0, [8, 4, 1, 1], 2);
+        schedule_tiered_into(&s0, Hierarchical, &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -1760,6 +1760,30 @@ impl<'a> Optimizer<'a> {
             .collect();
         Ok(self.outcome_from(evaluated, 0, infeasible))
     }
+
+    /// Resolve a finished candidate back into the exact [`ModelInputs`]
+    /// its evaluation saw (same decomposition through the coordinator's
+    /// derive cache, same expanded-memory attachment, same per-leaf
+    /// options) — the re-simulation hook behind `comet optimize
+    /// --cross-check des`, which re-runs the DES on the top-k of every
+    /// argmin and compares against the search's analytical totals.
+    pub fn inputs_for(&self, cand: &Candidate) -> Result<ModelInputs> {
+        let b = self.branches.get(cand.point.branch).ok_or_else(|| {
+            Error::Config(format!(
+                "cross-check: candidate names branch {} but the optimizer \
+                 has {}",
+                cand.point.branch,
+                self.branches.len()
+            ))
+        })?;
+        let dec = self.coord.decomposition(&b.workload);
+        let cluster = self.leaf_cluster(
+            cand.footprint,
+            cand.point.em_bandwidth,
+            cand.point.em_capacity,
+        );
+        resolve_inputs(&dec, &cluster, &self.leaf_opts(b, cand.point.collective))
+    }
 }
 
 /// Non-dominated set in (compute, exposed communication), ascending

@@ -1349,6 +1349,52 @@ pub fn run_optimize_exec(
     Ok((fig, out))
 }
 
+/// One row of a `--cross-check des` report: the total the search ranked
+/// a candidate by vs a fresh DES re-simulation of the same resolved
+/// inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesCrossCheck {
+    /// The candidate's label (branch + explicit axes).
+    pub label: String,
+    /// The search's evaluated total, seconds.
+    pub analytical_s: f64,
+    /// The DES re-simulation's total, seconds.
+    pub des_s: f64,
+    /// Relative difference of the two totals.
+    pub rel_diff: f64,
+}
+
+/// Re-simulate a finished optimize search's top-k through the
+/// discrete-event engine — `comet optimize --cross-check des`. Each
+/// candidate resolves back to the exact `ModelInputs` its evaluation
+/// saw ([`Optimizer::inputs_for`]) and runs through
+/// [`crate::sim::simulate_with`] on one reused scratch, so the
+/// whole top-k re-check costs k back-to-back allocation-free DES runs.
+/// Divergence beyond the DES validation band (~5%) flags a point whose
+/// analytical ranking should not be trusted blindly.
+pub fn cross_check_des(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    out: &Outcome,
+) -> Result<Vec<DesCrossCheck>> {
+    let opt = optimizer_for(spec, coord)?;
+    let mut scratch = crate::sim::SimScratch::new();
+    let mut rows = Vec::with_capacity(out.top.len());
+    for c in &out.top {
+        let inputs = opt.inputs_for(c)?;
+        let des_s =
+            crate::sim::simulate_with(&inputs, &mut scratch).breakdown.total();
+        let analytical_s = c.total();
+        rows.push(DesCrossCheck {
+            label: c.label.clone(),
+            analytical_s,
+            des_s,
+            rel_diff: crate::util::stats::rel_diff(analytical_s, des_s),
+        });
+    }
+    Ok(rows)
+}
+
 // ---- resilience (goodput vs MTBF sweep) -----------------------------------
 
 /// Goodput sensitivity study: rows are strategies, columns are per-node

@@ -22,25 +22,50 @@
 //! validation band vs real systems is ~5%), with the DES additionally
 //! capturing link contention between IG collectives and in-flight WG
 //! reductions that the closed form ignores.
+//!
+//! ## Raw-speed structure
+//!
+//! The steady-state loop allocates nothing: all per-run buffers live in a
+//! reusable [`SimScratch`] (thread-local for the plain entry points,
+//! caller-carried via [`simulate_with`]), events are scheduled on a
+//! calendar queue ([`super::event::CalendarQueue`]) whose payloads are
+//! `u32` indices into a [`Slab`] of in-flight records, and the drain loop
+//! dispatches all events sharing a timestamp in one batch. The engine
+//! core is generic over [`Scheduler`], so the retained binary-heap oracle
+//! ([`simulate_oracle`], [`simulate_goodput_oracle`]) runs the *same*
+//! code path — bit-identity between the two schedulers is structural and
+//! pinned by randomized property tests plus a CI byte-diff of goodput
+//! traces. Tier-annotated inputs run natively on N per-tier link FIFOs
+//! ([`super::link::NodeLinks`]) instead of being projected onto two
+//! classes.
 
 use crate::analytical::TrainingBreakdown;
 use crate::compute::{em_fraction, gemm_traffic, hybrid_bandwidth};
-use crate::model::inputs::ModelInputs;
-use crate::network::chunking::{concurrent_phases, schedule_into, LinkClass, TransferPhase};
-use crate::network::CollectiveImpl;
+use crate::config::MAX_TIERS;
+use crate::model::inputs::{LayerRecord, ModelInputs, NodeParams};
+use crate::network::chunking::{
+    concurrent_phases, schedule_classes_into, TierPhase, TransferPhase,
+};
 use crate::workload::Collective;
 
-use super::event::EventQueue;
-use super::link::Links;
+use super::event::{CalendarQueue, Event, EventQueue, Scheduler, Slab};
+use super::link::NodeLinks;
 
 /// DES statistics beyond the breakdown.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimStats {
     /// Events processed.
     pub events: u64,
-    /// Link utilization (busy / makespan) for intra-pod links.
+    /// Peak pending-event count of the scheduler — the high-water mark
+    /// of concurrently in-flight non-blocking transfers. 0 on the
+    /// pipeline path (`pp > 1`), which precomputes its event order and
+    /// never queues.
+    pub peak_events: u64,
+    /// Link utilization (busy / makespan) for intra-pod links (class 0
+    /// — the innermost tier under tiered addressing).
     pub util_intra: f64,
-    /// Link utilization for inter-pod links.
+    /// Link utilization for inter-pod links (the outermost active
+    /// class).
     pub util_inter: f64,
 }
 
@@ -56,41 +81,122 @@ pub struct SimResult {
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum Ev {
-    /// A non-blocking WG transfer phase completed.
-    WgPhaseDone,
+    /// A non-blocking WG transfer phase completed; the payload is the
+    /// slab index of its in-flight record.
+    WgPhaseDone(u32),
+}
+
+/// Which scheduler drives the run: the calendar queue (production) or
+/// the retained heap queue (oracle). Both produce bit-identical pops.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum QueueKind {
+    Calendar,
+    Heap,
+}
+
+/// Reusable simulation state: phase-schedule buffers, both schedulers,
+/// the in-flight slab, the batch-dispatch buffer, and the pipeline
+/// path's per-stage vectors. After the first run on a given shape the
+/// steady-state loop performs zero allocations. Obtain one with
+/// [`SimScratch::new`] and thread it through [`simulate_with`] when
+/// running many simulations back to back (sweeps, cross-checks,
+/// goodput renewal loops); the plain [`simulate`] entry uses a
+/// thread-local instance.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    calendar: CalendarQueue<Ev>,
+    heap: EventQueue<Ev>,
+    flights: Slab<f64>,
+    batch: Vec<Event<Ev>>,
+    fp: Vec<TierPhase>,
+    ig: Vec<TierPhase>,
+    wg: Vec<TierPhase>,
+    scaled: Vec<TierPhase>,
+    legacy: Vec<TransferPhase>,
+    plans: Vec<StagePlan>,
+    pipe: PipeScratch,
+}
+
+impl SimScratch {
+    /// Empty scratch; buffers grow on first use and are retained.
+    pub fn new() -> Self {
+        SimScratch::default()
+    }
+}
+
+std::thread_local! {
+    static SCRATCH: std::cell::RefCell<SimScratch> =
+        std::cell::RefCell::new(SimScratch::new());
+}
+
+/// Run `f` with this thread's scratch. Simulations never nest (the
+/// goodput renewal loop calls the `_parts` internals directly), so the
+/// borrow cannot conflict.
+fn with_scratch<R>(f: impl FnOnce(&mut SimScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 struct Engine<'a> {
-    links: Links,
-    impl_: CollectiveImpl,
+    links: NodeLinks,
     events: u64,
-    inputs: &'a ModelInputs,
+    p: &'a NodeParams,
     bw_eff: f64,
+}
+
+/// The engine's link set under the inputs' addressing: per-tier FIFOs
+/// for tier-annotated params, the legacy two-class layout otherwise.
+fn node_links(p: &NodeParams) -> NodeLinks {
+    if p.n_tiers > 0 {
+        NodeLinks::tiered(&p.tier_bw, &p.tier_lat, p.n_tiers)
+    } else {
+        NodeLinks::two_level(p.bw_intra, p.bw_inter, p.link_latency)
+    }
+}
+
+/// Per-period (free_at, busy) link deltas for identical-repeat folding.
+fn links_delta(
+    now: &[(f64, f64); MAX_TIERS],
+    snap: &[(f64, f64); MAX_TIERS],
+) -> [(f64, f64); MAX_TIERS] {
+    let mut d = [(0.0, 0.0); MAX_TIERS];
+    for ((d, n), s) in d.iter_mut().zip(now.iter()).zip(snap.iter()) {
+        *d = (n.0 - s.0, n.1 - s.1);
+    }
+    d
 }
 
 impl<'a> Engine<'a> {
     fn delay(&self, q: &crate::workload::PhaseQuantities) -> f64 {
-        let p = &self.inputs.params;
-        let traffic = gemm_traffic(q.u, q.v, q.w, p.sram);
-        crate::compute::compute_delay(q.flops, traffic, p.perf_peak, self.bw_eff)
+        let traffic = gemm_traffic(q.u, q.v, q.w, self.p.sram);
+        crate::compute::compute_delay(
+            q.flops,
+            traffic,
+            self.p.perf_peak,
+            self.bw_eff,
+        )
     }
 
     /// Execute a blocking collective starting at `t`; returns completion.
-    fn blocking(&mut self, collective: Collective, phases: &[TransferPhase], t: f64) -> f64 {
+    fn blocking(
+        &mut self,
+        collective: Collective,
+        phases: &[TierPhase],
+        t: f64,
+    ) -> f64 {
         if phases.is_empty() {
             return t;
         }
         let mut end = t;
         if concurrent_phases(collective) {
             for ph in phases {
-                let e = self.links.transfer(ph.link, t, ph.bytes, ph.hops);
+                let e = self.links.transfer(ph.tier, t, ph.bytes, ph.hops);
                 end = end.max(e);
                 self.events += 1;
             }
         } else {
             let mut ready = t;
             for ph in phases {
-                ready = self.links.transfer(ph.link, ready, ph.bytes, ph.hops);
+                ready = self.links.transfer(ph.tier, ready, ph.bytes, ph.hops);
                 self.events += 1;
             }
             end = ready;
@@ -99,13 +205,14 @@ impl<'a> Engine<'a> {
     }
 
     /// Enqueue a non-blocking collective ready at `t`; returns completion
-    /// and schedules its phase-done events.
-    fn nonblocking(
+    /// and schedules its phase-done events (slab-indexed payloads).
+    fn nonblocking<Q: Scheduler<Ev>>(
         &mut self,
         collective: Collective,
-        phases: &[TransferPhase],
+        phases: &[TierPhase],
         t: f64,
-        queue: &mut EventQueue<Ev>,
+        queue: &mut Q,
+        flights: &mut Slab<f64>,
     ) -> f64 {
         if phases.is_empty() {
             return t;
@@ -113,16 +220,22 @@ impl<'a> Engine<'a> {
         let mut end = t;
         if concurrent_phases(collective) {
             for ph in phases {
-                let e = self.links.transfer(ph.link, t, ph.bytes, ph.hops);
-                queue.schedule(e.max(queue.now()), Ev::WgPhaseDone);
+                let e = self.links.transfer(ph.tier, t, ph.bytes, ph.hops);
+                let idx = flights.insert(e);
+                queue
+                    .schedule(e.max(queue.now()), Ev::WgPhaseDone(idx))
+                    .expect("WG completion is clamped to the queue's now");
                 end = end.max(e);
                 self.events += 1;
             }
         } else {
             let mut ready = t;
             for ph in phases {
-                ready = self.links.transfer(ph.link, ready, ph.bytes, ph.hops);
-                queue.schedule(ready.max(queue.now()), Ev::WgPhaseDone);
+                ready = self.links.transfer(ph.tier, ready, ph.bytes, ph.hops);
+                let idx = flights.insert(ready);
+                queue
+                    .schedule(ready.max(queue.now()), Ev::WgPhaseDone(idx))
+                    .expect("WG completion is clamped to the queue's now");
                 self.events += 1;
             }
             end = ready;
@@ -138,21 +251,89 @@ impl<'a> Engine<'a> {
 /// serial stage resources, send/recv events on FIFO stage-boundary
 /// links, and WG collectives still overlapping backward *within* each
 /// stage on that stage's own link FIFOs.
+///
+/// Uses a thread-local [`SimScratch`] and the calendar-queue scheduler;
+/// see [`simulate_with`] for an explicit scratch and
+/// [`simulate_oracle`] for the retained heap-queue oracle.
 pub fn simulate(inputs: &ModelInputs) -> SimResult {
-    if inputs.params.pp > 1 {
-        return simulate_pipeline(inputs);
+    with_scratch(|s| {
+        simulate_parts(&inputs.layers, &inputs.params, s, QueueKind::Calendar)
+    })
+}
+
+/// [`simulate`] with a caller-carried [`SimScratch`] — for hot paths
+/// running many simulations back to back (optimizer cross-checks,
+/// benches, sweeps) that want buffer reuse without the thread-local.
+pub fn simulate_with(inputs: &ModelInputs, scratch: &mut SimScratch) -> SimResult {
+    simulate_parts(&inputs.layers, &inputs.params, scratch, QueueKind::Calendar)
+}
+
+/// [`simulate`] on the retained binary-heap event queue — the in-tree
+/// oracle the calendar-queue scheduler is pinned bit-identical against.
+/// The pipeline path (`pp > 1`) precomputes its event order and is
+/// scheduler-independent by construction.
+pub fn simulate_oracle(inputs: &ModelInputs) -> SimResult {
+    let mut scratch = SimScratch::new();
+    simulate_parts(&inputs.layers, &inputs.params, &mut scratch, QueueKind::Heap)
+}
+
+fn simulate_parts(
+    layers: &[LayerRecord],
+    p: &NodeParams,
+    s: &mut SimScratch,
+    kind: QueueKind,
+) -> SimResult {
+    if p.pp > 1 {
+        return simulate_pipeline(layers, p, s);
     }
-    let p = &inputs.params;
+    // Destructure so the queue and the buffers borrow disjointly.
+    let SimScratch {
+        calendar,
+        heap,
+        flights,
+        batch,
+        fp,
+        ig,
+        wg,
+        scaled,
+        legacy,
+        ..
+    } = s;
+    flights.clear();
+    match kind {
+        QueueKind::Calendar => {
+            calendar.reset();
+            sim_2d(layers, p, calendar, flights, batch, fp, ig, wg, scaled, legacy)
+        }
+        QueueKind::Heap => {
+            heap.reset();
+            sim_2d(layers, p, heap, flights, batch, fp, ig, wg, scaled, legacy)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sim_2d<Q: Scheduler<Ev>>(
+    layers: &[LayerRecord],
+    p: &NodeParams,
+    queue: &mut Q,
+    flights: &mut Slab<f64>,
+    batch: &mut Vec<Event<Ev>>,
+    fp_phases: &mut Vec<TierPhase>,
+    ig_phases: &mut Vec<TierPhase>,
+    wg_phases: &mut Vec<TierPhase>,
+    scaled: &mut Vec<TierPhase>,
+    legacy: &mut Vec<TransferPhase>,
+) -> SimResult {
     let frac_em = p
         .em_frac_override
         .unwrap_or_else(|| em_fraction(p.footprint, p.cap_lm));
     let bw_eff = hybrid_bandwidth(p.bw_lm, p.bw_em, frac_em);
 
     let mut eng = Engine {
-        links: Links::new(p.bw_intra, p.bw_inter, p.link_latency),
-        impl_: p.collective_impl,
+        links: node_links(p),
         events: 0,
-        inputs,
+        p,
         bw_eff,
     };
 
@@ -160,21 +341,16 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
     let mut fp_compute = 0.0;
     let mut fp_exposed = 0.0;
 
-    // Scratch schedule buffers reused across all layers of the evaluation
-    // (collective schedules are at most a handful of phases; reallocating
-    // them per layer-instance dominated small-sweep profiles).
-    let mut phases: Vec<TransferPhase> = Vec::new();
-
     // ---- FP: forward order, blocking collectives -------------------------
-    for layer in &inputs.layers {
+    for layer in layers {
         let reps = layer.repeat.max(0.0);
         if reps == 0.0 {
             continue;
         }
         let d = eng.delay(&layer.q[0]);
         let spec = &layer.comm[0];
-        schedule_into(spec, eng.impl_, &mut phases);
-        if phases.is_empty() {
+        schedule_classes_into(spec, p.collective_impl, fp_phases, legacy);
+        if fp_phases.is_empty() {
             t += d * reps;
             fp_compute += d * reps;
             eng.events += 1;
@@ -187,7 +363,7 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
         // drain before the next compute), fold the remainder analytically.
         // Bitwise-exact with the unfolded loop.
         let mut done = 0u64;
-        let mut prev: Option<(f64, [(f64, f64); 2], f64, f64)> = None;
+        let mut prev: Option<(f64, [(f64, f64); MAX_TIERS], f64, f64)> = None;
         while done < whole {
             let snap_t = t;
             let snap_links = eng.links.snapshot();
@@ -195,23 +371,14 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
             t += d;
             fp_compute += d;
             eng.events += 1;
-            let end = eng.blocking(spec.collective, &phases, t);
+            let end = eng.blocking(spec.collective, fp_phases, t);
             fp_exposed += end - t;
             t = end;
             done += 1;
             let now_links = eng.links.snapshot();
             let delta = (
                 t - snap_t,
-                [
-                    (
-                        now_links[0].0 - snap_links[0].0,
-                        now_links[0].1 - snap_links[0].1,
-                    ),
-                    (
-                        now_links[1].0 - snap_links[1].0,
-                        now_links[1].1 - snap_links[1].1,
-                    ),
-                ],
+                links_delta(&now_links, &snap_links),
                 fp_exposed - snap_exp,
                 d,
             );
@@ -222,7 +389,7 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
                     fp_compute += d * k;
                     fp_exposed += delta.2 * k;
                     eng.links.fold(delta.1, k);
-                    eng.events += (whole - done) * (1 + phases.len() as u64);
+                    eng.events += (whole - done) * (1 + fp_phases.len() as u64);
                     break;
                 }
             }
@@ -232,8 +399,8 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
         if frac > 0.0 {
             // Fractional tail (sequence-sharded microbatch): closed form.
             let mut cost = 0.0;
-            for ph in &phases {
-                cost += eng.links.duration(ph.link, ph.bytes, ph.hops);
+            for ph in fp_phases.iter() {
+                cost += eng.links.duration(ph.tier, ph.bytes, ph.hops);
             }
             t += (d + cost) * frac;
             fp_compute += d * frac;
@@ -247,13 +414,9 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
     let mut ig_exposed = 0.0;
     let mut wg_compute = 0.0;
     let mut wg_comm_total = 0.0;
-    let mut queue: EventQueue<Ev> = EventQueue::new();
     let mut last_wg_end = t;
-    let mut ig_phases: Vec<TransferPhase> = Vec::new();
-    let mut wg_phases: Vec<TransferPhase> = Vec::new();
-    let mut scaled: Vec<TransferPhase> = Vec::new();
 
-    for layer in inputs.layers.iter().rev() {
+    for layer in layers.iter().rev() {
         let reps = layer.repeat.max(0.0);
         if reps == 0.0 {
             continue;
@@ -262,11 +425,11 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
         let d_wg = eng.delay(&layer.q[2]);
         let ig_spec = &layer.comm[1];
         let wg_spec = &layer.comm[2];
-        schedule_into(ig_spec, eng.impl_, &mut ig_phases);
-        schedule_into(wg_spec, eng.impl_, &mut wg_phases);
-        for ph in &wg_phases {
+        schedule_classes_into(ig_spec, p.collective_impl, ig_phases, legacy);
+        schedule_classes_into(wg_spec, p.collective_impl, wg_phases, legacy);
+        for ph in wg_phases.iter() {
             wg_comm_total +=
-                reps * eng.links.duration(ph.link, ph.bytes, ph.hops);
+                reps * eng.links.duration(ph.tier, ph.bytes, ph.hops);
         }
 
         if ig_phases.is_empty() && wg_phases.is_empty() {
@@ -281,10 +444,10 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
         // Identical-repeat folding, backward-pass variant: the in-flight
         // WG transfers make the first repeats transient (link backlog can
         // build up), so folding engages only once two consecutive repeats
-        // produce identical deltas across compute time, both link cursors,
+        // produce identical deltas across compute time, all link cursors,
         // exposure, and the WG completion frontier. Bitwise-exact.
         let mut done = 0u64;
-        let mut prev: Option<(f64, [(f64, f64); 2], f64, f64)> = None;
+        let mut prev: Option<(f64, [(f64, f64); MAX_TIERS], f64, f64)> = None;
         while done < whole {
             let snap_t = t;
             let snap_links = eng.links.snapshot();
@@ -294,29 +457,26 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
             t += d_ig;
             ig_compute += d_ig;
             eng.events += 1;
-            let end = eng.blocking(ig_spec.collective, &ig_phases, t);
+            let end = eng.blocking(ig_spec.collective, ig_phases, t);
             ig_exposed += end - t;
             t = end;
             // WG compute, then fire the gradient reduction non-blocking.
             t += d_wg;
             wg_compute += d_wg;
             eng.events += 1;
-            let e = eng.nonblocking(wg_spec.collective, &wg_phases, t, &mut queue);
+            let e = eng.nonblocking(
+                wg_spec.collective,
+                wg_phases,
+                t,
+                queue,
+                flights,
+            );
             last_wg_end = last_wg_end.max(e);
             done += 1;
             let now_links = eng.links.snapshot();
             let delta = (
                 t - snap_t,
-                [
-                    (
-                        now_links[0].0 - snap_links[0].0,
-                        now_links[0].1 - snap_links[0].1,
-                    ),
-                    (
-                        now_links[1].0 - snap_links[1].0,
-                        now_links[1].1 - snap_links[1].1,
-                    ),
-                ],
+                links_delta(&now_links, &snap_links),
                 ig_exposed - snap_exp,
                 last_wg_end - snap_wg_end,
             );
@@ -339,8 +499,8 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
         let frac = reps - whole as f64;
         if frac > 0.0 {
             let mut ig_cost = 0.0;
-            for ph in &ig_phases {
-                ig_cost += eng.links.duration(ph.link, ph.bytes, ph.hops);
+            for ph in ig_phases.iter() {
+                ig_cost += eng.links.duration(ph.tier, ph.bytes, ph.hops);
             }
             t += (d_ig + ig_cost + d_wg) * frac;
             ig_compute += d_ig * frac;
@@ -349,21 +509,41 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
             eng.events += 1;
             if !wg_phases.is_empty() {
                 scaled.clear();
-                scaled.extend(wg_phases.iter().map(|ph| TransferPhase {
+                scaled.extend(wg_phases.iter().map(|ph| TierPhase {
                     bytes: ph.bytes * frac,
                     ..*ph
                 }));
-                let e =
-                    eng.nonblocking(wg_spec.collective, &scaled, t, &mut queue);
+                let e = eng.nonblocking(
+                    wg_spec.collective,
+                    scaled,
+                    t,
+                    queue,
+                    flights,
+                );
                 last_wg_end = last_wg_end.max(e);
             }
         }
     }
 
-    // Drain outstanding WG transfer completions.
-    while let Some(_ev) = queue.pop() {
-        eng.events += 1;
+    // Drain outstanding WG transfer completions, a whole timestamp per
+    // batch, recycling each event's slab record.
+    loop {
+        let n = queue.pop_batch(batch);
+        if n == 0 {
+            break;
+        }
+        eng.events += n as u64;
+        for ev in batch.iter() {
+            let Ev::WgPhaseDone(idx) = ev.payload;
+            let _end = flights.remove(idx);
+            debug_assert_eq!(
+                _end.to_bits(),
+                ev.time.to_bits(),
+                "slab flight record out of sync with its event"
+            );
+        }
     }
+    debug_assert!(flights.is_empty(), "undrained in-flight records");
 
     let compute_end = t;
     let iteration_end = compute_end.max(last_wg_end);
@@ -384,12 +564,14 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
         bubble: 0.0,
         pp_exposed_comm: 0.0,
     };
+    let top = eng.links.classes() - 1;
     SimResult {
         breakdown,
         stats: SimStats {
             events: eng.events,
-            util_intra: eng.links.busy(LinkClass::IntraPod) / makespan,
-            util_inter: eng.links.busy(LinkClass::InterPod) / makespan,
+            peak_events: queue.peak() as u64,
+            util_intra: eng.links.busy(0) / makespan,
+            util_inter: eng.links.busy(top) / makespan,
         },
     }
 }
@@ -397,72 +579,123 @@ pub fn simulate(inputs: &ModelInputs) -> SimResult {
 /// One serialized link occupation of a per-microbatch collective chain.
 #[derive(Debug, Clone, Copy)]
 struct Seg {
-    link: LinkClass,
+    class: usize,
     dur: f64,
 }
 
-/// One layer-instance collective, pre-scaled to per-microbatch durations.
-struct Chain {
+/// One layer-instance collective: a `[start, start + len)` slice of the
+/// plan's shared segment arena (structure-of-arrays — no per-chain Vec).
+#[derive(Debug, Clone, Copy)]
+struct ChainRef {
+    start: u32,
+    len: u32,
     /// All-to-all phases proceed concurrently on their link classes.
     concurrent: bool,
-    segs: Vec<Seg>,
 }
 
 /// Per-stage precomputed plan: full-batch compute per phase, blocking
-/// FP/IG chains, non-blocking WG chains, and closed-form per-phase
-/// collective totals (bottleneck selection + no-overlap accounting).
+/// FP/IG chains, non-blocking WG chains (as ranges into `segs`), and
+/// closed-form per-phase collective totals (bottleneck selection +
+/// no-overlap accounting). Reused across runs via [`SimScratch`].
+#[derive(Debug, Default)]
 struct StagePlan {
     d: [f64; 3],
-    fp: Vec<Chain>,
-    ig: Vec<Chain>,
-    wg: Vec<Chain>,
     comm: [f64; 3],
+    segs: Vec<Seg>,
+    /// FP / IG / WG chain lists.
+    chains: [Vec<ChainRef>; 3],
 }
 
-/// Two per-stage FIFO link frontiers (the stage's own NICs).
+impl StagePlan {
+    fn reset(&mut self) {
+        self.d = [0.0; 3];
+        self.comm = [0.0; 3];
+        self.segs.clear();
+        for c in &mut self.chains {
+            c.clear();
+        }
+    }
+}
+
+/// Per-stage FIFO link frontiers (the stage's own NICs), one per class.
 #[derive(Debug, Clone, Copy, Default)]
 struct StageLinks {
-    free: [f64; 2],
-    busy: [f64; 2],
+    free: [f64; MAX_TIERS],
+    busy: [f64; MAX_TIERS],
 }
 
 impl StageLinks {
-    fn idx(link: LinkClass) -> usize {
-        match link {
-            LinkClass::IntraPod => 0,
-            LinkClass::InterPod => 1,
-        }
-    }
-
     /// Serialize a segment starting no earlier than `ready`.
-    fn occupy(&mut self, link: LinkClass, ready: f64, dur: f64) -> f64 {
-        let i = Self::idx(link);
-        let start = ready.max(self.free[i]);
-        self.free[i] = start + dur;
-        self.busy[i] += dur;
-        self.free[i]
+    fn occupy(&mut self, class: usize, ready: f64, dur: f64) -> f64 {
+        let start = ready.max(self.free[class]);
+        self.free[class] = start + dur;
+        self.busy[class] += dur;
+        self.free[class]
     }
 }
 
-/// Execute a chain list starting at `t`; returns the completion time.
+/// Reusable per-stage vectors for the pipeline path.
+#[derive(Debug, Default)]
+struct PipeScratch {
+    stage_t: Vec<f64>,
+    links: Vec<StageLinks>,
+    bfree: Vec<f64>,
+    fp_compute: Vec<f64>,
+    fp_exposed: Vec<f64>,
+    ig_compute: Vec<f64>,
+    ig_exposed: Vec<f64>,
+    wg_compute: Vec<f64>,
+    last_wg: Vec<f64>,
+}
+
+impl PipeScratch {
+    fn reset(&mut self, pp: usize) {
+        for v in [
+            &mut self.stage_t,
+            &mut self.bfree,
+            &mut self.fp_compute,
+            &mut self.fp_exposed,
+            &mut self.ig_compute,
+            &mut self.ig_exposed,
+            &mut self.wg_compute,
+            &mut self.last_wg,
+        ] {
+            v.clear();
+        }
+        self.stage_t.resize(pp, 0.0);
+        self.bfree.resize(pp - 1, 0.0);
+        self.fp_compute.resize(pp, 0.0);
+        self.fp_exposed.resize(pp, 0.0);
+        self.ig_compute.resize(pp, 0.0);
+        self.ig_exposed.resize(pp, 0.0);
+        self.wg_compute.resize(pp, 0.0);
+        self.last_wg.resize(pp, 0.0);
+        self.links.clear();
+        self.links.resize(pp, StageLinks::default());
+    }
+}
+
+/// Execute one phase's chain list starting at `t`; returns completion.
 fn run_chains(
     links: &mut StageLinks,
-    chains: &[Chain],
+    plan: &StagePlan,
+    phase: usize,
     t: f64,
     events: &mut u64,
 ) -> f64 {
     let mut ready = t;
-    for c in chains {
+    for c in &plan.chains[phase] {
+        let segs = &plan.segs[c.start as usize..(c.start + c.len) as usize];
         if c.concurrent {
             let mut end = ready;
-            for seg in &c.segs {
-                end = end.max(links.occupy(seg.link, ready, seg.dur));
+            for seg in segs {
+                end = end.max(links.occupy(seg.class, ready, seg.dur));
                 *events += 1;
             }
             ready = end;
         } else {
-            for seg in &c.segs {
-                ready = links.occupy(seg.link, ready, seg.dur);
+            for seg in segs {
+                ready = links.occupy(seg.class, ready, seg.dur);
                 *events += 1;
             }
         }
@@ -473,16 +706,28 @@ fn run_chains(
 /// Software-pipeline DES for `pp > 1` inputs: GPipe-style fill–drain over
 /// `m` microbatches. Stage compute is a serial resource, stage-boundary
 /// activation/gradient transfers are send/recv events on per-boundary
-/// FIFO links (at the boundary's link class), blocking FP/IG collectives
-/// occupy the stage's own link FIFOs, and WG collectives are enqueued
-/// non-blocking per microbatch so they overlap the remaining backward
-/// compute within the stage — the same overlap mechanism as the 2D
-/// engine. The per-node view is the bottleneck stage's; everything the
-/// schedule adds on top lands in `bubble` / `pp_exposed_comm`, mirroring
-/// the analytical composition so the two backends can be cross-asserted
-/// in the bubble- and communication-dominated corners.
-fn simulate_pipeline(inputs: &ModelInputs) -> SimResult {
-    let p = &inputs.params;
+/// FIFO links (at the boundary's link class — its tier, under tiered
+/// addressing), blocking FP/IG collectives occupy the stage's own link
+/// FIFOs, and WG collectives are enqueued non-blocking per microbatch so
+/// they overlap the remaining backward compute within the stage — the
+/// same overlap mechanism as the 2D engine. The per-node view is the
+/// bottleneck stage's; everything the schedule adds on top lands in
+/// `bubble` / `pp_exposed_comm`, mirroring the analytical composition so
+/// the two backends can be cross-asserted in the bubble- and
+/// communication-dominated corners. Event order here is precomputed
+/// (no queue), so the path is scheduler-independent by construction.
+fn simulate_pipeline(
+    layers: &[LayerRecord],
+    p: &NodeParams,
+    s: &mut SimScratch,
+) -> SimResult {
+    let SimScratch {
+        plans,
+        pipe,
+        fp: phases,
+        legacy,
+        ..
+    } = s;
     let frac_em = p
         .em_frac_override
         .unwrap_or_else(|| em_fraction(p.footprint, p.cap_lm));
@@ -493,26 +738,21 @@ fn simulate_pipeline(inputs: &ModelInputs) -> SimResult {
     let mut events: u64 = 0;
 
     // Reference link set for closed-form durations (never occupied).
-    let ref_links = Links::new(p.bw_intra, p.bw_inter, p.link_latency);
+    let ref_links = node_links(p);
     let delay = |q: &crate::workload::PhaseQuantities| {
         let traffic = gemm_traffic(q.u, q.v, q.w, p.sram);
         crate::compute::compute_delay(q.flops, traffic, p.perf_peak, bw_eff)
     };
 
     // ---- precompute per-stage plans --------------------------------------
-    let mut plans: Vec<StagePlan> = (0..pp)
-        .map(|_| StagePlan {
-            d: [0.0; 3],
-            fp: Vec::new(),
-            ig: Vec::new(),
-            wg: Vec::new(),
-            comm: [0.0; 3],
-        })
-        .collect();
-    let mut phases: Vec<TransferPhase> = Vec::new();
-    for layer in &inputs.layers {
-        let s = layer.stage.min(pp - 1);
-        let plan = &mut plans[s];
+    plans.resize_with(pp, StagePlan::default);
+    plans.truncate(pp);
+    for plan in plans.iter_mut() {
+        plan.reset();
+    }
+    for layer in layers {
+        let stage = layer.stage.min(pp - 1);
+        let plan = &mut plans[stage];
         let reps = layer.repeat.max(0.0);
         for phase in 0..3 {
             plan.d[phase] += reps * delay(&layer.q[phase]);
@@ -520,7 +760,7 @@ fn simulate_pipeline(inputs: &ModelInputs) -> SimResult {
             if matches!(spec.collective, Collective::None) {
                 continue;
             }
-            schedule_into(spec, p.collective_impl, &mut phases);
+            schedule_classes_into(spec, p.collective_impl, phases, legacy);
             if phases.is_empty() {
                 continue;
             }
@@ -528,48 +768,40 @@ fn simulate_pipeline(inputs: &ModelInputs) -> SimResult {
             // cost (repeat x closed-form phase time) spread evenly over
             // the m microbatches — the fluid split the analytical
             // composition uses.
-            let segs: Vec<Seg> = phases
+            let start = plan.segs.len();
+            plan.segs.extend(phases.iter().map(|ph| Seg {
+                class: ph.tier,
+                dur: reps * ref_links.duration(ph.tier, ph.bytes, ph.hops)
+                    / mf,
+            }));
+            plan.comm[phase] += plan.segs[start..]
                 .iter()
-                .map(|ph| Seg {
-                    link: ph.link,
-                    dur: reps * ref_links.duration(ph.link, ph.bytes, ph.hops)
-                        / mf,
-                })
-                .collect();
-            plan.comm[phase] +=
-                segs.iter().map(|seg| seg.dur).sum::<f64>() * mf;
-            let chain = Chain {
+                .map(|seg| seg.dur)
+                .sum::<f64>()
+                * mf;
+            plan.chains[phase].push(ChainRef {
+                start: start as u32,
+                len: (plan.segs.len() - start) as u32,
                 concurrent: concurrent_phases(spec.collective),
-                segs,
-            };
-            match phase {
-                0 => plan.fp.push(chain),
-                1 => plan.ig.push(chain),
-                _ => plan.wg.push(chain),
-            }
+            });
         }
     }
 
-    // Stage-boundary per-microbatch transfer time (one hop).
-    let bw_b = if p.pp_inter { p.bw_inter } else { p.bw_intra };
-    let bclass = if p.pp_inter {
-        LinkClass::InterPod
+    // Stage-boundary per-microbatch transfer time (one hop), on the
+    // boundary's link class under the inputs' addressing.
+    let (bw_b, lat_b) = crate::analytical::pp_boundary_link(p);
+    let bclass = if p.n_tiers > 0 {
+        p.pp_tier.min(p.n_tiers.saturating_sub(1))
+    } else if p.pp_inter {
+        1
     } else {
-        LinkClass::IntraPod
+        0
     };
-    let x = (p.pp_boundary_bytes / mf) / bw_b.max(1.0) + p.link_latency;
+    let x = (p.pp_boundary_bytes / mf) / bw_b.max(1.0) + lat_b;
 
     // ---- run the fill–drain schedule -------------------------------------
-    let mut stage_t = vec![0.0f64; pp]; // compute frontier per stage
-    let mut links: Vec<StageLinks> = vec![StageLinks::default(); pp];
-    let mut bfree = vec![0.0f64; pp - 1]; // boundary FIFO frontiers
+    pipe.reset(pp);
     let mut bbusy = 0.0f64;
-    let mut fp_compute = vec![0.0f64; pp];
-    let mut fp_exposed = vec![0.0f64; pp];
-    let mut ig_compute = vec![0.0f64; pp];
-    let mut ig_exposed = vec![0.0f64; pp];
-    let mut wg_compute = vec![0.0f64; pp];
-    let mut last_wg = vec![0.0f64; pp];
 
     // Forward: every microbatch through every stage in order.
     for _ in 0..m {
@@ -578,20 +810,21 @@ fn simulate_pipeline(inputs: &ModelInputs) -> SimResult {
             let arrive = if s == 0 {
                 0.0
             } else {
-                let t = carry.max(bfree[s - 1]) + x;
-                bfree[s - 1] = t;
+                let t = carry.max(pipe.bfree[s - 1]) + x;
+                pipe.bfree[s - 1] = t;
                 bbusy += x;
                 events += 1;
                 t
             };
-            let start = arrive.max(stage_t[s]);
+            let start = arrive.max(pipe.stage_t[s]);
             let d = plans[s].d[0] / mf;
             let t_c = start + d;
-            fp_compute[s] += d;
+            pipe.fp_compute[s] += d;
             events += 1;
-            let end = run_chains(&mut links[s], &plans[s].fp, t_c, &mut events);
-            fp_exposed[s] += end - t_c;
-            stage_t[s] = end;
+            let end =
+                run_chains(&mut pipe.links[s], &plans[s], 0, t_c, &mut events);
+            pipe.fp_exposed[s] += end - t_c;
+            pipe.stage_t[s] = end;
             carry = end;
         }
     }
@@ -602,26 +835,28 @@ fn simulate_pipeline(inputs: &ModelInputs) -> SimResult {
             let arrive = if s == pp - 1 {
                 0.0
             } else {
-                let t = carry.max(bfree[s]) + x;
-                bfree[s] = t;
+                let t = carry.max(pipe.bfree[s]) + x;
+                pipe.bfree[s] = t;
                 bbusy += x;
                 events += 1;
                 t
             };
-            let start = arrive.max(stage_t[s]);
+            let start = arrive.max(pipe.stage_t[s]);
             let d_ig = plans[s].d[1] / mf;
             let t_c = start + d_ig;
-            ig_compute[s] += d_ig;
+            pipe.ig_compute[s] += d_ig;
             events += 1;
-            let end = run_chains(&mut links[s], &plans[s].ig, t_c, &mut events);
-            ig_exposed[s] += end - t_c;
+            let end =
+                run_chains(&mut pipe.links[s], &plans[s], 1, t_c, &mut events);
+            pipe.ig_exposed[s] += end - t_c;
             let d_wg = plans[s].d[2] / mf;
             let t_w = end + d_wg;
-            wg_compute[s] += d_wg;
+            pipe.wg_compute[s] += d_wg;
             events += 1;
-            let e = run_chains(&mut links[s], &plans[s].wg, t_w, &mut events);
-            last_wg[s] = last_wg[s].max(e);
-            stage_t[s] = t_w;
+            let e =
+                run_chains(&mut pipe.links[s], &plans[s], 2, t_w, &mut events);
+            pipe.last_wg[s] = pipe.last_wg[s].max(e);
+            pipe.stage_t[s] = t_w;
             carry = t_w;
         }
     }
@@ -639,10 +874,10 @@ fn simulate_pipeline(inputs: &ModelInputs) -> SimResult {
             btl = s;
         }
     }
-    let compute_end = stage_t.iter().copied().fold(0.0, f64::max);
-    let wg_end = last_wg.iter().copied().fold(0.0, f64::max);
+    let compute_end = pipe.stage_t.iter().copied().fold(0.0, f64::max);
+    let wg_end = pipe.last_wg.iter().copied().fold(0.0, f64::max);
     let wg_exp_btl = if p.overlap_wg {
-        (last_wg[btl] - stage_t[btl]).max(0.0)
+        (pipe.last_wg[btl] - pipe.stage_t[btl]).max(0.0)
     } else {
         plans[btl].comm[2]
     };
@@ -655,44 +890,49 @@ fn simulate_pipeline(inputs: &ModelInputs) -> SimResult {
     } else {
         compute_end + plans[btl].comm[2]
     };
-    let busy = fp_compute[btl]
-        + fp_exposed[btl]
-        + ig_compute[btl]
-        + ig_exposed[btl]
-        + wg_compute[btl]
+    let busy = pipe.fp_compute[btl]
+        + pipe.fp_exposed[btl]
+        + pipe.ig_compute[btl]
+        + pipe.ig_exposed[btl]
+        + pipe.wg_compute[btl]
         + wg_exp_btl;
     let slack = (total - busy).max(0.0);
     let pp_exposed = slack.min(2.0 * (pp as f64 - 1.0) * x);
     let bubble = slack - pp_exposed;
 
     let makespan = total.max(1e-30);
-    let (mut busy_intra, mut busy_inter) = (0.0f64, 0.0f64);
-    for l in &links {
-        busy_intra += l.busy[0];
-        busy_inter += l.busy[1];
+    let mut busy_by = [0.0f64; MAX_TIERS];
+    for l in &pipe.links {
+        for (acc, b) in busy_by.iter_mut().zip(l.busy.iter()) {
+            *acc += b;
+        }
     }
-    match bclass {
-        LinkClass::IntraPod => busy_intra += bbusy,
-        LinkClass::InterPod => busy_inter += bbusy,
-    }
+    busy_by[bclass] += bbusy;
+    let nclasses = if p.n_tiers > 0 {
+        p.n_tiers.clamp(1, MAX_TIERS)
+    } else {
+        2
+    };
     SimResult {
         breakdown: TrainingBreakdown {
-            fp_compute: fp_compute[btl],
-            fp_exposed_comm: fp_exposed[btl],
-            ig_compute: ig_compute[btl],
-            ig_exposed_comm: ig_exposed[btl],
-            wg_compute: wg_compute[btl],
+            fp_compute: pipe.fp_compute[btl],
+            fp_exposed_comm: pipe.fp_exposed[btl],
+            ig_compute: pipe.ig_compute[btl],
+            ig_exposed_comm: pipe.ig_exposed[btl],
+            wg_compute: pipe.wg_compute[btl],
             wg_exposed_comm: wg_exp_btl,
             bubble,
             pp_exposed_comm: pp_exposed,
         },
         stats: SimStats {
             events,
+            peak_events: 0,
             // Per-stage NIC utilization averaged over the pp stages;
             // boundary-FIFO traffic is folded into its link class and the
             // ratio clamped (boundary links are extra resources).
-            util_intra: (busy_intra / (pp as f64 * makespan)).min(1.0),
-            util_inter: (busy_inter / (pp as f64 * makespan)).min(1.0),
+            util_intra: (busy_by[0] / (pp as f64 * makespan)).min(1.0),
+            util_inter: (busy_by[nclasses - 1] / (pp as f64 * makespan))
+                .min(1.0),
         },
     }
 }
@@ -753,6 +993,33 @@ pub struct GoodputSim {
     pub truncated: bool,
 }
 
+/// The params with straggler and link-degradation service rates
+/// injected: a plain `Copy` + in-place patch of [`NodeParams`] — no
+/// `ModelInputs` clone (the layer records are shared by reference), so
+/// fault injection adds nothing to the steady-state allocation profile.
+/// Deflates exactly the fields the historical clone path deflated.
+fn faulty_params(
+    inputs: &ModelInputs,
+    fault: &crate::resilience::FaultModel,
+    n_nodes: usize,
+) -> NodeParams {
+    let mut p = inputs.params;
+    if fault.straggler_count(n_nodes) > 0 {
+        let s = fault.straggler_slowdown;
+        p.perf_peak /= s;
+        p.bw_lm /= s;
+        if p.bw_em > 0.0 {
+            p.bw_em /= s;
+        }
+    }
+    if fault.degraded_count(n_nodes) > 0 {
+        let f = fault.link_degrade_factor;
+        p.bw_intra /= f;
+        p.bw_inter /= f;
+    }
+    p
+}
+
 /// Run the DES with straggler and link-degradation service rates
 /// injected: stragglers gate every barrier (collectives, pipeline
 /// stages), so any straggler slows the whole job's compute and memory
@@ -764,21 +1031,20 @@ pub fn simulate_faulty(
     fault: &crate::resilience::FaultModel,
     n_nodes: usize,
 ) -> SimResult {
-    let mut inj = inputs.clone();
-    if fault.straggler_count(n_nodes) > 0 {
-        let s = fault.straggler_slowdown;
-        inj.params.perf_peak /= s;
-        inj.params.bw_lm /= s;
-        if inj.params.bw_em > 0.0 {
-            inj.params.bw_em /= s;
-        }
-    }
-    if fault.degraded_count(n_nodes) > 0 {
-        let f = fault.link_degrade_factor;
-        inj.params.bw_intra /= f;
-        inj.params.bw_inter /= f;
-    }
-    simulate(&inj)
+    with_scratch(|s| {
+        simulate_faulty_parts(inputs, fault, n_nodes, s, QueueKind::Calendar)
+    })
+}
+
+fn simulate_faulty_parts(
+    inputs: &ModelInputs,
+    fault: &crate::resilience::FaultModel,
+    n_nodes: usize,
+    s: &mut SimScratch,
+    kind: QueueKind,
+) -> SimResult {
+    let p = faulty_params(inputs, fault, n_nodes);
+    simulate_parts(&inputs.layers, &p, s, kind)
 }
 
 /// Hard cap on simulated fault events — bounds the renewal loop when
@@ -824,12 +1090,57 @@ pub fn simulate_goodput_controlled(
     horizon_steps: usize,
     control: &crate::util::cancel::RunControl,
 ) -> crate::error::Result<GoodputSim> {
+    with_scratch(|s| {
+        goodput_core(
+            inputs,
+            fault,
+            n_nodes,
+            horizon_steps,
+            control,
+            s,
+            QueueKind::Calendar,
+        )
+    })
+}
+
+/// [`simulate_goodput`] on the retained heap-queue oracle — drives the
+/// CI byte-diff of goodput traces old-queue vs new-queue
+/// (`examples/des_trace.rs`).
+pub fn simulate_goodput_oracle(
+    inputs: &ModelInputs,
+    fault: &crate::resilience::FaultModel,
+    n_nodes: usize,
+    horizon_steps: usize,
+) -> GoodputSim {
+    let mut s = SimScratch::new();
+    goodput_core(
+        inputs,
+        fault,
+        n_nodes,
+        horizon_steps,
+        &crate::util::cancel::RunControl::unbounded(),
+        &mut s,
+        QueueKind::Heap,
+    )
+    .expect("unbounded goodput simulation cannot be stopped")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn goodput_core(
+    inputs: &ModelInputs,
+    fault: &crate::resilience::FaultModel,
+    n_nodes: usize,
+    horizon_steps: usize,
+    control: &crate::util::cancel::RunControl,
+    scratch: &mut SimScratch,
+    kind: QueueKind,
+) -> crate::error::Result<GoodputSim> {
     use crate::analytical::goodput;
     use crate::resilience::checkpoint_bandwidth;
     use crate::util::prng::Rng;
 
-    let ideal = simulate(inputs);
-    let faulty = simulate_faulty(inputs, fault, n_nodes);
+    let ideal = simulate_parts(&inputs.layers, &inputs.params, scratch, kind);
+    let faulty = simulate_faulty_parts(inputs, fault, n_nodes, scratch, kind);
     let ideal_step_s = ideal.breakdown.total();
     let step_s = faulty.breakdown.total();
 
@@ -1037,6 +1348,52 @@ mod tests {
         assert_eq!(a, b);
     }
 
+    // The calendar queue must reproduce the retained heap oracle's
+    // results bit-for-bit: same event order, same link arithmetic, same
+    // stats (including the peak pending count — both track len the same
+    // way over the same schedule/pop sequence).
+    #[test]
+    fn calendar_matches_heap_oracle_bitwise() {
+        for (mp, dp) in [(64, 16), (8, 128), (2, 512)] {
+            let inp = inputs(mp, dp);
+            assert_eq!(simulate(&inp), simulate_oracle(&inp), "MP{mp}_DP{dp}");
+        }
+        // DP-heavy DLRM exercises the all-to-all concurrent phases.
+        let inp = derive_inputs(
+            &Dlrm::dlrm_1_2t().build(64).unwrap(),
+            &presets::dgx_a100_64(),
+            &EvalOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(simulate(&inp), simulate_oracle(&inp));
+    }
+
+    #[test]
+    fn peak_events_tracks_in_flight_wg_transfers() {
+        // DP-dominated 2D config: WG reductions pile up non-blocking.
+        let r = simulate(&inputs(8, 128));
+        assert!(r.stats.peak_events > 0, "{:?}", r.stats);
+        assert!(r.stats.peak_events <= r.stats.events);
+    }
+
+    // An explicit scratch must behave exactly like the thread-local one,
+    // including when reused across different shapes back to back.
+    #[test]
+    fn scratch_reuse_is_bitwise_stable() {
+        let mut scratch = SimScratch::new();
+        let a = inputs(8, 128);
+        let b = inputs(64, 16);
+        let pipe = pipeline_inputs(4, 8);
+        let ra1 = simulate_with(&a, &mut scratch);
+        let rp = simulate_with(&pipe, &mut scratch);
+        let rb = simulate_with(&b, &mut scratch);
+        let ra2 = simulate_with(&a, &mut scratch);
+        assert_eq!(ra1, ra2);
+        assert_eq!(ra1, simulate(&a));
+        assert_eq!(rb, simulate(&b));
+        assert_eq!(rp, simulate(&pipe));
+    }
+
     fn pipeline_inputs(
         pp: usize,
         m: usize,
@@ -1136,6 +1493,8 @@ mod tests {
         let b = simulate(&inp);
         assert_eq!(a, b);
         assert!(a.stats.events > 0);
+        // The pipeline path precomputes its event order: no queue.
+        assert_eq!(a.stats.peak_events, 0);
         assert!((0.0..=1.0).contains(&a.stats.util_intra));
         assert!((0.0..=1.0).contains(&a.stats.util_inter));
     }
@@ -1183,6 +1542,31 @@ mod tests {
         let inp = inputs(8, 128);
         let fault = crate::resilience::FaultModel::none();
         assert_eq!(simulate_faulty(&inp, &fault, 1024), simulate(&inp));
+    }
+
+    // The in-place param patch must be bit-identical to the historical
+    // full-`ModelInputs`-clone injection path.
+    #[test]
+    fn faulty_no_clone_matches_clone_path_bitwise() {
+        let inp = inputs(8, 128);
+        let mut fault = crate::resilience::FaultModel::none();
+        fault.straggler_frac = 0.02;
+        fault.straggler_slowdown = 1.5;
+        fault.link_degrade_frac = 0.05;
+        fault.link_degrade_factor = 2.0;
+        // The clone path, spelled out: clone the inputs, deflate the
+        // same fields in the same order, simulate the clone.
+        let mut inj = inp.clone();
+        let s = fault.straggler_slowdown;
+        inj.params.perf_peak /= s;
+        inj.params.bw_lm /= s;
+        if inj.params.bw_em > 0.0 {
+            inj.params.bw_em /= s;
+        }
+        let f = fault.link_degrade_factor;
+        inj.params.bw_intra /= f;
+        inj.params.bw_inter /= f;
+        assert_eq!(simulate_faulty(&inp, &fault, 1024), simulate(&inj));
     }
 
     #[test]
@@ -1237,6 +1621,18 @@ mod tests {
         other.seed = 7;
         let d = simulate_goodput(&inp, &other, 1024, steps);
         assert_ne!(a.trace, d.trace);
+    }
+
+    // Goodput traces must be bit-identical old-queue vs new-queue — the
+    // same pin CI byte-diffs via examples/des_trace.rs.
+    #[test]
+    fn goodput_oracle_matches_calendar_bitwise() {
+        let inp = inputs(8, 128);
+        let mut fault = crate::resilience::FaultModel::default_faults();
+        fault.mtbf_node_hours = 50.0;
+        let a = simulate_goodput(&inp, &fault, 1024, 200);
+        let b = simulate_goodput_oracle(&inp, &fault, 1024, 200);
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -1357,5 +1753,33 @@ mod tests {
             g.efficiency
         );
         assert!(des.efficiency < 1.0, "{}", des.efficiency);
+    }
+
+    // DES vs analytical on tier-annotated inputs: the engine now runs
+    // the per-tier schedule natively, so blocking chains integrate the
+    // tiered closed form on idle links — agreement stays in the same
+    // validation band as the legacy path.
+    #[test]
+    fn des_matches_analytical_on_tiered_inputs() {
+        let inp = derive_inputs(
+            &Transformer::t1().build(&Strategy::new(8, 8).unwrap()).unwrap(),
+            &presets::tiered_het_64(),
+            &EvalOptions {
+                ignore_capacity: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(inp.params.n_tiers > 0, "preset should resolve tiered");
+        let a = evaluate(&inp).total();
+        let r = simulate(&inp);
+        assert!(
+            rel_diff(a, r.breakdown.total()) < 0.05,
+            "analytical {a} vs DES {}",
+            r.breakdown.total()
+        );
+        assert_eq!(simulate(&inp), simulate_oracle(&inp));
+        assert!((0.0..=1.0).contains(&r.stats.util_intra));
+        assert!((0.0..=1.0).contains(&r.stats.util_inter));
     }
 }

@@ -1,8 +1,32 @@
-//! Event queue for the discrete-event backend: a time-ordered min-heap
-//! with stable FIFO tie-breaking (deterministic replay).
+//! Event scheduling for the discrete-event backend.
+//!
+//! Two schedulers share one `(time, seq)` FIFO total order behind the
+//! [`Scheduler`] trait:
+//!
+//! * [`EventQueue`] — the original time-ordered binary min-heap,
+//!   retained as the in-tree oracle (O(log n) per op).
+//! * [`CalendarQueue`] — a bucketed calendar scheduler (Brown 1988)
+//!   with O(1) amortized schedule/pop: a circular window of time
+//!   buckets over `[cur, cur + nbuckets) x width`, plus a fallback
+//!   heap for far-future events that drains into the window as the
+//!   cursor advances.
+//!
+//! Determinism argument: bucket index `floor(t / width)` is a
+//! weakly-monotone function of `t` (IEEE division by a positive
+//! constant and `as u64` truncation both preserve order), so bucket
+//! order never contradicts time order and bitwise-equal times always
+//! land in the same bucket, where the linear min-scan breaks ties by
+//! `seq`. Both schedulers therefore pop the exact same event sequence
+//! — pinned by a randomized property test in `tests/properties.rs`.
+//!
+//! [`Slab`] is the free-list arena the engine stores event payload
+//! records in, so events carry a `u32` index instead of an owned
+//! allocation (zero-allocation steady state).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+use crate::error::{Error, Result};
 
 /// Simulation time, seconds.
 pub type SimTime = f64;
@@ -37,12 +61,62 @@ impl<T: PartialEq> Ord for Event<T> {
     }
 }
 
-/// Deterministic discrete-event queue.
+fn past_event(time: SimTime, now: SimTime) -> Error {
+    Error::Config(format!(
+        "event scheduled in the past: t = {time:e} s < now = {now:e} s"
+    ))
+}
+
+/// The scheduling discipline shared by [`EventQueue`] and
+/// [`CalendarQueue`]: a deterministic `(time, seq)` FIFO total order.
+///
+/// The engine core is generic over this trait so the calendar queue
+/// and the retained heap oracle run the *same* code path — bit-identity
+/// of simulation results is structural, not re-derived.
+pub trait Scheduler<T: PartialEq> {
+    /// Clear all state back to t = 0, retaining allocated capacity.
+    fn reset(&mut self);
+
+    /// Current simulation time (time of the last popped event).
+    fn now(&self) -> SimTime;
+
+    /// Schedule `payload` at absolute time `time`. Scheduling in the
+    /// past (`time < now`) is a structured configuration error in all
+    /// build profiles, not a `debug_assert`.
+    fn schedule(&mut self, time: SimTime, payload: T) -> Result<()>;
+
+    /// Pop the earliest event, advancing simulation time.
+    fn pop(&mut self) -> Option<Event<T>>;
+
+    /// Pop every event sharing the earliest pending (bitwise-equal)
+    /// time into `out` (cleared first), in `seq` order; returns the
+    /// batch size (0 when the queue is empty). Dispatching a whole
+    /// timestamp at once lets the engine coalesce state updates.
+    fn pop_batch(&mut self, out: &mut Vec<Event<T>>) -> usize;
+
+    /// Pending event count.
+    fn len(&self) -> usize;
+
+    /// Whether any events remain.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Peak pending-event count observed since the last reset.
+    fn peak(&self) -> usize;
+}
+
+/// Deterministic discrete-event queue over a binary min-heap.
+///
+/// This is the original scheduler, retained as the in-tree oracle the
+/// calendar queue is pinned against (property tests, the
+/// `examples/des_trace.rs` byte-diff, and `*_oracle` engine entries).
 #[derive(Debug)]
 pub struct EventQueue<T: PartialEq> {
     heap: BinaryHeap<Event<T>>,
     next_seq: u64,
     now: SimTime,
+    peak: usize,
 }
 
 impl<T: PartialEq> EventQueue<T> {
@@ -52,37 +126,61 @@ impl<T: PartialEq> EventQueue<T> {
             heap: BinaryHeap::new(),
             next_seq: 0,
             now: 0.0,
+            peak: 0,
         }
     }
+}
 
-    /// Current simulation time (time of the last popped event).
-    pub fn now(&self) -> SimTime {
+impl<T: PartialEq> Scheduler<T> for EventQueue<T> {
+    fn reset(&mut self) {
+        self.heap.clear();
+        self.next_seq = 0;
+        self.now = 0.0;
+        self.peak = 0;
+    }
+
+    fn now(&self) -> SimTime {
         self.now
     }
 
-    /// Schedule `payload` at absolute time `time` (>= now).
-    pub fn schedule(&mut self, time: SimTime, payload: T) {
-        debug_assert!(time >= self.now, "event scheduled in the past");
+    fn schedule(&mut self, time: SimTime, payload: T) -> Result<()> {
+        if time < self.now {
+            return Err(past_event(time, self.now));
+        }
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(Event { time, seq, payload });
+        self.peak = self.peak.max(self.heap.len());
+        Ok(())
     }
 
-    /// Pop the earliest event, advancing simulation time.
-    pub fn pop(&mut self) -> Option<Event<T>> {
+    fn pop(&mut self) -> Option<Event<T>> {
         let e = self.heap.pop()?;
         self.now = e.time;
         Some(e)
     }
 
-    /// Whether any events remain.
-    pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+    fn pop_batch(&mut self, out: &mut Vec<Event<T>>) -> usize {
+        out.clear();
+        let Some(first) = self.pop() else {
+            return 0;
+        };
+        let t = first.time;
+        out.push(first);
+        // Heap order is (time asc, seq asc), so equal-time events peel
+        // off the top in FIFO order.
+        while matches!(self.heap.peek(), Some(e) if e.time == t) {
+            out.push(self.heap.pop().expect("peeked non-empty"));
+        }
+        out.len()
     }
 
-    /// Pending event count.
-    pub fn len(&self) -> usize {
+    fn len(&self) -> usize {
         self.heap.len()
+    }
+
+    fn peak(&self) -> usize {
+        self.peak
     }
 }
 
@@ -92,64 +190,503 @@ impl<T: PartialEq> Default for EventQueue<T> {
     }
 }
 
+/// Default physical bucket count for [`CalendarQueue::new`].
+const DEFAULT_BUCKETS: usize = 64;
+
+/// Floor on the bucket width so degenerate time scales can't divide
+/// by ~0 when mapping times to virtual buckets.
+const MIN_WIDTH: f64 = 1e-12;
+
+/// Calendar-queue scheduler: O(1) amortized schedule/pop.
+///
+/// Times map to *virtual* buckets `vb(t) = floor(t / width)`; the
+/// physical array holds the active window `[cur_vb, cur_vb + nbuckets)`
+/// at slots `vb % nbuckets`. Events past the window land in a fallback
+/// min-heap (`overflow`) and drain into the window as the cursor
+/// advances. Three invariants carry correctness:
+///
+/// 1. *Monotone bucketing* — `vb` is weakly monotone in `t`, so every
+///    event outside the cursor bucket fires no earlier than every
+///    event inside it, and bitwise-equal times share a bucket (exact
+///    FIFO tie order comes from the in-bucket `(time, seq)` min-scan).
+/// 2. *Cursor pinning* — the cursor only advances past empty buckets,
+///    so a pending in-window event pins it; combined with (1), all
+///    pending events for one timestamp are co-located when popped,
+///    which is what makes [`Scheduler::pop_batch`] complete.
+/// 3. *Past-window clamp* — an event with `t >= now` whose virtual
+///    bucket already passed (possible after the cursor jumps across
+///    empty regions) is clamped into the cursor bucket; by (1) it
+///    can only be earlier than the rest of the window, and the
+///    min-scan orders it correctly.
+#[derive(Debug)]
+pub struct CalendarQueue<T: PartialEq> {
+    buckets: Vec<Vec<Event<T>>>,
+    overflow: BinaryHeap<Event<T>>,
+    /// Bucket width, seconds; 0.0 = not yet inferred (auto geometry).
+    width: f64,
+    /// Auto geometry: re-infer the width on first schedule after reset.
+    auto_width: bool,
+    /// Virtual index of the cursor bucket.
+    cur_vb: u64,
+    /// Events currently stored in the bucket window.
+    in_window: usize,
+    next_seq: u64,
+    now: SimTime,
+    peak: usize,
+}
+
+impl<T: PartialEq> CalendarQueue<T> {
+    /// Empty queue at t = 0 with automatic geometry: the bucket width
+    /// is inferred from the first scheduled event's horizon so the
+    /// window roughly spans the active event range.
+    pub fn new() -> Self {
+        let mut q = Self::with_geometry(1.0, DEFAULT_BUCKETS);
+        q.width = 0.0;
+        q.auto_width = true;
+        q
+    }
+
+    /// Empty queue with explicit geometry — used by the randomized
+    /// property tests to exercise many widths/rotations. `width` is
+    /// clamped to a positive floor, `nbuckets` to at least 1.
+    pub fn with_geometry(width: f64, nbuckets: usize) -> Self {
+        let nbuckets = nbuckets.max(1);
+        CalendarQueue {
+            buckets: (0..nbuckets).map(|_| Vec::new()).collect(),
+            overflow: BinaryHeap::new(),
+            width: width.max(MIN_WIDTH),
+            auto_width: false,
+            cur_vb: 0,
+            in_window: 0,
+            next_seq: 0,
+            now: 0.0,
+            peak: 0,
+        }
+    }
+
+    /// Virtual bucket of time `t` (saturating: huge ratios collapse
+    /// into the last virtual bucket, which is correct — they are
+    /// "far future" either way).
+    fn vb(&self, t: SimTime) -> u64 {
+        let r = t / self.width;
+        if r >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            r as u64
+        }
+    }
+
+    /// Drain overflow events whose virtual bucket entered the window.
+    fn refill(&mut self) {
+        let nb = self.buckets.len() as u64;
+        let horizon = self.cur_vb.saturating_add(nb);
+        while let Some(e) = self.overflow.peek() {
+            let vb = self.vb(e.time);
+            if vb >= horizon {
+                break;
+            }
+            let e = self.overflow.pop().expect("peeked non-empty");
+            let slot = (vb.max(self.cur_vb) % nb) as usize;
+            self.buckets[slot].push(e);
+            self.in_window += 1;
+        }
+    }
+}
+
+impl<T: PartialEq> Scheduler<T> for CalendarQueue<T> {
+    fn reset(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.overflow.clear();
+        if self.auto_width {
+            self.width = 0.0;
+        }
+        self.cur_vb = 0;
+        self.in_window = 0;
+        self.next_seq = 0;
+        self.now = 0.0;
+        self.peak = 0;
+    }
+
+    fn now(&self) -> SimTime {
+        self.now
+    }
+
+    fn schedule(&mut self, time: SimTime, payload: T) -> Result<()> {
+        if time < self.now {
+            return Err(past_event(time, self.now));
+        }
+        if self.width == 0.0 {
+            // Auto geometry: let the window span [0, first event time]
+            // — engine event horizons sit near the iteration makespan,
+            // so subsequent events land in-window or one rotation out.
+            self.width = (time / self.buckets.len() as f64).max(MIN_WIDTH);
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let e = Event { time, seq, payload };
+        let nb = self.buckets.len() as u64;
+        let vb = self.vb(time);
+        if vb >= self.cur_vb.saturating_add(nb) {
+            self.overflow.push(e);
+        } else {
+            // vb < cur_vb (a passed bucket, time still >= now) clamps
+            // into the cursor bucket — invariant 3.
+            let slot = (vb.max(self.cur_vb) % nb) as usize;
+            self.buckets[slot].push(e);
+            self.in_window += 1;
+        }
+        self.peak = self.peak.max(self.len());
+        Ok(())
+    }
+
+    fn pop(&mut self) -> Option<Event<T>> {
+        if self.in_window == 0 && self.overflow.is_empty() {
+            return None;
+        }
+        let nb = self.buckets.len() as u64;
+        loop {
+            if self.in_window == 0 {
+                // Window empty: jump straight to the earliest overflow
+                // event's bucket instead of stepping across the gap.
+                let t = self.overflow.peek().expect("overflow non-empty").time;
+                self.cur_vb = self.vb(t);
+                self.refill();
+                continue;
+            }
+            let slot = (self.cur_vb % nb) as usize;
+            if self.buckets[slot].is_empty() {
+                self.cur_vb = self.cur_vb.saturating_add(1);
+                self.refill();
+                continue;
+            }
+            // Linear min-scan by (time, seq): the cursor bucket is
+            // small by construction, and `swap_remove` keeps it dense.
+            let b = &mut self.buckets[slot];
+            let mut mi = 0;
+            for (i, e) in b.iter().enumerate().skip(1) {
+                if (e.time, e.seq) < (b[mi].time, b[mi].seq) {
+                    mi = i;
+                }
+            }
+            let e = b.swap_remove(mi);
+            self.in_window -= 1;
+            self.now = e.time;
+            return Some(e);
+        }
+    }
+
+    fn pop_batch(&mut self, out: &mut Vec<Event<T>>) -> usize {
+        out.clear();
+        let Some(first) = self.pop() else {
+            return 0;
+        };
+        let t = first.time;
+        out.push(first);
+        // Invariants 1 + 2: every remaining event at time `t` lives in
+        // the bucket the cursor now points at. Repeated min-seq
+        // extraction yields FIFO order among the ties.
+        let nb = self.buckets.len() as u64;
+        loop {
+            let slot = (self.cur_vb % nb) as usize;
+            let b = &mut self.buckets[slot];
+            let mut mi = None;
+            for (i, e) in b.iter().enumerate() {
+                let better = match mi {
+                    None => true,
+                    Some(m) => e.seq < b[m].seq,
+                };
+                if e.time == t && better {
+                    mi = Some(i);
+                }
+            }
+            match mi {
+                Some(i) => {
+                    out.push(b.swap_remove(i));
+                    self.in_window -= 1;
+                }
+                None => break,
+            }
+        }
+        out.len()
+    }
+
+    fn len(&self) -> usize {
+        self.in_window + self.overflow.len()
+    }
+
+    fn peak(&self) -> usize {
+        self.peak
+    }
+}
+
+impl<T: PartialEq> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Sentinel for "no free slot" in [`Slab`]'s free list.
+const SLAB_NONE: u32 = u32::MAX;
+
+#[derive(Debug)]
+enum SlabEntry<T> {
+    Free { next: u32 },
+    Full(T),
+}
+
+/// A free-list arena for in-flight event records: `insert` returns a
+/// `u32` index the event payload carries, `remove` recycles the slot.
+/// After warmup the engine's event loop allocates nothing — slots churn
+/// in place.
+#[derive(Debug)]
+pub struct Slab<T> {
+    entries: Vec<SlabEntry<T>>,
+    free: u32,
+    len: usize,
+}
+
+impl<T> Slab<T> {
+    /// Empty slab.
+    pub fn new() -> Self {
+        Slab {
+            entries: Vec::new(),
+            free: SLAB_NONE,
+            len: 0,
+        }
+    }
+
+    /// Store `v`, returning its slot index.
+    pub fn insert(&mut self, v: T) -> u32 {
+        self.len += 1;
+        if self.free != SLAB_NONE {
+            let i = self.free;
+            match std::mem::replace(
+                &mut self.entries[i as usize],
+                SlabEntry::Full(v),
+            ) {
+                SlabEntry::Free { next } => self.free = next,
+                SlabEntry::Full(_) => unreachable!("free list points at a full slot"),
+            }
+            i
+        } else {
+            let i = self.entries.len() as u32;
+            self.entries.push(SlabEntry::Full(v));
+            i
+        }
+    }
+
+    /// Take the value at `i` out, freeing the slot.
+    ///
+    /// # Panics
+    /// If `i` is out of bounds or already free (an engine logic error).
+    pub fn remove(&mut self, i: u32) -> T {
+        match std::mem::replace(
+            &mut self.entries[i as usize],
+            SlabEntry::Free { next: self.free },
+        ) {
+            SlabEntry::Full(v) => {
+                self.free = i;
+                self.len -= 1;
+                v
+            }
+            SlabEntry::Free { .. } => panic!("slab: remove of free slot {i}"),
+        }
+    }
+
+    /// Borrow the value at `i`, if occupied.
+    pub fn get(&self, i: u32) -> Option<&T> {
+        match self.entries.get(i as usize) {
+            Some(SlabEntry::Full(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no entries are live.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Drop all entries and the free list (keeps the backing capacity).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.free = SLAB_NONE;
+        self.len = 0;
+    }
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn queues() -> Vec<Box<dyn Scheduler<i32>>> {
+        vec![
+            Box::new(EventQueue::new()),
+            Box::new(CalendarQueue::new()),
+            Box::new(CalendarQueue::with_geometry(0.25, 4)),
+            Box::new(CalendarQueue::with_geometry(100.0, 2)),
+        ]
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule(3.0, "c");
-        q.schedule(1.0, "a");
-        q.schedule(2.0, "b");
-        assert_eq!(q.pop().unwrap().payload, "a");
-        assert_eq!(q.pop().unwrap().payload, "b");
-        assert_eq!(q.pop().unwrap().payload, "c");
-        assert!(q.pop().is_none());
+        for mut q in queues() {
+            q.schedule(3.0, 30).unwrap();
+            q.schedule(1.0, 10).unwrap();
+            q.schedule(2.0, 20).unwrap();
+            assert_eq!(q.pop().unwrap().payload, 10);
+            assert_eq!(q.pop().unwrap().payload, 20);
+            assert_eq!(q.pop().unwrap().payload, 30);
+            assert!(q.pop().is_none());
+        }
     }
 
     #[test]
     fn fifo_among_equal_times() {
-        let mut q = EventQueue::new();
-        for i in 0..10 {
-            q.schedule(1.0, i);
-        }
-        for i in 0..10 {
-            assert_eq!(q.pop().unwrap().payload, i);
+        for mut q in queues() {
+            for i in 0..10 {
+                q.schedule(1.0, i).unwrap();
+            }
+            for i in 0..10 {
+                assert_eq!(q.pop().unwrap().payload, i);
+            }
         }
     }
 
     #[test]
     fn now_tracks_pops() {
-        let mut q = EventQueue::new();
-        q.schedule(5.0, ());
-        q.schedule(7.5, ());
-        assert_eq!(q.now(), 0.0);
-        q.pop();
-        assert_eq!(q.now(), 5.0);
-        q.pop();
-        assert_eq!(q.now(), 7.5);
+        for mut q in queues() {
+            q.schedule(5.0, 0).unwrap();
+            q.schedule(7.5, 0).unwrap();
+            assert_eq!(q.now(), 0.0);
+            q.pop();
+            assert_eq!(q.now(), 5.0);
+            q.pop();
+            assert_eq!(q.now(), 7.5);
+        }
     }
 
     #[test]
     fn interleaved_scheduling() {
-        let mut q = EventQueue::new();
-        q.schedule(1.0, 1);
-        let e = q.pop().unwrap();
-        assert_eq!(e.payload, 1);
-        q.schedule(q.now() + 0.5, 2);
-        q.schedule(q.now() + 0.25, 3);
-        assert_eq!(q.pop().unwrap().payload, 3);
-        assert_eq!(q.pop().unwrap().payload, 2);
+        for mut q in queues() {
+            q.schedule(1.0, 1).unwrap();
+            let e = q.pop().unwrap();
+            assert_eq!(e.payload, 1);
+            q.schedule(q.now() + 0.5, 2).unwrap();
+            q.schedule(q.now() + 0.25, 3).unwrap();
+            assert_eq!(q.pop().unwrap().payload, 3);
+            assert_eq!(q.pop().unwrap().payload, 2);
+        }
     }
 
     #[test]
-    fn len_and_empty() {
-        let mut q: EventQueue<()> = EventQueue::new();
-        assert!(q.is_empty());
-        q.schedule(1.0, ());
-        assert_eq!(q.len(), 1);
-        q.pop();
-        assert!(q.is_empty());
+    fn len_empty_and_peak() {
+        for mut q in queues() {
+            assert!(q.is_empty());
+            q.schedule(1.0, 0).unwrap();
+            q.schedule(2.0, 0).unwrap();
+            assert_eq!(q.len(), 2);
+            q.pop();
+            q.pop();
+            assert!(q.is_empty());
+            assert_eq!(q.peak(), 2);
+            q.reset();
+            assert_eq!(q.peak(), 0);
+            assert_eq!(q.now(), 0.0);
+        }
+    }
+
+    // Regression: scheduling in the past must surface a structured
+    // Error::Config in release builds, not a debug-only assert.
+    #[test]
+    fn past_schedule_is_config_error() {
+        for mut q in queues() {
+            q.schedule(2.0, 1).unwrap();
+            q.pop();
+            let err = q.schedule(1.0, 2).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "got {err:?}");
+            // The queue stays usable after the rejected schedule.
+            q.schedule(2.0, 3).unwrap();
+            assert_eq!(q.pop().unwrap().payload, 3);
+        }
+    }
+
+    #[test]
+    fn pop_batch_extracts_whole_timestamp_fifo() {
+        for mut q in queues() {
+            q.schedule(2.0, 4).unwrap();
+            q.schedule(1.0, 1).unwrap();
+            q.schedule(1.0, 2).unwrap();
+            q.schedule(1.0, 3).unwrap();
+            let mut out = Vec::new();
+            assert_eq!(q.pop_batch(&mut out), 3);
+            assert_eq!(
+                out.iter().map(|e| e.payload).collect::<Vec<_>>(),
+                vec![1, 2, 3]
+            );
+            assert_eq!(q.now(), 1.0);
+            assert_eq!(q.pop_batch(&mut out), 1);
+            assert_eq!(out[0].payload, 4);
+            assert_eq!(q.pop_batch(&mut out), 0);
+        }
+    }
+
+    // The calendar window is 4 x 0.25 = 1.0 s here, so events 10 s out
+    // exercise the overflow heap, the refill path, and the
+    // empty-window jump.
+    #[test]
+    fn calendar_overflow_and_jump() {
+        let mut q = CalendarQueue::with_geometry(0.25, 4);
+        q.schedule(10.0, 1).unwrap();
+        q.schedule(0.1, 0).unwrap();
+        q.schedule(20.0, 2).unwrap();
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().payload, 0);
+        assert_eq!(q.pop().unwrap().payload, 1);
+        // Scheduling "behind" the jumped cursor but >= now clamps into
+        // the cursor bucket and still pops in time order.
+        q.schedule(10.5, 3).unwrap();
+        assert_eq!(q.pop().unwrap().payload, 3);
+        assert_eq!(q.pop().unwrap().payload, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn slab_reuses_slots() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.remove(a), "a");
+        // Freed slot is recycled LIFO.
+        let c = s.insert("c");
+        assert_eq!(c, a);
+        assert_eq!(s.get(c), Some(&"c"));
+        assert_eq!(s.remove(b), "b");
+        assert_eq!(s.remove(c), "c");
+        assert!(s.is_empty());
+        s.clear();
+        assert_eq!(s.insert("d"), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "remove of free slot")]
+    fn slab_double_remove_panics() {
+        let mut s = Slab::new();
+        let a = s.insert(1);
+        s.remove(a);
+        s.remove(a);
     }
 }

@@ -7,7 +7,9 @@ pub mod link;
 
 pub use engine::{
     simulate, simulate_faulty, simulate_goodput,
-    simulate_goodput_controlled, FaultEvent, FaultEventKind, GoodputSim,
-    SimResult, SimStats,
+    simulate_goodput_controlled, simulate_goodput_oracle, simulate_oracle,
+    simulate_with, FaultEvent, FaultEventKind, GoodputSim, SimResult,
+    SimScratch, SimStats,
 };
+pub use event::{CalendarQueue, Event, EventQueue, Scheduler, Slab};
 pub use link::TierLinks;

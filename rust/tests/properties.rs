@@ -14,7 +14,10 @@ use comet::optimizer::{checkpoint::Checkpoint, Outcome, SearchExec};
 use comet::parallel::{model_state_bytes, PipeSchedule, Strategy, ZeroStage};
 use comet::resilience::{checkpoint_bandwidth, FaultModel};
 use comet::scenario::{optimizer_for, ScenarioSpec};
-use comet::sim::{simulate, simulate_goodput, TierLinks};
+use comet::sim::{
+    simulate, simulate_goodput, simulate_goodput_oracle, simulate_oracle,
+    CalendarQueue, Event, EventQueue, Scheduler, TierLinks,
+};
 use comet::util::cancel::RunControl;
 use comet::util::prng::Rng;
 use comet::util::stats::rel_diff;
@@ -483,6 +486,172 @@ fn strategy_label_roundtrip_random_2d_and_3d() {
         assert!(Strategy::parse(&format!("MP{mp}_DP{dp}_PP{pp}y")).is_err());
         assert!(Strategy::parse(&format!("MP{mp}_DP{dp}_PP")).is_err());
         assert!(Strategy::parse(&format!(" MP{mp}_DP{dp}")).is_err());
+    }
+}
+
+#[test]
+fn calendar_queue_matches_heap_on_random_schedules() {
+    // The tentpole determinism pin, randomized: under arbitrary bucket
+    // geometries (widths spanning eleven orders of magnitude, 1..=257
+    // buckets, so events land in-window, far past the horizon, and in
+    // rotated slots) and interleaved schedule/pop/pop_batch traffic
+    // with forced equal-time ties, the calendar queue must replay the
+    // heap queue's (time, seq) FIFO stream exactly — times compared by
+    // to_bits, payloads and batch boundaries verbatim.
+    fn same(case: usize, a: &Event<u32>, b: &Event<u32>) {
+        assert_eq!(
+            a.time.to_bits(),
+            b.time.to_bits(),
+            "case {case}: time {} vs {}",
+            a.time,
+            b.time
+        );
+        assert_eq!(a.seq, b.seq, "case {case}");
+        assert_eq!(a.payload, b.payload, "case {case}");
+    }
+    let mut rng = Rng::new(8181);
+    for case in 0..CASES {
+        let width = rng.log_range(1e-9, 1e2);
+        let nbuckets = 1 + rng.below(257);
+        let mut cal: CalendarQueue<u32> =
+            CalendarQueue::with_geometry(width, nbuckets);
+        let mut heap: EventQueue<u32> = EventQueue::new();
+        let mut times: Vec<f64> = Vec::new();
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        let mut payload = 0u32;
+        for _op in 0..300 {
+            match rng.below(4) {
+                0 | 1 => {
+                    for _ in 0..1 + rng.below(3) {
+                        // Half the time reuse a pending timestamp to
+                        // force an equal-time FIFO tie; skip reused
+                        // times the mirrored pops have already passed.
+                        let t = if !times.is_empty() && rng.f64() < 0.5 {
+                            *rng.choose(&times)
+                        } else {
+                            cal.now() + rng.log_range(1e-12, 1e3)
+                        };
+                        if t < cal.now() {
+                            continue;
+                        }
+                        cal.schedule(t, payload).unwrap();
+                        heap.schedule(t, payload).unwrap();
+                        times.push(t);
+                        payload += 1;
+                    }
+                }
+                2 => match (cal.pop(), heap.pop()) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => same(case, &a, &b),
+                    (a, b) => panic!("case {case}: {a:?} vs {b:?}"),
+                },
+                _ => {
+                    let na = cal.pop_batch(&mut ba);
+                    let nb = heap.pop_batch(&mut bb);
+                    assert_eq!(na, nb, "case {case}: batch sizes");
+                    for (a, b) in ba.iter().zip(&bb) {
+                        same(case, a, b);
+                    }
+                }
+            }
+            assert_eq!(cal.len(), heap.len(), "case {case}");
+            assert_eq!(
+                cal.now().to_bits(),
+                heap.now().to_bits(),
+                "case {case}: clocks diverged"
+            );
+        }
+        // Drain the remainder in lockstep.
+        loop {
+            match (cal.pop(), heap.pop()) {
+                (None, None) => break,
+                (Some(a), Some(b)) => same(case, &a, &b),
+                (a, b) => panic!("case {case}: drain {a:?} vs {b:?}"),
+            }
+        }
+        assert_eq!(cal.peak(), heap.peak(), "case {case}: peak occupancy");
+    }
+}
+
+#[test]
+fn calendar_engine_bitwise_matches_heap_oracle_random_workloads() {
+    // End-to-end determinism: the production calendar-queue engine and
+    // the retained heap-queue oracle must return identical SimResults
+    // (breakdown, event counts, peak occupancy, utilizations) on random
+    // strategies across two-level and tiered heterogeneous clusters.
+    let mut rng = Rng::new(9292);
+    let clusters = [
+        presets::dgx_a100_1024(),
+        presets::dgx_a100_64(),
+        presets::tiered_het_64(),
+    ];
+    for case in 0..40 {
+        let cluster = rng.choose(&clusters).clone();
+        let sweep = Strategy::sweep_bounded(cluster.n_nodes, 1, 128).unwrap();
+        let s = *rng.choose(&sweep);
+        let w = Transformer::t1().build(&s).unwrap();
+        let opts = EvalOptions {
+            ignore_capacity: rng.f64() < 0.5,
+            overlap_wg: rng.f64() < 0.8,
+            ..Default::default()
+        };
+        let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+        let a = simulate(&inp);
+        let b = simulate_oracle(&inp);
+        assert_eq!(a, b, "case {case} {} on {}", s.label(), cluster.name);
+    }
+}
+
+#[test]
+fn goodput_sim_tracks_analytical_and_heap_oracle_random_renewals() {
+    // Goodput-dominated corner on the new engine, randomized: the
+    // checkpoint-restart renewal simulation must stay within 8% of the
+    // analytical efficiency when the renewal geometry converges (MTBF
+    // of 100-400 steps over a 20k-step horizon), and the calendar-queue
+    // run must equal the retained heap-queue oracle exactly, trace
+    // included.
+    let cluster = presets::dgx_a100_1024();
+    let mut rng = Rng::new(7373);
+    for case in 0..8 {
+        let mp = *rng.choose(&[4usize, 8]);
+        let s = Strategy::new(mp, 1024 / mp).unwrap();
+        let w = Transformer::t1().build(&s).unwrap();
+        let opts = EvalOptions {
+            ignore_capacity: true,
+            ..Default::default()
+        };
+        let inp = derive_inputs(&w, &cluster, &opts).unwrap();
+        let step = simulate(&inp).breakdown.total();
+        let n = cluster.n_nodes;
+        let mut fault = FaultModel::none();
+        fault.mtbf_node_hours =
+            rng.range(100.0, 400.0) * step * n as f64 / 3600.0;
+        fault.restart_s = rng.range(1.0, 10.0) * step;
+        fault.seed = 40 + case as u64;
+        let ckpt_bw = checkpoint_bandwidth(
+            inp.params.bw_inter,
+            inp.params.bw_lm,
+            inp.params.bw_em,
+        );
+        let mut inp2 = inp.clone();
+        inp2.params.footprint = rng.range(0.5, 4.0) * step * ckpt_bw;
+        let des = simulate_goodput(&inp2, &fault, n, 20_000);
+        let oracle = simulate_goodput_oracle(&inp2, &fault, n, 20_000);
+        assert_eq!(des, oracle, "case {case}: calendar vs heap goodput");
+        let g = goodput::analyze(
+            &fault,
+            n,
+            inp2.params.footprint,
+            ckpt_bw,
+            &simulate(&inp2).breakdown,
+        );
+        assert!(des.failures > 20, "case {case}: {}", des.failures);
+        assert!(
+            (des.efficiency - g.efficiency).abs() < 0.08,
+            "case {case}: DES {} vs analytical {}",
+            des.efficiency,
+            g.efficiency
+        );
     }
 }
 
