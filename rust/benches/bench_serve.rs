@@ -1,0 +1,132 @@
+//! Loopback throughput of `comet serve`: requests/sec for `POST /run`
+//! on a **warm** shared coordinator (the daemon's steady state — derive
+//! and eval caches hot) vs the **cold** full round trip (bind a fresh
+//! server, run one request on empty caches, drain). The gap is the
+//! entire value proposition of the daemon over one-shot CLI runs, so
+//! both land in `BENCH_dse.json` as `serve_rps_{cold,warm}` side
+//! metrics (see BENCHMARKS.md for the comparison rule).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use comet::coordinator::Coordinator;
+use comet::scenario::{self, registry};
+use comet::serve::{ServeConfig, Server};
+use comet::util::bench::{black_box, Bencher};
+use comet::util::cancel::CancelToken;
+
+/// An in-process server on an ephemeral loopback port; dropping drains
+/// it and joins the serving thread.
+struct Running {
+    addr: SocketAddr,
+    shutdown: CancelToken,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+fn start() -> Running {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_concurrency: 1,
+        ..ServeConfig::default()
+    };
+    let server =
+        Arc::new(Server::bind(cfg, Coordinator::native()).expect("bind :0"));
+    let addr = server.local_addr().expect("local addr");
+    let shutdown = CancelToken::new();
+    let tok = shutdown.clone();
+    let handle = std::thread::spawn(move || {
+        server.run(&tok).expect("serve run");
+    });
+    Running {
+        addr,
+        shutdown,
+        handle: Some(handle),
+    }
+}
+
+impl Drop for Running {
+    fn drop(&mut self) {
+        self.shutdown.cancel();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One full `POST /run` exchange; returns the raw response.
+fn post_run(addr: SocketAddr, request: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(request.as_bytes()).expect("send");
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read response");
+    out
+}
+
+fn main() {
+    let spec = registry::get("quickstart").unwrap();
+    let body = spec.to_json().to_string_pretty();
+    let request = format!(
+        "POST /run HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+
+    // Correctness pass (untimed): the served body must be byte-identical
+    // to the library result — the same contract the socket tests pin.
+    {
+        let srv = start();
+        let response = post_run(srv.addr, &request);
+        assert!(
+            response.starts_with("HTTP/1.1 200 OK\r\n"),
+            "serve bench sanity: {response}"
+        );
+        let served = response.split("\r\n\r\n").nth(1).unwrap();
+        let mut expect = scenario::run(&spec, &Coordinator::native())
+            .unwrap()
+            .to_json()
+            .to_string_pretty();
+        expect.push('\n');
+        assert_eq!(served, expect, "served body must match the library run");
+    }
+
+    let mut b = Bencher::new();
+
+    // Cold: the full daemon lifecycle per request — bind, serve one
+    // request on empty caches, drain. Dominated by startup/drain, which
+    // is the honest cost of *not* keeping the daemon alive.
+    let cold = b
+        .bench("serve/run_quickstart_cold", || {
+            let srv = start();
+            black_box(post_run(srv.addr, &request));
+        })
+        .summary
+        .median;
+
+    // Warm: the daemon's steady state — one long-lived server, caches
+    // hot after the first request, each iteration one loopback exchange.
+    let srv = start();
+    let warmup = post_run(srv.addr, &request);
+    assert!(warmup.starts_with("HTTP/1.1 200 OK\r\n"));
+    let warm = b
+        .bench("serve/run_quickstart_warm", || {
+            black_box(post_run(srv.addr, &request));
+        })
+        .summary
+        .median;
+    drop(srv);
+
+    b.metric("serve_rps_cold", 1.0 / cold);
+    b.metric("serve_rps_warm", 1.0 / warm);
+
+    b.report("bench_serve");
+
+    let path = std::env::var("COMET_BENCH_JSON")
+        .unwrap_or_else(|_| "../BENCH_dse.json".to_string());
+    let label = std::env::var("COMET_BENCH_LABEL")
+        .unwrap_or_else(|_| "bench_serve".to_string());
+    match b.append_json(&path, &label) {
+        Ok(()) => println!("recorded trajectory point in {path}"),
+        Err(e) => eprintln!("could not record {path}: {e}"),
+    }
+}

@@ -11,6 +11,7 @@ pub use cache::{DeriveCache, EvalCache};
 pub use scheduler::WorkerPool;
 pub use sweep::GridSweep;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -47,6 +48,34 @@ pub struct Coordinator {
     cache: EvalCache,
     derive: DeriveCache,
     pool: WorkerPool,
+    /// Peak pending-event occupancy across every DES evaluation this
+    /// coordinator has run (`SimStats::peak_events` max). Shared with
+    /// the pool workers' `'static` job closures via `Arc`.
+    des_peak: Arc<AtomicU64>,
+}
+
+/// One snapshot of the coordinator's lifetime counters — the structured
+/// form of the `scenario run --verbose` stderr lines, and the substance
+/// of the serve layer's `GET /stats` endpoint. All counters are
+/// cumulative since the coordinator was built.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CoordinatorStats {
+    /// Eval-cache hits across all shards.
+    pub eval_hits: u64,
+    /// Eval-cache misses across all shards (backend evaluations).
+    pub eval_misses: u64,
+    /// Derive-cache hits.
+    pub derive_hits: u64,
+    /// Derive-cache misses — each one is an actual workload
+    /// decomposition.
+    pub derive_misses: u64,
+    /// Jobs submitted to the worker pool across every batch surface.
+    pub jobs_run: u64,
+    /// Workers respawned (panic recovery, watchdog, `heal`).
+    pub workers_respawned: u64,
+    /// Peak pending-event occupancy over every DES evaluation (0 when
+    /// the DES backend never ran).
+    pub des_peak_events: u64,
 }
 
 impl std::fmt::Debug for Coordinator {
@@ -87,6 +116,7 @@ impl Coordinator {
             cache: EvalCache::new(),
             derive: DeriveCache::new(),
             pool: WorkerPool::new(default_threads()),
+            des_peak: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -98,6 +128,7 @@ impl Coordinator {
             cache: EvalCache::new(),
             derive: DeriveCache::new(),
             pool: WorkerPool::new(default_threads()),
+            des_peak: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -109,6 +140,7 @@ impl Coordinator {
             cache: EvalCache::new(),
             derive: DeriveCache::new(),
             pool: WorkerPool::new(default_threads()),
+            des_peak: Arc::new(AtomicU64::new(0)),
         })
     }
 
@@ -238,9 +270,14 @@ impl Coordinator {
                 // thread-local SimScratch across jobs (schedulers,
                 // slab, phase buffers), so a DES batch allocates only
                 // on each worker's first job.
-                Backend::Des => self.pool_batch(owned, control, |inp| {
-                    simulate(inp).breakdown
-                })?,
+                Backend::Des => {
+                    let peak = self.des_peak.clone();
+                    self.pool_batch(owned, control, move |inp| {
+                        let r = simulate(inp);
+                        peak.fetch_max(r.stats.peak_events, Ordering::Relaxed);
+                        r.breakdown
+                    })?
+                }
             };
             for (&i, b) in reps.iter().zip(&computed) {
                 self.cache.put_by_key(keys[i], *b);
@@ -338,6 +375,25 @@ impl Coordinator {
     /// workload decompositions.
     pub fn derive_cache_stats(&self) -> (u64, u64) {
         self.derive.stats()
+    }
+
+    /// One consistent-enough snapshot of every lifetime counter. Each
+    /// counter is read atomically; the snapshot as a whole is not a
+    /// transaction (a concurrent request may land between reads), which
+    /// is fine for the monitoring surfaces this feeds — the
+    /// `--verbose` stderr report and `GET /stats`.
+    pub fn stats(&self) -> CoordinatorStats {
+        let (eval_hits, eval_misses) = self.cache.stats();
+        let (derive_hits, derive_misses) = self.derive.stats();
+        CoordinatorStats {
+            eval_hits,
+            eval_misses,
+            derive_hits,
+            derive_misses,
+            jobs_run: self.pool.jobs_run(),
+            workers_respawned: self.pool.respawns() as u64,
+            des_peak_events: self.des_peak.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -606,5 +662,39 @@ mod tests {
             .unwrap();
         let b = coord.evaluate_inputs(&inputs).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stats_snapshot_mirrors_individual_counters() {
+        let (w, c) = job();
+        let coord = Coordinator::native();
+        coord.evaluate(&w, &c).unwrap();
+        coord.evaluate(&w, &c).unwrap();
+        let s = coord.stats();
+        assert_eq!((s.eval_hits, s.eval_misses), coord.cache_stats());
+        assert_eq!(
+            (s.derive_hits, s.derive_misses),
+            coord.derive_cache_stats()
+        );
+        assert_eq!(s.eval_hits, 1);
+        assert_eq!(s.eval_misses, 1);
+        assert!(s.jobs_run >= 1, "evaluations run through the pool: {s:?}");
+        assert_eq!(s.workers_respawned, 0);
+        assert_eq!(s.des_peak_events, 0, "native never touches the DES");
+    }
+
+    #[test]
+    fn stats_track_des_peak_events() {
+        let (w, c) = job();
+        let coord = Coordinator::des();
+        assert_eq!(coord.stats().des_peak_events, 0);
+        coord.evaluate(&w, &c).unwrap();
+        let s = coord.stats();
+        // The dp-dominated MP8_DP128 shape queues events, so the DES
+        // reports a nonzero occupancy peak.
+        assert!(s.des_peak_events > 0, "{s:?}");
+        // Monotone: a cache-hit re-evaluation cannot lower the peak.
+        coord.evaluate(&w, &c).unwrap();
+        assert_eq!(coord.stats().des_peak_events, s.des_peak_events);
     }
 }

@@ -38,7 +38,7 @@
 //! which is why the watchdog exists only on the owned path.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -199,6 +199,9 @@ pub struct WorkerPool {
     next_worker: AtomicUsize,
     /// Total workers respawned over the pool's lifetime.
     respawned: AtomicUsize,
+    /// Total jobs submitted over the pool's lifetime (every batch
+    /// surface counts its batch size on entry).
+    jobs_run: AtomicU64,
 }
 
 impl std::fmt::Debug for WorkerPool {
@@ -228,6 +231,7 @@ impl WorkerPool {
             threads,
             next_worker: AtomicUsize::new(0),
             respawned: AtomicUsize::new(0),
+            jobs_run: AtomicU64::new(0),
         }
     }
 
@@ -240,6 +244,13 @@ impl WorkerPool {
     /// [`WorkerPool::heal`]).
     pub fn respawns(&self) -> usize {
         self.respawned.load(Ordering::Relaxed)
+    }
+
+    /// Jobs submitted over the pool's lifetime, across every batch
+    /// surface (scoped, owned, and watchdog paths). Feeds
+    /// `Coordinator::stats()` and the serve layer's `/stats` endpoint.
+    pub fn jobs_run(&self) -> u64 {
+        self.jobs_run.load(Ordering::Relaxed)
     }
 
     /// Replace worker `idx` with a fresh thread. The old thread's sender
@@ -356,6 +367,7 @@ impl WorkerPool {
         if n == 0 {
             return (Vec::new(), Vec::new());
         }
+        self.jobs_run.fetch_add(n as u64, Ordering::Relaxed);
         let batch = Arc::new(Batch::new(jobs, f));
         // Fan out to at most n-1 workers (the submitter claims jobs too,
         // and a single-job batch never leaves the calling thread),
@@ -528,6 +540,7 @@ impl WorkerPool {
         if n == 0 {
             return Ok(Vec::new());
         }
+        self.jobs_run.fetch_add(n as u64, Ordering::Relaxed);
         let batch = Arc::new(OwnedBatch {
             jobs,
             f: Box::new(f),
@@ -709,6 +722,25 @@ mod tests {
         let pool = WorkerPool::new(4);
         let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| *x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn jobs_run_counts_every_batch_surface() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.jobs_run(), 0);
+        pool.map((0..10u64).collect(), |x| x + 1);
+        assert_eq!(pool.jobs_run(), 10);
+        pool.try_map_watchdog(
+            (0..5u32).collect(),
+            2,
+            Duration::from_secs(30),
+            |x| x + 1,
+        )
+        .unwrap();
+        assert_eq!(pool.jobs_run(), 15);
+        // Empty batches don't count.
+        let _: Vec<u32> = pool.map(Vec::new(), |x| *x);
+        assert_eq!(pool.jobs_run(), 15);
     }
 
     #[test]

@@ -22,8 +22,8 @@
 //!   coordinator ([`coordinator`]), the pruned co-design optimizer
 //!   ([`optimizer`]), the fault/goodput model ([`resilience`],
 //!   [`analytical::goodput`]), the declarative scenario engine ([`scenario`]),
-//!   figure/report drivers ([`report`]), and the PJRT runtime
-//!   ([`runtime`]).
+//!   figure/report drivers ([`report`]), the `comet serve` co-design
+//!   service ([`serve`]), and the PJRT runtime ([`runtime`]).
 //! * **L2/L1 (build-time Python)** — the same cost model expressed as a JAX
 //!   graph calling Pallas kernels, AOT-lowered once to `artifacts/*.hlo.txt`
 //!   and executed from Rust through the PJRT C API on the sweep hot path.
@@ -82,6 +82,7 @@ pub mod report;
 pub mod resilience;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workload;

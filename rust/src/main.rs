@@ -27,6 +27,14 @@
 //!        bit-identical to an uninterrupted run at any thread count;
 //!        --cross-check des re-simulates every top-k candidate on the
 //!        DES engine and reports the analytical/DES divergence)
+//! comet serve [--addr HOST:PORT] [--max-queue N] [--max-concurrency N]
+//!       [--request-deadline SECS] [--backend B] [--threads N]
+//!       (the co-design service: POST /run takes a ScenarioSpec JSON
+//!        body on one shared coordinator — warm caches across requests;
+//!        GET /stats and GET /healthz report counters and liveness;
+//!        a full admission queue sheds load with 503 + Retry-After;
+//!        SIGINT/SIGTERM drains gracefully and exits 0 — see
+//!        docs/SERVE.md)
 //! comet figure <fig6|fig8a|fig8b|fig9|fig10|fig11|fig12|fig13a|fig13b|fig15|all>
 //!       [--backend native|des|artifact] [--out-dir DIR] [--csv]
 //! comet sweep   [--cluster PRESET] [--backend B] [--infinite-memory]
@@ -38,8 +46,9 @@
 //! comet validate
 //! ```
 //!
-//! Exit codes: `0` = success; `2` = partial result (deadline expired or
-//! run cancelled — best-so-far printed, checkpoint flushed when
+//! Exit codes: `0` = success (including a `comet serve` graceful drain
+//! on SIGINT/SIGTERM); `2` = partial result (deadline expired or run
+//! cancelled — best-so-far printed, checkpoint flushed when
 //! configured); `3` = configuration / input error; `4` = internal error
 //! (worker panic, backend failure).
 
@@ -57,6 +66,7 @@ use comet::scenario::{
     self, registry, BackendSpec, OptionsSpec, OutputFormat, OutputSpec,
     ScenarioSpec, StrategyAxis, Study, WorkloadSpec,
 };
+use comet::serve::{ServeConfig, Server};
 use comet::util::units::{fmt_bytes, fmt_secs};
 use comet::workload::dlrm::Dlrm;
 use comet::workload::transformer::Transformer;
@@ -461,7 +471,7 @@ fn cmd_optimize(args: &Args) -> Result<ExitCode> {
     // search still returns its partial result and flushes the
     // checkpoint before the process exits.
     let exec = scenario::ExecOverrides {
-        token: Some(comet::util::cancel::install_sigint_token()),
+        token: Some(comet::util::cancel::install_signal_token()),
         resume: args.flag("resume").map(String::from),
         deadline_s: secs_flag(args, "deadline")?,
         checkpoint: args.flag("checkpoint").map(String::from),
@@ -697,6 +707,61 @@ fn report_optimize_stats(coord: &Coordinator, out: &comet::optimizer::Outcome) {
     );
 }
 
+/// `comet serve`: bind the co-design service on `--addr` and serve
+/// `POST /run` / `GET /stats` / `GET /healthz` on one shared
+/// coordinator until SIGINT or SIGTERM, then drain gracefully — stop
+/// accepting, finish every admitted request — and exit 0. The
+/// robustness contract (bounded admission with 503 load-shedding,
+/// per-request deadlines and disconnect cancellation, per-request
+/// panic isolation) is documented in docs/SERVE.md.
+fn cmd_serve(args: &Args) -> Result<ExitCode> {
+    let mut coord = coordinator_for(args)?;
+    if let Some(v) = args.flag("threads") {
+        match v.parse::<usize>() {
+            Ok(n) if n >= 1 => coord = coord.with_threads(n),
+            _ => {
+                return Err(Error::Config(format!(
+                    "--threads: bad value '{v}' (integer >= 1)"
+                )))
+            }
+        }
+    }
+    let usize_flag = |name: &str, default: usize| -> Result<usize> {
+        match args.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<usize>().map_err(|_| {
+                Error::Config(format!("--{name}: bad integer '{v}'"))
+            }),
+        }
+    };
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        addr: args
+            .flag("addr")
+            .unwrap_or(defaults.addr.as_str())
+            .to_string(),
+        max_queue: usize_flag("max-queue", defaults.max_queue)?,
+        max_concurrency: usize_flag(
+            "max-concurrency",
+            defaults.max_concurrency,
+        )?,
+        request_deadline_s: secs_flag(args, "request-deadline")?,
+    };
+    let server = Server::bind(cfg, coord)?;
+    let addr = server.local_addr()?;
+    println!("comet serve: listening on http://{addr}");
+    // The CI smoke test and the socket tests parse the port from that
+    // line; a piped stdout is block-buffered, so flush explicitly.
+    use std::io::Write as _;
+    std::io::stdout()
+        .flush()
+        .map_err(|e| Error::Io(format!("serve: flush stdout: {e}")))?;
+    let shutdown = comet::util::cancel::install_signal_token();
+    server.run(&shutdown)?;
+    eprintln!("[comet] serve: drained; exiting");
+    Ok(ExitCode::SUCCESS)
+}
+
 /// Resolve a `scenario run|show|export` target: a file if one exists at
 /// that path, otherwise a built-in registry name (so a stray directory
 /// named like a built-in cannot shadow it).
@@ -784,19 +849,25 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                         println!("  wrote {}", path.display());
                     }
                 }
-                let (hits, misses) = coord.cache_stats();
+                // Reprinted from the structured snapshot (the same one
+                // `GET /stats` serves) — the strings stay byte-identical
+                // to the pre-snapshot wording.
+                let st = coord.stats();
                 eprintln!(
                     "[comet] scenario '{}' backend={:?} cache {hits} hits / \
                      {misses} misses",
                     spec.name,
-                    coord.backend()
+                    coord.backend(),
+                    hits = st.eval_hits,
+                    misses = st.eval_misses,
                 );
                 if args.has("verbose") {
-                    let (dh, dm) = coord.derive_cache_stats();
                     eprintln!(
                         "[comet] derive cache {dh} hits / {dm} misses \
                          ({dm} workload decompositions; cumulative across \
-                         this run's studies)"
+                         this run's studies)",
+                        dh = st.derive_hits,
+                        dm = st.derive_misses,
                     );
                     if let Some(out) = &search {
                         eprintln!(
@@ -855,7 +926,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: comet <scenario|optimize|figure|sweep|eval|footprint|config|workload|compare|validate> [options]
+const USAGE: &str = "usage: comet <scenario|optimize|serve|figure|sweep|eval|footprint|config|workload|compare|validate> [options]
 see README.md for per-command options";
 
 fn run() -> Result<ExitCode> {
@@ -865,6 +936,7 @@ fn run() -> Result<ExitCode> {
     match args.positional.first().map(String::as_str) {
         Some("scenario") => done(cmd_scenario(&args)),
         Some("optimize") => cmd_optimize(&args),
+        Some("serve") => cmd_serve(&args),
         Some("figure") => done(cmd_figure(&args)),
         Some("sweep") => done(cmd_sweep(&args)),
         Some("eval") => done(cmd_eval(&args)),

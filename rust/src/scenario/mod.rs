@@ -30,8 +30,8 @@ mod run;
 pub mod spec;
 
 pub use run::{
-    cross_check_des, optimizer_for, run, run_optimize, run_optimize_exec,
-    DesCrossCheck, ExecOverrides,
+    cross_check_des, optimizer_for, run, run_controlled, run_optimize,
+    run_optimize_exec, DesCrossCheck, ExecOverrides,
 };
 pub use spec::{
     collective_name, collective_of, zero_stage_of, BackendSpec, Content,

@@ -40,6 +40,26 @@ use super::spec::{
 
 /// Execute a scenario on a coordinator, producing the result grid.
 pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
+    run_controlled(spec, coord, &RunControl::unbounded())
+}
+
+/// [`run`] with a caller-supplied [`RunControl`]: every coordinator
+/// batch call polls it at its safe boundaries, so a cancelled token or
+/// an expired deadline stops the study between batches with a
+/// structured [`Error::Cancelled`] / [`Error::Deadline`] — never
+/// mid-evaluation. This is the serve layer's request path: one shared
+/// coordinator, one control per request.
+///
+/// `Optimize` studies route through [`run_optimize`] unchanged here —
+/// callers that need per-request cancellation *and* the partial
+/// `Outcome` contract (best-so-far table + `PARTIAL` note) should call
+/// [`run_optimize_exec`] with the token/deadline on [`ExecOverrides`],
+/// which is what the serve layer does.
+pub fn run_controlled(
+    spec: &ScenarioSpec,
+    coord: &Coordinator,
+    control: &RunControl,
+) -> Result<FigureData> {
     let mut fig = match &spec.study {
         Study::Footprint { strategies } => run_footprint(spec, strategies)?,
         Study::Grid {
@@ -60,30 +80,55 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
                 zero_stages,
                 baseline: *baseline,
             },
+            control,
         )?,
         Study::ComputeScaling {
             strategy,
             scales,
             em_bandwidths_gbps,
-        } => run_compute_scaling(spec, coord, *strategy, scales, em_bandwidths_gbps)?,
+        } => run_compute_scaling(
+            spec,
+            coord,
+            *strategy,
+            scales,
+            em_bandwidths_gbps,
+            control,
+        )?,
         Study::NetworkScaling {
             strategies,
             intra_factors,
             inter_factors,
-        } => run_network_scaling(spec, coord, strategies, intra_factors, inter_factors)?,
+        } => run_network_scaling(
+            spec,
+            coord,
+            strategies,
+            intra_factors,
+            inter_factors,
+            control,
+        )?,
         Study::NetworkRebalance { strategies, ratios } => {
-            run_network_rebalance(spec, coord, strategies, ratios)?
+            run_network_rebalance(spec, coord, strategies, ratios, control)?
         }
         Study::ClusterSize {
             sizes,
             em_bandwidth_gbps,
-        } => run_cluster_size(spec, coord, sizes, *em_bandwidth_gbps)?,
+        } => run_cluster_size(spec, coord, sizes, *em_bandwidth_gbps, control)?,
         Study::Packing {
             instances,
             packings,
             em_bandwidths_gbps,
-        } => run_packing(spec, coord, *instances, packings, em_bandwidths_gbps)?,
-        Study::Optimize { .. } => run_optimize(spec, coord)?.0,
+        } => run_packing(
+            spec,
+            coord,
+            *instances,
+            packings,
+            em_bandwidths_gbps,
+            control,
+        )?,
+        Study::Optimize { .. } => {
+            control.check("scenario run")?;
+            run_optimize(spec, coord)?.0
+        }
         Study::Resilience {
             strategies,
             mtbf_hours,
@@ -96,23 +141,40 @@ pub fn run(spec: &ScenarioSpec, coord: &Coordinator) -> Result<FigureData> {
             mtbf_hours,
             *em_bandwidth_gbps,
             *deadline_s,
+            control,
         )?,
         Study::Pipeline {
             mp,
             pps,
             microbatch_counts,
             schedules,
-        } => run_pipeline(spec, coord, *mp, pps, microbatch_counts, schedules)?,
+        } => run_pipeline(
+            spec,
+            coord,
+            *mp,
+            pps,
+            microbatch_counts,
+            schedules,
+            control,
+        )?,
         Study::TierMapping {
             strategies,
             mappings,
-        } => run_tier_mapping(spec, coord, strategies, mappings)?,
+        } => run_tier_mapping(spec, coord, strategies, mappings, control)?,
         Study::ClusterCompare {
             clusters,
             dlrm,
             instances,
             partition,
-        } => run_cluster_compare(spec, coord, clusters, dlrm, *instances, *partition)?,
+        } => run_cluster_compare(
+            spec,
+            coord,
+            clusters,
+            dlrm,
+            *instances,
+            *partition,
+            control,
+        )?,
     };
     apply_columns_override(spec, &mut fig)?;
     Ok(fig)
@@ -344,6 +406,7 @@ fn run_grid(
     spec: &ScenarioSpec,
     coord: &Coordinator,
     axes: &GridAxes<'_>,
+    control: &RunControl,
 ) -> Result<FigureData> {
     let opts0 = eval_opts(spec);
     let cluster = &spec.cluster;
@@ -469,8 +532,8 @@ fn run_grid(
         }
     }
 
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, control)?;
     let grid_evals = &evals[base_offset..];
 
     let label_of = |p: &GridRow| {
@@ -582,6 +645,7 @@ fn run_compute_scaling(
     strategy: Strategy,
     scales: &[f64],
     em_bandwidths_gbps: &[f64],
+    control: &RunControl,
 ) -> Result<FigureData> {
     let base_cluster = &spec.cluster;
     let opts = eval_opts(spec);
@@ -617,8 +681,8 @@ fn run_compute_scaling(
             specs.push((w.clone(), base_cluster.with_node(node), opts));
         }
     }
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, control)?;
 
     let width = em_bandwidths_gbps.len();
     let baseline = evals[base_scale * width + (width - 1)].total();
@@ -646,6 +710,7 @@ fn run_network_scaling(
     strategies: &[Strategy],
     intra_factors: &[f64],
     inter_factors: &[f64],
+    control: &RunControl,
 ) -> Result<FigureData> {
     let base_cluster = &spec.cluster;
     let opts = eval_opts(spec);
@@ -665,8 +730,8 @@ fn run_network_scaling(
             }
         }
     }
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, control)?;
 
     let mut fig = figure(spec, "config / intra factor");
     fig.columns = inter_factors
@@ -698,6 +763,7 @@ fn run_network_rebalance(
     coord: &Coordinator,
     strategies: &[Strategy],
     ratios: &[f64],
+    control: &RunControl,
 ) -> Result<FigureData> {
     let base_cluster = &spec.cluster;
     let opts = eval_opts(spec);
@@ -721,8 +787,8 @@ fn run_network_rebalance(
             ));
         }
     }
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, control)?;
 
     let mut fig = figure(spec, "inter:intra ratio");
     fig.columns = strategies.iter().map(|s| s.label()).collect();
@@ -742,6 +808,7 @@ fn run_cluster_size(
     coord: &Coordinator,
     sizes: &[usize],
     em_bandwidth_gbps: Option<f64>,
+    control: &RunControl,
 ) -> Result<FigureData> {
     let d = require_dlrm(spec)?;
     if sizes.is_empty() {
@@ -775,8 +842,8 @@ fn run_cluster_size(
         footprints.push(fp);
         specs.push((w, cluster, opts));
     }
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, control)?;
 
     let mut fig = figure(spec, "cluster");
     render_breakdown(
@@ -798,6 +865,7 @@ fn run_packing(
     instances: f64,
     packings: &[usize],
     em_bandwidths_gbps: &[f64],
+    control: &RunControl,
 ) -> Result<FigureData> {
     let d = require_dlrm(spec)?;
     let base_cluster = &spec.cluster;
@@ -837,8 +905,8 @@ fn run_packing(
             specs.push((w.clone(), cluster, opts));
         }
     }
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, control)?;
 
     let base = evals[0].total() * instances;
     let mut fig = figure(spec, "packing");
@@ -893,6 +961,7 @@ fn run_pipeline(
     pps: &[usize],
     microbatch_counts: &[usize],
     schedules: &[PipeSchedule],
+    control: &RunControl,
 ) -> Result<FigureData> {
     let opts0 = eval_opts(spec);
     let multi_sched = schedules.len() > 1;
@@ -918,8 +987,8 @@ fn run_pipeline(
             }
         }
     }
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, control)?;
 
     let width = microbatch_counts.len();
     let mut fig = figure(spec, "PP / schedule");
@@ -944,6 +1013,7 @@ fn run_tier_mapping(
     coord: &Coordinator,
     strategies: &StrategyAxis,
     mappings: &[TierMapping],
+    control: &RunControl,
 ) -> Result<FigureData> {
     let opts0 = eval_opts(spec);
     let strategies = strategies.resolve(spec.cluster.n_nodes)?;
@@ -958,8 +1028,8 @@ fn run_tier_mapping(
             specs.push((w.clone(), spec.cluster.clone(), o));
         }
     }
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, control)?;
 
     let width = mappings.len();
     let mut fig = figure(spec, "strategy");
@@ -1413,13 +1483,17 @@ fn run_resilience(
     mtbf_hours: &[f64],
     em_bandwidth_gbps: Option<f64>,
     deadline_s: Option<f64>,
+    control: &RunControl,
 ) -> Result<FigureData> {
     // A `deadline_s` budget stops the sweep at the next batch boundary
     // with [`Error::Deadline`] — the study is one derive + one evaluate
-    // call, so there is no meaningful partial table to salvage.
-    let mut control = RunControl::unbounded();
+    // call, so there is no meaningful partial table to salvage. It
+    // composes with the caller's control (a serve request deadline or
+    // cancellation token): whichever budget expires first stops the
+    // sweep.
+    let mut control = control.clone();
     if let Some(d) = deadline_s {
-        control = control.with_deadline(Deadline::after_secs(d));
+        control = control.with_deadline_sooner(Deadline::after_secs(d));
     }
     let strategies = strategies.resolve(spec.cluster.n_nodes)?;
     let opts0 = eval_opts(spec);
@@ -1513,6 +1587,7 @@ fn run_cluster_compare(
     d: &crate::workload::dlrm::Dlrm,
     instances: f64,
     partition: usize,
+    control: &RunControl,
 ) -> Result<FigureData> {
     let t = match &spec.workload {
         WorkloadSpec::Transformer(t) => t,
@@ -1579,8 +1654,8 @@ fn run_cluster_compare(
         });
     }
 
-    let inputs = coord.derive_batch(specs)?;
-    let evals = coord.evaluate_inputs(&inputs)?;
+    let inputs = coord.derive_batch_controlled(specs, control)?;
+    let evals = coord.evaluate_inputs_controlled(&inputs, control)?;
 
     let dlrm_times: Vec<f64> = plans
         .iter()
@@ -1643,6 +1718,20 @@ mod tests {
             .map(|(_, v)| v[7])
             .fold(f64::INFINITY, f64::min);
         assert!((best - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_controlled_stops_at_batch_boundaries() {
+        let spec = crate::scenario::registry::get("quickstart").unwrap();
+        let coord = Coordinator::native();
+        let cancelled = RunControl::unbounded().cancel_after_polls(0);
+        let err = run_controlled(&spec, &coord, &cancelled).unwrap_err();
+        assert!(matches!(err, Error::Cancelled(_)), "{err}");
+        // An unbounded control is exactly `run`.
+        let a =
+            run_controlled(&spec, &coord, &RunControl::unbounded()).unwrap();
+        let b = run(&spec, &coord).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

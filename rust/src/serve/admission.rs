@@ -1,0 +1,174 @@
+//! Bounded admission queue: the load-shedding boundary of `comet serve`.
+//!
+//! Accepted connections wait here until a serving worker picks them up.
+//! The queue is **bounded**: when it is full, [`AdmissionQueue::try_push`]
+//! rejects the connection immediately (the accept loop turns that into a
+//! `503` + `Retry-After`) instead of letting an unbounded backlog starve
+//! the requests already in flight. Shedding is counted so `/stats` can
+//! report it.
+//!
+//! [`AdmissionQueue::close`] begins a graceful drain: pushes are refused
+//! (not counted as shed — the server is exiting, not overloaded), but
+//! [`AdmissionQueue::pop`] keeps handing out already-admitted items until
+//! the queue is empty, then returns `None` so every worker unblocks and
+//! exits.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// A bounded MPMC queue with explicit load-shedding and drain-on-close.
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+    capacity: usize,
+    shed: AtomicU64,
+}
+
+#[derive(Debug)]
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// A queue admitting at most `capacity` waiting items (min 1).
+    pub fn new(capacity: usize) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            state: Mutex::new(State {
+                items: VecDeque::with_capacity(capacity.max(1)),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit `item`, or hand it back when there is no room.
+    ///
+    /// A full queue increments the shed counter (this is load-shedding);
+    /// a closed queue refuses without counting (this is drain). Either
+    /// way the item is returned so the caller can answer the client.
+    pub fn try_push(&self, item: T) -> std::result::Result<(), T> {
+        let mut st = self.state.lock().expect("admission queue lock");
+        if st.closed {
+            return Err(item);
+        }
+        if st.items.len() >= self.capacity {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(item);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available (FIFO) or the queue is closed
+    /// **and** empty — the `None` that tells a worker to exit. Items
+    /// admitted before [`close`](Self::close) are still handed out, so a
+    /// drain finishes every request that was already accepted.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().expect("admission queue lock");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).expect("admission queue wait");
+        }
+    }
+
+    /// Stop admitting; wake every blocked [`pop`](Self::pop). Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("admission queue lock");
+        st.closed = true;
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Items currently waiting (admitted, not yet popped).
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("admission queue lock").items.len()
+    }
+
+    /// Is the queue currently empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The admission bound this queue was built with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// How many pushes were rejected because the queue was **full**
+    /// (drain-time refusals are not shedding and are not counted).
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn bounded_fifo_with_shed_counting() {
+        let q = AdmissionQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        // Full: the item comes back and the shed counter moves.
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.shed(), 1);
+        assert_eq!(q.len(), 2);
+        // FIFO order, and popping frees a slot.
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(4).is_ok());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.shed(), 1);
+    }
+
+    #[test]
+    fn close_drains_admitted_items_then_unblocks() {
+        let q = AdmissionQueue::new(4);
+        assert!(q.try_push(10).is_ok());
+        assert!(q.try_push(11).is_ok());
+        q.close();
+        // Closed: refusals are not shedding.
+        assert_eq!(q.try_push(12), Err(12));
+        assert_eq!(q.shed(), 0);
+        // Already-admitted items still drain in order, then None forever.
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_blocks_until_a_push_arrives() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(1));
+        let q2 = q.clone();
+        let popper = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(q.try_push(7).is_ok());
+        assert_eq!(popper.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn close_wakes_blocked_poppers() {
+        let q = std::sync::Arc::new(AdmissionQueue::<u32>::new(1));
+        let q2 = q.clone();
+        let popper = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(popper.join().unwrap(), None);
+    }
+}

@@ -1,0 +1,332 @@
+//! Minimal HTTP/1.1 framing for `comet serve` — hand-rolled on `std`,
+//! in the same dependency-free style as `util/json.rs` and
+//! `scenario/parse.rs`.
+//!
+//! Scope is deliberately narrow: one request per connection
+//! (`Connection: close` on every response), `Content-Length` bodies
+//! only (no chunked transfer coding), ASCII request targets with a
+//! simple `k=v&k=v` query string and no percent-decoding. That covers
+//! the whole `comet serve` API — JSON bodies on `/run`, numeric query
+//! parameters — with hard caps on header and body size so a misbehaving
+//! client cannot balloon server memory.
+
+use std::io::{self, Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Cap on the request line + headers (bytes, including the terminator).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on a request body (bytes); a `ScenarioSpec` is a few KiB.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// A parsed HTTP request: method, split target, headers, raw body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Request method, verbatim (`GET`, `POST`, ...).
+    pub method: String,
+    /// Target path without the query string (`/run`).
+    pub path: String,
+    /// Raw query string without the leading `?` (may be empty).
+    pub query: String,
+    /// Header `(name, value)` pairs; names are lowercased at parse time.
+    pub headers: Vec<(String, String)>,
+    /// Raw request body (`Content-Length` bytes).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of header `name`, matched case-insensitively.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// First value of query parameter `name` (`?deadline_s=1.5`). No
+    /// percent-decoding — the serve API only uses plain numeric values.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=')?;
+            (k == name).then_some(v)
+        })
+    }
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read and parse one HTTP/1.x request from `r`.
+///
+/// Returns [`Error::Parse`] for anything malformed or over the caps —
+/// the server maps that to a `400`. I/O failures (including read
+/// timeouts on a stalled client) surface as [`Error::Io`], which the
+/// server treats as a dead connection.
+pub fn read_request<R: Read>(r: &mut R) -> Result<Request> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_len = loop {
+        if let Some(pos) = head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(Error::Parse(format!(
+                "http: header section exceeds {MAX_HEAD_BYTES} bytes"
+            )));
+        }
+        let n = r
+            .read(&mut chunk)
+            .map_err(|e| Error::Io(format!("http read: {e}")))?;
+        if n == 0 {
+            return Err(Error::Parse(
+                "http: connection closed before the request was complete"
+                    .into(),
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_len])
+        .map_err(|_| Error::Parse("http: non-UTF-8 request head".into()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) if !m.is_empty() => (m, t, v),
+            _ => {
+                return Err(Error::Parse(format!(
+                    "http: malformed request line '{request_line}'"
+                )))
+            }
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Err(Error::Parse(format!(
+            "http: unsupported protocol '{version}'"
+        )));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line.split_once(':').ok_or_else(|| {
+            Error::Parse(format!("http: malformed header line '{line}'"))
+        })?;
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+
+    let mut req = Request {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        body: Vec::new(),
+    };
+    if req.header("transfer-encoding").is_some() {
+        return Err(Error::Parse(
+            "http: chunked transfer coding is not supported \
+             (send Content-Length)"
+                .into(),
+        ));
+    }
+    let content_length = match req.header("content-length") {
+        None => 0,
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            Error::Parse(format!("http: bad Content-Length '{v}'"))
+        })?,
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Err(Error::Parse(format!(
+            "http: body of {content_length} bytes exceeds the \
+             {MAX_BODY_BYTES}-byte cap"
+        )));
+    }
+    // Whatever followed the head terminator in the last read is the
+    // start of the body; read the remainder exactly.
+    let mut body = buf[head_len + 4..].to_vec();
+    if body.len() > content_length {
+        return Err(Error::Parse(
+            "http: more body bytes than Content-Length".into(),
+        ));
+    }
+    let already = body.len();
+    body.resize(content_length, 0);
+    r.read_exact(&mut body[already..])
+        .map_err(|e| Error::Io(format!("http body read: {e}")))?;
+    req.body = body;
+    Ok(req)
+}
+
+/// Canonical reason phrase for the status codes the server emits.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        206 => "Partial Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// An HTTP response under construction; written with
+/// [`Response::write_to`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response: sets `Content-Type: application/json`.
+    pub fn json(status: u16, body: impl Into<Vec<u8>>) -> Response {
+        Response {
+            status,
+            headers: vec![(
+                "Content-Type".into(),
+                "application/json".into(),
+            )],
+            body: body.into(),
+        }
+    }
+
+    /// Append a header (builder-style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    /// The response body, for tests and byte-identity checks.
+    pub fn body(&self) -> &[u8] {
+        &self.body
+    }
+
+    /// Serialize head + body to `w` and flush. `Content-Length` and
+    /// `Connection: close` are always emitted (one request per
+    /// connection).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\n",
+            self.status,
+            reason(self.status)
+        );
+        for (name, value) in &self.headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str(&format!("Content-Length: {}\r\n", self.body.len()));
+        head.push_str("Connection: close\r\n\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(raw: &str) -> Result<Request> {
+        read_request(&mut raw.as_bytes())
+    }
+
+    #[test]
+    fn parses_get_with_query_and_headers() {
+        let req = parse(
+            "GET /run?deadline_s=1.5&x=2 HTTP/1.1\r\n\
+             Host: localhost\r\n\
+             X-Custom: a value \r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/run");
+        assert_eq!(req.query, "deadline_s=1.5&x=2");
+        assert_eq!(req.query_param("deadline_s"), Some("1.5"));
+        assert_eq!(req.query_param("x"), Some("2"));
+        assert_eq!(req.query_param("missing"), None);
+        // Header names are matched case-insensitively, values trimmed.
+        assert_eq!(req.header("x-custom"), Some("a value"));
+        assert_eq!(req.header("X-CUSTOM"), Some("a value"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn reads_content_length_body_exactly() {
+        let req = parse(
+            "POST /run HTTP/1.1\r\nContent-Length: 11\r\n\r\nhello world",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"hello world");
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized_input() {
+        assert!(matches!(parse("BOGUS\r\n\r\n"), Err(Error::Parse(_))));
+        assert!(matches!(
+            parse("GET / SPDY/3\r\n\r\n"),
+            Err(Error::Parse(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\nbad header line\r\n\r\n"),
+            Err(Error::Parse(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+            Err(Error::Parse(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(Error::Parse(_))
+        ));
+        // EOF before the head terminator.
+        assert!(matches!(parse("GET / HTT"), Err(Error::Parse(_))));
+        // Head over the cap.
+        let huge = format!(
+            "GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n",
+            "x".repeat(MAX_HEAD_BYTES + 1)
+        );
+        assert!(matches!(parse(&huge), Err(Error::Parse(_))));
+        // Body over the cap is refused before reading it.
+        let fat = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(matches!(parse(&fat), Err(Error::Parse(_))));
+    }
+
+    #[test]
+    fn response_frames_status_headers_and_body() {
+        let mut out = Vec::new();
+        Response::json(503, "{\"error\":\"busy\"}\n")
+            .with_header("Retry-After", "1")
+            .write_to(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Content-Length: 17\r\n"));
+        assert!(text.contains("Connection: close\r\n\r\n"));
+        assert!(text.ends_with("{\"error\":\"busy\"}\n"));
+    }
+}

@@ -1,0 +1,41 @@
+//! `comet serve` — the co-design service: one process-lifetime
+//! [`Coordinator`](crate::coordinator::Coordinator) behind a std-only
+//! HTTP/1.1 API, so repeated scenario runs share warm derive/eval
+//! caches and one worker pool.
+//!
+//! Endpoints (see `docs/SERVE.md` for the full contract):
+//!
+//! * `POST /run` — a [`ScenarioSpec`](crate::scenario::ScenarioSpec)
+//!   JSON body (exactly what `comet scenario show NAME` prints);
+//!   responds with the figure JSON, byte-identical to
+//!   `comet scenario run NAME --json`. `?deadline_s=` arms a
+//!   per-request deadline; optimize studies answer `206` with the
+//!   partial best-so-far table when stopped early.
+//! * `GET /stats` — request counters, admission-queue depth/shed, and
+//!   the shared coordinator's cache hit rates, pool counters, and DES
+//!   peak-event high-water mark.
+//! * `GET /healthz` — liveness.
+//!
+//! Robustness is the point of the layer, not an afterthought: bounded
+//! admission with `503` load-shedding ([`admission`]), per-request
+//! cancellation on client disconnect and deadline expiry ([`server`]),
+//! per-request panic isolation on the shared pool, and graceful drain
+//! on SIGINT/SIGTERM. The module splits along those seams:
+//!
+//! * [`conn`] — hand-rolled HTTP/1.1 framing (no new crates).
+//! * [`router`] — the pure `(method, path)` route table.
+//! * [`admission`] — the bounded, load-shedding connection queue.
+//! * [`stats`] — per-request counters + the `/stats` snapshot.
+//! * [`server`] — accept loop, serving workers, request execution.
+
+pub mod admission;
+pub mod conn;
+pub mod router;
+pub mod server;
+pub mod stats;
+
+pub use admission::AdmissionQueue;
+pub use conn::{read_request, Request, Response};
+pub use router::{route, Route};
+pub use server::{ServeConfig, Server};
+pub use stats::ServeStats;

@@ -1,0 +1,52 @@
+//! Pure request routing for `comet serve`: `(method, path)` → [`Route`].
+//!
+//! Kept free of I/O and state so the full route table is unit-testable
+//! as data. Unknown paths and wrong methods are distinct outcomes (`404`
+//! vs `405`) so clients can tell a typo from a misuse.
+
+/// Where a request goes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// `GET /healthz` — liveness probe.
+    Healthz,
+    /// `GET /stats` — cache/queue/request counters snapshot.
+    Stats,
+    /// `POST /run` — execute a `ScenarioSpec` JSON body.
+    Run,
+    /// Unknown path → `404`.
+    NotFound,
+    /// Known path, wrong method → `405`.
+    MethodNotAllowed,
+}
+
+/// Route a request. Paths are matched exactly (the query string is
+/// already split off by the parser).
+pub fn route(method: &str, path: &str) -> Route {
+    match path {
+        "/healthz" if method == "GET" => Route::Healthz,
+        "/stats" if method == "GET" => Route::Stats,
+        "/run" if method == "POST" => Route::Run,
+        "/healthz" | "/stats" | "/run" => Route::MethodNotAllowed,
+        _ => Route::NotFound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_route_table() {
+        assert_eq!(route("GET", "/healthz"), Route::Healthz);
+        assert_eq!(route("GET", "/stats"), Route::Stats);
+        assert_eq!(route("POST", "/run"), Route::Run);
+        // Wrong method on a known path is 405, not 404.
+        assert_eq!(route("POST", "/healthz"), Route::MethodNotAllowed);
+        assert_eq!(route("DELETE", "/stats"), Route::MethodNotAllowed);
+        assert_eq!(route("GET", "/run"), Route::MethodNotAllowed);
+        // Unknown paths are 404 regardless of method.
+        assert_eq!(route("GET", "/"), Route::NotFound);
+        assert_eq!(route("POST", "/run/extra"), Route::NotFound);
+        assert_eq!(route("GET", "/Healthz"), Route::NotFound);
+    }
+}

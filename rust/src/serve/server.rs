@@ -1,0 +1,665 @@
+//! The `comet serve` server: accept loop, admission, serving workers,
+//! per-request execution with deadline/cancel/panic isolation, and
+//! graceful drain.
+//!
+//! One [`Server`] owns one shared [`Coordinator`] — the whole point of
+//! the daemon: the derive/eval caches and the worker pool are
+//! process-lifetime state, so repeated `/run`s on related scenarios hit
+//! warm caches. Robustness invariants:
+//!
+//! * **Bounded admission** — accepted connections enter an
+//!   [`AdmissionQueue`]; when it is full the accept loop answers `503`
+//!   + `Retry-After: 1` immediately and in-flight work is untouched.
+//! * **Per-request deadlines/cancellation** — `?deadline_s=` (or the
+//!   server-wide `--request-deadline`) arms a [`RunControl`] deadline;
+//!   a client disconnect trips the same [`CancelToken`] via a watcher
+//!   thread. Optimize studies return their partial best-so-far table
+//!   (`206`); other studies stop at a batch boundary (`504`).
+//! * **Panic isolation** — the scenario executes as a single bounded
+//!   pool job ([`WorkerPool::try_scoped_map_bounded`]); a panic comes
+//!   back as a structured `500` and the pool is healed. Caches and
+//!   concurrent requests are unaffected.
+//! * **Graceful drain** — cancelling the shutdown token stops the
+//!   accept loop, closes the queue, lets workers finish every admitted
+//!   request (their tokens are *not* cancelled), then returns.
+//!
+//! [`WorkerPool::try_scoped_map_bounded`]:
+//! crate::coordinator::scheduler::WorkerPool::try_scoped_map_bounded
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::Coordinator;
+use crate::error::{Error, Result};
+use crate::report::FigureData;
+use crate::scenario::{self, ScenarioSpec, Study};
+use crate::util::cancel::{CancelToken, Deadline, RunControl};
+use crate::util::json::{self, obj, Value};
+
+use super::admission::AdmissionQueue;
+use super::conn::{read_request, Request, Response};
+use super::router::{route, Route};
+use super::stats::ServeStats;
+
+/// How long a connection may take to deliver its request or absorb its
+/// response before the server gives up on it.
+const CONN_IO_TIMEOUT: Duration = Duration::from_secs(10);
+/// Accept-loop poll interval (shutdown responsiveness).
+const ACCEPT_POLL: Duration = Duration::from_millis(15);
+/// Disconnect-watcher poll interval.
+const WATCH_POLL: Duration = Duration::from_millis(50);
+
+/// `comet serve` configuration (the CLI flags, with their defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Listen address (`--addr`); `:0` picks an ephemeral port.
+    pub addr: String,
+    /// Admission-queue bound (`--max-queue`): connections waiting for a
+    /// serving worker beyond this are shed with a `503`.
+    pub max_queue: usize,
+    /// Serving workers (`--max-concurrency`): requests executing at
+    /// once. Each still fans its evaluation across the coordinator's
+    /// worker pool.
+    pub max_concurrency: usize,
+    /// Server-wide default `/run` deadline in seconds
+    /// (`--request-deadline`); a request's `?deadline_s=` overrides it.
+    pub request_deadline_s: Option<f64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8787".into(),
+            max_queue: 64,
+            max_concurrency: 4,
+            request_deadline_s: None,
+        }
+    }
+}
+
+/// A bound-but-not-yet-running serve instance. [`Server::run`] blocks
+/// until the shutdown token fires and the drain completes.
+#[derive(Debug)]
+pub struct Server {
+    listener: TcpListener,
+    coord: Coordinator,
+    cfg: ServeConfig,
+    queue: AdmissionQueue<TcpStream>,
+    stats: ServeStats,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and wire the shared coordinator. Validates the
+    /// bounds up front so a misconfiguration fails before listening.
+    pub fn bind(cfg: ServeConfig, coord: Coordinator) -> Result<Server> {
+        if cfg.max_concurrency == 0 {
+            return Err(Error::Config(
+                "serve: --max-concurrency must be >= 1".into(),
+            ));
+        }
+        if cfg.max_queue == 0 {
+            return Err(Error::Config(
+                "serve: --max-queue must be >= 1".into(),
+            ));
+        }
+        let listener = TcpListener::bind(&cfg.addr).map_err(|e| {
+            Error::Io(format!("serve: bind {}: {e}", cfg.addr))
+        })?;
+        listener.set_nonblocking(true).map_err(|e| {
+            Error::Io(format!("serve: set_nonblocking: {e}"))
+        })?;
+        let queue = AdmissionQueue::new(cfg.max_queue);
+        Ok(Server {
+            listener,
+            coord,
+            cfg,
+            queue,
+            stats: ServeStats::new(),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener
+            .local_addr()
+            .map_err(|e| Error::Io(format!("serve: local_addr: {e}")))
+    }
+
+    /// The server's request counters (bench/test introspection).
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Serve until `shutdown` is cancelled, then drain: stop accepting,
+    /// finish every admitted request (in-flight tokens are untouched),
+    /// join the workers, and return `Ok(())` — the exit-0 path.
+    pub fn run(&self, shutdown: &CancelToken) -> Result<()> {
+        std::thread::scope(|s| {
+            for _ in 0..self.cfg.max_concurrency {
+                s.spawn(|| self.worker_loop());
+            }
+            self.accept_loop(shutdown);
+            self.queue.close();
+            // Scope exit joins the workers after the queue drains.
+        });
+        Ok(())
+    }
+
+    /// Accept until shutdown. A connection either enters the admission
+    /// queue or is shed right here with `503` + `Retry-After` — never
+    /// buffered unboundedly, never allowed to disturb in-flight work.
+    fn accept_loop(&self, shutdown: &CancelToken) {
+        while !shutdown.is_cancelled() {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    self.stats.inc_received();
+                    if let Err(stream) = self.queue.try_push(stream) {
+                        shed_response(stream);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => {
+                    // Transient accept failure (EMFILE, aborted
+                    // handshake): back off and keep serving.
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+            }
+        }
+    }
+
+    /// One serving worker: pop admitted connections until the queue
+    /// closes and drains. The whole per-connection handler sits under
+    /// `catch_unwind` as a last-resort guard — scenario execution
+    /// panics are already contained per-job by the pool — so a framing
+    /// bug cannot take the serving thread (and the scope) down.
+    fn worker_loop(&self) {
+        while let Some(stream) = self.queue.pop() {
+            let unwound = catch_unwind(AssertUnwindSafe(|| {
+                self.handle_conn(stream);
+            }));
+            if unwound.is_err() {
+                self.stats.inc_failed();
+            }
+        }
+    }
+
+    /// Parse one request and dispatch it by route.
+    fn handle_conn(&self, mut stream: TcpStream) {
+        let _ = stream.set_read_timeout(Some(CONN_IO_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(CONN_IO_TIMEOUT));
+        let req = match read_request(&mut stream) {
+            Ok(r) => r,
+            Err(Error::Parse(m)) => {
+                self.stats.inc_rejected();
+                let _ = error_response(400, "bad-request", &m)
+                    .write_to(&mut stream);
+                return;
+            }
+            // I/O failure mid-read: the client is gone; nothing to say.
+            Err(_) => return,
+        };
+        let resp = match route(&req.method, &req.path) {
+            Route::Healthz => {
+                Response::json(200, "{\"status\": \"ok\"}\n")
+            }
+            Route::Stats => Response::json(200, self.stats_body()),
+            Route::Run => self.run_response(&req, &stream),
+            Route::NotFound => {
+                self.stats.inc_rejected();
+                error_response(
+                    404,
+                    "not-found",
+                    &format!("no such endpoint '{}'", req.path),
+                )
+            }
+            Route::MethodNotAllowed => {
+                self.stats.inc_rejected();
+                error_response(
+                    405,
+                    "method-not-allowed",
+                    &format!("{} {} is not allowed", req.method, req.path),
+                )
+            }
+        };
+        let _ = resp.write_to(&mut stream);
+    }
+
+    /// The `GET /stats` body (pretty JSON + trailing newline, like
+    /// every other JSON surface in the CLI).
+    fn stats_body(&self) -> String {
+        let v = self.stats.to_json(
+            &self.coord.stats(),
+            self.queue.len(),
+            self.queue.capacity(),
+            self.queue.shed(),
+        );
+        let mut s = v.to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    /// Execute `POST /run`: parse the spec, arm deadline + disconnect
+    /// cancellation, run on the shared coordinator under pool panic
+    /// isolation, and classify the outcome into a status code.
+    fn run_response(&self, req: &Request, stream: &TcpStream) -> Response {
+        let body = match std::str::from_utf8(&req.body) {
+            Ok(s) => s,
+            Err(_) => {
+                self.stats.inc_rejected();
+                return error_response(
+                    400,
+                    "bad-request",
+                    "request body is not UTF-8",
+                );
+            }
+        };
+        let spec = match json::parse(body)
+            .and_then(|v| ScenarioSpec::from_json(&v))
+        {
+            Ok(s) => s,
+            Err(e) => {
+                self.stats.inc_rejected();
+                return error_response(400, "bad-request", &e.to_string());
+            }
+        };
+        let deadline_s = match req.query_param("deadline_s") {
+            None => self.cfg.request_deadline_s,
+            Some(v) => match v.parse::<f64>() {
+                Ok(d) if d.is_finite() && d >= 0.0 => Some(d),
+                _ => {
+                    self.stats.inc_rejected();
+                    return error_response(
+                        400,
+                        "bad-request",
+                        &format!(
+                            "deadline_s: bad value '{v}' (seconds >= 0)"
+                        ),
+                    );
+                }
+            },
+        };
+
+        self.stats.inc_in_flight();
+        let token = CancelToken::new();
+        let watcher = DisconnectWatcher::spawn(stream, token.clone());
+        let result = self.execute(&spec, &token, deadline_s);
+        drop(watcher);
+        self.stats.dec_in_flight();
+
+        match result {
+            Ok((fig, partial)) => {
+                let mut body = fig.to_json().to_string_pretty();
+                body.push('\n');
+                if partial {
+                    self.stats.inc_partial();
+                    Response::json(206, body)
+                } else {
+                    self.stats.inc_completed();
+                    Response::json(200, body)
+                }
+            }
+            Err(Error::Cancelled(m)) => {
+                self.stats.inc_cancelled();
+                error_response(504, "cancelled", &m)
+            }
+            Err(Error::Deadline(m)) => {
+                self.stats.inc_deadline_expired();
+                error_response(504, "deadline", &m)
+            }
+            Err(e @ (Error::Job { .. } | Error::Worker(_))) => {
+                self.stats.inc_panicked();
+                error_response(500, "panic", &e.to_string())
+            }
+            Err(
+                e @ (Error::Config(_) | Error::Parse(_) | Error::Json(_)),
+            ) => {
+                self.stats.inc_rejected();
+                error_response(400, "bad-request", &e.to_string())
+            }
+            Err(e) => {
+                self.stats.inc_failed();
+                error_response(500, "internal", &e.to_string())
+            }
+        }
+    }
+
+    /// Run the spec as **one bounded pool job** so a panic anywhere in
+    /// evaluation surfaces as [`Error::Job`] instead of unwinding the
+    /// serving worker; the pool is healed before the `500` goes out, so
+    /// the next request sees a full-width pool.
+    fn execute(
+        &self,
+        spec: &ScenarioSpec,
+        token: &CancelToken,
+        deadline_s: Option<f64>,
+    ) -> Result<(FigureData, bool)> {
+        let jobs = [()];
+        let out = self.coord.pool().try_scoped_map_bounded(&jobs, 1, |_| {
+            self.run_spec(spec, token, deadline_s)
+        });
+        match out {
+            Ok(mut results) => {
+                results.pop().expect("one pool job yields one result")
+            }
+            Err(e @ Error::Job { .. }) => {
+                self.coord.pool().heal();
+                Err(e)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Study-aware execution. Optimize studies go through
+    /// [`scenario::run_optimize_exec`] so a deadline/cancel stop yields
+    /// the partial best-so-far figure (`true` = partial); every other
+    /// study runs under [`scenario::run_controlled`] and stops with an
+    /// error at the next batch boundary.
+    fn run_spec(
+        &self,
+        spec: &ScenarioSpec,
+        token: &CancelToken,
+        deadline_s: Option<f64>,
+    ) -> Result<(FigureData, bool)> {
+        if matches!(spec.study, Study::Optimize { .. }) {
+            let ex = scenario::ExecOverrides {
+                token: Some(token.clone()),
+                deadline_s,
+                ..Default::default()
+            };
+            let (fig, out) =
+                scenario::run_optimize_exec(spec, &self.coord, &ex)?;
+            Ok((fig, out.stop.is_some()))
+        } else {
+            let mut control =
+                RunControl::unbounded().with_token(token.clone());
+            if let Some(d) = deadline_s {
+                control = control.with_deadline(Deadline::after_secs(d));
+            }
+            let fig = scenario::run_controlled(spec, &self.coord, &control)?;
+            Ok((fig, false))
+        }
+    }
+}
+
+/// The structured error body every non-2xx response carries:
+/// `{"complete": false, "error": ..., "kind": ...}`.
+fn error_body(kind: &str, message: &str) -> String {
+    let mut s = obj(vec![
+        ("complete", Value::Bool(false)),
+        ("error", Value::Str(message.into())),
+        ("kind", Value::Str(kind.into())),
+    ])
+    .to_string_compact();
+    s.push('\n');
+    s
+}
+
+/// A non-2xx JSON response with the documented error shape.
+fn error_response(status: u16, kind: &str, message: &str) -> Response {
+    Response::json(status, error_body(kind, message))
+}
+
+/// Answer a shed connection on the accept thread: `503` +
+/// `Retry-After: 1`, written with a short timeout so a slow client
+/// cannot stall accepting.
+fn shed_response(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let resp = error_response(
+        503,
+        "overloaded",
+        "server busy: admission queue full; retry shortly",
+    )
+    .with_header("Retry-After", "1");
+    let _ = resp.write_to(&mut stream);
+}
+
+/// Watches a `/run` client for disconnect while its scenario executes:
+/// a cloned handle on the same socket is peeked every 50 ms, and an
+/// orderly EOF (or a hard socket error) cancels the request token so
+/// the evaluation stops at its next safe point. Dropping the watcher
+/// (response ready) stops and joins the thread.
+struct DisconnectWatcher {
+    done: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DisconnectWatcher {
+    fn spawn(stream: &TcpStream, token: CancelToken) -> DisconnectWatcher {
+        let done = Arc::new(AtomicBool::new(false));
+        // `try_clone` shares the open socket, so the watcher's short
+        // read timeout applies to the request stream too — safe here
+        // because the request is fully read before the watcher starts
+        // and the response path only writes.
+        let handle = stream.try_clone().ok().and_then(|watch| {
+            let _ = watch.set_read_timeout(Some(WATCH_POLL));
+            let done = done.clone();
+            std::thread::Builder::new()
+                .name("comet-serve-watch".into())
+                .spawn(move || {
+                    let mut byte = [0u8; 1];
+                    while !done.load(Ordering::Acquire) {
+                        match watch.peek(&mut byte) {
+                            // Orderly EOF: the client hung up.
+                            Ok(0) => {
+                                token.cancel();
+                                return;
+                            }
+                            // Stray bytes after the request: ignore,
+                            // but don't spin on them.
+                            Ok(_) => std::thread::sleep(WATCH_POLL),
+                            Err(e)
+                                if matches!(
+                                    e.kind(),
+                                    io::ErrorKind::WouldBlock
+                                        | io::ErrorKind::TimedOut
+                                ) => {}
+                            // Hard socket error: treat as gone.
+                            Err(_) => {
+                                token.cancel();
+                                return;
+                            }
+                        }
+                    }
+                })
+                .ok()
+        });
+        DisconnectWatcher { done, handle }
+    }
+}
+
+impl Drop for DisconnectWatcher {
+    fn drop(&mut self) {
+        self.done.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::registry;
+    use std::io::{Read, Write};
+    use std::sync::Arc;
+
+    /// Bind an in-process server on an ephemeral port and run it on a
+    /// background thread; returns the address, the shutdown token, and
+    /// the join handle (which yields the server back for inspection).
+    fn start(
+        cfg: ServeConfig,
+    ) -> (
+        SocketAddr,
+        CancelToken,
+        std::thread::JoinHandle<Arc<Server>>,
+    ) {
+        let server = Arc::new(
+            Server::bind(cfg, Coordinator::native()).expect("bind :0"),
+        );
+        let addr = server.local_addr().expect("local addr");
+        let shutdown = CancelToken::new();
+        let (srv, tok) = (server.clone(), shutdown.clone());
+        let handle = std::thread::spawn(move || {
+            srv.run(&tok).expect("serve run");
+            srv
+        });
+        (addr, shutdown, handle)
+    }
+
+    /// One full request/response exchange as raw bytes.
+    fn http(addr: SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(raw.as_bytes()).expect("send request");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read response");
+        out
+    }
+
+    fn post_run(addr: SocketAddr, spec_json: &str, query: &str) -> String {
+        http(
+            addr,
+            &format!(
+                "POST /run{query} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+                spec_json.len(),
+                spec_json
+            ),
+        )
+    }
+
+    fn ephemeral() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            ..ServeConfig::default()
+        }
+    }
+
+    fn stop(
+        shutdown: &CancelToken,
+        handle: std::thread::JoinHandle<Arc<Server>>,
+    ) -> Arc<Server> {
+        shutdown.cancel();
+        handle.join().expect("server thread")
+    }
+
+    #[test]
+    fn healthz_stats_and_routing_errors() {
+        let (addr, shutdown, handle) = start(ephemeral());
+        let health = http(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(health.ends_with("{\"status\": \"ok\"}\n"));
+
+        let stats = http(addr, "GET /stats HTTP/1.1\r\n\r\n");
+        assert!(stats.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(stats.contains("\"eval_cache\""));
+        assert!(stats.contains("\"received\""));
+
+        let missing = http(addr, "GET /nope HTTP/1.1\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(missing.contains("\"complete\":false"));
+
+        let wrong = http(addr, "GET /run HTTP/1.1\r\n\r\n");
+        assert!(wrong.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"));
+
+        let garbled = post_run(addr, "not json at all", "");
+        assert!(garbled.starts_with("HTTP/1.1 400 Bad Request\r\n"));
+        assert!(garbled.contains("\"kind\":\"bad-request\""));
+        stop(&shutdown, handle);
+    }
+
+    #[test]
+    fn run_body_matches_the_library_result_byte_for_byte() {
+        let (addr, shutdown, handle) = start(ephemeral());
+        let spec = registry::get("quickstart").expect("builtin spec");
+        let posted = spec.to_json().to_string_pretty();
+        let got = post_run(addr, &posted, "");
+        assert!(got.starts_with("HTTP/1.1 200 OK\r\n"), "got: {got}");
+        let body = got.split("\r\n\r\n").nth(1).expect("response body");
+        let want = scenario::run(&spec, &Coordinator::native())
+            .expect("library run");
+        let mut expect = want.to_json().to_string_pretty();
+        expect.push('\n');
+        assert_eq!(body, expect);
+        let srv = stop(&shutdown, handle);
+        assert_eq!(srv.stats().completed(), 1);
+    }
+
+    #[test]
+    fn second_identical_run_hits_the_shared_caches() {
+        let (addr, shutdown, handle) = start(ephemeral());
+        let spec = registry::get("quickstart").expect("builtin spec");
+        let posted = spec.to_json().to_string_pretty();
+        let first = post_run(addr, &posted, "");
+        let second = post_run(addr, &posted, "");
+        assert!(first.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert_eq!(
+            first.split("\r\n\r\n").nth(1),
+            second.split("\r\n\r\n").nth(1),
+            "identical requests must produce identical bodies"
+        );
+        let stats = http(addr, "GET /stats HTTP/1.1\r\n\r\n");
+        let body = stats.split("\r\n\r\n").nth(1).expect("stats body");
+        let v = json::parse(body).expect("stats json");
+        let derive = v
+            .get("coordinator")
+            .and_then(|c| c.get("derive_cache"))
+            .expect("derive_cache");
+        let hits = derive.get("hits").and_then(|h| h.as_f64()).unwrap();
+        assert!(
+            hits >= 1.0,
+            "second identical /run must hit the derive cache; stats: {body}"
+        );
+        stop(&shutdown, handle);
+    }
+
+    #[test]
+    fn bad_deadline_param_is_rejected() {
+        let (addr, shutdown, handle) = start(ephemeral());
+        let spec = registry::get("quickstart").expect("builtin spec");
+        let posted = spec.to_json().to_string_pretty();
+        for q in ["?deadline_s=abc", "?deadline_s=-1", "?deadline_s=inf"] {
+            let got = post_run(addr, &posted, q);
+            assert!(
+                got.starts_with("HTTP/1.1 400 Bad Request\r\n"),
+                "query '{q}' must 400, got: {got}"
+            );
+        }
+        stop(&shutdown, handle);
+    }
+
+    #[test]
+    fn drain_returns_ok_and_refuses_new_connections() {
+        let (addr, shutdown, handle) = start(ephemeral());
+        let ok = http(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"));
+        stop(&shutdown, handle);
+        // The listener is gone with the server; new connections fail
+        // (or are reset before a response) rather than hanging.
+        let refused = TcpStream::connect(addr);
+        if let Ok(mut s) = refused {
+            let _ = s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n");
+            let mut out = String::new();
+            let _ = s.read_to_string(&mut out);
+            assert!(!out.starts_with("HTTP/1.1 200"));
+        }
+    }
+
+    #[test]
+    fn rejects_zero_bounds() {
+        let cfg = ServeConfig {
+            max_concurrency: 0,
+            ..ephemeral()
+        };
+        assert!(Server::bind(cfg, Coordinator::native()).is_err());
+        let cfg = ServeConfig {
+            max_queue: 0,
+            ..ephemeral()
+        };
+        assert!(Server::bind(cfg, Coordinator::native()).is_err());
+    }
+}

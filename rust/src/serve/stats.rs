@@ -1,0 +1,255 @@
+//! Per-request counters and the `GET /stats` JSON snapshot.
+//!
+//! [`ServeStats`] counts request **outcomes** (all atomics — updated
+//! lock-free from every serving worker); [`ServeStats::to_json`] folds
+//! them together with the shared coordinator's
+//! [`CoordinatorStats`] and the admission queue's depth/shed counters
+//! into the documented `/stats` body. The cache hit counters in that
+//! body are how the integration tests prove that requests share one
+//! coordinator: a second identical `/run` moves `derive_cache.hits`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::CoordinatorStats;
+use crate::util::json::{obj, Value};
+
+/// Lock-free request-outcome counters for one server.
+///
+/// `received` counts every accepted connection; the outcome counters
+/// (`completed`, `partial`, `rejected`, `cancelled`, `deadline_expired`,
+/// `panicked`, `failed`) classify `/run` requests and input errors.
+/// `in_flight` is the number of `/run` bodies executing right now.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    received: AtomicU64,
+    completed: AtomicU64,
+    partial: AtomicU64,
+    rejected: AtomicU64,
+    cancelled: AtomicU64,
+    deadline_expired: AtomicU64,
+    panicked: AtomicU64,
+    failed: AtomicU64,
+    in_flight: AtomicU64,
+}
+
+/// `hits / (hits + misses)`, `0.0` for an untouched cache.
+fn hit_rate(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+impl ServeStats {
+    /// Fresh, all-zero counters.
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    /// Count an accepted connection.
+    pub fn inc_received(&self) {
+        self.received.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a `/run` that finished completely (`200`).
+    pub fn inc_completed(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a `/run` that returned a partial best-so-far result (`206`).
+    pub fn inc_partial(&self) {
+        self.partial.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a client-input rejection (`400`/`404`/`405`).
+    pub fn inc_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a `/run` cancelled by client disconnect (`504`).
+    pub fn inc_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a `/run` stopped by its deadline mid-study (`504`).
+    pub fn inc_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a `/run` whose evaluation panicked (`500`, worker healed).
+    pub fn inc_panicked(&self) {
+        self.panicked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count any other internal failure (`500`).
+    pub fn inc_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark a `/run` execution as started.
+    pub fn inc_in_flight(&self) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark a `/run` execution as finished (any outcome).
+    pub fn dec_in_flight(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Completed-request count (tests / bench bookkeeping).
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// The `GET /stats` body: request counters, admission-queue state,
+    /// and the shared coordinator's cache/pool/DES counters with derived
+    /// hit rates.
+    pub fn to_json(
+        &self,
+        coord: &CoordinatorStats,
+        queue_depth: usize,
+        queue_capacity: usize,
+        queue_shed: u64,
+    ) -> Value {
+        let n = |x: u64| Value::Num(x as f64);
+        obj(vec![
+            (
+                "requests",
+                obj(vec![
+                    ("received", n(self.received.load(Ordering::Relaxed))),
+                    ("completed", n(self.completed.load(Ordering::Relaxed))),
+                    ("partial", n(self.partial.load(Ordering::Relaxed))),
+                    ("rejected", n(self.rejected.load(Ordering::Relaxed))),
+                    ("cancelled", n(self.cancelled.load(Ordering::Relaxed))),
+                    (
+                        "deadline_expired",
+                        n(self.deadline_expired.load(Ordering::Relaxed)),
+                    ),
+                    ("panicked", n(self.panicked.load(Ordering::Relaxed))),
+                    ("failed", n(self.failed.load(Ordering::Relaxed))),
+                    ("in_flight", n(self.in_flight.load(Ordering::Relaxed))),
+                ]),
+            ),
+            (
+                "queue",
+                obj(vec![
+                    ("depth", n(queue_depth as u64)),
+                    ("capacity", n(queue_capacity as u64)),
+                    ("shed", n(queue_shed)),
+                ]),
+            ),
+            (
+                "coordinator",
+                obj(vec![
+                    (
+                        "eval_cache",
+                        obj(vec![
+                            ("hits", n(coord.eval_hits)),
+                            ("misses", n(coord.eval_misses)),
+                            (
+                                "hit_rate",
+                                Value::Num(hit_rate(
+                                    coord.eval_hits,
+                                    coord.eval_misses,
+                                )),
+                            ),
+                        ]),
+                    ),
+                    (
+                        "derive_cache",
+                        obj(vec![
+                            ("hits", n(coord.derive_hits)),
+                            ("misses", n(coord.derive_misses)),
+                            (
+                                "hit_rate",
+                                Value::Num(hit_rate(
+                                    coord.derive_hits,
+                                    coord.derive_misses,
+                                )),
+                            ),
+                        ]),
+                    ),
+                    (
+                        "pool",
+                        obj(vec![
+                            ("jobs_run", n(coord.jobs_run)),
+                            (
+                                "workers_respawned",
+                                n(coord.workers_respawned),
+                            ),
+                        ]),
+                    ),
+                    ("des_peak_events", n(coord.des_peak_events)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_is_zero_safe() {
+        assert_eq!(hit_rate(0, 0), 0.0);
+        assert_eq!(hit_rate(3, 1), 0.75);
+        assert_eq!(hit_rate(0, 5), 0.0);
+        assert_eq!(hit_rate(5, 0), 1.0);
+    }
+
+    #[test]
+    fn snapshot_reflects_counters_and_coordinator() {
+        let s = ServeStats::new();
+        s.inc_received();
+        s.inc_received();
+        s.inc_completed();
+        s.inc_partial();
+        s.inc_in_flight();
+        let coord = CoordinatorStats {
+            eval_hits: 6,
+            eval_misses: 2,
+            derive_hits: 1,
+            derive_misses: 1,
+            jobs_run: 8,
+            workers_respawned: 0,
+            des_peak_events: 17,
+        };
+        let v = s.to_json(&coord, 3, 64, 5);
+        let req = v.get("requests").unwrap();
+        assert_eq!(req.get("received").unwrap().as_f64(), Some(2.0));
+        assert_eq!(req.get("completed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(req.get("partial").unwrap().as_f64(), Some(1.0));
+        assert_eq!(req.get("in_flight").unwrap().as_f64(), Some(1.0));
+        assert_eq!(req.get("panicked").unwrap().as_f64(), Some(0.0));
+        let q = v.get("queue").unwrap();
+        assert_eq!(q.get("depth").unwrap().as_f64(), Some(3.0));
+        assert_eq!(q.get("capacity").unwrap().as_f64(), Some(64.0));
+        assert_eq!(q.get("shed").unwrap().as_f64(), Some(5.0));
+        let c = v.get("coordinator").unwrap();
+        let eval = c.get("eval_cache").unwrap();
+        assert_eq!(eval.get("hits").unwrap().as_f64(), Some(6.0));
+        assert_eq!(eval.get("hit_rate").unwrap().as_f64(), Some(0.75));
+        let derive = c.get("derive_cache").unwrap();
+        assert_eq!(derive.get("hit_rate").unwrap().as_f64(), Some(0.5));
+        assert_eq!(
+            c.get("pool").unwrap().get("jobs_run").unwrap().as_f64(),
+            Some(8.0)
+        );
+        assert_eq!(c.get("des_peak_events").unwrap().as_f64(), Some(17.0));
+    }
+
+    #[test]
+    fn in_flight_rises_and_falls() {
+        let s = ServeStats::new();
+        s.inc_in_flight();
+        s.inc_in_flight();
+        s.dec_in_flight();
+        let v = s.to_json(&CoordinatorStats::default(), 0, 1, 0);
+        let inflight =
+            v.get("requests").unwrap().get("in_flight").unwrap().as_f64();
+        assert_eq!(inflight, Some(1.0));
+    }
+}

@@ -15,15 +15,17 @@
 //! run always halts at a state the sequential driver could also have
 //! been in (see `optimizer::checkpoint`).
 //!
-//! The module also hosts the process-wide SIGINT hookup used by
-//! `main.rs`: a signal handler (installed via a direct `signal(2)` FFI
-//! declaration — the offline crate set has no `libc`) that trips a
-//! global flag, which [`install_sigint_token`] bridges onto an ordinary
-//! [`CancelToken`]. A second Ctrl-C restores the default disposition and
-//! kills the process the usual way.
+//! The module also hosts the process-wide SIGINT/SIGTERM hookup used by
+//! `main.rs` and the serve layer: a signal handler (installed via a
+//! direct `signal(2)` FFI declaration — the offline crate set has no
+//! `libc`) that trips a global flag, which [`install_signal_token`]
+//! bridges onto ordinary [`CancelToken`]s. Installation is idempotent
+//! and multi-consumer: every call registers its own token and *all*
+//! registered tokens observe the first signal. A second signal restores
+//! the default disposition and kills the process the usual way.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, Once};
 use std::time::{Duration, Instant};
 
 /// Why a run stopped early. Ordered by precedence: explicit cancellation
@@ -142,6 +144,18 @@ impl RunControl {
         self
     }
 
+    /// Attach a deadline, keeping the sooner one when one is already
+    /// armed: two budgets compose by stopping at whichever expires
+    /// first (e.g. a serve request deadline meeting a resilience
+    /// study's own `deadline_s`).
+    pub fn with_deadline_sooner(mut self, deadline: Deadline) -> Self {
+        self.deadline = Some(match self.deadline {
+            Some(d) if d.at <= deadline.at => d,
+            _ => deadline,
+        });
+        self
+    }
+
     /// Deterministic test hook: report Cancelled on the `n`-th poll
     /// (0-based: `cancel_after_polls(0)` trips on the first poll).
     pub fn cancel_after_polls(mut self, n: u64) -> Self {
@@ -199,19 +213,29 @@ impl RunControl {
 }
 
 // ---------------------------------------------------------------------
-// SIGINT -> CancelToken bridge (no libc crate in the offline set).
+// SIGINT/SIGTERM -> CancelToken bridge (no libc crate in the offline
+// set).
 // ---------------------------------------------------------------------
 
 /// Process-global flag the signal handler is allowed to touch
 /// (async-signal-safe: a single atomic store).
-static SIGINT_TRIPPED: AtomicBool = AtomicBool::new(false);
+static SIGNAL_TRIPPED: AtomicBool = AtomicBool::new(false);
+
+/// Tokens registered by [`install_signal_token`]. The watcher thread
+/// cancels every entry once the flag trips; registration after the trip
+/// returns an already-cancelled token instead.
+static TOKENS: Mutex<Vec<CancelToken>> = Mutex::new(Vec::new());
+
+/// One-time installation of the handlers and the watcher thread.
+static INSTALL: Once = Once::new();
 
 #[cfg(unix)]
 mod sys {
-    use super::SIGINT_TRIPPED;
+    use super::SIGNAL_TRIPPED;
     use std::sync::atomic::Ordering;
 
     pub const SIGINT: i32 = 2;
+    pub const SIGTERM: i32 = 15;
     pub const SIG_DFL: usize = 0;
 
     extern "C" {
@@ -220,18 +244,19 @@ mod sys {
         fn signal(signum: i32, handler: usize) -> usize;
     }
 
-    extern "C" fn on_sigint(_sig: i32) {
-        SIGINT_TRIPPED.store(true, Ordering::Release);
-        // Restore the default disposition so a second Ctrl-C kills the
+    extern "C" fn on_signal(sig: i32) {
+        SIGNAL_TRIPPED.store(true, Ordering::Release);
+        // Restore the default disposition so a second signal kills the
         // process immediately instead of being swallowed.
         unsafe {
-            signal(SIGINT, SIG_DFL);
+            signal(sig, SIG_DFL);
         }
     }
 
     pub fn install() {
         unsafe {
-            signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+            signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+            signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
         }
     }
 }
@@ -241,27 +266,56 @@ mod sys {
     pub fn install() {}
 }
 
-/// Install (idempotently) a SIGINT handler that trips a global flag and
-/// return a [`CancelToken`] wired to it via a lightweight watcher
-/// thread. The first Ctrl-C cancels cooperatively; the second one kills
-/// the process (default disposition is restored inside the handler).
-pub fn install_sigint_token() -> CancelToken {
-    sys::install();
+/// Register a fresh [`CancelToken`] with the process-wide SIGINT/SIGTERM
+/// bridge and return it.
+///
+/// Idempotent and multi-consumer: the handlers and the single 50 ms
+/// watcher thread are installed exactly once per process, every call
+/// returns its own token, and *all* registered tokens observe the first
+/// signal (an earlier install is never clobbered by a later one). A
+/// token requested after the signal has already fired comes back
+/// already cancelled. The first signal cancels cooperatively; a second
+/// one kills the process (the handler restores the default disposition
+/// for the signal that fired).
+pub fn install_signal_token() -> CancelToken {
+    INSTALL.call_once(|| {
+        sys::install();
+        // Detached watcher: polls the signal flag at 50ms, fans the
+        // trip out to every registered token, then exits. The process
+        // exits through main() long before thread teardown matters.
+        std::thread::Builder::new()
+            .name("comet-signal".into())
+            .spawn(|| loop {
+                if SIGNAL_TRIPPED.load(Ordering::Acquire) {
+                    let tokens = TOKENS.lock().expect("signal token registry");
+                    for t in tokens.iter() {
+                        t.cancel();
+                    }
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            })
+            .expect("spawn signal watcher");
+    });
     let token = CancelToken::new();
-    let watcher = token.clone();
-    // Detached watcher: polls the signal flag at 50ms. The process
-    // exits through main() long before thread teardown matters.
-    std::thread::Builder::new()
-        .name("comet-sigint".into())
-        .spawn(move || loop {
-            if SIGINT_TRIPPED.load(Ordering::Acquire) {
-                watcher.cancel();
-                return;
-            }
-            std::thread::sleep(Duration::from_millis(50));
-        })
-        .expect("spawn sigint watcher");
+    TOKENS
+        .lock()
+        .expect("signal token registry")
+        .push(token.clone());
+    // A signal that fired before (or while) this token registered must
+    // still be observed — the watcher may already have drained the
+    // registry and exited. The flag only ever transitions false -> true,
+    // so this load closes the race.
+    if SIGNAL_TRIPPED.load(Ordering::Acquire) {
+        token.cancel();
+    }
     token
+}
+
+/// Backwards-compatible alias for [`install_signal_token`]. The bridge
+/// covers SIGTERM as well as SIGINT; both cancel the returned token.
+pub fn install_sigint_token() -> CancelToken {
+    install_signal_token()
 }
 
 #[cfg(test)]
@@ -356,6 +410,24 @@ mod tests {
     }
 
     #[test]
+    fn with_deadline_sooner_keeps_the_earlier_budget() {
+        // Earlier-then-later: the zero deadline must survive.
+        let c = RunControl::unbounded()
+            .with_deadline(Deadline::after_secs(0.0))
+            .with_deadline_sooner(Deadline::after_secs(3600.0));
+        assert_eq!(c.should_stop(), Some(StopReason::DeadlineExceeded));
+        // Later-then-earlier: the zero deadline must win.
+        let c = RunControl::unbounded()
+            .with_deadline(Deadline::after_secs(3600.0))
+            .with_deadline_sooner(Deadline::after_secs(0.0));
+        assert_eq!(c.should_stop(), Some(StopReason::DeadlineExceeded));
+        // On an unarmed control it simply arms.
+        let c = RunControl::unbounded()
+            .with_deadline_sooner(Deadline::after_secs(0.0));
+        assert_eq!(c.should_stop(), Some(StopReason::DeadlineExceeded));
+    }
+
+    #[test]
     fn deadline_remaining_saturates() {
         let d = Deadline::after_secs(0.0);
         assert!(d.exceeded());
@@ -368,5 +440,37 @@ mod tests {
     fn stop_reason_labels() {
         assert_eq!(StopReason::Cancelled.label(), "cancelled");
         assert_eq!(StopReason::DeadlineExceeded.label(), "deadline");
+    }
+
+    /// Regression: a second install used to clobber the first token
+    /// (each call spawned its own watcher around a fresh flagless
+    /// token). Both tokens must now observe one raised signal, and a
+    /// token requested after the trip must be born cancelled. This is
+    /// the only in-process test that raises a signal (the handler
+    /// restores the default disposition after the first one); the serve
+    /// integration tests signal child processes instead.
+    #[cfg(unix)]
+    #[test]
+    fn two_installed_tokens_both_observe_a_signal() {
+        extern "C" {
+            fn raise(sig: i32) -> i32;
+        }
+        let a = install_signal_token();
+        let b = install_sigint_token(); // the alias registers too
+        assert!(!a.is_cancelled());
+        assert!(!b.is_cancelled());
+        unsafe {
+            raise(sys::SIGTERM);
+        }
+        let start = Instant::now();
+        while !(a.is_cancelled() && b.is_cancelled()) {
+            assert!(
+                start.elapsed() < Duration::from_secs(5),
+                "watcher never fanned the signal out to both tokens"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let c = install_signal_token();
+        assert!(c.is_cancelled(), "post-trip install must come back set");
     }
 }

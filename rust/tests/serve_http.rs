@@ -1,0 +1,302 @@
+//! Socket-level integration tests for `comet serve`: a real child
+//! process, real TCP connections, and the four robustness behaviors
+//! the service guarantees — load-shedding, deadline partials, panic
+//! isolation, and graceful drain — plus byte-identity between
+//! `POST /run` bodies and `comet scenario run --json`.
+
+#![cfg(unix)]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+extern "C" {
+    fn kill(pid: i32, sig: i32) -> i32;
+}
+
+const SIGTERM: i32 = 15;
+
+/// A running `comet serve` child bound to an ephemeral port. Dropping
+/// it kills the process, so a failing assertion cannot leak servers.
+struct ServerProc {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl ServerProc {
+    fn spawn(extra: &[&str], envs: &[(&str, &str)]) -> ServerProc {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_comet"));
+        cmd.arg("serve")
+            .args(["--addr", "127.0.0.1:0"])
+            .args(extra)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null());
+        for (k, v) in envs {
+            cmd.env(k, v);
+        }
+        let mut child = cmd.spawn().expect("spawn comet serve");
+        // The first stdout line is `comet serve: listening on http://ADDR`.
+        let stdout = child.stdout.take().expect("child stdout");
+        let mut line = String::new();
+        BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read listen line");
+        let addr = line
+            .trim()
+            .rsplit("http://")
+            .next()
+            .expect("listen line carries an address")
+            .parse()
+            .unwrap_or_else(|_| panic!("bad listen line: {line:?}"));
+        ServerProc { child, addr }
+    }
+
+    fn sigterm(&self) {
+        let rc = unsafe { kill(self.child.id() as i32, SIGTERM) };
+        assert_eq!(rc, 0, "kill(SIGTERM) failed");
+    }
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// One full HTTP exchange: send `raw`, read the whole response (the
+/// server closes every connection after one response).
+fn http(addr: SocketAddr, raw: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.write_all(raw.as_bytes()).expect("send request");
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read response");
+    out
+}
+
+fn post_run(addr: SocketAddr, spec_json: &str, query: &str) -> String {
+    http(
+        addr,
+        &format!(
+            "POST /run{query} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            spec_json.len(),
+            spec_json
+        ),
+    )
+}
+
+fn body_of(response: &str) -> &str {
+    response.split("\r\n\r\n").nth(1).expect("response body")
+}
+
+/// Run the CLI and return stdout (panics on nonzero exit).
+fn comet(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_comet"))
+        .args(args)
+        .output()
+        .expect("run comet");
+    assert!(
+        out.status.success(),
+        "comet {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf-8 stdout")
+}
+
+/// A numeric counter out of the `/stats` body without a JSON parser:
+/// finds `"name": N` and parses N.
+fn stat_counter(stats_body: &str, name: &str) -> f64 {
+    let key = format!("\"{name}\":");
+    let at = stats_body
+        .find(&key)
+        .unwrap_or_else(|| panic!("no {name} in stats: {stats_body}"));
+    stats_body[at + key.len()..]
+        .trim_start()
+        .split(|c: char| c == ',' || c == '\n' || c == '}')
+        .next()
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap_or_else(|_| panic!("bad {name} in stats: {stats_body}"))
+}
+
+#[test]
+fn concurrent_clients_share_one_coordinator() {
+    let srv = ServerProc::spawn(&[], &[]);
+    let spec = comet(&["scenario", "show", "quickstart"]);
+    // Four concurrent identical runs: all succeed, all byte-identical.
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let (addr, spec) = (srv.addr, spec.clone());
+            std::thread::spawn(move || post_run(addr, &spec, ""))
+        })
+        .collect();
+    let responses: Vec<String> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in &responses {
+        assert!(r.starts_with("HTTP/1.1 200 OK\r\n"), "got: {r}");
+        assert_eq!(body_of(r), body_of(&responses[0]));
+    }
+    // A further identical run must be a derive-cache hit: the four
+    // runs above already populated the shared cache.
+    let again = post_run(srv.addr, &spec, "");
+    assert!(again.starts_with("HTTP/1.1 200 OK\r\n"));
+    let stats = http(srv.addr, "GET /stats HTTP/1.1\r\n\r\n");
+    let stats_body = body_of(&stats);
+    assert!(
+        stat_counter(stats_body, "hits") >= 1.0,
+        "expected shared-cache hits after identical runs: {stats_body}"
+    );
+    assert!(stat_counter(stats_body, "completed") >= 5.0);
+}
+
+#[test]
+fn run_bodies_are_byte_identical_to_cli_json() {
+    let srv = ServerProc::spawn(&[], &[]);
+    // One spec per study shape that the quick builtins cover; the CI
+    // smoke step repeats the check end-to-end for the release binary.
+    for name in ["quickstart", "memory-expansion", "tier-mapping"] {
+        let spec = comet(&["scenario", "show", name]);
+        let cli = comet(&["scenario", "run", name, "--json"]);
+        let response = post_run(srv.addr, &spec, "");
+        assert!(
+            response.starts_with("HTTP/1.1 200 OK\r\n"),
+            "{name}: {response}"
+        );
+        assert_eq!(
+            body_of(&response),
+            cli,
+            "{name}: /run body must match `scenario run {name} --json`"
+        );
+    }
+}
+
+#[test]
+fn past_deadline_requests_return_the_partial_shape() {
+    let srv = ServerProc::spawn(&[], &[]);
+    // Optimize study at deadline 0: 206 + the documented PARTIAL note,
+    // best-so-far table still rendered.
+    let spec = comet(&["scenario", "show", "optimize-transformer"]);
+    let response = post_run(srv.addr, &spec, "?deadline_s=0");
+    assert!(
+        response.starts_with("HTTP/1.1 206 Partial Content\r\n"),
+        "got: {response}"
+    );
+    assert!(
+        body_of(&response).contains("PARTIAL (deadline)"),
+        "206 body must carry the PARTIAL note: {response}"
+    );
+    // Non-optimize study at deadline 0: stopped at the first batch
+    // boundary with the structured incomplete error.
+    let grid = comet(&["scenario", "show", "quickstart"]);
+    let stopped = post_run(srv.addr, &grid, "?deadline_s=0");
+    assert!(
+        stopped.starts_with("HTTP/1.1 504 Gateway Timeout\r\n"),
+        "got: {stopped}"
+    );
+    let b = body_of(&stopped);
+    assert!(b.contains("\"complete\":false"), "body: {b}");
+    assert!(b.contains("\"kind\":\"deadline\""), "body: {b}");
+    // The server is still healthy: the same spec completes unbounded.
+    let fine = post_run(srv.addr, &grid, "");
+    assert!(fine.starts_with("HTTP/1.1 200 OK\r\n"));
+}
+
+#[test]
+fn a_panicked_request_is_isolated_from_its_neighbors() {
+    // COMET_PANIC_LEAF trips a panic inside the first optimize leaf
+    // evaluation — grid studies and the server itself are unaffected.
+    let srv = ServerProc::spawn(&[], &[("COMET_PANIC_LEAF", "0")]);
+    let poisoned = comet(&["scenario", "show", "optimize-transformer"]);
+    let healthy = comet(&["scenario", "show", "quickstart"]);
+    let (addr, spec) = (srv.addr, healthy.clone());
+    let neighbor =
+        std::thread::spawn(move || post_run(addr, &spec, ""));
+    let response = post_run(srv.addr, &poisoned, "");
+    assert!(
+        response.starts_with("HTTP/1.1 500 Internal Server Error\r\n"),
+        "got: {response}"
+    );
+    let b = body_of(&response);
+    assert!(b.contains("\"kind\":\"panic\""), "body: {b}");
+    assert!(b.contains("COMET_PANIC_LEAF"), "body: {b}");
+    // The concurrent request and the server survive the panic.
+    let ok = neighbor.join().unwrap();
+    assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "got: {ok}");
+    let health = http(srv.addr, "GET /healthz HTTP/1.1\r\n\r\n");
+    assert!(health.starts_with("HTTP/1.1 200 OK\r\n"));
+    let stats = http(srv.addr, "GET /stats HTTP/1.1\r\n\r\n");
+    assert!(stat_counter(body_of(&stats), "panicked") >= 1.0);
+    // And the pool still evaluates: run the healthy spec again.
+    let again = post_run(srv.addr, &healthy, "");
+    assert!(again.starts_with("HTTP/1.1 200 OK\r\n"));
+}
+
+#[test]
+fn a_full_admission_queue_sheds_with_503_retry_after() {
+    let srv = ServerProc::spawn(
+        &["--max-queue", "1", "--max-concurrency", "1"],
+        &[],
+    );
+    // Two stalled connections: the first occupies the only serving
+    // worker (blocked reading its half-sent request), the second fills
+    // the queue. Generous sleeps let the accept loop admit each one.
+    let mut stall1 = TcpStream::connect(srv.addr).unwrap();
+    stall1.write_all(b"GET /healthz HTTP/1.1\r\n").unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    let mut stall2 = TcpStream::connect(srv.addr).unwrap();
+    stall2.write_all(b"GET /healthz HTTP/1.1\r\n").unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    // The third connection finds worker busy + queue full: shed.
+    let shed = http(srv.addr, "GET /healthz HTTP/1.1\r\n\r\n");
+    assert!(
+        shed.starts_with("HTTP/1.1 503 Service Unavailable\r\n"),
+        "got: {shed}"
+    );
+    assert!(shed.contains("Retry-After: 1\r\n"), "got: {shed}");
+    assert!(body_of(&shed).contains("\"complete\":false"));
+    // Release the stalled connections; service resumes untouched.
+    stall1.write_all(b"\r\n").unwrap();
+    stall2.write_all(b"\r\n").unwrap();
+    let mut out = String::new();
+    stall1.read_to_string(&mut out).unwrap();
+    assert!(out.starts_with("HTTP/1.1 200 OK\r\n"), "got: {out}");
+    let health = http(srv.addr, "GET /healthz HTTP/1.1\r\n\r\n");
+    assert!(health.starts_with("HTTP/1.1 200 OK\r\n"));
+    let stats = http(srv.addr, "GET /stats HTTP/1.1\r\n\r\n");
+    assert!(stat_counter(body_of(&stats), "shed") >= 1.0);
+}
+
+#[test]
+fn sigterm_drains_in_flight_work_and_exits_zero() {
+    let mut srv = ServerProc::spawn(&[], &[]);
+    // Prove liveness first so the signal race below is well-ordered.
+    let health = http(srv.addr, "GET /healthz HTTP/1.1\r\n\r\n");
+    assert!(health.starts_with("HTTP/1.1 200 OK\r\n"));
+    let spec = comet(&["scenario", "show", "resilience-transformer"]);
+    // Put a request in flight, then SIGTERM mid-execution: the drain
+    // must deliver the full response before the process exits 0.
+    let mut s = TcpStream::connect(srv.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.write_all(
+        format!(
+            "POST /run HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            spec.len(),
+            spec
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    srv.sigterm();
+    let mut response = String::new();
+    s.read_to_string(&mut response).unwrap();
+    assert!(
+        response.starts_with("HTTP/1.1 200 OK\r\n"),
+        "in-flight request must finish through the drain: {response}"
+    );
+    let status = srv.child.wait().expect("wait for drained server");
+    assert_eq!(status.code(), Some(0), "graceful drain must exit 0");
+}
